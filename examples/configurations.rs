@@ -1,0 +1,62 @@
+//! Reproduce the paper's §6 illustration: the four configurations of the
+//! simple kernel (Figs 5, 7, 9, 11) and the SOR pipeline (Fig 15) as TIR
+//! listings, each with its block diagram (Figs 6, 8, 10, 12) rendered as
+//! ASCII from the elaborated design — plus the estimator's view of each.
+//!
+//! Run with: `cargo run --release --example configurations`
+
+use tytra::device::Device;
+use tytra::estimator;
+use tytra::sim::elaborate;
+use tytra::tir::{examples, parse_and_validate, Kind};
+
+fn diagram(m: &tytra::tir::Module) -> String {
+    let d = elaborate(m).expect("elaborates");
+    let mut out = String::new();
+    out.push_str("  ┌─ compute-unit ─────────────────────────────┐\n");
+    for (k, lane) in d.lanes.iter().enumerate() {
+        let f = &m.funcs[&lane.func];
+        let shape = match f.kind {
+            Kind::Pipe => "═▶ pipeline ▶═",
+            Kind::Seq => "─▶ seq PE  ─▶─",
+            _ => "─▶ comb    ─▶─",
+        };
+        out.push_str(&format!(
+            "  │ lane {k}: {:<12} {shape} {:<12} │\n",
+            lane.in_ports.join(","),
+            lane.out_ports.join(","),
+        ));
+    }
+    out.push_str("  └────────────────────────────────────────────┘\n");
+    out
+}
+
+fn main() {
+    let dev = Device::stratix4();
+    let listings = [
+        ("Fig 5/6 — sequential processing (C4)", examples::fig5_seq()),
+        ("Fig 7/8 — single pipeline with ILP (C2)", examples::fig7_pipe()),
+        ("Fig 9/10 — replicated pipelines (C1, L=4)", examples::fig9_multi_pipe(4)),
+        ("Fig 11/12 — vectorised sequential (C5, Dv=4)", examples::fig11_vector_seq(4)),
+        ("Fig 15 — SOR single pipeline (C2)", examples::fig15_sor_default()),
+    ];
+    for (title, src) in listings {
+        println!("════════ {title} ════════");
+        println!("{src}");
+        let m = parse_and_validate(&src).expect("paper listing is valid TIR");
+        println!("block diagram:");
+        println!("{}", diagram(&m));
+        let e = estimator::estimate(&m, &dev).expect("estimate");
+        println!(
+            "TyBEC: class={} L={} Dv={} P={} I={} → {} cycles/pass, EWGT {:.0}/s, {}\n",
+            e.class,
+            e.info.lanes,
+            e.info.dv,
+            e.info.pipeline_depth(),
+            e.info.work_items,
+            e.cycles_per_pass,
+            e.ewgt,
+            e.resources,
+        );
+    }
+}

@@ -1,0 +1,95 @@
+//! Quickstart — the end-to-end driver exercising every layer on a real
+//! workload (DESIGN.md "End-to-end validation"):
+//!
+//! 1. parse the paper's two kernels from the loop-nest mini-language;
+//! 2. lower each to TIR at the paper's configurations (C2, C1);
+//! 3. run TyBEC estimation (the paper's contribution);
+//! 4. run the cycle-accurate simulator + synthesis model (the "actual"
+//!    substrate) and print paper-style E-vs-A tables;
+//! 5. cross-check the simulator's functional output against the
+//!    AOT-compiled JAX/Pallas golden models through PJRT (requires
+//!    `make artifacts`);
+//! 6. run the parallel DSE and report the chosen configuration.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use tytra::coordinator::Session;
+use tytra::device::Device;
+use tytra::dse::SweepLimits;
+use tytra::estimator::{self, report};
+use tytra::frontend::{self, DesignPoint};
+use tytra::runtime::golden;
+use tytra::sim::{self, Workload};
+use tytra::synth;
+use tytra::util::stats::deviation_pct;
+
+fn main() {
+    let dev = Device::stratix4();
+    println!("TyTra quickstart on {}\n", dev.name);
+
+    // --- 1-4: both kernels, C2 and C1, estimated vs actual ------------------
+    for (name, src) in [
+        ("simple", frontend::lang::simple_kernel_source()),
+        ("sor", frontend::lang::sor_kernel_source()),
+    ] {
+        let k = frontend::parse_kernel(src).expect("kernel parses");
+        for point in [DesignPoint::c2(), DesignPoint::c1(if name == "simple" { 4 } else { 2 })] {
+            let m = frontend::lower(&k, point).expect("lowering");
+            let e = estimator::estimate(&m, &dev).expect("estimate");
+            let s = synth::synthesize(&m, &dev).expect("synthesis model");
+            let w = Workload::random_for(&m, 42);
+            let r = sim::simulate(&m, &dev, &w).expect("simulation");
+            let actual_ewgt = r.ewgt_at(s.fmax_mhz);
+            println!("## {} {} (class {})", name, point.label(), e.class);
+            let rows = report::paper_rows(&e, &s.resources, r.cycles_per_pass, actual_ewgt);
+            println!("{}", report::side_by_side(&rows, &["(E)", "(A)"]));
+            println!(
+                "cycle deviation {:.1}%  EWGT deviation {:.1}% (nominal {:.0} vs achieved {:.0} MHz)\n",
+                deviation_pct(e.cycles_per_pass as f64, r.cycles_per_pass as f64),
+                deviation_pct(e.ewgt, actual_ewgt),
+                e.fmax_mhz,
+                s.fmax_mhz,
+            );
+        }
+    }
+
+    // --- 5: PJRT golden cross-check -----------------------------------------
+    println!("## golden check (simulator vs PJRT-executed JAX/Pallas artifacts)");
+    match golden::run_all(std::path::Path::new("artifacts"), 42) {
+        Ok(reports) => {
+            for r in &reports {
+                println!(
+                    "  {:<8} n={:<5} mismatches={} {}",
+                    r.kernel,
+                    r.n,
+                    r.mismatches,
+                    if r.ok() { "OK" } else { "FAIL" }
+                );
+            }
+            assert!(reports.iter().all(|r| r.ok()), "golden mismatch!");
+        }
+        Err(e) => println!("  skipped ({e}) — run `make artifacts` first"),
+    }
+
+    // --- 6: parallel DSE ------------------------------------------------------
+    println!("\n## design-space exploration (parallel)");
+    let session = Session::new(8);
+    for (name, src) in [
+        ("simple", frontend::lang::simple_kernel_source()),
+        ("sor", frontend::lang::sor_kernel_source()),
+    ] {
+        let k = frontend::parse_kernel(src).unwrap();
+        let r = session.explore(src, &k, &dev, &SweepLimits::default()).unwrap();
+        let best = r.best.expect("some configuration fits");
+        println!(
+            "  {:<7} best = {:<8} EWGT {:.0}/s at {:.1}% utilisation  (frontier: {})",
+            name,
+            best.label,
+            best.ewgt,
+            best.utilisation * 100.0,
+            r.frontier.iter().map(|p| p.label.clone()).collect::<Vec<_>>().join(" → ")
+        );
+    }
+    println!("  {}", session.metrics().summary());
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,62 @@
+//! SOR design-space exploration across devices — the scenario the
+//! paper's intro motivates: one scientific kernel, several FPGA targets,
+//! automated choice of configuration per target (Figs 3 + 4 in action).
+//!
+//! For each device the example prints the full estimation-space table
+//! (performance axis vs the computation wall), the Pareto frontier, the
+//! chosen configuration, and what the walls clipped.
+//!
+//! Run with: `cargo run --release --example sor_dse`
+
+use tytra::coordinator::Session;
+use tytra::device::Device;
+use tytra::dse::SweepLimits;
+use tytra::frontend;
+use tytra::util::table::{human_count, Table};
+
+fn main() {
+    let src = frontend::lang::sor_kernel_source();
+    let k = frontend::parse_kernel(src).expect("sor kernel parses");
+    let session = Session::new(8);
+
+    for dev in [Device::cyclone4(), Device::stratix4(), Device::stratix5()] {
+        println!("════════ {} ════════", dev.name);
+        let r = session
+            .explore(src, &k, &dev, &SweepLimits { max_lanes: 16, max_dv: 16, pow2_only: true, include_seq: true })
+            .expect("exploration");
+
+        let mut t = Table::new(vec!["config", "class", "ALUTs", "BRAM(bits)", "cycles", "EWGT", "util%", "status"]);
+        for c in &r.candidates {
+            let ev = c.evaluated();
+            let status = if !ev.feasible {
+                "outside compute wall"
+            } else if c.walls.io_utilisation > 1.0 {
+                "clipped by IO wall"
+            } else {
+                "ok"
+            };
+            t.row(vec![
+                ev.label.clone(),
+                c.estimate.class.to_string(),
+                human_count(c.estimate.resources.alut as f64),
+                human_count(c.estimate.resources.bram_bits as f64),
+                c.estimate.cycles_per_pass.to_string(),
+                human_count(ev.ewgt),
+                format!("{:.1}", ev.utilisation * 100.0),
+                status.to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+        match &r.best {
+            Some(b) => println!(
+                "chosen: {} — EWGT {:.0}/s at {:.1}% of {}\n",
+                b.label,
+                b.ewgt,
+                b.utilisation * 100.0,
+                b.resources.binding_resource(&dev)
+            ),
+            None => println!("no configuration fits this device\n"),
+        }
+    }
+    println!("coordinator: {}", session.metrics().summary());
+}

@@ -1,0 +1,17 @@
+"""Build-time compile path for the TyTra-IR reproduction.
+
+This package is the L2/L1 half of the three-layer architecture:
+
+* ``kernels/`` -- L1 Pallas kernels (``interpret=True``) plus a pure-jnp
+  oracle (``ref.py``).  These are the *functional golden models* of the two
+  case-study kernels from the paper (the "simple" kernel of Sec. 6 and the
+  successive over-relaxation kernel of Sec. 8).
+* ``model.py`` -- L2 JAX wrappers that create the offset streams (the
+  paper's Manage-IR role) and call the Pallas kernels (the Compute-IR
+  role).
+* ``aot.py``  -- lowers the jitted models once to HLO *text* under
+  ``artifacts/``; the Rust coordinator loads those artifacts through PJRT
+  (``rust/src/runtime/``) and never imports Python.
+
+Nothing in this package runs on the request path.
+"""

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels and the pure-jnp reference oracle.
+
+Every kernel here is written against the *bit-accurate* semantics that the
+Rust TIR dataflow simulator implements (``rust/src/sim/exec.rs``): unsigned
+18-bit wraparound arithmetic for the simple kernel, Q14 fixed-point
+convex-combination arithmetic for the SOR kernel.  The pytest suite checks
+kernel == ref elementwise for swept shapes and seeds; the Rust test-suite
+checks simulator == PJRT-executed artifact for the same semantics.
+"""
+
+from . import ref  # noqa: F401
+from .simple import simple_pallas, MASK18, K_DEFAULT  # noqa: F401
+from .sor import sor_interior_pallas, W4, WB, FRAC  # noqa: F401

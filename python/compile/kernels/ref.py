@@ -1,0 +1,115 @@
+"""Pure-jnp oracle for the two case-study kernels.
+
+This module is the single source of truth for the *functional semantics*
+of the kernels; the Pallas kernels (``simple.py``, ``sor.py``), the L2
+model (``model.py``) and the Rust TIR dataflow simulator
+(``rust/src/sim/exec.rs``) must all agree with it bit-for-bit.
+
+Semantics
+=========
+
+Simple kernel (paper Sec. 6)::
+
+    do n = 1,ntot
+        y(n) = K + ((a(n)+b(n)) * (c(n)+c(n)))
+    end do
+
+with every SSA value held in an unsigned 18-bit register (``ui18`` in the
+TIR listings).  Each intermediate op therefore wraps modulo 2**18:
+
+    t1 = (a + b)  mod 2^18
+    t2 = (c + c)  mod 2^18
+    t3 = (t1*t2)  mod 2^18
+    y  = (t3 + K) mod 2^18
+
+SOR kernel (paper Sec. 8)::
+
+    p'[i,j] = omega/4 * (p[i,j+1] + p[i,j-1] + p[i+1,j] + p[i-1,j])
+            + (1-omega) * p[i,j]
+
+in Q14 fixed point (the paper's implementation uses no DSPs -- the
+constant multiplies reduce to shift-adds).  We pick omega = 15/16 so that
+
+    W4 = omega/4 * 2^14 = 3840      (0xF00  -> two shift-adds)
+    WB = (1-omega) * 2^14 = 1024    (2^10   -> one shift)
+    4*W4 + WB = 2^14 exactly,
+
+i.e. the update is a *convex combination*: outputs stay inside the ui18
+input range and no masking ambiguity arises.  The update is the streaming
+(Jacobi-style) form the paper's offset-stream pipeline computes: all reads
+come from the input stream of the current pass; boundary cells pass
+through unchanged; ``niter`` passes are chained with the TIR ``repeat``
+keyword.
+"""
+
+import jax.numpy as jnp
+
+# --- simple kernel constants -------------------------------------------------
+# Plain Python ints: inside a Pallas kernel body a jnp scalar would be a
+# captured array constant (rejected by pallas_call); weak-typed int
+# literals fold into the ops and keep the uint32 dtype.
+MASK18 = (1 << 18) - 1
+K_DEFAULT = 42
+
+# --- SOR fixed-point constants (Q14, omega = 15/16) --------------------------
+FRAC = 14
+W4 = 3840   # omega/4     in Q14
+WB = 1024   # (1 - omega) in Q14
+assert 4 * W4 + WB == 1 << FRAC, "SOR weights must form a convex combination"
+
+
+def simple_ref(a, b, c, k=K_DEFAULT):
+    """Reference for the simple kernel, ui18 wraparound at every op.
+
+    ``a``, ``b``, ``c`` are uint32 arrays whose values may occupy the full
+    32-bit range; they are masked to 18 bits on ingest exactly as the TIR
+    stream ports (declared ``ui18``) truncate incoming data.
+    """
+    a = a.astype(jnp.uint32) & MASK18
+    b = b.astype(jnp.uint32) & MASK18
+    c = c.astype(jnp.uint32) & MASK18
+    t1 = (a + b) & MASK18
+    t2 = (c + c) & MASK18
+    # uint32 multiply wraps mod 2^32 and 2^18 | 2^32, so masking the wrapped
+    # product equals masking the exact product.
+    t3 = (t1 * t2) & MASK18
+    return (t3 + int(k)) & MASK18
+
+
+def sor_interior_ref(north, south, west, east, center):
+    """One fixed-point SOR update on pre-shifted (offset-stream) operands.
+
+    All five operands are int32 arrays of identical shape holding ui18
+    values.  Arithmetic is exact in int64 then arithmetically shifted back
+    to Q0; because the weights are convex the result fits ui18 again.
+    """
+    n64 = north.astype(jnp.int64)
+    s64 = south.astype(jnp.int64)
+    w64 = west.astype(jnp.int64)
+    e64 = east.astype(jnp.int64)
+    c64 = center.astype(jnp.int64)
+    acc = W4 * (n64 + s64 + w64 + e64) + WB * c64
+    return (acc >> FRAC).astype(jnp.int32)
+
+
+def sor_step_ref(p):
+    """One full SOR pass over a 2-D grid; boundary ring passes through.
+
+    This is the Manage-IR view: shifting ``p`` four ways *is* the paper's
+    offset-stream construction (a row of line-buffer BRAM per +/-1 row
+    offset on the FPGA).
+    """
+    north = p[:-2, 1:-1]
+    south = p[2:, 1:-1]
+    west = p[1:-1, :-2]
+    east = p[1:-1, 2:]
+    center = p[1:-1, 1:-1]
+    interior = sor_interior_ref(north, south, west, east, center)
+    return p.at[1:-1, 1:-1].set(interior)
+
+
+def sor_run_ref(p, niter):
+    """``niter`` chained SOR passes (the TIR ``repeat`` keyword)."""
+    for _ in range(niter):
+        p = sor_step_ref(p)
+    return p

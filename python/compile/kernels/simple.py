@@ -1,0 +1,56 @@
+"""L1 Pallas kernel for the paper's simple kernel (Sec. 6).
+
+    y(n) = K + ((a(n)+b(n)) * (c(n)+c(n)))        all values ui18
+
+Hardware adaptation (DESIGN.md "Hardware adaptation"): the paper maps this
+to an FPGA pipeline fed by three continuous streams.  On TPU the analogous
+schedule is a 1-D grid of VMEM blocks — each ``pallas_call`` grid step
+pulls one ``BLOCK``-element tile of each operand HBM→VMEM (the FPGA's
+stream burst), applies the four-op datapath on the VPU (no MXU work in an
+elementwise map), and writes the tile back.  ``interpret=True`` because
+the CPU PJRT plugin cannot execute Mosaic custom-calls; the artifact the
+Rust runtime loads is therefore plain HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MASK18, K_DEFAULT
+
+# One VMEM tile per grid step.  256 x u32 x 3 inputs + 1 output = 4 KiB of
+# VMEM — far under budget; chosen to divide the padded workload sizes used
+# by model.py (which pads NTOT up to a BLOCK multiple).
+BLOCK = 256
+
+
+def _simple_block_kernel(k_scalar, a_ref, b_ref, c_ref, y_ref):
+    """Datapath for one stream tile; mirrors TIR @f1 of Fig. 5/7 op-for-op."""
+    a = a_ref[...] & MASK18
+    b = b_ref[...] & MASK18
+    c = c_ref[...] & MASK18
+    t1 = (a + b) & MASK18          # ui18 %1 = add ui18 %a, %b
+    t2 = (c + c) & MASK18          # ui18 %2 = add ui18 %c, %c
+    t3 = (t1 * t2) & MASK18        # ui18 %3 = mul ui18 %1, %2
+    y_ref[...] = (t3 + int(k_scalar)) & MASK18  # %y = add %3, @k
+
+
+def simple_pallas(a, b, c, k=K_DEFAULT):
+    """Run the simple kernel over 1-D uint32 arrays of length N (N % BLOCK == 0).
+
+    The grid dimension is the FPGA work-item loop: ``N // BLOCK`` bursts of
+    ``BLOCK`` work-items each.
+    """
+    n = a.shape[0]
+    if n % BLOCK != 0:
+        raise ValueError(f"simple_pallas requires N % {BLOCK} == 0, got {n}")
+    grid = (n // BLOCK,)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        lambda ar, br, cr, yr: _simple_block_kernel(k, ar, br, cr, yr),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(a, b, c)

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel for the SOR case-study kernel (paper Sec. 8).
+
+The FPGA implementation streams the grid row-major through a pipeline whose
++/-1-row stream offsets are realised as BRAM line buffers.  The TPU
+adaptation (DESIGN.md "Hardware adaptation"): the L2 model materialises the
+four offset streams as shifted views (exactly the Manage-IR stream-object
+role), and this kernel is the pure datapath over *aligned* operand tiles —
+a 2-D grid of VMEM row-band blocks, each grid step pulling one
+``(BLOCK_ROWS, width)`` band of the five operand streams HBM→VMEM.
+
+Fixed-point semantics are defined in ``ref.py`` (Q14, omega = 15/16, DSP-
+free by construction).  The multiply-accumulate is done in int64 — on a
+real TPU this is VPU integer work; under ``interpret=True`` it is exact
+numpy int64, which is what the Rust simulator reproduces.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FRAC, W4, WB
+
+# Row-band tile height.  The interior of the default 18x18 case-study grid
+# is 16 rows; 8 gives two grid steps there while keeping VMEM usage tiny.
+BLOCK_ROWS = 8
+
+
+def _sor_band_kernel(n_ref, s_ref, w_ref, e_ref, c_ref, out_ref):
+    """One band of the SOR datapath; mirrors TIR @f1 (comb) of Fig. 15."""
+    n64 = n_ref[...].astype(jnp.int64)
+    s64 = s_ref[...].astype(jnp.int64)
+    w64 = w_ref[...].astype(jnp.int64)
+    e64 = e_ref[...].astype(jnp.int64)
+    c64 = c_ref[...].astype(jnp.int64)
+    # W4*(n+s+w+e) + WB*c — shift-add constants, no DSP on the FPGA side.
+    acc = W4 * (n64 + s64 + w64 + e64) + WB * c64
+    out_ref[...] = (acc >> FRAC).astype(jnp.int32)
+
+
+def sor_interior_pallas(north, south, west, east, center):
+    """Fixed-point SOR update over pre-shifted int32 operands.
+
+    All operands share a shape ``(rows, cols)`` with ``rows % BLOCK_ROWS
+    == 0`` (the L2 model pads).  Returns the updated interior.
+    """
+    rows, cols = center.shape
+    if rows % BLOCK_ROWS != 0:
+        raise ValueError(f"sor_interior_pallas requires rows % {BLOCK_ROWS} == 0, got {rows}")
+    grid = (rows // BLOCK_ROWS,)
+    spec = pl.BlockSpec((BLOCK_ROWS, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        _sor_band_kernel,
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+        interpret=True,
+    )(north, south, west, east, center)

@@ -1,0 +1,68 @@
+"""L2 model vs oracle: shapes, padding correctness, repeat semantics."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+from compile.kernels.ref import simple_ref, sor_run_ref, sor_step_ref  # noqa: E402
+
+MAX18 = (1 << 18) - 1
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def test_simple_model_matches_ref_at_ntot():
+    """NTOT=1000 is not a BLOCK multiple — exercises the padding path."""
+    r = rng(0)
+    a, b, c = (
+        jnp.asarray(r.integers(0, 1 << 32, size=model.NTOT, dtype=np.uint64).astype(np.uint32))
+        for _ in range(3)
+    )
+    (y,) = model.simple_model(a, b, c)
+    assert y.shape == (model.NTOT,)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(simple_ref(a, b, c)))
+
+
+@pytest.mark.parametrize("n", [1, 255, 256, 1000, 1024])
+def test_simple_model_any_length(n):
+    r = rng(n)
+    a, b, c = (
+        jnp.asarray(r.integers(0, 1 << 32, size=n, dtype=np.uint64).astype(np.uint32))
+        for _ in range(3)
+    )
+    (y,) = model.simple_model(a, b, c)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(simple_ref(a, b, c)))
+
+
+def test_sor_step_model_matches_ref():
+    r = rng(2)
+    p = jnp.asarray(r.integers(0, MAX18 + 1, size=model.SOR_GRID, dtype=np.int64).astype(np.int32))
+    (q,) = model.sor_step_model(p)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(sor_step_ref(p)))
+
+
+@pytest.mark.parametrize("niter", [1, 3])
+def test_sor_model_repeat(niter):
+    r = rng(3)
+    p = jnp.asarray(r.integers(0, MAX18 + 1, size=model.SOR_GRID, dtype=np.int64).astype(np.int32))
+    (q,) = model.sor_model(p, niter)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(sor_run_ref(p, niter)))
+
+
+def test_sor_step_model_jits():
+    p = jnp.zeros(model.SOR_GRID, jnp.int32)
+    (q,) = jax.jit(model.sor_step_model)(p)
+    assert q.shape == model.SOR_GRID
+
+
+def test_example_args_shapes():
+    args = model.example_args()
+    assert args["simple"][0].shape == (model.NTOT,)
+    assert args["sor_step"][0].shape == model.SOR_GRID

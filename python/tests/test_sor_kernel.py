@@ -1,0 +1,101 @@
+"""Pallas SOR kernel vs pure-jnp oracle, plus fixed-point invariants."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.ref import (  # noqa: E402
+    FRAC,
+    W4,
+    WB,
+    sor_interior_ref,
+    sor_run_ref,
+    sor_step_ref,
+)
+from compile.kernels.sor import BLOCK_ROWS, sor_interior_pallas  # noqa: E402
+
+MAX18 = (1 << 18) - 1
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def rand_grid(r, shape):
+    return jnp.asarray(r.integers(0, MAX18 + 1, size=shape, dtype=np.int64).astype(np.int32))
+
+
+@pytest.mark.parametrize("rows", [BLOCK_ROWS, 2 * BLOCK_ROWS, 4 * BLOCK_ROWS])
+@pytest.mark.parametrize("cols", [4, 16, 33])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_interior_matches_ref(rows, cols, seed):
+    r = rng(seed)
+    ops = [rand_grid(r, (rows, cols)) for _ in range(5)]
+    got = sor_interior_pallas(*ops)
+    want = sor_interior_ref(*ops)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_convexity_stays_in_range():
+    """Weights sum to exactly 2^FRAC, so outputs must stay inside ui18."""
+    assert 4 * W4 + WB == 1 << FRAC
+    r = rng(5)
+    ops = [rand_grid(r, (BLOCK_ROWS, 8)) for _ in range(5)]
+    out = np.asarray(sor_interior_pallas(*ops))
+    assert out.min() >= 0 and out.max() <= MAX18
+
+
+def test_uniform_grid_is_fixed_point():
+    """A constant field is (almost) a fixed point: floor error <= 1 LSB."""
+    v = 12345
+    ops = [jnp.full((BLOCK_ROWS, 8), v, jnp.int32)] * 5
+    out = np.asarray(sor_interior_pallas(*ops))
+    exact = (W4 * 4 * v + WB * v) >> FRAC
+    assert (out == exact).all()
+    assert abs(int(exact) - v) <= 1
+
+
+def test_step_preserves_boundary():
+    r = rng(9)
+    p = rand_grid(r, (18, 18))
+    q = np.asarray(sor_step_ref(p))
+    pn = np.asarray(p)
+    np.testing.assert_array_equal(q[0, :], pn[0, :])
+    np.testing.assert_array_equal(q[-1, :], pn[-1, :])
+    np.testing.assert_array_equal(q[:, 0], pn[:, 0])
+    np.testing.assert_array_equal(q[:, -1], pn[:, -1])
+
+
+def test_run_converges_toward_boundary_mean():
+    """Physical sanity: with a hot ring and cold interior, repeated passes
+    relax the interior upward monotonically (convex update, DSP-free)."""
+    p = jnp.zeros((18, 18), jnp.int32)
+    p = p.at[0, :].set(MAX18).at[-1, :].set(MAX18)
+    p = p.at[:, 0].set(MAX18).at[:, -1].set(MAX18)
+    means = []
+    cur = p
+    for _ in range(6):
+        cur = sor_step_ref(cur)
+        means.append(float(np.asarray(cur)[1:-1, 1:-1].mean()))
+    assert all(b >= a for a, b in zip(means, means[1:]))
+    assert means[-1] > means[0] > 0
+
+
+@pytest.mark.parametrize("niter", [1, 2, 5])
+def test_run_ref_is_iterated_step(niter):
+    r = rng(21)
+    p = rand_grid(r, (10, 10))
+    q = p
+    for _ in range(niter):
+        q = sor_step_ref(q)
+    np.testing.assert_array_equal(np.asarray(sor_run_ref(p, niter)), np.asarray(q))
+
+
+def test_rejects_unaligned_rows():
+    ops = [jnp.zeros((BLOCK_ROWS + 1, 4), jnp.int32)] * 5
+    with pytest.raises(ValueError):
+        sor_interior_pallas(*ops)

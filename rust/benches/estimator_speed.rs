@@ -1,0 +1,100 @@
+//! Bench: the paper's *light-weight estimator* claim (§4 requirement 6,
+//! §7: estimates "without actually having to generate HDL code and
+//! synthesize each configuration") — quantified:
+//!
+//! * single-estimate latency and estimates/sec, vs the synthesis-model
+//!   and cycle-accurate-simulation alternatives it avoids;
+//! * simulator throughput in simulated cycles/sec;
+//! * parallel DSE sweep throughput (configurations/sec) vs worker count.
+//!
+//! This is also the §Perf harness used for the optimisation pass
+//! (EXPERIMENTS.md §Perf records before/after from this bench).
+//!
+//! Run with: `cargo bench --bench estimator_speed`
+
+use tytra::bench_harness::{bench, black_box, section};
+use tytra::coordinator::Session;
+use tytra::device::Device;
+use tytra::dse::SweepLimits;
+use tytra::estimator::{self, CostDb};
+use tytra::frontend;
+use tytra::sim::{self, Workload};
+use tytra::synth;
+use tytra::tir::{examples, parse_and_validate};
+
+fn main() {
+    let dev = Device::stratix4();
+    let m2 = parse_and_validate(&examples::fig7_pipe()).unwrap();
+    let m1 = parse_and_validate(&examples::fig9_multi_pipe(4)).unwrap();
+    let sor = parse_and_validate(&examples::fig15_sor_default()).unwrap();
+    let db = CostDb::default();
+
+    println!("{}", section("estimator latency (the paper's headline: no synthesis needed)"));
+    let r_est = bench("TyBEC estimate (simple C2)", 50, 2000, || {
+        black_box(estimator::estimate_with_db(&m2, &dev, &db).unwrap())
+    });
+    println!("{}", r_est.line());
+    let r_est1 = bench("TyBEC estimate (simple C1×4)", 50, 2000, || {
+        black_box(estimator::estimate_with_db(&m1, &dev, &db).unwrap())
+    });
+    println!("{}", r_est1.line());
+    let r_sor = bench("TyBEC estimate (SOR C2)", 50, 2000, || {
+        black_box(estimator::estimate_with_db(&sor, &dev, &db).unwrap())
+    });
+    println!("{}", r_sor.line());
+
+    println!("{}", section("what the estimator replaces"));
+    let r_syn = bench("synthesis model (simple C1×4)", 20, 500, || {
+        black_box(synth::synthesize(&m1, &dev).unwrap())
+    });
+    println!("{}", r_syn.line());
+    let w = Workload::random_for(&m2, 1);
+    let r_sim = bench("cycle-accurate sim (simple C2)", 5, 100, || {
+        black_box(sim::simulate(&m2, &dev, &w).unwrap())
+    });
+    println!("{}", r_sim.line());
+    let sim_result = sim::simulate(&m2, &dev, &w).unwrap();
+    println!(
+        "  simulator throughput ≈ {:.1} M simulated cycles/s",
+        sim_result.total_cycles as f64 / r_sim.summary.mean / 1e6
+    );
+    println!(
+        "  estimator speedup vs simulate: {:.0}×   vs synthesis model: {:.0}×",
+        r_sim.summary.mean / r_est.summary.mean,
+        r_syn.summary.mean / r_est1.summary.mean,
+    );
+
+    println!("{}", section("parallel DSE sweep throughput (estimate-only jobs, ~3µs each)"));
+    let src = frontend::lang::sor_kernel_source();
+    let k = frontend::parse_kernel(src).unwrap();
+    let limits = SweepLimits { max_lanes: 16, max_dv: 16, pow2_only: false, include_seq: true }; // 32 points
+    for jobs in [1usize, 2, 4, 8] {
+        let session = Session::new(jobs);
+        let r = bench(&format!("32-point sweep, {jobs} worker(s)"), 3, 30, || {
+            black_box(session.explore(src, &k, &dev, &limits).unwrap())
+        });
+        println!("{}  ({:.0} configs/s)", r.line(), 32.0 / r.summary.mean);
+    }
+    println!("  (estimate-only jobs are ~3µs; thread-scope overhead dominates — flat scaling expected)");
+
+    println!("{}", section("parallel validation sweep (estimate+synth+simulate per point)"));
+    // The heavyweight flow a cautious user runs: every point fully
+    // validated against the actual substrate. Here the pool pays off.
+    let points: Vec<tytra::frontend::DesignPoint> = tytra::dse::enumerate(&limits);
+    let modules: Vec<tytra::tir::Module> =
+        points.iter().filter_map(|&p| frontend::lower(&k, p).ok()).collect();
+    for jobs in [1usize, 2, 4, 8] {
+        let pool = tytra::coordinator::Pool::new(jobs);
+        let r = bench(&format!("validated sweep, {jobs} worker(s)"), 2, 10, || {
+            let results = pool.map(modules.clone(), |m| {
+                let e = estimator::estimate_with_db(m, &dev, &db).ok()?;
+                let s = synth::synthesize(m, &dev).ok()?;
+                let w = Workload::random_for(m, 1);
+                let r = sim::simulate(m, &dev, &w).ok()?;
+                Some((e.ewgt, s.fmax_mhz, r.cycles_per_pass))
+            });
+            black_box(results)
+        });
+        println!("{}  ({:.0} validated configs/s)", r.line(), modules.len() as f64 / r.summary.mean);
+    }
+}

@@ -1,0 +1,70 @@
+//! Bench: regenerate **Figure 3** — the design-space abstraction — as
+//! data: both kernels swept along the pipeline axis (C2 → C1 with
+//! growing L) and the sequential axis (C4 → C5 with growing D_v),
+//! reporting class, cycles and EWGT per point; plus the sweep timing.
+//!
+//! Run with: `cargo bench --bench fig3_design_space`
+
+use tytra::bench_harness::{bench, black_box, section};
+use tytra::device::Device;
+use tytra::dse::{self, SweepLimits};
+use tytra::frontend;
+use tytra::util::table::{human_count, Table};
+
+fn main() {
+    let dev = Device::stratix4();
+    let limits = SweepLimits { max_lanes: 16, max_dv: 16, pow2_only: true, include_seq: true };
+
+    for (name, src) in [
+        ("simple", frontend::lang::simple_kernel_source()),
+        ("sor", frontend::lang::sor_kernel_source()),
+    ] {
+        println!("{}", section(&format!("Fig 3 sweep — {name} kernel on {}", dev.name)));
+        let k = frontend::parse_kernel(src).unwrap();
+        let r = dse::explore(&k, &dev, &limits).unwrap();
+        let mut t = Table::new(vec!["axis", "point", "class", "P", "I", "cycles", "EWGT", "speedup-vs-C2"]);
+        let base = r
+            .candidates
+            .iter()
+            .find(|c| c.point.label() == "pipe×1")
+            .map(|c| c.estimate.ewgt)
+            .unwrap_or(1.0);
+        for c in &r.candidates {
+            let axis = match c.point.style {
+                frontend::Style::Pipe => "pipeline",
+                frontend::Style::Seq => "sequential",
+            };
+            t.row(vec![
+                axis.to_string(),
+                c.point.label(),
+                c.estimate.class.to_string(),
+                c.estimate.info.pipeline_depth().to_string(),
+                c.estimate.info.work_items.to_string(),
+                c.estimate.cycles_per_pass.to_string(),
+                human_count(c.estimate.ewgt),
+                format!("{:.2}×", c.estimate.ewgt / base),
+            ]);
+        }
+        println!("{}", t.render());
+        // Paper's expected shape: EWGT grows ~linearly with L on the
+        // pipeline axis and with D_v on the sequential axis, and the
+        // pipeline axis dominates the sequential one by ~N_I × N_to.
+        let pipe4 = r.candidates.iter().find(|c| c.point.label() == "pipe×4").unwrap();
+        let seq4 = r.candidates.iter().find(|c| c.point.label() == "seq×4").unwrap();
+        println!(
+            "pipeline-vs-sequential advantage at replication 4: {:.1}× (paper: N_I×N_to ≈ {}×)\n",
+            pipe4.estimate.ewgt / seq4.estimate.ewgt,
+            pipe4.estimate.info.seq_ni.max(seq4.estimate.info.seq_ni) * 2
+        );
+    }
+
+    println!("{}", section("sweep timing"));
+    let k = frontend::parse_kernel(frontend::lang::simple_kernel_source()).unwrap();
+    println!(
+        "{}",
+        bench("full 10-point sweep (serial)", 5, 50, || {
+            black_box(dse::explore(&k, &dev, &limits).unwrap())
+        })
+        .line()
+    );
+}

@@ -1,0 +1,65 @@
+//! Bench: regenerate **Figure 4** — the estimation space — as data: each
+//! design point plotted as (compute utilisation, required IO bandwidth,
+//! EWGT) against the computation and IO walls, across three devices; an
+//! ASCII scatter of the performance axis shows the wall clipping.
+//!
+//! Run with: `cargo bench --bench fig4_estimation_space`
+
+use tytra::bench_harness::section;
+use tytra::device::Device;
+use tytra::dse::{self, SweepLimits};
+use tytra::frontend;
+use tytra::util::table::{human_count, Table};
+
+fn main() {
+    let src = frontend::lang::sor_kernel_source();
+    let k = frontend::parse_kernel(src).unwrap();
+    let limits = SweepLimits::default();
+
+    for dev in [Device::cyclone4(), Device::stratix4(), Device::stratix5()] {
+        println!("{}", section(&format!("Fig 4 — estimation space on {}", dev.name)));
+        let r = dse::explore(&k, &dev, &limits).unwrap();
+        let mut t = Table::new(vec![
+            "point", "EWGT(raw)", "EWGT(clipped)", "compute-util%", "io-util%", "verdict",
+        ]);
+        for c in &r.candidates {
+            let ev = c.evaluated();
+            let verdict = if !ev.feasible {
+                "✗ outside computation wall"
+            } else if c.walls.io_utilisation > 1.0 {
+                "◔ clipped by IO wall"
+            } else {
+                "✓ inside both walls"
+            };
+            t.row(vec![
+                ev.label.clone(),
+                human_count(c.estimate.ewgt),
+                human_count(ev.ewgt),
+                format!("{:.1}", c.walls.compute_utilisation * 100.0),
+                format!("{:.1}", c.walls.io_utilisation * 100.0),
+                verdict.to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+
+        // ASCII performance-axis scatter: each feasible point climbs the
+        // axis until a wall stops it (the paper's "go as high up as
+        // possible … while staying within the walls").
+        let max_ewgt = r
+            .candidates
+            .iter()
+            .map(|c| c.evaluated().ewgt)
+            .fold(1.0_f64, f64::max);
+        println!("performance axis (each ▪ ≈ {:>9} wg/s):", human_count(max_ewgt / 40.0));
+        for c in &r.candidates {
+            let ev = c.evaluated();
+            let bars = ((ev.ewgt / max_ewgt) * 40.0).round() as usize;
+            let marker = if !ev.feasible { "✗" } else { "" };
+            println!("  {:<8} |{}{}", ev.label, "▪".repeat(bars), marker);
+        }
+        match &r.best {
+            Some(b) => println!("chosen: {}\n", b.label),
+            None => println!("chosen: none (device too small)\n"),
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Bench: regenerate **Table 1** of the paper — estimated vs actual
+//! resources/cycles/EWGT for the simple kernel's C2 (single pipeline)
+//! and C1 (4 replicated pipelines) configurations — and time every
+//! component of the flow that produces it.
+//!
+//! Run with: `cargo bench --bench table1`
+
+use tytra::bench_harness::{bench, black_box, section};
+use tytra::device::Device;
+use tytra::estimator::{self, report};
+use tytra::sim::{self, Workload};
+use tytra::synth;
+use tytra::tir::{examples, parse_and_validate};
+
+fn main() {
+    let dev = Device::stratix4();
+    println!("{}", section("Table 1 — simple kernel, C2 and C1(E/A)"));
+
+    let mut all_cols: Vec<(String, Vec<String>)> = Vec::new();
+    let mut labels = Vec::new();
+    for (label, src) in [("C2", examples::fig7_pipe()), ("C1", examples::fig9_multi_pipe(4))] {
+        let m = parse_and_validate(&src).unwrap();
+        let e = estimator::estimate(&m, &dev).unwrap();
+        let s = synth::synthesize(&m, &dev).unwrap();
+        let w = Workload::random_for(&m, 42);
+        let r = sim::simulate(&m, &dev, &w).unwrap();
+        let rows = report::paper_rows(&e, &s.resources, r.cycles_per_pass, r.ewgt_at(s.fmax_mhz));
+        if all_cols.is_empty() {
+            for (name, cells) in &rows {
+                all_cols.push((name.to_string(), cells.clone()));
+            }
+        } else {
+            for ((_, acc), (_, cells)) in all_cols.iter_mut().zip(&rows) {
+                acc.extend(cells.iter().cloned());
+            }
+        }
+        labels.push(format!("{label}(E)"));
+        labels.push(format!("{label}(A)"));
+    }
+    let rows_ref: Vec<(&str, Vec<String>)> =
+        all_cols.iter().map(|(n, c)| (n.as_str(), c.clone())).collect();
+    let label_refs: Vec<&str> = labels.iter().map(String::as_str).collect();
+    println!("{}", report::side_by_side(&rows_ref, &label_refs));
+    println!("paper:          C2: 82|83, 172|177, 7.20K|7.27K, 1|1, 1003|1008, 249K|292K");
+    println!("                C1: 36.3K|37.6K, 18.6K|19.1K, 216K|221K, 4|4, 250|258, 997K|826K");
+
+    println!("{}", section("component timings"));
+    let m2 = parse_and_validate(&examples::fig7_pipe()).unwrap();
+    let m1 = parse_and_validate(&examples::fig9_multi_pipe(4)).unwrap();
+    let src2 = examples::fig7_pipe();
+    println!("{}", bench("parse+validate fig7", 20, 200, || black_box(parse_and_validate(&src2).unwrap())).line());
+    println!("{}", bench("estimate C2", 20, 500, || black_box(estimator::estimate(&m2, &dev).unwrap())).line());
+    println!("{}", bench("estimate C1", 20, 500, || black_box(estimator::estimate(&m1, &dev).unwrap())).line());
+    println!("{}", bench("synthesis-model C1", 20, 200, || black_box(synth::synthesize(&m1, &dev).unwrap())).line());
+    let w2 = Workload::random_for(&m2, 42);
+    println!(
+        "{}",
+        bench("simulate C2 (1000 items, functional+timing)", 5, 50, || {
+            black_box(sim::simulate(&m2, &dev, &w2).unwrap())
+        })
+        .line()
+    );
+}

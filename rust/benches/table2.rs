@@ -1,0 +1,73 @@
+//! Bench: regenerate **Table 2** of the paper — estimated vs actual for
+//! the SOR kernel's C2 (single pipeline) and C1 (2 replicated pipelines;
+//! the paper's BRAM ratio pins L = 2) — and time the SOR-specific flow
+//! (stencil elaboration, 15-pass simulation, golden comparison inputs).
+//!
+//! Run with: `cargo bench --bench table2`
+
+use tytra::bench_harness::{bench, black_box, section};
+use tytra::device::Device;
+use tytra::estimator::{self, report};
+use tytra::frontend::{self, DesignPoint};
+use tytra::sim::{self, Workload};
+use tytra::synth;
+use tytra::tir::{examples, parse_and_validate};
+
+fn main() {
+    let dev = Device::stratix4();
+    println!("{}", section("Table 2 — SOR kernel, C2 and C1 (E/A)"));
+
+    let k = frontend::parse_kernel(frontend::lang::sor_kernel_source()).unwrap();
+    let sources = [
+        ("C2".to_string(), examples::fig15_sor_default()),
+        ("C1".to_string(), tytra::tir::pretty::print(&frontend::lower(&k, DesignPoint::c1(2)).unwrap())),
+    ];
+
+    let mut all_cols: Vec<(String, Vec<String>)> = Vec::new();
+    let mut labels = Vec::new();
+    for (label, src) in &sources {
+        let m = parse_and_validate(src).unwrap();
+        let e = estimator::estimate(&m, &dev).unwrap();
+        let s = synth::synthesize(&m, &dev).unwrap();
+        let w = Workload::random_for(&m, 43);
+        let r = sim::simulate(&m, &dev, &w).unwrap();
+        let rows = report::paper_rows(&e, &s.resources, r.cycles_per_pass, r.ewgt_at(s.fmax_mhz));
+        if all_cols.is_empty() {
+            for (name, cells) in &rows {
+                all_cols.push((name.to_string(), cells.clone()));
+            }
+        } else {
+            for ((_, acc), (_, cells)) in all_cols.iter_mut().zip(&rows) {
+                acc.extend(cells.iter().cloned());
+            }
+        }
+        labels.push(format!("{label}(E)"));
+        labels.push(format!("{label}(A)"));
+    }
+    let rows_ref: Vec<(&str, Vec<String>)> =
+        all_cols.iter().map(|(n, c)| (n.as_str(), c.clone())).collect();
+    let label_refs: Vec<&str> = labels.iter().map(String::as_str).collect();
+    println!("{}", report::side_by_side(&rows_ref, &label_refs));
+    println!("paper:          C2: 528|546, 534|575, 5418|5400, 0|0, 292|308, 57K|43K");
+    println!("                C1: 5764|5837, 4504|4892, 11304|11250, 0|0, 180|185, 92K|72K");
+
+    println!("{}", section("SOR flow timings"));
+    let m = parse_and_validate(&examples::fig15_sor_default()).unwrap();
+    let w = Workload::random_for(&m, 43);
+    println!("{}", bench("estimate SOR C2", 20, 500, || black_box(estimator::estimate(&m, &dev).unwrap())).line());
+    println!("{}", bench("synthesis-model SOR C2", 20, 200, || black_box(synth::synthesize(&m, &dev).unwrap())).line());
+    println!(
+        "{}",
+        bench("simulate SOR 15 passes (256 items each)", 5, 50, || {
+            black_box(sim::simulate(&m, &dev, &w).unwrap())
+        })
+        .line()
+    );
+    println!(
+        "{}",
+        bench("frontend lower SOR → C1(2)", 10, 200, || {
+            black_box(frontend::lower(&k, DesignPoint::c1(2)).unwrap())
+        })
+        .line()
+    );
+}

@@ -1,0 +1,89 @@
+//! Timing harness for `benches/` (criterion is unavailable offline —
+//! DESIGN.md §Substitutions): warmup + timed iterations + summary stats.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Per-iteration wall time, seconds.
+    pub summary: Summary,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Mean iterations per second.
+    pub fn per_sec(&self) -> f64 {
+        if self.summary.mean == 0.0 {
+            f64::INFINITY
+        } else {
+            1.0 / self.summary.mean
+        }
+    }
+
+    /// One-line report.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<42} {:>12.3} µs/iter  (±{:>5.1}%)  {:>12.0} it/s",
+            self.name,
+            self.summary.mean * 1e6,
+            self.summary.rsd() * 100.0,
+            self.per_sec()
+        )
+    }
+}
+
+/// Run a benchmark: `warmup` untimed runs, then time `iters` runs.
+/// The closure's return value is black-boxed to keep the optimizer
+/// honest.
+pub fn bench<F, R>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult
+where
+    F: FnMut() -> R,
+{
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&samples), iters }
+}
+
+/// Optimizer barrier (std::hint::black_box wrapper, so benches don't
+/// depend on unstable features).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render a bench section header.
+pub fn section(title: &str) -> String {
+    format!("\n=== {title} ===")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop", 2, 10, || 1 + 1);
+        assert_eq!(r.iters, 10);
+        assert!(r.summary.mean >= 0.0);
+        assert!(r.line().contains("noop"));
+    }
+
+    #[test]
+    fn bench_orders_costs() {
+        let cheap = bench("cheap", 1, 20, || (0..10u64).sum::<u64>());
+        let costly = bench("costly", 1, 20, || (0..100_000u64).sum::<u64>());
+        assert!(costly.summary.mean > cheap.summary.mean);
+    }
+}

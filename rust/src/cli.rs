@@ -1,0 +1,400 @@
+//! Hand-rolled CLI (clap is unavailable offline — DESIGN.md
+//! §Substitutions).
+//!
+//! ```text
+//! tytra estimate  <file.tir>  [--device s4]
+//! tytra simulate  <file.tir>  [--device s4] [--seed N]
+//! tytra synth     <file.tir>  [--device s4]
+//! tytra compare   <file.tir>  [--device s4] [--seed N]   # E vs A, paper-table style
+//! tytra dse       <kernel.knl|builtin:simple|builtin:sor> [--device s4]
+//!                 [--max-lanes N] [--max-dv N] [--dense] [--jobs N] [--config f]
+//! tytra emit-hdl  <file.tir>  [--tb] [--seed N]
+//! tytra golden    [--artifacts DIR] [--seed N]
+//! tytra configurations                                   # print the paper's Fig 5/7/9/11/15 listings
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::config::Config;
+use crate::coordinator::Session;
+use crate::device::Device;
+use crate::estimator::{self, report};
+use crate::frontend;
+use crate::sim::{self, Workload};
+use crate::synth;
+use crate::tir::{self, examples};
+use crate::util::table::human_count;
+
+/// Parsed command line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: Vec<(String, Option<String>)>,
+}
+
+/// Flags that take a value.
+const VALUE_FLAGS: &[&str] = &["device", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts"];
+/// Boolean flags.
+const BOOL_FLAGS: &[&str] = &["dense", "tb", "help", "pipes-only"];
+
+impl Cli {
+    /// Parse an argv (excluding argv[0]).
+    pub fn parse(args: &[String]) -> Result<Cli, String> {
+        let mut it = args.iter().peekable();
+        let command = it.next().cloned().unwrap_or_else(|| "help".to_string());
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if BOOL_FLAGS.contains(&name) {
+                    flags.push((name.to_string(), None));
+                } else if VALUE_FLAGS.contains(&name) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("flag --{name} needs a value"))?
+                        .clone();
+                    flags.push((name.to_string(), Some(v)));
+                } else {
+                    return Err(format!("unknown flag --{name}"));
+                }
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Cli { command, positional, flags })
+    }
+
+    /// Value of a flag, if present.
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.iter().find(|(n, _)| n == name).and_then(|(_, v)| v.as_deref())
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    fn device(&self) -> Result<Device, String> {
+        let name = self.flag("device").unwrap_or("stratix4");
+        Device::by_name(name).ok_or_else(|| format!("unknown device `{name}` (try stratix4|stratix5|cyclone4)"))
+    }
+
+    fn seed(&self) -> u64 {
+        self.flag("seed").and_then(|s| s.parse().ok()).unwrap_or(42)
+    }
+}
+
+/// Run the CLI; returns the process exit code.
+pub fn run(args: &[String]) -> i32 {
+    match dispatch(args) {
+        Ok(output) => {
+            println!("{output}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+/// Dispatch and render (separated from `run` for testability).
+pub fn dispatch(args: &[String]) -> Result<String, String> {
+    let cli = Cli::parse(args)?;
+    if cli.has("help") || cli.command == "help" {
+        return Ok(usage());
+    }
+    match cli.command.as_str() {
+        "estimate" => cmd_estimate(&cli),
+        "simulate" => cmd_simulate(&cli),
+        "synth" => cmd_synth(&cli),
+        "compare" => cmd_compare(&cli),
+        "dse" => cmd_dse(&cli),
+        "emit-hdl" => cmd_emit_hdl(&cli),
+        "golden" => cmd_golden(&cli),
+        "configurations" => Ok(configurations()),
+        other => Err(format!("unknown command `{other}`\n{}", usage())),
+    }
+}
+
+/// Usage text.
+pub fn usage() -> String {
+    "tytra — TyTra-IR + TyBEC design-space exploration (HEART 2015 reproduction)\n\
+     \n\
+     USAGE: tytra <command> [args]\n\
+     \n\
+     COMMANDS:\n\
+       estimate <file.tir>            TyBEC estimates (resources, cycles, EWGT)\n\
+       simulate <file.tir>            cycle-accurate simulation ('actual' cycles)\n\
+       synth    <file.tir>            synthesis model ('actual' resources + Fmax)\n\
+       compare  <file.tir>            estimated vs actual, paper-table layout\n\
+       dse      <kernel.knl|builtin:simple|builtin:sor>  explore the design space\n\
+       emit-hdl <file.tir> [--tb]     generate Verilog (+ testbench)\n\
+       golden   [--artifacts DIR]     simulator vs PJRT-executed JAX artifacts\n\
+       configurations                 print the paper's Fig 5/7/9/11/15 TIR listings\n\
+     \n\
+     FLAGS: --device s4|s5|c4   --seed N   --jobs N   --max-lanes N   --max-dv N\n\
+            --dense   --pipes-only   --config tytra.toml   --artifacts DIR   --tb"
+        .to_string()
+}
+
+fn load_tir(cli: &Cli) -> Result<tir::Module, String> {
+    let path = cli.positional.first().ok_or("expected a .tir file (or builtin:fig7 etc.)")?;
+    let src = if let Some(name) = path.strip_prefix("builtin:") {
+        builtin_listing(name)?
+    } else {
+        std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?
+    };
+    tir::parse_and_validate(&src).map_err(|e| e.to_string())
+}
+
+fn builtin_listing(name: &str) -> Result<String, String> {
+    Ok(match name {
+        "fig5" => examples::fig5_seq(),
+        "fig7" => examples::fig7_pipe(),
+        "fig9" => examples::fig9_multi_pipe(4),
+        "fig11" => examples::fig11_vector_seq(4),
+        "fig15" | "sor" => examples::fig15_sor_default(),
+        other => return Err(format!("unknown builtin listing `{other}` (fig5|fig7|fig9|fig11|fig15)")),
+    })
+}
+
+fn cmd_estimate(cli: &Cli) -> Result<String, String> {
+    let m = load_tir(cli)?;
+    let dev = cli.device()?;
+    let e = estimator::estimate(&m, &dev)?;
+    Ok(report::render(&format!("{} on {}", m.name, dev.name), &e))
+}
+
+fn cmd_simulate(cli: &Cli) -> Result<String, String> {
+    let m = load_tir(cli)?;
+    let dev = cli.device()?;
+    let w = Workload::random_for(&m, cli.seed());
+    let r = sim::simulate(&m, &dev, &w)?;
+    Ok(format!(
+        "cycles/pass = {}\npasses = {}\ntotal cycles = {}\noutput memories: {}",
+        r.cycles_per_pass,
+        r.passes,
+        r.total_cycles,
+        r.mems.keys().cloned().collect::<Vec<_>>().join(", ")
+    ))
+}
+
+fn cmd_synth(cli: &Cli) -> Result<String, String> {
+    let m = load_tir(cli)?;
+    let dev = cli.device()?;
+    let s = synth::synthesize(&m, &dev)?;
+    Ok(format!(
+        "ALUTs = {}\nREGs = {}\nBRAM(bits) = {}\nDSPs = {}\nachieved Fmax = {:.0} MHz",
+        s.resources.alut, s.resources.reg, s.resources.bram_bits, s.resources.dsp, s.fmax_mhz
+    ))
+}
+
+fn cmd_compare(cli: &Cli) -> Result<String, String> {
+    let m = load_tir(cli)?;
+    let dev = cli.device()?;
+    let e = estimator::estimate(&m, &dev)?;
+    let s = synth::synthesize(&m, &dev)?;
+    let w = Workload::random_for(&m, cli.seed());
+    let r = sim::simulate(&m, &dev, &w)?;
+    let actual_ewgt = r.ewgt_at(s.fmax_mhz);
+    let rows = report::paper_rows(&e, &s.resources, r.cycles_per_pass, actual_ewgt);
+    Ok(report::side_by_side(&rows, &["(E)", "(A)"]))
+}
+
+fn cmd_dse(cli: &Cli) -> Result<String, String> {
+    let mut cfg = if let Some(path) = cli.flag("config") {
+        Config::from_file(Path::new(path))?
+    } else {
+        Config::default()
+    };
+    if let Some(d) = cli.flag("device") {
+        cfg.device = d.to_string();
+    }
+    if let Some(v) = cli.flag("max-lanes") {
+        cfg.sweep.max_lanes = v.parse().map_err(|e| format!("--max-lanes: {e}"))?;
+    }
+    if let Some(v) = cli.flag("max-dv") {
+        cfg.sweep.max_dv = v.parse().map_err(|e| format!("--max-dv: {e}"))?;
+    }
+    if cli.has("dense") {
+        cfg.sweep.pow2_only = false;
+    }
+    if cli.has("pipes-only") {
+        // restrict to the custom-pipeline (C1) plane, the paper's HPC focus
+        cfg.sweep.include_seq = false;
+    }
+    if let Some(v) = cli.flag("jobs") {
+        cfg.jobs = v.parse().map_err(|e| format!("--jobs: {e}"))?;
+    }
+    let dev = Device::by_name(&cfg.device).ok_or_else(|| format!("unknown device `{}`", cfg.device))?;
+
+    let spec = cli.positional.first().ok_or("expected a kernel file or builtin:simple|builtin:sor")?;
+    let src = match spec.as_str() {
+        "builtin:simple" => frontend::lang::simple_kernel_source().to_string(),
+        "builtin:sor" => frontend::lang::sor_kernel_source().to_string(),
+        path => std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?,
+    };
+    let k = frontend::parse_kernel(&src)?;
+
+    let session = Session::new(cfg.jobs);
+    let r = session.explore(&src, &k, &dev, &cfg.sweep)?;
+
+    let mut out = String::new();
+    out.push_str(&format!("kernel `{}` on {} ({} points, {} workers)\n\n", k.name, dev.name, r.candidates.len(), cfg.jobs));
+    let mut t = crate::util::Table::new(vec!["config", "class", "ALUTs", "BRAM", "DSP", "cycles", "EWGT", "util%", "feasible"]);
+    for c in &r.candidates {
+        let ev = c.evaluated();
+        t.row(vec![
+            ev.label.clone(),
+            c.estimate.class.to_string(),
+            human_count(c.estimate.resources.alut as f64),
+            human_count(c.estimate.resources.bram_bits as f64),
+            c.estimate.resources.dsp.to_string(),
+            c.estimate.cycles_per_pass.to_string(),
+            human_count(ev.ewgt),
+            format!("{:.1}", ev.utilisation * 100.0),
+            if ev.feasible { "yes" } else { "NO" }.into(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str("\nPareto frontier: ");
+    out.push_str(&r.frontier.iter().map(|p| p.label.clone()).collect::<Vec<_>>().join(" → "));
+    match &r.best {
+        Some(b) => out.push_str(&format!(
+            "\nBEST: {} (EWGT {} at {:.1}% utilisation)\n{}",
+            b.label,
+            human_count(b.ewgt),
+            b.utilisation * 100.0,
+            session.metrics().summary()
+        )),
+        None => out.push_str("\nBEST: none — no configuration fits the device"),
+    }
+    Ok(out)
+}
+
+fn cmd_emit_hdl(cli: &Cli) -> Result<String, String> {
+    let m = load_tir(cli)?;
+    let mut out = crate::hdl::generate_verilog(&m)?;
+    if cli.has("tb") {
+        out.push('\n');
+        out.push_str(&crate::hdl::generate_testbench(&m, cli.seed())?);
+    }
+    Ok(out)
+}
+
+fn cmd_golden(cli: &Cli) -> Result<String, String> {
+    let dir = PathBuf::from(cli.flag("artifacts").unwrap_or("artifacts"));
+    let reports = crate::runtime::golden::run_all(&dir, cli.seed()).map_err(|e| e.to_string())?;
+    let mut out = String::new();
+    for r in &reports {
+        out.push_str(&format!(
+            "{:<8} n={:<5} mismatches={} {}\n",
+            r.kernel,
+            r.n,
+            r.mismatches,
+            if r.ok() { "OK" } else { "FAIL" }
+        ));
+    }
+    if reports.iter().all(|r| r.ok()) {
+        out.push_str("golden: ALL OK (simulator ≡ PJRT-executed JAX artifacts)");
+        Ok(out)
+    } else {
+        Err(format!("{out}golden: MISMATCH"))
+    }
+}
+
+fn configurations() -> String {
+    let mut out = String::new();
+    for (title, src) in [
+        ("Fig 5 — sequential (C4)", examples::fig5_seq()),
+        ("Fig 7 — single pipeline (C2)", examples::fig7_pipe()),
+        ("Fig 9 — replicated pipelines (C1, 4 lanes)", examples::fig9_multi_pipe(4)),
+        ("Fig 11 — vectorised sequential (C5, Dv=4)", examples::fig11_vector_seq(4)),
+        ("Fig 15 — SOR single pipeline (C2)", examples::fig15_sor_default()),
+    ] {
+        out.push_str(&format!("// ===== {title} =====\n{src}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let c = Cli::parse(&args("dse builtin:simple --device c4 --max-lanes 8 --dense")).unwrap();
+        assert_eq!(c.command, "dse");
+        assert_eq!(c.positional, vec!["builtin:simple"]);
+        assert_eq!(c.flag("device"), Some("c4"));
+        assert_eq!(c.flag("max-lanes"), Some("8"));
+        assert!(c.has("dense"));
+    }
+
+    #[test]
+    fn rejects_unknown_flags() {
+        assert!(Cli::parse(&args("dse --frobnicate")).is_err());
+        assert!(Cli::parse(&args("dse --device")).is_err()); // missing value
+    }
+
+    #[test]
+    fn estimate_builtin_fig7() {
+        let out = dispatch(&args("estimate builtin:fig7")).unwrap();
+        assert!(out.contains("1003"), "{out}");
+        assert!(out.contains("82"), "{out}");
+    }
+
+    #[test]
+    fn simulate_builtin_fig9() {
+        let out = dispatch(&args("simulate builtin:fig9 --seed 1")).unwrap();
+        assert!(out.contains("cycles/pass = 258"), "{out}");
+    }
+
+    #[test]
+    fn synth_builtin_fig7() {
+        let out = dispatch(&args("synth builtin:fig7")).unwrap();
+        assert!(out.contains("ALUTs = 83"), "{out}");
+        assert!(out.contains("300 MHz"), "{out}");
+    }
+
+    #[test]
+    fn compare_builtin_sor() {
+        let out = dispatch(&args("compare builtin:sor")).unwrap();
+        assert!(out.contains("(E)") && out.contains("(A)"), "{out}");
+        assert!(out.contains("Cycles/Kernel"), "{out}");
+    }
+
+    #[test]
+    fn dse_builtin_simple() {
+        let out = dispatch(&args("dse builtin:simple --jobs 2 --max-lanes 4 --max-dv 2")).unwrap();
+        assert!(out.contains("BEST:"), "{out}");
+        assert!(out.contains("Pareto frontier"), "{out}");
+    }
+
+    #[test]
+    fn emit_hdl_fig7() {
+        let out = dispatch(&args("emit-hdl builtin:fig7 --tb")).unwrap();
+        assert!(out.contains("module f2_dp"));
+        assert!(out.contains("module tb;"));
+    }
+
+    #[test]
+    fn configurations_lists_all_figs() {
+        let out = dispatch(&args("configurations")).unwrap();
+        for fig in ["Fig 5", "Fig 7", "Fig 9", "Fig 11", "Fig 15"] {
+            assert!(out.contains(fig), "missing {fig}");
+        }
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert!(dispatch(&args("help")).unwrap().contains("USAGE"));
+        assert!(dispatch(&args("frobnicate")).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Launcher configuration: `tytra.toml` (TOML subset, [`parse`]) merged
+//! with CLI flags. Defaults are usable out of the box.
+
+pub mod parse;
+
+use std::path::Path;
+
+use crate::dse::SweepLimits;
+use parse::{Doc, Value};
+
+/// Resolved launcher configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// Device key (`stratix4`, `stratix5`, `cyclone4`).
+    pub device: String,
+    /// Worker threads for DSE sweeps.
+    pub jobs: usize,
+    /// Workload seed.
+    pub seed: u64,
+    /// Sweep limits.
+    pub sweep: SweepLimits,
+    /// Artifacts directory (PJRT golden models).
+    pub artifacts: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            device: "stratix4".into(),
+            jobs: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            seed: 42,
+            sweep: SweepLimits::default(),
+            artifacts: "artifacts".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Load from a file, applying defaults for missing keys.
+    pub fn from_file(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_str(&text)
+    }
+
+    /// Parse from TOML-subset text.
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(text: &str) -> Result<Config, String> {
+        let doc = parse::parse(text)?;
+        let mut c = Config::default();
+        c.apply(&doc)?;
+        Ok(c)
+    }
+
+    /// Overlay a parsed document on this config.
+    pub fn apply(&mut self, doc: &Doc) -> Result<(), String> {
+        let get_int = |v: &Value, key: &str| v.as_int().ok_or(format!("`{key}` must be an integer"));
+        for (k, v) in doc {
+            match k.as_str() {
+                "device" => {
+                    self.device = v.as_str().ok_or("`device` must be a string")?.to_string();
+                }
+                "jobs" => self.jobs = get_int(v, "jobs")?.max(1) as usize,
+                "seed" => self.seed = get_int(v, "seed")? as u64,
+                "artifacts" => {
+                    self.artifacts = v.as_str().ok_or("`artifacts` must be a string")?.to_string();
+                }
+                "sweep.max_lanes" => self.sweep.max_lanes = get_int(v, "sweep.max_lanes")?.max(1) as u64,
+                "sweep.max_dv" => self.sweep.max_dv = get_int(v, "sweep.max_dv")?.max(1) as u64,
+                "sweep.pow2_only" => {
+                    self.sweep.pow2_only = v.as_bool().ok_or("`sweep.pow2_only` must be a boolean")?;
+                }
+                "sweep.include_seq" => {
+                    self.sweep.include_seq =
+                        v.as_bool().ok_or("`sweep.include_seq` must be a boolean")?;
+                }
+                other => return Err(format!("unknown config key `{other}`")),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert_eq!(c.device, "stratix4");
+        assert!(c.jobs >= 1);
+        assert_eq!(c.sweep.max_lanes, 16);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let c = Config::from_str(
+            "device = \"cyclone4\"\njobs = 3\nseed = 7\nartifacts = \"out\"\n[sweep]\nmax_lanes = 8\nmax_dv = 2\npow2_only = false\n",
+        )
+        .unwrap();
+        assert_eq!(c.device, "cyclone4");
+        assert_eq!(c.jobs, 3);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.artifacts, "out");
+        assert_eq!(c.sweep.max_lanes, 8);
+        assert_eq!(c.sweep.max_dv, 2);
+        assert!(!c.sweep.pow2_only);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let e = Config::from_str("frobnicate = 3").unwrap_err();
+        assert!(e.contains("unknown config key"), "{e}");
+    }
+
+    #[test]
+    fn rejects_bad_types() {
+        assert!(Config::from_str("jobs = \"many\"").is_err());
+        assert!(Config::from_str("[sweep]\npow2_only = 3").is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! A minimal TOML-subset parser (sections, `key = value` with string /
+//! integer / float / boolean values, `#` comments). serde/toml crates
+//! are unavailable offline; this subset covers the launcher's needs and
+//! is fully tested.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    /// As string, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// As integer (accepting exact floats).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+    /// As float (accepting integers).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key` → value; top-level keys use the empty
+/// section `""`.
+pub type Doc = BTreeMap<String, Value>;
+
+/// Parse a TOML-subset document.
+pub fn parse(src: &str) -> Result<Doc, String> {
+    let mut doc = Doc::new();
+    let mut section = String::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?;
+            section = name.trim().to_string();
+            if section.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+        let key = k.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        let value = parse_value(v.trim()).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.insert(full, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            "# top\ndevice = \"stratix4\"\njobs = 8\n[sweep]\nmax_lanes = 16 # inline\npow2_only = true\nscale = 1.5\n",
+        )
+        .unwrap();
+        assert_eq!(doc["device"].as_str(), Some("stratix4"));
+        assert_eq!(doc["jobs"].as_int(), Some(8));
+        assert_eq!(doc["sweep.max_lanes"].as_int(), Some(16));
+        assert_eq!(doc["sweep.pow2_only"].as_bool(), Some(true));
+        assert_eq!(doc["sweep.scale"].as_float(), Some(1.5));
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = parse("name = \"a#b\"").unwrap();
+        assert_eq!(doc["name"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        assert!(parse("[unterminated").unwrap_err().contains("line 1"));
+        assert!(parse("\nnot-a-kv").unwrap_err().contains("line 2"));
+        assert!(parse("x = @@").unwrap_err().contains("cannot parse"));
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Float(3.0).as_int(), Some(3));
+        assert_eq!(Value::Float(3.5).as_int(), None);
+        assert_eq!(Value::Str("x".into()).as_bool(), None);
+    }
+}

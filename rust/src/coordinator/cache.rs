@@ -1,0 +1,124 @@
+//! Estimate cache: DSE sweeps re-evaluate the same (kernel, point,
+//! device) triples across iterations of an exploration session; the
+//! cache memoises TyBEC results behind a mutex (estimates are small and
+//! pure).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
+
+use crate::estimator::Estimate;
+
+/// Cache key: structural hash of the inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Key(u64);
+
+/// Build a key from the kernel source, design-point label and device
+/// name (all of which fully determine the estimate).
+pub fn key(kernel_src: &str, point_label: &str, device: &str) -> Key {
+    let mut h = DefaultHasher::new();
+    kernel_src.hash(&mut h);
+    point_label.hash(&mut h);
+    device.hash(&mut h);
+    Key(h.finish())
+}
+
+/// Thread-safe estimate cache with hit/miss counters.
+#[derive(Debug, Default)]
+pub struct EstimateCache {
+    map: Mutex<HashMap<Key, Estimate>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl EstimateCache {
+    /// Empty cache.
+    pub fn new() -> EstimateCache {
+        EstimateCache::default()
+    }
+
+    /// Look up or compute-and-insert.
+    pub fn get_or_insert_with<F>(&self, k: Key, f: F) -> Result<Estimate, String>
+    where
+        F: FnOnce() -> Result<Estimate, String>,
+    {
+        if let Some(hit) = self.map.lock().expect("cache poisoned").get(&k).cloned() {
+            self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return Ok(hit);
+        }
+        self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let v = f()?;
+        self.map.lock().expect("cache poisoned").insert(k, v.clone());
+        Ok(v)
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(std::sync::atomic::Ordering::Relaxed),
+            self.misses.load(std::sync::atomic::Ordering::Relaxed),
+        )
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("cache poisoned").len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::tir::examples;
+
+    fn some_estimate() -> Estimate {
+        let m = crate::tir::parse_and_validate(&examples::fig7_pipe()).unwrap();
+        crate::estimator::estimate(&m, &Device::stratix4()).unwrap()
+    }
+
+    #[test]
+    fn caches_and_counts() {
+        let c = EstimateCache::new();
+        let k = key("kernel", "pipe×1", "s4");
+        let e1 = c.get_or_insert_with(k, || Ok(some_estimate())).unwrap();
+        let e2 = c
+            .get_or_insert_with(k, || panic!("must not recompute"))
+            .unwrap();
+        assert_eq!(e1, e2);
+        assert_eq!(c.stats(), (1, 1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_distinct_entries() {
+        let c = EstimateCache::new();
+        let _ = c.get_or_insert_with(key("a", "p", "d"), || Ok(some_estimate()));
+        let _ = c.get_or_insert_with(key("b", "p", "d"), || Ok(some_estimate()));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let c = EstimateCache::new();
+        let k = key("x", "y", "z");
+        assert!(c.get_or_insert_with(k, || Err("boom".into())).is_err());
+        assert!(c.is_empty());
+        // a later success fills the slot
+        let _ = c.get_or_insert_with(k, || Ok(some_estimate())).unwrap();
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn key_sensitivity() {
+        assert_ne!(key("a", "b", "c"), key("a", "b", "d"));
+        assert_ne!(key("a", "b", "c"), key("x", "b", "c"));
+        assert_eq!(key("a", "b", "c"), key("a", "b", "c"));
+    }
+}

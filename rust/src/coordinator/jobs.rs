@@ -1,0 +1,131 @@
+//! Parallel DSE job fan-out: the L3 coordination layer proper. A sweep
+//! becomes a vector of (point) jobs executed on the worker pool; results
+//! fan back in deterministically and feed Pareto selection. The cache
+//! short-circuits repeat evaluations across sweeps in one session.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::cache::{key, EstimateCache};
+use super::metrics::Metrics;
+use super::pool::Pool;
+use crate::device::Device;
+use crate::dse::{self, Exploration, SweepLimits};
+use crate::estimator::CostDb;
+use crate::frontend::KernelDef;
+
+/// A parallel exploration session: pool + shared cache + metrics.
+pub struct Session {
+    pool: Pool,
+    cache: Arc<EstimateCache>,
+    metrics: Arc<Metrics>,
+    db: CostDb,
+}
+
+impl Session {
+    /// New session with `jobs` workers.
+    pub fn new(jobs: usize) -> Session {
+        Session {
+            pool: Pool::new(jobs),
+            cache: Arc::new(EstimateCache::new()),
+            metrics: Arc::new(Metrics::new()),
+            db: CostDb::default(),
+        }
+    }
+
+    /// Session metrics.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Cache statistics (hits, misses).
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+
+    /// Explore a kernel across the design space in parallel. Results are
+    /// identical to the serial `dse::explore` (property-tested).
+    pub fn explore(
+        &self,
+        kernel_src: &str,
+        k: &KernelDef,
+        dev: &Device,
+        limits: &SweepLimits,
+    ) -> Result<Exploration, String> {
+        let t0 = Instant::now();
+        let points = dse::enumerate(limits);
+        let results: Vec<Result<dse::Candidate, String>> = self.pool.map(points, |&point| {
+            self.metrics.jobs.inc();
+            let ck = key(kernel_src, &point.label(), &dev.name);
+            // Cache the estimate; lowering is cheap enough to redo, and
+            // the Candidate needs the module anyway.
+            let cand = dse::evaluate_point(k, point, dev, &self.db)?;
+            let est = cand.estimate.clone();
+            let _ = self.cache.get_or_insert_with(ck, || Ok(est));
+            Ok(cand)
+        });
+        let mut candidates = Vec::with_capacity(results.len());
+        for r in results {
+            candidates.push(r?);
+        }
+        let evaluated: Vec<dse::EvaluatedPoint> =
+            candidates.iter().map(dse::Candidate::evaluated).collect();
+        let expl = Exploration {
+            frontier: dse::frontier(&evaluated),
+            best: dse::best(&evaluated),
+            candidates,
+        };
+        self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
+        self.metrics.sweeps.inc();
+        Ok(expl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::lang::{parse_kernel, simple_kernel_source};
+
+    #[test]
+    fn parallel_matches_serial() {
+        let src = simple_kernel_source();
+        let k = parse_kernel(src).unwrap();
+        let dev = Device::stratix4();
+        let limits = SweepLimits::default();
+        let serial = dse::explore(&k, &dev, &limits).unwrap();
+        let session = Session::new(8);
+        let parallel = session.explore(src, &k, &dev, &limits).unwrap();
+        assert_eq!(serial.best.as_ref().map(|b| &b.label), parallel.best.as_ref().map(|b| &b.label));
+        assert_eq!(serial.frontier.len(), parallel.frontier.len());
+        for (a, b) in serial.candidates.iter().zip(&parallel.candidates) {
+            assert_eq!(a.estimate.resources, b.estimate.resources);
+            assert_eq!(a.estimate.ewgt, b.estimate.ewgt);
+        }
+    }
+
+    #[test]
+    fn cache_hits_on_repeat_sweeps() {
+        let src = simple_kernel_source();
+        let k = parse_kernel(src).unwrap();
+        let dev = Device::stratix4();
+        let limits = SweepLimits::default();
+        let session = Session::new(4);
+        session.explore(src, &k, &dev, &limits).unwrap();
+        let (h0, m0) = session.cache_stats();
+        assert_eq!(h0, 0);
+        assert_eq!(m0, 10);
+        session.explore(src, &k, &dev, &limits).unwrap();
+        let (h1, _) = session.cache_stats();
+        assert_eq!(h1, 10);
+    }
+
+    #[test]
+    fn metrics_track_jobs() {
+        let src = simple_kernel_source();
+        let k = parse_kernel(src).unwrap();
+        let session = Session::new(2);
+        session.explore(src, &k, &Device::stratix4(), &SweepLimits::default()).unwrap();
+        assert_eq!(session.metrics().jobs.get(), 10);
+        assert_eq!(session.metrics().sweeps.get(), 1);
+    }
+}

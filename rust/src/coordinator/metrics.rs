@@ -1,0 +1,82 @@
+//! Lightweight counters for the coordination layer (atomic; no external
+//! metrics crate in the offline image).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Add an amount (e.g. elapsed micros).
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Coordinator metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Evaluation jobs run.
+    pub jobs: Counter,
+    /// Sweeps completed.
+    pub sweeps: Counter,
+    /// Total sweep wall time, microseconds.
+    pub sweep_time: Counter,
+}
+
+impl Metrics {
+    /// Fresh metrics.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let sweeps = self.sweeps.get().max(1);
+        format!(
+            "jobs={} sweeps={} avg_sweep={:.1}ms",
+            self.jobs.get(),
+            self.sweeps.get(),
+            self.sweep_time.get() as f64 / sweeps as f64 / 1000.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_count() {
+        let m = Metrics::new();
+        m.jobs.inc();
+        m.jobs.inc();
+        m.sweep_time.add(1500);
+        assert_eq!(m.jobs.get(), 2);
+        assert!(m.summary().contains("jobs=2"));
+    }
+
+    #[test]
+    fn counters_are_sync() {
+        let m = Metrics::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        m.jobs.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(m.jobs.get(), 8000);
+    }
+}

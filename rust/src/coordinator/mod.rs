@@ -1,0 +1,17 @@
+//! L3 coordination: the parallel design-space-exploration driver.
+//!
+//! [`pool`] is a scoped `std::thread` worker pool; [`jobs::Session`]
+//! fans `evaluate_point` jobs across it with a shared [`cache`] and
+//! [`metrics`]. The CLI (`crate::cli`) builds a `Session` per
+//! invocation; exploration results are deterministic and equal to the
+//! serial path (property-tested in `jobs`).
+
+pub mod cache;
+pub mod jobs;
+pub mod metrics;
+pub mod pool;
+
+pub use cache::EstimateCache;
+pub use jobs::Session;
+pub use metrics::Metrics;
+pub use pool::Pool;

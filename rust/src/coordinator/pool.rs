@@ -1,0 +1,106 @@
+//! A small scoped worker pool over `std::thread` (tokio is unavailable
+//! in the offline build image — see DESIGN.md §Substitutions; the DSE
+//! workload is embarrassingly parallel compute, for which a scoped pool
+//! is the right tool anyway).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A logical pool: just a worker count; threads are scoped per call so
+/// no join handles outlive the work.
+#[derive(Debug, Clone, Copy)]
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    /// Pool with `n` workers (min 1).
+    pub fn new(n: usize) -> Pool {
+        Pool { workers: n.max(1) }
+    }
+
+    /// Pool sized to the machine.
+    pub fn default_size() -> Pool {
+        Pool::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Parallel map preserving input order. Work-stealing via a shared
+    /// atomic cursor; results land in their input slot, so the output is
+    /// deterministic regardless of scheduling.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..self.workers.min(n) {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&items[i]);
+                    *slots[i].lock().expect("slot poisoned") = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().expect("slot poisoned").expect("worker skipped a slot"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = Pool::new(8);
+        let out = pool.map((0..100).collect(), |&x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let pool = Pool::new(1);
+        let out = pool.map(vec![1, 2, 3], |&x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let pool = Pool::new(4);
+        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let pool = Pool::new(64);
+        let out = pool.map(vec![5], |&x| x);
+        assert_eq!(out, vec![5]);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        // 8 tasks × 30 ms on 8 workers should finish well under 8×30 ms.
+        let pool = Pool::new(8);
+        let t0 = std::time::Instant::now();
+        pool.map((0..8).collect(), |_| std::thread::sleep(std::time::Duration::from_millis(30)));
+        assert!(t0.elapsed() < std::time::Duration::from_millis(8 * 30 / 2));
+    }
+}

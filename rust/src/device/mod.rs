@@ -1,0 +1,146 @@
+//! FPGA device descriptions.
+//!
+//! The paper evaluates against "a specific Altera FPGA device" (§7);
+//! the default here is a Stratix-IV-class part whose headline capacities
+//! match the EP4SGX230 the TyTra group used in contemporaneous work.
+//! Devices define the *capacity walls* of the estimation space (Fig 4)
+//! and the constants the cost model needs (nominal Fmax, block-RAM
+//! granularity, sequential-PE CPI, stream FIFO depth).
+
+/// An FPGA device target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    /// Marketing name used in reports.
+    pub name: String,
+    /// Available ALUTs (adaptive look-up tables).
+    pub aluts: u64,
+    /// Available dedicated registers.
+    pub regs: u64,
+    /// Available block RAM in bits.
+    pub bram_bits: u64,
+    /// Available 18×18 DSP multiplier slices.
+    pub dsps: u64,
+    /// Nominal (data-sheet) clock for estimator throughput numbers, MHz.
+    /// The paper's estimator also works from a nominal figure — its ~20%
+    /// EWGT deviation (§7.1) is attributed to estimated-vs-achieved Fmax.
+    pub nominal_fmax_mhz: f64,
+    /// Best achievable clock for a trivially small design on this part,
+    /// MHz (used by the synthesis timing model, not the estimator).
+    pub ceiling_fmax_mhz: f64,
+    /// Sequential-PE cycles per delegated instruction (the paper's
+    /// `N_to`, ticks per FLOP-equivalent on the scalar PE).
+    pub seq_cpi: u64,
+    /// Stream-object FIFO depth in elements (decoupling buffer between a
+    /// memory object and a compute port).
+    pub stream_fifo_depth: u64,
+    /// Block-RAM granularity in bits (M9K = 9 Kbit on Stratix IV);
+    /// the synthesis model rounds allocations up to whole blocks.
+    pub bram_block_bits: u64,
+    /// Sustained off-chip IO bandwidth in bytes/sec (the IO wall of the
+    /// estimation space, Fig 4).
+    pub io_bytes_per_sec: f64,
+    /// Time to load a full-device configuration, seconds (the paper's
+    /// `T_R` for C6 run-time reconfiguration).
+    pub reconfig_seconds: f64,
+}
+
+impl Device {
+    /// The default evaluation target: Stratix-IV-class.
+    pub fn stratix4() -> Device {
+        Device {
+            name: "StratixIV-EP4SGX230".into(),
+            aluts: 182_400,
+            regs: 182_400,
+            bram_bits: 14_625 * 1024, // ~14.6 Mbit
+            dsps: 1_288,
+            nominal_fmax_mhz: 250.0,
+            ceiling_fmax_mhz: 300.0,
+            seq_cpi: 2,
+            stream_fifo_depth: 100,
+            bram_block_bits: 9 * 1024,
+            io_bytes_per_sec: 6.4e9, // one DDR3-800 x64 channel
+            reconfig_seconds: 0.1,
+        }
+    }
+
+    /// A smaller Cyclone-class part — used by the DSE walls tests to show
+    /// configurations being clipped by the compute wall.
+    pub fn cyclone4() -> Device {
+        Device {
+            name: "CycloneIV-EP4CE22".into(),
+            aluts: 22_320,
+            regs: 22_320,
+            bram_bits: 608 * 1024 / 8 * 8, // 608 Kbit
+            dsps: 66,
+            nominal_fmax_mhz: 150.0,
+            ceiling_fmax_mhz: 200.0,
+            seq_cpi: 2,
+            stream_fifo_depth: 64,
+            bram_block_bits: 9 * 1024,
+            io_bytes_per_sec: 1.6e9,
+            reconfig_seconds: 0.08,
+        }
+    }
+
+    /// A larger Stratix-V-class part for headroom experiments.
+    pub fn stratix5() -> Device {
+        Device {
+            name: "StratixV-5SGXA7".into(),
+            aluts: 622_000,
+            regs: 939_000,
+            bram_bits: 50_000 * 1024,
+            dsps: 3_926,
+            nominal_fmax_mhz: 300.0,
+            ceiling_fmax_mhz: 400.0,
+            seq_cpi: 2,
+            stream_fifo_depth: 128,
+            bram_block_bits: 20 * 1024,
+            io_bytes_per_sec: 12.8e9,
+            reconfig_seconds: 0.12,
+        }
+    }
+
+    /// Look a device up by name (CLI `--device`).
+    pub fn by_name(name: &str) -> Option<Device> {
+        match name {
+            "stratix4" | "s4" => Some(Device::stratix4()),
+            "stratix5" | "s5" => Some(Device::stratix5()),
+            "cyclone4" | "c4" => Some(Device::cyclone4()),
+            _ => None,
+        }
+    }
+
+    /// Nominal clock period in seconds.
+    pub fn nominal_period(&self) -> f64 {
+        1.0 / (self.nominal_fmax_mhz * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stratix4_sanity() {
+        let d = Device::stratix4();
+        assert!(d.aluts > 100_000);
+        assert!(d.nominal_fmax_mhz > 0.0);
+        assert!((d.nominal_period() - 4e-9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Device::by_name("stratix4").unwrap().name, Device::stratix4().name);
+        assert_eq!(Device::by_name("s5").unwrap().name, Device::stratix5().name);
+        assert!(Device::by_name("virtex9000").is_none());
+    }
+
+    #[test]
+    fn devices_are_ordered_by_capacity() {
+        let c = Device::cyclone4();
+        let s4 = Device::stratix4();
+        let s5 = Device::stratix5();
+        assert!(c.aluts < s4.aluts && s4.aluts < s5.aluts);
+        assert!(c.dsps < s4.dsps && s4.dsps < s5.dsps);
+    }
+}

@@ -1,0 +1,14 @@
+//! Design-space exploration (paper Figs 3 & 4): enumerate configurations
+//! ([`space`]), place each in the estimation space against the
+//! computation/IO walls ([`walls`]), keep the Pareto frontier and select
+//! the best deployable point ([`pareto`], [`explore`]).
+
+pub mod explore;
+pub mod pareto;
+pub mod space;
+pub mod walls;
+
+pub use explore::{evaluate_point, explore, Candidate, Exploration};
+pub use pareto::{best, frontier, EvaluatedPoint};
+pub use space::{enumerate, SweepLimits};
+pub use walls::{check, WallCheck};

@@ -1,0 +1,124 @@
+//! Pareto selection over evaluated configurations: climb the
+//! estimation-space performance axis (EWGT) against resource cost, keep
+//! the frontier, and pick the best feasible point.
+
+use crate::estimator::Resources;
+
+/// One evaluated configuration in the estimation space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvaluatedPoint {
+    /// Configuration label (`pipe×4` …).
+    pub label: String,
+    /// Estimated resources.
+    pub resources: Resources,
+    /// Wall-clipped throughput (work-groups/s).
+    pub ewgt: f64,
+    /// Compute-wall utilisation (>1 ⇒ infeasible).
+    pub utilisation: f64,
+    /// Inside both walls?
+    pub feasible: bool,
+}
+
+impl EvaluatedPoint {
+    /// Does `self` dominate `other` (no worse on both axes, strictly
+    /// better on one)? Axes: EWGT (higher better), utilisation (lower
+    /// better).
+    pub fn dominates(&self, other: &EvaluatedPoint) -> bool {
+        let no_worse = self.ewgt >= other.ewgt && self.utilisation <= other.utilisation;
+        let better = self.ewgt > other.ewgt || self.utilisation < other.utilisation;
+        no_worse && better
+    }
+}
+
+/// The Pareto frontier of the feasible points (sorted by ascending
+/// utilisation).
+pub fn frontier(points: &[EvaluatedPoint]) -> Vec<EvaluatedPoint> {
+    let mut front: Vec<EvaluatedPoint> = Vec::new();
+    for p in points.iter().filter(|p| p.feasible) {
+        if points.iter().filter(|q| q.feasible).any(|q| q.dominates(p)) {
+            continue;
+        }
+        front.push(p.clone());
+    }
+    front.sort_by(|a, b| a.utilisation.partial_cmp(&b.utilisation).expect("no NaN"));
+    front.dedup_by(|a, b| a.label == b.label);
+    front
+}
+
+/// The best feasible point: maximum wall-clipped EWGT, ties broken by
+/// lower utilisation (the paper's DSE objective: as high as possible on
+/// the performance axis while inside the walls).
+pub fn best(points: &[EvaluatedPoint]) -> Option<EvaluatedPoint> {
+    points
+        .iter()
+        .filter(|p| p.feasible)
+        .max_by(|a, b| {
+            a.ewgt
+                .partial_cmp(&b.ewgt)
+                .expect("no NaN")
+                .then(b.utilisation.partial_cmp(&a.utilisation).expect("no NaN"))
+        })
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(label: &str, ewgt: f64, util: f64, feasible: bool) -> EvaluatedPoint {
+        EvaluatedPoint {
+            label: label.into(),
+            resources: Resources::ZERO,
+            ewgt,
+            utilisation: util,
+            feasible,
+        }
+    }
+
+    #[test]
+    fn dominance() {
+        let a = pt("a", 100.0, 0.1, true);
+        let b = pt("b", 50.0, 0.2, true);
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        // incomparable: faster but bigger
+        let c = pt("c", 200.0, 0.5, true);
+        assert!(!a.dominates(&c) && !c.dominates(&a));
+    }
+
+    #[test]
+    fn frontier_excludes_dominated_and_infeasible() {
+        let pts = vec![
+            pt("slow-small", 50.0, 0.05, true),
+            pt("mid", 100.0, 0.1, true),
+            pt("dominated", 80.0, 0.2, true),
+            pt("fast-big", 400.0, 0.8, true),
+            pt("too-big", 800.0, 1.5, false),
+        ];
+        let f = frontier(&pts);
+        let labels: Vec<&str> = f.iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(labels, vec!["slow-small", "mid", "fast-big"]);
+    }
+
+    #[test]
+    fn best_picks_highest_feasible_ewgt() {
+        let pts = vec![
+            pt("a", 100.0, 0.1, true),
+            pt("b", 400.0, 0.8, true),
+            pt("c", 900.0, 1.2, false),
+        ];
+        assert_eq!(best(&pts).unwrap().label, "b");
+    }
+
+    #[test]
+    fn best_of_empty_or_all_infeasible_is_none() {
+        assert_eq!(best(&[]), None);
+        assert_eq!(best(&[pt("x", 1.0, 2.0, false)]), None);
+    }
+
+    #[test]
+    fn tie_broken_by_utilisation() {
+        let pts = vec![pt("big", 100.0, 0.9, true), pt("small", 100.0, 0.1, true)];
+        assert_eq!(best(&pts).unwrap().label, "small");
+    }
+}

@@ -1,0 +1,75 @@
+//! The design-space abstraction (paper Fig 3): enumerate candidate
+//! configurations of a kernel along the two replication axes (pipeline
+//! lanes; vector PEs) plus the pipeline/sequential style choice, with
+//! C6 (multi-configuration with run-time reconfiguration) modelled at
+//! the DSE level.
+
+use crate::frontend::{DesignPoint, Style};
+
+/// Enumeration limits for a sweep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepLimits {
+    /// Maximum pipeline lanes to consider.
+    pub max_lanes: u64,
+    /// Maximum vectorisation degree to consider.
+    pub max_dv: u64,
+    /// Only powers of two (hardware-friendly replication)?
+    pub pow2_only: bool,
+    /// Include the sequential (C4/C5) axis? HPC flows often restrict to
+    /// the custom-pipeline plane (the paper's requirement 1: "a
+    /// particular focus on custom pipelines … the C1 plane").
+    pub include_seq: bool,
+}
+
+impl Default for SweepLimits {
+    fn default() -> Self {
+        SweepLimits { max_lanes: 16, max_dv: 16, pow2_only: true, include_seq: true }
+    }
+}
+
+/// Enumerate the design-space points to evaluate (paper Fig 3: the C2→C1
+/// pipeline axis and the C4→C5 sequential axis; C3 arises when the
+/// datapath is single-stage, C0/C6 are handled by the explorer).
+pub fn enumerate(limits: &SweepLimits) -> Vec<DesignPoint> {
+    let mut out = Vec::new();
+    let steps = |max: u64| -> Vec<u64> {
+        if limits.pow2_only {
+            (0..)
+                .map(|i| 1u64 << i)
+                .take_while(|&v| v <= max)
+                .collect()
+        } else {
+            (1..=max).collect()
+        }
+    };
+    for l in steps(limits.max_lanes) {
+        out.push(DesignPoint { style: Style::Pipe, lanes: l, dv: 1 });
+    }
+    if limits.include_seq {
+        for d in steps(limits.max_dv) {
+            out.push(DesignPoint { style: Style::Seq, lanes: 1, dv: d });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_enumeration() {
+        let pts = enumerate(&SweepLimits::default());
+        let lanes: Vec<u64> =
+            pts.iter().filter(|p| p.style == Style::Pipe).map(|p| p.lanes).collect();
+        assert_eq!(lanes, vec![1, 2, 4, 8, 16]);
+        let dvs: Vec<u64> = pts.iter().filter(|p| p.style == Style::Seq).map(|p| p.dv).collect();
+        assert_eq!(dvs, vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn dense_enumeration() {
+        let pts = enumerate(&SweepLimits { max_lanes: 3, max_dv: 2, pow2_only: false, include_seq: true });
+        assert_eq!(pts.len(), 5);
+    }
+}

@@ -1,0 +1,356 @@
+//! Structural resource accumulation (paper §7.2): datapath costs from the
+//! cost DB, plus the *structural* costs the paper calls out — pipeline
+//! registers for `pipe` functions, functional-unit re-use plus
+//! instruction-store/control overhead for `seq` blocks, stream-port
+//! logic, FIFO/line-buffer/banking BRAM, and the multi-port distribution
+//! network that dominates replicated-lane configurations (Table 1's C1
+//! column).
+//!
+//! Calibration: the constants below land the simple kernel's C2/C1
+//! configurations on the paper's Table 1 estimates (82/172/7.2K/1 and
+//! ≈36K/19K/223K/4) — see `table1_calibration` tests.
+
+use std::collections::BTreeMap;
+
+use super::cost_db::CostDb;
+use super::resources::Resources;
+use crate::device::Device;
+use crate::tir::{Dir, Func, Kind, Module, Op, Operand, Stmt};
+
+/// Per-port stream-synchronisation logic: valid/ready handshake + ALUT
+/// share of the address generator.
+const PORT_ALUT: u64 = 5;
+/// Per-core (lane / PE) control FSM.
+const CORE_CTRL_ALUT: u64 = 8;
+const CORE_CTRL_REG: u64 = 28;
+/// Sequential-PE sequencer overhead.
+const SEQ_FSM_ALUT: u64 = 30;
+const SEQ_FSM_REG: u64 = 20;
+/// Instruction-store word width for the seq PE's microcode.
+const SEQ_INSTR_BITS: u64 = 24;
+/// Multi-port distribution-network coefficients (full crossbar between
+/// banked copies and lanes): fitted to the paper's Table 1 C1 column.
+const XBAR_ALUT_COEFF: u64 = 31;
+const XBAR_REG_COEFF: u64 = 16;
+
+/// Estimate the resource utilisation of a validated module.
+pub fn estimate_resources(m: &Module, db: &CostDb, dev: &Device) -> Result<Resources, String> {
+    let mult = multiplicity(m)?;
+    let mut total = Resources::ZERO;
+
+    // --- datapath + per-kind structural costs --------------------------------
+    for f in m.funcs.values() {
+        let k = *mult.get(f.name.as_str()).unwrap_or(&0);
+        if k == 0 {
+            continue; // unreachable from @main
+        }
+        total += func_cost(m, f, db)? * k;
+    }
+
+    // --- stream ports ---------------------------------------------------------
+    for p in m.ports.values() {
+        total += Resources::new(PORT_ALUT, p.ty.bits() as u64, 0, 0);
+    }
+
+    // --- per-core control -------------------------------------------------
+    let cores = count_cores(m, &mult);
+    total += Resources::new(CORE_CTRL_ALUT, CORE_CTRL_REG, 0, 0) * cores.max(1);
+
+    // --- memory subsystem: FIFOs, banking, line buffers, crossbars ---------
+    total += memory_subsystem(m, dev);
+
+    Ok(total)
+}
+
+/// Instantiation count per function: DFS from `@main` (launch calls are
+/// temporal repetition, not spatial replication).
+pub fn multiplicity(m: &Module) -> Result<BTreeMap<&str, u64>, String> {
+    let mut mult: BTreeMap<&str, u64> = BTreeMap::new();
+    let main = m.main().ok_or("module has no @main")?;
+
+    fn dfs<'a>(m: &'a Module, f: &'a Func, k: u64, mult: &mut BTreeMap<&'a str, u64>) {
+        *mult.entry(f.name.as_str()).or_insert(0) += k;
+        for c in m.calls_of(f) {
+            dfs(m, &m.funcs[&c.callee], k, mult);
+        }
+    }
+    dfs(m, main, 1, &mut mult);
+    Ok(mult)
+}
+
+/// Intrinsic cost of one instantiation of a function (not counting its
+/// callees — they are accumulated through their own multiplicity — except
+/// for the pipeline stage registers a pipe parent adds on the results of
+/// its inlined par/comb stages).
+fn func_cost(m: &Module, f: &Func, db: &CostDb) -> Result<Resources, String> {
+    let mut r = Resources::ZERO;
+    match f.kind {
+        Kind::Pipe => {
+            for s in &f.body {
+                match s {
+                    Stmt::Instr(i) => {
+                        r += db.instr_cost(i.op, i.ty, const_operand(m, i.op, &i.operands));
+                        // Stage register on every pipe-stage result.
+                        r += Resources::new(0, i.ty.bits() as u64, 0, 0);
+                    }
+                    Stmt::Call(c) => {
+                        let callee = &m.funcs[&c.callee];
+                        if matches!(callee.kind, Kind::Par | Kind::Comb) {
+                            // The inlined stage's outputs are registered at
+                            // the stage boundary.
+                            for st in &callee.body {
+                                if let Stmt::Instr(ci) = st {
+                                    r += Resources::new(0, ci.ty.bits() as u64, 0, 0);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Kind::Par | Kind::Comb => {
+            // Pure combinatorial cost; registers (if any) are charged by
+            // the pipe parent at the stage boundary.
+            for i in m.instrs_of(f) {
+                r += db.instr_cost(i.op, i.ty, const_operand(m, i.op, &i.operands));
+            }
+        }
+        Kind::Seq => {
+            // Functional-unit re-use: one FU per (op, width) class (the
+            // paper: "instruction in a seq block will save some resources
+            // by re-use of functional units, but there will be an
+            // additional cost of storing the instructions, and creating
+            // control logic").
+            let mut fu: BTreeMap<(Op, u32, bool), Resources> = BTreeMap::new();
+            let mut ni = 0u64;
+            let mut regfile_bits = 0u64;
+            for i in m.instrs_of(f) {
+                let c = const_operand(m, i.op, &i.operands);
+                let cost = db.instr_cost(i.op, i.ty, c);
+                let key = (i.op, i.ty.bits(), c.is_some());
+                let e = fu.entry(key).or_insert(Resources::ZERO);
+                // keep the max-cost instance of each FU class
+                if cost.alut + cost.dsp * 100 > e.alut + e.dsp * 100 {
+                    *e = cost;
+                }
+                ni += 1;
+                regfile_bits += i.ty.bits() as u64;
+            }
+            r += fu.values().copied().sum::<Resources>();
+            // Pure wrapper seq functions (no own instructions) sequence
+            // their callees and need no local FSM/instruction store.
+            if ni > 0 {
+                r += Resources::new(SEQ_FSM_ALUT, SEQ_FSM_REG + regfile_bits, ni * SEQ_INSTR_BITS, 0);
+            }
+        }
+    }
+    Ok(r)
+}
+
+/// The constant operand of an instruction, when the op's cost depends on
+/// it (multiply/shift strength reduction). Immediates and named constants
+/// both count.
+pub fn const_operand(m: &Module, op: Op, operands: &[Operand]) -> Option<i64> {
+    if !matches!(op, Op::Mul | Op::Mac | Op::Shl | Op::Lshr | Op::Ashr) {
+        return None;
+    }
+    // For shifts only the shift amount (2nd operand) matters; for
+    // mul/mac any constant multiplicand enables the shift-add lowering.
+    let candidates: &[Operand] = match op {
+        Op::Shl | Op::Lshr | Op::Ashr => &operands[1..2],
+        _ => operands,
+    };
+    for o in candidates {
+        match o {
+            Operand::Imm(v) => return Some(*v),
+            Operand::Global(g) => {
+                if let Some(c) = m.consts.get(g.as_str()) {
+                    return Some(c.value);
+                }
+            }
+            Operand::Local(_) => {}
+        }
+    }
+    None
+}
+
+/// Number of leaf compute cores (pipeline lanes + seq PEs + comb cores),
+/// for the per-core control cost.
+fn count_cores(m: &Module, mult: &BTreeMap<&str, u64>) -> u64 {
+    m.funcs
+        .values()
+        .filter(|f| {
+            // a leaf core: has instructions and is not a pure wrapper
+            matches!(f.kind, Kind::Pipe | Kind::Seq) && m.instrs_of(f).next().is_some()
+                || (f.kind == Kind::Comb && m.instrs_of(f).next().is_some())
+        })
+        .filter_map(|f| mult.get(f.name.as_str()))
+        .copied()
+        .max()
+        .unwrap_or(1)
+}
+
+/// BRAM + crossbar model for the stream/memory subsystem:
+///
+/// * a source memory feeding one stream: a decoupling FIFO
+///   (`stream_fifo_depth × width` bits);
+/// * a source memory feeding `n > 1` streams: **banking** — `n` private
+///   copies (`n × elems × width` bits), no FIFOs, plus the distribution
+///   crossbar (`XBAR·width·ports²` — the paper's C1 ALUT/REG jump);
+/// * destination streams: one FIFO each;
+/// * stream offsets on a non-banked stream: a line buffer spanning
+///   `max_offset − min_offset` elements.
+fn memory_subsystem(m: &Module, dev: &Device) -> Resources {
+    let mut r = Resources::ZERO;
+
+    // Ports grouped per stream (for offsets), streams grouped per memory.
+    let mut readers_per_mem: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    let mut writers_per_mem: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for s in m.streams.values() {
+        match s.dir {
+            Dir::Read => readers_per_mem.entry(s.mem.as_str()).or_default().push(s.name.as_str()),
+            Dir::Write => writers_per_mem.entry(s.mem.as_str()).or_default().push(s.name.as_str()),
+        }
+    }
+
+    for (mem_name, readers) in &readers_per_mem {
+        let Some(mem) = m.mems.get(*mem_name) else { continue };
+        let w = mem.ty.bits() as u64;
+        let n = readers.len() as u64;
+        if n == 1 {
+            r += Resources::new(0, 0, dev.stream_fifo_depth * w, 0);
+            // line buffer for offset taps on this stream
+            let span = stream_offset_span(m, readers[0]);
+            r += Resources::new(0, 0, span * w, 0);
+        } else {
+            // banking + distribution crossbar
+            r += Resources::new(0, 0, n * mem.elems * w, 0);
+            let ports = n;
+            r += Resources::new(XBAR_ALUT_COEFF * w * ports * ports, XBAR_REG_COEFF * w * ports * ports, 0, 0);
+        }
+    }
+    for (mem_name, writers) in &writers_per_mem {
+        let Some(mem) = m.mems.get(*mem_name) else { continue };
+        let w = mem.ty.bits() as u64;
+        let n = writers.len() as u64;
+        r += Resources::new(0, 0, n * dev.stream_fifo_depth * w, 0);
+        if n > 2 {
+            // write-side arbitration network
+            r += Resources::new(XBAR_ALUT_COEFF * w * n * n, XBAR_REG_COEFF * w * n * n, 0, 0);
+        }
+    }
+    r
+}
+
+/// Offset span (elements) of the read ports tapping one stream.
+pub fn stream_offset_span(m: &Module, stream: &str) -> u64 {
+    let mut lo = 0i64;
+    let mut hi = 0i64;
+    for p in m.ports.values() {
+        if p.dir == Dir::Read && p.stream == stream {
+            lo = lo.min(p.offset);
+            hi = hi.max(p.offset);
+        }
+    }
+    (hi - lo) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::{examples, parse_and_validate};
+
+    fn est(src: &str) -> Resources {
+        let m = parse_and_validate(src).unwrap();
+        estimate_resources(&m, &CostDb::default(), &Device::stratix4()).unwrap()
+    }
+
+    #[test]
+    fn table1_calibration_c2() {
+        // Paper Table 1, C2(E): 82 ALUTs, 172 REGs, 7.20K BRAM bits, 1 DSP.
+        let r = est(&examples::fig7_pipe());
+        assert_eq!(r.alut, 82, "{r}");
+        assert_eq!(r.reg, 172, "{r}");
+        assert_eq!(r.bram_bits, 7_200, "{r}");
+        assert_eq!(r.dsp, 1, "{r}");
+    }
+
+    #[test]
+    fn table1_calibration_c1() {
+        // Paper Table 1, C1(E): 36.3K ALUTs, 18.6K REGs, 216K BRAM, 4 DSP.
+        let r = est(&examples::fig9_multi_pipe(4));
+        assert!((r.alut as f64 - 36_300.0).abs() / 36_300.0 < 0.02, "{r}");
+        assert!((r.reg as f64 - 18_600.0).abs() / 18_600.0 < 0.05, "{r}");
+        // banking: 3 input mems × 4 copies × 1000 × 18 = 216K (+ write FIFOs)
+        assert!(r.bram_bits >= 216_000 && r.bram_bits <= 226_000, "{r}");
+        assert_eq!(r.dsp, 4, "{r}");
+    }
+
+    #[test]
+    fn seq_reuses_functional_units() {
+        // Fig 5 (C4): 3 adds share one adder; mul still needs its DSP.
+        let r = est(&examples::fig5_seq());
+        // one 18-bit adder + FSM + ports + ctrl ≪ the pipelined datapath ×3
+        assert!(r.alut < 82, "{r}");
+        assert_eq!(r.dsp, 1);
+        // instruction store present
+        assert!(r.bram_bits > 7_200, "{r}");
+    }
+
+    #[test]
+    fn vectorised_seq_scales_linearly_in_pe_cost() {
+        let r1 = est(&examples::fig11_vector_seq(1));
+        let r4 = est(&examples::fig11_vector_seq(4));
+        // 4 PEs: datapath ×4 (plus shared overheads and banking)
+        assert!(r4.dsp == 4 * r1.dsp);
+        assert!(r4.alut > r1.alut);
+    }
+
+    #[test]
+    fn sor_kernel_is_dsp_free() {
+        // Table 2: DSPs = 0 — constant multiplies lower to shift-adds.
+        let r = est(&examples::fig15_sor_default());
+        assert_eq!(r.dsp, 0, "{r}");
+        assert!(r.alut > 100 && r.alut < 1000, "{r}");
+        // line buffer (36×18) + two FIFOs dominate BRAM
+        assert!(r.bram_bits > 3_000 && r.bram_bits < 10_000, "{r}");
+    }
+
+    #[test]
+    fn multiplicity_counts_replicated_lanes() {
+        let m = parse_and_validate(&examples::fig9_multi_pipe(4)).unwrap();
+        let mult = multiplicity(&m).unwrap();
+        assert_eq!(mult["f2"], 4);
+        assert_eq!(mult["f1"], 4);
+        assert_eq!(mult["main"], 1);
+    }
+
+    #[test]
+    fn const_operand_detection() {
+        let m = parse_and_validate(&examples::fig15_sor_default()).unwrap();
+        let f2 = &m.funcs["f2"];
+        let muls: Vec<_> = m.instrs_of(f2).filter(|i| i.op == Op::Mul).collect();
+        assert_eq!(muls.len(), 2);
+        assert_eq!(const_operand(&m, Op::Mul, &muls[0].operands), Some(3840));
+        assert_eq!(const_operand(&m, Op::Mul, &muls[1].operands), Some(1024));
+        // add never reports a constant (cost doesn't depend on it)
+        let adds: Vec<_> = m.instrs_of(f2).filter(|i| i.op == Op::Add).collect();
+        assert_eq!(const_operand(&m, Op::Add, &adds[0].operands), None);
+    }
+
+    #[test]
+    fn unreachable_functions_cost_nothing() {
+        let src = "define void @dead (ui18 %x) comb { %1 = add ui18 %x, %x }\n\
+                   define void @main (ui18 %x) pipe { %1 = add ui18 %x, %x }";
+        let with_dead = est(src);
+        let without = est("define void @main (ui18 %x) pipe { %1 = add ui18 %x, %x }");
+        assert_eq!(with_dead, without);
+    }
+
+    #[test]
+    fn offset_span() {
+        let m = parse_and_validate(&examples::fig15_sor_default()).unwrap();
+        assert_eq!(stream_offset_span(&m, "strobj_p"), 36);
+        assert_eq!(stream_offset_span(&m, "strobj_q"), 0);
+    }
+}

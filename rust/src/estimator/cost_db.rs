@@ -1,0 +1,287 @@
+//! Per-instruction resource costs (paper §7.2).
+//!
+//! The paper assigns each instruction a cost by one of two methods:
+//!
+//! 1. *"a simple analytical expression developed specifically for the
+//!    device based on experiments … simple first or second order
+//!    expressions"* — implemented by [`CostDb::analytic`];
+//! 2. *"lookup, and possibly interpolate, from a cost database for the
+//!    specific token and data type"* — implemented by the seeded table
+//!    in [`CostDb::lookup`] with linear interpolation between the
+//!    characterised widths.
+//!
+//! The table is seeded with the characterised points a device vendor
+//! sweep would produce (8/16/18/32/64-bit entries); anything else
+//! interpolates or falls back to the analytic model. Costs are
+//! calibrated so the simple kernel's C2 configuration lands on the
+//! paper's Table 1 column (82 ALUTs / 172 REGs / 1 DSP).
+//!
+//! Constant-operand multiplies lower to shift-add networks when the
+//! constant has few set bits (how the SOR kernel achieves DSP = 0 in
+//! Table 2): cost `(popcount-1) × width` ALUTs, no DSP.
+
+use std::collections::BTreeMap;
+
+use super::resources::Resources;
+use crate::tir::{Op, Ty};
+
+/// Maximum set bits in a multiplier constant before the shift-add
+/// lowering stops paying off and a DSP is used instead.
+pub const SHIFT_ADD_MAX_POP: u32 = 4;
+
+/// Cost database: characterised (op, width) points + analytic fallback.
+#[derive(Debug, Clone)]
+pub struct CostDb {
+    /// (op, width) → resources, characterised by experiment.
+    table: BTreeMap<(Op, u32), Resources>,
+}
+
+impl Default for CostDb {
+    fn default() -> Self {
+        Self::stratix_seeded()
+    }
+}
+
+impl CostDb {
+    /// An empty database (analytic expressions only).
+    pub fn empty() -> CostDb {
+        CostDb { table: BTreeMap::new() }
+    }
+
+    /// Database seeded with the characterised widths for a Stratix-class
+    /// fabric. The entries agree with the analytic model at the seeded
+    /// points by construction (the analytic expressions were fitted to
+    /// these experiments, as in the paper).
+    pub fn stratix_seeded() -> CostDb {
+        let mut db = CostDb::empty();
+        for w in [8u32, 16, 18, 32, 64] {
+            for op in [Op::Add, Op::Sub, Op::Mul, Op::Div, Op::Shl, Op::Lshr, Op::Ashr, Op::And, Op::Or, Op::Xor, Op::Min, Op::Max, Op::Mac] {
+                let r = analytic_cost(op, w, None);
+                db.table.insert((op, w), r);
+            }
+        }
+        db
+    }
+
+    /// Look up a characterised point; linearly interpolate between the
+    /// two nearest characterised widths when the exact width is absent.
+    /// Returns `None` when the op has no characterised points at all.
+    pub fn lookup(&self, op: Op, width: u32) -> Option<Resources> {
+        if let Some(r) = self.table.get(&(op, width)) {
+            return Some(*r);
+        }
+        // Nearest characterised widths below and above.
+        let mut below: Option<(u32, Resources)> = None;
+        let mut above: Option<(u32, Resources)> = None;
+        for (&(o, w), &r) in &self.table {
+            if o != op {
+                continue;
+            }
+            if w < width && below.map(|(bw, _)| w > bw).unwrap_or(true) {
+                below = Some((w, r));
+            }
+            if w > width && above.map(|(aw, _)| w < aw).unwrap_or(true) {
+                above = Some((w, r));
+            }
+        }
+        match (below, above) {
+            (Some((w0, r0)), Some((w1, r1))) => {
+                let t = (width - w0) as f64 / (w1 - w0) as f64;
+                let lerp = |a: u64, b: u64| -> u64 { (a as f64 + (b as f64 - a as f64) * t).round() as u64 };
+                Some(Resources {
+                    alut: lerp(r0.alut, r1.alut),
+                    reg: lerp(r0.reg, r1.reg),
+                    bram_bits: lerp(r0.bram_bits, r1.bram_bits),
+                    dsp: lerp(r0.dsp, r1.dsp),
+                })
+            }
+            (Some((_, r)), None) | (None, Some((_, r))) => Some(r), // clamp at the edge
+            (None, None) => None,
+        }
+    }
+
+    /// Analytic cost expression (method 1 of §7.2).
+    pub fn analytic(&self, op: Op, ty: Ty, const_operand: Option<i64>) -> Resources {
+        analytic_cost(op, ty.bits(), const_operand)
+    }
+
+    /// Cost of one instruction: constant-operand special cases go through
+    /// the analytic model (shift-add lowering depends on the constant
+    /// value, which a width-keyed table cannot capture); otherwise lookup
+    /// with interpolation, falling back to the analytic expression.
+    pub fn instr_cost(&self, op: Op, ty: Ty, const_operand: Option<i64>) -> Resources {
+        if const_operand.is_some() {
+            return self.analytic(op, ty, const_operand);
+        }
+        self.lookup(op, ty.bits()).unwrap_or_else(|| analytic_cost(op, ty.bits(), None))
+    }
+}
+
+/// First/second-order analytic cost expressions per op class.
+///
+/// * `add`/`sub`: one ALUT per bit (carry chain).
+/// * `mul` (variable × variable): DSP slices — 1 for ≤18 bit, 4 for
+///   wider (Stratix 18×18 slice composition).
+/// * `mul` (by constant): shift-add network when the constant has at
+///   most [`SHIFT_ADD_MAX_POP`] set bits: `(popcount−1)·width` ALUTs;
+///   powers of two are free (wiring).
+/// * `div`: restoring divider, second order: `width²/2` ALUTs.
+/// * shifts by constant: free (wiring); by variable: barrel shifter,
+///   `width·log2(width)` ALUTs.
+/// * bitwise: half an ALUT per bit (6-LUTs pack two 2-in-1-out bits).
+/// * `min`/`max`: compare + select ≈ 1.5 ALUT per bit.
+/// * `mac`: one DSP (the slice's native mode) for ≤18 bit.
+fn analytic_cost(op: Op, width: u32, const_operand: Option<i64>) -> Resources {
+    let w = width as u64;
+    match op {
+        Op::Add | Op::Sub => Resources::new(w, 0, 0, 0),
+        Op::Mul => match const_operand {
+            Some(c) => {
+                let pop = (c.unsigned_abs()).count_ones();
+                if pop <= 1 {
+                    Resources::ZERO // power of two or zero: wiring only
+                } else if pop <= SHIFT_ADD_MAX_POP {
+                    Resources::new((pop as u64 - 1) * w, 0, 0, 0)
+                } else {
+                    Resources::new(0, 0, 0, dsp_for_width(width))
+                }
+            }
+            None => Resources::new(0, 0, 0, dsp_for_width(width)),
+        },
+        Op::Div => Resources::new(w * w / 2, 0, 0, 0),
+        Op::Shl | Op::Lshr | Op::Ashr => match const_operand {
+            Some(_) => Resources::ZERO,
+            None => Resources::new(w * log2_ceil(w), 0, 0, 0),
+        },
+        Op::And | Op::Or | Op::Xor => Resources::new(w.div_ceil(2), 0, 0, 0),
+        Op::Min | Op::Max => Resources::new(w + w / 2, 0, 0, 0),
+        Op::Mac => match const_operand {
+            // constant multiplicand: shift-add plus the accumulate adder
+            Some(c) => {
+                let mul = analytic_cost(Op::Mul, width, Some(c));
+                mul + Resources::new(w, 0, 0, 0)
+            }
+            None => Resources::new(0, 0, 0, dsp_for_width(width)),
+        },
+    }
+}
+
+/// DSP slices needed for a variable multiply at a given width.
+fn dsp_for_width(width: u32) -> u64 {
+    if width <= 18 {
+        1
+    } else if width <= 36 {
+        4
+    } else {
+        8
+    }
+}
+
+fn log2_ceil(v: u64) -> u64 {
+    (64 - v.next_power_of_two().leading_zeros() - 1) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn u(w: u8) -> Ty {
+        Ty::UInt(w)
+    }
+
+    #[test]
+    fn add_is_one_alut_per_bit() {
+        let db = CostDb::default();
+        assert_eq!(db.instr_cost(Op::Add, u(18), None).alut, 18);
+        assert_eq!(db.instr_cost(Op::Sub, u(32), None).alut, 32);
+    }
+
+    #[test]
+    fn variable_mul_uses_dsp() {
+        let db = CostDb::default();
+        let r = db.instr_cost(Op::Mul, u(18), None);
+        assert_eq!(r.dsp, 1);
+        assert_eq!(r.alut, 0);
+        assert_eq!(db.instr_cost(Op::Mul, u(32), None).dsp, 4);
+        assert_eq!(db.instr_cost(Op::Mul, u(64), None).dsp, 8);
+    }
+
+    #[test]
+    fn const_mul_shift_add_lowering() {
+        let db = CostDb::default();
+        // W4 = 3840 = 0xF00, popcount 4 → 3 adders × 18 bits, no DSP.
+        let r = db.instr_cost(Op::Mul, u(18), Some(3840));
+        assert_eq!(r.dsp, 0);
+        assert_eq!(r.alut, 3 * 18);
+        // WB = 1024, power of two → free.
+        let r = db.instr_cost(Op::Mul, u(18), Some(1024));
+        assert_eq!(r, Resources::ZERO);
+        // Dense constant → DSP after all.
+        let r = db.instr_cost(Op::Mul, u(18), Some(0x2AAAA));
+        assert_eq!(r.dsp, 1);
+    }
+
+    #[test]
+    fn shifts() {
+        let db = CostDb::default();
+        assert_eq!(db.instr_cost(Op::Lshr, u(18), Some(14)), Resources::ZERO);
+        assert!(db.instr_cost(Op::Shl, u(18), None).alut > 0);
+    }
+
+    #[test]
+    fn interpolation_between_characterised_widths() {
+        let db = CostDb::default();
+        // 24-bit add: between the 18 and 32 entries → 18 + (32-18)*(6/14)=24.
+        let r = db.lookup(Op::Add, 24).unwrap();
+        assert_eq!(r.alut, 24);
+        // Exactly at a seeded width → exact.
+        assert_eq!(db.lookup(Op::Add, 18).unwrap().alut, 18);
+    }
+
+    #[test]
+    fn interpolation_clamps_at_edges() {
+        let db = CostDb::default();
+        let r = db.lookup(Op::Add, 4).unwrap(); // below 8 → clamp to 8
+        assert_eq!(r.alut, 8);
+    }
+
+    #[test]
+    fn empty_db_falls_back_to_analytic() {
+        let db = CostDb::empty();
+        assert!(db.lookup(Op::Add, 18).is_none());
+        assert_eq!(db.instr_cost(Op::Add, u(18), None).alut, 18);
+    }
+
+    #[test]
+    fn div_is_second_order() {
+        // Analytic model is quadratic at every width; the seeded table
+        // (characterised points) linearises *between* points, so query
+        // the analytic path directly for the off-grid width.
+        let db = CostDb::empty();
+        let r18 = db.instr_cost(Op::Div, u(18), None).alut;
+        let r36 = db.instr_cost(Op::Div, u(36), None).alut;
+        assert_eq!(r18, 18 * 18 / 2);
+        assert_eq!(r36, 36 * 36 / 2);
+        // Seeded table agrees exactly at its characterised points.
+        let seeded = CostDb::default();
+        assert_eq!(seeded.instr_cost(Op::Div, u(32), None).alut, 32 * 32 / 2);
+    }
+
+    #[test]
+    fn simple_kernel_datapath_matches_table1_calibration() {
+        // 3 × add(ui18) + 1 × mul(ui18): 54 ALUTs + 1 DSP — the datapath
+        // share of the paper's 82-ALUT C2 column (the rest is port +
+        // control logic, added by the resource accumulator).
+        let db = CostDb::default();
+        let total: Resources = [
+            db.instr_cost(Op::Add, u(18), None),
+            db.instr_cost(Op::Add, u(18), None),
+            db.instr_cost(Op::Mul, u(18), None),
+            db.instr_cost(Op::Add, u(18), None),
+        ]
+        .into_iter()
+        .sum();
+        assert_eq!(total.alut, 54);
+        assert_eq!(total.dsp, 1);
+    }
+}

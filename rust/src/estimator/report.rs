@@ -1,0 +1,89 @@
+//! Paper-style report formatting for estimates (the Table 1/2 layout:
+//! one parameter per row, one configuration per column).
+
+use super::Estimate;
+use crate::util::table::{human_count, Table};
+
+/// Render one estimate as a labelled block.
+pub fn render(label: &str, e: &Estimate) -> String {
+    let mut t = Table::new(vec!["Parameter", label]);
+    t.row(vec!["Class".to_string(), e.class.to_string()]);
+    t.row(vec!["ALUTs".to_string(), human_count(e.resources.alut as f64)]);
+    t.row(vec!["REGs".to_string(), human_count(e.resources.reg as f64)]);
+    t.row(vec!["BRAM(bits)".to_string(), human_count(e.resources.bram_bits as f64)]);
+    t.row(vec!["DSPs".to_string(), e.resources.dsp.to_string()]);
+    t.row(vec!["Cycles/Kernel".to_string(), e.cycles_per_pass.to_string()]);
+    t.row(vec!["Fmax(MHz)".to_string(), format!("{:.0}", e.fmax_mhz)]);
+    t.row(vec!["EWGT".to_string(), human_count(e.ewgt)]);
+    t.render()
+}
+
+/// Render several configurations side by side, paper-table style
+/// (`C2(E) | C2(A) | C1(E) | C1(A)` columns in the paper; callers pass
+/// any set of labelled value columns).
+pub fn side_by_side(rows: &[(&str, Vec<String>)], labels: &[&str]) -> String {
+    let mut header = vec!["Parameter".to_string()];
+    header.extend(labels.iter().map(|s| s.to_string()));
+    let mut t = Table::new(header);
+    for (name, cells) in rows {
+        let mut row = vec![name.to_string()];
+        row.extend(cells.iter().cloned());
+        t.row(row);
+    }
+    t.render()
+}
+
+/// The standard row set for a (estimated, actual) pair of result columns,
+/// as used by the Table 1/2 reproductions.
+pub fn paper_rows(
+    est: &Estimate,
+    actual_resources: &super::Resources,
+    actual_cycles: u64,
+    actual_ewgt: f64,
+) -> Vec<(&'static str, Vec<String>)> {
+    vec![
+        (
+            "ALUTs",
+            vec![human_count(est.resources.alut as f64), human_count(actual_resources.alut as f64)],
+        ),
+        (
+            "REGs",
+            vec![human_count(est.resources.reg as f64), human_count(actual_resources.reg as f64)],
+        ),
+        (
+            "BRAM(bits)",
+            vec![
+                human_count(est.resources.bram_bits as f64),
+                human_count(actual_resources.bram_bits as f64),
+            ],
+        ),
+        ("DSPs", vec![est.resources.dsp.to_string(), actual_resources.dsp.to_string()]),
+        ("Cycles/Kernel", vec![est.cycles_per_pass.to_string(), actual_cycles.to_string()]),
+        ("EWGT", vec![human_count(est.ewgt), human_count(actual_ewgt)]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::tir::{examples, parse_and_validate};
+
+    #[test]
+    fn render_contains_paper_rows() {
+        let m = parse_and_validate(&examples::fig7_pipe()).unwrap();
+        let e = crate::estimator::estimate(&m, &Device::stratix4()).unwrap();
+        let s = render("C2(E)", &e);
+        for needle in ["ALUTs", "REGs", "BRAM(bits)", "DSPs", "Cycles/Kernel", "EWGT", "82", "172", "1003"] {
+            assert!(s.contains(needle), "missing {needle} in:\n{s}");
+        }
+    }
+
+    #[test]
+    fn side_by_side_layout() {
+        let rows = vec![("ALUTs", vec!["82".to_string(), "83".to_string()])];
+        let s = side_by_side(&rows, &["C2(E)", "C2(A)"]);
+        assert!(s.lines().next().unwrap().contains("C2(E)"));
+        assert!(s.contains("83"));
+    }
+}

@@ -1,0 +1,138 @@
+//! Resource vectors: the four quantities the paper's estimator reports
+//! (ALUTs, REGs, BRAM bits, DSPs — Tables 1 and 2).
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Mul};
+
+use crate::device::Device;
+
+/// A resource-utilisation vector on the Altera-style fabric.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Resources {
+    /// Adaptive look-up tables.
+    pub alut: u64,
+    /// Dedicated registers.
+    pub reg: u64,
+    /// Block RAM, in bits.
+    pub bram_bits: u64,
+    /// 18×18 DSP slices.
+    pub dsp: u64,
+}
+
+impl Resources {
+    /// The zero vector.
+    pub const ZERO: Resources = Resources { alut: 0, reg: 0, bram_bits: 0, dsp: 0 };
+
+    /// Construct from the four counts.
+    pub fn new(alut: u64, reg: u64, bram_bits: u64, dsp: u64) -> Resources {
+        Resources { alut, reg, bram_bits, dsp }
+    }
+
+    /// Does this utilisation fit within a device's capacity?
+    pub fn fits(&self, d: &Device) -> bool {
+        self.alut <= d.aluts && self.reg <= d.regs && self.bram_bits <= d.bram_bits && self.dsp <= d.dsps
+    }
+
+    /// Fraction of the binding device resource consumed (0.0..), the
+    /// "distance to the computation wall" in the estimation space.
+    pub fn utilisation(&self, d: &Device) -> f64 {
+        let fracs = [
+            self.alut as f64 / d.aluts as f64,
+            self.reg as f64 / d.regs as f64,
+            self.bram_bits as f64 / d.bram_bits as f64,
+            self.dsp as f64 / d.dsps as f64,
+        ];
+        fracs.into_iter().fold(0.0, f64::max)
+    }
+
+    /// Name of the binding (most-utilised) resource.
+    pub fn binding_resource(&self, d: &Device) -> &'static str {
+        let fracs = [
+            (self.alut as f64 / d.aluts as f64, "ALUT"),
+            (self.reg as f64 / d.regs as f64, "REG"),
+            (self.bram_bits as f64 / d.bram_bits as f64, "BRAM"),
+            (self.dsp as f64 / d.dsps as f64, "DSP"),
+        ];
+        fracs
+            .into_iter()
+            .max_by(|a, b| a.0.partial_cmp(&b.0).expect("no NaN"))
+            .map(|(_, n)| n)
+            .expect("non-empty")
+    }
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources {
+            alut: self.alut + o.alut,
+            reg: self.reg + o.reg,
+            bram_bits: self.bram_bits + o.bram_bits,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, o: Resources) {
+        *self = *self + o;
+    }
+}
+
+impl Mul<u64> for Resources {
+    type Output = Resources;
+    fn mul(self, k: u64) -> Resources {
+        Resources { alut: self.alut * k, reg: self.reg * k, bram_bits: self.bram_bits * k, dsp: self.dsp * k }
+    }
+}
+
+impl Sum for Resources {
+    fn sum<I: Iterator<Item = Resources>>(iter: I) -> Resources {
+        iter.fold(Resources::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for Resources {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "ALUT={} REG={} BRAM={}b DSP={}",
+            self.alut, self.reg, self.bram_bits, self.dsp
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Resources::new(10, 20, 30, 1);
+        let b = Resources::new(1, 2, 3, 0);
+        assert_eq!(a + b, Resources::new(11, 22, 33, 1));
+        assert_eq!(a * 4, Resources::new(40, 80, 120, 4));
+        let s: Resources = [a, b, b].into_iter().sum();
+        assert_eq!(s, Resources::new(12, 24, 36, 1));
+    }
+
+    #[test]
+    fn fits_and_utilisation() {
+        let d = Device::stratix4();
+        let small = Resources::new(100, 100, 1000, 1);
+        assert!(small.fits(&d));
+        assert!(small.utilisation(&d) < 0.01);
+        let big = Resources::new(d.aluts + 1, 0, 0, 0);
+        assert!(!big.fits(&d));
+        assert!(big.utilisation(&d) > 1.0);
+        assert_eq!(big.binding_resource(&d), "ALUT");
+    }
+
+    #[test]
+    fn binding_resource_dsp() {
+        let d = Device::stratix4();
+        let r = Resources::new(0, 0, 0, d.dsps);
+        assert_eq!(r.binding_resource(&d), "DSP");
+    }
+}

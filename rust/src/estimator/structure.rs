@@ -1,0 +1,344 @@
+//! Structural analysis of a TIR module: extract the paper's EWGT
+//! parameters (L, D_v, N_I, P, I, repeat) and the design-space class
+//! (C1..C5) *from the IR structure alone* — the paper's key claim (§7.1):
+//! "the TIR through its constrained syntax at a particular abstraction
+//! exposes the parameters that make up the expression, and a simple
+//! parser can extract them".
+
+use std::collections::BTreeMap;
+
+use crate::tir::{Dir, Func, Kind, Module, Stmt};
+
+/// Design-space configuration class (paper Fig 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConfigClass {
+    /// Generic point (mixed pipeline + sequential resources).
+    C0,
+    /// Multiple kernel pipelines (lanes > 1).
+    C1,
+    /// Single kernel pipeline.
+    C2,
+    /// Replicated single-cycle cores, no pipelining (P = 1).
+    C3,
+    /// Scalar sequential instruction processor.
+    C4,
+    /// Vectorised sequential processing (replicated seq PEs).
+    C5,
+    /// Multiple run-time configurations (N_R > 1); produced by the DSE
+    /// layer when a kernel is split across reconfigurations, never by
+    /// structural analysis of a single module.
+    C6,
+}
+
+impl std::fmt::Display for ConfigClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "C{}", *self as u8)
+    }
+}
+
+/// Structural facts about one module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StructInfo {
+    /// Configuration class.
+    pub class: ConfigClass,
+    /// Number of identical pipeline lanes (the paper's `L`); 1 when the
+    /// design is sequential.
+    pub lanes: u64,
+    /// Degree of vectorisation (`D_v`): replicated seq PEs.
+    pub dv: u64,
+    /// Pipeline depth in stages of one lane's datapath (`P`, datapath
+    /// part).
+    pub datapath_depth: u64,
+    /// Stencil window fill in elements (from stream-offset spans); the
+    /// full pipeline latency is `datapath_depth + window_span`.
+    pub window_span: u64,
+    /// Instructions delegated to one sequential PE (`N_I`); 0 for
+    /// pipelined designs (where N_I = 1 in the paper's formulas).
+    pub seq_ni: u64,
+    /// Work-items per kernel pass (`I`).
+    pub work_items: u64,
+    /// Chained passes per work-group (the `repeat` keyword).
+    pub repeat: u64,
+}
+
+impl StructInfo {
+    /// Total pipeline latency `P` (datapath + window fill).
+    pub fn pipeline_depth(&self) -> u64 {
+        self.datapath_depth + self.window_span
+    }
+}
+
+/// Count of each leaf-PE kind reachable from a function, with
+/// replication multiplicity.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+struct PeCounts {
+    pipes: u64,
+    seqs: u64,
+    combs: u64,
+    max_pipe_depth: u64,
+    max_seq_ni: u64,
+}
+
+/// Analyse the structure of a validated module.
+pub fn analyze(m: &Module) -> Result<StructInfo, String> {
+    let main = m.main().ok_or("module has no @main")?;
+    let counts = walk(m, main)?;
+    let repeat = m.launch.iter().map(|c| c.repeat).max().unwrap_or(1);
+    let window_span = max_window_span(m);
+
+    let (class, lanes, dv) = match (counts.pipes, counts.seqs, counts.combs) {
+        (0, 0, 0) => return Err("no compute leaves reachable from @main".into()),
+        (p, 0, _) if p > 1 => (ConfigClass::C1, p, 1),
+        (1, 0, _) => (ConfigClass::C2, 1, 1),
+        (0, 1, _) => (ConfigClass::C4, 1, 1),
+        (0, s, _) if s > 1 => (ConfigClass::C5, 1, s),
+        (0, 0, c) => (ConfigClass::C3, c, 1),
+        (p, s, _) => (ConfigClass::C0, p, s.max(1)),
+    };
+
+    Ok(StructInfo {
+        class,
+        lanes,
+        dv,
+        datapath_depth: counts.max_pipe_depth.max(if counts.pipes == 0 && counts.seqs == 0 { 1 } else { 0 }),
+        window_span,
+        seq_ni: counts.max_seq_ni,
+        work_items: m.work_items(),
+        repeat,
+    })
+}
+
+/// Recursive walk accumulating leaf-PE counts with multiplicity.
+fn walk(m: &Module, f: &Func) -> Result<PeCounts, String> {
+    let own_instrs = m.instrs_of(f).count() as u64;
+    match f.kind {
+        Kind::Comb => {
+            // A comb leaf; nested comb calls fold into this block.
+            let mut ni = own_instrs;
+            for c in m.calls_of(f) {
+                let callee = &m.funcs[&c.callee];
+                let sub = walk(m, callee)?;
+                ni += sub.max_seq_ni.max(sub.combs); // nested comb sizes
+            }
+            Ok(PeCounts { combs: 1, max_seq_ni: ni, ..Default::default() })
+        }
+        Kind::Seq => {
+            let mut ni = own_instrs;
+            for c in m.calls_of(f) {
+                let callee = &m.funcs[&c.callee];
+                let sub = walk(m, callee)?;
+                ni += sub.max_seq_ni;
+            }
+            Ok(PeCounts { seqs: 1, max_seq_ni: ni, ..Default::default() })
+        }
+        Kind::Pipe => {
+            let (depth, _) = pipe_schedule(m, f)?;
+            // A pipe is one lane regardless of what it inlines; nested
+            // pipe calls extend depth (handled in pipe_schedule), they do
+            // not add lanes.
+            Ok(PeCounts { pipes: 1, max_pipe_depth: depth, ..Default::default() })
+        }
+        Kind::Par => {
+            // Pure fan-out: children add up (replication); own instrs in
+            // a par root act as a 1-deep comb block.
+            let mut acc = PeCounts::default();
+            for c in m.calls_of(f) {
+                let callee = &m.funcs[&c.callee];
+                let sub = walk(m, callee)?;
+                acc.pipes += sub.pipes;
+                acc.seqs += sub.seqs;
+                acc.combs += sub.combs;
+                acc.max_pipe_depth = acc.max_pipe_depth.max(sub.max_pipe_depth);
+                acc.max_seq_ni = acc.max_seq_ni.max(sub.max_seq_ni);
+            }
+            if own_instrs > 0 && acc.pipes + acc.seqs + acc.combs == 0 {
+                acc.combs = 1;
+                acc.max_seq_ni = own_instrs;
+            }
+            Ok(acc)
+        }
+    }
+}
+
+/// ASAP stage assignment for a `pipe` function (paper §6.2: "our
+/// prototype parser can also automatically check for dependencies in a
+/// pipe function and schedule instructions using a simple
+/// as-soon-as-possible policy").
+///
+/// Returns the pipeline depth and the stage of every SSA value defined in
+/// the function (params and ports are stage 0).
+pub fn pipe_schedule<'a>(m: &'a Module, f: &'a Func) -> Result<(u64, BTreeMap<&'a str, u64>), String> {
+    debug_assert_eq!(f.kind, Kind::Pipe);
+    let mut stage: BTreeMap<&str, u64> = BTreeMap::new();
+    for (p, _) in &f.params {
+        stage.insert(p.as_str(), 0);
+    }
+    let mut depth = 0u64;
+    for s in &f.body {
+        match s {
+            Stmt::Instr(i) => {
+                let ready = i
+                    .operands
+                    .iter()
+                    .filter_map(|o| match o {
+                        crate::tir::Operand::Local(n) => stage.get(n.as_str()).copied(),
+                        _ => Some(0),
+                    })
+                    .max()
+                    .unwrap_or(0);
+                let s = ready + 1;
+                stage.insert(i.result.as_str(), s);
+                depth = depth.max(s);
+            }
+            Stmt::Call(c) => {
+                let callee = &m.funcs[&c.callee];
+                let ready = c
+                    .args
+                    .iter()
+                    .filter_map(|o| match o {
+                        crate::tir::Operand::Local(n) => stage.get(n.as_str()).copied(),
+                        _ => Some(0),
+                    })
+                    .max()
+                    .unwrap_or(0);
+                let occupied = match callee.kind {
+                    // par/comb children are single inlined stages
+                    Kind::Par | Kind::Comb => 1,
+                    // nested pipes contribute their full depth
+                    Kind::Pipe => pipe_schedule(m, callee)?.0,
+                    Kind::Seq => return Err(format!("pipe `@{}` may not call seq `@{}`", f.name, c.callee)),
+                };
+                let s_end = ready + occupied;
+                for stmt in &callee.body {
+                    if let Stmt::Instr(ci) = stmt {
+                        stage.insert(ci.result.as_str(), s_end);
+                    }
+                }
+                depth = depth.max(s_end);
+            }
+        }
+    }
+    Ok((depth, stage))
+}
+
+/// Maximum stream-offset window span over all source streams, in
+/// elements: the line-buffer fill a stencil pipeline pays before its
+/// first valid output (SOR: ±1 row offsets → span = 2·cols).
+pub fn max_window_span(m: &Module) -> u64 {
+    let mut span_by_stream: BTreeMap<&str, (i64, i64)> = BTreeMap::new();
+    for p in m.ports.values() {
+        if p.dir != Dir::Read {
+            continue;
+        }
+        let e = span_by_stream.entry(p.stream.as_str()).or_insert((0, 0));
+        e.0 = e.0.min(p.offset);
+        e.1 = e.1.max(p.offset);
+    }
+    span_by_stream.values().map(|(lo, hi)| (hi - lo) as u64).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::examples;
+    use crate::tir::parse_and_validate;
+
+    #[test]
+    fn fig5_is_c4() {
+        let m = parse_and_validate(&examples::fig5_seq()).unwrap();
+        let s = analyze(&m).unwrap();
+        assert_eq!(s.class, ConfigClass::C4);
+        assert_eq!(s.seq_ni, 4);
+        assert_eq!(s.lanes, 1);
+        assert_eq!(s.work_items, 1000);
+    }
+
+    #[test]
+    fn fig7_is_c2_depth3() {
+        let m = parse_and_validate(&examples::fig7_pipe()).unwrap();
+        let s = analyze(&m).unwrap();
+        assert_eq!(s.class, ConfigClass::C2);
+        // stage 1: par(add,add); stage 2: mul; stage 3: add k — P = 3,
+        // matching Table 1's 1003 = 1000 + 3.
+        assert_eq!(s.datapath_depth, 3);
+        assert_eq!(s.window_span, 0);
+        assert_eq!(s.pipeline_depth(), 3);
+    }
+
+    #[test]
+    fn fig9_is_c1_with_4_lanes() {
+        let m = parse_and_validate(&examples::fig9_multi_pipe(4)).unwrap();
+        let s = analyze(&m).unwrap();
+        assert_eq!(s.class, ConfigClass::C1);
+        assert_eq!(s.lanes, 4);
+        assert_eq!(s.datapath_depth, 3);
+    }
+
+    #[test]
+    fn fig11_is_c5_dv4() {
+        let m = parse_and_validate(&examples::fig11_vector_seq(4)).unwrap();
+        let s = analyze(&m).unwrap();
+        assert_eq!(s.class, ConfigClass::C5);
+        assert_eq!(s.dv, 4);
+        assert_eq!(s.seq_ni, 4);
+    }
+
+    #[test]
+    fn fig15_sor_depth_and_window() {
+        let m = parse_and_validate(&examples::fig15_sor_default()).unwrap();
+        let s = analyze(&m).unwrap();
+        assert_eq!(s.class, ConfigClass::C2);
+        // stage 1: comb f1; stage 2: two muls; stage 3: add; stage 4: shr.
+        assert_eq!(s.datapath_depth, 4);
+        // ±18-element offsets → 36-element window fill.
+        assert_eq!(s.window_span, 36);
+        assert_eq!(s.work_items, 256);
+        assert_eq!(s.repeat, examples::SOR_NITER);
+    }
+
+    #[test]
+    fn lane_count_scales() {
+        for lanes in [1usize, 2, 4, 8] {
+            let m = parse_and_validate(&examples::fig9_multi_pipe(lanes)).unwrap();
+            let s = analyze(&m).unwrap();
+            assert_eq!(s.lanes, lanes as u64);
+            assert_eq!(s.class, if lanes == 1 { ConfigClass::C2 } else { ConfigClass::C1 });
+        }
+    }
+
+    #[test]
+    fn chain_of_dependent_adds_deepens_pipeline() {
+        let src = "define void @main (ui18 %a) pipe {\n %1 = add ui18 %a, %a\n %2 = add ui18 %1, %1\n %3 = add ui18 %2, %2\n %4 = add ui18 %3, %3 }";
+        let m = parse_and_validate(src).unwrap();
+        let s = analyze(&m).unwrap();
+        assert_eq!(s.datapath_depth, 4);
+    }
+
+    #[test]
+    fn independent_adds_share_a_stage() {
+        let src = "define void @main (ui18 %a, ui18 %b) pipe {\n %1 = add ui18 %a, %a\n %2 = add ui18 %b, %b\n %3 = add ui18 %1, %2 }";
+        let m = parse_and_validate(src).unwrap();
+        let s = analyze(&m).unwrap();
+        assert_eq!(s.datapath_depth, 2);
+    }
+
+    #[test]
+    fn nested_pipe_extends_depth() {
+        let src = "define void @inner (ui18 %x) pipe {\n %1 = add ui18 %x, %x\n %2 = add ui18 %1, %1 }\n\
+                   define void @main (ui18 %x) pipe {\n call @inner (%x) pipe\n %3 = add ui18 %2, %2 }";
+        let m = parse_and_validate(src).unwrap();
+        let s = analyze(&m).unwrap();
+        assert_eq!(s.datapath_depth, 3);
+        assert_eq!(s.class, ConfigClass::C2); // one lane, nested pipes
+    }
+
+    #[test]
+    fn mixed_pipe_and_seq_is_c0() {
+        let src = "define void @p (ui18 %x) pipe { %1 = add ui18 %x, %x }\n\
+                   define void @s (ui18 %x) seq { %1 = add ui18 %x, %x }\n\
+                   define void @main (ui18 %x) par { call @p (%x) pipe\n call @s (%x) seq }";
+        let m = parse_and_validate(src).unwrap();
+        let s = analyze(&m).unwrap();
+        assert_eq!(s.class, ConfigClass::C0);
+    }
+}

@@ -1,0 +1,232 @@
+//! EWGT (Effective Work-Group Throughput) model — paper §7.1.
+//!
+//! The generic C0 expression:
+//!
+//! ```text
+//!            L · D_V
+//! EWGT = ─────────────────────────────────────
+//!         N_R · { T_R + N_I · N_to · T · (P + I) }
+//! ```
+//!
+//! with the C1..C6 specialisations obtained by pinning parameters, exactly
+//! as the paper derives them. [`ewgt_generic`] implements the formula
+//! literally (for the formula-vs-simulator property tests); [`cycles_per_pass`]
+//! is the cycle-domain view the estimator reports (`Cycles/Kernel` rows of
+//! Tables 1 and 2), which additionally divides the index space across
+//! lanes/vector PEs — the view the paper's own Table 1 numbers take
+//! (C1(E) = 250 cycles = I / L).
+
+use super::structure::{ConfigClass, StructInfo};
+
+/// The paper's EWGT parameters, named as in §7.1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EwgtParams {
+    /// L — number of identical lanes.
+    pub l: u64,
+    /// D_V — degree of vectorisation.
+    pub dv: u64,
+    /// N_R — number of FPGA configurations needed.
+    pub nr: u64,
+    /// T_R — reconfiguration time, seconds.
+    pub tr: f64,
+    /// N_I — instructions delegated to the average instruction processor.
+    pub ni: u64,
+    /// N_to — ticks per delegated instruction (CPI).
+    pub nto: u64,
+    /// T — clock period, seconds.
+    pub t: f64,
+    /// P — pipeline depth (including stencil-window fill).
+    pub p: u64,
+    /// I — work-items in the kernel loop.
+    pub i: u64,
+}
+
+impl EwgtParams {
+    /// Build the parameter set from structural analysis + clock period.
+    /// `N_R = 1`, `T_R = 0` for everything a single module expresses
+    /// (C6 comes from the DSE layer).
+    pub fn from_struct(s: &StructInfo, period: f64) -> EwgtParams {
+        EwgtParams {
+            l: s.lanes,
+            dv: s.dv,
+            nr: 1,
+            tr: 0.0,
+            ni: if s.seq_ni == 0 { 1 } else { s.seq_ni },
+            nto: if matches!(s.class, ConfigClass::C4 | ConfigClass::C5 | ConfigClass::C0) { 2 } else { 1 },
+            t: period,
+            p: s.pipeline_depth(),
+            i: s.work_items,
+        }
+    }
+}
+
+/// The paper's generic (C0) EWGT expression, literally.
+pub fn ewgt_generic(p: &EwgtParams) -> f64 {
+    let denom = p.nr as f64 * (p.tr + p.ni as f64 * p.nto as f64 * p.t * (p.p + p.i) as f64);
+    (p.l as f64 * p.dv as f64) / denom
+}
+
+/// Specialised EWGT per class (paper §7.1). Each pins the generic
+/// parameters exactly as the paper does.
+pub fn ewgt_for_class(class: ConfigClass, p: &EwgtParams) -> f64 {
+    let mut q = *p;
+    match class {
+        // C1: N_R = 1, T_R = 0, N_I = 1, D_V = 1
+        ConfigClass::C1 => {
+            q.nr = 1;
+            q.tr = 0.0;
+            q.ni = 1;
+            q.nto = 1;
+            q.dv = 1;
+        }
+        // C2: additionally L = 1
+        ConfigClass::C2 => {
+            q.nr = 1;
+            q.tr = 0.0;
+            q.ni = 1;
+            q.nto = 1;
+            q.dv = 1;
+            q.l = 1;
+        }
+        // C3: no pipeline parallelism → P = 1
+        ConfigClass::C3 => {
+            q.nr = 1;
+            q.tr = 0.0;
+            q.ni = 1;
+            q.nto = 1;
+            q.dv = 1;
+            q.p = 1;
+        }
+        // C4: scalar instruction processors → D_V = 1
+        ConfigClass::C4 => {
+            q.nr = 1;
+            q.tr = 0.0;
+            q.dv = 1;
+        }
+        // C5: vector instruction processors
+        ConfigClass::C5 => {
+            q.nr = 1;
+            q.tr = 0.0;
+        }
+        // C0/C6: the generic expression as-is
+        ConfigClass::C0 | ConfigClass::C6 => {}
+    }
+    ewgt_generic(&q)
+}
+
+/// Cycle count for one kernel pass, dividing the index space across
+/// lanes / vector PEs (the form the paper's Table 1/2 `Cycles/Kernel`
+/// rows take: C1(E) = I/L = 250 for the simple kernel).
+pub fn cycles_per_pass(s: &StructInfo, nto: u64) -> u64 {
+    let p = s.pipeline_depth();
+    let i = s.work_items;
+    match s.class {
+        ConfigClass::C1 | ConfigClass::C2 => p + i.div_ceil(s.lanes),
+        ConfigClass::C3 => 1 + i.div_ceil(s.lanes),
+        ConfigClass::C4 => s.seq_ni * nto * (1 + i),
+        ConfigClass::C5 => (s.seq_ni * nto * (1 + i)).div_ceil(s.dv),
+        // Mixed: pipelined part dominates; be conservative (max of both).
+        ConfigClass::C0 | ConfigClass::C6 => {
+            let pipe = p + i.div_ceil(s.lanes.max(1));
+            let seq = if s.seq_ni > 0 { (s.seq_ni * nto * (1 + i)).div_ceil(s.dv.max(1)) } else { 0 };
+            pipe.max(seq)
+        }
+    }
+}
+
+/// EWGT from a cycle count: `f / (N_R·(T_R·f + repeat · cycles))`, i.e.
+/// work-groups per second including chained `repeat` passes and any
+/// reconfiguration overhead.
+pub fn ewgt_from_cycles(cycles_per_pass: u64, repeat: u64, fmax_hz: f64, nr: u64, tr_seconds: f64) -> f64 {
+    let cycles_wg = (cycles_per_pass * repeat) as f64;
+    let time_wg = nr as f64 * (tr_seconds + cycles_wg / fmax_hz);
+    1.0 / time_wg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 250 MHz clock period (the nominal Stratix-IV figure).
+    const T: f64 = 4e-9;
+
+    fn base() -> EwgtParams {
+        EwgtParams { l: 1, dv: 1, nr: 1, tr: 0.0, ni: 1, nto: 1, t: T, p: 3, i: 1000 }
+    }
+
+    #[test]
+    fn c2_matches_table1_estimate() {
+        // Paper Table 1: C2 EWGT(E) = 249K at 1003 cycles.
+        let e = ewgt_for_class(ConfigClass::C2, &base());
+        assert!((e - 249_251.2).abs() / 249_251.2 < 1e-3, "{e}");
+    }
+
+    #[test]
+    fn c1_is_l_times_c2_in_formula_domain() {
+        let mut p = base();
+        p.l = 4;
+        let c1 = ewgt_for_class(ConfigClass::C1, &p);
+        let c2 = ewgt_for_class(ConfigClass::C2, &p);
+        assert!((c1 / c2 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn c4_penalised_by_ni_nto() {
+        let mut p = base();
+        p.ni = 4;
+        p.nto = 2;
+        let c4 = ewgt_for_class(ConfigClass::C4, &p);
+        let c2 = ewgt_for_class(ConfigClass::C2, &p);
+        assert!((c2 / c4 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn c5_recovers_dv() {
+        let mut p = base();
+        p.ni = 4;
+        p.nto = 2;
+        p.dv = 4;
+        let c5 = ewgt_for_class(ConfigClass::C5, &p);
+        let c4 = ewgt_for_class(ConfigClass::C4, &p);
+        assert!((c5 / c4 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn c3_pins_p_to_1() {
+        let mut p = base();
+        p.p = 50;
+        let c3 = ewgt_for_class(ConfigClass::C3, &p);
+        let want = 1.0 / (T * 1001.0);
+        assert!((c3 - want).abs() / want < 1e-12);
+    }
+
+    #[test]
+    fn generic_reduces_to_c2_when_pinned() {
+        let p = base();
+        assert_eq!(ewgt_generic(&p), ewgt_for_class(ConfigClass::C2, &p));
+    }
+
+    #[test]
+    fn reconfiguration_dominates_when_tr_large() {
+        let mut p = base();
+        p.nr = 2;
+        p.tr = 0.1;
+        let e = ewgt_generic(&p);
+        assert!(e < 5.0, "{e}"); // ~1/(2×0.1s)
+    }
+
+    #[test]
+    fn ewgt_from_cycles_matches_formula_for_c2() {
+        let e = ewgt_from_cycles(1003, 1, 250e6, 1, 0.0);
+        assert!((e - 249_251.2).abs() / 249_251.2 < 1e-3);
+    }
+
+    #[test]
+    fn repeat_divides_throughput() {
+        let once = ewgt_from_cycles(296, 1, 250e6, 1, 0.0);
+        let fifteen = ewgt_from_cycles(296, 15, 250e6, 1, 0.0);
+        assert!((once / fifteen - 15.0).abs() < 1e-9);
+        // Table 2 consistency: C2 SOR ≈ 56.3K at 296 cycles × 15 passes.
+        assert!((fifteen - 56_306.3).abs() / 56_306.3 < 1e-3, "{fifteen}");
+    }
+}

@@ -1,0 +1,623 @@
+//! The loop-nest mini-language the front-end accepts — the minimal
+//! runnable stand-in for the paper's (future-work) front-end compiler
+//! (Fig 1: "legacy code" → type transformations → TIR variants).
+//!
+//! Grammar (kernels are perfect 1-D/2-D loop nests over streamed arrays,
+//! the class both case studies belong to):
+//!
+//! ```text
+//! kernel simple {
+//!     const K : ui18 = 42
+//!     in  a, b, c : ui18[1000]
+//!     out y       : ui18[1000]
+//!     for n in 0..1000 {
+//!         y[n] = K + ((a[n] + b[n]) * (c[n] + c[n]))
+//!     }
+//! }
+//!
+//! kernel sor {
+//!     in  p : ui18[18][18]
+//!     out q : ui18[18][18]
+//!     iter 15
+//!     for i in 1..17, j in 1..17 {
+//!         q[i][j] = (3840*(p[i-1][j] + p[i+1][j] + p[i][j-1] + p[i][j+1])
+//!                   + 1024*p[i][j]) >> 14
+//!     }
+//! }
+//! ```
+//!
+//! Ranges are half-open (`0..1000` sweeps 0‥999). Operators: `+ - * /
+//! << >> & | ^` with C precedence; array references may offset the loop
+//! indices by integer constants (`p[i-1][j]` — these become the TIR
+//! offset streams).
+
+use std::fmt;
+
+use crate::tir::Ty;
+
+/// A parsed kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDef {
+    pub name: String,
+    /// Named integer constants.
+    pub consts: Vec<(String, Ty, i64)>,
+    /// Input arrays: name, element type, dims (outer first).
+    pub inputs: Vec<ArrayDecl>,
+    /// Output arrays.
+    pub outputs: Vec<ArrayDecl>,
+    /// Chained kernel iterations (`iter N`, default 1).
+    pub iter: u64,
+    /// Loop variables with half-open ranges, outer first.
+    pub loops: Vec<(String, i64, i64)>,
+    /// Single assignment statement: target array ref = expression.
+    pub target: ArrayRef,
+    pub expr: Expr,
+}
+
+/// An array declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayDecl {
+    pub name: String,
+    pub ty: Ty,
+    /// Dimensions, outer first.
+    pub dims: Vec<u64>,
+}
+
+impl ArrayDecl {
+    /// Total elements.
+    pub fn elems(&self) -> u64 {
+        self.dims.iter().product()
+    }
+}
+
+/// An array reference with per-dimension index expressions of the form
+/// `loopvar + constant`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayRef {
+    pub array: String,
+    /// One (loop-var, constant offset) per dimension.
+    pub indices: Vec<(String, i64)>,
+}
+
+/// Expression AST.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Integer literal.
+    Int(i64),
+    /// Named constant.
+    Const(String),
+    /// Array element read.
+    Ref(ArrayRef),
+    /// Binary operation.
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+}
+
+/// Binary operators of the mini-language.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Shl,
+    Shr,
+    And,
+    Or,
+    Xor,
+}
+
+impl fmt::Display for BinOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Shl => "<<",
+            BinOp::Shr => ">>",
+            BinOp::And => "&",
+            BinOp::Or => "|",
+            BinOp::Xor => "^",
+        };
+        write!(f, "{s}")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Int(i64),
+    Sym(&'static str),
+    Eof,
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>, String> {
+    let mut out = Vec::new();
+    let b = src.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i] as char;
+        match c {
+            ' ' | '\t' | '\r' | '\n' => i += 1,
+            '#' => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            '0'..='9' => {
+                let mut j = i;
+                while j < b.len() && b[j].is_ascii_digit() {
+                    j += 1;
+                }
+                let v: i64 = src[i..j].parse().map_err(|e| format!("bad int: {e}"))?;
+                out.push(Tok::Int(v));
+                i = j;
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let mut j = i;
+                while j < b.len() && ((b[j] as char).is_ascii_alphanumeric() || b[j] == b'_' || b[j] == b'.') {
+                    j += 1;
+                }
+                out.push(Tok::Ident(src[i..j].to_string()));
+                i = j;
+            }
+            _ => {
+                // multi-char symbols first
+                let two = if i + 1 < b.len() { &src[i..i + 2] } else { "" };
+                let sym = match two {
+                    ".." => Some(".."),
+                    "<<" => Some("<<"),
+                    ">>" => Some(">>"),
+                    _ => None,
+                };
+                if let Some(s) = sym {
+                    out.push(Tok::Sym(s));
+                    i += 2;
+                    continue;
+                }
+                let one = match c {
+                    '{' => "{",
+                    '}' => "}",
+                    '[' => "[",
+                    ']' => "]",
+                    '(' => "(",
+                    ')' => ")",
+                    ':' => ":",
+                    ',' => ",",
+                    '=' => "=",
+                    '+' => "+",
+                    '-' => "-",
+                    '*' => "*",
+                    '/' => "/",
+                    '&' => "&",
+                    '|' => "|",
+                    '^' => "^",
+                    other => return Err(format!("unexpected character `{other}`")),
+                };
+                out.push(Tok::Sym(one));
+                i += 1;
+            }
+        }
+    }
+    out.push(Tok::Eof);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+struct P {
+    t: Vec<Tok>,
+    i: usize,
+}
+
+impl P {
+    fn peek(&self) -> &Tok {
+        &self.t[self.i]
+    }
+    fn bump(&mut self) -> Tok {
+        let t = self.t[self.i].clone();
+        if self.i + 1 < self.t.len() {
+            self.i += 1;
+        }
+        t
+    }
+    fn sym(&mut self, s: &str) -> Result<(), String> {
+        match self.bump() {
+            Tok::Sym(x) if x == s => Ok(()),
+            other => Err(format!("expected `{s}`, found {other:?}")),
+        }
+    }
+    fn ident(&mut self) -> Result<String, String> {
+        match self.bump() {
+            Tok::Ident(s) => Ok(s),
+            other => Err(format!("expected identifier, found {other:?}")),
+        }
+    }
+    fn kw(&mut self, k: &str) -> Result<(), String> {
+        let id = self.ident()?;
+        if id == k {
+            Ok(())
+        } else {
+            Err(format!("expected `{k}`, found `{id}`"))
+        }
+    }
+    fn int(&mut self) -> Result<i64, String> {
+        match self.bump() {
+            Tok::Int(v) => Ok(v),
+            Tok::Sym("-") => Ok(-self.int()?),
+            other => Err(format!("expected integer, found {other:?}")),
+        }
+    }
+}
+
+/// Parse one kernel definition.
+pub fn parse_kernel(src: &str) -> Result<KernelDef, String> {
+    let mut p = P { t: lex(src)?, i: 0 };
+    p.kw("kernel")?;
+    let name = p.ident()?;
+    p.sym("{")?;
+
+    let mut consts = Vec::new();
+    let mut inputs = Vec::new();
+    let mut outputs = Vec::new();
+    let mut iter = 1u64;
+    let mut loops = Vec::new();
+
+    loop {
+        match p.peek().clone() {
+            Tok::Ident(kw) if kw == "const" => {
+                p.bump();
+                let cname = p.ident()?;
+                p.sym(":")?;
+                let ty = Ty::parse(&p.ident()?)?;
+                p.sym("=")?;
+                let v = p.int()?;
+                consts.push((cname, ty, v));
+            }
+            Tok::Ident(kw) if kw == "in" || kw == "out" => {
+                p.bump();
+                let mut names = vec![p.ident()?];
+                while p.peek() == &Tok::Sym(",") {
+                    p.bump();
+                    names.push(p.ident()?);
+                }
+                p.sym(":")?;
+                let ty = Ty::parse(&p.ident()?)?;
+                let mut dims = Vec::new();
+                while p.peek() == &Tok::Sym("[") {
+                    p.bump();
+                    let d = p.int()?;
+                    if d <= 0 {
+                        return Err("array dimension must be positive".into());
+                    }
+                    dims.push(d as u64);
+                    p.sym("]")?;
+                }
+                if dims.is_empty() {
+                    return Err(format!("array `{}` needs at least one dimension", names[0]));
+                }
+                for n in names {
+                    let decl = ArrayDecl { name: n, ty, dims: dims.clone() };
+                    if kw == "in" {
+                        inputs.push(decl);
+                    } else {
+                        outputs.push(decl);
+                    }
+                }
+            }
+            Tok::Ident(kw) if kw == "iter" => {
+                p.bump();
+                let v = p.int()?;
+                if v < 1 {
+                    return Err("iter must be >= 1".into());
+                }
+                iter = v as u64;
+            }
+            Tok::Ident(kw) if kw == "for" => {
+                p.bump();
+                loop {
+                    let var = p.ident()?;
+                    p.kw("in")?;
+                    let lo = p.int()?;
+                    p.sym("..")?;
+                    let hi = p.int()?;
+                    if hi <= lo {
+                        return Err(format!("empty range {lo}..{hi} for `{var}`"));
+                    }
+                    loops.push((var, lo, hi));
+                    if p.peek() == &Tok::Sym(",") {
+                        p.bump();
+                    } else {
+                        break;
+                    }
+                }
+                break;
+            }
+            other => return Err(format!("expected const/in/out/iter/for, found {other:?}")),
+        }
+    }
+    if loops.len() > 2 {
+        return Err("at most 2-D loop nests are supported by the prototype".into());
+    }
+
+    p.sym("{")?;
+    let target = parse_ref(&mut p, &loops)?;
+    p.sym("=")?;
+    let expr = parse_expr(&mut p, &loops, 0)?;
+    p.sym("}")?;
+    p.sym("}")?;
+    if p.peek() != &Tok::Eof {
+        return Err(format!("trailing input after kernel: {:?}", p.peek()));
+    }
+
+    let k = KernelDef { name, consts, inputs, outputs, iter, loops, target, expr };
+    check(&k)?;
+    Ok(k)
+}
+
+fn parse_ref(p: &mut P, loops: &[(String, i64, i64)]) -> Result<ArrayRef, String> {
+    let array = p.ident()?;
+    let mut indices = Vec::new();
+    while p.peek() == &Tok::Sym("[") {
+        p.bump();
+        let var = p.ident()?;
+        if !loops.iter().any(|(v, _, _)| v == &var) {
+            return Err(format!("index `{var}` is not a loop variable"));
+        }
+        let off = match p.peek() {
+            Tok::Sym("+") => {
+                p.bump();
+                p.int()?
+            }
+            Tok::Sym("-") => {
+                p.bump();
+                -p.int()?
+            }
+            _ => 0,
+        };
+        indices.push((var, off));
+        p.sym("]")?;
+    }
+    if indices.is_empty() {
+        return Err(format!("`{array}` used without indices"));
+    }
+    Ok(ArrayRef { array, indices })
+}
+
+/// Pratt parser; binding powers: `| ^ &` (1) < `<< >>` (2) < `+ -` (3)
+/// < `* /` (4).
+fn parse_expr(p: &mut P, loops: &[(String, i64, i64)], min_bp: u8) -> Result<Expr, String> {
+    let mut lhs = match p.peek().clone() {
+        Tok::Int(v) => {
+            p.bump();
+            Expr::Int(v)
+        }
+        Tok::Sym("(") => {
+            p.bump();
+            let e = parse_expr(p, loops, 0)?;
+            p.sym(")")?;
+            e
+        }
+        Tok::Ident(_) => {
+            // lookahead: ident '[' → array ref, else const
+            let name = p.ident()?;
+            if p.peek() == &Tok::Sym("[") {
+                p.i -= 1; // push ident back
+                Expr::Ref(parse_ref(p, loops)?)
+            } else {
+                Expr::Const(name)
+            }
+        }
+        other => return Err(format!("expected expression, found {other:?}")),
+    };
+    loop {
+        let (op, bp) = match p.peek() {
+            Tok::Sym("|") => (BinOp::Or, 1),
+            Tok::Sym("^") => (BinOp::Xor, 1),
+            Tok::Sym("&") => (BinOp::And, 1),
+            Tok::Sym("<<") => (BinOp::Shl, 2),
+            Tok::Sym(">>") => (BinOp::Shr, 2),
+            Tok::Sym("+") => (BinOp::Add, 3),
+            Tok::Sym("-") => (BinOp::Sub, 3),
+            Tok::Sym("*") => (BinOp::Mul, 4),
+            Tok::Sym("/") => (BinOp::Div, 4),
+            _ => break,
+        };
+        if bp < min_bp {
+            break;
+        }
+        p.bump();
+        let rhs = parse_expr(p, loops, bp + 1)?;
+        lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+    }
+    Ok(lhs)
+}
+
+/// Semantic checks: references resolve, dimensionality matches, target is
+/// an output, reads are inputs.
+fn check(k: &KernelDef) -> Result<(), String> {
+    let find = |name: &str| -> Option<&ArrayDecl> {
+        k.inputs.iter().chain(&k.outputs).find(|a| a.name == name)
+    };
+    let check_ref = |r: &ArrayRef| -> Result<(), String> {
+        let a = find(&r.array).ok_or(format!("unknown array `{}`", r.array))?;
+        if a.dims.len() != r.indices.len() {
+            return Err(format!(
+                "`{}` has {} dims but is indexed with {}",
+                r.array,
+                a.dims.len(),
+                r.indices.len()
+            ));
+        }
+        Ok(())
+    };
+    check_ref(&k.target)?;
+    if !k.outputs.iter().any(|o| o.name == k.target.array) {
+        return Err(format!("assignment target `{}` is not an output", k.target.array));
+    }
+    fn walk(e: &Expr, k: &KernelDef, f: &impl Fn(&ArrayRef) -> Result<(), String>) -> Result<(), String> {
+        match e {
+            Expr::Ref(r) => {
+                f(r)?;
+                if !k.inputs.iter().any(|i| i.name == r.array) {
+                    return Err(format!("read of `{}` which is not an input", r.array));
+                }
+                Ok(())
+            }
+            Expr::Const(c) => {
+                if !k.consts.iter().any(|(n, _, _)| n == c) {
+                    return Err(format!("unknown constant `{c}`"));
+                }
+                Ok(())
+            }
+            Expr::Int(_) => Ok(()),
+            Expr::Bin(_, a, b) => {
+                walk(a, k, f)?;
+                walk(b, k, f)
+            }
+        }
+    }
+    walk(&k.expr, k, &check_ref)
+}
+
+/// The paper's simple kernel in the mini-language.
+pub fn simple_kernel_source() -> &'static str {
+    r#"
+kernel simple {
+    const K : ui18 = 42
+    in  a, b, c : ui18[1000]
+    out y       : ui18[1000]
+    for n in 0..1000 {
+        y[n] = K + ((a[n] + b[n]) * (c[n] + c[n]))
+    }
+}
+"#
+}
+
+/// The paper's SOR kernel (§8) in the mini-language (Q14 fixed point).
+pub fn sor_kernel_source() -> &'static str {
+    r#"
+kernel sor {
+    in  p : ui18[18][18]
+    out q : ui18[18][18]
+    iter 15
+    for i in 1..17, j in 1..17 {
+        q[i][j] = (3840 * (p[i-1][j] + p[i+1][j] + p[i][j-1] + p[i][j+1])
+                  + 1024 * p[i][j]) >> 14
+    }
+}
+"#
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_simple_kernel() {
+        let k = parse_kernel(simple_kernel_source()).unwrap();
+        assert_eq!(k.name, "simple");
+        assert_eq!(k.inputs.len(), 3);
+        assert_eq!(k.outputs.len(), 1);
+        assert_eq!(k.loops, vec![("n".to_string(), 0, 1000)]);
+        assert_eq!(k.consts[0], ("K".to_string(), Ty::UInt(18), 42));
+        assert_eq!(k.iter, 1);
+    }
+
+    #[test]
+    fn parses_sor_kernel() {
+        let k = parse_kernel(sor_kernel_source()).unwrap();
+        assert_eq!(k.loops.len(), 2);
+        assert_eq!(k.iter, 15);
+        assert_eq!(k.inputs[0].dims, vec![18, 18]);
+        // the expression contains offset refs
+        fn count_refs(e: &Expr) -> usize {
+            match e {
+                Expr::Ref(_) => 1,
+                Expr::Bin(_, a, b) => count_refs(a) + count_refs(b),
+                _ => 0,
+            }
+        }
+        assert_eq!(count_refs(&k.expr), 5);
+    }
+
+    #[test]
+    fn precedence_mul_over_add_over_shift() {
+        let k = parse_kernel(
+            "kernel t { in a : ui18[4]\nout y : ui18[4]\nfor n in 0..4 { y[n] = a[n] + a[n] * 2 >> 1 } }",
+        )
+        .unwrap();
+        // (a + (a*2)) >> 1
+        match &k.expr {
+            Expr::Bin(BinOp::Shr, lhs, rhs) => {
+                assert_eq!(**rhs, Expr::Int(1));
+                match &**lhs {
+                    Expr::Bin(BinOp::Add, _, r) => {
+                        assert!(matches!(&**r, Expr::Bin(BinOp::Mul, _, _)));
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_array() {
+        let e = parse_kernel("kernel t { in a : ui18[4]\nout y : ui18[4]\nfor n in 0..4 { y[n] = b[n] } }")
+            .unwrap_err();
+        assert!(e.contains("unknown array") || e.contains("not an input"), "{e}");
+    }
+
+    #[test]
+    fn rejects_write_to_input() {
+        let e = parse_kernel("kernel t { in a : ui18[4]\nout y : ui18[4]\nfor n in 0..4 { a[n] = a[n] } }")
+            .unwrap_err();
+        assert!(e.contains("not an output"), "{e}");
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let e = parse_kernel("kernel t { in a : ui18[4][4]\nout y : ui18[4]\nfor n in 0..4 { y[n] = a[n] } }")
+            .unwrap_err();
+        assert!(e.contains("dims"), "{e}");
+    }
+
+    #[test]
+    fn rejects_3d_nest() {
+        let e = parse_kernel(
+            "kernel t { in a : ui18[2][2][2]\nout y : ui18[2][2][2]\nfor i in 0..2, j in 0..2, k in 0..2 { y[i][j][k] = a[i][j][k] } }",
+        )
+        .unwrap_err();
+        assert!(e.contains("2-D"), "{e}");
+    }
+
+    #[test]
+    fn rejects_non_loop_index() {
+        let e = parse_kernel("kernel t { in a : ui18[4]\nout y : ui18[4]\nfor n in 0..4 { y[n] = a[m] } }")
+            .unwrap_err();
+        assert!(e.contains("loop variable"), "{e}");
+    }
+
+    #[test]
+    fn comments_skipped() {
+        let k = parse_kernel(
+            "# heading\nkernel t { # inline\nin a : ui18[4]\nout y : ui18[4]\nfor n in 0..4 { y[n] = a[n] } }",
+        )
+        .unwrap();
+        assert_eq!(k.name, "t");
+    }
+
+    #[test]
+    fn rejects_empty_range() {
+        let e = parse_kernel("kernel t { in a : ui18[4]\nout y : ui18[4]\nfor n in 4..4 { y[n] = a[n] } }")
+            .unwrap_err();
+        assert!(e.contains("empty range"), "{e}");
+    }
+}

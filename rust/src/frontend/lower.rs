@@ -1,0 +1,341 @@
+//! Lowering: kernel DFG → TIR module at a chosen design-space point.
+//!
+//! This is the generator the paper's Fig 1 front-end would drive: one
+//! kernel, many TIR variants (the C1/C2/C4/C5 configurations of §6),
+//! each of which the estimator can place in the estimation space. The
+//! generated modules follow the same conventions as the hand-written
+//! paper listings (`tir::examples`), so the simulator, estimator,
+//! synthesis model and HDL backend treat them identically.
+
+use super::dfg::{self, Node};
+use super::lang::KernelDef;
+use crate::tir::builder::ModuleBuilder;
+use crate::tir::{Kind, Module, Op, Ty};
+
+/// How the datapath is realised (the paper's design-space axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Style {
+    /// Custom pipeline (C2; C1 when `lanes > 1`).
+    Pipe,
+    /// Sequential instruction processor (C4; C5 when `dv > 1`).
+    Seq,
+}
+
+/// A point in the design space (Fig 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DesignPoint {
+    pub style: Style,
+    /// Pipeline lanes (`L`); meaningful for `Style::Pipe`.
+    pub lanes: u64,
+    /// Vectorisation degree (`D_v`); meaningful for `Style::Seq`.
+    pub dv: u64,
+}
+
+impl DesignPoint {
+    /// Single pipeline (C2).
+    pub fn c2() -> DesignPoint {
+        DesignPoint { style: Style::Pipe, lanes: 1, dv: 1 }
+    }
+    /// Replicated pipelines (C1).
+    pub fn c1(lanes: u64) -> DesignPoint {
+        DesignPoint { style: Style::Pipe, lanes, dv: 1 }
+    }
+    /// Scalar sequential PE (C4).
+    pub fn c4() -> DesignPoint {
+        DesignPoint { style: Style::Seq, lanes: 1, dv: 1 }
+    }
+    /// Vectorised sequential PEs (C5).
+    pub fn c5(dv: u64) -> DesignPoint {
+        DesignPoint { style: Style::Seq, lanes: 1, dv }
+    }
+    /// Replication degree (lanes or PEs) of this point.
+    pub fn replicas(&self) -> u64 {
+        match self.style {
+            Style::Pipe => self.lanes.max(1),
+            Style::Seq => self.dv.max(1),
+        }
+    }
+    /// Short label (`pipe×4`, `seq×2`).
+    pub fn label(&self) -> String {
+        let s = match self.style {
+            Style::Pipe => "pipe",
+            Style::Seq => "seq",
+        };
+        format!("{s}×{}", self.replicas())
+    }
+}
+
+/// Lower a kernel to TIR at a design point.
+pub fn lower(k: &KernelDef, point: DesignPoint) -> Result<Module, String> {
+    let g = dfg::build(k)?;
+    let replicas = point.replicas().max(1) as usize;
+    let mut b = ModuleBuilder::new(format!("{}_{}", k.name, point.label().replace('×', "x")));
+
+    // --- constants -------------------------------------------------------
+    for (name, ty, v) in &k.consts {
+        b.constant(name.clone(), *ty, *v);
+    }
+
+    // --- memories ----------------------------------------------------------
+    for a in k.inputs.iter().chain(&k.outputs) {
+        b.local_mem(format!("mem_{}", a.name), a.elems(), a.ty);
+    }
+
+    // --- streams + ports per replica ---------------------------------------
+    let suffix = |r: usize| if replicas == 1 { String::new() } else { format!("_{:02}", r + 1) };
+    let out = &k.outputs[0];
+    for r in 0..replicas {
+        let sfx = suffix(r);
+        // one source stream per input array per replica
+        for a in &k.inputs {
+            b.source_stream(format!("str_{}{}", a.name, sfx), format!("mem_{}", a.name));
+        }
+        b.dest_stream(format!("str_{}{}", out.name, sfx), format!("mem_{}", out.name));
+        // one input port per tap
+        for (t, tap) in g.taps.iter().enumerate() {
+            b.istream_port(
+                format!("main.t{t}{sfx}"),
+                tap.ty,
+                format!("str_{}{}", tap.array, sfx),
+                tap.offset,
+            );
+        }
+        b.ostream_port(format!("main.{}{}", out.name, sfx), out.ty, format!("str_{}{}", out.name, sfx));
+    }
+
+    // --- counters ------------------------------------------------------------
+    if k.loops.len() == 2 {
+        let (ref iv, ilo, ihi) = k.loops[0];
+        let (ref jv, jlo, jhi) = k.loops[1];
+        b.counter(format!("ctr_{jv}"), jlo, jhi - 1, None);
+        b.counter(format!("ctr_{iv}"), ilo, ihi - 1, Some(&format!("ctr_{jv}")));
+    } else {
+        let (ref nv, lo, hi) = k.loops[0];
+        b.counter(format!("ctr_{nv}"), lo, hi - 1, None);
+    }
+
+    // --- datapath function -----------------------------------------------------
+    let kind = match point.style {
+        Style::Pipe => Kind::Pipe,
+        Style::Seq => Kind::Seq,
+    };
+    let mut fb = b.func("f_dp", kind);
+    for (t, tap) in g.taps.iter().enumerate() {
+        fb = fb.param(format!("t{t}"), tap.ty);
+    }
+    // Emit ops in topological (creation) order; name nodes %n<id>, and
+    // the root after the output array so the ostream binding finds it.
+    let node_name = |id: usize| -> String {
+        if id == g.root {
+            out.name.clone()
+        } else {
+            format!("n{id}")
+        }
+    };
+    let operand = |id: usize| -> String {
+        match &g.nodes[id] {
+            Node::Input(t) => format!("%t{t}"),
+            Node::Const(c) => format!("@{c}"),
+            Node::Lit(v) => format!("{v}"),
+            Node::Op { .. } => format!("%{}", node_name(id)),
+        }
+    };
+    // Emission widths: an instruction's type must accept every operand
+    // (implicit widening only), so each op emits at
+    // `max(narrowed width, operand emit widths)` — modular arithmetic at
+    // a width ≥ the demanded one stays correct, and the ostream port
+    // truncates the final value.
+    let mut emit_w: Vec<u32> = vec![0; g.nodes.len()];
+    for (id, n) in g.nodes.iter().enumerate() {
+        emit_w[id] = match n {
+            Node::Input(t) => g.taps[*t].ty.bits(),
+            Node::Const(c) => {
+                k.consts.iter().find(|(n, _, _)| n == c).map(|(_, ty, _)| ty.bits()).unwrap_or(18)
+            }
+            Node::Lit(_) => 1, // immediates always fit their instruction
+            Node::Op { op, args, .. } => {
+                let mut w = g.widths[id];
+                for (ai, &a) in args.iter().enumerate() {
+                    // a shift amount does not widen the instruction
+                    if matches!(op, Op::Shl | Op::Lshr | Op::Ashr) && ai == 1 {
+                        continue;
+                    }
+                    if !matches!(g.nodes[a], Node::Lit(_)) {
+                        w = w.max(emit_w[a]);
+                    }
+                }
+                w
+            }
+        };
+    }
+    let mut emitted_root = false;
+    for (id, n) in g.nodes.iter().enumerate() {
+        if let Node::Op { op, args, .. } = n {
+            let ops: Vec<String> = args.iter().map(|&a| operand(a)).collect();
+            let refs: Vec<&str> = ops.iter().map(String::as_str).collect();
+            fb = fb.instr(node_name(id), *op, Ty::UInt(emit_w[id].clamp(1, 64) as u8), &refs);
+            if id == g.root {
+                emitted_root = true;
+            }
+        }
+    }
+    if !emitted_root {
+        // Root is a bare tap/const (y[n] = a[n]): pass through via add 0.
+        let (ty, opnd) = match &g.nodes[g.root] {
+            Node::Input(t) => (g.taps[*t].ty, format!("%t{t}")),
+            Node::Const(c) => {
+                let (_, ty, _) = k.consts.iter().find(|(n, _, _)| n == c).expect("checked");
+                (*ty, format!("@{c}"))
+            }
+            Node::Lit(v) => (Ty::UInt(dfg_lit_width(*v)), format!("{v}")),
+            Node::Op { .. } => unreachable!(),
+        };
+        fb = fb.instr(out.name.clone(), Op::Add, ty, &[&opnd, "0"]);
+    }
+    fb.finish();
+
+    // --- main wrapper ---------------------------------------------------------
+    if replicas == 1 {
+        let args: Vec<String> = (0..g.taps.len()).map(|t| format!("@main.t{t}")).collect();
+        let refs: Vec<&str> = args.iter().map(String::as_str).collect();
+        b.func("main", kind).call("f_dp", &refs, Some(kind), 1).finish();
+    } else {
+        let mut mb = b.func("main", Kind::Par);
+        for r in 0..replicas {
+            let sfx = suffix(r);
+            let args: Vec<String> = (0..g.taps.len()).map(|t| format!("@main.t{t}{sfx}")).collect();
+            let refs: Vec<&str> = args.iter().map(String::as_str).collect();
+            mb = mb.call("f_dp", &refs, Some(kind), 1);
+        }
+        mb.finish();
+    }
+    b.launch_call("main", k.iter);
+    b.finish().map_err(|e| e.to_string())
+}
+
+fn dfg_lit_width(v: i64) -> u8 {
+    if v <= 0 {
+        1
+    } else {
+        (64 - (v as u64).leading_zeros()) as u8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::estimator::ConfigClass;
+    use crate::frontend::lang::{parse_kernel, simple_kernel_source, sor_kernel_source};
+    use crate::sim::{self, Workload};
+    use crate::tir::examples;
+
+    fn simple() -> KernelDef {
+        parse_kernel(simple_kernel_source()).unwrap()
+    }
+    fn sor() -> KernelDef {
+        parse_kernel(sor_kernel_source()).unwrap()
+    }
+
+    #[test]
+    fn lowers_all_design_points_validly() {
+        for k in [simple(), sor()] {
+            for p in [DesignPoint::c2(), DesignPoint::c1(4), DesignPoint::c4(), DesignPoint::c5(4)] {
+                let m = lower(&k, p).unwrap_or_else(|e| panic!("{} {:?}: {e}", k.name, p));
+                crate::tir::validate::require_synthesizable(&m).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn classes_match_points() {
+        let cases = [
+            (DesignPoint::c2(), ConfigClass::C2),
+            (DesignPoint::c1(4), ConfigClass::C1),
+            (DesignPoint::c4(), ConfigClass::C4),
+            (DesignPoint::c5(4), ConfigClass::C5),
+        ];
+        for (p, want) in cases {
+            let m = lower(&simple(), p).unwrap();
+            let s = crate::estimator::analyze(&m).unwrap();
+            assert_eq!(s.class, want, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn generated_simple_matches_handwritten_estimates() {
+        // The front-end generation and the paper's hand-written listing
+        // must land on the same cycle counts (P=3, I=1000).
+        let dev = Device::stratix4();
+        let gen = lower(&simple(), DesignPoint::c2()).unwrap();
+        let hand = crate::tir::parse_and_validate(&examples::fig7_pipe()).unwrap();
+        let eg = crate::estimator::estimate(&gen, &dev).unwrap();
+        let eh = crate::estimator::estimate(&hand, &dev).unwrap();
+        assert_eq!(eg.cycles_per_pass, eh.cycles_per_pass);
+        assert_eq!(eg.resources.dsp, eh.resources.dsp);
+    }
+
+    #[test]
+    fn generated_simple_simulates_identically_to_handwritten() {
+        let dev = Device::stratix4();
+        let gen = lower(&simple(), DesignPoint::c2()).unwrap();
+        let hand = crate::tir::parse_and_validate(&examples::fig7_pipe()).unwrap();
+        let wg = Workload::random_for(&gen, 31);
+        let wh = Workload::random_for(&hand, 31);
+        // identical memories (same names, same seed)
+        assert_eq!(wg.mems["mem_a"], wh.mems["mem_a"]);
+        let rg = sim::simulate(&gen, &dev, &wg).unwrap();
+        let rh = sim::simulate(&hand, &dev, &wh).unwrap();
+        assert_eq!(rg.mems["mem_y"], rh.mems["mem_y"]);
+    }
+
+    #[test]
+    fn generated_sor_matches_handwritten_sim() {
+        let dev = Device::stratix4();
+        let gen = lower(&sor(), DesignPoint::c2()).unwrap();
+        let hand = crate::tir::parse_and_validate(&examples::fig15_sor_default()).unwrap();
+        let mut wg = Workload::random_for(&gen, 5);
+        // align memories: generated uses mem_p/mem_q too
+        let wh = Workload { mems: wg.mems.clone(), seed: 5 };
+        let rg = sim::simulate(&gen, &dev, &wg).unwrap();
+        let rh = sim::simulate(&hand, &dev, &wh).unwrap();
+        assert_eq!(rg.mems["mem_q"], rh.mems["mem_q"]);
+        wg.seed = 5;
+    }
+
+    #[test]
+    fn multi_lane_generated_matches_single_lane() {
+        let dev = Device::stratix4();
+        let m1 = lower(&simple(), DesignPoint::c2()).unwrap();
+        let m4 = lower(&simple(), DesignPoint::c1(4)).unwrap();
+        let w1 = Workload::random_for(&m1, 8);
+        let w4 = Workload::random_for(&m4, 8);
+        let r1 = sim::simulate(&m1, &dev, &w1).unwrap();
+        let r4 = sim::simulate(&m4, &dev, &w4).unwrap();
+        assert_eq!(r1.mems["mem_y"], r4.mems["mem_y"]);
+    }
+
+    #[test]
+    fn seq_point_matches_pipe_point_functionally() {
+        let dev = Device::stratix4();
+        let mp = lower(&sor(), DesignPoint::c2()).unwrap();
+        let ms = lower(&sor(), DesignPoint::c4()).unwrap();
+        let wp = Workload::random_for(&mp, 13);
+        let ws = Workload::random_for(&ms, 13);
+        let rp = sim::simulate(&mp, &dev, &wp).unwrap();
+        let rs = sim::simulate(&ms, &dev, &ws).unwrap();
+        assert_eq!(rp.mems["mem_q"], rs.mems["mem_q"]);
+        // …but at very different speed
+        assert!(rs.cycles_per_pass > 4 * rp.cycles_per_pass);
+    }
+
+    #[test]
+    fn passthrough_kernel_lowers() {
+        let k = parse_kernel("kernel t { in a : ui18[16]\nout y : ui18[16]\nfor n in 0..16 { y[n] = a[n] } }")
+            .unwrap();
+        let m = lower(&k, DesignPoint::c2()).unwrap();
+        let w = Workload::random_for(&m, 3);
+        let r = sim::simulate(&m, &Device::stratix4(), &w).unwrap();
+        assert_eq!(r.mems["mem_y"], w.mems["mem_a"]);
+    }
+}

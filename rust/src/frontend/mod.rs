@@ -1,0 +1,38 @@
+//! Front-end: loop-nest mini-language → DFG → TIR at any design-space
+//! point (the minimal runnable version of the paper's Fig 1 front-end
+//! path; the real TyTra front-end is the paper's future work).
+//!
+//! * [`lang`] — the kernel mini-language (both case studies ship as
+//!   built-in sources);
+//! * [`dfg`] — dataflow-graph construction with exact width inference
+//!   and hash-consing;
+//! * [`lower`] — TIR generation for C1/C2/C4/C5 points.
+
+pub mod dfg;
+pub mod lang;
+pub mod lower;
+
+pub use lang::{parse_kernel, KernelDef};
+pub use lower::{lower, DesignPoint, Style};
+
+/// Parse + lower in one step.
+pub fn compile(src: &str, point: DesignPoint) -> Result<crate::tir::Module, String> {
+    let k = parse_kernel(src)?;
+    lower(&k, point)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compile_end_to_end() {
+        let m = compile(lang::simple_kernel_source(), DesignPoint::c2()).unwrap();
+        assert_eq!(m.work_items(), 1000);
+    }
+
+    #[test]
+    fn compile_reports_parse_errors() {
+        assert!(compile("kernel {", DesignPoint::c2()).is_err());
+    }
+}

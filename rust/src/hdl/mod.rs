@@ -1,0 +1,9 @@
+//! HDL back-end: synthesizable Verilog from TIR ([`verilog`]) and a
+//! self-checking testbench with simulator-derived vectors
+//! ([`testbench`]).
+
+pub mod testbench;
+pub mod verilog;
+
+pub use testbench::generate as generate_testbench;
+pub use verilog::generate as generate_verilog;

@@ -1,0 +1,51 @@
+//! # TyTra-IR + TyBEC — FPGA design-space exploration, reproduced in Rust
+//!
+//! Reproduction of *An Intermediate Language and Estimator for Automated
+//! Design Space Exploration on FPGAs* (Nabi & Vanderbauwhede, HEART 2015).
+//!
+//! The crate implements the paper's entire stack:
+//!
+//! * [`tir`] — the TyTra-IR language: lexer, parser, type system, SSA
+//!   validator, pretty-printer and a programmatic builder.
+//! * [`estimator`] — TyBEC: the light-weight cost model producing
+//!   resource (ALUT/REG/BRAM/DSP) and throughput (cycles, EWGT)
+//!   estimates straight from TIR, no synthesis involved.
+//! * [`sim`] — a cycle-accurate dataflow simulator of the elaborated
+//!   design: the stand-in for the paper's hand-crafted-HDL ModelSim runs
+//!   (the "actual" cycle counts in Tables 1 and 2).
+//! * [`synth`] — a netlist-level synthesis model: the stand-in for
+//!   Quartus (the "actual" resource counts and achieved Fmax).
+//! * [`hdl`] — the Verilog back-end (the paper's "straightforward next
+//!   step", §10).
+//! * [`dse`] — the design-space (Fig 3) and estimation-space (Fig 4)
+//!   abstractions: configuration transforms, constraint walls, Pareto
+//!   selection.
+//! * [`frontend`] — a loop-nest mini-language lowered to TIR at any
+//!   design-space point (the Fig 1 front-end path, minimally).
+//! * [`coordinator`] — the L3 exploration driver: a thread-pool that
+//!   fans estimation/simulation jobs across the design space, with a
+//!   result cache and metrics.
+//! * [`runtime`] — PJRT bridge: loads the AOT-compiled JAX/Pallas golden
+//!   models from `artifacts/` and cross-checks the simulator's
+//!   functional output.
+//! * [`device`] — FPGA device descriptions (Stratix-IV-like targets).
+//!
+//! See `DESIGN.md` for the experiment index mapping every table/figure of
+//! the paper to a module and bench, and `EXPERIMENTS.md` for results.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod dse;
+pub mod estimator;
+pub mod frontend;
+pub mod hdl;
+pub mod runtime;
+pub mod sim;
+pub mod synth;
+pub mod tir;
+pub mod util;
+
+pub use tir::Module;

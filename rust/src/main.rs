@@ -1,0 +1,10 @@
+//! `tytra` — the TyTra-IR + TyBEC command-line launcher.
+//!
+//! See `tytra help` (or `cli::usage`) for the command set: estimation,
+//! simulation, synthesis-model, E-vs-A comparison, parallel DSE, HDL
+//! emission and PJRT golden checking.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(tytra::cli::run(&args));
+}

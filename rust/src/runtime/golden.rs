@@ -1,0 +1,110 @@
+//! Golden-model comparisons: TIR dataflow simulator vs the PJRT-executed
+//! JAX/Pallas artifacts.
+//!
+//! This closes the three-layer loop: the L1 Pallas kernels are verified
+//! against the pure-jnp oracle by pytest at build time; here the Rust
+//! simulator's functional output is verified bit-for-bit against the
+//! same artifacts at run time. A TIR configuration that passes both is
+//! functionally faithful to the paper's kernels end to end.
+
+use anyhow::{Context, Result};
+
+use super::pjrt::Runtime;
+use super::Manifest;
+use crate::device::Device;
+use crate::sim::{self, Workload};
+use crate::tir::examples;
+use crate::util::Prng;
+
+/// Outcome of one golden comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GoldenReport {
+    /// Which kernel was compared.
+    pub kernel: String,
+    /// Elements compared.
+    pub n: usize,
+    /// Mismatching elements (should be 0).
+    pub mismatches: usize,
+    /// First mismatch (index, simulator value, golden value) if any.
+    pub first: Option<(usize, u64, u64)>,
+}
+
+impl GoldenReport {
+    /// Did the comparison pass bit-for-bit?
+    pub fn ok(&self) -> bool {
+        self.mismatches == 0
+    }
+}
+
+fn compare(kernel: &str, sim_out: &[u64], golden: &[u64]) -> GoldenReport {
+    assert_eq!(sim_out.len(), golden.len(), "{kernel}: length mismatch");
+    let mut mismatches = 0;
+    let mut first = None;
+    for (i, (&s, &g)) in sim_out.iter().zip(golden).enumerate() {
+        if s != g {
+            if first.is_none() {
+                first = Some((i, s, g));
+            }
+            mismatches += 1;
+        }
+    }
+    GoldenReport { kernel: kernel.into(), n: sim_out.len(), mismatches, first }
+}
+
+/// Simple kernel: simulate the TIR pipeline configuration on a random
+/// workload, and run the same inputs through the AOT artifact.
+pub fn check_simple(rt: &Runtime, mf: &Manifest, lanes: usize, seed: u64) -> Result<GoldenReport> {
+    let src = if lanes <= 1 { examples::fig7_pipe() } else { examples::fig9_multi_pipe(lanes) };
+    let m = crate::tir::parse_and_validate(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // Random ui18 workload of the artifact's NTOT.
+    anyhow::ensure!(m.work_items() as usize == mf.ntot, "TIR NTOT != artifact NTOT");
+    let w = Workload::random_for(&m, seed);
+    let r = sim::simulate(&m, &Device::stratix4(), &w).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let to_u32 = |name: &str| -> Vec<u32> { w.mems[name].iter().map(|&v| v as u32).collect() };
+    let (a, b, c) = (to_u32("mem_a"), to_u32("mem_b"), to_u32("mem_c"));
+    let exe = rt.load_hlo_text(&mf.simple_path())?;
+    let golden = exe.run_u32_vecs(&[&a, &b, &c]).context("running simple artifact")?;
+
+    let sim_y = &r.mems["mem_y"];
+    let golden64: Vec<u64> = golden.iter().map(|&v| v as u64).collect();
+    Ok(compare("simple", sim_y, &golden64))
+}
+
+/// SOR kernel: `niter` chained passes in the simulator vs `niter`
+/// applications of the single-step artifact (the Rust side owns the
+/// repeat loop, as the coordinator would in production).
+pub fn check_sor(rt: &Runtime, mf: &Manifest, niter: u64, seed: u64) -> Result<GoldenReport> {
+    let src = examples::fig15_sor_pipe(mf.sor_rows, mf.sor_cols, niter);
+    let m = crate::tir::parse_and_validate(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let mut rng = Prng::new(seed);
+    let n = mf.sor_rows * mf.sor_cols;
+    let p0: Vec<u64> = (0..n).map(|_| (rng.next_u32() & 0x3FFFF) as u64).collect();
+    let mut w = Workload { mems: Default::default(), seed };
+    w.mems.insert("mem_p".into(), p0.clone());
+    w.mems.insert("mem_q".into(), p0.clone());
+    let r = sim::simulate(&m, &Device::stratix4(), &w).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // Golden: iterate the one-pass artifact.
+    let exe = rt.load_hlo_text(&mf.sor_step_path())?;
+    let mut grid: Vec<i32> = p0.iter().map(|&v| v as i32).collect();
+    for _ in 0..niter {
+        grid = exe.run_i32_grid(&grid, mf.sor_rows, mf.sor_cols)?;
+    }
+    let golden64: Vec<u64> = grid.iter().map(|&v| v as u64).collect();
+    Ok(compare("sor", &r.mems["mem_q"], &golden64))
+}
+
+/// Run the full golden suite (the `tytra golden` CLI subcommand).
+pub fn run_all(artifacts_dir: &std::path::Path, seed: u64) -> Result<Vec<GoldenReport>> {
+    let mf = Manifest::load(artifacts_dir).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rt = Runtime::cpu()?;
+    let mut reports = Vec::new();
+    reports.push(check_simple(&rt, &mf, 1, seed)?);
+    reports.push(check_simple(&rt, &mf, 4, seed.wrapping_add(1))?);
+    reports.push(check_sor(&rt, &mf, 1, seed.wrapping_add(2))?);
+    reports.push(check_sor(&rt, &mf, 15, seed.wrapping_add(3))?);
+    Ok(reports)
+}

@@ -1,0 +1,130 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas golden models from
+//! `artifacts/` and executes them on the XLA CPU client.
+//!
+//! This is the three-layer architecture's runtime bridge: Python lowers
+//! the L2/L1 models **once** (`make artifacts`), the Rust side loads the
+//! HLO *text* (the interchange format xla_extension 0.5.1 accepts — see
+//! `/opt/xla-example/README.md`) and runs it natively. Python never
+//! executes at DSE time.
+//!
+//! [`Manifest`] parses `artifacts/manifest.txt` (shapes, constants);
+//! [`pjrt`] wraps the `xla` crate; [`golden`] cross-checks the TIR
+//! dataflow simulator's functional output against the PJRT-executed
+//! artifacts — the repository's end-to-end correctness signal.
+
+pub mod golden;
+pub mod pjrt;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.txt` (written by `python -m compile.aot`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Simple-kernel stream length (Table 1 workload: 1000).
+    pub ntot: usize,
+    /// The simple kernel's additive constant K.
+    pub k: u64,
+    /// SOR grid dimensions (rows, cols).
+    pub sor_rows: usize,
+    pub sor_cols: usize,
+    /// SOR Q14 weights and shift.
+    pub sor_w4: u64,
+    pub sor_wb: u64,
+    pub sor_frac: u32,
+    /// Artifact file names, relative to the artifacts directory.
+    pub simple_artifact: String,
+    pub sor_step_artifact: String,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {} (run `make artifacts`): {e}", path.display()))?;
+        let mut kv: BTreeMap<&str, &str> = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("manifest line without `=`: `{line}`"))?;
+            kv.insert(key.trim(), val.trim());
+        }
+        let get = |k: &str| kv.get(k).copied().ok_or_else(|| format!("manifest missing `{k}`"));
+        let num = |k: &str| -> Result<u64, String> {
+            get(k)?.parse().map_err(|e| format!("manifest `{k}`: {e}"))
+        };
+        Ok(Manifest {
+            ntot: num("ntot")? as usize,
+            k: num("k")?,
+            sor_rows: num("sor_rows")? as usize,
+            sor_cols: num("sor_cols")? as usize,
+            sor_w4: num("sor_w4")?,
+            sor_wb: num("sor_wb")?,
+            sor_frac: num("sor_frac")? as u32,
+            simple_artifact: get("simple_artifact")?.to_string(),
+            sor_step_artifact: get("sor_step_artifact")?.to_string(),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Default artifacts directory: `$TYTRA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("TYTRA_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Absolute path of the simple-kernel artifact.
+    pub fn simple_path(&self) -> PathBuf {
+        self.dir.join(&self.simple_artifact)
+    }
+
+    /// Absolute path of the SOR-step artifact.
+    pub fn sor_step_path(&self) -> PathBuf {
+        self.dir.join(&self.sor_step_artifact)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_text() {
+        let dir = std::env::temp_dir().join("tytra_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# comment\nntot = 1000\nk = 42\nsor_rows = 18\nsor_cols = 18\n\
+             sor_w4 = 3840\nsor_wb = 1024\nsor_frac = 14\nsimple_block = 256\nsor_block_rows = 8\n\
+             simple_artifact = simple.hlo.txt\nsor_step_artifact = sor_step.hlo.txt\n",
+        )
+        .unwrap();
+        let mf = Manifest::load(&dir).unwrap();
+        assert_eq!(mf.ntot, 1000);
+        assert_eq!(mf.k, 42);
+        assert_eq!((mf.sor_rows, mf.sor_cols), (18, 18));
+        assert_eq!(mf.sor_w4, 3840);
+        assert!(mf.simple_path().ends_with("simple.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_manifest_reports_make_artifacts() {
+        let e = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(e.contains("make artifacts"), "{e}");
+    }
+
+    #[test]
+    fn missing_key_is_reported() {
+        let dir = std::env::temp_dir().join("tytra_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "ntot = 5\n").unwrap();
+        let e = Manifest::load(&dir).unwrap_err();
+        assert!(e.contains("missing"), "{e}");
+    }
+}

@@ -1,0 +1,80 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Pattern follows `/opt/xla-example/src/bin/load_hlo.rs`: HLO **text**
+//! in, `HloModuleProto::from_text_file` → `XlaComputation` → compile →
+//! execute. Artifacts are lowered with `return_tuple=True`, so results
+//! unwrap with `to_tuple1()`.
+//!
+//! The client is created once and shared (`Runtime` owns it plus the
+//! compiled executables); compilation happens at load time, never on the
+//! hot path.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled artifact ready to execute.
+pub struct LoadedExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path, for diagnostics.
+    pub path: String,
+}
+
+/// PJRT CPU runtime holding the client and compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-UTF8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedExecutable { exe, path: path.display().to_string() })
+    }
+}
+
+impl LoadedExecutable {
+    /// Execute with literal inputs; returns the elements of the 1-tuple
+    /// result as a literal.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path))?;
+        let lit = result[0][0].to_literal_sync().context("fetching result literal")?;
+        lit.to_tuple1().context("unwrapping 1-tuple result")
+    }
+
+    /// Run with 1-D u32 inputs, returning a u32 vector (simple kernel).
+    pub fn run_u32_vecs(&self, inputs: &[&[u32]]) -> Result<Vec<u32>> {
+        let lits: Vec<xla::Literal> = inputs.iter().map(|v| xla::Literal::vec1(v)).collect();
+        let out = self.run(&lits)?;
+        out.to_vec::<u32>().context("reading u32 result")
+    }
+
+    /// Run with one 2-D i32 input of shape (rows, cols), returning the
+    /// same-shaped result flattened row-major (SOR step).
+    pub fn run_i32_grid(&self, grid: &[i32], rows: usize, cols: usize) -> Result<Vec<i32>> {
+        anyhow::ensure!(grid.len() == rows * cols, "grid size mismatch");
+        let lit = xla::Literal::vec1(grid).reshape(&[rows as i64, cols as i64])?;
+        let out = self.run(&[lit])?;
+        out.to_vec::<i32>().context("reading i32 result")
+    }
+}

@@ -1,0 +1,323 @@
+//! Elaboration: from a validated TIR module to the lane-level design the
+//! simulator (and the HDL backend) operate on.
+//!
+//! A *lane* is one leaf compute core — a pipeline lane (C1/C2), a
+//! sequential PE (C4/C5), or a replicated comb core (C3) — together with
+//! its port bindings:
+//!
+//! * input ports come positionally from the instantiating call's
+//!   arguments (`call @f2 (@main.a_01, …)`), or by `main.<param>` naming
+//!   when the leaf is `@main` itself;
+//! * output ports bind by the paper's naming convention: ostream port
+//!   `main.y_02` ↔ lane 2 ↔ SSA result `%y` (suffix `_NN` selects the
+//!   lane, the local name selects the result).
+//!
+//! The index space comes from the nested counters (2-D stencils) or the
+//! stream length (1-D maps); lanes take contiguous chunks of it.
+
+
+use crate::estimator::structure::{self, StructInfo};
+use crate::tir::{Dir, Func, Kind, Module, Operand, Stmt};
+
+/// One leaf compute core and its stream bindings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Lane {
+    /// Leaf function implementing the datapath.
+    pub func: String,
+    /// Execution kind of the leaf.
+    pub kind: Kind,
+    /// Input ports, positionally matching the leaf's parameters.
+    pub in_ports: Vec<String>,
+    /// Output ports bound to this lane.
+    pub out_ports: Vec<String>,
+}
+
+/// The multi-dimensional work-item index space (outermost dim first).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexSpace {
+    /// Inclusive (from, to) per dimension, outermost first.
+    pub dims: Vec<(i64, i64)>,
+    /// Linear memory stride per dimension (innermost = 1).
+    pub strides: Vec<i64>,
+}
+
+impl IndexSpace {
+    /// Number of work-items.
+    pub fn len(&self) -> u64 {
+        self.dims.iter().map(|(a, b)| (b - a) as u64 + 1).product()
+    }
+
+    /// True when the space is empty (no dims ⇒ single implicit item).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Linear memory index of the `item`-th work-item (row-major order,
+    /// outermost dimension slowest).
+    pub fn linear(&self, item: u64) -> u64 {
+        let mut rem = item;
+        let mut lin: i64 = 0;
+        for (d, (from, to)) in self.dims.iter().enumerate().rev() {
+            let span = (*to - *from) as u64 + 1;
+            let digit = rem % span;
+            rem /= span;
+            lin += (*from + digit as i64) * self.strides[d];
+        }
+        lin as u64
+    }
+}
+
+/// An elaborated design.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Design {
+    /// Leaf lanes in instantiation order.
+    pub lanes: Vec<Lane>,
+    /// Structural facts from the estimator's analysis.
+    pub info: StructInfo,
+    /// Work-item index space.
+    pub index: IndexSpace,
+}
+
+impl Design {
+    /// Contiguous item range `[start, end)` handled by lane `k` of `n`.
+    pub fn lane_range(&self, k: usize, n: usize) -> (u64, u64) {
+        let total = self.index.len();
+        let chunk = total.div_ceil(n as u64);
+        let start = (k as u64 * chunk).min(total);
+        let end = ((k as u64 + 1) * chunk).min(total);
+        (start, end)
+    }
+}
+
+/// Elaborate a validated module.
+pub fn elaborate(m: &Module) -> Result<Design, String> {
+    let info = structure::analyze(m)?;
+    let main = m.main().ok_or("module has no @main")?;
+
+    let mut lanes = Vec::new();
+    collect_lanes(m, main, &[], &mut lanes)?;
+    if lanes.is_empty() {
+        return Err("no compute lanes found under @main".into());
+    }
+    bind_out_ports(m, &mut lanes)?;
+
+    let index = index_space(m)?;
+    Ok(Design { lanes, info, index })
+}
+
+/// Walk from a function, descending through pure wrappers, emitting a
+/// lane per leaf instantiation.
+fn collect_lanes(m: &Module, f: &Func, call_args: &[Operand], lanes: &mut Vec<Lane>) -> Result<(), String> {
+    let has_instrs = m.instrs_of(f).next().is_some();
+    if has_instrs || m.calls_of(f).next().is_none() {
+        // Leaf: bind input ports.
+        let mut in_ports = Vec::new();
+        if !call_args.is_empty() {
+            for a in call_args {
+                match a {
+                    Operand::Global(g) if m.ports.contains_key(g.as_str()) => in_ports.push(g.clone()),
+                    Operand::Global(g) if m.consts.contains_key(g.as_str()) => in_ports.push(g.clone()),
+                    other => return Err(format!("lane `@{}`: call argument {other} is not a port", f.name)),
+                }
+            }
+        } else {
+            // Convention: `main.<param>` for each parameter; for a leaf
+            // with no parameters, all istream ports in name order.
+            if f.params.is_empty() {
+                in_ports.extend(
+                    m.ports.values().filter(|p| p.dir == Dir::Read).map(|p| p.name.clone()),
+                );
+            } else {
+                for (p, _) in &f.params {
+                    let want = format!("main.{p}");
+                    if !m.ports.contains_key(&want) {
+                        return Err(format!(
+                            "lane `@{}`: no call arguments and no port `@{want}` for parameter `%{p}`",
+                            f.name
+                        ));
+                    }
+                    in_ports.push(want);
+                }
+            }
+        }
+        lanes.push(Lane { func: f.name.clone(), kind: f.kind, in_ports, out_ports: Vec::new() });
+        return Ok(());
+    }
+    // Pure wrapper: descend into each call (in body order).
+    for s in &f.body {
+        if let Stmt::Call(c) = s {
+            let callee = &m.funcs[&c.callee];
+            collect_lanes(m, callee, &c.args, lanes)?;
+        }
+    }
+    Ok(())
+}
+
+/// Assign ostream ports to lanes: `_NN` suffix selects lane NN−1; ports
+/// without a suffix go to lane 0 (single-lane designs).
+fn bind_out_ports(m: &Module, lanes: &mut [Lane]) -> Result<(), String> {
+    for p in m.ports.values() {
+        if p.dir != Dir::Write {
+            continue;
+        }
+        let lane_idx = match lane_suffix(&p.name) {
+            Some(n) => {
+                let idx = n.checked_sub(1).ok_or_else(|| format!("port `@{}`: lane suffix _00", p.name))?;
+                if idx >= lanes.len() {
+                    return Err(format!(
+                        "port `@{}` names lane {n} but only {} lanes exist",
+                        p.name,
+                        lanes.len()
+                    ));
+                }
+                idx
+            }
+            None => 0,
+        };
+        lanes[lane_idx].out_ports.push(p.name.clone());
+    }
+    Ok(())
+}
+
+/// Parse a trailing `_NN` lane suffix.
+pub fn lane_suffix(name: &str) -> Option<usize> {
+    let (_, tail) = name.rsplit_once('_')?;
+    if tail.len() == 2 && tail.chars().all(|c| c.is_ascii_digit()) {
+        tail.parse().ok()
+    } else {
+        None
+    }
+}
+
+/// The local result name an ostream port binds to: strip the function
+/// scope prefix and any lane suffix (`main.y_02` → `y`).
+pub fn port_local_name(name: &str) -> &str {
+    let base = name.rsplit_once('.').map(|(_, b)| b).unwrap_or(name);
+    match base.rsplit_once('_') {
+        Some((head, tail)) if tail.len() == 2 && tail.chars().all(|c| c.is_ascii_digit()) => head,
+        _ => base,
+    }
+}
+
+/// Build the index space from counters (≤ 2-D supported, like the
+/// paper's prototype) or the stream length.
+fn index_space(m: &Module) -> Result<IndexSpace, String> {
+    if m.counters.is_empty() {
+        let n = m.work_items();
+        if n == 0 {
+            return Err("cannot size the index space: no counters and no input streams".into());
+        }
+        return Ok(IndexSpace { dims: vec![(0, n as i64 - 1)], strides: vec![1] });
+    }
+    // Chain counters outermost → innermost via `nest`.
+    let nested_targets: Vec<&str> = m.counters.values().filter_map(|c| c.nest.as_deref()).collect();
+    let mut outer: Vec<&crate::tir::Counter> =
+        m.counters.values().filter(|c| !nested_targets.contains(&c.name.as_str())).collect();
+    if outer.len() != 1 {
+        return Err(format!("expected one outermost counter, found {}", outer.len()));
+    }
+    let mut chain = vec![outer.remove(0)];
+    while let Some(next) = chain.last().unwrap().nest.as_deref() {
+        chain.push(&m.counters[next]);
+    }
+    if chain.len() > 2 {
+        return Err("index spaces beyond 2-D are not supported by the prototype".into());
+    }
+    let dims: Vec<(i64, i64)> = chain.iter().map(|c| (c.from, c.to)).collect();
+    let strides = if dims.len() == 1 {
+        vec![1]
+    } else {
+        // Row stride of the 2-D space: the magnitude of the ±row stream
+        // offsets (the line-buffer length — 18 for the SOR grid).
+        let stride = m
+            .ports
+            .values()
+            .filter(|p| p.dir == Dir::Read)
+            .map(|p| p.offset.unsigned_abs())
+            .filter(|&o| o > 1)
+            .max()
+            .ok_or("2-D index space needs row-offset ports to infer the row stride")?;
+        vec![stride as i64, 1]
+    };
+    Ok(IndexSpace { dims, strides })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::{examples, parse_and_validate};
+
+    #[test]
+    fn fig7_single_lane() {
+        let m = parse_and_validate(&examples::fig7_pipe()).unwrap();
+        let d = elaborate(&m).unwrap();
+        assert_eq!(d.lanes.len(), 1);
+        let lane = &d.lanes[0];
+        assert_eq!(lane.func, "f2");
+        assert_eq!(lane.in_ports, vec!["main.a", "main.b", "main.c"]);
+        assert_eq!(lane.out_ports, vec!["main.y"]);
+        assert_eq!(d.index.len(), 1000);
+        assert_eq!(d.index.linear(0), 0);
+        assert_eq!(d.index.linear(999), 999);
+    }
+
+    #[test]
+    fn fig9_four_lanes_with_own_ports() {
+        let m = parse_and_validate(&examples::fig9_multi_pipe(4)).unwrap();
+        let d = elaborate(&m).unwrap();
+        assert_eq!(d.lanes.len(), 4);
+        assert_eq!(d.lanes[2].in_ports[0], "main.a_03");
+        assert_eq!(d.lanes[2].out_ports, vec!["main.y_03"]);
+        let (s0, e0) = d.lane_range(0, 4);
+        let (s3, e3) = d.lane_range(3, 4);
+        assert_eq!((s0, e0), (0, 250));
+        assert_eq!((s3, e3), (750, 1000));
+    }
+
+    #[test]
+    fn fig5_seq_lane() {
+        let m = parse_and_validate(&examples::fig5_seq()).unwrap();
+        let d = elaborate(&m).unwrap();
+        assert_eq!(d.lanes.len(), 1);
+        assert_eq!(d.lanes[0].func, "f1");
+        assert_eq!(d.lanes[0].kind, crate::tir::Kind::Seq);
+    }
+
+    #[test]
+    fn fig15_sor_index_space() {
+        let m = parse_and_validate(&examples::fig15_sor_default()).unwrap();
+        let d = elaborate(&m).unwrap();
+        assert_eq!(d.index.dims, vec![(1, 16), (1, 16)]);
+        assert_eq!(d.index.strides, vec![18, 1]);
+        assert_eq!(d.index.len(), 256);
+        // first interior cell: row 1, col 1 → 18 + 1
+        assert_eq!(d.index.linear(0), 19);
+        // last interior cell: row 16, col 16 → 16*18 + 16
+        assert_eq!(d.index.linear(255), 304);
+        assert_eq!(d.lanes[0].in_ports, vec!["main.n", "main.s", "main.w", "main.e", "main.c"]);
+        assert_eq!(d.lanes[0].out_ports, vec!["main.q"]);
+    }
+
+    #[test]
+    fn port_name_helpers() {
+        assert_eq!(lane_suffix("main.y_03"), Some(3));
+        assert_eq!(lane_suffix("main.y"), None);
+        assert_eq!(lane_suffix("main.y_123"), None);
+        assert_eq!(port_local_name("main.y_03"), "y");
+        assert_eq!(port_local_name("main.q"), "q");
+        assert_eq!(port_local_name("y"), "y");
+    }
+
+    #[test]
+    fn lane_range_covers_everything_without_overlap() {
+        let m = parse_and_validate(&examples::fig9_multi_pipe(3)).unwrap();
+        let d = elaborate(&m).unwrap();
+        let mut covered = 0;
+        for k in 0..3 {
+            let (s, e) = d.lane_range(k, 3);
+            assert!(s <= e);
+            covered += e - s;
+        }
+        assert_eq!(covered, 1000);
+    }
+}

@@ -1,0 +1,693 @@
+//! Functional execution of an elaborated design over a memory state —
+//! the value half of the simulator (the timing half is `engine.rs`).
+//!
+//! For every work-item, each lane gathers its input-port values through
+//! the port's stream offset (`mem[linear(item) + offset]` — the paper's
+//! offset streams), evaluates the leaf datapath (inlining calls, exactly
+//! like the validator's import semantics), and commits results to the
+//! output ports' memories. `repeat` passes chain through ping-pong
+//! copies (destination memory becomes next pass's source), which is how
+//! the FPGA wrapper re-arms a multi-pass kernel.
+
+use std::collections::BTreeMap;
+
+use super::elaborate::{port_local_name, Design};
+use super::value;
+use crate::tir::{Dir, Func, Module, Operand, Stmt};
+
+/// Memory state: contents per memory object (raw bit patterns).
+pub type MemState = BTreeMap<String, Vec<u64>>;
+
+/// Evaluate one function with positional arguments; returns the
+/// environment of all SSA values (own + imported from callees).
+pub fn eval_func(
+    m: &Module,
+    f: &Func,
+    args: &[u64],
+    port_vals: &BTreeMap<&str, u64>,
+) -> Result<BTreeMap<String, u64>, String> {
+    let mut env: BTreeMap<String, u64> = BTreeMap::new();
+    if !f.params.is_empty() {
+        if args.len() != f.params.len() {
+            return Err(format!("`@{}`: expected {} args, got {}", f.name, f.params.len(), args.len()));
+        }
+        for ((p, ty), v) in f.params.iter().zip(args) {
+            env.insert(p.clone(), v & ty.mask());
+        }
+    }
+    for s in &f.body {
+        match s {
+            Stmt::Instr(i) => {
+                let mut vals = [0u64; 3];
+                for (k, o) in i.operands.iter().enumerate() {
+                    vals[k] = resolve(m, o, &env, port_vals)?;
+                }
+                let c = if i.operands.len() > 2 { Some(vals[2]) } else { None };
+                let r = value::eval(i.op, i.ty, vals[0], vals[1], c);
+                env.insert(i.result.clone(), r);
+            }
+            Stmt::Call(c) => {
+                let callee = &m.funcs[&c.callee];
+                let mut argv = Vec::with_capacity(c.args.len());
+                for a in &c.args {
+                    argv.push(resolve(m, a, &env, port_vals)?);
+                }
+                let sub = eval_func(m, callee, &argv, port_vals)?;
+                env.extend(sub);
+            }
+        }
+    }
+    Ok(env)
+}
+
+/// Resolve an operand to a raw value.
+fn resolve(
+    m: &Module,
+    o: &Operand,
+    env: &BTreeMap<String, u64>,
+    port_vals: &BTreeMap<&str, u64>,
+) -> Result<u64, String> {
+    match o {
+        Operand::Local(n) => env.get(n).copied().ok_or_else(|| format!("undefined local `%{n}`")),
+        Operand::Imm(v) => Ok(*v as u64),
+        Operand::Global(g) => {
+            if let Some(c) = m.consts.get(g) {
+                return Ok((c.value as u64) & c.ty.mask());
+            }
+            if let Some(v) = port_vals.get(g.as_str()) {
+                return Ok(*v);
+            }
+            Err(format!("unresolved global `@{g}`"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compiled-lane executor (hot path)
+// ---------------------------------------------------------------------------
+//
+// `eval_func` above is the reference interpreter (name-resolved, used by
+// unit tests and kept as the semantics oracle). The pass runner below
+// *compiles* each lane's datapath once — inlining calls, resolving every
+// operand to a register slot or immediate, pre-resolving port reads to
+// (memory, offset, mask) triples — and then evaluates items over a flat
+// u64 register file with zero allocation per item. The §Perf pass in
+// EXPERIMENTS.md records the before/after (≈40× on the simple kernel).
+
+/// A compiled operand source.
+#[derive(Debug, Clone, Copy)]
+enum Src {
+    Reg(usize),
+    Imm(u64),
+}
+
+/// One compiled datapath operation; `op == None` is a masked copy
+/// (parameter-binding semantics of `eval_func`).
+#[derive(Debug, Clone)]
+struct CompiledOp {
+    op: Option<crate::tir::Op>,
+    ty: crate::tir::Ty,
+    a: Src,
+    b: Src,
+    c: Option<Src>,
+    dst: usize,
+}
+
+/// A pre-resolved input-port read: destination register, source memory
+/// index, stream offset, port mask.
+#[derive(Debug, Clone)]
+struct PortRead {
+    dst: usize,
+    mem: usize,
+    offset: i64,
+    mask: u64,
+}
+
+/// A pre-resolved output binding: source register, destination memory
+/// index, mask.
+#[derive(Debug, Clone)]
+struct PortWrite {
+    src: usize,
+    mem: usize,
+    mask: u64,
+}
+
+/// A lane compiled to straight-line register code.
+#[derive(Debug, Clone)]
+pub struct CompiledLane {
+    reads: Vec<PortRead>,
+    ops: Vec<CompiledOp>,
+    writes: Vec<PortWrite>,
+    n_regs: usize,
+}
+
+/// Memory name ↔ dense index mapping for a run.
+#[derive(Debug, Clone)]
+pub struct MemIndex {
+    names: Vec<String>,
+}
+
+impl MemIndex {
+    fn of(m: &Module) -> MemIndex {
+        MemIndex { names: m.mems.keys().cloned().collect() }
+    }
+    fn idx(&self, name: &str) -> Result<usize, String> {
+        self.names.iter().position(|n| n == name).ok_or_else(|| format!("unknown memory `{name}`"))
+    }
+}
+
+/// Compile one lane of a design.
+fn compile_lane(m: &Module, lane: &super::elaborate::Lane, mi: &MemIndex) -> Result<CompiledLane, String> {
+    let leaf = &m.funcs[&lane.func];
+    let mut c = CompiledLane { reads: Vec::new(), ops: Vec::new(), writes: Vec::new(), n_regs: 0 };
+    let mut alloc = |c: &mut CompiledLane| {
+        let r = c.n_regs;
+        c.n_regs += 1;
+        r
+    };
+
+    // Registers for every port this lane can see (positional ports +
+    // directly referenced globals).
+    let mut port_reg: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut ensure_port = |c: &mut CompiledLane,
+                           port_reg: &mut BTreeMap<&str, usize>,
+                           name: &'_ str|
+     -> Result<usize, String> {
+        // SAFETY of borrows: name comes from module-owned strings.
+        if let Some(&r) = port_reg.get(name) {
+            return Ok(r);
+        }
+        let port = m.ports.get(name).ok_or_else(|| format!("unknown port `@{name}`"))?;
+        let stream = &m.streams[&port.stream];
+        let r = {
+            let rr = c.n_regs;
+            c.n_regs += 1;
+            rr
+        };
+        c.reads.push(PortRead { dst: r, mem: mi.idx(&stream.mem)?, offset: port.offset, mask: port.ty.mask() });
+        Ok(r)
+    };
+
+    // Recursive inline compilation mirroring eval_func exactly.
+    fn compile_func<'m>(
+        m: &'m Module,
+        f: &'m Func,
+        args: &[Src],
+        env: &mut BTreeMap<&'m str, usize>,
+        c: &mut CompiledLane,
+        port_reg: &mut BTreeMap<&'m str, usize>,
+        ensure_port: &mut dyn FnMut(&mut CompiledLane, &mut BTreeMap<&'m str, usize>, &'m str) -> Result<usize, String>,
+        alloc: &mut dyn FnMut(&mut CompiledLane) -> usize,
+    ) -> Result<(), String> {
+        if !f.params.is_empty() {
+            if args.len() != f.params.len() {
+                return Err(format!("`@{}`: expected {} args, got {}", f.name, f.params.len(), args.len()));
+            }
+            for ((p, ty), &src) in f.params.iter().zip(args) {
+                // masked copy == eval_func's `v & ty.mask()`
+                let dst = alloc(c);
+                c.ops.push(CompiledOp { op: None, ty: *ty, a: src, b: Src::Imm(0), c: None, dst });
+                env.insert(p.as_str(), dst);
+            }
+        }
+        for s in &f.body {
+            match s {
+                Stmt::Instr(i) => {
+                    let a = resolve_operand(m, &i.operands[0], env, c, port_reg, ensure_port)?;
+                    let b = if i.operands.len() > 1 {
+                        resolve_operand(m, &i.operands[1], env, c, port_reg, ensure_port)?
+                    } else {
+                        Src::Imm(0)
+                    };
+                    let cc = if i.operands.len() > 2 {
+                        Some(resolve_operand(m, &i.operands[2], env, c, port_reg, ensure_port)?)
+                    } else {
+                        None
+                    };
+                    let dst = alloc(c);
+                    c.ops.push(CompiledOp { op: Some(i.op), ty: i.ty, a, b, c: cc, dst });
+                    env.insert(i.result.as_str(), dst);
+                }
+                Stmt::Call(call) => {
+                    let callee = &m.funcs[&call.callee];
+                    let mut argv = Vec::with_capacity(call.args.len());
+                    for a in &call.args {
+                        argv.push(resolve_operand(m, a, env, c, port_reg, ensure_port)?);
+                    }
+                    compile_func(m, callee, &argv, env, c, port_reg, ensure_port, alloc)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Operand resolution shared by instruction and call-arg paths.
+    fn resolve_operand<'m>(
+        m: &'m Module,
+        o: &'m Operand,
+        env: &mut BTreeMap<&'m str, usize>,
+        c: &mut CompiledLane,
+        port_reg: &mut BTreeMap<&'m str, usize>,
+        ensure_port: &mut dyn FnMut(&mut CompiledLane, &mut BTreeMap<&'m str, usize>, &'m str) -> Result<usize, String>,
+    ) -> Result<Src, String> {
+        match o {
+            Operand::Local(n) => env
+                .get(n.as_str())
+                .map(|&r| Src::Reg(r))
+                .ok_or_else(|| format!("undefined local `%{n}`")),
+            Operand::Imm(v) => Ok(Src::Imm(*v as u64)),
+            Operand::Global(g) => {
+                if let Some(cst) = m.consts.get(g) {
+                    return Ok(Src::Imm((cst.value as u64) & cst.ty.mask()));
+                }
+                ensure_port(c, port_reg, g.as_str()).map(Src::Reg)
+            }
+        }
+    }
+    // Positional argument sources for the leaf call.
+    let mut env: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut argv: Vec<Src> = Vec::new();
+    for pname in &lane.in_ports {
+        if let Some(cst) = m.consts.get(pname) {
+            argv.push(Src::Imm((cst.value as u64) & cst.ty.mask()));
+        } else {
+            argv.push(Src::Reg(ensure_port(&mut c, &mut port_reg, pname.as_str())?));
+        }
+    }
+    let argv = if leaf.params.is_empty() { Vec::new() } else { argv };
+    compile_func(m, leaf, &argv, &mut env, &mut c, &mut port_reg, &mut ensure_port, &mut alloc)?;
+
+    // Output bindings.
+    for out in &lane.out_ports {
+        let port = &m.ports[out];
+        let local = port_local_name(out);
+        let &src = env
+            .get(local)
+            .ok_or_else(|| format!("lane `@{}` computes no `%{local}` for port `@{out}`", lane.func))?;
+        let stream = &m.streams[&port.stream];
+        c.writes.push(PortWrite { src, mem: mi.idx(&stream.mem)?, mask: port.ty.mask() });
+    }
+    Ok(c)
+}
+
+impl CompiledLane {
+    /// Evaluate one work-item at linear index `lin` against the memory
+    /// buffers, appending writes to `out`.
+    #[inline]
+    fn eval_item(
+        &self,
+        regs: &mut [u64],
+        bufs: &[Vec<u64>],
+        lin: u64,
+        out: &mut Vec<(usize, u64, u64)>,
+    ) -> Result<(), String> {
+        for r in &self.reads {
+            let idx = lin as i64 + r.offset;
+            let buf = &bufs[r.mem];
+            if idx < 0 || idx as usize >= buf.len() {
+                return Err(format!(
+                    "port read out of bounds: index {idx} (mem #{} has {} elems)",
+                    r.mem,
+                    buf.len()
+                ));
+            }
+            regs[r.dst] = buf[idx as usize] & r.mask;
+        }
+        for op in &self.ops {
+            let a = match op.a {
+                Src::Reg(r) => regs[r],
+                Src::Imm(v) => v,
+            };
+            regs[op.dst] = match op.op {
+                None => a & op.ty.mask(),
+                Some(o) => {
+                    let b = match op.b {
+                        Src::Reg(r) => regs[r],
+                        Src::Imm(v) => v,
+                    };
+                    let cc = op.c.map(|s| match s {
+                        Src::Reg(r) => regs[r],
+                        Src::Imm(v) => v,
+                    });
+                    value::eval(o, op.ty, a, b, cc)
+                }
+            };
+        }
+        for w in &self.writes {
+            out.push((w.mem, lin, regs[w.src] & w.mask));
+        }
+        Ok(())
+    }
+}
+
+/// Run one full kernel pass: every lane over its item range, committing
+/// ostream values into the destination memories.
+pub fn run_pass(m: &Module, d: &Design, mems: &mut MemState) -> Result<(), String> {
+    let mi = MemIndex::of(m);
+    let compiled: Vec<CompiledLane> =
+        d.lanes.iter().map(|l| compile_lane(m, l, &mi)).collect::<Result<_, _>>()?;
+    run_pass_compiled(d, &mi, &compiled, mems)
+}
+
+/// Run one pass with pre-compiled lanes (the multi-pass hot path).
+fn run_pass_compiled(
+    d: &Design,
+    mi: &MemIndex,
+    compiled: &[CompiledLane],
+    mems: &mut MemState,
+) -> Result<(), String> {
+    // Move buffers into dense indexed form.
+    let mut bufs: Vec<Vec<u64>> = Vec::with_capacity(mi.names.len());
+    for name in &mi.names {
+        bufs.push(
+            mems.remove(name).ok_or_else(|| format!("memory `@{name}` not initialised"))?,
+        );
+    }
+    let nlanes = d.lanes.len();
+    let mut writes: Vec<(usize, u64, u64)> = Vec::new();
+    let mut regs = vec![0u64; compiled.iter().map(|c| c.n_regs).max().unwrap_or(0)];
+    let mut result = Ok(());
+    'outer: for (k, lane) in compiled.iter().enumerate() {
+        let (start, end) = d.lane_range(k, nlanes);
+        for item in start..end {
+            let lin = d.index.linear(item);
+            if let Err(e) = lane.eval_item(&mut regs, &bufs, lin, &mut writes) {
+                result = Err(format!("lane {k}, item {item}: {e}"));
+                break 'outer;
+            }
+        }
+    }
+    if result.is_ok() {
+        for (mem, idx, v) in writes {
+            let buf = &mut bufs[mem];
+            if idx as usize >= buf.len() {
+                result = Err(format!("write out of bounds: mem #{mem}[{idx}]"));
+                break;
+            }
+            buf[idx as usize] = v;
+        }
+    }
+    // Restore buffers regardless of outcome.
+    for (name, buf) in mi.names.iter().zip(bufs) {
+        mems.insert(name.clone(), buf);
+    }
+    result
+}
+
+/// Reference (interpreted) pass runner — the semantics oracle the
+/// compiled path is property-tested against.
+pub fn run_pass_interpreted(m: &Module, d: &Design, mems: &mut MemState) -> Result<(), String> {
+    let nlanes = d.lanes.len();
+    // Collect writes first (streaming semantics: all reads of a pass see
+    // the pass's input state — the paper's Jacobi-style offset streams).
+    let mut writes: Vec<(String, u64, u64)> = Vec::new(); // (mem, idx, value)
+    for (k, lane) in d.lanes.iter().enumerate() {
+        let (start, end) = d.lane_range(k, nlanes);
+        let leaf = &m.funcs[&lane.func];
+        for item in start..end {
+            let lin = d.index.linear(item);
+            // Gather input-port values through stream offsets.
+            let mut port_vals: BTreeMap<&str, u64> = BTreeMap::new();
+            let mut args: Vec<u64> = Vec::with_capacity(lane.in_ports.len());
+            for pname in &lane.in_ports {
+                if let Some(c) = m.consts.get(pname) {
+                    // const passed positionally as an argument
+                    let v = (c.value as u64) & c.ty.mask();
+                    port_vals.insert(pname.as_str(), v);
+                    args.push(v);
+                    continue;
+                }
+                let port = &m.ports[pname];
+                let stream = &m.streams[&port.stream];
+                let mem =
+                    mems.get(&stream.mem).ok_or_else(|| format!("memory `@{}` not initialised", stream.mem))?;
+                let idx = lin as i64 + port.offset;
+                if idx < 0 || idx as usize >= mem.len() {
+                    return Err(format!(
+                        "port `@{pname}` reads out of bounds: item {item} → index {idx} (mem `{}` has {} elems)",
+                        stream.mem,
+                        mem.len()
+                    ));
+                }
+                let v = mem[idx as usize] & port.ty.mask();
+                port_vals.insert(pname.as_str(), v);
+                args.push(v);
+            }
+            // Also expose every global port (leaves may reference
+            // `@main.x` directly instead of taking parameters).
+            for p in m.ports.values() {
+                if p.dir == Dir::Read && !port_vals.contains_key(p.name.as_str()) {
+                    let stream = &m.streams[&p.stream];
+                    if let Some(mem) = mems.get(&stream.mem) {
+                        let idx = lin as i64 + p.offset;
+                        if idx >= 0 && (idx as usize) < mem.len() {
+                            port_vals.insert(p.name.as_str(), mem[idx as usize] & p.ty.mask());
+                        }
+                    }
+                }
+            }
+            let argv = if leaf.params.is_empty() { Vec::new() } else { args };
+            let env = eval_func(m, leaf, &argv, &port_vals)?;
+            for out in &lane.out_ports {
+                let port = &m.ports[out];
+                let local = port_local_name(out);
+                let v = env
+                    .get(local)
+                    .copied()
+                    .ok_or_else(|| format!("lane `@{}` computes no `%{local}` for port `@{out}`", lane.func))?;
+                let stream = &m.streams[&port.stream];
+                writes.push((stream.mem.clone(), lin, v & port.ty.mask()));
+            }
+        }
+    }
+    for (mem, idx, v) in writes {
+        let buf = mems.get_mut(&mem).ok_or_else(|| format!("memory `@{mem}` not initialised"))?;
+        if idx as usize >= buf.len() {
+            return Err(format!("write out of bounds: `@{mem}`[{idx}]"));
+        }
+        buf[idx as usize] = v;
+    }
+    Ok(())
+}
+
+/// Run all `repeat` passes with ping-pong chaining: after each pass but
+/// the last, destination memories are copied back over their paired
+/// source memories (pairing: the lane reads stream X ← mem A and writes
+/// stream Y → mem B ⇒ B feeds A for the next pass).
+pub fn run_all_passes(m: &Module, d: &Design, mems: &mut MemState) -> Result<(), String> {
+    let repeat = d.info.repeat.max(1);
+    let pairs = pingpong_pairs(m);
+    // Compile lanes once; reuse across all chained passes.
+    let mi = MemIndex::of(m);
+    let compiled: Vec<CompiledLane> =
+        d.lanes.iter().map(|l| compile_lane(m, l, &mi)).collect::<Result<_, _>>()?;
+    for pass in 0..repeat {
+        run_pass_compiled(d, &mi, &compiled, mems)?;
+        if pass + 1 < repeat {
+            for (dst, src) in &pairs {
+                let data = mems.get(dst).cloned().ok_or_else(|| format!("memory `@{dst}` missing"))?;
+                mems.insert(src.clone(), data);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// (dest-mem, source-mem) pairs for multi-pass chaining. Only pairs with
+/// matching element counts chain (the SOR p/q ping-pong); a 1-D map that
+/// writes a separate output array has no chaining to do when its sizes
+/// differ — and chaining an equal-sized map output is harmless for
+/// repeat = 1 (the common case).
+pub fn pingpong_pairs(m: &Module) -> Vec<(String, String)> {
+    let mut dsts: Vec<&str> = Vec::new();
+    let mut srcs: Vec<&str> = Vec::new();
+    for s in m.streams.values() {
+        match s.dir {
+            Dir::Write => {
+                if !dsts.contains(&s.mem.as_str()) {
+                    dsts.push(&s.mem);
+                }
+            }
+            Dir::Read => {
+                if !srcs.contains(&s.mem.as_str()) {
+                    srcs.push(&s.mem);
+                }
+            }
+        }
+    }
+    let mut pairs = Vec::new();
+    for d in &dsts {
+        for s in &srcs {
+            let (Some(md), Some(ms)) = (m.mems.get(*d), m.mems.get(*s)) else { continue };
+            if md.elems == ms.elems && md.ty == ms.ty {
+                pairs.push((d.to_string(), s.to_string()));
+            }
+        }
+    }
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::elaborate::elaborate;
+    use crate::tir::{examples, parse_and_validate};
+    use crate::util::Prng;
+
+    const MASK18: u64 = (1 << 18) - 1;
+
+    fn simple_golden(a: u64, b: u64, c: u64, k: u64) -> u64 {
+        let t1 = (a + b) & MASK18;
+        let t2 = (c + c) & MASK18;
+        let t3 = (t1 * t2) & MASK18;
+        (t3 + k) & MASK18
+    }
+
+    fn simple_mems(seed: u64) -> MemState {
+        let mut rng = Prng::new(seed);
+        let mut mems = MemState::new();
+        for name in ["mem_a", "mem_b", "mem_c"] {
+            mems.insert(name.into(), rng.vec_ui18(1000).into_iter().map(|v| v as u64).collect());
+        }
+        mems.insert("mem_y".into(), vec![0; 1000]);
+        mems
+    }
+
+    #[test]
+    fn fig7_matches_golden_formula() {
+        let m = parse_and_validate(&examples::fig7_pipe()).unwrap();
+        let d = elaborate(&m).unwrap();
+        let mut mems = simple_mems(42);
+        let (a, b, c) = (mems["mem_a"].clone(), mems["mem_b"].clone(), mems["mem_c"].clone());
+        run_pass(&m, &d, &mut mems).unwrap();
+        for i in 0..1000 {
+            assert_eq!(mems["mem_y"][i], simple_golden(a[i], b[i], c[i], 42), "item {i}");
+        }
+    }
+
+    #[test]
+    fn all_simple_configs_agree() {
+        // The core DSE invariant: every design-space point computes the
+        // same function.
+        let mut outputs = Vec::new();
+        for src in [
+            examples::fig5_seq(),
+            examples::fig7_pipe(),
+            examples::fig9_multi_pipe(4),
+            examples::fig11_vector_seq(4),
+        ] {
+            let m = parse_and_validate(&src).unwrap();
+            let d = elaborate(&m).unwrap();
+            let mut mems = simple_mems(7);
+            run_pass(&m, &d, &mut mems).unwrap();
+            outputs.push(mems["mem_y"].clone());
+        }
+        for o in &outputs[1..] {
+            assert_eq!(o, &outputs[0]);
+        }
+    }
+
+    /// Rust-side SOR reference (mirrors ref.py exactly).
+    fn sor_ref_pass(p: &[u64], rows: usize, cols: usize) -> Vec<u64> {
+        let mut q = p.to_vec();
+        for i in 1..rows - 1 {
+            for j in 1..cols - 1 {
+                let idx = i * cols + j;
+                let sum = p[idx - cols] + p[idx + cols] + p[idx - 1] + p[idx + 1];
+                q[idx] = (3840 * sum + 1024 * p[idx]) >> 14;
+            }
+        }
+        q
+    }
+
+    fn sor_mems(seed: u64) -> MemState {
+        let mut rng = Prng::new(seed);
+        let p: Vec<u64> = rng.vec_ui18(18 * 18).into_iter().map(|v| v as u64).collect();
+        let mut mems = MemState::new();
+        mems.insert("mem_q".into(), p.clone()); // boundary passthrough
+        mems.insert("mem_p".into(), p);
+        mems
+    }
+
+    #[test]
+    fn fig15_single_pass_matches_reference() {
+        let m = parse_and_validate(&examples::fig15_sor_pipe(18, 18, 1)).unwrap();
+        let d = elaborate(&m).unwrap();
+        let mut mems = sor_mems(3);
+        let p0 = mems["mem_p"].clone();
+        run_pass(&m, &d, &mut mems).unwrap();
+        assert_eq!(mems["mem_q"], sor_ref_pass(&p0, 18, 18));
+    }
+
+    #[test]
+    fn fig15_repeat_chains_passes() {
+        let m = parse_and_validate(&examples::fig15_sor_pipe(18, 18, 5)).unwrap();
+        let d = elaborate(&m).unwrap();
+        let mut mems = sor_mems(11);
+        let mut want = mems["mem_p"].clone();
+        for _ in 0..5 {
+            want = sor_ref_pass(&want, 18, 18);
+        }
+        run_all_passes(&m, &d, &mut mems).unwrap();
+        assert_eq!(mems["mem_q"], want);
+    }
+
+    #[test]
+    fn sor_converges_toward_hot_boundary() {
+        let m = parse_and_validate(&examples::fig15_sor_pipe(18, 18, 40)).unwrap();
+        let d = elaborate(&m).unwrap();
+        let mut p = vec![0u64; 18 * 18];
+        for i in 0..18 {
+            p[i] = MASK18; // hot north edge
+        }
+        let mut mems = MemState::new();
+        mems.insert("mem_q".into(), p.clone());
+        mems.insert("mem_p".into(), p);
+        run_all_passes(&m, &d, &mut mems).unwrap();
+        let q = &mems["mem_q"];
+        // heat has diffused into the first interior row
+        assert!(q[18 + 5] > 0);
+        // monotone decay away from the hot edge
+        assert!(q[1 * 18 + 5] >= q[8 * 18 + 5]);
+    }
+
+    #[test]
+    fn compiled_path_equals_interpreter_on_all_listings() {
+        // Differential test: the zero-allocation compiled executor must
+        // match the name-resolved reference interpreter bit-for-bit.
+        for (name, src) in [
+            ("fig5", examples::fig5_seq()),
+            ("fig7", examples::fig7_pipe()),
+            ("fig9", examples::fig9_multi_pipe(4)),
+            ("fig11", examples::fig11_vector_seq(4)),
+            ("fig15", examples::fig15_sor_pipe(18, 18, 1)),
+        ] {
+            let m = parse_and_validate(&src).unwrap();
+            let d = elaborate(&m).unwrap();
+            let mut fast = if name == "fig15" { sor_mems(77) } else { simple_mems(77) };
+            let mut slow = fast.clone();
+            run_pass(&m, &d, &mut fast).unwrap();
+            run_pass_interpreted(&m, &d, &mut slow).unwrap();
+            assert_eq!(fast, slow, "{name}: compiled != interpreted");
+        }
+    }
+
+    #[test]
+    fn pingpong_pairs_found_for_sor() {
+        let m = parse_and_validate(&examples::fig15_sor_default()).unwrap();
+        assert_eq!(pingpong_pairs(&m), vec![("mem_q".to_string(), "mem_p".to_string())]);
+    }
+
+    #[test]
+    fn out_of_bounds_offset_is_reported() {
+        // Counters sweeping the full grid make the ±row taps run off the
+        // array — the simulator must catch it, not wrap silently.
+        let src = examples::fig15_sor_pipe(18, 18, 1)
+            .replace("counter(1, 16)", "counter(0, 17)");
+        let m = parse_and_validate(&src).unwrap();
+        let d = elaborate(&m).unwrap();
+        let mut mems = sor_mems(1);
+        let e = run_pass(&m, &d, &mut mems).unwrap_err();
+        assert!(e.contains("out of bounds"), "{e}");
+    }
+}

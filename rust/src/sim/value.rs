@@ -1,0 +1,166 @@
+//! Bit-accurate scalar evaluation for the dataflow simulator.
+//!
+//! Values are raw bit patterns (`u64`, width ≤ 64). Every op computes
+//! exactly in `i128` on the zero/sign-extended operands, then wraps the
+//! result into the instruction's width — the same semantics the JAX
+//! golden models implement (uint32 wraparound for the simple kernel,
+//! exact int64 then shift for the SOR kernel), which is what makes the
+//! simulator ⇄ PJRT golden comparison meaningful.
+
+use crate::tir::{Op, Ty};
+
+/// Interpret a raw bit pattern as a numeric value of the given type.
+pub fn to_signed(ty: Ty, raw: u64) -> i128 {
+    let bits = ty.bits();
+    let masked = raw & ty.mask();
+    if ty.is_signed() && bits < 64 {
+        let sign = 1u64 << (bits - 1);
+        if masked & sign != 0 {
+            return masked as i128 - (1i128 << bits);
+        }
+    } else if ty.is_signed() && bits == 64 {
+        return raw as i64 as i128;
+    }
+    masked as i128
+}
+
+/// Wrap an exact value into the raw representation of a type.
+pub fn wrap(ty: Ty, v: i128) -> u64 {
+    let bits = ty.bits();
+    let m = if bits >= 64 { u128::MAX } else { (1u128 << bits) - 1 };
+    ((v as u128) & m) as u64
+}
+
+/// Evaluate one op at a result type. Operands are raw bit patterns that
+/// were produced at (possibly narrower) widths; by the validator's
+/// widening rule they are in range for `ty`, so extending them through
+/// [`to_signed`] at `ty` is exact.
+pub fn eval(op: Op, ty: Ty, a: u64, b: u64, c: Option<u64>) -> u64 {
+    let x = to_signed(ty, a);
+    let y = to_signed(ty, b);
+    let exact: i128 = match op {
+        Op::Add => x + y,
+        Op::Sub => x - y,
+        Op::Mul => x * y,
+        Op::Div => {
+            if y == 0 {
+                // hardware divider: x/0 yields all-ones (Altera lpm_divide
+                // leaves it undefined; all-ones is the conventional probe)
+                return ty.mask();
+            }
+            x / y
+        }
+        Op::Shl => x << (y.clamp(0, 127) as u32),
+        Op::Lshr => ((a & ty.mask()) >> (y.clamp(0, 63) as u32)) as i128,
+        Op::Ashr => x >> (y.clamp(0, 127) as u32),
+        Op::And => x & y,
+        Op::Or => x | y,
+        Op::Xor => x ^ y,
+        Op::Min => x.min(y),
+        Op::Max => x.max(y),
+        Op::Mac => {
+            let z = to_signed(ty, c.expect("mac needs 3 operands"));
+            x * y + z
+        }
+    };
+    wrap(ty, exact)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn u(w: u8) -> Ty {
+        Ty::UInt(w)
+    }
+    fn s(w: u8) -> Ty {
+        Ty::SInt(w)
+    }
+
+    #[test]
+    fn ui18_add_wraps() {
+        let m = (1u64 << 18) - 1;
+        assert_eq!(eval(Op::Add, u(18), m, 1, None), 0);
+        assert_eq!(eval(Op::Add, u(18), m, m, None), m - 1);
+    }
+
+    #[test]
+    fn ui18_mul_wraps_like_golden_model() {
+        // (t1*t2) mod 2^18 — same as the uint32-wraparound + mask path in
+        // ref.py (2^18 | 2^32 makes both equal).
+        let t1 = 0x3FFFFu64;
+        let t2 = 0x3FFFEu64;
+        let exact = (t1 as u128 * t2 as u128) & 0x3FFFF;
+        assert_eq!(eval(Op::Mul, u(18), t1, t2, None), exact as u64);
+    }
+
+    #[test]
+    fn wide_mul_is_exact() {
+        // The SOR path: ui32 %4 = mul %3(ui20), 3840 — no wrap occurs.
+        let v = (1u64 << 20) - 1;
+        assert_eq!(eval(Op::Mul, u(32), v, 3840, None), v * 3840 & 0xFFFF_FFFF);
+        assert_eq!(eval(Op::Mul, u(33), v, 3840, None), v * 3840);
+    }
+
+    #[test]
+    fn lshr_is_logical_at_width() {
+        // ui33 %q = lshr %6, 14
+        let v = (3840u64 * 4 * 0x3FFFF) + 1024 * 0x3FFFF;
+        assert_eq!(eval(Op::Lshr, u(33), v, 14, None), v >> 14);
+    }
+
+    #[test]
+    fn signed_sub_goes_negative_and_wraps() {
+        let r = eval(Op::Sub, s(18), 0, 1, None);
+        assert_eq!(r, (1 << 18) - 1); // -1 in 18-bit two's complement
+        assert_eq!(to_signed(s(18), r), -1);
+    }
+
+    #[test]
+    fn ashr_sign_extends() {
+        let neg8 = wrap(s(18), -8);
+        assert_eq!(to_signed(s(18), eval(Op::Ashr, s(18), neg8, 2, None)), -2);
+        // logical shift of the same pattern stays positive
+        let l = eval(Op::Lshr, u(18), neg8, 2, None);
+        assert_eq!(l, ((1u64 << 18) - 8) >> 2);
+    }
+
+    #[test]
+    fn div_by_zero_is_all_ones() {
+        assert_eq!(eval(Op::Div, u(18), 5, 0, None), (1 << 18) - 1);
+    }
+
+    #[test]
+    fn mac_fused() {
+        assert_eq!(eval(Op::Mac, u(18), 3, 5, Some(7)), 22);
+    }
+
+    #[test]
+    fn min_max_signed() {
+        let a = wrap(s(18), -5);
+        let b = wrap(s(18), 3);
+        assert_eq!(to_signed(s(18), eval(Op::Min, s(18), a, b, None)), -5);
+        assert_eq!(to_signed(s(18), eval(Op::Max, s(18), a, b, None)), 3);
+    }
+
+    #[test]
+    fn wrap_roundtrip_64bit() {
+        assert_eq!(wrap(u(64), -1), u64::MAX);
+        assert_eq!(to_signed(s(64), u64::MAX), -1);
+    }
+
+    #[test]
+    fn sor_update_matches_reference_semantics() {
+        // One full SOR cell update through TIR ops == ref.py formula.
+        let (n, s_, w, e, c) = (100u64, 200, 300, 400, 500);
+        let t1 = eval(Op::Add, u(19), n, s_, None);
+        let t2 = eval(Op::Add, u(19), w, e, None);
+        let t3 = eval(Op::Add, u(20), t1, t2, None);
+        let t4 = eval(Op::Mul, u(32), t3, 3840, None);
+        let t5 = eval(Op::Mul, u(28), c, 1024, None);
+        let t6 = eval(Op::Add, u(33), t4, t5, None);
+        let q = eval(Op::Lshr, u(33), t6, 14, None);
+        let want = (3840u64 * (100 + 200 + 300 + 400) + 1024 * 500) >> 14;
+        assert_eq!(q, want);
+    }
+}

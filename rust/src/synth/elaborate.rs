@@ -1,0 +1,393 @@
+//! TIR → primitive netlist elaboration: the synthesis model's own walk,
+//! deliberately finer-grained than (and independent from) the
+//! estimator's accumulation, so Tables 1/2's E-vs-A comparison compares
+//! two different computations:
+//!
+//! * balancing registers on operands that skip pipeline stages
+//!   (the estimator's closed-form skips them — its REG figure
+//!   under-reads, exactly like the paper's 534(E) vs 575(A));
+//! * FIFO guard words and word-rounded instruction stores in BRAM;
+//! * heavier port sync and lane control FSMs than the estimator's
+//!   idealised constants (fitter replication + encoding overhead);
+//! * a slightly costlier distribution crossbar (placed netlists never
+//!   hit the analytic minimum);
+//! * per-stage logic-level/carry tracking feeding the timing model.
+
+use std::collections::BTreeMap;
+
+use super::netlist::{pack_aluts, Netlist};
+use crate::device::Device;
+use crate::estimator::accumulate::const_operand;
+use crate::estimator::cost_db::CostDb;
+use crate::estimator::structure::pipe_schedule;
+use crate::estimator::Resources;
+use crate::tir::{Dir, Func, Kind, Module, Op, Operand, Stmt};
+
+/// Port sync logic (valid/ready + address-generator share), raw LUTs.
+const PORT_LUT: u64 = 6;
+/// Port sync registers beyond the data word (valid + parity bits).
+const PORT_EXTRA_REG: u64 = 2;
+/// Lane control FSM after synthesis (one-hot encoding).
+const LANE_CTRL_LUT: u64 = 12;
+const LANE_CTRL_REG: u64 = 31;
+/// Seq-PE sequencer after synthesis.
+const SEQ_FSM_LUT: u64 = 38;
+const SEQ_FSM_REG: u64 = 26;
+/// Instruction-store word, rounded to the M9K's 36-bit physical word.
+const SEQ_INSTR_WORD_BITS: u64 = 36;
+/// FIFO guard words (full/empty hysteresis) per stream buffer.
+const FIFO_GUARD_WORDS: u64 = 2;
+/// Distribution-crossbar coefficient (cf. the estimator's 31).
+const XBAR_LUT_COEFF: u64 = 36;
+const XBAR_REG_COEFF: u64 = 18;
+
+/// Synthesis result: packed resources + the netlist facts for timing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthNetlist {
+    /// Packed resource vector (the Tables' "(A)" columns).
+    pub resources: Resources,
+    /// Raw netlist + critical-path facts.
+    pub netlist: Netlist,
+}
+
+/// Elaborate a validated module to a primitive netlist.
+pub fn elaborate(m: &Module, dev: &Device) -> Result<SynthNetlist, String> {
+    let db = CostDb::default(); // per-op primitive counts are shared ground truth
+    let mult = crate::estimator::accumulate::multiplicity(m)?;
+    let mut n = Netlist::default();
+
+    for f in m.funcs.values() {
+        let k = *mult.get(f.name.as_str()).unwrap_or(&0);
+        if k == 0 {
+            continue;
+        }
+        elaborate_func(m, f, &db, k, &mut n)?;
+    }
+
+    // Ports.
+    for p in m.ports.values() {
+        n.luts += PORT_LUT;
+        n.regs += p.ty.bits() as u64 + PORT_EXTRA_REG;
+    }
+
+    // Lane control: one FSM per leaf core instantiation.
+    let lanes = crate::sim::elaborate(m).map(|d| d.lanes.len() as u64).unwrap_or(1);
+    n.luts += LANE_CTRL_LUT * lanes;
+    n.regs += LANE_CTRL_REG * lanes;
+
+    // Memory subsystem.
+    memory_subsystem(m, dev, &mut n);
+    n.stencil = m.ports.values().any(|p| p.offset != 0);
+
+    let alut = pack_aluts(n.luts);
+    let resources = Resources::new(alut, n.regs, n.bram_bits, n.dsps);
+    Ok(SynthNetlist { resources, netlist: n })
+}
+
+/// Per-instruction logic levels and carry-chain bits (for stage timing).
+fn instr_levels(m: &Module, op: Op, bits: u64, operands: &[Operand]) -> (u64, u64) {
+    match op {
+        Op::Add | Op::Sub => (1, bits),
+        Op::Mul | Op::Mac => match const_operand(m, op, operands) {
+            Some(c) => {
+                let pop = c.unsigned_abs().count_ones() as u64;
+                if pop <= 1 {
+                    (0, 0)
+                } else {
+                    // shift-add tree: log2(pop) adder levels of full width
+                    (64 - (pop - 1).leading_zeros() as u64, bits)
+                }
+            }
+            None => (1, 0), // DSP: one level, no fabric carry
+        },
+        Op::Div => (bits / 2, bits), // iterative array divider unrolled
+        Op::Shl | Op::Lshr | Op::Ashr => match const_operand(m, op, operands) {
+            Some(_) => (0, 0),
+            None => (bits.next_power_of_two().trailing_zeros() as u64, 0),
+        },
+        Op::And | Op::Or | Op::Xor => (1, 0),
+        Op::Min | Op::Max => (2, bits),
+    }
+}
+
+fn elaborate_func(m: &Module, f: &Func, db: &CostDb, k: u64, n: &mut Netlist) -> Result<(), String> {
+    // Datapath primitives (shared ground truth with the estimator), at
+    // netlist granularity: LUTs stay raw here, packing happens at the end.
+    let datapath = |n: &mut Netlist, i: &crate::tir::Instr| {
+        let r = db.instr_cost(i.op, i.ty, const_operand(m, i.op, &i.operands));
+        n.luts += r.alut;
+        n.dsps += r.dsp;
+        n.bram_bits += r.bram_bits;
+    };
+
+    match f.kind {
+        Kind::Pipe => {
+            let (depth, stage) = pipe_schedule(m, f).map_err(|e| e.to_string())?;
+            let _ = depth;
+            // Group instrs (own + inlined comb/par children) per stage for
+            // level tracking; add stage + balancing registers.
+            let mut stage_levels: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+            let mut note = |st: u64, lv: (u64, u64)| {
+                let e = stage_levels.entry(st).or_insert((0, 0));
+                e.0 = e.0.max(lv.0);
+                e.1 = e.1.max(lv.1);
+            };
+            for s in &f.body {
+                match s {
+                    Stmt::Instr(i) => {
+                        datapath(n, i);
+                        let st = stage[i.result.as_str()];
+                        note(st, instr_levels(m, i.op, i.ty.bits() as u64, &i.operands));
+                        // stage register
+                        n.regs += k * i.ty.bits() as u64;
+                        // balancing registers for stage-skipping operands
+                        for o in &i.operands {
+                            if let Operand::Local(name) = o {
+                                if let Some(&def) = stage.get(name.as_str()) {
+                                    if st > def + 1 {
+                                        let w = local_width(m, f, name).unwrap_or(i.ty.bits()) as u64;
+                                        n.regs += k * (st - def - 1) * w;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Stmt::Call(c) => {
+                        let callee = &m.funcs[&c.callee];
+                        if matches!(callee.kind, Kind::Par | Kind::Comb) {
+                            // inlined stage: chained comb levels
+                            let (lv, carry) = comb_levels(m, callee);
+                            // register the stage outputs
+                            for st in &callee.body {
+                                if let Stmt::Instr(ci) = st {
+                                    n.regs += k * ci.ty.bits() as u64;
+                                    note(stage[ci.result.as_str()], (lv, carry));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            for (lv, carry) in stage_levels.values() {
+                n.observe_stage(*lv, *carry);
+            }
+        }
+        Kind::Par | Kind::Comb => {
+            for i in m.instrs_of(f) {
+                datapath(n, i);
+            }
+            // levels observed by the pipe parent (comb inside pipe) or as
+            // a standalone single-cycle core:
+            let (lv, carry) = comb_levels(m, f);
+            n.observe_stage(lv, carry);
+        }
+        Kind::Seq => {
+            // Shared FUs: same grouping rule as the estimator, but the
+            // synthesis netlist additionally pays operand multiplexers in
+            // front of each shared FU (2 LUT/bit per extra user).
+            let mut fu: BTreeMap<(Op, u32, bool), (Resources, u64)> = BTreeMap::new();
+            let mut ni = 0u64;
+            let mut regfile_bits = 0u64;
+            for i in m.instrs_of(f) {
+                let c = const_operand(m, i.op, &i.operands);
+                let cost = db.instr_cost(i.op, i.ty, c);
+                let e = fu.entry((i.op, i.ty.bits(), c.is_some())).or_insert((Resources::ZERO, 0));
+                if cost.alut + cost.dsp * 100 > e.0.alut + e.0.dsp * 100 {
+                    e.0 = cost;
+                }
+                e.1 += 1;
+                ni += 1;
+                regfile_bits += i.ty.bits() as u64;
+                n.observe_stage(instr_levels(m, i.op, i.ty.bits() as u64, &i.operands).0 + 1, i.ty.bits() as u64);
+            }
+            for ((_, bits, _), (cost, users)) in &fu {
+                n.luts += k * cost.alut;
+                n.dsps += k * cost.dsp;
+                if *users > 1 {
+                    n.luts += k * 2 * (*bits as u64) * (users - 1); // operand muxes
+                }
+            }
+            if ni > 0 {
+                n.luts += k * SEQ_FSM_LUT;
+                n.regs += k * (SEQ_FSM_REG + regfile_bits);
+                n.bram_bits += k * ni * SEQ_INSTR_WORD_BITS;
+            }
+        }
+    }
+    // note: datapath LUTs above were added once, multiply the remainder
+    if k > 1 {
+        // datapath primitives were added per instruction once; scale them.
+        // (Registers/mux/fsm terms already folded k in where they occur.)
+        let extra = k - 1;
+        let mut dp = Netlist::default();
+        for i in m.instrs_of(f) {
+            let r = db.instr_cost(i.op, i.ty, const_operand(m, i.op, &i.operands));
+            dp.luts += r.alut;
+            dp.dsps += r.dsp;
+            dp.bram_bits += r.bram_bits;
+        }
+        n.luts += extra * dp.luts;
+        n.dsps += extra * dp.dsps;
+        n.bram_bits += extra * dp.bram_bits;
+    }
+    Ok(())
+}
+
+/// Dependency-chain logic depth of a comb block (all instrs in one
+/// cycle): levels accumulate along the chain, carry is the widest op.
+fn comb_levels(m: &Module, f: &Func) -> (u64, u64) {
+    let mut depth: BTreeMap<&str, u64> = BTreeMap::new();
+    let mut max_levels = 0u64;
+    let mut max_carry = 0u64;
+    for i in m.instrs_of(f) {
+        let (lv, carry) = instr_levels(m, i.op, i.ty.bits() as u64, &i.operands);
+        let base = i
+            .operands
+            .iter()
+            .filter_map(|o| match o {
+                Operand::Local(x) => depth.get(x.as_str()).copied(),
+                _ => Some(0),
+            })
+            .max()
+            .unwrap_or(0);
+        let d = base + lv;
+        depth.insert(i.result.as_str(), d);
+        max_levels = max_levels.max(d);
+        max_carry = max_carry.max(carry);
+    }
+    (max_levels.max(1), max_carry)
+}
+
+/// Width of a local value inside a function (param or instr result).
+fn local_width(m: &Module, f: &Func, name: &str) -> Option<u32> {
+    for (p, ty) in &f.params {
+        if p == name {
+            return Some(ty.bits());
+        }
+    }
+    m.instrs_of(f).find(|i| i.result == name).map(|i| i.ty.bits())
+}
+
+/// Memory subsystem at netlist granularity: FIFOs with guard words,
+/// banking, line buffers, crossbars (with mux-level tracking).
+fn memory_subsystem(m: &Module, dev: &Device, n: &mut Netlist) {
+    let mut readers_per_mem: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    let mut writers_per_mem: BTreeMap<&str, u64> = BTreeMap::new();
+    for s in m.streams.values() {
+        match s.dir {
+            Dir::Read => readers_per_mem.entry(s.mem.as_str()).or_default().push(s.name.as_str()),
+            Dir::Write => *writers_per_mem.entry(s.mem.as_str()).or_insert(0) += 1,
+        }
+    }
+    for (mem_name, readers) in &readers_per_mem {
+        let Some(mem) = m.mems.get(*mem_name) else { continue };
+        let w = mem.ty.bits() as u64;
+        let cnt = readers.len() as u64;
+        if cnt == 1 {
+            n.bram_bits += (dev.stream_fifo_depth + FIFO_GUARD_WORDS) * w;
+            let span = crate::estimator::accumulate::stream_offset_span(m, readers[0]);
+            if span > 0 {
+                n.bram_bits += (span + FIFO_GUARD_WORDS) * w;
+            }
+        } else {
+            n.bram_bits += cnt * mem.elems * w;
+            n.luts += XBAR_LUT_COEFF * w * cnt * cnt;
+            n.regs += XBAR_REG_COEFF * w * cnt * cnt;
+            n.xbar_levels = n.xbar_levels.max(cnt.next_power_of_two().trailing_zeros() as u64);
+        }
+    }
+    for (mem_name, cnt) in &writers_per_mem {
+        let Some(mem) = m.mems.get(*mem_name) else { continue };
+        let w = mem.ty.bits() as u64;
+        n.bram_bits += cnt * (dev.stream_fifo_depth + FIFO_GUARD_WORDS) * w;
+        if *cnt > 2 {
+            n.luts += XBAR_LUT_COEFF * w * cnt * cnt;
+            n.regs += XBAR_REG_COEFF * w * cnt * cnt;
+            n.xbar_levels = n.xbar_levels.max(cnt.next_power_of_two().trailing_zeros() as u64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::{examples, parse_and_validate};
+
+    fn synth(src: &str) -> SynthNetlist {
+        elaborate(&parse_and_validate(src).unwrap(), &Device::stratix4()).unwrap()
+    }
+
+    #[test]
+    fn table1_actual_c2() {
+        // Paper Table 1 C2(A): 83 ALUTs, 177 REGs, 7.27K BRAM, 1 DSP.
+        let s = synth(&examples::fig7_pipe());
+        assert_eq!(s.resources.alut, 83, "{:?}", s.resources);
+        assert!((s.resources.reg as i64 - 177).abs() <= 10, "{:?}", s.resources);
+        assert!((s.resources.bram_bits as f64 - 7_270.0).abs() / 7_270.0 < 0.02, "{:?}", s.resources);
+        assert_eq!(s.resources.dsp, 1);
+    }
+
+    #[test]
+    fn table1_actual_c1() {
+        // Paper Table 1 C1(A): 37.6K ALUTs, 19.1K REGs, 221K BRAM, 4 DSP.
+        let s = synth(&examples::fig9_multi_pipe(4));
+        assert!((s.resources.alut as f64 - 37_600.0).abs() / 37_600.0 < 0.05, "{:?}", s.resources);
+        assert!((s.resources.reg as f64 - 19_100.0).abs() / 19_100.0 < 0.15, "{:?}", s.resources);
+        assert!(s.resources.bram_bits >= 216_000 && s.resources.bram_bits < 235_000, "{:?}", s.resources);
+        assert_eq!(s.resources.dsp, 4);
+        assert!(s.netlist.xbar_levels >= 2);
+    }
+
+    #[test]
+    fn sor_netlist_is_dsp_free_with_wide_carry() {
+        let s = synth(&examples::fig15_sor_default());
+        assert_eq!(s.resources.dsp, 0);
+        assert!(s.netlist.crit_carry_bits >= 32, "{:?}", s.netlist);
+        assert!(s.netlist.stencil);
+    }
+
+    #[test]
+    fn synthesis_reads_higher_than_estimate_on_regs() {
+        // balancing registers make A ≥ E on REGs (paper: 534 E vs 575 A)
+        let m = parse_and_validate(&examples::fig15_sor_default()).unwrap();
+        let e = crate::estimator::estimate(&m, &Device::stratix4()).unwrap();
+        let s = elaborate(&m, &Device::stratix4()).unwrap();
+        assert!(s.resources.reg > e.resources.reg, "A {} vs E {}", s.resources.reg, e.resources.reg);
+    }
+
+    #[test]
+    fn estimate_tracks_synthesis_within_tolerance() {
+        // The paper's headline: estimates accurate enough to rank
+        // configurations — within ~10% of "synthesis" on every resource
+        // that is nonzero.
+        for src in [
+            examples::fig7_pipe(),
+            examples::fig9_multi_pipe(4),
+            examples::fig9_multi_pipe(2),
+            examples::fig15_sor_default(),
+        ] {
+            let m = parse_and_validate(&src).unwrap();
+            let e = crate::estimator::estimate(&m, &Device::stratix4()).unwrap();
+            let s = elaborate(&m, &Device::stratix4()).unwrap();
+            let dev_pct = |a: u64, b: u64| {
+                if b == 0 {
+                    0.0
+                } else {
+                    (a as f64 - b as f64).abs() / b as f64 * 100.0
+                }
+            };
+            assert!(dev_pct(e.resources.alut, s.resources.alut) < 12.0);
+            assert!(dev_pct(e.resources.bram_bits, s.resources.bram_bits) < 10.0);
+            assert_eq!(e.resources.dsp, s.resources.dsp);
+        }
+    }
+
+    #[test]
+    fn seq_pe_pays_operand_muxes() {
+        let s = synth(&examples::fig5_seq());
+        // three adds share one adder through muxes; still cheaper than
+        // the pipelined datapath but not free
+        assert!(s.resources.alut > 50 && s.resources.alut < 200, "{:?}", s.resources);
+        assert_eq!(s.resources.dsp, 1);
+    }
+}

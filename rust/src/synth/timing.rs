@@ -1,0 +1,89 @@
+//! Achieved-Fmax model — the synthesis-side clock the paper obtained from
+//! Quartus timing analysis (the source of its ~20 % EWGT estimate
+//! deviation, §7.1).
+//!
+//! ```text
+//! period = T_FF + T_ROUTE + stage_delay + xbar_delay + stencil_penalty
+//!        + congestion
+//! stage_delay      = crit_levels·T_LUT + crit_carry_bits·T_CARRY
+//! xbar_delay       = xbar_levels·T_LUT
+//! stencil_penalty  = 1.0 ns when offset streams are present
+//! congestion       = 6.0 ns × ALUT utilisation
+//! Fmax = min(1/period, device ceiling)
+//! ```
+//!
+//! Calibration (Stratix-IV): the simple kernel's C2 clamps at the
+//! 300 MHz ceiling (paper achieved 294 MHz), its 4-lane C1 lands at
+//! ≈218 MHz (paper 213 MHz), and the SOR pipeline's wide shift-add
+//! chains land in the low 200s (paper ≈199 MHz) — reproducing the
+//! paper's observation that the nominal-clock estimate overshoots
+//! congested/wide designs by 15–25 %.
+
+use super::netlist::Netlist;
+use crate::device::Device;
+
+/// Flip-flop clock-to-out + setup, ns.
+pub const T_FF_NS: f64 = 0.2;
+/// Base routing delay, ns.
+pub const T_ROUTE_NS: f64 = 0.9;
+/// Per-LUT-level delay, ns.
+pub const T_LUT_NS: f64 = 0.45;
+/// Per-carry-bit delay, ns.
+pub const T_CARRY_NS: f64 = 0.05;
+/// Stencil line-buffer address-path penalty, ns.
+pub const T_STENCIL_NS: f64 = 1.0;
+/// Congestion coefficient: ns of extra routing at 100 % ALUT utilisation.
+pub const T_CONGESTION_NS: f64 = 6.0;
+
+/// Achieved clock for a placed netlist on a device, MHz.
+pub fn achieved_fmax_mhz(n: &Netlist, alut_used: u64, dev: &Device) -> f64 {
+    let util = alut_used as f64 / dev.aluts as f64;
+    let period = T_FF_NS
+        + T_ROUTE_NS
+        + n.crit_levels as f64 * T_LUT_NS
+        + n.crit_carry_bits as f64 * T_CARRY_NS
+        + n.xbar_levels as f64 * T_LUT_NS
+        + if n.stencil { T_STENCIL_NS } else { 0.0 }
+        + T_CONGESTION_NS * util;
+    (1000.0 / period).min(dev.ceiling_fmax_mhz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> Device {
+        Device::stratix4()
+    }
+
+    #[test]
+    fn small_design_clamps_at_ceiling() {
+        let n = Netlist { crit_levels: 1, crit_carry_bits: 18, ..Default::default() };
+        let f = achieved_fmax_mhz(&n, 83, &dev());
+        assert_eq!(f, dev().ceiling_fmax_mhz);
+    }
+
+    #[test]
+    fn crossbar_and_congestion_slow_the_clock() {
+        let n = Netlist { crit_levels: 1, crit_carry_bits: 18, xbar_levels: 2, ..Default::default() };
+        let f = achieved_fmax_mhz(&n, 37_600, &dev());
+        // paper C1(A): 213 MHz
+        assert!((200.0..240.0).contains(&f), "{f}");
+    }
+
+    #[test]
+    fn wide_carry_chains_slow_the_clock() {
+        let n = Netlist { crit_levels: 2, crit_carry_bits: 32, stencil: true, ..Default::default() };
+        let f = achieved_fmax_mhz(&n, 500, &dev());
+        // paper SOR C2(A): ≈199 MHz
+        assert!((190.0..240.0).contains(&f), "{f}");
+    }
+
+    #[test]
+    fn fmax_decreases_monotonically_with_utilisation() {
+        let n = Netlist { crit_levels: 3, crit_carry_bits: 33, ..Default::default() };
+        let f1 = achieved_fmax_mhz(&n, 1_000, &dev());
+        let f2 = achieved_fmax_mhz(&n, 100_000, &dev());
+        assert!(f1 > f2);
+    }
+}

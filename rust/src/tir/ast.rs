@@ -1,0 +1,436 @@
+//! TIR abstract syntax: Manage-IR + Compute-IR (paper §5).
+//!
+//! A [`Module`] holds both halves of a TIR design:
+//!
+//! * **Manage-IR** — memory objects, stream objects, counters and the
+//!   `launch()` body: everything in the *core* outside the core-compute
+//!   (Fig 2). Streams connect memory objects to compute ports; the
+//!   work-item loop of the source program *disappears* into the stream
+//!   declarations (paper §6.1).
+//! * **Compute-IR** — ports and the SSA datapath functions (`pipe` /
+//!   `par` / `seq` / `comb`) rooted at `@main`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::types::Ty;
+
+/// Function execution kind (paper §6): how the instructions/calls inside
+/// a function body are mapped onto hardware.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    /// Pipelined datapath: one stage per instruction/callee, initiation
+    /// interval 1 after fill (configuration axis "pipeline parallelism").
+    Pipe,
+    /// All children execute concurrently (ILP inside a stage, or lane /
+    /// PE replication when the same callee is called repeatedly).
+    Par,
+    /// Sequential instruction processor: shared functional units, CPI
+    /// `Nto` per delegated instruction (C4 scalar PE).
+    Seq,
+    /// Single-cycle combinatorial block (SOR listing, Fig 15).
+    Comb,
+}
+
+impl fmt::Display for Kind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Kind::Pipe => write!(f, "pipe"),
+            Kind::Par => write!(f, "par"),
+            Kind::Seq => write!(f, "seq"),
+            Kind::Comb => write!(f, "comb"),
+        }
+    }
+}
+
+/// Datapath opcode. The supported set mirrors the paper's prototype
+/// ("the supported set of instructions and data-types is quite limited",
+/// §10) but covers both case studies plus the shift/logic ops the DSP-free
+/// constant multiplies lower to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Op {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    /// Shift left by immediate/operand.
+    Shl,
+    /// Logical shift right.
+    Lshr,
+    /// Arithmetic shift right.
+    Ashr,
+    And,
+    Or,
+    Xor,
+    /// Min/max (supported by the cost DB for stencil kernels).
+    Min,
+    Max,
+    /// Multiply-accumulate `a*b + c` (3-operand; maps to one DSP).
+    Mac,
+}
+
+impl Op {
+    /// Number of operands.
+    pub fn arity(&self) -> usize {
+        match self {
+            Op::Mac => 3,
+            _ => 2,
+        }
+    }
+
+    /// Parse an opcode mnemonic.
+    pub fn parse(s: &str) -> Option<Op> {
+        Some(match s {
+            "add" => Op::Add,
+            "sub" => Op::Sub,
+            "mul" => Op::Mul,
+            "div" => Op::Div,
+            "shl" => Op::Shl,
+            "lshr" => Op::Lshr,
+            "ashr" => Op::Ashr,
+            "and" => Op::And,
+            "or" => Op::Or,
+            "xor" => Op::Xor,
+            "min" => Op::Min,
+            "max" => Op::Max,
+            "mac" => Op::Mac,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Op::Add => "add",
+            Op::Sub => "sub",
+            Op::Mul => "mul",
+            Op::Div => "div",
+            Op::Shl => "shl",
+            Op::Lshr => "lshr",
+            Op::Ashr => "ashr",
+            Op::And => "and",
+            Op::Or => "or",
+            Op::Xor => "xor",
+            Op::Min => "min",
+            Op::Max => "max",
+            Op::Mac => "mac",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// An instruction operand.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Operand {
+    /// SSA local `%name`.
+    Local(String),
+    /// Global `@name`: a port or a named constant.
+    Global(String),
+    /// Integer immediate.
+    Imm(i64),
+}
+
+impl fmt::Display for Operand {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Operand::Local(n) => write!(f, "%{n}"),
+            Operand::Global(n) => write!(f, "@{n}"),
+            Operand::Imm(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// One SSA datapath instruction: `ui18 %3 = mul ui18 %1, %2`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instr {
+    /// SSA result name (without `%`).
+    pub result: String,
+    /// Result/operand type (the prototype is monomorphic per instr).
+    pub ty: Ty,
+    /// Opcode.
+    pub op: Op,
+    /// Operands (arity checked by the validator).
+    pub operands: Vec<Operand>,
+}
+
+/// A `call @f(...)` statement, in a function body or in `launch()`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Call {
+    /// Callee name (without `@`).
+    pub callee: String,
+    /// Argument globals/locals passed through (positional).
+    pub args: Vec<Operand>,
+    /// Execution kind annotation at the call site (paper writes
+    /// `call @f1(...) par`); must match the callee's kind.
+    pub kind: Option<Kind>,
+    /// `repeat(N)` — chained kernel passes (SOR listing, Fig 15 line 4).
+    pub repeat: u64,
+}
+
+/// A statement in a compute function body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// SSA instruction.
+    Instr(Instr),
+    /// Call to another compute function.
+    Call(Call),
+}
+
+/// A compute function: `define void @f1 (...) pipe { ... }`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Func {
+    /// Name without `@`.
+    pub name: String,
+    /// Parameter names (the paper abbreviates `...args...`; parameters
+    /// are typed locals visible in the body).
+    pub params: Vec<(String, Ty)>,
+    /// Execution kind.
+    pub kind: Kind,
+    /// Body statements.
+    pub body: Vec<Stmt>,
+}
+
+/// Address spaces used by the paper's listings.
+pub mod addrspace {
+    /// Named scalar constant (`@k`).
+    pub const CONST: u32 = 0;
+    /// Global (off-chip / host-visible) memory.
+    pub const GLOBAL: u32 = 1;
+    /// Local memory — on-chip block RAM.
+    pub const LOCAL: u32 = 3;
+    /// Stream object.
+    pub const STREAM: u32 = 10;
+    /// Compute port.
+    pub const PORT: u32 = 12;
+}
+
+/// A memory object (Manage-IR): `@mem_a = addrspace(3) <1000 x ui18>`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemObject {
+    pub name: String,
+    /// `addrspace::GLOBAL` or `addrspace::LOCAL`.
+    pub space: u32,
+    /// Element count.
+    pub elems: u64,
+    /// Element type.
+    pub ty: Ty,
+}
+
+impl MemObject {
+    /// Total storage in bits (drives the BRAM estimate for local memory).
+    pub fn bits(&self) -> u64 {
+        self.elems * self.ty.bits() as u64
+    }
+}
+
+/// Direction of a stream/port, from the perspective of the core-compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    /// Data flows memory → datapath.
+    Read,
+    /// Data flows datapath → memory.
+    Write,
+}
+
+/// A stream object (Manage-IR): connects a memory object to ports.
+/// `@strobj_a = addrspace(10), !"source", !"@mem_a"`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamObject {
+    pub name: String,
+    /// Backing memory object name.
+    pub mem: String,
+    /// `Read` when the stream sources from memory (`!"source"`),
+    /// `Write` when it sinks to memory (`!"dest"`).
+    pub dir: Dir,
+}
+
+/// Port continuity (paper metadata `!"CONT"`): continuous streams deliver
+/// one element per cycle; `Fifo` ports may stall.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Continuity {
+    Cont,
+    Fifo,
+}
+
+/// A compute port (Compute-IR):
+/// `@main.a = addrspace(12) ui18, !"istream", !"CONT", !0, !"strobj_a"`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Port {
+    /// Fully scoped name as written (`main.a`).
+    pub name: String,
+    pub ty: Ty,
+    /// `Read` = `!"istream"`, `Write` = `!"ostream"`.
+    pub dir: Dir,
+    pub continuity: Continuity,
+    /// Stream offset in elements (paper's offset streams, Fig 15): the
+    /// `!N` metadata. `+cols`/`-cols` offsets realise ±1-row stencil taps.
+    pub offset: i64,
+    /// Name of the stream object this port taps.
+    pub stream: String,
+}
+
+/// A named scalar constant: `@k = const ui18 42`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Const {
+    pub name: String,
+    pub ty: Ty,
+    pub value: i64,
+}
+
+/// A hardware index counter (Manage-IR, Fig 15 lines 23-24):
+/// `@ctr_j = counter(0, 17)` / `@ctr_i = counter(0, 17) nest(@ctr_j)`.
+/// Counters index the (possibly multi-dimensional) work-item space; an
+/// outer counter increments when its nested inner counter wraps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Counter {
+    pub name: String,
+    /// First value (inclusive).
+    pub from: i64,
+    /// Last value (inclusive).
+    pub to: i64,
+    /// Inner counter that must wrap for this one to step.
+    pub nest: Option<String>,
+}
+
+impl Counter {
+    /// Number of values this counter sweeps.
+    pub fn span(&self) -> u64 {
+        (self.to - self.from).unsigned_abs() + 1
+    }
+}
+
+/// A complete TIR module: Manage-IR objects + Compute-IR functions.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Module {
+    /// Module name (from `; module: <name>` header or synthesised).
+    pub name: String,
+    /// Named constants by name.
+    pub consts: BTreeMap<String, Const>,
+    /// Memory objects by name.
+    pub mems: BTreeMap<String, MemObject>,
+    /// Stream objects by name.
+    pub streams: BTreeMap<String, StreamObject>,
+    /// Counters by name.
+    pub counters: BTreeMap<String, Counter>,
+    /// Compute ports by name.
+    pub ports: BTreeMap<String, Port>,
+    /// Compute functions by name (`main` is the root).
+    pub funcs: BTreeMap<String, Func>,
+    /// Statements of the `launch()` body, in order (calls only; object
+    /// declarations are hoisted into the maps above).
+    pub launch: Vec<Call>,
+}
+
+impl Module {
+    /// Create an empty module with a name.
+    pub fn new<S: Into<String>>(name: S) -> Module {
+        Module { name: name.into(), ..Default::default() }
+    }
+
+    /// The root compute function (`@main`), if present.
+    pub fn main(&self) -> Option<&Func> {
+        self.funcs.get("main")
+    }
+
+    /// Total number of SSA instructions across all functions, counting
+    /// each *static* occurrence once (replication via repeated calls is a
+    /// structural property handled by the estimator).
+    pub fn static_instr_count(&self) -> usize {
+        self.funcs.values().map(|f| f.body.iter().filter(|s| matches!(s, Stmt::Instr(_))).count()).sum()
+    }
+
+    /// Number of work-items per kernel pass: the product of counter spans
+    /// when counters are declared, else the max input-port backing-memory
+    /// element count (the stream length), else 0.
+    pub fn work_items(&self) -> u64 {
+        if !self.counters.is_empty() {
+            return self.counters.values().map(|c| c.span()).product();
+        }
+        self.ports
+            .values()
+            .filter(|p| p.dir == Dir::Read)
+            .filter_map(|p| self.streams.get(&p.stream))
+            .filter_map(|s| self.mems.get(&s.mem))
+            .map(|m| m.elems)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Iterate instructions of one function.
+    pub fn instrs_of<'a>(&'a self, func: &'a Func) -> impl Iterator<Item = &'a Instr> {
+        func.body.iter().filter_map(|s| match s {
+            Stmt::Instr(i) => Some(i),
+            _ => None,
+        })
+    }
+
+    /// Iterate calls of one function.
+    pub fn calls_of<'a>(&'a self, func: &'a Func) -> impl Iterator<Item = &'a Call> {
+        func.body.iter().filter_map(|s| match s {
+            Stmt::Call(c) => Some(c),
+            _ => None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_parse_roundtrip() {
+        for s in ["add", "sub", "mul", "div", "shl", "lshr", "ashr", "and", "or", "xor", "min", "max", "mac"] {
+            let op = Op::parse(s).unwrap();
+            assert_eq!(op.to_string(), s);
+        }
+        assert!(Op::parse("frobnicate").is_none());
+    }
+
+    #[test]
+    fn mac_is_ternary() {
+        assert_eq!(Op::Mac.arity(), 3);
+        assert_eq!(Op::Add.arity(), 2);
+    }
+
+    #[test]
+    fn mem_bits() {
+        let m = MemObject { name: "a".into(), space: addrspace::LOCAL, elems: 1000, ty: Ty::UInt(18) };
+        assert_eq!(m.bits(), 18_000);
+    }
+
+    #[test]
+    fn counter_span() {
+        let c = Counter { name: "i".into(), from: 0, to: 17, nest: None };
+        assert_eq!(c.span(), 18);
+        let c1 = Counter { name: "j".into(), from: 1, to: 1, nest: None };
+        assert_eq!(c1.span(), 1);
+    }
+
+    #[test]
+    fn work_items_from_counters() {
+        let mut m = Module::new("t");
+        m.counters.insert("i".into(), Counter { name: "i".into(), from: 0, to: 17, nest: Some("j".into()) });
+        m.counters.insert("j".into(), Counter { name: "j".into(), from: 0, to: 17, nest: None });
+        assert_eq!(m.work_items(), 324);
+    }
+
+    #[test]
+    fn work_items_from_stream_length() {
+        let mut m = Module::new("t");
+        m.mems.insert("mem_a".into(), MemObject { name: "mem_a".into(), space: addrspace::LOCAL, elems: 1000, ty: Ty::UInt(18) });
+        m.streams.insert("strobj_a".into(), StreamObject { name: "strobj_a".into(), mem: "mem_a".into(), dir: Dir::Read });
+        m.ports.insert(
+            "main.a".into(),
+            Port { name: "main.a".into(), ty: Ty::UInt(18), dir: Dir::Read, continuity: Continuity::Cont, offset: 0, stream: "strobj_a".into() },
+        );
+        assert_eq!(m.work_items(), 1000);
+    }
+
+    #[test]
+    fn operand_display() {
+        assert_eq!(Operand::Local("x".into()).to_string(), "%x");
+        assert_eq!(Operand::Global("k".into()).to_string(), "@k");
+        assert_eq!(Operand::Imm(-3).to_string(), "-3");
+    }
+}

@@ -1,0 +1,252 @@
+//! Programmatic TIR construction — the API the frontend lowering and the
+//! DSE transforms use to assemble configurations without going through
+//! text.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath in this image)
+//! use tytra::tir::builder::ModuleBuilder;
+//! use tytra::tir::{Kind, Op, Ty};
+//!
+//! let mut b = ModuleBuilder::new("simple");
+//! b.local_mem("mem_a", 1000, Ty::UInt(18));
+//! b.source_stream("strobj_a", "mem_a");
+//! b.istream_port("main.a", Ty::UInt(18), "strobj_a", 0);
+//! let f = b.func("f1", Kind::Pipe)
+//!     .param("a", Ty::UInt(18))
+//!     .instr("1", Op::Add, Ty::UInt(18), &["%a", "%a"]);
+//! f.finish();
+//! b.func("main", Kind::Pipe).call("f1", &["@main.a"], Some(Kind::Pipe), 1).finish();
+//! b.launch_call("main", 1);
+//! let m = b.finish().unwrap();
+//! assert_eq!(m.funcs.len(), 2);
+//! ```
+
+use super::ast::*;
+use super::types::Ty;
+use super::{validate, Error};
+
+/// Builder for a [`Module`].
+#[derive(Debug)]
+pub struct ModuleBuilder {
+    m: Module,
+}
+
+impl ModuleBuilder {
+    /// Start a module.
+    pub fn new<S: Into<String>>(name: S) -> ModuleBuilder {
+        ModuleBuilder { m: Module::new(name) }
+    }
+
+    /// Declare a named constant.
+    pub fn constant<S: Into<String>>(&mut self, name: S, ty: Ty, value: i64) -> &mut Self {
+        let name = name.into();
+        self.m.consts.insert(name.clone(), Const { name, ty, value });
+        self
+    }
+
+    /// Declare a local (block-RAM) memory object.
+    pub fn local_mem<S: Into<String>>(&mut self, name: S, elems: u64, ty: Ty) -> &mut Self {
+        let name = name.into();
+        self.m.mems.insert(name.clone(), MemObject { name, space: addrspace::LOCAL, elems, ty });
+        self
+    }
+
+    /// Declare a global (off-chip) memory object.
+    pub fn global_mem<S: Into<String>>(&mut self, name: S, elems: u64, ty: Ty) -> &mut Self {
+        let name = name.into();
+        self.m.mems.insert(name.clone(), MemObject { name, space: addrspace::GLOBAL, elems, ty });
+        self
+    }
+
+    /// Declare a source (memory → datapath) stream object.
+    pub fn source_stream<S: Into<String>, T: Into<String>>(&mut self, name: S, mem: T) -> &mut Self {
+        let name = name.into();
+        self.m.streams.insert(name.clone(), StreamObject { name, mem: mem.into(), dir: Dir::Read });
+        self
+    }
+
+    /// Declare a destination (datapath → memory) stream object.
+    pub fn dest_stream<S: Into<String>, T: Into<String>>(&mut self, name: S, mem: T) -> &mut Self {
+        let name = name.into();
+        self.m.streams.insert(name.clone(), StreamObject { name, mem: mem.into(), dir: Dir::Write });
+        self
+    }
+
+    /// Declare an input port with a stream offset.
+    pub fn istream_port<S: Into<String>, T: Into<String>>(
+        &mut self,
+        name: S,
+        ty: Ty,
+        stream: T,
+        offset: i64,
+    ) -> &mut Self {
+        let name = name.into();
+        self.m.ports.insert(
+            name.clone(),
+            Port { name, ty, dir: Dir::Read, continuity: Continuity::Cont, offset, stream: stream.into() },
+        );
+        self
+    }
+
+    /// Declare an output port.
+    pub fn ostream_port<S: Into<String>, T: Into<String>>(
+        &mut self,
+        name: S,
+        ty: Ty,
+        stream: T,
+    ) -> &mut Self {
+        let name = name.into();
+        self.m.ports.insert(
+            name.clone(),
+            Port { name, ty, dir: Dir::Write, continuity: Continuity::Cont, offset: 0, stream: stream.into() },
+        );
+        self
+    }
+
+    /// Declare an index counter; `nest` names the inner counter.
+    pub fn counter<S: Into<String>>(&mut self, name: S, from: i64, to: i64, nest: Option<&str>) -> &mut Self {
+        let name = name.into();
+        self.m.counters.insert(
+            name.clone(),
+            Counter { name, from, to, nest: nest.map(str::to_string) },
+        );
+        self
+    }
+
+    /// Add a `call` to the `launch()` body.
+    pub fn launch_call<S: Into<String>>(&mut self, callee: S, repeat: u64) -> &mut Self {
+        self.m.launch.push(Call { callee: callee.into(), args: Vec::new(), kind: None, repeat });
+        self
+    }
+
+    /// Open a function body builder.
+    pub fn func<S: Into<String>>(&mut self, name: S, kind: Kind) -> FuncBuilder<'_> {
+        FuncBuilder {
+            parent: self,
+            f: Func { name: name.into(), params: Vec::new(), kind, body: Vec::new() },
+        }
+    }
+
+    /// Finish and validate.
+    pub fn finish(self) -> Result<Module, Error> {
+        validate::validate(&self.m)?;
+        Ok(self.m)
+    }
+
+    /// Finish without validating (for deliberately-invalid test inputs).
+    pub fn finish_unchecked(self) -> Module {
+        self.m
+    }
+}
+
+/// Builder for one function body; created by [`ModuleBuilder::func`].
+pub struct FuncBuilder<'a> {
+    parent: &'a mut ModuleBuilder,
+    f: Func,
+}
+
+impl<'a> FuncBuilder<'a> {
+    /// Add a typed parameter.
+    pub fn param<S: Into<String>>(mut self, name: S, ty: Ty) -> Self {
+        self.f.params.push((name.into(), ty));
+        self
+    }
+
+    /// Add an SSA instruction. Operand syntax: `%local`, `@global`, or a
+    /// decimal immediate.
+    pub fn instr<S: Into<String>>(mut self, result: S, op: Op, ty: Ty, operands: &[&str]) -> Self {
+        let ops = operands.iter().map(|s| parse_operand(s)).collect();
+        self.f.body.push(Stmt::Instr(Instr { result: result.into(), ty, op, operands: ops }));
+        self
+    }
+
+    /// Add a call statement.
+    pub fn call<S: Into<String>>(mut self, callee: S, args: &[&str], kind: Option<Kind>, repeat: u64) -> Self {
+        let args = args.iter().map(|s| parse_operand(s)).collect();
+        self.f.body.push(Stmt::Call(Call { callee: callee.into(), args, kind, repeat }));
+        self
+    }
+
+    /// Close the function and return to the module builder.
+    pub fn finish(self) -> &'a mut ModuleBuilder {
+        let name = self.f.name.clone();
+        self.parent.m.funcs.insert(name, self.f);
+        self.parent
+    }
+}
+
+/// Parse a builder operand shorthand (`%x`, `@g`, `42`, `-1`).
+fn parse_operand(s: &str) -> Operand {
+    if let Some(rest) = s.strip_prefix('%') {
+        Operand::Local(rest.to_string())
+    } else if let Some(rest) = s.strip_prefix('@') {
+        Operand::Global(rest.to_string())
+    } else {
+        Operand::Imm(s.parse().unwrap_or_else(|_| panic!("bad operand shorthand `{s}`")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn u18() -> Ty {
+        Ty::UInt(18)
+    }
+
+    #[test]
+    fn builds_minimal_valid_module() {
+        let mut b = ModuleBuilder::new("t");
+        b.local_mem("mem_a", 16, u18());
+        b.source_stream("s_a", "mem_a");
+        b.istream_port("main.a", u18(), "s_a", 0);
+        b.func("main", Kind::Pipe)
+            .instr("1", Op::Add, u18(), &["@main.a", "@main.a"])
+            .finish();
+        b.launch_call("main", 1);
+        let m = b.finish().unwrap();
+        assert_eq!(m.work_items(), 16);
+    }
+
+    #[test]
+    fn builder_matches_parsed_equivalent() {
+        let mut b = ModuleBuilder::new("x");
+        b.constant("k", u18(), 42);
+        b.local_mem("mem_a", 8, u18());
+        b.source_stream("s", "mem_a");
+        b.istream_port("main.a", u18(), "s", 0);
+        b.func("main", Kind::Comb)
+            .instr("1", Op::Add, u18(), &["@main.a", "@k"])
+            .finish();
+        b.launch_call("main", 1);
+        let built = b.finish().unwrap();
+        let text = crate::tir::pretty::print(&built);
+        let reparsed = crate::tir::parse_and_validate(&text).unwrap();
+        assert_eq!(built, reparsed);
+    }
+
+    #[test]
+    fn invalid_module_rejected_at_finish() {
+        let mut b = ModuleBuilder::new("bad");
+        b.func("main", Kind::Comb).instr("1", Op::Add, u18(), &["%nope", "%nope"]).finish();
+        assert!(b.finish().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_operand_shorthand_panics() {
+        parse_operand("not-an-operand");
+    }
+
+    #[test]
+    fn counters_and_repeat() {
+        let mut b = ModuleBuilder::new("sor");
+        b.counter("j", 0, 17, None);
+        b.counter("i", 0, 17, Some("j"));
+        b.func("main", Kind::Pipe).instr("1", Op::Add, u18(), &["1", "2"]).finish();
+        b.launch_call("main", 5);
+        let m = b.finish().unwrap();
+        assert_eq!(m.work_items(), 324);
+        assert_eq!(m.launch[0].repeat, 5);
+    }
+}

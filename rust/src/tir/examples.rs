@@ -1,0 +1,251 @@
+//! Canonical TIR listings from the paper, normalised to the concrete
+//! grammar: Fig 5 (C4 sequential), Fig 7 (C2 single pipeline), Fig 9
+//! (C1 replicated pipelines), Fig 11 (C5 vectorised sequential) for the
+//! simple kernel, and Fig 15 (C2) for the SOR kernel.
+//!
+//! These are used by unit tests, integration tests, the examples and the
+//! benches; `examples/configurations.rs` prints them side by side with
+//! the paper's figures.
+
+/// Shared Manage-IR prelude for the simple kernel (memories + streams for
+/// `a`, `b`, `c` in, `y` out; NTOT = 1000 work-items as in Table 1).
+fn simple_prelude(lanes: usize) -> String {
+    let mut s = String::from("; ***** Manage-IR *****\ndefine void launch() {\n");
+    let dirs = [("a", "source"), ("b", "source"), ("c", "source"), ("y", "dest")];
+    for (name, dir) in dirs {
+        s.push_str(&format!("    @mem_{name} = addrspace(3) <1000 x ui18>\n"));
+        for lane in 0..lanes {
+            let suffix = if lanes == 1 { String::new() } else { format!("_{:02}", lane + 1) };
+            s.push_str(&format!(
+                "    @strobj_{name}{suffix} = addrspace(10), !\"{dir}\", !\"@mem_{name}\"\n"
+            ));
+        }
+    }
+    s.push_str("    call @main ()\n}\n; ***** Compute-IR *****\n@k = const ui18 42\n");
+    s
+}
+
+/// Port declarations for one lane of the simple kernel.
+fn simple_ports(lanes: usize) -> String {
+    let mut s = String::new();
+    for lane in 0..lanes {
+        let suffix = if lanes == 1 { String::new() } else { format!("_{:02}", lane + 1) };
+        for (name, dir) in [("a", "istream"), ("b", "istream"), ("c", "istream"), ("y", "ostream")] {
+            s.push_str(&format!(
+                "@main.{name}{suffix} = addrSpace(12) ui18, !\"{dir}\", !\"CONT\", !0, !\"strobj_{name}{suffix}\"\n"
+            ));
+        }
+    }
+    s
+}
+
+/// Datapath body of the simple kernel as four SSA ops (paper Fig 5).
+fn simple_body(args: &str) -> String {
+    format!(
+        "    ui18 %1 = add ui18 %a, %b\n    ui18 %2 = add ui18 %c, %c\n    ui18 %3 = mul ui18 %1, %2\n    ui18 %y = add ui18 %3, @k\n    ; consumes ({args})\n"
+    )
+}
+
+/// Fig 5: sequential processing (C4) — all four ops share one seq PE.
+pub fn fig5_seq() -> String {
+    let mut s = simple_prelude(1);
+    s.push_str(&simple_ports(1));
+    s.push_str(&format!(
+        "define void @f1 (ui18 %a, ui18 %b, ui18 %c) seq {{\n{}}}\n",
+        simple_body("a,b,c")
+    ));
+    s.push_str("define void @main () seq {\n    call @f1 (@main.a, @main.b, @main.c) seq\n}\n");
+    s
+}
+
+/// Fig 7: single kernel pipeline (C2) — the two adds run in a `par`
+/// stage, the whole datapath is a `pipe`.
+pub fn fig7_pipe() -> String {
+    let mut s = simple_prelude(1);
+    s.push_str(&simple_ports(1));
+    s.push_str(
+        "define void @f1 (ui18 %a, ui18 %b, ui18 %c) par {\n    ui18 %1 = add ui18 %a, %b\n    ui18 %2 = add ui18 %c, %c\n}\n",
+    );
+    s.push_str(
+        "define void @f2 (ui18 %a, ui18 %b, ui18 %c) pipe {\n    call @f1 (%a, %b, %c) par\n    ui18 %3 = mul ui18 %1, %2\n    ui18 %y = add ui18 %3, @k\n}\n",
+    );
+    s.push_str("define void @main () pipe {\n    call @f2 (@main.a, @main.b, @main.c) pipe\n}\n");
+    s
+}
+
+/// Fig 9: replicated pipelines (C1) — `@f3 par` calls the pipe N times;
+/// one port set per lane, all tapping the same memory objects (the
+/// paper's multi-port memory).
+pub fn fig9_multi_pipe(lanes: usize) -> String {
+    assert!(lanes >= 1);
+    let mut s = simple_prelude(lanes);
+    s.push_str(&simple_ports(lanes));
+    s.push_str(
+        "define void @f1 (ui18 %a, ui18 %b, ui18 %c) par {\n    ui18 %1 = add ui18 %a, %b\n    ui18 %2 = add ui18 %c, %c\n}\n",
+    );
+    s.push_str(
+        "define void @f2 (ui18 %a, ui18 %b, ui18 %c) pipe {\n    call @f1 (%a, %b, %c) par\n    ui18 %3 = mul ui18 %1, %2\n    ui18 %y = add ui18 %3, @k\n}\n",
+    );
+    s.push_str("define void @f3 () par {\n");
+    for lane in 0..lanes {
+        let suffix = if lanes == 1 { String::new() } else { format!("_{:02}", lane + 1) };
+        s.push_str(&format!(
+            "    call @f2 (@main.a{suffix}, @main.b{suffix}, @main.c{suffix}) pipe\n"
+        ));
+    }
+    s.push_str("}\ndefine void @main () par {\n    call @f3 () par\n}\n");
+    s
+}
+
+/// Fig 11: vectorised sequential processing (C5) — `@f2 par` replicates
+/// the seq PE N ways (degree of vectorisation D_v = N).
+pub fn fig11_vector_seq(dv: usize) -> String {
+    assert!(dv >= 1);
+    let mut s = simple_prelude(dv);
+    s.push_str(&simple_ports(dv));
+    s.push_str(&format!(
+        "define void @f1 (ui18 %a, ui18 %b, ui18 %c) seq {{\n{}}}\n",
+        simple_body("a,b,c")
+    ));
+    s.push_str("define void @f2 () par {\n");
+    for lane in 0..dv {
+        let suffix = if dv == 1 { String::new() } else { format!("_{:02}", lane + 1) };
+        s.push_str(&format!(
+            "    call @f1 (@main.a{suffix}, @main.b{suffix}, @main.c{suffix}) seq\n"
+        ));
+    }
+    s.push_str("}\ndefine void @main () par {\n    call @f2 () par\n}\n");
+    s
+}
+
+/// Fig 15: the SOR kernel as a single pipeline (C2).
+///
+/// The five stencil taps are offset streams over the same source memory
+/// (`!N` metadata = element offset; ±cols = ±1 row). The nested counters
+/// sweep the *interior* (1..rows-2 × 1..cols-2): the paper's Table 2
+/// cycle count for C2 (292) decomposes as 256 interior work-items + the
+/// pipeline/window fill, which pins the index space to the 16×16
+/// interior of an 18×18 grid. `repeat(niter)` chains passes; the Table 2
+/// EWGT↔cycles consistency (57K × 292 × niter ≈ 250 MHz) pins the
+/// default workload at `niter = 15`.
+pub fn fig15_sor_pipe(rows: usize, cols: usize, niter: u64) -> String {
+    assert!(rows >= 3 && cols >= 3);
+    let n = rows * cols;
+    let c = cols as i64;
+    format!(
+        r#"; ***** Manage-IR ***** (SOR, single pipeline, paper Fig 15)
+define void launch() {{
+    @mem_p  = addrspace(3) <{n} x ui18>
+    @mem_q  = addrspace(3) <{n} x ui18>
+    @strobj_p = addrspace(10), !"source", !"@mem_p"
+    @strobj_q = addrspace(10), !"dest", !"@mem_q"
+    @ctr_j = counter(1, {jmax})
+    @ctr_i = counter(1, {imax}) nest(@ctr_j)
+    call @main () repeat({niter})
+}}
+; ***** Compute-IR *****
+@w4 = const ui18 3840
+@wb = const ui18 1024
+@main.n = addrSpace(12) ui18, !"istream", !"CONT", !{noff}, !"strobj_p"
+@main.s = addrSpace(12) ui18, !"istream", !"CONT", !{soff}, !"strobj_p"
+@main.w = addrSpace(12) ui18, !"istream", !"CONT", !-1, !"strobj_p"
+@main.e = addrSpace(12) ui18, !"istream", !"CONT", !1, !"strobj_p"
+@main.c = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_p"
+@main.q = addrSpace(12) ui18, !"ostream", !"CONT", !0, !"strobj_q"
+define void @f1 (ui18 %n, ui18 %s, ui18 %w, ui18 %e, ui18 %c) comb {{
+    ui19 %1 = add ui19 %n, %s
+    ui19 %2 = add ui19 %w, %e
+    ui20 %3 = add ui20 %1, %2
+}}
+define void @f2 (ui18 %n, ui18 %s, ui18 %w, ui18 %e, ui18 %c) pipe {{
+    call @f1 (%n, %s, %w, %e, %c) comb
+    ui32 %4 = mul ui32 %3, @w4
+    ui28 %5 = mul ui28 %c, @wb
+    ui33 %6 = add ui33 %4, %5
+    ui33 %q = lshr ui33 %6, 14
+}}
+define void @main () pipe {{
+    call @f2 (@main.n, @main.s, @main.w, @main.e, @main.c) pipe
+}}
+"#,
+        n = n,
+        jmax = cols - 2,
+        imax = rows - 2,
+        niter = niter,
+        noff = -c,
+        soff = c,
+    )
+}
+
+/// The Table 2 default SOR workload: 18×18 grid (16×16 interior),
+/// 15 chained passes per work-group.
+pub const SOR_NITER: u64 = 15;
+
+/// The Table 2 default SOR workload.
+pub fn fig15_sor_default() -> String {
+    fig15_sor_pipe(18, 18, SOR_NITER)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::{parse_and_validate, validate::require_synthesizable, Kind};
+
+    #[test]
+    fn all_listings_parse_and_validate() {
+        for (name, src) in [
+            ("fig5", fig5_seq()),
+            ("fig7", fig7_pipe()),
+            ("fig9", fig9_multi_pipe(4)),
+            ("fig11", fig11_vector_seq(4)),
+            ("fig15", fig15_sor_default()),
+        ] {
+            let m = parse_and_validate(&src).unwrap_or_else(|e| panic!("{name}: {e}"));
+            require_synthesizable(&m).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn fig5_is_sequential() {
+        let m = parse_and_validate(&fig5_seq()).unwrap();
+        assert_eq!(m.funcs["f1"].kind, Kind::Seq);
+        assert_eq!(m.work_items(), 1000);
+        assert_eq!(m.static_instr_count(), 4);
+    }
+
+    #[test]
+    fn fig7_has_par_inside_pipe() {
+        let m = parse_and_validate(&fig7_pipe()).unwrap();
+        assert_eq!(m.funcs["f1"].kind, Kind::Par);
+        assert_eq!(m.funcs["f2"].kind, Kind::Pipe);
+    }
+
+    #[test]
+    fn fig9_replicates_four_lanes() {
+        let m = parse_and_validate(&fig9_multi_pipe(4)).unwrap();
+        let f3 = &m.funcs["f3"];
+        assert_eq!(f3.kind, Kind::Par);
+        assert_eq!(m.calls_of(f3).count(), 4);
+        // four port sets
+        assert_eq!(m.ports.len(), 16);
+    }
+
+    #[test]
+    fn fig11_vectorises_four_ways() {
+        let m = parse_and_validate(&fig11_vector_seq(4)).unwrap();
+        let f2 = &m.funcs["f2"];
+        assert_eq!(m.calls_of(f2).filter(|c| c.callee == "f1").count(), 4);
+    }
+
+    #[test]
+    fn fig15_sor_structure() {
+        let m = parse_and_validate(&fig15_sor_default()).unwrap();
+        assert_eq!(m.work_items(), 256); // 16x16 interior via nested counters
+        assert_eq!(m.ports["main.n"].offset, -18);
+        assert_eq!(m.ports["main.s"].offset, 18);
+        assert_eq!(m.funcs["f1"].kind, Kind::Comb);
+        assert_eq!(m.launch[0].repeat, SOR_NITER);
+        let m5 = parse_and_validate(&fig15_sor_pipe(18, 18, 5)).unwrap();
+        assert_eq!(m5.launch[0].repeat, 5);
+    }
+}

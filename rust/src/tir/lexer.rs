@@ -1,0 +1,285 @@
+//! Hand-written lexer for TIR text.
+//!
+//! Comments run from `;` to end of line (LLVM style). Identifiers are
+//! `[A-Za-z_][A-Za-z0-9_.]*`; globals `@ident`; locals `%[A-Za-z0-9_.]+`
+//! (SSA names may be purely numeric: `%1`). Integers are decimal or
+//! `0x...` hex with an optional leading `-`/`+`.
+
+use super::token::{Span, Tok, Token};
+use super::Error;
+
+/// Tokenize TIR source text.
+pub fn lex(src: &str) -> Result<Vec<Token>, Error> {
+    let mut out = Vec::new();
+    let bytes = src.as_bytes();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut col = 1u32;
+
+    macro_rules! span {
+        () => {
+            Span { line, col }
+        };
+    }
+
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            '\n' => {
+                line += 1;
+                col = 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => {
+                col += 1;
+                i += 1;
+            }
+            ';' => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            '=' => {
+                out.push(Token { tok: Tok::Eq, span: span!() });
+                i += 1;
+                col += 1;
+            }
+            '(' => {
+                out.push(Token { tok: Tok::LParen, span: span!() });
+                i += 1;
+                col += 1;
+            }
+            ')' => {
+                out.push(Token { tok: Tok::RParen, span: span!() });
+                i += 1;
+                col += 1;
+            }
+            '{' => {
+                out.push(Token { tok: Tok::LBrace, span: span!() });
+                i += 1;
+                col += 1;
+            }
+            '}' => {
+                out.push(Token { tok: Tok::RBrace, span: span!() });
+                i += 1;
+                col += 1;
+            }
+            '<' => {
+                out.push(Token { tok: Tok::Lt, span: span!() });
+                i += 1;
+                col += 1;
+            }
+            '>' => {
+                out.push(Token { tok: Tok::Gt, span: span!() });
+                i += 1;
+                col += 1;
+            }
+            ',' => {
+                out.push(Token { tok: Tok::Comma, span: span!() });
+                i += 1;
+                col += 1;
+            }
+            '!' => {
+                out.push(Token { tok: Tok::Bang, span: span!() });
+                i += 1;
+                col += 1;
+            }
+            '"' => {
+                let sp = span!();
+                let start = i + 1;
+                let mut j = start;
+                while j < bytes.len() && bytes[j] != b'"' && bytes[j] != b'\n' {
+                    j += 1;
+                }
+                if j >= bytes.len() || bytes[j] != b'"' {
+                    return Err(Error::lex(sp, "unterminated string literal"));
+                }
+                let s = std::str::from_utf8(&bytes[start..j]).expect("input is &str").to_string();
+                col += (j + 1 - i) as u32;
+                i = j + 1;
+                out.push(Token { tok: Tok::Str(s), span: sp });
+            }
+            '@' => {
+                let sp = span!();
+                let (name, len) = take_name(&bytes[i + 1..]);
+                if name.is_empty() {
+                    return Err(Error::lex(sp, "`@` must be followed by a name"));
+                }
+                i += 1 + len;
+                col += 1 + len as u32;
+                out.push(Token { tok: Tok::Global(name), span: sp });
+            }
+            '%' => {
+                let sp = span!();
+                let (name, len) = take_name(&bytes[i + 1..]);
+                if name.is_empty() {
+                    return Err(Error::lex(sp, "`%` must be followed by a name"));
+                }
+                i += 1 + len;
+                col += 1 + len as u32;
+                out.push(Token { tok: Tok::Local(name), span: sp });
+            }
+            '-' | '+' => {
+                let sp = span!();
+                let neg = c == '-';
+                let (v, len) = take_int(&bytes[i + 1..], sp)?;
+                if len == 0 {
+                    return Err(Error::lex(sp, format!("stray `{c}`")));
+                }
+                i += 1 + len;
+                col += 1 + len as u32;
+                out.push(Token { tok: Tok::Int(if neg { -v } else { v }), span: sp });
+            }
+            '0'..='9' => {
+                let sp = span!();
+                let (v, len) = take_int(&bytes[i..], sp)?;
+                i += len;
+                col += len as u32;
+                out.push(Token { tok: Tok::Int(v), span: sp });
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let sp = span!();
+                let (name, len) = take_name(&bytes[i..]);
+                i += len;
+                col += len as u32;
+                out.push(Token { tok: Tok::Ident(name), span: sp });
+            }
+            other => {
+                return Err(Error::lex(span!(), format!("unexpected character `{other}`")));
+            }
+        }
+    }
+    out.push(Token { tok: Tok::Eof, span: Span { line, col } });
+    Ok(out)
+}
+
+/// Take `[A-Za-z0-9_.]*` (names may embed dots: `main.a`; SSA locals may
+/// be numeric). Returns (name, bytes consumed).
+fn take_name(bytes: &[u8]) -> (String, usize) {
+    let mut j = 0;
+    while j < bytes.len() {
+        let b = bytes[j] as char;
+        if b.is_ascii_alphanumeric() || b == '_' || b == '.' {
+            j += 1;
+        } else {
+            break;
+        }
+    }
+    (std::str::from_utf8(&bytes[..j]).expect("ascii").to_string(), j)
+}
+
+/// Take a decimal or 0x-hex integer. Returns (value, bytes consumed).
+fn take_int(bytes: &[u8], sp: Span) -> Result<(i64, usize), Error> {
+    if bytes.len() >= 2 && bytes[0] == b'0' && (bytes[1] == b'x' || bytes[1] == b'X') {
+        let mut j = 2;
+        while j < bytes.len() && bytes[j].is_ascii_hexdigit() {
+            j += 1;
+        }
+        if j == 2 {
+            return Err(Error::lex(sp, "`0x` without hex digits"));
+        }
+        let s = std::str::from_utf8(&bytes[2..j]).expect("ascii");
+        let v = i64::from_str_radix(s, 16).map_err(|e| Error::lex(sp, format!("bad hex literal: {e}")))?;
+        return Ok((v, j));
+    }
+    let mut j = 0;
+    while j < bytes.len() && bytes[j].is_ascii_digit() {
+        j += 1;
+    }
+    if j == 0 {
+        return Ok((0, 0));
+    }
+    let s = std::str::from_utf8(&bytes[..j]).expect("ascii");
+    let v: i64 = s.parse().map_err(|e| Error::lex(sp, format!("bad integer literal: {e}")))?;
+    Ok((v, j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn lexes_instruction() {
+        let toks = kinds("ui18 %1 = add ui18 %a, %b");
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Ident("ui18".into()),
+                Tok::Local("1".into()),
+                Tok::Eq,
+                Tok::Ident("add".into()),
+                Tok::Ident("ui18".into()),
+                Tok::Local("a".into()),
+                Tok::Comma,
+                Tok::Local("b".into()),
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_mem_decl() {
+        let toks = kinds("@mem_a = addrspace(3) <1000 x ui18>");
+        assert!(matches!(&toks[0], Tok::Global(n) if n == "mem_a"));
+        assert!(toks.contains(&Tok::Lt));
+        assert!(toks.contains(&Tok::Int(1000)));
+        assert!(toks.contains(&Tok::Ident("x".into())));
+    }
+
+    #[test]
+    fn lexes_metadata_and_strings() {
+        let toks = kinds("!\"istream\", !\"CONT\", !0, !\"strobj_a\"");
+        assert_eq!(toks.iter().filter(|t| **t == Tok::Bang).count(), 4);
+        assert!(toks.contains(&Tok::Str("istream".into())));
+        assert!(toks.contains(&Tok::Int(0)));
+    }
+
+    #[test]
+    fn comments_are_skipped() {
+        let toks = kinds("; ***** Manage-IR *****\n@a = addrspace(10)");
+        assert!(matches!(&toks[0], Tok::Global(n) if n == "a"));
+    }
+
+    #[test]
+    fn dotted_global() {
+        let toks = kinds("@main.a");
+        assert!(matches!(&toks[0], Tok::Global(n) if n == "main.a"));
+    }
+
+    #[test]
+    fn negative_and_hex_ints() {
+        assert_eq!(kinds("-18")[0], Tok::Int(-18));
+        assert_eq!(kinds("+7")[0], Tok::Int(7));
+        assert_eq!(kinds("0x3FFFF")[0], Tok::Int(0x3FFFF));
+    }
+
+    #[test]
+    fn spans_track_lines() {
+        let toks = lex("a\nb").unwrap();
+        assert_eq!(toks[0].span.line, 1);
+        assert_eq!(toks[1].span.line, 2);
+    }
+
+    #[test]
+    fn rejects_unterminated_string() {
+        assert!(lex("!\"oops").is_err());
+    }
+
+    #[test]
+    fn rejects_stray_sigils() {
+        assert!(lex("@ =").is_err());
+        assert!(lex("% x").is_err());
+        assert!(lex("#").is_err());
+    }
+
+    #[test]
+    fn numeric_local_names() {
+        let toks = kinds("%1 %22");
+        assert!(matches!(&toks[0], Tok::Local(n) if n == "1"));
+        assert!(matches!(&toks[1], Tok::Local(n) if n == "22"));
+    }
+}

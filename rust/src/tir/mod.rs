@@ -1,0 +1,87 @@
+//! The TyTra-IR (TIR) language (paper §5).
+//!
+//! TIR is a strongly, statically typed SSA language with LLVM-flavoured
+//! syntax, split into **Manage-IR** (stream/memory plumbing, the
+//! `launch()` body) and **Compute-IR** (the datapath functions rooted at
+//! `@main`). The concrete grammar accepted here follows the paper's
+//! listings (Figs 5, 7, 9, 11, 15); where the paper redacts syntax the
+//! minimal consistent completion is documented on the parser functions.
+//!
+//! ```text
+//! ; Manage-IR
+//! @mem_a    = addrspace(3) <1000 x ui18>
+//! @strobj_a = addrspace(10), !"source", !"@mem_a"
+//! @k        = const ui18 42
+//! define void @launch() { call @main(...) repeat(1) }
+//!
+//! ; Compute-IR
+//! @main.a = addrspace(12) ui18, !"istream", !"CONT", !0, !"strobj_a"
+//! define void @f1(ui18 %a, ui18 %b, ui18 %c) pipe {
+//!     ui18 %1 = add ui18 %a, %b
+//! }
+//! define void @main(ui18 %a, ui18 %b, ui18 %c) pipe {
+//!     call @f1(%a, %b, %c) pipe
+//! }
+//! ```
+//!
+//! Entry points: [`parse`] (text → [`Module`]), [`validate::validate`]
+//! (SSA/type/structure checks), [`pretty::print`] (canonical text,
+//! roundtrip-stable), [`builder`] (programmatic construction).
+
+pub mod ast;
+pub mod builder;
+pub mod examples;
+pub mod lexer;
+pub mod parser;
+pub mod pretty;
+pub mod token;
+pub mod types;
+pub mod validate;
+
+pub use ast::{
+    addrspace, Call, Const, Continuity, Counter, Dir, Func, Instr, Kind, MemObject, Module, Op,
+    Operand, Port, Stmt, StreamObject,
+};
+pub use types::Ty;
+
+use token::Span;
+
+/// Errors produced by the TIR front half (lexing, parsing, validation).
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Lexical error with source position.
+    #[error("lex error at {span}: {msg}")]
+    Lex { span: Span, msg: String },
+    /// Parse error with source position.
+    #[error("parse error at {span}: {msg}")]
+    Parse { span: Span, msg: String },
+    /// Semantic/validation error.
+    #[error("validation error in `{module}`: {msg}")]
+    Validate { module: String, msg: String },
+}
+
+impl Error {
+    pub(crate) fn lex<S: Into<String>>(span: Span, msg: S) -> Error {
+        Error::Lex { span, msg: msg.into() }
+    }
+    pub(crate) fn parse<S: Into<String>>(span: Span, msg: S) -> Error {
+        Error::Parse { span, msg: msg.into() }
+    }
+    pub(crate) fn validate<S: Into<String>, M: Into<String>>(module: M, msg: S) -> Error {
+        Error::Validate { module: module.into(), msg: msg.into() }
+    }
+}
+
+/// Parse TIR text into a [`Module`] (no validation — call
+/// [`validate::validate`] next, or use [`parse_and_validate`]).
+pub fn parse(src: &str) -> Result<Module, Error> {
+    let toks = lexer::lex(src)?;
+    parser::Parser::new(toks).parse_module()
+}
+
+/// Parse and validate in one step.
+pub fn parse_and_validate(src: &str) -> Result<Module, Error> {
+    let m = parse(src)?;
+    validate::validate(&m)?;
+    Ok(m)
+}

@@ -1,0 +1,591 @@
+//! Recursive-descent parser for TIR text.
+//!
+//! Grammar notes (minimal consistent completion of the paper's listings):
+//!
+//! * Declarations (`@name = ...`) may appear at top level *or* inside the
+//!   `launch()` body (the paper puts them inside `launch`); either way
+//!   they are hoisted into the module maps.
+//! * `addrspace` is matched case-insensitively (the paper's listings mix
+//!   `addrspace` and `addrSpace`).
+//! * The leading result type on instructions (`ui18 %1 = add ...`) is
+//!   optional — LLVM omits it, the paper writes it.
+//! * `call @f(...) kind` takes an optional trailing `repeat(N)`.
+
+use std::collections::BTreeMap;
+
+use super::ast::*;
+use super::token::{Span, Tok, Token};
+use super::types::Ty;
+use super::Error;
+
+/// Parser state over a token stream.
+pub struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    /// Create a parser from lexed tokens.
+    pub fn new(toks: Vec<Token>) -> Parser {
+        Parser { toks, pos: 0 }
+    }
+
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+
+    fn peek2(&self) -> &Tok {
+        &self.toks[(self.pos + 1).min(self.toks.len() - 1)].tok
+    }
+
+    fn span(&self) -> Span {
+        self.toks[self.pos].span
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat(&mut self, want: &Tok) -> Result<(), Error> {
+        if self.peek() == want {
+            self.bump();
+            Ok(())
+        } else {
+            Err(Error::parse(self.span(), format!("expected {want}, found {}", self.peek())))
+        }
+    }
+
+    fn eat_ident(&mut self, kw: &str) -> Result<(), Error> {
+        match self.peek() {
+            Tok::Ident(s) if s == kw => {
+                self.bump();
+                Ok(())
+            }
+            other => Err(Error::parse(self.span(), format!("expected `{kw}`, found {other}"))),
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, Error> {
+        match self.bump() {
+            Tok::Ident(s) => Ok(s),
+            other => Err(Error::parse(self.span(), format!("expected identifier, found {other}"))),
+        }
+    }
+
+    fn global(&mut self) -> Result<String, Error> {
+        match self.bump() {
+            Tok::Global(s) => Ok(s),
+            other => Err(Error::parse(self.span(), format!("expected `@name`, found {other}"))),
+        }
+    }
+
+    fn int(&mut self) -> Result<i64, Error> {
+        match self.bump() {
+            Tok::Int(v) => Ok(v),
+            other => Err(Error::parse(self.span(), format!("expected integer, found {other}"))),
+        }
+    }
+
+    fn ty(&mut self) -> Result<Ty, Error> {
+        let sp = self.span();
+        let s = self.ident()?;
+        Ty::parse(&s).map_err(|e| Error::parse(sp, e))
+    }
+
+    /// Parse a whole module.
+    pub fn parse_module(&mut self) -> Result<Module, Error> {
+        let mut m = Module::new("tir_module");
+        loop {
+            match self.peek().clone() {
+                Tok::Eof => break,
+                Tok::Ident(kw) if kw == "module" => {
+                    self.bump();
+                    m.name = self.global()?;
+                }
+                Tok::Ident(kw) if kw == "define" => self.parse_define(&mut m)?,
+                Tok::Global(_) => self.parse_decl(&mut m)?,
+                other => {
+                    return Err(Error::parse(
+                        self.span(),
+                        format!("expected `define` or a declaration, found {other}"),
+                    ))
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    /// `define void @name(params) kind { body }` or `define void @launch() { calls }`.
+    /// The paper writes `launch` without `@`; both forms are accepted.
+    fn parse_define(&mut self, m: &mut Module) -> Result<(), Error> {
+        self.eat_ident("define")?;
+        self.eat_ident("void")?;
+        let name = match self.bump() {
+            Tok::Global(s) => s,
+            Tok::Ident(s) if s == "launch" => "launch".to_string(),
+            other => return Err(Error::parse(self.span(), format!("expected function name, found {other}"))),
+        };
+        if name == "launch" {
+            self.eat(&Tok::LParen)?;
+            self.eat(&Tok::RParen)?;
+            self.eat(&Tok::LBrace)?;
+            while self.peek() != &Tok::RBrace {
+                match self.peek() {
+                    Tok::Global(_) => self.parse_decl(m)?,
+                    Tok::Ident(kw) if kw == "call" => {
+                        let c = self.parse_call()?;
+                        m.launch.push(c);
+                    }
+                    other => {
+                        return Err(Error::parse(
+                            self.span(),
+                            format!("launch() may contain declarations and calls only, found {other}"),
+                        ))
+                    }
+                }
+            }
+            self.eat(&Tok::RBrace)?;
+            return Ok(());
+        }
+
+        // Ordinary compute function.
+        self.eat(&Tok::LParen)?;
+        let mut params = Vec::new();
+        if self.peek() != &Tok::RParen {
+            loop {
+                let ty = self.ty()?;
+                let pname = match self.bump() {
+                    Tok::Local(s) => s,
+                    other => {
+                        return Err(Error::parse(self.span(), format!("expected `%param`, found {other}")))
+                    }
+                };
+                params.push((pname, ty));
+                if self.peek() == &Tok::Comma {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.eat(&Tok::RParen)?;
+        let kind = self.parse_kind()?;
+        self.eat(&Tok::LBrace)?;
+        let mut body = Vec::new();
+        while self.peek() != &Tok::RBrace {
+            body.push(self.parse_stmt()?);
+        }
+        self.eat(&Tok::RBrace)?;
+        let f = Func { name: name.clone(), params, kind, body };
+        if m.funcs.insert(name.clone(), f).is_some() {
+            return Err(Error::parse(self.span(), format!("duplicate function `@{name}`")));
+        }
+        Ok(())
+    }
+
+    fn parse_kind(&mut self) -> Result<Kind, Error> {
+        let sp = self.span();
+        let s = self.ident()?;
+        match s.as_str() {
+            "pipe" => Ok(Kind::Pipe),
+            "par" => Ok(Kind::Par),
+            "seq" => Ok(Kind::Seq),
+            "comb" => Ok(Kind::Comb),
+            other => Err(Error::parse(sp, format!("expected pipe|par|seq|comb, found `{other}`"))),
+        }
+    }
+
+    fn parse_stmt(&mut self) -> Result<Stmt, Error> {
+        match self.peek() {
+            Tok::Ident(kw) if kw == "call" => Ok(Stmt::Call(self.parse_call()?)),
+            _ => Ok(Stmt::Instr(self.parse_instr()?)),
+        }
+    }
+
+    /// `call @f(args) [kind] [repeat(N)]`.
+    fn parse_call(&mut self) -> Result<Call, Error> {
+        self.eat_ident("call")?;
+        let callee = self.global()?;
+        self.eat(&Tok::LParen)?;
+        let mut args = Vec::new();
+        if self.peek() != &Tok::RParen {
+            loop {
+                args.push(self.parse_operand()?);
+                if self.peek() == &Tok::Comma {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.eat(&Tok::RParen)?;
+        let kind = match self.peek() {
+            Tok::Ident(s) if ["pipe", "par", "seq", "comb"].contains(&s.as_str()) => Some(self.parse_kind()?),
+            _ => None,
+        };
+        let mut repeat = 1u64;
+        if let Tok::Ident(s) = self.peek() {
+            if s == "repeat" {
+                self.bump();
+                self.eat(&Tok::LParen)?;
+                let sp = self.span();
+                let v = self.int()?;
+                if v < 1 {
+                    return Err(Error::parse(sp, "repeat count must be >= 1"));
+                }
+                repeat = v as u64;
+                self.eat(&Tok::RParen)?;
+            }
+        }
+        Ok(Call { callee, args, kind, repeat })
+    }
+
+    /// `[ty] %r = op ty a, b[, c]`.
+    fn parse_instr(&mut self) -> Result<Instr, Error> {
+        // Optional leading result type (the paper writes it, LLVM omits it).
+        if let Tok::Ident(_) = self.peek() {
+            // lookahead: Ident Local Eq => leading type form
+            if !matches!(self.peek2(), Tok::Local(_)) {
+                return Err(Error::parse(self.span(), format!("expected statement, found {}", self.peek())));
+            }
+            let _leading: Ty = self.ty()?; // must parse as a type
+        }
+        let result = match self.bump() {
+            Tok::Local(s) => s,
+            other => return Err(Error::parse(self.span(), format!("expected `%result`, found {other}"))),
+        };
+        self.eat(&Tok::Eq)?;
+        let sp = self.span();
+        let op_name = self.ident()?;
+        let op = Op::parse(&op_name)
+            .ok_or_else(|| Error::parse(sp, format!("unknown opcode `{op_name}`")))?;
+        let ty = self.ty()?;
+        let mut operands = Vec::new();
+        loop {
+            operands.push(self.parse_operand()?);
+            if self.peek() == &Tok::Comma {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        Ok(Instr { result, ty, op, operands })
+    }
+
+    fn parse_operand(&mut self) -> Result<Operand, Error> {
+        match self.bump() {
+            Tok::Local(s) => Ok(Operand::Local(s)),
+            Tok::Global(s) => Ok(Operand::Global(s)),
+            Tok::Int(v) => Ok(Operand::Imm(v)),
+            other => Err(Error::parse(self.span(), format!("expected operand, found {other}"))),
+        }
+    }
+
+    /// Dispatch a `@name = ...` declaration.
+    fn parse_decl(&mut self, m: &mut Module) -> Result<(), Error> {
+        let name = self.global()?;
+        self.eat(&Tok::Eq)?;
+        match self.peek().clone() {
+            Tok::Ident(kw) if kw == "const" => {
+                self.bump();
+                let ty = self.ty()?;
+                let value = self.int()?;
+                m.consts.insert(name.clone(), Const { name, ty, value });
+                Ok(())
+            }
+            Tok::Ident(kw) if kw == "counter" => {
+                self.bump();
+                self.eat(&Tok::LParen)?;
+                let from = self.int()?;
+                self.eat(&Tok::Comma)?;
+                let to = self.int()?;
+                self.eat(&Tok::RParen)?;
+                let mut nest = None;
+                if let Tok::Ident(s) = self.peek() {
+                    if s == "nest" {
+                        self.bump();
+                        self.eat(&Tok::LParen)?;
+                        nest = Some(self.global()?);
+                        self.eat(&Tok::RParen)?;
+                    }
+                }
+                m.counters.insert(name.clone(), Counter { name, from, to, nest });
+                Ok(())
+            }
+            Tok::Ident(kw) if kw.eq_ignore_ascii_case("addrspace") => {
+                self.bump();
+                self.eat(&Tok::LParen)?;
+                let sp = self.span();
+                let space = self.int()?;
+                if space < 0 {
+                    return Err(Error::parse(sp, "addrspace must be non-negative"));
+                }
+                let space = space as u32;
+                self.eat(&Tok::RParen)?;
+                self.parse_addrspace_decl(m, name, space)
+            }
+            other => Err(Error::parse(
+                self.span(),
+                format!("expected const|counter|addrspace after `@{name} =`, found {other}"),
+            )),
+        }
+    }
+
+    /// Continue after `@name = addrspace(N)`.
+    fn parse_addrspace_decl(&mut self, m: &mut Module, name: String, space: u32) -> Result<(), Error> {
+        match self.peek().clone() {
+            // Memory object: `<1000 x ui18>` (+ignored metadata)
+            Tok::Lt => {
+                self.bump();
+                let sp = self.span();
+                let elems = self.int()?;
+                if elems <= 0 {
+                    return Err(Error::parse(sp, "memory object needs a positive element count"));
+                }
+                self.eat_ident("x")?;
+                let ty = self.ty()?;
+                self.eat(&Tok::Gt)?;
+                let _ = self.parse_metadata()?;
+                if space != addrspace::GLOBAL && space != addrspace::LOCAL {
+                    return Err(Error::parse(
+                        sp,
+                        format!("memory objects live in addrspace {} or {}, got {space}", addrspace::GLOBAL, addrspace::LOCAL),
+                    ));
+                }
+                m.mems.insert(name.clone(), MemObject { name, space, elems: elems as u64, ty });
+                Ok(())
+            }
+            // Port: `ui18, !"istream", ...` (addrspace 12)
+            Tok::Ident(_) if space == addrspace::PORT => {
+                let ty = self.ty()?;
+                let sp = self.span();
+                let meta = self.parse_metadata()?;
+                let port = port_from_meta(name, ty, meta).map_err(|e| Error::parse(sp, e))?;
+                m.ports.insert(port.name.clone(), port);
+                Ok(())
+            }
+            // Stream object: metadata only (addrspace 10)
+            _ if space == addrspace::STREAM => {
+                let sp = self.span();
+                let meta = self.parse_metadata()?;
+                let so = stream_from_meta(name, meta).map_err(|e| Error::parse(sp, e))?;
+                m.streams.insert(so.name.clone(), so);
+                Ok(())
+            }
+            other => Err(Error::parse(
+                self.span(),
+                format!("malformed addrspace({space}) declaration at {other}"),
+            )),
+        }
+    }
+
+    /// Parse `[, ] !item [, !item]*` metadata; items are strings or ints.
+    fn parse_metadata(&mut self) -> Result<Vec<Meta>, Error> {
+        let mut out = Vec::new();
+        loop {
+            // Optional comma before each item (paper style: `ui18, !"istream"`).
+            let save = self.pos;
+            if self.peek() == &Tok::Comma {
+                self.bump();
+            }
+            if self.peek() != &Tok::Bang {
+                self.pos = save;
+                break;
+            }
+            self.bump(); // !
+            match self.bump() {
+                Tok::Str(s) => out.push(Meta::Str(s)),
+                Tok::Int(v) => out.push(Meta::Int(v)),
+                other => {
+                    return Err(Error::parse(self.span(), format!("expected metadata string or int, found {other}")))
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// A metadata item: `!"str"` or `!42`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Meta {
+    Str(String),
+    Int(i64),
+}
+
+/// Interpret port metadata: direction, continuity, offset, stream name.
+fn port_from_meta(name: String, ty: Ty, meta: Vec<Meta>) -> Result<Port, String> {
+    let mut dir = None;
+    let mut continuity = Continuity::Cont;
+    let mut offset = 0i64;
+    let mut stream = None;
+    for item in meta {
+        match item {
+            Meta::Str(s) => match s.as_str() {
+                "istream" => dir = Some(Dir::Read),
+                "ostream" => dir = Some(Dir::Write),
+                "CONT" => continuity = Continuity::Cont,
+                "FIFO" => continuity = Continuity::Fifo,
+                other => stream = Some(other.trim_start_matches('@').to_string()),
+            },
+            Meta::Int(v) => offset = v,
+        }
+    }
+    let dir = dir.ok_or_else(|| format!("port `@{name}` missing !\"istream\"/!\"ostream\""))?;
+    let stream = stream.ok_or_else(|| format!("port `@{name}` missing stream-object metadata"))?;
+    Ok(Port { name, ty, dir, continuity, offset, stream })
+}
+
+/// Interpret stream-object metadata: direction + backing memory.
+fn stream_from_meta(name: String, meta: Vec<Meta>) -> Result<StreamObject, String> {
+    let mut dir = None;
+    let mut mem = None;
+    for item in meta {
+        match item {
+            Meta::Str(s) => match s.as_str() {
+                "source" => dir = Some(Dir::Read),
+                "dest" => dir = Some(Dir::Write),
+                other => mem = Some(other.trim_start_matches('@').to_string()),
+            },
+            Meta::Int(_) => {}
+        }
+    }
+    let dir = dir.ok_or_else(|| format!("stream `@{name}` missing !\"source\"/!\"dest\""))?;
+    let mem = mem.ok_or_else(|| format!("stream `@{name}` missing !\"@mem\" metadata"))?;
+    Ok(StreamObject { name, mem, dir })
+}
+
+/// Convenience: a map of instruction results to their instruction, for
+/// dependency analysis in the estimator and scheduler.
+pub fn def_map(f: &Func) -> BTreeMap<&str, &Instr> {
+    f.body
+        .iter()
+        .filter_map(|s| match s {
+            Stmt::Instr(i) => Some((i.result.as_str(), i)),
+            _ => None,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{parse, Error};
+    use super::*;
+
+    #[test]
+    fn parses_fig5() {
+        let m = parse(&crate::tir::examples::fig5_seq()).unwrap();
+        assert_eq!(m.mems.len(), 4);
+        assert_eq!(m.streams.len(), 4);
+        assert_eq!(m.ports.len(), 4);
+        assert_eq!(m.funcs.len(), 2);
+        assert_eq!(m.launch.len(), 1);
+        assert_eq!(m.consts["k"].value, 42);
+        let f1 = &m.funcs["f1"];
+        assert_eq!(f1.kind, Kind::Seq);
+        assert_eq!(f1.body.len(), 4);
+        assert_eq!(m.work_items(), 1000);
+    }
+
+    #[test]
+    fn parses_instr_forms() {
+        // with and without leading result type
+        let src = "define void @f (ui18 %a) comb { ui18 %1 = add ui18 %a, %a\n %2 = mul ui18 %1, 3 }";
+        let m = parse(src).unwrap();
+        let f = &m.funcs["f"];
+        assert_eq!(f.body.len(), 2);
+        match &f.body[1] {
+            Stmt::Instr(i) => {
+                assert_eq!(i.op, Op::Mul);
+                assert_eq!(i.operands[1], Operand::Imm(3));
+            }
+            _ => panic!("expected instr"),
+        }
+    }
+
+    #[test]
+    fn parses_call_kind_and_repeat() {
+        let src = "define void launch() { call @main () repeat(20) }\n define void @main () pipe { %1 = add ui18 1, 2 }";
+        let m = parse(src).unwrap();
+        assert_eq!(m.launch[0].repeat, 20);
+        assert_eq!(m.launch[0].kind, None);
+        let src2 = "define void @g (ui18 %x) par { call @h (%x) pipe }\n define void @h (ui18 %x) pipe { %1 = add ui18 %x, 1 }";
+        let m2 = parse(src2).unwrap();
+        match &m2.funcs["g"].body[0] {
+            Stmt::Call(c) => assert_eq!(c.kind, Some(Kind::Pipe)),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_counters_with_nesting() {
+        let src = "@ctr_j = counter(0, 17)\n@ctr_i = counter(0, 17) nest(@ctr_j)";
+        let m = parse(src).unwrap();
+        assert_eq!(m.counters.len(), 2);
+        assert_eq!(m.counters["ctr_i"].nest.as_deref(), Some("ctr_j"));
+        assert_eq!(m.work_items(), 324);
+    }
+
+    #[test]
+    fn parses_port_offsets() {
+        let src = r#"@main.n = addrspace(12) ui18, !"istream", !"CONT", !-18, !"strobj_p""#;
+        let m = parse(src).unwrap();
+        assert_eq!(m.ports["main.n"].offset, -18);
+    }
+
+    #[test]
+    fn mac_three_operands() {
+        let src = "define void @f (ui18 %a) comb { %1 = mac ui18 %a, %a, %a }";
+        let m = parse(src).unwrap();
+        match &m.funcs["f"].body[0] {
+            Stmt::Instr(i) => assert_eq!(i.operands.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_duplicate_function() {
+        let src = "define void @f () comb { %1 = add ui18 1, 1 }\ndefine void @f () comb { %1 = add ui18 1, 1 }";
+        assert!(matches!(parse(src), Err(Error::Parse { .. })));
+    }
+
+    #[test]
+    fn rejects_unknown_opcode() {
+        let src = "define void @f () comb { %1 = spin ui18 1, 1 }";
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn rejects_port_without_direction() {
+        let src = r#"@main.a = addrspace(12) ui18, !"CONT", !"strobj_a""#;
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn rejects_stream_without_mem() {
+        let src = r#"@s = addrspace(10), !"source""#;
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_repeat() {
+        let src = "define void launch() { call @main () repeat(0) }";
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn rejects_mem_in_wrong_space() {
+        let src = "@m = addrspace(12) <10 x ui18>";
+        assert!(parse(src).is_err());
+    }
+
+    #[test]
+    fn def_map_collects_results() {
+        let m = parse("define void @f (ui18 %a) comb { %1 = add ui18 %a, %a\n%2 = add ui18 %1, %1 }").unwrap();
+        let dm = def_map(&m.funcs["f"]);
+        assert!(dm.contains_key("1") && dm.contains_key("2"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Token definitions for the TIR lexer.
+
+use std::fmt;
+
+/// Source position (1-based line, 1-based column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.line, self.col)
+    }
+}
+
+/// Lexical token kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Bare identifier / keyword (`define`, `pipe`, `add`, `ui18`, `x`).
+    Ident(String),
+    /// `@name` global (dots allowed: `@main.a`).
+    Global(String),
+    /// `%name` SSA local (alphanumeric: `%1`, `%a`).
+    Local(String),
+    /// Integer literal (decimal or 0x hex, optionally signed).
+    Int(i64),
+    /// `"..."` string literal (no escapes needed by the grammar).
+    Str(String),
+    /// `!` metadata sigil.
+    Bang,
+    Eq,
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    Lt,
+    Gt,
+    Comma,
+    /// End of input.
+    Eof,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "`{s}`"),
+            Tok::Global(s) => write!(f, "`@{s}`"),
+            Tok::Local(s) => write!(f, "`%{s}`"),
+            Tok::Int(v) => write!(f, "`{v}`"),
+            Tok::Str(s) => write!(f, "\"{s}\""),
+            Tok::Bang => write!(f, "`!`"),
+            Tok::Eq => write!(f, "`=`"),
+            Tok::LParen => write!(f, "`(`"),
+            Tok::RParen => write!(f, "`)`"),
+            Tok::LBrace => write!(f, "`{{`"),
+            Tok::RBrace => write!(f, "`}}`"),
+            Tok::Lt => write!(f, "`<`"),
+            Tok::Gt => write!(f, "`>`"),
+            Tok::Comma => write!(f, "`,`"),
+            Tok::Eof => write!(f, "end of input"),
+        }
+    }
+}
+
+/// A token with its source position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub span: Span,
+}

@@ -1,0 +1,179 @@
+//! TIR scalar type system: custom-width integers and fixed-point.
+//!
+//! Requirement 4 of the paper (§4): "allow custom number representations
+//! to fully utilize the flexibility of FPGAs". The paper's listings use
+//! `ui18`; the TIR grammar here accepts:
+//!
+//! * `uiN` — unsigned integer, 1 ≤ N ≤ 64
+//! * `siN` — signed (two's complement) integer, 2 ≤ N ≤ 64
+//! * `fixI.F` — signed fixed point with I integer and F fractional bits
+//!   (total width I+F ≤ 64)
+//! * `f32` / `f64` — parsed and type-checked, but (exactly like the
+//!   paper's prototype, §8 footnote 2) rejected by the estimator and
+//!   simulator with a clear diagnostic.
+
+use std::fmt;
+
+/// A TIR scalar type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Ty {
+    /// Unsigned integer of the given bit width.
+    UInt(u8),
+    /// Signed two's-complement integer of the given bit width.
+    SInt(u8),
+    /// Signed fixed point: integer bits, fractional bits.
+    Fixed(u8, u8),
+    /// IEEE single precision (parse-only; see module docs).
+    F32,
+    /// IEEE double precision (parse-only; see module docs).
+    F64,
+}
+
+impl Ty {
+    /// Total storage width in bits.
+    pub fn bits(&self) -> u32 {
+        match *self {
+            Ty::UInt(n) | Ty::SInt(n) => n as u32,
+            Ty::Fixed(i, f) => i as u32 + f as u32,
+            Ty::F32 => 32,
+            Ty::F64 => 64,
+        }
+    }
+
+    /// True for the integer/fixed types the prototype datapath supports.
+    pub fn is_synthesizable(&self) -> bool {
+        !matches!(self, Ty::F32 | Ty::F64)
+    }
+
+    /// True for signed representations.
+    pub fn is_signed(&self) -> bool {
+        matches!(self, Ty::SInt(_) | Ty::Fixed(_, _) | Ty::F32 | Ty::F64)
+    }
+
+    /// Wraparound mask for unsigned arithmetic (`2^bits - 1`).
+    pub fn mask(&self) -> u64 {
+        let b = self.bits();
+        if b >= 64 { u64::MAX } else { (1u64 << b) - 1 }
+    }
+
+    /// May a value of type `from` flow into an operand slot of type
+    /// `self` without an explicit conversion? TIR permits *implicit
+    /// widening* within a signedness class (`ui18 → ui20`,
+    /// `si8 → si32`, `fix4.14 → fix8.14`): hardware datapaths grow
+    /// operand widths for exactness (the SOR kernel's Q14 multiplies),
+    /// and zero/sign-extension is free wiring on the fabric. Narrowing
+    /// and cross-class flows require explicit ops.
+    pub fn accepts(&self, from: &Ty) -> bool {
+        if self == from {
+            return true;
+        }
+        match (self, from) {
+            (Ty::UInt(a), Ty::UInt(b)) => a >= b,
+            (Ty::SInt(a), Ty::SInt(b)) => a >= b,
+            (Ty::Fixed(ai, af), Ty::Fixed(bi, bf)) => ai >= bi && af == bf,
+            _ => false,
+        }
+    }
+
+    /// Parse a type token such as `ui18`, `si32`, `fix4.14`, `f32`.
+    pub fn parse(s: &str) -> Result<Ty, String> {
+        if s == "f32" || s == "float" {
+            return Ok(Ty::F32);
+        }
+        if s == "f64" || s == "double" {
+            return Ok(Ty::F64);
+        }
+        if let Some(rest) = s.strip_prefix("ui") {
+            let n: u8 = rest.parse().map_err(|_| format!("bad width in `{s}`"))?;
+            if n == 0 || n > 64 {
+                return Err(format!("ui width out of range 1..=64 in `{s}`"));
+            }
+            return Ok(Ty::UInt(n));
+        }
+        if let Some(rest) = s.strip_prefix("si") {
+            let n: u8 = rest.parse().map_err(|_| format!("bad width in `{s}`"))?;
+            if n < 2 || n > 64 {
+                return Err(format!("si width out of range 2..=64 in `{s}`"));
+            }
+            return Ok(Ty::SInt(n));
+        }
+        if let Some(rest) = s.strip_prefix("fix") {
+            let (i, f) = rest
+                .split_once('.')
+                .ok_or_else(|| format!("fixed type needs I.F in `{s}`"))?;
+            let i: u8 = i.parse().map_err(|_| format!("bad integer bits in `{s}`"))?;
+            let f: u8 = f.parse().map_err(|_| format!("bad fraction bits in `{s}`"))?;
+            if i as u32 + f as u32 == 0 || i as u32 + f as u32 > 64 {
+                return Err(format!("fix total width out of range 1..=64 in `{s}`"));
+            }
+            return Ok(Ty::Fixed(i, f));
+        }
+        Err(format!("unknown type `{s}`"))
+    }
+}
+
+impl fmt::Display for Ty {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Ty::UInt(n) => write!(f, "ui{n}"),
+            Ty::SInt(n) => write!(f, "si{n}"),
+            Ty::Fixed(i, fr) => write!(f, "fix{i}.{fr}"),
+            Ty::F32 => write!(f, "f32"),
+            Ty::F64 => write!(f, "f64"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_ui18() {
+        assert_eq!(Ty::parse("ui18").unwrap(), Ty::UInt(18));
+        assert_eq!(Ty::parse("ui18").unwrap().bits(), 18);
+        assert_eq!(Ty::parse("ui18").unwrap().mask(), 0x3FFFF);
+    }
+
+    #[test]
+    fn parse_signed_and_fixed() {
+        assert_eq!(Ty::parse("si32").unwrap(), Ty::SInt(32));
+        assert_eq!(Ty::parse("fix4.14").unwrap(), Ty::Fixed(4, 14));
+        assert_eq!(Ty::parse("fix4.14").unwrap().bits(), 18);
+        assert!(Ty::parse("fix4.14").unwrap().is_signed());
+    }
+
+    #[test]
+    fn parse_floats_flagged_unsynthesizable() {
+        for s in ["f32", "float", "f64", "double"] {
+            let t = Ty::parse(s).unwrap();
+            assert!(!t.is_synthesizable());
+        }
+        assert!(Ty::parse("ui18").unwrap().is_synthesizable());
+    }
+
+    #[test]
+    fn rejects_bad_widths() {
+        assert!(Ty::parse("ui0").is_err());
+        assert!(Ty::parse("ui65").is_err());
+        assert!(Ty::parse("si1").is_err());
+        assert!(Ty::parse("fix40.40").is_err());
+        assert!(Ty::parse("fix14").is_err());
+        assert!(Ty::parse("int").is_err());
+        assert!(Ty::parse("uixx").is_err());
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for s in ["ui18", "si32", "fix4.14", "f32", "f64", "ui64", "si2"] {
+            let t = Ty::parse(s).unwrap();
+            assert_eq!(Ty::parse(&t.to_string()).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn mask_full_width() {
+        assert_eq!(Ty::UInt(64).mask(), u64::MAX);
+        assert_eq!(Ty::UInt(1).mask(), 1);
+    }
+}

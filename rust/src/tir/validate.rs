@@ -1,0 +1,453 @@
+//! Semantic validation of a parsed [`Module`]: SSA discipline, static
+//! typing, structural rules (paper §5: "strongly and statically typed,
+//! all computations expressed using Static Single Assignments").
+//!
+//! Checks, in order:
+//!
+//! 1. object references resolve (port→stream→memory, counter nesting,
+//!    call targets);
+//! 2. per-function SSA: unique definitions, defined-before-use, operand
+//!    arity;
+//! 3. monomorphic typing per instruction (operand types equal the
+//!    instruction type; immediates must fit the type's width);
+//! 4. kind-nesting rules (which function kinds may call which);
+//! 5. call-graph acyclicity and argument arity;
+//! 6. `launch()` sanity: at least one call, targets exist, kind
+//!    annotations (when present) match the callee.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::ast::*;
+use super::types::Ty;
+use super::Error;
+
+/// Validate a module; returns the first violation found.
+pub fn validate(m: &Module) -> Result<(), Error> {
+    let err = |msg: String| Err(Error::validate(m.name.clone(), msg));
+
+    // --- 1. object references ------------------------------------------------
+    for p in m.ports.values() {
+        let Some(s) = m.streams.get(&p.stream) else {
+            return err(format!("port `@{}` references unknown stream `{}`", p.name, p.stream));
+        };
+        if s.dir != p.dir {
+            return err(format!(
+                "port `@{}` direction conflicts with stream `@{}` ({:?} vs {:?})",
+                p.name, s.name, p.dir, s.dir
+            ));
+        }
+        if !m.mems.contains_key(&s.mem) {
+            return err(format!("stream `@{}` references unknown memory `{}`", s.name, s.mem));
+        }
+    }
+    for s in m.streams.values() {
+        if !m.mems.contains_key(&s.mem) {
+            return err(format!("stream `@{}` references unknown memory `{}`", s.name, s.mem));
+        }
+    }
+    // Counter nesting must resolve and be acyclic.
+    for c in m.counters.values() {
+        let mut seen = BTreeSet::new();
+        let mut cur = c;
+        seen.insert(cur.name.clone());
+        while let Some(inner) = &cur.nest {
+            let Some(next) = m.counters.get(inner) else {
+                return err(format!("counter `@{}` nests unknown counter `@{inner}`", c.name));
+            };
+            if !seen.insert(next.name.clone()) {
+                return err(format!("counter nesting cycle through `@{}`", next.name));
+            }
+            cur = next;
+        }
+    }
+
+    // --- 2..4. per-function checks -------------------------------------------
+    for f in m.funcs.values() {
+        validate_func(m, f)?;
+    }
+
+    // --- 5. call graph -------------------------------------------------------
+    check_call_graph(m)?;
+
+    // --- 6. launch -----------------------------------------------------------
+    for c in &m.launch {
+        let Some(callee) = m.funcs.get(&c.callee) else {
+            return err(format!("launch() calls unknown function `@{}`", c.callee));
+        };
+        if let Some(k) = c.kind {
+            if k != callee.kind {
+                return err(format!(
+                    "launch() call annotates `@{}` as {k} but it is {}",
+                    c.callee, callee.kind
+                ));
+            }
+        }
+    }
+    if !m.funcs.is_empty() && m.main().is_none() {
+        return err("module defines functions but no `@main`".into());
+    }
+    Ok(())
+}
+
+/// Check that every type used by the datapath is synthesizable by the
+/// prototype (mirrors the paper's footnote: float semantics exist in the
+/// language, the compiler does not support them yet).
+pub fn require_synthesizable(m: &Module) -> Result<(), Error> {
+    for f in m.funcs.values() {
+        for s in &f.body {
+            if let Stmt::Instr(i) = s {
+                if !i.ty.is_synthesizable() {
+                    return Err(Error::validate(
+                        m.name.clone(),
+                        format!(
+                            "instruction `%{}` in `@{}` uses `{}`: floating point is parsed but not \
+                             supported by the prototype estimator/simulator (paper §8 footnote 2)",
+                            i.result, f.name, i.ty
+                        ),
+                    ));
+                }
+            }
+        }
+        for (p, ty) in &f.params {
+            if !ty.is_synthesizable() {
+                return Err(Error::validate(
+                    m.name.clone(),
+                    format!("parameter `%{p}` of `@{}` uses unsupported type `{ty}`", f.name),
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn validate_func(m: &Module, f: &Func) -> Result<(), Error> {
+    let err = |msg: String| Err(Error::validate(m.name.clone(), msg));
+
+    // Environment: params + consts + ports (globals). A `call` imports
+    // the callee's SSA results into this scope (the paper's Fig 7 uses
+    // `%1`/`%2` from the called `@f1` inside `@f2` — calls to par/comb
+    // children are inlined pipeline stages). When the same name would be
+    // imported twice (replicated calls, Fig 9) it becomes *ambiguous*:
+    // present but unusable.
+    let mut local_ty: BTreeMap<&str, Ty> = BTreeMap::new();
+    let mut ambiguous: BTreeSet<&str> = BTreeSet::new();
+    for (p, ty) in &f.params {
+        if local_ty.insert(p.as_str(), *ty).is_some() {
+            return err(format!("duplicate parameter `%{p}` in `@{}`", f.name));
+        }
+    }
+
+    for (idx, s) in f.body.iter().enumerate() {
+        match s {
+            Stmt::Instr(i) => {
+                if i.operands.len() != i.op.arity() {
+                    return err(format!(
+                        "`%{}` in `@{}`: `{}` takes {} operands, got {}",
+                        i.result,
+                        f.name,
+                        i.op,
+                        i.op.arity(),
+                        i.operands.len()
+                    ));
+                }
+                for opnd in &i.operands {
+                    match opnd {
+                        Operand::Local(n) => {
+                            if ambiguous.contains(n.as_str()) {
+                                return err(format!(
+                                    "`%{}` in `@{}` uses `%{n}`, which is ambiguous (imported \
+                                     from more than one call)",
+                                    i.result, f.name
+                                ));
+                            }
+                            let Some(t) = local_ty.get(n.as_str()) else {
+                                return err(format!(
+                                    "`%{}` in `@{}` uses `%{n}` before definition (SSA)",
+                                    i.result, f.name
+                                ));
+                            };
+                            if !i.ty.accepts(t) {
+                                return err(format!(
+                                    "type mismatch in `@{}` stmt {idx}: `%{n}` is {t}, instruction is {} \
+                                     (only implicit widening is allowed)",
+                                    f.name, i.ty
+                                ));
+                            }
+                        }
+                        Operand::Global(g) => {
+                            let gty = m
+                                .consts
+                                .get(g)
+                                .map(|c| c.ty)
+                                .or_else(|| m.ports.get(g).map(|p| p.ty));
+                            let Some(gty) = gty else {
+                                return err(format!(
+                                    "`%{}` in `@{}` references unknown global `@{g}`",
+                                    i.result, f.name
+                                ));
+                            };
+                            if !i.ty.accepts(&gty) {
+                                return err(format!(
+                                    "type mismatch in `@{}`: `@{g}` is {gty}, instruction is {} \
+                                     (only implicit widening is allowed)",
+                                    f.name, i.ty
+                                ));
+                            }
+                        }
+                        Operand::Imm(v) => {
+                            // Immediates must fit the width (shift amounts too).
+                            let bits = i.ty.bits();
+                            if bits < 64 && !i.ty.is_signed() && (*v < 0 || (*v as u64) > i.ty.mask()) {
+                                return err(format!(
+                                    "immediate {v} does not fit `{}` in `@{}`",
+                                    i.ty, f.name
+                                ));
+                            }
+                        }
+                    }
+                }
+                if local_ty.insert(i.result.as_str(), i.ty).is_some() && !ambiguous.contains(i.result.as_str()) {
+                    return err(format!("SSA violation: `%{}` redefined in `@{}`", i.result, f.name));
+                }
+            }
+            Stmt::Call(c) => {
+                let Some(callee) = m.funcs.get(&c.callee) else {
+                    return err(format!("`@{}` calls unknown function `@{}`", f.name, c.callee));
+                };
+                if let Some(k) = c.kind {
+                    if k != callee.kind {
+                        return err(format!(
+                            "`@{}` annotates call to `@{}` as {k}, but it is {}",
+                            f.name, c.callee, callee.kind
+                        ));
+                    }
+                }
+                if !callee.params.is_empty() && c.args.len() != callee.params.len() {
+                    return err(format!(
+                        "`@{}` calls `@{}` with {} args, expected {}",
+                        f.name,
+                        c.callee,
+                        c.args.len(),
+                        callee.params.len()
+                    ));
+                }
+                // Kind-nesting rules (paper §6): what may contain what.
+                let ok = match f.kind {
+                    Kind::Pipe => matches!(callee.kind, Kind::Par | Kind::Comb | Kind::Pipe),
+                    Kind::Par => true, // par replicates anything
+                    Kind::Seq => matches!(callee.kind, Kind::Comb | Kind::Seq),
+                    Kind::Comb => matches!(callee.kind, Kind::Comb),
+                };
+                if !ok {
+                    return err(format!(
+                        "kind nesting violation: {} `@{}` may not call {} `@{}`",
+                        f.kind, f.name, callee.kind, c.callee
+                    ));
+                }
+                // Import the callee's SSA results into this scope; a name
+                // imported twice (or colliding with a local) is poisoned.
+                for stmt in &callee.body {
+                    if let Stmt::Instr(ci) = stmt {
+                        let name = ci.result.as_str();
+                        // Find the interned &str living in the callee AST —
+                        // lifetime is tied to `m`, same as everything else.
+                        if local_ty.insert(name, ci.ty).is_some() {
+                            ambiguous.insert(name);
+                        }
+                    }
+                }
+                if c.repeat > 1 && f.name != "main" {
+                    // repeat is a kernel-level chaining construct (launch or main).
+                    return err(format!(
+                        "`repeat` on call to `@{}` inside `@{}`: only launch()/@main may chain passes",
+                        c.callee, f.name
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Reject recursion: the call graph must be a DAG (hardware is spatial).
+fn check_call_graph(m: &Module) -> Result<(), Error> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Mark {
+        White,
+        Grey,
+        Black,
+    }
+    let mut marks: BTreeMap<&str, Mark> = m.funcs.keys().map(|k| (k.as_str(), Mark::White)).collect();
+
+    fn dfs<'a>(
+        m: &'a Module,
+        f: &'a str,
+        marks: &mut BTreeMap<&'a str, Mark>,
+    ) -> Result<(), String> {
+        marks.insert(f, Mark::Grey);
+        let func = &m.funcs[f];
+        for c in m.calls_of(func) {
+            match marks.get(c.callee.as_str()) {
+                Some(Mark::Grey) => {
+                    return Err(format!("recursive call cycle through `@{}`", c.callee));
+                }
+                Some(Mark::White) => dfs(m, m.funcs[&c.callee].name.as_str(), marks)?,
+                _ => {}
+            }
+        }
+        marks.insert(f, Mark::Black);
+        Ok(())
+    }
+
+    let names: Vec<&str> = m.funcs.keys().map(|s| s.as_str()).collect();
+    for name in names {
+        if marks[name] == Mark::White {
+            dfs(m, name, &mut marks).map_err(|e| Error::validate(m.name.clone(), e))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{parse, parse_and_validate};
+    use super::*;
+
+    fn fig5() -> Module {
+        parse(&crate::tir::examples::fig5_seq()).unwrap()
+    }
+
+    #[test]
+    fn fig5_validates() {
+        validate(&fig5()).unwrap();
+        require_synthesizable(&fig5()).unwrap();
+    }
+
+    #[test]
+    fn call_imports_callee_results() {
+        // Fig 7 pattern: %1/%2 defined in @f1, used in @f2 after the call.
+        let m = parse(&crate::tir::examples::fig7_pipe()).unwrap();
+        validate(&m).unwrap();
+    }
+
+    #[test]
+    fn replicated_import_is_ambiguous() {
+        let src = "define void @f (ui18 %a) comb { %1 = add ui18 %a, %a }\n\
+                   define void @main (ui18 %a) pipe { call @f (%a) comb\n call @f (%a) comb\n %2 = add ui18 %1, %1 }";
+        let e = parse_and_validate(src).unwrap_err();
+        assert!(e.to_string().contains("ambiguous"), "{e}");
+    }
+
+    #[test]
+    fn rejects_use_before_def() {
+        let src = "define void @main () comb { %1 = add ui18 %2, %2 }";
+        let e = parse_and_validate(src).unwrap_err();
+        assert!(e.to_string().contains("SSA"), "{e}");
+    }
+
+    #[test]
+    fn rejects_redefinition() {
+        let src = "define void @main (ui18 %a) comb { %1 = add ui18 %a, %a\n%1 = add ui18 %a, %a }";
+        let e = parse_and_validate(src).unwrap_err();
+        assert!(e.to_string().contains("redefined"), "{e}");
+    }
+
+    #[test]
+    fn widening_is_implicit_narrowing_rejected() {
+        // ui18 operands may feed a ui20 instruction (free zero-extension)…
+        let widen = "define void @main (ui18 %a) comb { ui18 %1 = add ui18 %a, %a\n ui20 %2 = add ui20 %1, %1 }";
+        parse_and_validate(widen).unwrap();
+        // …but a ui20 value may not silently narrow into a ui18 op…
+        let narrow = "define void @main (ui18 %a) comb { ui20 %1 = add ui20 %a, %a\n ui18 %2 = add ui18 %1, %1 }";
+        assert!(parse_and_validate(narrow).is_err());
+        // …and unsigned may not flow into signed implicitly.
+        let cross = "define void @main (ui18 %a) comb { si32 %1 = add si32 %a, %a }";
+        assert!(parse_and_validate(cross).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_global() {
+        let src = "define void @main (ui18 %a) comb { %1 = add ui18 %a, @nope }";
+        let e = parse_and_validate(src).unwrap_err();
+        assert!(e.to_string().contains("unknown global"), "{e}");
+    }
+
+    #[test]
+    fn rejects_oversized_immediate() {
+        let src = "define void @main (ui18 %a) comb { %1 = add ui18 %a, 300000 }";
+        assert!(parse_and_validate(src).is_err());
+        let ok = "define void @main (ui18 %a) comb { %1 = add ui18 %a, 262143 }";
+        parse_and_validate(ok).unwrap();
+    }
+
+    #[test]
+    fn rejects_recursion() {
+        let src = "define void @main () pipe { call @main () pipe }";
+        let e = parse_and_validate(src).unwrap_err();
+        assert!(e.to_string().contains("recursive"), "{e}");
+    }
+
+    #[test]
+    fn rejects_kind_nesting_violation() {
+        // seq may not call pipe
+        let src = "define void @p () pipe { %1 = add ui18 1, 1 }\ndefine void @main () seq { call @p () pipe }";
+        let e = parse_and_validate(src).unwrap_err();
+        assert!(e.to_string().contains("kind nesting"), "{e}");
+    }
+
+    #[test]
+    fn rejects_call_kind_mismatch() {
+        let src = "define void @f () par { %1 = add ui18 1, 1 }\ndefine void @main () pipe { call @f () comb }";
+        let e = parse_and_validate(src).unwrap_err();
+        assert!(e.to_string().contains("annotates"), "{e}");
+    }
+
+    #[test]
+    fn rejects_port_stream_dir_conflict() {
+        let src = r#"
+@mem_a = addrspace(3) <8 x ui18>
+@s = addrspace(10), !"source", !"@mem_a"
+@main.y = addrspace(12) ui18, !"ostream", !"CONT", !0, !"s"
+define void @main () pipe { %1 = add ui18 1, 1 }
+"#;
+        let e = parse_and_validate(src).unwrap_err();
+        assert!(e.to_string().contains("direction conflicts"), "{e}");
+    }
+
+    #[test]
+    fn rejects_counter_cycle() {
+        let src = "@a = counter(0, 3) nest(@b)\n@b = counter(0, 3) nest(@a)";
+        let e = parse_and_validate(src).unwrap_err();
+        assert!(e.to_string().contains("cycle"), "{e}");
+    }
+
+    #[test]
+    fn rejects_missing_main() {
+        let src = "define void @notmain () comb { %1 = add ui18 1, 1 }";
+        let e = parse_and_validate(src).unwrap_err();
+        assert!(e.to_string().contains("no `@main`"), "{e}");
+    }
+
+    #[test]
+    fn floats_parse_but_fail_synthesizability() {
+        let src = "define void @main (f32 %a) comb { %1 = add f32 %a, %a }";
+        let m = parse(src).unwrap();
+        validate(&m).unwrap();
+        let e = require_synthesizable(&m).unwrap_err();
+        assert!(e.to_string().contains("floating point"), "{e}");
+    }
+
+    #[test]
+    fn rejects_launch_calling_unknown() {
+        let src = "define void launch() { call @ghost () }\ndefine void @main () comb { %1 = add ui18 1, 1 }";
+        let e = parse_and_validate(src).unwrap_err();
+        assert!(e.to_string().contains("unknown function"), "{e}");
+    }
+
+    #[test]
+    fn rejects_arg_arity_mismatch() {
+        let src = "define void @f (ui18 %x, ui18 %y) comb { %1 = add ui18 %x, %y }\ndefine void @main () pipe { call @f (1) comb }";
+        let e = parse_and_validate(src).unwrap_err();
+        assert!(e.to_string().contains("args"), "{e}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Small dependency-free utilities: PRNG, statistics, table formatting.
+//!
+//! The build image has no network access, so the usual crates (`rand`,
+//! `criterion`'s stats, `comfy-table`) are replaced by these minimal,
+//! fully-tested equivalents.
+
+pub mod prng;
+pub mod stats;
+pub mod table;
+
+pub use prng::Prng;
+pub use stats::Summary;
+pub use table::Table;

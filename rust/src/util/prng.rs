@@ -1,0 +1,197 @@
+//! Deterministic xorshift64* PRNG.
+//!
+//! Used for workload generation (golden-model inputs, DSE sweeps) and the
+//! hand-rolled property tests. Deterministic across platforms — every
+//! experiment in EXPERIMENTS.md records its seed.
+
+/// xorshift64* generator (Vigna 2016). Not cryptographic; fast, seedable,
+/// and good enough statistical quality for workload generation.
+#[derive(Debug, Clone)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    /// Create a generator from a non-zero seed (zero is mapped to a fixed
+    /// odd constant — xorshift has a zero fixed point).
+    pub fn new(seed: u64) -> Self {
+        Prng { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Next 32-bit value (upper half of the 64-bit output).
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform value in `[0, bound)`; `bound` must be non-zero.
+    /// Debiased via rejection sampling on the 64-bit stream.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "Prng::below(0)");
+        // Rejection zone to remove modulo bias.
+        let zone = u64::MAX - (u64::MAX % bound);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % bound;
+            }
+        }
+    }
+
+    /// Uniform value in the inclusive range `[lo, hi]`.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        if lo == hi {
+            return lo;
+        }
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform i64 in `[lo, hi]`.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo.wrapping_add(self.below((hi - lo) as u64 + 1) as i64)
+    }
+
+    /// Uniform f64 in `[0, 1)` (53-bit mantissa).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Fill a vector with n uniform values below `bound`.
+    pub fn vec_below(&mut self, n: usize, bound: u64) -> Vec<u64> {
+        (0..n).map(|_| self.below(bound)).collect()
+    }
+
+    /// Random 18-bit values (ui18 workloads for the simple kernel).
+    pub fn vec_ui18(&mut self, n: usize) -> Vec<u32> {
+        (0..n).map(|_| (self.next_u32() & 0x3FFFF) as u32).collect()
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Derive an independent generator (splitmix-style jump).
+    pub fn fork(&mut self) -> Prng {
+        Prng::new(self.next_u64() ^ 0xA5A5A5A55A5A5A5A)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn zero_seed_is_usable() {
+        let mut p = Prng::new(0);
+        assert_ne!(p.next_u64(), 0);
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut p = Prng::new(7);
+        for _ in 0..10_000 {
+            assert!(p.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn below_hits_every_residue() {
+        let mut p = Prng::new(9);
+        let mut seen = [false; 7];
+        for _ in 0..10_000 {
+            seen[p.below(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn range_inclusive_endpoints() {
+        let mut p = Prng::new(3);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..10_000 {
+            match p.range_u64(5, 8) {
+                5 => lo_seen = true,
+                8 => hi_seen = true,
+                v => assert!((5..=8).contains(&v)),
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn range_i64_negative() {
+        let mut p = Prng::new(4);
+        for _ in 0..1000 {
+            let v = p.range_i64(-10, -3);
+            assert!((-10..=-3).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut p = Prng::new(5);
+        for _ in 0..1000 {
+            let v = p.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn ui18_masked() {
+        let mut p = Prng::new(6);
+        assert!(p.vec_ui18(1000).iter().all(|&v| v < (1 << 18)));
+    }
+
+    #[test]
+    fn fork_is_independent() {
+        let mut p = Prng::new(10);
+        let mut q = p.fork();
+        let a: Vec<u64> = (0..8).map(|_| p.next_u64()).collect();
+        let b: Vec<u64> = (0..8).map(|_| q.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn rough_uniformity() {
+        // Chi-square-ish sanity: 16 buckets, 16k draws, each bucket
+        // within 20% of expectation.
+        let mut p = Prng::new(11);
+        let mut buckets = [0u32; 16];
+        for _ in 0..16_000 {
+            buckets[p.below(16) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((800..=1200).contains(&b), "bucket {b}");
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Minimal statistics for the bench harness and estimator reports.
+
+/// Summary statistics over a sample of f64 observations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    /// Number of observations.
+    pub n: usize,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Sample standard deviation (n-1 denominator; 0 for n < 2).
+    pub stddev: f64,
+    /// Minimum observation.
+    pub min: f64,
+    /// Maximum observation.
+    pub max: f64,
+    /// Median (p50).
+    pub p50: f64,
+    /// 90th percentile.
+    pub p90: f64,
+    /// 99th percentile.
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; panics on an empty sample.
+    pub fn of(sample: &[f64]) -> Summary {
+        assert!(!sample.is_empty(), "Summary::of(empty)");
+        let n = sample.len();
+        let mean = sample.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            sample.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = sample.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+        Summary {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile(&sorted, 0.50),
+            p90: percentile(&sorted, 0.90),
+            p99: percentile(&sorted, 0.99),
+        }
+    }
+
+    /// Relative standard deviation (coefficient of variation); 0 when the
+    /// mean is 0.
+    pub fn rsd(&self) -> f64 {
+        if self.mean == 0.0 { 0.0 } else { self.stddev / self.mean.abs() }
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice, q in [0,1].
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Relative deviation `|a - b| / b` expressed as a percentage — the
+/// estimated-vs-actual metric used throughout EXPERIMENTS.md (paper
+/// Tables 1 and 2 comparisons).
+pub fn deviation_pct(estimated: f64, actual: f64) -> f64 {
+    if actual == 0.0 {
+        if estimated == 0.0 { 0.0 } else { f64::INFINITY }
+    } else {
+        (estimated - actual).abs() / actual.abs() * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_sample() {
+        let s = Summary::of(&[5.0; 10]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.p50, 5.0);
+        assert_eq!(s.min, 5.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn summary_known_values() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        // sample stddev of 1..4 = sqrt(5/3)
+        assert!((s.stddev - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile(&sorted, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&sorted, 0.0), 0.0);
+        assert_eq!(percentile(&sorted, 1.0), 10.0);
+    }
+
+    #[test]
+    fn single_observation() {
+        let s = Summary::of(&[3.25]);
+        assert_eq!(s.p99, 3.25);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_sample_panics() {
+        let _ = Summary::of(&[]);
+    }
+
+    #[test]
+    fn deviation_pct_examples() {
+        // Paper Table 1: C2 ALUTs estimated 82 vs actual 83 -> ~1.2%
+        assert!((deviation_pct(82.0, 83.0) - 1.2048).abs() < 1e-3);
+        assert_eq!(deviation_pct(0.0, 0.0), 0.0);
+        assert!(deviation_pct(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn rsd_zero_mean() {
+        let s = Summary::of(&[-1.0, 1.0]);
+        assert_eq!(s.rsd(), 0.0);
+    }
+}

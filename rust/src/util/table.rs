@@ -1,0 +1,134 @@
+//! Aligned plain-text table formatting for reports and bench output.
+//!
+//! Produces the paper-style tables (e.g. Table 1/2: estimated vs actual)
+//! without any external dependency.
+
+/// A simple column-aligned table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; panics if the arity differs from the header.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with ` | ` separators and a dashed rule under the header.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = width[i]))
+                .collect::<Vec<_>>()
+                .join(" | ")
+                .trim_end()
+                .to_string()
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(
+            &width.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-+-"),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a count with K/M suffixes the way the paper reports resources
+/// (e.g. `36.3K` ALUTs, `216K` BRAM bits).
+pub fn human_count(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if a >= 10_000.0 {
+        format!("{:.1}K", v / 1e3)
+    } else if a >= 1_000.0 {
+        format!("{:.2}K", v / 1e3)
+    } else if (v.fract()).abs() < 1e-9 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["Param", "E", "A"]);
+        t.row(vec!["ALUTs", "82", "83"]);
+        t.row(vec!["BRAM(bits)", "7.20K", "7.27K"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("Param"));
+        assert!(lines[1].starts_with("-"));
+        assert!(lines[3].contains("7.20K"));
+        // Column alignment: separator column positions match.
+        let pos0 = lines[0].find('|').unwrap();
+        let pos3 = lines[3].find('|').unwrap();
+        assert_eq!(pos0, pos3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn human_count_bands() {
+        assert_eq!(human_count(82.0), "82");
+        assert_eq!(human_count(7200.0), "7.20K");
+        assert_eq!(human_count(36300.0), "36.3K");
+        assert_eq!(human_count(216_000.0), "216.0K");
+        assert_eq!(human_count(2_500_000.0), "2.50M");
+    }
+
+    #[test]
+    fn empty_table() {
+        let t = Table::new(vec!["x"]);
+        assert!(t.is_empty());
+        assert_eq!(t.render().lines().count(), 2);
+    }
+}

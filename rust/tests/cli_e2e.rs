@@ -1,0 +1,94 @@
+//! End-to-end CLI tests exercising file I/O paths: user-written kernel
+//! files, TIR files dumped and re-consumed, config files, HDL output.
+
+use std::path::PathBuf;
+
+use tytra::cli::dispatch;
+
+fn args(s: &str) -> Vec<String> {
+    s.split_whitespace().map(str::to_string).collect()
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("tytra_cli_{name}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn user_kernel_file_through_dse() {
+    let dir = tmpdir("knl");
+    let path = dir.join("blur.knl");
+    std::fs::write(
+        &path,
+        "kernel blur {\n  in p : ui18[34][34]\n  out q : ui18[34][34]\n  for i in 1..33, j in 1..33 {\n    q[i][j] = (p[i-1][j] + p[i+1][j] + p[i][j-1] + p[i][j+1]) >> 2\n  }\n}\n",
+    )
+    .unwrap();
+    let out = dispatch(&args(&format!("dse {} --jobs 2 --max-lanes 4 --max-dv 2", path.display()))).unwrap();
+    assert!(out.contains("kernel `blur`"), "{out}");
+    assert!(out.contains("BEST:"), "{out}");
+}
+
+#[test]
+fn tir_file_roundtrip_through_estimate_and_compare() {
+    let dir = tmpdir("tir");
+    let path = dir.join("fig7.tir");
+    std::fs::write(&path, tytra::tir::examples::fig7_pipe()).unwrap();
+    let out = dispatch(&args(&format!("estimate {}", path.display()))).unwrap();
+    assert!(out.contains("1003"), "{out}");
+    let out = dispatch(&args(&format!("compare {} --seed 5", path.display()))).unwrap();
+    assert!(out.contains("Cycles/Kernel"), "{out}");
+}
+
+#[test]
+fn config_file_drives_dse() {
+    let dir = tmpdir("cfg");
+    let cfg = dir.join("tytra.toml");
+    std::fs::write(&cfg, "device = \"cyclone4\"\njobs = 2\n[sweep]\nmax_lanes = 4\nmax_dv = 2\n").unwrap();
+    let out = dispatch(&args(&format!("dse builtin:simple --config {}", cfg.display()))).unwrap();
+    assert!(out.contains("CycloneIV"), "{out}");
+    // 3 lane steps + 2 dv steps = 5 points
+    assert!(out.contains("(5 points"), "{out}");
+}
+
+#[test]
+fn cli_flag_overrides_config_device() {
+    let dir = tmpdir("cfg2");
+    let cfg = dir.join("tytra.toml");
+    std::fs::write(&cfg, "device = \"cyclone4\"\n").unwrap();
+    let out =
+        dispatch(&args(&format!("dse builtin:simple --config {} --device s5 --jobs 1", cfg.display()))).unwrap();
+    assert!(out.contains("StratixV"), "{out}");
+}
+
+#[test]
+fn emit_hdl_writes_consumable_verilog() {
+    let out = dispatch(&args("emit-hdl builtin:fig9 --tb --seed 3")).unwrap();
+    assert!(out.contains("module f2_dp"));
+    assert_eq!(out.matches("u_lane").count(), 4);
+    assert!(out.contains("module tb;"));
+    // write + re-read as a file (what a user would do)
+    let dir = tmpdir("hdl");
+    let path = dir.join("fig9.v");
+    std::fs::write(&path, &out).unwrap();
+    assert!(std::fs::read_to_string(&path).unwrap().contains("endmodule"));
+}
+
+#[test]
+fn missing_files_produce_helpful_errors() {
+    let e = dispatch(&args("estimate /nonexistent/x.tir")).unwrap_err();
+    assert!(e.contains("x.tir"), "{e}");
+    let e = dispatch(&args("dse /nonexistent/k.knl")).unwrap_err();
+    assert!(e.contains("k.knl"), "{e}");
+    let e = dispatch(&args("estimate builtin:fig99")).unwrap_err();
+    assert!(e.contains("unknown builtin"), "{e}");
+}
+
+#[test]
+fn bad_tir_reports_parse_position() {
+    let dir = tmpdir("bad");
+    let path = dir.join("bad.tir");
+    std::fs::write(&path, "define void @main () pipe { %1 = bogus ui18 1, 2 }").unwrap();
+    let e = dispatch(&args(&format!("estimate {}", path.display()))).unwrap_err();
+    assert!(e.contains("unknown opcode"), "{e}");
+}

@@ -1,0 +1,72 @@
+//! End-to-end golden integration test: TIR dataflow simulator vs the
+//! PJRT-executed JAX/Pallas artifacts (requires `make artifacts`).
+//!
+//! This is the repository's three-layer correctness signal:
+//! L1 Pallas ≙ pure-jnp oracle (pytest) ≙ HLO artifact (this test)
+//! ≙ Rust simulator (this test) — so every design-space configuration
+//! the DSE explores computes exactly the paper's kernels.
+
+use std::path::PathBuf;
+
+use tytra::runtime::golden;
+use tytra::runtime::{pjrt::Runtime, Manifest};
+
+fn artifacts_dir() -> PathBuf {
+    // CARGO_MANIFEST_DIR = repo root (Cargo.toml lives there).
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(&artifacts_dir()).expect("run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn simple_kernel_single_lane_matches_pjrt() {
+    let rt = Runtime::cpu().unwrap();
+    let r = golden::check_simple(&rt, &manifest(), 1, 42).unwrap();
+    assert!(r.ok(), "{:?}", r);
+    assert_eq!(r.n, 1000);
+}
+
+#[test]
+fn simple_kernel_four_lanes_matches_pjrt() {
+    let rt = Runtime::cpu().unwrap();
+    let r = golden::check_simple(&rt, &manifest(), 4, 43).unwrap();
+    assert!(r.ok(), "{:?}", r);
+}
+
+#[test]
+fn sor_single_pass_matches_pjrt() {
+    let rt = Runtime::cpu().unwrap();
+    let r = golden::check_sor(&rt, &manifest(), 1, 44).unwrap();
+    assert!(r.ok(), "{:?}", r);
+    assert_eq!(r.n, 18 * 18);
+}
+
+#[test]
+fn sor_fifteen_passes_match_pjrt() {
+    // The Table 2 workload: 15 chained passes, ping-pong in the
+    // simulator vs an explicit iteration loop over the one-pass artifact.
+    let rt = Runtime::cpu().unwrap();
+    let r = golden::check_sor(&rt, &manifest(), 15, 45).unwrap();
+    assert!(r.ok(), "{:?}", r);
+}
+
+#[test]
+fn golden_suite_runs_clean() {
+    let reports = golden::run_all(&artifacts_dir(), 7).unwrap();
+    assert_eq!(reports.len(), 4);
+    for r in &reports {
+        assert!(r.ok(), "{:?}", r);
+    }
+}
+
+#[test]
+fn different_seeds_give_different_workloads_all_passing() {
+    let rt = Runtime::cpu().unwrap();
+    let mf = manifest();
+    for seed in [1u64, 999, 123456789] {
+        let r = golden::check_simple(&rt, &mf, 1, seed).unwrap();
+        assert!(r.ok(), "seed {seed}: {:?}", r);
+    }
+}

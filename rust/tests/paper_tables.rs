@@ -1,0 +1,164 @@
+//! Integration tests pinning the paper-table reproductions (the CI
+//! contract for EXPERIMENTS.md): Table 1 and Table 2 shapes must hold —
+//! who wins, by what factor, where the estimator deviates.
+
+use tytra::device::Device;
+use tytra::estimator;
+use tytra::frontend::{self, DesignPoint};
+use tytra::sim::{self, Workload};
+use tytra::synth;
+use tytra::tir::{examples, parse_and_validate};
+use tytra::util::stats::deviation_pct;
+
+struct Cols {
+    est: estimator::Estimate,
+    act_res: estimator::Resources,
+    act_cycles: u64,
+    act_ewgt: f64,
+}
+
+fn eval(src: &str, seed: u64) -> Cols {
+    let dev = Device::stratix4();
+    let m = parse_and_validate(src).unwrap();
+    let est = estimator::estimate(&m, &dev).unwrap();
+    let s = synth::synthesize(&m, &dev).unwrap();
+    let w = Workload::random_for(&m, seed);
+    let r = sim::simulate(&m, &dev, &w).unwrap();
+    Cols { est, act_res: s.resources, act_cycles: r.cycles_per_pass, act_ewgt: r.ewgt_at(s.fmax_mhz) }
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — simple kernel
+// ---------------------------------------------------------------------------
+
+#[test]
+fn table1_c2_pins_paper_estimates_exactly() {
+    let c = eval(&examples::fig7_pipe(), 42);
+    // The estimator columns reproduce the paper's E column exactly.
+    assert_eq!(c.est.resources.alut, 82);
+    assert_eq!(c.est.resources.reg, 172);
+    assert_eq!(c.est.resources.bram_bits, 7_200);
+    assert_eq!(c.est.resources.dsp, 1);
+    assert_eq!(c.est.cycles_per_pass, 1003);
+    assert!((c.est.ewgt - 249_251.2).abs() < 300.0);
+    // The "actual" substrate reproduces the paper's A column shape.
+    assert_eq!(c.act_res.alut, 83);
+    assert_eq!(c.act_cycles, 1008);
+}
+
+#[test]
+fn table1_c1_shape() {
+    let c2 = eval(&examples::fig7_pipe(), 42);
+    let c1 = eval(&examples::fig9_multi_pipe(4), 42);
+    // 4 lanes ⇒ 4 DSPs, ~4× estimated EWGT, ~30× BRAM (banking), big
+    // ALUT jump (distribution crossbar) — the paper's headline shape.
+    assert_eq!(c1.est.resources.dsp, 4);
+    let ewgt_ratio = c1.est.ewgt / c2.est.ewgt;
+    assert!((3.8..=4.1).contains(&ewgt_ratio), "{ewgt_ratio}");
+    let bram_ratio = c1.est.resources.bram_bits as f64 / c2.est.resources.bram_bits as f64;
+    assert!((25.0..=35.0).contains(&bram_ratio), "{bram_ratio}");
+    let alut_ratio = c1.est.resources.alut as f64 / c2.est.resources.alut as f64;
+    assert!(alut_ratio > 100.0, "{alut_ratio}");
+    // actual cycles: paper 258
+    assert_eq!(c1.act_cycles, 258);
+}
+
+#[test]
+fn table1_estimator_accuracy_bounds() {
+    for (src, seed) in [(examples::fig7_pipe(), 1u64), (examples::fig9_multi_pipe(4), 2)] {
+        let c = eval(&src, seed);
+        // resource estimates within 12% of the synthesis model
+        assert!(deviation_pct(c.est.resources.alut as f64, c.act_res.alut as f64) < 12.0);
+        assert!(deviation_pct(c.est.resources.bram_bits as f64, c.act_res.bram_bits as f64) < 10.0);
+        assert_eq!(c.est.resources.dsp, c.act_res.dsp);
+        // cycle estimates within 2%
+        assert!(deviation_pct(c.est.cycles_per_pass as f64, c.act_cycles as f64) < 2.0);
+        // EWGT within 25% (frequency deviation, like the paper's ~20%)
+        assert!(deviation_pct(c.est.ewgt, c.act_ewgt) < 25.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — SOR kernel
+// ---------------------------------------------------------------------------
+
+fn sor_c1_source() -> String {
+    let k = frontend::parse_kernel(frontend::lang::sor_kernel_source()).unwrap();
+    tytra::tir::pretty::print(&frontend::lower(&k, DesignPoint::c1(2)).unwrap())
+}
+
+#[test]
+fn table2_c2_shape() {
+    let c = eval(&examples::fig15_sor_default(), 43);
+    // DSP-free datapath (shift-add constant multiplies) — Table 2's 0s.
+    assert_eq!(c.est.resources.dsp, 0);
+    assert_eq!(c.act_res.dsp, 0);
+    // cycles ≈ interior items + pipeline/window fill (paper: 292|308)
+    assert_eq!(c.est.cycles_per_pass, 296);
+    assert_eq!(c.act_cycles, 301);
+    // EWGT(E) ≈ paper's 57K; actual degrades via achieved Fmax like the
+    // paper's 43K
+    assert!((c.est.ewgt - 56_306.0).abs() < 600.0, "{}", c.est.ewgt);
+    assert!(c.act_ewgt < c.est.ewgt);
+    assert!(deviation_pct(c.est.ewgt, c.act_ewgt) > 5.0, "SOR must show the frequency-driven EWGT gap");
+}
+
+#[test]
+fn table2_c1_two_lanes_shape() {
+    let c2 = eval(&examples::fig15_sor_default(), 43);
+    let c1 = eval(&sor_c1_source(), 43);
+    // paper: 292→180 cycles (1.62×); halo/window overhead keeps the
+    // 2-lane speedup well under 2×
+    let speedup = c2.act_cycles as f64 / c1.act_cycles as f64;
+    assert!((1.4..=1.9).contains(&speedup), "{speedup}");
+    // BRAM roughly doubles (banked stencil source, paper: 5418→11304)
+    let bram_ratio = c1.est.resources.bram_bits as f64 / c2.est.resources.bram_bits as f64;
+    assert!((1.8..=4.0).contains(&bram_ratio), "{bram_ratio}");
+    assert_eq!(c1.est.resources.dsp, 0);
+}
+
+#[test]
+fn table2_functional_equivalence_of_both_configs() {
+    let dev = Device::stratix4();
+    let m2 = parse_and_validate(&examples::fig15_sor_default()).unwrap();
+    let m1 = parse_and_validate(&sor_c1_source()).unwrap();
+    let w2 = Workload::random_for(&m2, 9);
+    let w1 = Workload { mems: w2.mems.clone(), seed: 9 };
+    let r2 = sim::simulate(&m2, &dev, &w2).unwrap();
+    let r1 = sim::simulate(&m1, &dev, &w1).unwrap();
+    assert_eq!(r2.mems["mem_q"], r1.mems["mem_q"]);
+}
+
+// ---------------------------------------------------------------------------
+// Cross-cutting: estimator ranks configurations correctly (its purpose)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn estimator_ranks_configurations_like_the_actual_substrate() {
+    // The paper's purpose statement: "the purpose of these estimates
+    // primarily is to choose between different configurations". Check
+    // that E-ranking == A-ranking across all four simple-kernel configs.
+    let dev = Device::stratix4();
+    let mut est_rank = Vec::new();
+    let mut act_rank = Vec::new();
+    for src in [
+        examples::fig5_seq(),
+        examples::fig7_pipe(),
+        examples::fig9_multi_pipe(4),
+        examples::fig11_vector_seq(4),
+    ] {
+        let m = parse_and_validate(&src).unwrap();
+        let e = estimator::estimate(&m, &dev).unwrap();
+        let s = synth::synthesize(&m, &dev).unwrap();
+        let w = Workload::random_for(&m, 3);
+        let r = sim::simulate(&m, &dev, &w).unwrap();
+        est_rank.push(e.ewgt);
+        act_rank.push(r.ewgt_at(s.fmax_mhz));
+    }
+    let order = |v: &[f64]| {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        idx
+    };
+    assert_eq!(order(&est_rank), order(&act_rank), "E {est_rank:?} vs A {act_rank:?}");
+}
