@@ -34,7 +34,8 @@ pub struct Cli {
 }
 
 /// Flags that take a value.
-const VALUE_FLAGS: &[&str] = &["device", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts"];
+const VALUE_FLAGS: &[&str] =
+    &["device", "devices", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts"];
 /// Boolean flags.
 const BOOL_FLAGS: &[&str] = &["dense", "tb", "help", "pipes-only"];
 
@@ -111,6 +112,7 @@ pub fn dispatch(args: &[String]) -> Result<String, String> {
         "synth" => cmd_synth(&cli),
         "compare" => cmd_compare(&cli),
         "dse" => cmd_dse(&cli),
+        "sweep" => cmd_sweep(&cli),
         "emit-hdl" => cmd_emit_hdl(&cli),
         "golden" => cmd_golden(&cli),
         "configurations" => Ok(configurations()),
@@ -130,12 +132,13 @@ pub fn usage() -> String {
        synth    <file.tir>            synthesis model ('actual' resources + Fmax)\n\
        compare  <file.tir>            estimated vs actual, paper-table layout\n\
        dse      <kernel.knl|builtin:simple|builtin:sor>  explore the design space\n\
+       sweep    <kernel>... [--devices s4,c4]  batched DSE over a kernel × device grid\n\
        emit-hdl <file.tir> [--tb]     generate Verilog (+ testbench)\n\
        golden   [--artifacts DIR]     simulator vs PJRT-executed JAX artifacts\n\
        configurations                 print the paper's Fig 5/7/9/11/15 TIR listings\n\
      \n\
-     FLAGS: --device s4|s5|c4   --seed N   --jobs N   --max-lanes N   --max-dv N\n\
-            --dense   --pipes-only   --config tytra.toml   --artifacts DIR   --tb"
+     FLAGS: --device s4|s5|c4   --devices s4,c4   --seed N   --jobs N   --max-lanes N\n\
+            --max-dv N   --dense   --pipes-only   --config tytra.toml   --artifacts DIR   --tb"
         .to_string()
 }
 
@@ -203,7 +206,9 @@ fn cmd_compare(cli: &Cli) -> Result<String, String> {
     Ok(report::side_by_side(&rows, &["(E)", "(A)"]))
 }
 
-fn cmd_dse(cli: &Cli) -> Result<String, String> {
+/// Assemble the sweep configuration shared by `dse` and `sweep`:
+/// `--config` file first, then CLI flag overrides on top.
+fn sweep_config(cli: &Cli) -> Result<Config, String> {
     let mut cfg = if let Some(path) = cli.flag("config") {
         Config::from_file(Path::new(path))?
     } else {
@@ -228,6 +233,11 @@ fn cmd_dse(cli: &Cli) -> Result<String, String> {
     if let Some(v) = cli.flag("jobs") {
         cfg.jobs = v.parse().map_err(|e| format!("--jobs: {e}"))?;
     }
+    Ok(cfg)
+}
+
+fn cmd_dse(cli: &Cli) -> Result<String, String> {
+    let cfg = sweep_config(cli)?;
     let dev = Device::by_name(&cfg.device).ok_or_else(|| format!("unknown device `{}`", cfg.device))?;
 
     let spec = cli.positional.first().ok_or("expected a kernel file or builtin:simple|builtin:sor")?;
@@ -271,6 +281,78 @@ fn cmd_dse(cli: &Cli) -> Result<String, String> {
         )),
         None => out.push_str("\nBEST: none — no configuration fits the device"),
     }
+    Ok(out)
+}
+
+/// Batched DSE over a (kernel × device) grid, flattened into one job
+/// list on the session pool (`Session::explore_batch`) — the production
+/// sweep shape: many kernels, several targets, one command.
+fn cmd_sweep(cli: &Cli) -> Result<String, String> {
+    if cli.positional.is_empty() {
+        return Err("expected one or more kernel files (or builtin:simple|builtin:sor)".into());
+    }
+    let mut kernels: Vec<(String, frontend::KernelDef)> = Vec::new();
+    for spec in &cli.positional {
+        let src = match spec.as_str() {
+            "builtin:simple" => frontend::lang::simple_kernel_source().to_string(),
+            "builtin:sor" => frontend::lang::sor_kernel_source().to_string(),
+            path => std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?,
+        };
+        let k = frontend::parse_kernel(&src)?;
+        kernels.push((src, k));
+    }
+    // Shared config path with `dse` (`--config`, limit and jobs flags).
+    // `--devices a,b` is the grid axis; absent that, the single device
+    // from `--device`/config applies (never silently ignored).
+    let cfg = sweep_config(cli)?;
+    let device_list = cli.flag("devices").map(str::to_string).unwrap_or_else(|| cfg.device.clone());
+    let mut devices = Vec::new();
+    for name in device_list.split(',') {
+        let name = name.trim();
+        devices.push(
+            Device::by_name(name).ok_or_else(|| format!("unknown device `{name}` (try stratix4|stratix5|cyclone4)"))?,
+        );
+    }
+    let limits = cfg.sweep;
+    let jobs = cfg.jobs;
+
+    let session = Session::new(jobs);
+    let cells = session.explore_batch(&kernels, &devices, &limits)?;
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} kernel(s) × {} device(s), {} points each, {} workers\n\n",
+        kernels.len(),
+        devices.len(),
+        crate::dse::enumerate(&limits).len(),
+        jobs
+    ));
+    let mut t = crate::util::Table::new(vec!["kernel", "device", "best", "EWGT", "util%", "feasible/points"]);
+    for cell in &cells {
+        let feasible = cell.exploration.candidates.iter().filter(|c| c.walls.feasible()).count();
+        let points = cell.exploration.candidates.len();
+        match &cell.exploration.best {
+            Some(b) => t.row(vec![
+                cell.kernel.clone(),
+                cell.device.clone(),
+                b.label.clone(),
+                human_count(b.ewgt),
+                format!("{:.1}", b.utilisation * 100.0),
+                format!("{feasible}/{points}"),
+            ]),
+            None => t.row(vec![
+                cell.kernel.clone(),
+                cell.device.clone(),
+                "none".into(),
+                "-".into(),
+                "-".into(),
+                format!("{feasible}/{points}"),
+            ]),
+        };
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+    out.push_str(&session.metrics().summary());
     Ok(out)
 }
 
@@ -375,6 +457,31 @@ mod tests {
         let out = dispatch(&args("dse builtin:simple --jobs 2 --max-lanes 4 --max-dv 2")).unwrap();
         assert!(out.contains("BEST:"), "{out}");
         assert!(out.contains("Pareto frontier"), "{out}");
+    }
+
+    #[test]
+    fn sweep_builtin_grid() {
+        let out = dispatch(&args(
+            "sweep builtin:simple builtin:sor --devices stratix4,cyclone4 --jobs 2 --max-lanes 4 --max-dv 2",
+        ))
+        .unwrap();
+        assert!(out.contains("2 kernel(s) × 2 device(s)"), "{out}");
+        assert!(out.contains("simple"), "{out}");
+        assert!(out.contains("sor"), "{out}");
+        assert!(out.contains("CycloneIV"), "{out}");
+        assert!(out.contains("pipe×"), "{out}");
+    }
+
+    #[test]
+    fn sweep_needs_a_kernel() {
+        assert!(dispatch(&args("sweep")).is_err());
+    }
+
+    #[test]
+    fn sweep_accepts_singular_device_flag() {
+        let out =
+            dispatch(&args("sweep builtin:simple --device cyclone4 --jobs 2 --max-lanes 2 --max-dv 2")).unwrap();
+        assert!(out.contains("CycloneIV"), "{out}");
     }
 
     #[test]

@@ -3,25 +3,25 @@
 //! cache memoises TyBEC results behind a mutex (estimates are small and
 //! pure).
 
-use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
 use std::sync::Mutex;
 
 use crate::estimator::Estimate;
 
-/// Cache key: structural hash of the inputs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub struct Key(u64);
+/// Cache key: the full identifying material. Since the cached estimate
+/// is now *returned* on hit (not just counted), the key must be
+/// collision-proof — a truncated 64-bit hash would make a hash
+/// collision silently serve one kernel's estimate for another, so the
+/// key stores the actual (device, label, source) triple and lets the
+/// map's own hashing/equality do exact matching.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Key(String);
 
 /// Build a key from the kernel source, design-point label and device
-/// name (all of which fully determine the estimate).
+/// name (all of which fully determine the estimate). `\u{1f}` (ASCII
+/// unit separator) keeps the components unambiguous.
 pub fn key(kernel_src: &str, point_label: &str, device: &str) -> Key {
-    let mut h = DefaultHasher::new();
-    kernel_src.hash(&mut h);
-    point_label.hash(&mut h);
-    device.hash(&mut h);
-    Key(h.finish())
+    Key(format!("{device}\u{1f}{point_label}\u{1f}{kernel_src}"))
 }
 
 /// Thread-safe estimate cache with hit/miss counters.
@@ -87,7 +87,7 @@ mod tests {
     fn caches_and_counts() {
         let c = EstimateCache::new();
         let k = key("kernel", "pipe×1", "s4");
-        let e1 = c.get_or_insert_with(k, || Ok(some_estimate())).unwrap();
+        let e1 = c.get_or_insert_with(k.clone(), || Ok(some_estimate())).unwrap();
         let e2 = c
             .get_or_insert_with(k, || panic!("must not recompute"))
             .unwrap();
@@ -108,7 +108,7 @@ mod tests {
     fn errors_are_not_cached() {
         let c = EstimateCache::new();
         let k = key("x", "y", "z");
-        assert!(c.get_or_insert_with(k, || Err("boom".into())).is_err());
+        assert!(c.get_or_insert_with(k.clone(), || Err("boom".into())).is_err());
         assert!(c.is_empty());
         // a later success fills the slot
         let _ = c.get_or_insert_with(k, || Ok(some_estimate())).unwrap();

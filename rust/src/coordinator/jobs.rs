@@ -1,7 +1,13 @@
-//! Parallel DSE job fan-out: the L3 coordination layer proper. A sweep
-//! becomes a vector of (point) jobs executed on the worker pool; results
-//! fan back in deterministically and feed Pareto selection. The cache
-//! short-circuits repeat evaluations across sweeps in one session.
+//! Parallel DSE job fan-out: the L3 coordination layer proper — and,
+//! since the serial/parallel split was deleted, the **only** exploration
+//! code path: `dse::explore` delegates here. A sweep becomes a vector of
+//! point jobs executed on the worker pool; results fan back in
+//! deterministically and feed Pareto selection (assembled by
+//! `dse::assemble`, shared with the serial façade). The kernel is
+//! analysed (`frontend::analyze_kernel`) **once per sweep** — each job
+//! only replays the cheap per-point specialisation — and the cache
+//! short-circuits the estimate itself on repeat evaluations across
+//! sweeps in one session.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -11,25 +17,48 @@ use super::metrics::Metrics;
 use super::pool::Pool;
 use crate::device::Device;
 use crate::dse::{self, Exploration, SweepLimits};
-use crate::estimator::CostDb;
-use crate::frontend::KernelDef;
+use crate::estimator::{self, CostDb};
+use crate::frontend::{self, DesignPoint, KernelDef, LoweredKernel};
 
-/// A parallel exploration session: pool + shared cache + metrics.
+/// A parallel exploration session: pool + shared cache + metrics + the
+/// process-wide cost database.
 pub struct Session {
     pool: Pool,
     cache: Arc<EstimateCache>,
     metrics: Arc<Metrics>,
-    db: CostDb,
+    db: &'static CostDb,
+}
+
+impl Default for Session {
+    /// Session sized to the machine.
+    fn default() -> Session {
+        Session::with_pool(Pool::default_size())
+    }
+}
+
+/// One cell of a batched (kernel × device) sweep.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    /// Kernel name.
+    pub kernel: String,
+    /// Device name.
+    pub device: String,
+    /// The cell's exploration (same shape as a single sweep).
+    pub exploration: Exploration,
 }
 
 impl Session {
     /// New session with `jobs` workers.
     pub fn new(jobs: usize) -> Session {
+        Session::with_pool(Pool::new(jobs))
+    }
+
+    fn with_pool(pool: Pool) -> Session {
         Session {
-            pool: Pool::new(jobs),
+            pool,
             cache: Arc::new(EstimateCache::new()),
             metrics: Arc::new(Metrics::new()),
-            db: CostDb::default(),
+            db: estimator::shared_cost_db(),
         }
     }
 
@@ -43,8 +72,8 @@ impl Session {
         self.cache.stats()
     }
 
-    /// Explore a kernel across the design space in parallel. Results are
-    /// identical to the serial `dse::explore` (property-tested).
+    /// Explore a kernel across the design space in parallel.
+    /// `kernel_src` seeds the cache key (it fully determines the kernel).
     pub fn explore(
         &self,
         kernel_src: &str,
@@ -52,54 +81,157 @@ impl Session {
         dev: &Device,
         limits: &SweepLimits,
     ) -> Result<Exploration, String> {
+        let lk = frontend::analyze_kernel(k)?;
+        self.explore_lowered(kernel_src, &lk, dev, limits)
+    }
+
+    /// Explore from a kernel definition alone (no source text): the
+    /// cache key derives from the definition's derived-`Debug` form,
+    /// which renders every field of `KernelDef` and is injective for
+    /// the current struct. If a field with lossy `Debug` output is ever
+    /// added to `KernelDef`, this key needs a proper structural hash —
+    /// callers holding a long-lived `Session` would otherwise risk
+    /// cross-kernel cache hits. This is the path `dse::explore`
+    /// delegates to (fresh session per call, so no reuse there).
+    pub fn explore_def(&self, k: &KernelDef, dev: &Device, limits: &SweepLimits) -> Result<Exploration, String> {
+        let lk = frontend::analyze_kernel(k)?;
+        self.explore_lowered(&format!("kerneldef:{k:?}"), &lk, dev, limits)
+    }
+
+    /// Explore from a pre-analysed kernel (the batched sweep path —
+    /// analysis already amortised by the caller).
+    pub fn explore_lowered(
+        &self,
+        key_src: &str,
+        lk: &LoweredKernel,
+        dev: &Device,
+        limits: &SweepLimits,
+    ) -> Result<Exploration, String> {
         let t0 = Instant::now();
         let points = dse::enumerate(limits);
-        let results: Vec<Result<dse::Candidate, String>> = self.pool.map(points, |&point| {
-            self.metrics.jobs.inc();
-            let ck = key(kernel_src, &point.label(), &dev.name);
-            // Cache the estimate; lowering is cheap enough to redo, and
-            // the Candidate needs the module anyway.
-            let cand = dse::evaluate_point(k, point, dev, &self.db)?;
-            let est = cand.estimate.clone();
-            let _ = self.cache.get_or_insert_with(ck, || Ok(est));
-            Ok(cand)
-        });
+        let results: Vec<Result<dse::Candidate, String>> =
+            self.pool.map(points, |&point| self.evaluate_cached(key_src, lk, point, dev));
         let mut candidates = Vec::with_capacity(results.len());
         for r in results {
             candidates.push(r?);
         }
-        let evaluated: Vec<dse::EvaluatedPoint> =
-            candidates.iter().map(dse::Candidate::evaluated).collect();
-        let expl = Exploration {
-            frontier: dse::frontier(&evaluated),
-            best: dse::best(&evaluated),
-            candidates,
-        };
+        let expl = dse::assemble(candidates, dev);
         self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
         self.metrics.sweeps.inc();
         Ok(expl)
+    }
+
+    /// Evaluate one design point: cheap per-point lowering, then the
+    /// estimate through the session cache (a hit skips the estimator
+    /// entirely; the wall check re-runs — it is device-cheap and the
+    /// `Candidate` needs the module anyway).
+    fn evaluate_cached(
+        &self,
+        key_src: &str,
+        lk: &LoweredKernel,
+        point: DesignPoint,
+        dev: &Device,
+    ) -> Result<dse::Candidate, String> {
+        self.metrics.jobs.inc();
+        let module = frontend::lower_point(lk, point)?;
+        let ck = key(key_src, &point.label(), &dev.name);
+        let estimate = self
+            .cache
+            .get_or_insert_with(ck, || estimator::estimate_with_db(&module, dev, self.db))?;
+        let walls = dse::walls::check(&module, &estimate, dev);
+        Ok(dse::Candidate { point, module, estimate, walls })
+    }
+
+    /// Batched exploration over a (kernel × device) grid. All
+    /// kernel/device/point triples flatten into **one** job list over the
+    /// pool, so a wide grid keeps every worker busy even when a single
+    /// sweep has fewer points than workers. Results come back grouped
+    /// per (kernel, device) cell in grid order.
+    pub fn explore_batch(
+        &self,
+        kernels: &[(String, KernelDef)],
+        devices: &[Device],
+        limits: &SweepLimits,
+    ) -> Result<Vec<BatchResult>, String> {
+        let t0 = Instant::now();
+        let lks: Vec<LoweredKernel> =
+            kernels.iter().map(|(_, k)| frontend::analyze_kernel(k)).collect::<Result<_, _>>()?;
+        let points = dse::enumerate(limits);
+        let mut jobs = Vec::with_capacity(kernels.len() * devices.len() * points.len());
+        for ki in 0..kernels.len() {
+            for di in 0..devices.len() {
+                for &p in &points {
+                    jobs.push((ki, di, p));
+                }
+            }
+        }
+        let results = self
+            .pool
+            .map(jobs, |&(ki, di, p)| self.evaluate_cached(&kernels[ki].0, &lks[ki], p, &devices[di]));
+        // Record wall time for the fan-out unconditionally, and surface
+        // any job failure *before* counting sweeps — a failed batch must
+        // not leave `sweeps` advanced for half its cells.
+        self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
+        let mut flat = Vec::with_capacity(results.len());
+        for r in results {
+            flat.push(r?);
+        }
+
+        let mut out = Vec::with_capacity(kernels.len() * devices.len());
+        let mut it = flat.into_iter();
+        for (_, k) in kernels {
+            for dev in devices {
+                let cands: Vec<dse::Candidate> =
+                    it.by_ref().take(points.len()).collect();
+                debug_assert_eq!(cands.len(), points.len(), "grid-sized result vector");
+                out.push(BatchResult {
+                    kernel: k.name.clone(),
+                    device: dev.name.clone(),
+                    exploration: dse::assemble(cands, dev),
+                });
+                self.metrics.sweeps.inc();
+            }
+        }
+        Ok(out)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::frontend::lang::{parse_kernel, simple_kernel_source};
+    use crate::frontend::lang::{parse_kernel, simple_kernel_source, sor_kernel_source};
 
     #[test]
-    fn parallel_matches_serial() {
+    fn parallel_matches_direct_evaluation() {
+        // Independent oracle: evaluate every point through the plain
+        // `dse::evaluate_point` path (no Session, no cache, own CostDb)
+        // and require the pooled+cached session to reproduce it exactly.
+        // (`dse::explore` itself delegates to Session, so comparing
+        // against it would be tautological.)
         let src = simple_kernel_source();
         let k = parse_kernel(src).unwrap();
         let dev = Device::stratix4();
         let limits = SweepLimits::default();
-        let serial = dse::explore(&k, &dev, &limits).unwrap();
+        let db = crate::estimator::CostDb::default();
+        let direct: Vec<dse::Candidate> = dse::enumerate(&limits)
+            .into_iter()
+            .map(|p| dse::evaluate_point(&k, p, &dev, &db).unwrap())
+            .collect();
+        let oracle = dse::assemble(direct, &dev);
+
         let session = Session::new(8);
         let parallel = session.explore(src, &k, &dev, &limits).unwrap();
-        assert_eq!(serial.best.as_ref().map(|b| &b.label), parallel.best.as_ref().map(|b| &b.label));
-        assert_eq!(serial.frontier.len(), parallel.frontier.len());
-        for (a, b) in serial.candidates.iter().zip(&parallel.candidates) {
-            assert_eq!(a.estimate.resources, b.estimate.resources);
-            assert_eq!(a.estimate.ewgt, b.estimate.ewgt);
+        // …twice, so the second run exercises the cache-hit path too.
+        let replay = session.explore(src, &k, &dev, &limits).unwrap();
+        for run in [&parallel, &replay] {
+            assert_eq!(oracle.best.as_ref().map(|b| &b.label), run.best.as_ref().map(|b| &b.label));
+            assert_eq!(oracle.frontier.len(), run.frontier.len());
+            assert_eq!(oracle.candidates.len(), run.candidates.len());
+            for (a, b) in oracle.candidates.iter().zip(&run.candidates) {
+                assert_eq!(a.point, b.point);
+                assert_eq!(a.estimate.resources, b.estimate.resources);
+                assert_eq!(a.estimate.ewgt, b.estimate.ewgt);
+            }
         }
     }
 
@@ -127,5 +259,46 @@ mod tests {
         session.explore(src, &k, &Device::stratix4(), &SweepLimits::default()).unwrap();
         assert_eq!(session.metrics().jobs.get(), 10);
         assert_eq!(session.metrics().sweeps.get(), 1);
+    }
+
+    #[test]
+    fn batch_grid_matches_individual_sweeps() {
+        let ks = [
+            (simple_kernel_source().to_string(), parse_kernel(simple_kernel_source()).unwrap()),
+            (sor_kernel_source().to_string(), parse_kernel(sor_kernel_source()).unwrap()),
+        ];
+        let devs = [Device::stratix4(), Device::cyclone4()];
+        let limits = SweepLimits { max_lanes: 4, max_dv: 2, pow2_only: true, include_seq: true };
+        let session = Session::new(4);
+        let batch = session.explore_batch(&ks, &devs, &limits).unwrap();
+        assert_eq!(batch.len(), 4);
+        // Cell order: kernels outer, devices inner.
+        assert_eq!(batch[0].kernel, "simple");
+        assert_eq!(batch[1].device, Device::cyclone4().name);
+        for cell in &batch {
+            let (src, k) = ks.iter().find(|(_, k)| k.name == cell.kernel).unwrap();
+            let dev = devs.iter().find(|d| d.name == cell.device).unwrap();
+            let single = Session::new(2).explore(src, k, dev, &limits).unwrap();
+            assert_eq!(
+                single.best.as_ref().map(|b| &b.label),
+                cell.exploration.best.as_ref().map(|b| &b.label),
+                "{}×{}",
+                cell.kernel,
+                cell.device
+            );
+            assert_eq!(single.candidates.len(), cell.exploration.candidates.len());
+        }
+    }
+
+    #[test]
+    fn batch_counts_cells_as_sweeps() {
+        let ks = [(simple_kernel_source().to_string(), parse_kernel(simple_kernel_source()).unwrap())];
+        let devs = [Device::stratix4(), Device::cyclone4()];
+        let session = Session::new(2);
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, pow2_only: true, include_seq: true };
+        session.explore_batch(&ks, &devs, &limits).unwrap();
+        assert_eq!(session.metrics().sweeps.get(), 2);
+        // 4 points × 2 devices
+        assert_eq!(session.metrics().jobs.get(), 8);
     }
 }

@@ -1,10 +1,12 @@
 //! L3 coordination: the parallel design-space-exploration driver.
 //!
 //! [`pool`] is a scoped `std::thread` worker pool; [`jobs::Session`]
-//! fans `evaluate_point` jobs across it with a shared [`cache`] and
+//! fans point-evaluation jobs across it with a shared [`cache`] and
 //! [`metrics`]. The CLI (`crate::cli`) builds a `Session` per
-//! invocation; exploration results are deterministic and equal to the
-//! serial path (property-tested in `jobs`).
+//! invocation, and `dse::explore` delegates here with a single worker —
+//! the Session **is** the one exploration code path. Results are
+//! deterministic and equal to direct cache-free point evaluation
+//! (tested in `jobs`).
 
 pub mod cache;
 pub mod jobs;
@@ -12,6 +14,6 @@ pub mod metrics;
 pub mod pool;
 
 pub use cache::EstimateCache;
-pub use jobs::Session;
+pub use jobs::{BatchResult, Session};
 pub use metrics::Metrics;
 pub use pool::Pool;

@@ -4,7 +4,6 @@
 //! is the right tool anyway).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// A logical pool: just a worker count; threads are scoped per call so
 /// no join handles outlive the work.
@@ -30,8 +29,13 @@ impl Pool {
     }
 
     /// Parallel map preserving input order. Work-stealing via a shared
-    /// atomic cursor; results land in their input slot, so the output is
-    /// deterministic regardless of scheduling.
+    /// atomic cursor; each worker accumulates `(index, result)` pairs
+    /// privately and returns them through its scoped join handle, so the
+    /// result slots need **no synchronisation at all** — the previous
+    /// per-slot `Mutex<Option<R>>` paid one lock round-trip per item on
+    /// a loop whose entire point is to be contention-free. The final
+    /// reorder into input order keeps the output deterministic
+    /// regardless of scheduling.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Sync,
@@ -42,24 +46,42 @@ impl Pool {
         if n == 0 {
             return Vec::new();
         }
+        let nw = self.workers.min(n);
+        if nw == 1 {
+            // Single worker: no threads, no reorder.
+            return items.iter().map(&f).collect();
+        }
         let cursor = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|s| {
-            for _ in 0..self.workers.min(n) {
-                s.spawn(|| loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let r = f(&items[i]);
-                    *slots[i].lock().expect("slot poisoned") = Some(r);
-                });
-            }
+        let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..nw)
+                .map(|_| {
+                    let cursor = &cursor;
+                    let items = &items;
+                    let f = &f;
+                    s.spawn(move || {
+                        // Pre-size to the fair share; stealing may grow it.
+                        let mut local = Vec::with_capacity(n / nw + 1);
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, f(&items[i])));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
         });
-        slots
-            .into_iter()
-            .map(|m| m.into_inner().expect("slot poisoned").expect("worker skipped a slot"))
-            .collect()
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for part in parts {
+            for (i, r) in part {
+                slots[i] = Some(r);
+            }
+        }
+        slots.into_iter().map(|o| o.expect("worker skipped a slot")).collect()
     }
 }
 

@@ -5,7 +5,7 @@
 //! to arrive at the best solution").
 
 use super::pareto::{self, EvaluatedPoint};
-use super::space::{enumerate, SweepLimits};
+use super::space::SweepLimits;
 use super::walls;
 use crate::device::Device;
 use crate::estimator::{self, CostDb};
@@ -49,8 +49,16 @@ pub struct Exploration {
     pub best: Option<EvaluatedPoint>,
 }
 
-/// Explore one kernel over the design space on a device (serial; the
-/// coordinator parallelises this across a thread pool).
+/// Explore one kernel over the design space on a device.
+///
+/// There is **one** exploration code path: this façade delegates to
+/// [`crate::coordinator::Session`] — estimate cache and the
+/// process-wide shared [`CostDb`] included — so serial callers get
+/// exactly the parallel coordinator's results (the former serial loop
+/// that rebuilt `CostDb::default()` per call is gone). It runs with a
+/// single worker: `Pool::map` executes inline at one worker, so this
+/// cheap façade spawns **no threads** — callers wanting parallelism
+/// hold a `Session::new(jobs)` (or `Session::default()`) themselves.
 ///
 /// When **no** enumerated configuration fits the computation wall, the
 /// explorer falls back to the design space's C6 point (paper Fig 3):
@@ -59,22 +67,25 @@ pub struct Exploration {
 /// magnitude but the kernel still deploys, exactly the trade-off the
 /// paper's generic C0 expression prices in.
 pub fn explore(k: &KernelDef, dev: &Device, limits: &SweepLimits) -> Result<Exploration, String> {
-    let db = CostDb::default();
-    let mut candidates = Vec::new();
-    for point in enumerate(limits) {
-        candidates.push(evaluate_point(k, point, dev, &db)?);
-    }
+    crate::coordinator::Session::new(1).explore_def(k, dev, limits)
+}
+
+/// Assemble an exploration from evaluated candidates: estimation-space
+/// projection, C6 fallback when nothing fits, Pareto frontier + best.
+/// Shared by the serial façade and the coordinator (both paths, one
+/// selection logic).
+pub fn assemble(candidates: Vec<Candidate>, dev: &Device) -> Exploration {
     let mut evaluated: Vec<EvaluatedPoint> = candidates.iter().map(Candidate::evaluated).collect();
     if pareto::best(&evaluated).is_none() {
         if let Some(c6) = c6_fallback(&candidates, dev) {
             evaluated.push(c6);
         }
     }
-    Ok(Exploration {
+    Exploration {
         frontier: pareto::frontier(&evaluated),
         best: pareto::best(&evaluated),
         candidates,
-    })
+    }
 }
 
 /// Build the C6 evaluated point from the smallest infeasible candidate:
@@ -111,14 +122,26 @@ fn c6_fallback(candidates: &[Candidate], dev: &Device) -> Option<EvaluatedPoint>
 }
 
 /// Lower + estimate + wall-check one point (the unit of work the
-/// coordinator schedules).
+/// coordinator schedules). Re-analyses the kernel per call; sweeps
+/// should pre-analyse once and use [`evaluate_lowered`].
 pub fn evaluate_point(
     k: &KernelDef,
     point: DesignPoint,
     dev: &Device,
     db: &CostDb,
 ) -> Result<Candidate, String> {
-    let module = frontend::lower(k, point)?;
+    evaluate_lowered(&frontend::analyze_kernel(k)?, point, dev, db)
+}
+
+/// Evaluate one point from a pre-analysed kernel: cheap per-point
+/// specialisation + estimate + wall check.
+pub fn evaluate_lowered(
+    lk: &frontend::LoweredKernel,
+    point: DesignPoint,
+    dev: &Device,
+    db: &CostDb,
+) -> Result<Candidate, String> {
+    let module = frontend::lower_point(lk, point)?;
     let estimate = estimator::estimate_with_db(&module, dev, db)?;
     let walls = walls::check(&module, &estimate, dev);
     Ok(Candidate { point, module, estimate, walls })

@@ -8,7 +8,7 @@ pub mod pareto;
 pub mod space;
 pub mod walls;
 
-pub use explore::{evaluate_point, explore, Candidate, Exploration};
+pub use explore::{assemble, evaluate_lowered, evaluate_point, explore, Candidate, Exploration};
 pub use pareto::{best, frontier, EvaluatedPoint};
 pub use space::{enumerate, SweepLimits};
 pub use walls::{check, WallCheck};

@@ -15,7 +15,8 @@ use std::collections::BTreeMap;
 use super::cost_db::CostDb;
 use super::resources::Resources;
 use crate::device::Device;
-use crate::tir::{Dir, Func, Kind, Module, Op, Operand, Stmt};
+use crate::tir::index::{FuncIndex, ModuleIndex, SlotStmt};
+use crate::tir::{Dir, Func, Kind, Module, Op, Operand, SlotOperand, Stmt};
 
 /// Per-port stream-synchronisation logic: valid/ready handshake + ALUT
 /// share of the address generator.
@@ -33,8 +34,49 @@ const SEQ_INSTR_BITS: u64 = 24;
 const XBAR_ALUT_COEFF: u64 = 31;
 const XBAR_REG_COEFF: u64 = 16;
 
-/// Estimate the resource utilisation of a validated module.
+/// Estimate the resource utilisation of a validated module. Builds a
+/// slot index and accumulates over it; [`estimate_resources_reference`]
+/// is the retained name-resolved walk the indexed path is
+/// property-tested against.
 pub fn estimate_resources(m: &Module, db: &CostDb, dev: &Device) -> Result<Resources, String> {
+    let ix = ModuleIndex::build(m)?;
+    estimate_resources_ix(&ix, db, dev)
+}
+
+/// The indexed accumulation walk: dense func slots, pre-resolved
+/// operands, per-slot stream/memory grouping — no string probes on the
+/// hot path.
+pub fn estimate_resources_ix(ix: &ModuleIndex, db: &CostDb, dev: &Device) -> Result<Resources, String> {
+    let mult = multiplicity_ix(ix)?;
+    let mut total = Resources::ZERO;
+
+    // --- datapath + per-kind structural costs --------------------------------
+    for (slot, fi) in ix.funcs.iter().enumerate() {
+        let k = mult[slot];
+        if k == 0 {
+            continue; // unreachable from @main
+        }
+        total += func_cost_ix(ix, fi, db)? * k;
+    }
+
+    // --- stream ports ---------------------------------------------------------
+    for p in &ix.ports {
+        total += Resources::new(PORT_ALUT, p.ty.bits() as u64, 0, 0);
+    }
+
+    // --- per-core control -------------------------------------------------
+    let cores = count_cores_ix(ix, &mult);
+    total += Resources::new(CORE_CTRL_ALUT, CORE_CTRL_REG, 0, 0) * cores.max(1);
+
+    // --- memory subsystem: FIFOs, banking, line buffers, crossbars ---------
+    total += memory_subsystem_ix(ix, dev);
+
+    Ok(total)
+}
+
+/// Reference implementation over name-keyed maps (the original walk,
+/// kept as the oracle for the property tests).
+pub fn estimate_resources_reference(m: &Module, db: &CostDb, dev: &Device) -> Result<Resources, String> {
     let mult = multiplicity(m)?;
     let mut total = Resources::ZERO;
 
@@ -60,6 +102,164 @@ pub fn estimate_resources(m: &Module, db: &CostDb, dev: &Device) -> Result<Resou
     total += memory_subsystem(m, dev);
 
     Ok(total)
+}
+
+/// Instantiation count per function slot (dense mirror of
+/// [`multiplicity`]).
+fn multiplicity_ix(ix: &ModuleIndex) -> Result<Vec<u64>, String> {
+    let main = ix.main.ok_or("module has no @main")?;
+    let mut mult = vec![0u64; ix.funcs.len()];
+
+    fn dfs(ix: &ModuleIndex, f: crate::tir::Slot, k: u64, mult: &mut [u64]) {
+        mult[f as usize] += k;
+        for s in &ix.func(f).body {
+            if let SlotStmt::Call(c) = s {
+                dfs(ix, c.callee, k, mult);
+            }
+        }
+    }
+    dfs(ix, main, 1, &mut mult);
+    Ok(mult)
+}
+
+/// Indexed mirror of [`func_cost`].
+fn func_cost_ix(ix: &ModuleIndex, fi: &FuncIndex, db: &CostDb) -> Result<Resources, String> {
+    let mut r = Resources::ZERO;
+    match fi.kind {
+        Kind::Pipe => {
+            for s in &fi.body {
+                match s {
+                    SlotStmt::Instr(i) => {
+                        r += db.instr_cost(i.op, i.ty, const_operand_ix(ix, i.op, &i.operands));
+                        // Stage register on every pipe-stage result.
+                        r += Resources::new(0, i.ty.bits() as u64, 0, 0);
+                    }
+                    SlotStmt::Call(c) => {
+                        let callee = ix.func(c.callee);
+                        if matches!(callee.kind, Kind::Par | Kind::Comb) {
+                            // The inlined stage's outputs are registered at
+                            // the stage boundary.
+                            for st in &callee.body {
+                                if let SlotStmt::Instr(ci) = st {
+                                    r += Resources::new(0, ci.ty.bits() as u64, 0, 0);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Kind::Par | Kind::Comb => {
+            // Pure combinatorial cost; registers (if any) are charged by
+            // the pipe parent at the stage boundary.
+            for s in &fi.body {
+                if let SlotStmt::Instr(i) = s {
+                    r += db.instr_cost(i.op, i.ty, const_operand_ix(ix, i.op, &i.operands));
+                }
+            }
+        }
+        Kind::Seq => {
+            // Functional-unit re-use: one FU per (op, width) class.
+            let mut fu: BTreeMap<(Op, u32, bool), Resources> = BTreeMap::new();
+            let mut ni = 0u64;
+            let mut regfile_bits = 0u64;
+            for s in &fi.body {
+                let SlotStmt::Instr(i) = s else { continue };
+                let c = const_operand_ix(ix, i.op, &i.operands);
+                let cost = db.instr_cost(i.op, i.ty, c);
+                let key = (i.op, i.ty.bits(), c.is_some());
+                let e = fu.entry(key).or_insert(Resources::ZERO);
+                // keep the max-cost instance of each FU class
+                if cost.alut + cost.dsp * 100 > e.alut + e.dsp * 100 {
+                    *e = cost;
+                }
+                ni += 1;
+                regfile_bits += i.ty.bits() as u64;
+            }
+            r += fu.values().copied().sum::<Resources>();
+            // Pure wrapper seq functions (no own instructions) sequence
+            // their callees and need no local FSM/instruction store.
+            if ni > 0 {
+                r += Resources::new(SEQ_FSM_ALUT, SEQ_FSM_REG + regfile_bits, ni * SEQ_INSTR_BITS, 0);
+            }
+        }
+    }
+    Ok(r)
+}
+
+/// Indexed mirror of [`const_operand`]: constant slots resolve in O(1).
+fn const_operand_ix(ix: &ModuleIndex, op: Op, operands: &[SlotOperand]) -> Option<i64> {
+    if !matches!(op, Op::Mul | Op::Mac | Op::Shl | Op::Lshr | Op::Ashr) {
+        return None;
+    }
+    let candidates: &[SlotOperand] = match op {
+        Op::Shl | Op::Lshr | Op::Ashr => operands.get(1..2).unwrap_or(&[]),
+        _ => operands,
+    };
+    for o in candidates {
+        match o {
+            SlotOperand::Imm(v) => return Some(*v),
+            SlotOperand::Const(c) => return Some(ix.consts[*c as usize].value),
+            SlotOperand::Port(_) | SlotOperand::Local(_) => {}
+        }
+    }
+    None
+}
+
+/// Indexed mirror of [`count_cores`].
+fn count_cores_ix(ix: &ModuleIndex, mult: &[u64]) -> u64 {
+    ix.funcs
+        .iter()
+        .enumerate()
+        .filter(|(_, fi)| fi.kind != Kind::Par && fi.n_instrs > 0)
+        .map(|(slot, _)| mult[slot])
+        .max()
+        .unwrap_or(1)
+}
+
+/// Indexed mirror of [`memory_subsystem`]: stream slots grouped per mem
+/// slot in one dense pass.
+fn memory_subsystem_ix(ix: &ModuleIndex, dev: &Device) -> Resources {
+    let mut r = Resources::ZERO;
+
+    let nmems = ix.mems.len();
+    let mut readers: Vec<Vec<crate::tir::Slot>> = vec![Vec::new(); nmems];
+    let mut writers: Vec<Vec<crate::tir::Slot>> = vec![Vec::new(); nmems];
+    for (sslot, s) in ix.streams.iter().enumerate() {
+        let mem = ix.stream_mem[sslot] as usize;
+        match s.dir {
+            Dir::Read => readers[mem].push(sslot as crate::tir::Slot),
+            Dir::Write => writers[mem].push(sslot as crate::tir::Slot),
+        }
+    }
+    let spans = ix.read_offset_spans();
+
+    for (mslot, mem) in ix.mems.iter().enumerate() {
+        let w = mem.ty.bits() as u64;
+        let n = readers[mslot].len() as u64;
+        if n == 0 {
+            // no source streams: nothing to decouple
+        } else if n == 1 {
+            r += Resources::new(0, 0, dev.stream_fifo_depth * w, 0);
+            // line buffer for offset taps on this stream
+            let (lo, hi) = spans[readers[mslot][0] as usize];
+            r += Resources::new(0, 0, (hi - lo) as u64 * w, 0);
+        } else {
+            // banking + distribution crossbar
+            r += Resources::new(0, 0, n * mem.elems * w, 0);
+            let ports = n;
+            r += Resources::new(XBAR_ALUT_COEFF * w * ports * ports, XBAR_REG_COEFF * w * ports * ports, 0, 0);
+        }
+        let nw = writers[mslot].len() as u64;
+        if nw > 0 {
+            r += Resources::new(0, 0, nw * dev.stream_fifo_depth * w, 0);
+            if nw > 2 {
+                // write-side arbitration network
+                r += Resources::new(XBAR_ALUT_COEFF * w * nw * nw, XBAR_REG_COEFF * w * nw * nw, 0, 0);
+            }
+        }
+    }
+    r
 }
 
 /// Instantiation count per function: DFS from `@main` (launch calls are
@@ -336,6 +536,24 @@ mod tests {
         // add never reports a constant (cost doesn't depend on it)
         let adds: Vec<_> = m.instrs_of(f2).filter(|i| i.op == Op::Add).collect();
         assert_eq!(const_operand(&m, Op::Add, &adds[0].operands), None);
+    }
+
+    #[test]
+    fn indexed_accumulation_matches_reference_on_all_listings() {
+        let db = CostDb::default();
+        let dev = Device::stratix4();
+        for src in [
+            examples::fig5_seq(),
+            examples::fig7_pipe(),
+            examples::fig9_multi_pipe(4),
+            examples::fig11_vector_seq(4),
+            examples::fig15_sor_default(),
+        ] {
+            let m = parse_and_validate(&src).unwrap();
+            let fast = estimate_resources(&m, &db, &dev).unwrap();
+            let slow = estimate_resources_reference(&m, &db, &dev).unwrap();
+            assert_eq!(fast, slow);
+        }
     }
 
     #[test]

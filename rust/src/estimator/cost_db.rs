@@ -42,6 +42,16 @@ impl Default for CostDb {
     }
 }
 
+/// The process-wide shared cost database. The table is pure and
+/// read-only after construction, so every estimator call — serial
+/// explorations, pool workers, repeated CLI invocations in one process —
+/// can share a single instance instead of re-seeding a `BTreeMap` per
+/// call (the `dse::explore` hot-path fix).
+pub fn shared_cost_db() -> &'static CostDb {
+    static SHARED: std::sync::OnceLock<CostDb> = std::sync::OnceLock::new();
+    SHARED.get_or_init(CostDb::default)
+}
+
 impl CostDb {
     /// An empty database (analytic expressions only).
     pub fn empty() -> CostDb {

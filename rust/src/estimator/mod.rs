@@ -21,13 +21,13 @@ pub mod structure;
 pub mod throughput;
 
 pub use accumulate::estimate_resources;
-pub use cost_db::CostDb;
+pub use cost_db::{shared_cost_db, CostDb};
 pub use resources::Resources;
-pub use structure::{analyze, ConfigClass, StructInfo};
+pub use structure::{analyze, analyze_ix, ConfigClass, StructInfo};
 pub use throughput::{cycles_per_pass, ewgt_from_cycles, EwgtParams};
 
 use crate::device::Device;
-use crate::tir::{validate, Module};
+use crate::tir::{validate, Module, ModuleIndex};
 
 /// A complete TyBEC estimate for one configuration (one row-set of the
 /// paper's Tables 1/2).
@@ -54,15 +54,24 @@ pub struct Estimate {
 pub fn estimate(m: &Module, dev: &Device) -> Result<Estimate, String> {
     validate::validate(m).map_err(|e| e.to_string())?;
     validate::require_synthesizable(m).map_err(|e| e.to_string())?;
-    let db = CostDb::default();
-    estimate_with_db(m, dev, &db)
+    estimate_with_db(m, dev, shared_cost_db())
 }
 
 /// Estimation with a caller-provided cost database (used by the DSE
-/// coordinator to share one DB across thousands of jobs).
+/// coordinator to share one DB across thousands of jobs). Resolves the
+/// module's names into a slot index **once** and runs both the
+/// structural analysis and the accumulation walk over it.
 pub fn estimate_with_db(m: &Module, dev: &Device, db: &CostDb) -> Result<Estimate, String> {
-    let info = structure::analyze(m)?;
-    let resources = accumulate::estimate_resources(m, db, dev)?;
+    let ix = ModuleIndex::build(m)?;
+    estimate_ix(&ix, dev, db)
+}
+
+/// Estimation over a pre-built slot index (the hot path: callers that
+/// already hold an index — the simulator's façade, the DSE coordinator —
+/// skip re-resolution entirely).
+pub fn estimate_ix(ix: &ModuleIndex, dev: &Device, db: &CostDb) -> Result<Estimate, String> {
+    let info = structure::analyze_ix(ix)?;
+    let resources = accumulate::estimate_resources_ix(ix, db, dev)?;
     let cycles = throughput::cycles_per_pass(&info, dev.seq_cpi);
     let cycles_wg = cycles * info.repeat;
     let fmax = dev.nominal_fmax_mhz;

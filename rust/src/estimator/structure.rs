@@ -7,7 +7,8 @@
 
 use std::collections::BTreeMap;
 
-use crate::tir::{Dir, Func, Kind, Module, Stmt};
+use crate::tir::index::{ModuleIndex, SchedStmt, SlotStmt};
+use crate::tir::{Dir, Func, Kind, Module, Slot, Stmt};
 
 /// Design-space configuration class (paper Fig 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -80,12 +81,34 @@ struct PeCounts {
 }
 
 /// Analyse the structure of a validated module.
+///
+/// This is the retained *name-resolved reference* implementation; the
+/// estimator's hot path goes through [`analyze_ix`], which is
+/// property-tested bit-identical to this walk.
 pub fn analyze(m: &Module) -> Result<StructInfo, String> {
     let main = m.main().ok_or("module has no @main")?;
     let counts = walk(m, main)?;
     let repeat = m.launch.iter().map(|c| c.repeat).max().unwrap_or(1);
     let window_span = max_window_span(m);
+    classify(counts, window_span, m.work_items(), repeat)
+}
 
+/// Analyse the structure through the slot-indexed view — no string
+/// lookups: function recursion by func slot (memoised), the ASAP
+/// schedule over dense stage vectors.
+pub fn analyze_ix(ix: &ModuleIndex) -> Result<StructInfo, String> {
+    let main = ix.main.ok_or("module has no @main")?;
+    let mut walk_memo: Vec<Option<PeCounts>> = vec![None; ix.funcs.len()];
+    let mut depth_memo: Vec<Option<u64>> = vec![None; ix.funcs.len()];
+    let counts = walk_ix(ix, main, &mut walk_memo, &mut depth_memo)?;
+    let repeat = ix.module.launch.iter().map(|c| c.repeat).max().unwrap_or(1);
+    let spans = ix.read_offset_spans();
+    let window_span = spans.iter().map(|(lo, hi)| (hi - lo) as u64).max().unwrap_or(0);
+    classify(counts, window_span, work_items_ix(ix), repeat)
+}
+
+/// Shared classification tail of both analysis paths.
+fn classify(counts: PeCounts, window_span: u64, work_items: u64, repeat: u64) -> Result<StructInfo, String> {
     let (class, lanes, dv) = match (counts.pipes, counts.seqs, counts.combs) {
         (0, 0, 0) => return Err("no compute leaves reachable from @main".into()),
         (p, 0, _) if p > 1 => (ConfigClass::C1, p, 1),
@@ -103,9 +126,131 @@ pub fn analyze(m: &Module) -> Result<StructInfo, String> {
         datapath_depth: counts.max_pipe_depth.max(if counts.pipes == 0 && counts.seqs == 0 { 1 } else { 0 }),
         window_span,
         seq_ni: counts.max_seq_ni,
-        work_items: m.work_items(),
+        work_items,
         repeat,
     })
+}
+
+/// `Module::work_items` over slots: counter-span product when counters
+/// exist, else the longest read-port backing memory.
+fn work_items_ix(ix: &ModuleIndex) -> u64 {
+    if !ix.module.counters.is_empty() {
+        return ix.module.counters.values().map(|c| c.span()).product();
+    }
+    let mut max = 0u64;
+    for (pslot, p) in ix.ports.iter().enumerate() {
+        if p.dir != Dir::Read {
+            continue;
+        }
+        let mem = ix.stream_mem[ix.port_stream[pslot] as usize];
+        max = max.max(ix.mems[mem as usize].elems);
+    }
+    max
+}
+
+/// Slot-indexed leaf-PE walk, memoised per function (the per-function
+/// result is path-independent; the reference recomputes it per call
+/// site).
+fn walk_ix(
+    ix: &ModuleIndex,
+    f: Slot,
+    memo: &mut Vec<Option<PeCounts>>,
+    depth_memo: &mut Vec<Option<u64>>,
+) -> Result<PeCounts, String> {
+    if let Some(c) = memo[f as usize] {
+        return Ok(c);
+    }
+    let fi = ix.func(f);
+    let own_instrs = fi.n_instrs as u64;
+    let counts = match fi.kind {
+        Kind::Comb => {
+            let mut ni = own_instrs;
+            for s in &fi.body {
+                if let SlotStmt::Call(c) = s {
+                    let sub = walk_ix(ix, c.callee, memo, depth_memo)?;
+                    ni += sub.max_seq_ni.max(sub.combs);
+                }
+            }
+            PeCounts { combs: 1, max_seq_ni: ni, ..Default::default() }
+        }
+        Kind::Seq => {
+            let mut ni = own_instrs;
+            for s in &fi.body {
+                if let SlotStmt::Call(c) = s {
+                    let sub = walk_ix(ix, c.callee, memo, depth_memo)?;
+                    ni += sub.max_seq_ni;
+                }
+            }
+            PeCounts { seqs: 1, max_seq_ni: ni, ..Default::default() }
+        }
+        Kind::Pipe => {
+            let depth = pipe_depth_ix(ix, f, depth_memo)?;
+            PeCounts { pipes: 1, max_pipe_depth: depth, ..Default::default() }
+        }
+        Kind::Par => {
+            let mut acc = PeCounts::default();
+            for s in &fi.body {
+                if let SlotStmt::Call(c) = s {
+                    let sub = walk_ix(ix, c.callee, memo, depth_memo)?;
+                    acc.pipes += sub.pipes;
+                    acc.seqs += sub.seqs;
+                    acc.combs += sub.combs;
+                    acc.max_pipe_depth = acc.max_pipe_depth.max(sub.max_pipe_depth);
+                    acc.max_seq_ni = acc.max_seq_ni.max(sub.max_seq_ni);
+                }
+            }
+            if own_instrs > 0 && acc.pipes + acc.seqs + acc.combs == 0 {
+                acc.combs = 1;
+                acc.max_seq_ni = own_instrs;
+            }
+            acc
+        }
+    };
+    memo[f as usize] = Some(counts);
+    Ok(counts)
+}
+
+/// Pipe depth over the pre-extracted schedule program: a dense stage
+/// vector replaces the reference's `BTreeMap<&str, u64>` (the flat
+/// schedule scope reproduces its name aliasing exactly — see
+/// [`SchedStmt`]).
+fn pipe_depth_ix(ix: &ModuleIndex, f: Slot, depth_memo: &mut Vec<Option<u64>>) -> Result<u64, String> {
+    if let Some(d) = depth_memo[f as usize] {
+        return Ok(d);
+    }
+    let fi = ix.func(f);
+    let mut stage = vec![0u64; fi.sched_slots as usize];
+    let mut depth = 0u64;
+    for s in &fi.sched {
+        match s {
+            SchedStmt::Instr { dst, deps } => {
+                let ready = deps.iter().map(|&d| stage[d as usize]).max().unwrap_or(0);
+                stage[*dst as usize] = ready + 1;
+                depth = depth.max(ready + 1);
+            }
+            SchedStmt::Call { callee, deps, defs } => {
+                let ready = deps.iter().map(|&d| stage[d as usize]).max().unwrap_or(0);
+                let occupied = match ix.func(*callee).kind {
+                    Kind::Par | Kind::Comb => 1,
+                    Kind::Pipe => pipe_depth_ix(ix, *callee, depth_memo)?,
+                    Kind::Seq => {
+                        return Err(format!(
+                            "pipe `@{}` may not call seq `@{}`",
+                            fi.ast.name,
+                            ix.func(*callee).ast.name
+                        ))
+                    }
+                };
+                let s_end = ready + occupied;
+                for &d in defs {
+                    stage[d as usize] = s_end;
+                }
+                depth = depth.max(s_end);
+            }
+        }
+    }
+    depth_memo[f as usize] = Some(depth);
+    Ok(depth)
 }
 
 /// Recursive walk accumulating leaf-PE counts with multiplicity.
@@ -330,6 +475,21 @@ mod tests {
         let s = analyze(&m).unwrap();
         assert_eq!(s.datapath_depth, 3);
         assert_eq!(s.class, ConfigClass::C2); // one lane, nested pipes
+    }
+
+    #[test]
+    fn indexed_analysis_matches_reference_on_all_listings() {
+        for src in [
+            examples::fig5_seq(),
+            examples::fig7_pipe(),
+            examples::fig9_multi_pipe(4),
+            examples::fig11_vector_seq(4),
+            examples::fig15_sor_default(),
+        ] {
+            let m = parse_and_validate(&src).unwrap();
+            let ix = crate::tir::ModuleIndex::build(&m).unwrap();
+            assert_eq!(analyze(&m).unwrap(), analyze_ix(&ix).unwrap());
+        }
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod lang;
 pub mod lower;
 
 pub use lang::{parse_kernel, KernelDef};
-pub use lower::{lower, DesignPoint, Style};
+pub use lower::{analyze_kernel, lower, lower_point, DesignPoint, LoweredKernel, Style};
 
 /// Parse + lower in one step.
 pub fn compile(src: &str, point: DesignPoint) -> Result<crate::tir::Module, String> {

@@ -13,6 +13,7 @@
 //! artifacts — the repository's end-to-end correctness signal.
 
 pub mod golden;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 use std::collections::BTreeMap;

@@ -17,7 +17,8 @@
 
 
 use crate::estimator::structure::{self, StructInfo};
-use crate::tir::{Dir, Func, Kind, Module, Operand, Stmt};
+use crate::tir::index::{ModuleIndex, SlotStmt};
+use crate::tir::{Dir, Kind, Module, Slot, SlotOperand, Stmt};
 
 /// One leaf compute core and its stream bindings.
 #[derive(Debug, Clone, PartialEq)]
@@ -89,65 +90,88 @@ impl Design {
     }
 }
 
-/// Elaborate a validated module.
+/// Elaborate a validated module (builds its own slot index; callers that
+/// already hold one should use [`elaborate_with`]).
 pub fn elaborate(m: &Module) -> Result<Design, String> {
-    let info = structure::analyze(m)?;
-    let main = m.main().ok_or("module has no @main")?;
+    let ix = ModuleIndex::build(m)?;
+    elaborate_with(&ix)
+}
+
+/// Elaborate through a pre-built slot index: structural analysis and
+/// the lane walk both run over dense slots.
+pub fn elaborate_with(ix: &ModuleIndex) -> Result<Design, String> {
+    let info = structure::analyze_ix(ix)?;
+    let main = ix.main.ok_or("module has no @main")?;
 
     let mut lanes = Vec::new();
-    collect_lanes(m, main, &[], &mut lanes)?;
+    collect_lanes(ix, main, None, &mut lanes)?;
     if lanes.is_empty() {
         return Err("no compute lanes found under @main".into());
     }
-    bind_out_ports(m, &mut lanes)?;
+    bind_out_ports(ix.module, &mut lanes)?;
 
-    let index = index_space(m)?;
+    let index = index_space(ix.module)?;
     Ok(Design { lanes, info, index })
 }
 
-/// Walk from a function, descending through pure wrappers, emitting a
-/// lane per leaf instantiation.
-fn collect_lanes(m: &Module, f: &Func, call_args: &[Operand], lanes: &mut Vec<Lane>) -> Result<(), String> {
-    let has_instrs = m.instrs_of(f).next().is_some();
-    if has_instrs || m.calls_of(f).next().is_none() {
+/// Walk from a function slot, descending through pure wrappers, emitting
+/// a lane per leaf instantiation. `call_args` carries the slot-resolved
+/// arguments plus the AST call (for diagnostics) of the instantiating
+/// call site.
+fn collect_lanes(
+    ix: &ModuleIndex,
+    f: Slot,
+    call_args: Option<(&[SlotOperand], &crate::tir::Call)>,
+    lanes: &mut Vec<Lane>,
+) -> Result<(), String> {
+    let fi = ix.func(f);
+    let has_calls = fi.body.iter().any(|s| matches!(s, SlotStmt::Call(_)));
+    if fi.n_instrs > 0 || !has_calls {
         // Leaf: bind input ports.
         let mut in_ports = Vec::new();
-        if !call_args.is_empty() {
-            for a in call_args {
+        let args = call_args.filter(|(a, _)| !a.is_empty());
+        if let Some((slot_args, ast_call)) = args {
+            for (i, a) in slot_args.iter().enumerate() {
                 match a {
-                    Operand::Global(g) if m.ports.contains_key(g.as_str()) => in_ports.push(g.clone()),
-                    Operand::Global(g) if m.consts.contains_key(g.as_str()) => in_ports.push(g.clone()),
-                    other => return Err(format!("lane `@{}`: call argument {other} is not a port", f.name)),
+                    SlotOperand::Port(p) => in_ports.push(ix.ports[*p as usize].name.clone()),
+                    SlotOperand::Const(c) => in_ports.push(ix.consts[*c as usize].name.clone()),
+                    _ => {
+                        return Err(format!(
+                            "lane `@{}`: call argument {} is not a port",
+                            fi.ast.name, ast_call.args[i]
+                        ))
+                    }
                 }
             }
         } else {
             // Convention: `main.<param>` for each parameter; for a leaf
             // with no parameters, all istream ports in name order.
-            if f.params.is_empty() {
+            if fi.ast.params.is_empty() {
                 in_ports.extend(
-                    m.ports.values().filter(|p| p.dir == Dir::Read).map(|p| p.name.clone()),
+                    ix.ports.iter().filter(|p| p.dir == Dir::Read).map(|p| p.name.clone()),
                 );
             } else {
-                for (p, _) in &f.params {
+                for (p, _) in &fi.ast.params {
                     let want = format!("main.{p}");
-                    if !m.ports.contains_key(&want) {
+                    if ix.port_slot(&want).is_none() {
                         return Err(format!(
                             "lane `@{}`: no call arguments and no port `@{want}` for parameter `%{p}`",
-                            f.name
+                            fi.ast.name
                         ));
                     }
                     in_ports.push(want);
                 }
             }
         }
-        lanes.push(Lane { func: f.name.clone(), kind: f.kind, in_ports, out_ports: Vec::new() });
+        lanes.push(Lane { func: fi.ast.name.clone(), kind: fi.kind, in_ports, out_ports: Vec::new() });
         return Ok(());
     }
-    // Pure wrapper: descend into each call (in body order).
-    for s in &f.body {
-        if let Stmt::Call(c) = s {
-            let callee = &m.funcs[&c.callee];
-            collect_lanes(m, callee, &c.args, lanes)?;
+    // Pure wrapper: descend into each call (in body order; the indexed
+    // body is 1:1 with the AST body).
+    for (i, s) in fi.body.iter().enumerate() {
+        if let SlotStmt::Call(c) = s {
+            let Stmt::Call(ast_call) = &fi.ast.body[i] else { unreachable!("body lockstep") };
+            collect_lanes(ix, c.callee, Some((&c.args, ast_call)), lanes)?;
         }
     }
     Ok(())

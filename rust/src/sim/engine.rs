@@ -55,11 +55,35 @@ pub struct GroupTiming {
     pub passes: u64,
 }
 
+/// Closed-form busy cycles for a **stall-free** lane — the hot path the
+/// timing engine takes for CONT streams over banked memories (which
+/// never stall in this design). Exactly equal to stepping
+/// [`lane_cycles_oracle`] with a never-stalling hook:
+///
+/// * pipelines/comb cores: `fill` cycles, then one item per cycle;
+/// * sequential PEs: `seq_work + 1` cycles per item (compute + the
+///   1-cycle fetch/writeback bubble).
+///
+/// The explicit state machine below is retained as the oracle — it is
+/// where stall hooks plug in, and the property tests
+/// (`rust/tests/property.rs`) hold this expression to it cycle-exactly.
+pub fn lane_cycles_closed_form(kind: Kind, items: u64, fill: u64, seq_work: u64) -> u64 {
+    if items == 0 {
+        return 0;
+    }
+    match kind {
+        Kind::Pipe | Kind::Comb => fill + items,
+        Kind::Seq | Kind::Par => (seq_work + SEQ_ITEM_BUBBLE) * items,
+    }
+}
+
 /// Step one lane through a pass, cycle by cycle, and return its busy
 /// cycles. Deliberately written as an explicit state machine rather than
 /// a closed-form sum: stall hooks (`stall_fn`) plug into the `Stream`
-/// state, and the structure mirrors the generated HDL's FSM.
-fn lane_cycles(
+/// state, and the structure mirrors the generated HDL's FSM. The
+/// stall-free special case has a closed form
+/// ([`lane_cycles_closed_form`]) which [`time_pass`] uses.
+pub fn lane_cycles_oracle(
     kind: Kind,
     items: u64,
     fill: u64,
@@ -133,9 +157,10 @@ pub fn time_pass(d: &Design, _dev: &Device, seq_cpi: u64) -> PassTiming {
         let items = end - start;
         let lane = &d.lanes[k];
         let seq_work = if matches!(lane.kind, Kind::Seq) { d.info.seq_ni.max(1) * seq_cpi } else { 0 };
-        // CONT streams over banked memories never stall in this design;
-        // the stall hook stays for FIFO-continuity ports.
-        let busy = lane_cycles(lane.kind, items, fill, seq_work, |_| false);
+        // CONT streams over banked memories never stall in this design,
+        // so the closed form applies; the state-machine oracle stays for
+        // FIFO-continuity stall hooks (and as the property-test oracle).
+        let busy = lane_cycles_closed_form(lane.kind, items, fill, seq_work);
         per_lane.push(busy);
     }
     let slowest = per_lane.iter().copied().max().unwrap_or(0);
@@ -237,14 +262,32 @@ mod tests {
 
     #[test]
     fn empty_lane_costs_nothing() {
-        assert_eq!(lane_cycles(Kind::Pipe, 0, 5, 0, |_| false), 0);
+        assert_eq!(lane_cycles_oracle(Kind::Pipe, 0, 5, 0, |_| false), 0);
+        assert_eq!(lane_cycles_closed_form(Kind::Pipe, 0, 5, 0), 0);
     }
 
     #[test]
     fn stalls_extend_streaming() {
         // every other cycle stalled → ~2× streaming time
-        let no_stall = lane_cycles(Kind::Pipe, 100, 3, 0, |_| false);
-        let stalled = lane_cycles(Kind::Pipe, 100, 3, 0, |t| t % 2 == 0);
+        let no_stall = lane_cycles_oracle(Kind::Pipe, 100, 3, 0, |_| false);
+        let stalled = lane_cycles_oracle(Kind::Pipe, 100, 3, 0, |t| t % 2 == 0);
         assert!(stalled > no_stall + 90, "{no_stall} vs {stalled}");
+    }
+
+    #[test]
+    fn closed_form_equals_oracle_grid() {
+        for kind in [Kind::Pipe, Kind::Comb, Kind::Seq, Kind::Par] {
+            for items in [0u64, 1, 2, 7, 100, 1000] {
+                for fill in [0u64, 1, 3, 40] {
+                    for seq_work in [0u64, 1, 2, 8] {
+                        assert_eq!(
+                            lane_cycles_closed_form(kind, items, fill, seq_work),
+                            lane_cycles_oracle(kind, items, fill, seq_work, |_| false),
+                            "{kind:?} items={items} fill={fill} seq_work={seq_work}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

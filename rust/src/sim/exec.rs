@@ -9,11 +9,12 @@
 //! copies (destination memory becomes next pass's source), which is how
 //! the FPGA wrapper re-arms a multi-pass kernel.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
-use super::elaborate::{port_local_name, Design};
+use super::elaborate::{port_local_name, Design, Lane};
 use super::value;
-use crate::tir::{Dir, Func, Module, Operand, Stmt};
+use crate::tir::index::{ModuleIndex, SlotStmt};
+use crate::tir::{Dir, Func, Module, Operand, Slot, SlotOperand, Stmt};
 
 /// Memory state: contents per memory object (raw bit patterns).
 pub type MemState = BTreeMap<String, Vec<u64>>;
@@ -88,11 +89,16 @@ fn resolve(
 //
 // `eval_func` above is the reference interpreter (name-resolved, used by
 // unit tests and kept as the semantics oracle). The pass runner below
-// *compiles* each lane's datapath once — inlining calls, resolving every
-// operand to a register slot or immediate, pre-resolving port reads to
-// (memory, offset, mask) triples — and then evaluates items over a flat
-// u64 register file with zero allocation per item. The §Perf pass in
-// EXPERIMENTS.md records the before/after (≈40× on the simple kernel).
+// *compiles* each lane's datapath once — inlining calls through the
+// module's slot index ([`ModuleIndex`]): every operand is already a
+// [`SlotOperand`], ports/consts/memories resolve by dense slot, and the
+// compiled program evaluates items over a flat u64 register file with
+// zero allocation per item. Multi-pass (`repeat`) runs additionally keep
+// the memory buffers in dense slot order across all passes — the
+// string-keyed `MemState` map is only touched at entry and exit. The
+// §Perf pass in EXPERIMENTS.md records the before/after (≈40× on the
+// simple kernel for compilation alone; the slot index removes the
+// remaining name probes from compile + pass chaining).
 
 /// A compiled operand source.
 #[derive(Debug, Clone, Copy)]
@@ -141,100 +147,87 @@ pub struct CompiledLane {
     n_regs: usize,
 }
 
-/// Memory name ↔ dense index mapping for a run.
-#[derive(Debug, Clone)]
-pub struct MemIndex {
-    names: Vec<String>,
-}
-
-impl MemIndex {
-    fn of(m: &Module) -> MemIndex {
-        MemIndex { names: m.mems.keys().cloned().collect() }
-    }
-    fn idx(&self, name: &str) -> Result<usize, String> {
-        self.names.iter().position(|n| n == name).ok_or_else(|| format!("unknown memory `{name}`"))
-    }
-}
-
-/// Compile one lane of a design.
-fn compile_lane(m: &Module, lane: &super::elaborate::Lane, mi: &MemIndex) -> Result<CompiledLane, String> {
-    let leaf = &m.funcs[&lane.func];
+/// Compile one lane of a design against the module's slot index: every
+/// operand is already a [`SlotOperand`], and port/const/memory
+/// resolution is a dense slot access.
+fn compile_lane(ix: &ModuleIndex, lane: &Lane) -> Result<CompiledLane, String> {
+    let leaf = ix
+        .func_slot(&lane.func)
+        .ok_or_else(|| format!("unknown function `@{}`", lane.func))?;
     let mut c = CompiledLane { reads: Vec::new(), ops: Vec::new(), writes: Vec::new(), n_regs: 0 };
-    let mut alloc = |c: &mut CompiledLane| {
+
+    // Register per referenced input port, by port slot.
+    let mut port_reg: HashMap<Slot, usize> = HashMap::new();
+
+    fn ensure_port(ix: &ModuleIndex, c: &mut CompiledLane, port_reg: &mut HashMap<Slot, usize>, pslot: Slot) -> usize {
+        if let Some(&r) = port_reg.get(&pslot) {
+            return r;
+        }
+        let port = ix.ports[pslot as usize];
+        let mem = ix.stream_mem[ix.port_stream[pslot as usize] as usize];
         let r = c.n_regs;
         c.n_regs += 1;
+        c.reads.push(PortRead { dst: r, mem: mem as usize, offset: port.offset, mask: port.ty.mask() });
+        port_reg.insert(pslot, r);
         r
-    };
+    }
 
-    // Registers for every port this lane can see (positional ports +
-    // directly referenced globals).
-    let mut port_reg: BTreeMap<&str, usize> = BTreeMap::new();
-    let mut ensure_port = |c: &mut CompiledLane,
-                           port_reg: &mut BTreeMap<&str, usize>,
-                           name: &'_ str|
-     -> Result<usize, String> {
-        // SAFETY of borrows: name comes from module-owned strings.
-        if let Some(&r) = port_reg.get(name) {
-            return Ok(r);
-        }
-        let port = m.ports.get(name).ok_or_else(|| format!("unknown port `@{name}`"))?;
-        let stream = &m.streams[&port.stream];
-        let r = {
-            let rr = c.n_regs;
-            c.n_regs += 1;
-            rr
-        };
-        c.reads.push(PortRead { dst: r, mem: mi.idx(&stream.mem)?, offset: port.offset, mask: port.ty.mask() });
-        Ok(r)
-    };
-
-    // Recursive inline compilation mirroring eval_func exactly.
+    // Recursive inline compilation mirroring `eval_func` exactly. The
+    // value environment stays name-keyed because callee results import
+    // into the caller's scope (the paper's Fig 7 convention: frames share
+    // one flat namespace) — but it runs once per lane at compile time;
+    // the per-item path below never touches it.
     fn compile_func<'m>(
-        m: &'m Module,
-        f: &'m Func,
+        ix: &ModuleIndex<'m>,
+        f: Slot,
         args: &[Src],
-        env: &mut BTreeMap<&'m str, usize>,
+        env: &mut HashMap<&'m str, usize>,
         c: &mut CompiledLane,
-        port_reg: &mut BTreeMap<&'m str, usize>,
-        ensure_port: &mut dyn FnMut(&mut CompiledLane, &mut BTreeMap<&'m str, usize>, &'m str) -> Result<usize, String>,
-        alloc: &mut dyn FnMut(&mut CompiledLane) -> usize,
+        port_reg: &mut HashMap<Slot, usize>,
     ) -> Result<(), String> {
-        if !f.params.is_empty() {
-            if args.len() != f.params.len() {
-                return Err(format!("`@{}`: expected {} args, got {}", f.name, f.params.len(), args.len()));
+        let fi = ix.func(f);
+        if !fi.ast.params.is_empty() {
+            if args.len() != fi.ast.params.len() {
+                return Err(format!(
+                    "`@{}`: expected {} args, got {}",
+                    fi.ast.name,
+                    fi.ast.params.len(),
+                    args.len()
+                ));
             }
-            for ((p, ty), &src) in f.params.iter().zip(args) {
+            for ((p, ty), &src) in fi.ast.params.iter().zip(args) {
                 // masked copy == eval_func's `v & ty.mask()`
-                let dst = alloc(c);
+                let dst = c.n_regs;
+                c.n_regs += 1;
                 c.ops.push(CompiledOp { op: None, ty: *ty, a: src, b: Src::Imm(0), c: None, dst });
                 env.insert(p.as_str(), dst);
             }
         }
-        for s in &f.body {
+        for s in &fi.body {
             match s {
-                Stmt::Instr(i) => {
-                    let a = resolve_operand(m, &i.operands[0], env, c, port_reg, ensure_port)?;
+                SlotStmt::Instr(i) => {
+                    let a = resolve_src(ix, fi, &i.operands[0], env, c, port_reg)?;
                     let b = if i.operands.len() > 1 {
-                        resolve_operand(m, &i.operands[1], env, c, port_reg, ensure_port)?
+                        resolve_src(ix, fi, &i.operands[1], env, c, port_reg)?
                     } else {
                         Src::Imm(0)
                     };
                     let cc = if i.operands.len() > 2 {
-                        Some(resolve_operand(m, &i.operands[2], env, c, port_reg, ensure_port)?)
+                        Some(resolve_src(ix, fi, &i.operands[2], env, c, port_reg)?)
                     } else {
                         None
                     };
-                    let dst = alloc(c);
+                    let dst = c.n_regs;
+                    c.n_regs += 1;
                     c.ops.push(CompiledOp { op: Some(i.op), ty: i.ty, a, b, c: cc, dst });
-                    env.insert(i.result.as_str(), dst);
+                    env.insert(fi.local_names[i.dst as usize], dst);
                 }
-                Stmt::Call(call) => {
-                    let callee = &m.funcs[&call.callee];
+                SlotStmt::Call(call) => {
                     let mut argv = Vec::with_capacity(call.args.len());
                     for a in &call.args {
-                        argv.push(resolve_operand(m, a, env, c, port_reg, ensure_port)?);
+                        argv.push(resolve_src(ix, fi, a, env, c, port_reg)?);
                     }
-                    compile_func(m, callee, &argv, env, c, port_reg, ensure_port, alloc)?;
+                    compile_func(ix, call.callee, &argv, env, c, port_reg)?;
                 }
             }
         }
@@ -242,50 +235,54 @@ fn compile_lane(m: &Module, lane: &super::elaborate::Lane, mi: &MemIndex) -> Res
     }
 
     /// Operand resolution shared by instruction and call-arg paths.
-    fn resolve_operand<'m>(
-        m: &'m Module,
-        o: &'m Operand,
-        env: &mut BTreeMap<&'m str, usize>,
+    fn resolve_src<'m>(
+        ix: &ModuleIndex<'m>,
+        fi: &crate::tir::index::FuncIndex<'m>,
+        o: &SlotOperand,
+        env: &mut HashMap<&'m str, usize>,
         c: &mut CompiledLane,
-        port_reg: &mut BTreeMap<&'m str, usize>,
-        ensure_port: &mut dyn FnMut(&mut CompiledLane, &mut BTreeMap<&'m str, usize>, &'m str) -> Result<usize, String>,
+        port_reg: &mut HashMap<Slot, usize>,
     ) -> Result<Src, String> {
         match o {
-            Operand::Local(n) => env
-                .get(n.as_str())
-                .map(|&r| Src::Reg(r))
-                .ok_or_else(|| format!("undefined local `%{n}`")),
-            Operand::Imm(v) => Ok(Src::Imm(*v as u64)),
-            Operand::Global(g) => {
-                if let Some(cst) = m.consts.get(g) {
-                    return Ok(Src::Imm((cst.value as u64) & cst.ty.mask()));
-                }
-                ensure_port(c, port_reg, g.as_str()).map(Src::Reg)
+            SlotOperand::Local(s) => {
+                let name = fi.local_names[*s as usize];
+                env.get(name).map(|&r| Src::Reg(r)).ok_or_else(|| format!("undefined local `%{name}`"))
             }
+            SlotOperand::Imm(v) => Ok(Src::Imm(*v as u64)),
+            SlotOperand::Const(cs) => {
+                let cst = ix.consts[*cs as usize];
+                Ok(Src::Imm((cst.value as u64) & cst.ty.mask()))
+            }
+            SlotOperand::Port(p) => Ok(Src::Reg(ensure_port(ix, c, port_reg, *p))),
         }
     }
+
     // Positional argument sources for the leaf call.
-    let mut env: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut env: HashMap<&str, usize> = HashMap::new();
     let mut argv: Vec<Src> = Vec::new();
     for pname in &lane.in_ports {
-        if let Some(cst) = m.consts.get(pname) {
+        if let Some(cs) = ix.const_slot(pname) {
+            let cst = ix.consts[cs as usize];
             argv.push(Src::Imm((cst.value as u64) & cst.ty.mask()));
+        } else if let Some(ps) = ix.port_slot(pname) {
+            argv.push(Src::Reg(ensure_port(ix, &mut c, &mut port_reg, ps)));
         } else {
-            argv.push(Src::Reg(ensure_port(&mut c, &mut port_reg, pname.as_str())?));
+            return Err(format!("unknown port `@{pname}`"));
         }
     }
-    let argv = if leaf.params.is_empty() { Vec::new() } else { argv };
-    compile_func(m, leaf, &argv, &mut env, &mut c, &mut port_reg, &mut ensure_port, &mut alloc)?;
+    let argv = if ix.func(leaf).ast.params.is_empty() { Vec::new() } else { argv };
+    compile_func(ix, leaf, &argv, &mut env, &mut c, &mut port_reg)?;
 
     // Output bindings.
     for out in &lane.out_ports {
-        let port = &m.ports[out];
+        let pslot = ix.port_slot(out).ok_or_else(|| format!("unknown port `@{out}`"))?;
+        let port = ix.ports[pslot as usize];
         let local = port_local_name(out);
         let &src = env
             .get(local)
             .ok_or_else(|| format!("lane `@{}` computes no `%{local}` for port `@{out}`", lane.func))?;
-        let stream = &m.streams[&port.stream];
-        c.writes.push(PortWrite { src, mem: mi.idx(&stream.mem)?, mask: port.ty.mask() });
+        let mem = ix.stream_mem[ix.port_stream[pslot as usize] as usize];
+        c.writes.push(PortWrite { src, mem: mem as usize, mask: port.ty.mask() });
     }
     Ok(c)
 }
@@ -343,55 +340,58 @@ impl CompiledLane {
 /// Run one full kernel pass: every lane over its item range, committing
 /// ostream values into the destination memories.
 pub fn run_pass(m: &Module, d: &Design, mems: &mut MemState) -> Result<(), String> {
-    let mi = MemIndex::of(m);
+    let ix = ModuleIndex::build(m)?;
     let compiled: Vec<CompiledLane> =
-        d.lanes.iter().map(|l| compile_lane(m, l, &mi)).collect::<Result<_, _>>()?;
-    run_pass_compiled(d, &mi, &compiled, mems)
+        d.lanes.iter().map(|l| compile_lane(&ix, l)).collect::<Result<_, _>>()?;
+    let mut bufs = take_bufs(&ix, mems)?;
+    let result = run_pass_bufs(d, &compiled, &mut bufs);
+    restore_bufs(&ix, mems, bufs);
+    result
 }
 
-/// Run one pass with pre-compiled lanes (the multi-pass hot path).
-fn run_pass_compiled(
-    d: &Design,
-    mi: &MemIndex,
-    compiled: &[CompiledLane],
-    mems: &mut MemState,
-) -> Result<(), String> {
-    // Move buffers into dense indexed form.
-    let mut bufs: Vec<Vec<u64>> = Vec::with_capacity(mi.names.len());
-    for name in &mi.names {
-        bufs.push(
-            mems.remove(name).ok_or_else(|| format!("memory `@{name}` not initialised"))?,
-        );
+/// Move memory buffers out of the string-keyed state into dense slot
+/// order. Every memory is checked present before anything moves, so an
+/// error leaves `mems` intact.
+fn take_bufs(ix: &ModuleIndex, mems: &mut MemState) -> Result<Vec<Vec<u64>>, String> {
+    for mem in &ix.mems {
+        if !mems.contains_key(&mem.name) {
+            return Err(format!("memory `@{}` not initialised", mem.name));
+        }
     }
+    Ok(ix.mems.iter().map(|mem| mems.remove(&mem.name).expect("checked present")).collect())
+}
+
+/// Restore dense buffers into the string-keyed state.
+fn restore_bufs(ix: &ModuleIndex, mems: &mut MemState, bufs: Vec<Vec<u64>>) {
+    for (mem, buf) in ix.mems.iter().zip(bufs) {
+        mems.insert(mem.name.clone(), buf);
+    }
+}
+
+/// Run one pass over dense buffers with pre-compiled lanes — the
+/// per-item hot path, with no name resolution at all. Writes commit only
+/// when every lane evaluated cleanly (streaming semantics: all reads of
+/// a pass see the pass's input state).
+fn run_pass_bufs(d: &Design, compiled: &[CompiledLane], bufs: &mut [Vec<u64>]) -> Result<(), String> {
     let nlanes = d.lanes.len();
     let mut writes: Vec<(usize, u64, u64)> = Vec::new();
     let mut regs = vec![0u64; compiled.iter().map(|c| c.n_regs).max().unwrap_or(0)];
-    let mut result = Ok(());
-    'outer: for (k, lane) in compiled.iter().enumerate() {
+    for (k, lane) in compiled.iter().enumerate() {
         let (start, end) = d.lane_range(k, nlanes);
         for item in start..end {
             let lin = d.index.linear(item);
-            if let Err(e) = lane.eval_item(&mut regs, &bufs, lin, &mut writes) {
-                result = Err(format!("lane {k}, item {item}: {e}"));
-                break 'outer;
-            }
+            lane.eval_item(&mut regs, bufs, lin, &mut writes)
+                .map_err(|e| format!("lane {k}, item {item}: {e}"))?;
         }
     }
-    if result.is_ok() {
-        for (mem, idx, v) in writes {
-            let buf = &mut bufs[mem];
-            if idx as usize >= buf.len() {
-                result = Err(format!("write out of bounds: mem #{mem}[{idx}]"));
-                break;
-            }
-            buf[idx as usize] = v;
+    for (mem, idx, v) in writes {
+        let buf = &mut bufs[mem];
+        if idx as usize >= buf.len() {
+            return Err(format!("write out of bounds: mem #{mem}[{idx}]"));
         }
+        buf[idx as usize] = v;
     }
-    // Restore buffers regardless of outcome.
-    for (name, buf) in mi.names.iter().zip(bufs) {
-        mems.insert(name.clone(), buf);
-    }
-    result
+    Ok(())
 }
 
 /// Reference (interpreted) pass runner — the semantics oracle the
@@ -475,22 +475,43 @@ pub fn run_pass_interpreted(m: &Module, d: &Design, mems: &mut MemState) -> Resu
 /// source memories (pairing: the lane reads stream X ← mem A and writes
 /// stream Y → mem B ⇒ B feeds A for the next pass).
 pub fn run_all_passes(m: &Module, d: &Design, mems: &mut MemState) -> Result<(), String> {
+    let ix = ModuleIndex::build(m)?;
+    run_all_passes_with(&ix, d, mems)
+}
+
+/// Multi-pass runner over a pre-built slot index: lanes compile once,
+/// the memory buffers stay dense across every chained pass, and the
+/// ping-pong copies move by memory slot — the string-keyed `MemState`
+/// is touched exactly twice (entry and exit) regardless of `repeat`.
+pub fn run_all_passes_with(ix: &ModuleIndex, d: &Design, mems: &mut MemState) -> Result<(), String> {
     let repeat = d.info.repeat.max(1);
-    let pairs = pingpong_pairs(m);
-    // Compile lanes once; reuse across all chained passes.
-    let mi = MemIndex::of(m);
     let compiled: Vec<CompiledLane> =
-        d.lanes.iter().map(|l| compile_lane(m, l, &mi)).collect::<Result<_, _>>()?;
+        d.lanes.iter().map(|l| compile_lane(ix, l)).collect::<Result<_, _>>()?;
+    let pairs = pingpong_slots(ix);
+    let mut bufs = take_bufs(ix, mems)?;
+    let mut result = Ok(());
     for pass in 0..repeat {
-        run_pass_compiled(d, &mi, &compiled, mems)?;
+        if let Err(e) = run_pass_bufs(d, &compiled, &mut bufs) {
+            result = Err(e);
+            break;
+        }
         if pass + 1 < repeat {
-            for (dst, src) in &pairs {
-                let data = mems.get(dst).cloned().ok_or_else(|| format!("memory `@{dst}` missing"))?;
-                mems.insert(src.clone(), data);
+            for &(dst, src) in &pairs {
+                let data = bufs[dst].clone();
+                bufs[src] = data;
             }
         }
     }
-    Ok(())
+    restore_bufs(ix, mems, bufs);
+    result
+}
+
+/// [`pingpong_pairs`] resolved to memory slots.
+fn pingpong_slots(ix: &ModuleIndex) -> Vec<(usize, usize)> {
+    pingpong_pairs(ix.module)
+        .into_iter()
+        .filter_map(|(d, s)| Some((ix.mem_slot(&d)? as usize, ix.mem_slot(&s)? as usize)))
+        .collect()
 }
 
 /// (dest-mem, source-mem) pairs for multi-pass chaining. Only pairs with

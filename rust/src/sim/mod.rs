@@ -14,7 +14,7 @@ pub mod engine;
 pub mod exec;
 pub mod value;
 
-pub use elaborate::{elaborate, Design, IndexSpace, Lane};
+pub use elaborate::{elaborate, elaborate_with, Design, IndexSpace, Lane};
 pub use exec::MemState;
 
 use std::collections::BTreeMap;
@@ -98,10 +98,13 @@ impl SimResult {
 }
 
 /// Run the full simulation: functional passes + cycle-level timing.
+/// The module's names are resolved into a slot index **once**, shared by
+/// elaboration and every chained execution pass.
 pub fn simulate(m: &Module, dev: &Device, w: &Workload) -> Result<SimResult, String> {
-    let d = elaborate(m)?;
+    let ix = crate::tir::ModuleIndex::build(m)?;
+    let d = elaborate::elaborate_with(&ix)?;
     let mut mems = w.mems.clone();
-    exec::run_all_passes(m, &d, &mut mems)?;
+    exec::run_all_passes_with(&ix, &d, &mut mems)?;
     let t = engine::time_group(&d, dev);
     Ok(SimResult { cycles_per_pass: t.pass.cycles, total_cycles: t.total_cycles, passes: t.passes, mems })
 }

@@ -1,0 +1,475 @@
+//! Slot-indexed resolution of a validated [`Module`] — the spine of the
+//! estimator/simulator/DSE hot path.
+//!
+//! Every const/mem/stream/port/func name is interned into a dense `u32`
+//! slot **once**, and every operand of every instruction/call is
+//! pre-resolved to a [`SlotOperand`]. The estimator's accumulation walk,
+//! the structural analysis, the simulator's elaboration and the lane
+//! compiler then execute over dense vectors instead of repeatedly probing
+//! `BTreeMap<String, _>` — the paper's "light-weight estimator" claim
+//! depends on exactly this kind of resolve-once/run-dense split (compare
+//! LLHD's multi-level lowering: names die at the boundary, indices run
+//! the machine).
+//!
+//! The name-resolved walks are *retained* as reference oracles
+//! (`estimator::accumulate::estimate_resources_reference`,
+//! `sim::exec::run_pass_interpreted`, `estimator::structure::analyze`);
+//! `rust/tests/property.rs` proves the indexed paths bit-identical to
+//! them over randomly generated kernels.
+
+use std::collections::HashMap;
+
+use super::ast::{Const, Func, Kind, MemObject, Module, Op, Port, Stmt, StreamObject};
+use super::types::Ty;
+
+/// Dense index into one of the per-namespace slot tables.
+pub type Slot = u32;
+
+/// A pre-resolved instruction/call operand. `Local` slots are scoped to
+/// the owning function's local table ([`FuncIndex::local_names`]);
+/// `Const`/`Port` slots are module-wide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotOperand {
+    /// SSA local, by per-function local slot.
+    Local(Slot),
+    /// Named constant, by module const slot.
+    Const(Slot),
+    /// Compute port, by module port slot.
+    Port(Slot),
+    /// Integer immediate.
+    Imm(i64),
+}
+
+/// One SSA instruction with slot-resolved operands.
+#[derive(Debug, Clone)]
+pub struct SlotInstr {
+    /// Local slot of the result.
+    pub dst: Slot,
+    pub op: Op,
+    pub ty: Ty,
+    /// Operands in source order (arity validated upstream).
+    pub operands: Vec<SlotOperand>,
+}
+
+/// One call statement with slot-resolved callee and arguments.
+#[derive(Debug, Clone)]
+pub struct SlotCall {
+    /// Func slot of the callee.
+    pub callee: Slot,
+    pub args: Vec<SlotOperand>,
+    pub repeat: u64,
+}
+
+/// A statement of an indexed function body. The vector is 1:1 with the
+/// AST body (`FuncIndex::ast.body[i]` is the source of `body[i]`), so
+/// diagnostics can always recover the original text.
+#[derive(Debug, Clone)]
+pub enum SlotStmt {
+    Instr(SlotInstr),
+    Call(SlotCall),
+}
+
+/// A statement of the pre-extracted ASAP-schedule program (see
+/// [`FuncIndex::sched`]). Slots index the function's *schedule scope*:
+/// a flat name table covering params, own SSA results, locally used
+/// names and direct-callee results — deliberately flat so that the name
+/// aliasing of the reference `pipe_schedule` (one `BTreeMap` across the
+/// inline expansion) is reproduced exactly.
+#[derive(Debug, Clone)]
+pub enum SchedStmt {
+    /// `dst` becomes ready one stage after its latest `deps` stage.
+    Instr { dst: Slot, deps: Vec<Slot> },
+    /// A call site: `defs` (the direct callee's SSA results, interned in
+    /// this scope) become ready `occupied(callee)` stages after `deps`.
+    Call { callee: Slot, deps: Vec<Slot>, defs: Vec<Slot> },
+}
+
+/// One function of the indexed module.
+#[derive(Debug, Clone)]
+pub struct FuncIndex<'m> {
+    /// The AST function this indexes.
+    pub ast: &'m Func,
+    pub kind: Kind,
+    /// Parameter count (params occupy local slots `0..n_params`).
+    pub n_params: u32,
+    /// Total local slots (params + every distinct local name mentioned).
+    pub n_locals: u32,
+    /// Own SSA instruction count.
+    pub n_instrs: u32,
+    /// Slot-resolved body, 1:1 with `ast.body`.
+    pub body: Vec<SlotStmt>,
+    /// Local slot → name (borrowed from the module AST).
+    pub local_names: Vec<&'m str>,
+    /// Pre-extracted ASAP schedule program (pipe depth computation).
+    pub sched: Vec<SchedStmt>,
+    /// Size of the schedule scope's stage vector.
+    pub sched_slots: u32,
+}
+
+/// The slot-indexed view of a validated module. Slot order within each
+/// namespace is the `BTreeMap` name order of the underlying module, so
+/// iterating a slot table visits objects in exactly the order the
+/// name-resolved reference walks do.
+#[derive(Debug, Clone)]
+pub struct ModuleIndex<'m> {
+    /// The module this indexes.
+    pub module: &'m Module,
+    /// Const slot → const.
+    pub consts: Vec<&'m Const>,
+    /// Mem slot → memory object.
+    pub mems: Vec<&'m MemObject>,
+    /// Stream slot → stream object.
+    pub streams: Vec<&'m StreamObject>,
+    /// Stream slot → backing mem slot.
+    pub stream_mem: Vec<Slot>,
+    /// Port slot → port.
+    pub ports: Vec<&'m Port>,
+    /// Port slot → stream slot it taps.
+    pub port_stream: Vec<Slot>,
+    /// Func slot → indexed function.
+    pub funcs: Vec<FuncIndex<'m>>,
+    /// Slot of `@main`, when present.
+    pub main: Option<Slot>,
+    /// `launch()` body with slot-resolved callees.
+    pub launch: Vec<SlotCall>,
+
+    const_slots: HashMap<&'m str, Slot>,
+    mem_slots: HashMap<&'m str, Slot>,
+    stream_slots: HashMap<&'m str, Slot>,
+    port_slots: HashMap<&'m str, Slot>,
+    func_slots: HashMap<&'m str, Slot>,
+}
+
+impl<'m> ModuleIndex<'m> {
+    /// Build the index. The module should already be validated; dangling
+    /// references are reported as errors rather than panics so the
+    /// builder is safe on arbitrary input.
+    pub fn build(m: &'m Module) -> Result<ModuleIndex<'m>, String> {
+        let mut ix = ModuleIndex {
+            module: m,
+            consts: Vec::with_capacity(m.consts.len()),
+            mems: Vec::with_capacity(m.mems.len()),
+            streams: Vec::with_capacity(m.streams.len()),
+            stream_mem: Vec::with_capacity(m.streams.len()),
+            ports: Vec::with_capacity(m.ports.len()),
+            port_stream: Vec::with_capacity(m.ports.len()),
+            funcs: Vec::with_capacity(m.funcs.len()),
+            main: None,
+            launch: Vec::with_capacity(m.launch.len()),
+            const_slots: HashMap::with_capacity(m.consts.len()),
+            mem_slots: HashMap::with_capacity(m.mems.len()),
+            stream_slots: HashMap::with_capacity(m.streams.len()),
+            port_slots: HashMap::with_capacity(m.ports.len()),
+            func_slots: HashMap::with_capacity(m.funcs.len()),
+        };
+
+        for (slot, c) in m.consts.values().enumerate() {
+            ix.consts.push(c);
+            ix.const_slots.insert(c.name.as_str(), slot as Slot);
+        }
+        for (slot, mem) in m.mems.values().enumerate() {
+            ix.mems.push(mem);
+            ix.mem_slots.insert(mem.name.as_str(), slot as Slot);
+        }
+        for (slot, s) in m.streams.values().enumerate() {
+            ix.streams.push(s);
+            ix.stream_slots.insert(s.name.as_str(), slot as Slot);
+        }
+        for s in &ix.streams {
+            let mem = ix
+                .mem_slots
+                .get(s.mem.as_str())
+                .copied()
+                .ok_or_else(|| format!("stream `@{}` references unknown memory `{}`", s.name, s.mem))?;
+            ix.stream_mem.push(mem);
+        }
+        for (slot, p) in m.ports.values().enumerate() {
+            ix.ports.push(p);
+            ix.port_slots.insert(p.name.as_str(), slot as Slot);
+        }
+        for p in &ix.ports {
+            let stream = ix
+                .stream_slots
+                .get(p.stream.as_str())
+                .copied()
+                .ok_or_else(|| format!("port `@{}` references unknown stream `{}`", p.name, p.stream))?;
+            ix.port_stream.push(stream);
+        }
+        // Func slots first (bodies may reference any function)…
+        for (slot, f) in m.funcs.values().enumerate() {
+            ix.func_slots.insert(f.name.as_str(), slot as Slot);
+        }
+        ix.main = ix.func_slots.get("main").copied();
+        // …then bodies.
+        let mut funcs = Vec::with_capacity(m.funcs.len());
+        for f in m.funcs.values() {
+            funcs.push(ix.index_func(f)?);
+        }
+        ix.funcs = funcs;
+        for c in &m.launch {
+            let callee = ix
+                .func_slots
+                .get(c.callee.as_str())
+                .copied()
+                .ok_or_else(|| format!("launch() calls unknown function `@{}`", c.callee))?;
+            ix.launch.push(SlotCall { callee, args: Vec::new(), repeat: c.repeat });
+        }
+        Ok(ix)
+    }
+
+    /// Slot of a constant by name.
+    pub fn const_slot(&self, name: &str) -> Option<Slot> {
+        self.const_slots.get(name).copied()
+    }
+
+    /// Slot of a memory object by name.
+    pub fn mem_slot(&self, name: &str) -> Option<Slot> {
+        self.mem_slots.get(name).copied()
+    }
+
+    /// Slot of a stream object by name.
+    pub fn stream_slot(&self, name: &str) -> Option<Slot> {
+        self.stream_slots.get(name).copied()
+    }
+
+    /// Slot of a port by name.
+    pub fn port_slot(&self, name: &str) -> Option<Slot> {
+        self.port_slots.get(name).copied()
+    }
+
+    /// Slot of a function by name.
+    pub fn func_slot(&self, name: &str) -> Option<Slot> {
+        self.func_slots.get(name).copied()
+    }
+
+    /// The indexed function at a slot.
+    pub fn func(&self, slot: Slot) -> &FuncIndex<'m> {
+        &self.funcs[slot as usize]
+    }
+
+    /// Per-stream `(min, max)` read-port offsets, by stream slot.
+    /// Streams with no read ports report `(0, 0)` — a zero span, exactly
+    /// what the name-resolved reference computes for them.
+    pub fn read_offset_spans(&self) -> Vec<(i64, i64)> {
+        let mut spans = vec![(0i64, 0i64); self.streams.len()];
+        for (pslot, p) in self.ports.iter().enumerate() {
+            if p.dir != super::ast::Dir::Read {
+                continue;
+            }
+            let e = &mut spans[self.port_stream[pslot] as usize];
+            e.0 = e.0.min(p.offset);
+            e.1 = e.1.max(p.offset);
+        }
+        spans
+    }
+
+    /// Resolve a global operand name: constants shadow ports, matching
+    /// the reference interpreters' lookup order.
+    fn resolve_global(&self, name: &'m str) -> Result<SlotOperand, String> {
+        if let Some(&c) = self.const_slots.get(name) {
+            return Ok(SlotOperand::Const(c));
+        }
+        if let Some(&p) = self.port_slots.get(name) {
+            return Ok(SlotOperand::Port(p));
+        }
+        Err(format!("unresolved global `@{name}`"))
+    }
+
+    fn index_func(&self, f: &'m Func) -> Result<FuncIndex<'m>, String> {
+        let mut local_slots: HashMap<&'m str, Slot> = HashMap::new();
+        let mut local_names: Vec<&'m str> = Vec::new();
+        let mut intern_local = |name: &'m str, names: &mut Vec<&'m str>| -> Slot {
+            *local_slots.entry(name).or_insert_with(|| {
+                names.push(name);
+                (names.len() - 1) as Slot
+            })
+        };
+        for (p, _) in &f.params {
+            intern_local(p.as_str(), &mut local_names);
+        }
+        let n_params = f.params.len() as u32;
+
+        // Schedule scope: flat across params, own defs/uses and direct
+        // callee results (see `SchedStmt`).
+        let mut sched_slots: HashMap<&'m str, Slot> = HashMap::new();
+        let mut n_sched: u32 = 0;
+        let mut sched_intern = |name: &'m str, n: &mut u32| -> Slot {
+            *sched_slots.entry(name).or_insert_with(|| {
+                let s = *n;
+                *n += 1;
+                s
+            })
+        };
+        for (p, _) in &f.params {
+            sched_intern(p.as_str(), &mut n_sched);
+        }
+
+        let mut body = Vec::with_capacity(f.body.len());
+        let mut sched = Vec::with_capacity(f.body.len());
+        let mut n_instrs = 0u32;
+        for s in &f.body {
+            match s {
+                Stmt::Instr(i) => {
+                    n_instrs += 1;
+                    let mut operands = Vec::with_capacity(i.operands.len());
+                    let mut deps = Vec::new();
+                    for o in &i.operands {
+                        let so = match o {
+                            super::ast::Operand::Local(n) => {
+                                deps.push(sched_intern(n.as_str(), &mut n_sched));
+                                SlotOperand::Local(intern_local(n.as_str(), &mut local_names))
+                            }
+                            super::ast::Operand::Global(g) => self.resolve_global(g.as_str())?,
+                            super::ast::Operand::Imm(v) => SlotOperand::Imm(*v),
+                        };
+                        operands.push(so);
+                    }
+                    let dst = intern_local(i.result.as_str(), &mut local_names);
+                    let sdst = sched_intern(i.result.as_str(), &mut n_sched);
+                    body.push(SlotStmt::Instr(SlotInstr { dst, op: i.op, ty: i.ty, operands }));
+                    sched.push(SchedStmt::Instr { dst: sdst, deps });
+                }
+                Stmt::Call(c) => {
+                    let callee = self
+                        .func_slots
+                        .get(c.callee.as_str())
+                        .copied()
+                        .ok_or_else(|| format!("`@{}` calls unknown function `@{}`", f.name, c.callee))?;
+                    let mut args = Vec::with_capacity(c.args.len());
+                    let mut deps = Vec::new();
+                    for a in &c.args {
+                        let so = match a {
+                            super::ast::Operand::Local(n) => {
+                                deps.push(sched_intern(n.as_str(), &mut n_sched));
+                                SlotOperand::Local(intern_local(n.as_str(), &mut local_names))
+                            }
+                            super::ast::Operand::Global(g) => self.resolve_global(g.as_str())?,
+                            super::ast::Operand::Imm(v) => SlotOperand::Imm(*v),
+                        };
+                        args.push(so);
+                    }
+                    // Direct-callee SSA results, interned into this
+                    // scope (they are importable by later statements —
+                    // the paper's Fig 7 convention).
+                    let callee_ast = &self.module.funcs[&c.callee];
+                    let mut defs = Vec::new();
+                    for cs in &callee_ast.body {
+                        if let Stmt::Instr(ci) = cs {
+                            defs.push(sched_intern(ci.result.as_str(), &mut n_sched));
+                            intern_local(ci.result.as_str(), &mut local_names);
+                        }
+                    }
+                    body.push(SlotStmt::Call(SlotCall { callee, args, repeat: c.repeat }));
+                    sched.push(SchedStmt::Call { callee, deps, defs });
+                }
+            }
+        }
+
+        Ok(FuncIndex {
+            ast: f,
+            kind: f.kind,
+            n_params,
+            n_locals: local_names.len() as u32,
+            n_instrs,
+            body,
+            local_names,
+            sched,
+            sched_slots: n_sched,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::{examples, parse_and_validate, Dir};
+
+    #[test]
+    fn slots_follow_name_order() {
+        let m = parse_and_validate(&examples::fig7_pipe()).unwrap();
+        let ix = ModuleIndex::build(&m).unwrap();
+        let mem_names: Vec<&str> = ix.mems.iter().map(|mm| mm.name.as_str()).collect();
+        let want: Vec<&str> = m.mems.keys().map(String::as_str).collect();
+        assert_eq!(mem_names, want);
+        for (slot, p) in ix.ports.iter().enumerate() {
+            assert_eq!(ix.port_slot(&p.name), Some(slot as Slot));
+        }
+    }
+
+    #[test]
+    fn stream_and_port_links_resolve() {
+        let m = parse_and_validate(&examples::fig15_sor_default()).unwrap();
+        let ix = ModuleIndex::build(&m).unwrap();
+        for (sslot, s) in ix.streams.iter().enumerate() {
+            assert_eq!(ix.mems[ix.stream_mem[sslot] as usize].name, s.mem);
+        }
+        for (pslot, p) in ix.ports.iter().enumerate() {
+            assert_eq!(ix.streams[ix.port_stream[pslot] as usize].name, p.stream);
+        }
+    }
+
+    #[test]
+    fn func_bodies_are_lockstep_with_ast() {
+        let m = parse_and_validate(&examples::fig9_multi_pipe(4)).unwrap();
+        let ix = ModuleIndex::build(&m).unwrap();
+        for fi in &ix.funcs {
+            assert_eq!(fi.body.len(), fi.ast.body.len(), "@{}", fi.ast.name);
+            assert_eq!(
+                fi.n_instrs as usize,
+                fi.ast.body.iter().filter(|s| matches!(s, Stmt::Instr(_))).count()
+            );
+        }
+        assert!(ix.main.is_some());
+        assert_eq!(ix.func(ix.main.unwrap()).ast.name, "main");
+    }
+
+    #[test]
+    fn operands_resolve_to_expected_kinds() {
+        let m = parse_and_validate(&examples::fig7_pipe()).unwrap();
+        let ix = ModuleIndex::build(&m).unwrap();
+        // fig7's main calls f2 with port globals.
+        let main = ix.func(ix.main.unwrap());
+        let SlotStmt::Call(call) = &main.body[0] else { panic!("main body starts with a call") };
+        for a in &call.args {
+            assert!(matches!(a, SlotOperand::Port(_)), "{a:?}");
+        }
+        // f2 adds the const @k.
+        let f2 = ix.func(ix.func_slot("f2").unwrap());
+        let has_const = f2.body.iter().any(|s| match s {
+            SlotStmt::Instr(i) => i.operands.iter().any(|o| matches!(o, SlotOperand::Const(_))),
+            _ => false,
+        });
+        assert!(has_const, "f2 references @k");
+    }
+
+    #[test]
+    fn read_offset_spans_match_reference() {
+        let m = parse_and_validate(&examples::fig15_sor_default()).unwrap();
+        let ix = ModuleIndex::build(&m).unwrap();
+        let spans = ix.read_offset_spans();
+        for (sslot, s) in ix.streams.iter().enumerate() {
+            let (lo, hi) = spans[sslot];
+            let mut want = (0i64, 0i64);
+            for p in m.ports.values() {
+                if p.dir == Dir::Read && p.stream == s.name {
+                    want.0 = want.0.min(p.offset);
+                    want.1 = want.1.max(p.offset);
+                }
+            }
+            assert_eq!((lo, hi), want, "stream {}", s.name);
+        }
+    }
+
+    #[test]
+    fn dangling_reference_is_an_error() {
+        let mut m = parse_and_validate(&examples::fig7_pipe()).unwrap();
+        m.funcs.get_mut("main").unwrap().body.push(Stmt::Call(crate::tir::Call {
+            callee: "ghost".into(),
+            args: Vec::new(),
+            kind: None,
+            repeat: 1,
+        }));
+        let e = ModuleIndex::build(&m).unwrap_err();
+        assert!(e.contains("ghost"), "{e}");
+    }
+}

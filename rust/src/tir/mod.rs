@@ -31,6 +31,7 @@
 pub mod ast;
 pub mod builder;
 pub mod examples;
+pub mod index;
 pub mod lexer;
 pub mod parser;
 pub mod pretty;
@@ -42,23 +43,35 @@ pub use ast::{
     addrspace, Call, Const, Continuity, Counter, Dir, Func, Instr, Kind, MemObject, Module, Op,
     Operand, Port, Stmt, StreamObject,
 };
+pub use index::{ModuleIndex, Slot, SlotOperand};
 pub use types::Ty;
 
 use token::Span;
 
 /// Errors produced by the TIR front half (lexing, parsing, validation).
-#[derive(Debug, thiserror::Error)]
+/// (Hand-rolled `Display`/`Error` impls — `thiserror` is unavailable in
+/// the offline build image.)
+#[derive(Debug)]
 pub enum Error {
     /// Lexical error with source position.
-    #[error("lex error at {span}: {msg}")]
     Lex { span: Span, msg: String },
     /// Parse error with source position.
-    #[error("parse error at {span}: {msg}")]
     Parse { span: Span, msg: String },
     /// Semantic/validation error.
-    #[error("validation error in `{module}`: {msg}")]
     Validate { module: String, msg: String },
 }
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Lex { span, msg } => write!(f, "lex error at {span}: {msg}"),
+            Error::Parse { span, msg } => write!(f, "parse error at {span}: {msg}"),
+            Error::Validate { module, msg } => write!(f, "validation error in `{module}`: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
 
 impl Error {
     pub(crate) fn lex<S: Into<String>>(span: Span, msg: S) -> Error {

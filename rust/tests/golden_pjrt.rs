@@ -5,6 +5,10 @@
 //! L1 Pallas ≙ pure-jnp oracle (pytest) ≙ HLO artifact (this test)
 //! ≙ Rust simulator (this test) — so every design-space configuration
 //! the DSE explores computes exactly the paper's kernels.
+//!
+//! Compiled only with the `pjrt` feature (needs the vendored `xla`
+//! crate, absent from the offline image — see Cargo.toml).
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 

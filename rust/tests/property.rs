@@ -15,6 +15,12 @@
 //!    monotonically with replication.
 //! 4. **EWGT formula consistency** — the closed-form specialisations
 //!    agree with the cycle-domain computation.
+//! 5. **Slot-index soundness** — the slot-indexed estimator/executor hot
+//!    paths are bit-identical to the retained name-resolved reference
+//!    walks (`estimate_resources_reference`, `analyze`,
+//!    `run_pass_interpreted`/`eval_func`), and the closed-form
+//!    `lane_cycles` expression equals the state-machine oracle for
+//!    stall-free runs.
 
 use tytra::device::Device;
 use tytra::estimator;
@@ -220,6 +226,76 @@ fn ewgt_specialisations_agree_with_cycle_domain() {
         assert!(
             ratio > 0.999 && ratio < bound * 1.001 + 1e-9,
             "class {class:?}: ratio {ratio} outside [1, {bound}] (info {info:?})"
+        );
+    }
+}
+
+#[test]
+fn indexed_estimator_is_bit_identical_to_reference() {
+    use tytra::estimator::accumulate::{estimate_resources, estimate_resources_reference};
+    use tytra::estimator::structure::{analyze, analyze_ix};
+    use tytra::estimator::CostDb;
+    use tytra::tir::ModuleIndex;
+
+    let mut rng = Prng::new(0xA11CE);
+    let dev = Device::stratix4();
+    let db = CostDb::default();
+    for case in 0..CASES {
+        let src = random_kernel(&mut rng, case);
+        let k = frontend::parse_kernel(&src).unwrap();
+        for p in [DesignPoint::c2(), DesignPoint::c1(2), DesignPoint::c1(4), DesignPoint::c4(), DesignPoint::c5(4)] {
+            let Ok(m) = frontend::lower(&k, p) else { continue };
+            let ix = ModuleIndex::build(&m).unwrap();
+            // resource accumulation: indexed == name-resolved walk
+            let fast = estimate_resources(&m, &db, &dev).unwrap();
+            let slow = estimate_resources_reference(&m, &db, &dev).unwrap();
+            assert_eq!(fast, slow, "resources diverge for {p:?}\n{src}");
+            // structural analysis: indexed == name-resolved walk
+            assert_eq!(
+                analyze_ix(&ix).unwrap(),
+                analyze(&m).unwrap(),
+                "structure diverges for {p:?}\n{src}"
+            );
+        }
+    }
+}
+
+#[test]
+fn slot_indexed_executor_is_bit_identical_to_eval_func() {
+    use tytra::sim::exec::{run_pass, run_pass_interpreted};
+
+    let mut rng = Prng::new(0x51077);
+    for case in 0..CASES {
+        let src = random_kernel(&mut rng, case);
+        let k = frontend::parse_kernel(&src).unwrap();
+        for p in [DesignPoint::c2(), DesignPoint::c1(4), DesignPoint::c4()] {
+            let Ok(m) = frontend::lower(&k, p) else { continue };
+            let d = sim::elaborate(&m).unwrap();
+            let w = Workload::random_for(&m, 1000 + case as u64);
+            let mut fast = w.mems.clone();
+            let mut slow = w.mems.clone();
+            run_pass(&m, &d, &mut fast).unwrap_or_else(|e| panic!("{e}\n{src}"));
+            run_pass_interpreted(&m, &d, &mut slow).unwrap_or_else(|e| panic!("{e}\n{src}"));
+            assert_eq!(fast, slow, "compiled != interpreted for {p:?}\n{src}");
+        }
+    }
+}
+
+#[test]
+fn closed_form_lane_cycles_equals_state_machine_oracle() {
+    use tytra::sim::engine::{lane_cycles_closed_form, lane_cycles_oracle};
+    use tytra::tir::Kind;
+
+    let mut rng = Prng::new(0xC10C);
+    for _ in 0..2000 {
+        let kind = *rng.choose(&[Kind::Pipe, Kind::Comb, Kind::Seq, Kind::Par]);
+        let items = rng.range_u64(0, 2000);
+        let fill = rng.range_u64(0, 64);
+        let seq_work = rng.range_u64(0, 24);
+        assert_eq!(
+            lane_cycles_closed_form(kind, items, fill, seq_work),
+            lane_cycles_oracle(kind, items, fill, seq_work, |_| false),
+            "kind {kind:?} items {items} fill {fill} seq_work {seq_work}"
         );
     }
 }

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Perf-trajectory harness: runs the estimator_speed bench and writes the
+# headline numbers to BENCH_dse_throughput.json at the repo root, so the
+# sweep-throughput trend is machine-readable across PRs.
+#
+# Usage:
+#   scripts/bench.sh            # smoke mode (short, CI-friendly)
+#   scripts/bench.sh full       # full iteration counts
+#
+# Requires a Rust toolchain (cargo). The offline growth container has
+# none — in that case this script reports the situation and leaves the
+# committed JSON untouched (EXPERIMENTS.md §Perf documents the state).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+MODE="${1:-smoke}"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found — cannot run the bench in this environment." >&2
+    echo "BENCH_dse_throughput.json is left as committed; run this script on a" >&2
+    echo "machine with a Rust toolchain to refresh it." >&2
+    exit 1
+fi
+
+export TYTRA_BENCH_JSON="$PWD/BENCH_dse_throughput.json"
+if [ "$MODE" = "smoke" ]; then
+    export TYTRA_BENCH_SMOKE=1
+else
+    unset TYTRA_BENCH_SMOKE || true
+fi
+
+cargo bench --manifest-path rust/Cargo.toml --bench estimator_speed
+echo "wrote $TYTRA_BENCH_JSON ($MODE mode)"
