@@ -155,6 +155,24 @@ fn main() {
         validated_rows.push((jobs, vps));
     }
 
+    println!("{}", section("conformance harness (kernel library + random kernels, quick mode)"));
+    // The trajectory JSON records the conformance pass counts alongside
+    // the perf numbers, so a PR that speeds the stack up while breaking
+    // a differential check is visible in one file.
+    let conf = tytra::conformance::run(&tytra::conformance::Options::quick(Device::stratix4()))
+        .expect("conformance harness failed to run");
+    println!(
+        "  {} kernels, {} point evaluations, {} checks, {} mismatches",
+        conf.kernels,
+        conf.points,
+        conf.checks,
+        conf.mismatches()
+    );
+    if !conf.ok() {
+        eprintln!("{}", conf.render());
+        std::process::exit(1);
+    }
+
     if let Some(path) = std::env::var_os("TYTRA_BENCH_JSON") {
         let json = render_json(
             smoke,
@@ -163,6 +181,7 @@ fn main() {
             &sweep_rows,
             batch_cps,
             &validated_rows,
+            &conf,
         );
         if let Err(e) = std::fs::write(&path, json) {
             eprintln!("cannot write {}: {e}", path.to_string_lossy());
@@ -181,6 +200,7 @@ fn render_json(
     sweep: &[(usize, f64)],
     batch_cps: f64,
     validated: &[(usize, f64)],
+    conf: &tytra::conformance::ConformanceReport,
 ) -> String {
     let rows = |xs: &[(usize, f64)]| -> String {
         xs.iter()
@@ -193,12 +213,14 @@ fn render_json(
          \"single_estimate_us\": {{\"simple_c2\": {:.3}, \"sor_c2\": {:.3}}},\n  \
          \"sweep_throughput\": [{}],\n  \
          \"batch_grid_configs_per_sec\": {:.1},\n  \
-         \"validated_sweep_throughput\": [{}]\n}}\n",
+         \"validated_sweep_throughput\": [{}],\n  \
+         \"conformance\": {}\n}}\n",
         if smoke { "smoke" } else { "full" },
         est_simple_s * 1e6,
         est_sor_s * 1e6,
         rows(sweep),
         batch_cps,
         rows(validated),
+        conf.render_json(),
     )
 }

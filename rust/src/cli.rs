@@ -6,10 +6,13 @@
 //! tytra simulate  <file.tir>  [--device s4] [--seed N]
 //! tytra synth     <file.tir>  [--device s4]
 //! tytra compare   <file.tir>  [--device s4] [--seed N]   # E vs A, paper-table style
-//! tytra dse       <kernel.knl|builtin:simple|builtin:sor> [--device s4]
+//! tytra dse       <kernel.knl|builtin:NAME> [--device s4]
 //!                 [--max-lanes N] [--max-dv N] [--dense] [--jobs N] [--config f]
+//! tytra sweep     <kernel>... [--devices s4,c4]          # builtin:all = whole library
+//! tytra conformance [--quick] [--seed N] [--random N] [--json]
 //! tytra emit-hdl  <file.tir>  [--tb] [--seed N]
 //! tytra golden    [--artifacts DIR] [--seed N]
+//! tytra kernels                                          # list the kernel scenario library
 //! tytra configurations                                   # print the paper's Fig 5/7/9/11/15 listings
 //! ```
 
@@ -35,9 +38,9 @@ pub struct Cli {
 
 /// Flags that take a value.
 const VALUE_FLAGS: &[&str] =
-    &["device", "devices", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts"];
+    &["device", "devices", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts", "random"];
 /// Boolean flags.
-const BOOL_FLAGS: &[&str] = &["dense", "tb", "help", "pipes-only"];
+const BOOL_FLAGS: &[&str] = &["dense", "tb", "help", "pipes-only", "quick", "json", "inject-mismatch"];
 
 impl Cli {
     /// Parse an argv (excluding argv[0]).
@@ -113,8 +116,10 @@ pub fn dispatch(args: &[String]) -> Result<String, String> {
         "compare" => cmd_compare(&cli),
         "dse" => cmd_dse(&cli),
         "sweep" => cmd_sweep(&cli),
+        "conformance" => cmd_conformance(&cli),
         "emit-hdl" => cmd_emit_hdl(&cli),
         "golden" => cmd_golden(&cli),
+        "kernels" => Ok(kernel_list()),
         "configurations" => Ok(configurations()),
         other => Err(format!("unknown command `{other}`\n{}", usage())),
     }
@@ -131,14 +136,19 @@ pub fn usage() -> String {
        simulate <file.tir>            cycle-accurate simulation ('actual' cycles)\n\
        synth    <file.tir>            synthesis model ('actual' resources + Fmax)\n\
        compare  <file.tir>            estimated vs actual, paper-table layout\n\
-       dse      <kernel.knl|builtin:simple|builtin:sor>  explore the design space\n\
+       dse      <kernel.knl|builtin:NAME>  explore the design space (see `tytra kernels`)\n\
        sweep    <kernel>... [--devices s4,c4]  batched DSE over a kernel × device grid\n\
+                                      (builtin:all = the whole scenario library)\n\
+       conformance [--quick] [--json] cross-layer differential checks over the kernel\n\
+                                      library + random kernels (non-zero exit on mismatch)\n\
        emit-hdl <file.tir> [--tb]     generate Verilog (+ testbench)\n\
        golden   [--artifacts DIR]     simulator vs PJRT-executed JAX artifacts\n\
+       kernels                        list the kernel scenario library\n\
        configurations                 print the paper's Fig 5/7/9/11/15 TIR listings\n\
      \n\
      FLAGS: --device s4|s5|c4   --devices s4,c4   --seed N   --jobs N   --max-lanes N\n\
-            --max-dv N   --dense   --pipes-only   --config tytra.toml   --artifacts DIR   --tb"
+            --max-dv N   --dense   --pipes-only   --config tytra.toml   --artifacts DIR\n\
+            --tb   --quick   --random N   --json   --inject-mismatch"
         .to_string()
 }
 
@@ -159,7 +169,16 @@ fn builtin_listing(name: &str) -> Result<String, String> {
         "fig9" => examples::fig9_multi_pipe(4),
         "fig11" => examples::fig11_vector_seq(4),
         "fig15" | "sor" => examples::fig15_sor_default(),
-        other => return Err(format!("unknown builtin listing `{other}` (fig5|fig7|fig9|fig11|fig15)")),
+        // any library kernel's hand-written TIR (see `tytra kernels`)
+        other => match crate::kernels::find(other) {
+            Some(sc) => (sc.hand_tir)(),
+            None => {
+                return Err(format!(
+                    "unknown builtin listing `{other}` (fig5|fig7|fig9|fig11|fig15, or a kernel \
+                     name from `tytra kernels`)"
+                ))
+            }
+        },
     })
 }
 
@@ -240,13 +259,11 @@ fn cmd_dse(cli: &Cli) -> Result<String, String> {
     let cfg = sweep_config(cli)?;
     let dev = Device::by_name(&cfg.device).ok_or_else(|| format!("unknown device `{}`", cfg.device))?;
 
-    let spec = cli.positional.first().ok_or("expected a kernel file or builtin:simple|builtin:sor")?;
-    let src = match spec.as_str() {
-        "builtin:simple" => frontend::lang::simple_kernel_source().to_string(),
-        "builtin:sor" => frontend::lang::sor_kernel_source().to_string(),
-        path => std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?,
-    };
-    let k = frontend::parse_kernel(&src)?;
+    let spec = cli.positional.first().ok_or("expected a kernel file or builtin:NAME (see `tytra kernels`)")?;
+    if spec == "builtin:all" {
+        return Err("`dse` explores one kernel; use `tytra sweep builtin:all` for the whole library".into());
+    }
+    let (src, k) = crate::kernels::resolve_specs(std::slice::from_ref(spec))?.remove(0);
 
     let session = Session::new(cfg.jobs);
     let r = session.explore(&src, &k, &dev, &cfg.sweep)?;
@@ -289,18 +306,9 @@ fn cmd_dse(cli: &Cli) -> Result<String, String> {
 /// sweep shape: many kernels, several targets, one command.
 fn cmd_sweep(cli: &Cli) -> Result<String, String> {
     if cli.positional.is_empty() {
-        return Err("expected one or more kernel files (or builtin:simple|builtin:sor)".into());
+        return Err("expected one or more kernel files (or builtin:NAME / builtin:all)".into());
     }
-    let mut kernels: Vec<(String, frontend::KernelDef)> = Vec::new();
-    for spec in &cli.positional {
-        let src = match spec.as_str() {
-            "builtin:simple" => frontend::lang::simple_kernel_source().to_string(),
-            "builtin:sor" => frontend::lang::sor_kernel_source().to_string(),
-            path => std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?,
-        };
-        let k = frontend::parse_kernel(&src)?;
-        kernels.push((src, k));
-    }
+    let kernels: Vec<(String, frontend::KernelDef)> = crate::kernels::resolve_specs(&cli.positional)?;
     // Shared config path with `dse` (`--config`, limit and jobs flags).
     // `--devices a,b` is the grid axis; absent that, the single device
     // from `--device`/config applies (never silently ignored).
@@ -385,6 +393,53 @@ fn cmd_golden(cli: &Cli) -> Result<String, String> {
     } else {
         Err(format!("{out}golden: MISMATCH"))
     }
+}
+
+/// `tytra conformance` — the cross-layer differential harness over the
+/// kernel scenario library (+ random kernels). Exit is non-zero on any
+/// mismatch, so CI can gate on it.
+fn cmd_conformance(cli: &Cli) -> Result<String, String> {
+    let dev = cli.device()?;
+    let mut opts = if cli.has("quick") {
+        crate::conformance::Options::quick(dev)
+    } else {
+        crate::conformance::Options::full(dev)
+    };
+    opts.seed = cli.seed();
+    if let Some(n) = cli.flag("random") {
+        opts.random_cases = n.parse().map_err(|e| format!("--random: {e}"))?;
+    }
+    if cli.has("inject-mismatch") {
+        opts.inject_fault = true;
+    }
+    let report = crate::conformance::run(&opts)?;
+    if cli.has("json") {
+        let json = report.render_json();
+        if report.ok() {
+            Ok(json)
+        } else {
+            // Keep stdout machine-readable on exactly the case automation
+            // parses; the non-zero exit carries the failure.
+            println!("{json}");
+            Err("conformance: MISMATCH (counts on stdout as JSON)".into())
+        }
+    } else if report.ok() {
+        Ok(report.render())
+    } else {
+        Err(format!("{}\nconformance: MISMATCH", report.render()))
+    }
+}
+
+/// `tytra kernels` — list the scenario library.
+fn kernel_list() -> String {
+    let mut t = crate::util::Table::new(vec!["name", "description"]);
+    for sc in crate::kernels::registry() {
+        t.row(vec![sc.name.to_string(), sc.about.to_string()]);
+    }
+    format!(
+        "{}\nuse with: tytra dse builtin:<name> · tytra sweep builtin:all · tytra estimate builtin:<name>",
+        t.render()
+    )
 }
 
 fn configurations() -> String {
@@ -482,6 +537,40 @@ mod tests {
         let out =
             dispatch(&args("sweep builtin:simple --device cyclone4 --jobs 2 --max-lanes 2 --max-dv 2")).unwrap();
         assert!(out.contains("CycloneIV"), "{out}");
+    }
+
+    #[test]
+    fn dse_builtin_library_kernel() {
+        let out = dispatch(&args("dse builtin:fir3 --jobs 2 --max-lanes 2 --max-dv 2")).unwrap();
+        assert!(out.contains("kernel `fir3`"), "{out}");
+        assert!(out.contains("BEST:"), "{out}");
+    }
+
+    #[test]
+    fn dse_rejects_builtin_all() {
+        let e = dispatch(&args("dse builtin:all")).unwrap_err();
+        assert!(e.contains("sweep"), "{e}");
+    }
+
+    #[test]
+    fn estimate_accepts_library_hand_tir() {
+        let out = dispatch(&args("estimate builtin:jacobi2d")).unwrap();
+        assert!(out.contains("StratixIV"), "{out}");
+    }
+
+    #[test]
+    fn kernels_lists_the_library() {
+        let out = dispatch(&args("kernels")).unwrap();
+        for name in ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale"] {
+            assert!(out.contains(name), "missing `{name}` in:\n{out}");
+        }
+    }
+
+    #[test]
+    fn conformance_quick_json_counts() {
+        let out = dispatch(&args("conformance --quick --random 0 --json")).unwrap();
+        assert!(out.contains("\"mismatches\": 0"), "{out}");
+        assert!(out.contains("\"kernels\": 7"), "{out}");
     }
 
     #[test]

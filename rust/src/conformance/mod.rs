@@ -1,0 +1,584 @@
+//! Cross-layer differential conformance harness.
+//!
+//! LLHD's lesson for multi-level hardware IRs: trust comes from
+//! executing the *same design at every level* and diffing the results.
+//! This module drives every kernel in [`crate::kernels`] (plus
+//! `Prng`-seeded random kernels from [`random`]) through the full stack
+//! at several design-space points and differentially checks every pair
+//! of redundant paths the repository maintains:
+//!
+//! | check | fast path | oracle |
+//! |---|---|---|
+//! | `estimator/indexed-vs-reference` | `estimate_resources` (slot index) | `estimate_resources_reference` |
+//! | `structure/indexed-vs-reference` | `analyze_ix` | `analyze` |
+//! | `simulator/compiled-vs-interpreted` | `run_pass` (compiled lanes) | `run_pass_interpreted` |
+//! | `timing/closed-form-vs-oracle` | `lane_cycles_closed_form` | `lane_cycles_oracle` |
+//! | `timing/actual-covers-estimate` | simulated cycles | estimator lower bound |
+//! | `golden/simulator-vs-kernel-model` | full simulation | `runtime::golden::run_kernel_model` |
+//! | `sim/hand-tir-vs-lowered` | hand-written paper-style TIR | front-end lowering |
+//! | `hdl/*` | emitted Verilog | structural invariants |
+//!
+//! A clean run is the regression gate every backend/optimisation PR
+//! runs against (`tytra conformance`, `scripts/ci.sh`,
+//! `rust/tests/conformance.rs`); a mismatch names the kernel, the
+//! design point and the divergent pair.
+
+pub mod random;
+
+use std::collections::BTreeSet;
+
+use crate::device::Device;
+use crate::estimator::{self, accumulate, structure, CostDb};
+use crate::frontend::{self, DesignPoint, KernelDef};
+use crate::hdl;
+use crate::kernels;
+use crate::runtime::golden;
+use crate::sim::{self, engine, exec, Workload};
+use crate::tir::{self, Dir, ModuleIndex};
+use crate::util::{Prng, Table};
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Options {
+    /// Device every estimate/simulation targets.
+    pub device: Device,
+    /// Workload / random-kernel seed.
+    pub seed: u64,
+    /// Design-space points evaluated per kernel.
+    pub points: Vec<DesignPoint>,
+    /// Number of random kernels appended to the registry sweep.
+    pub random_cases: usize,
+    /// Run the Verilog structural checks.
+    pub check_hdl: bool,
+    /// Deliberately corrupt the first estimator comparison — proves the
+    /// harness detects divergence end to end (`--inject-mismatch`).
+    pub inject_fault: bool,
+}
+
+impl Options {
+    /// Smoke configuration (`tytra conformance --quick`): 4 points per
+    /// kernel, a couple of random cases.
+    pub fn quick(device: Device) -> Options {
+        Options {
+            device,
+            seed: 42,
+            points: vec![DesignPoint::c2(), DesignPoint::c1(2), DesignPoint::c4(), DesignPoint::c5(2)],
+            random_cases: 2,
+            check_hdl: true,
+            inject_fault: false,
+        }
+    }
+
+    /// Full configuration (default `tytra conformance`): 5 points per
+    /// kernel, a deeper random sweep.
+    pub fn full(device: Device) -> Options {
+        Options {
+            points: vec![
+                DesignPoint::c2(),
+                DesignPoint::c1(2),
+                DesignPoint::c1(4),
+                DesignPoint::c4(),
+                DesignPoint::c5(2),
+            ],
+            random_cases: 8,
+            ..Options::quick(device)
+        }
+    }
+}
+
+/// One detected divergence.
+#[derive(Debug, Clone)]
+pub struct CheckFailure {
+    pub kernel: String,
+    pub point: String,
+    pub check: &'static str,
+    pub detail: String,
+}
+
+/// Per-kernel aggregate.
+#[derive(Debug, Clone)]
+pub struct KernelRow {
+    pub kernel: String,
+    pub points: u64,
+    pub checks: u64,
+    pub mismatches: u64,
+}
+
+/// Outcome of a full conformance run.
+#[derive(Debug, Clone)]
+pub struct ConformanceReport {
+    pub rows: Vec<KernelRow>,
+    pub failures: Vec<CheckFailure>,
+    /// Kernels exercised (registry + random, excluding skipped).
+    pub kernels: usize,
+    /// Total (kernel, point) evaluations.
+    pub points: u64,
+    /// Total differential checks executed.
+    pub checks: u64,
+    /// Random kernels skipped for legal width overflow.
+    pub skipped_random: usize,
+}
+
+impl ConformanceReport {
+    /// Number of failed checks.
+    pub fn mismatches(&self) -> u64 {
+        self.failures.len() as u64
+    }
+
+    /// Did every check pass?
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// Human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut t = Table::new(vec!["kernel", "points", "checks", "mismatches", "status"]);
+        for r in &self.rows {
+            t.row(vec![
+                r.kernel.clone(),
+                r.points.to_string(),
+                r.checks.to_string(),
+                r.mismatches.to_string(),
+                if r.mismatches == 0 { "OK" } else { "FAIL" }.into(),
+            ]);
+        }
+        out.push_str(&t.render());
+        for f in &self.failures {
+            out.push_str(&format!("\nMISMATCH [{} @ {} :: {}] {}", f.kernel, f.point, f.check, f.detail));
+        }
+        if self.skipped_random > 0 {
+            out.push_str(&format!(
+                "\n({} random kernel(s) skipped: width overflow is a legal generator outcome)",
+                self.skipped_random
+            ));
+        }
+        out.push_str(&format!(
+            "\nconformance: {} kernels, {} point evaluations, {} checks, {} mismatches — {}",
+            self.kernels,
+            self.points,
+            self.checks,
+            self.mismatches(),
+            if self.ok() { "ALL OK" } else { "FAIL" }
+        ));
+        out
+    }
+
+    /// Machine-readable counts (hand-rolled JSON; no serde offline).
+    pub fn render_json(&self) -> String {
+        format!(
+            "{{\"kernels\": {}, \"points\": {}, \"checks\": {}, \"mismatches\": {}, \
+             \"skipped_random\": {}}}",
+            self.kernels,
+            self.points,
+            self.checks,
+            self.mismatches(),
+            self.skipped_random
+        )
+    }
+}
+
+/// Run the full conformance sweep.
+pub fn run(opts: &Options) -> Result<ConformanceReport, String> {
+    let mut h = Harness {
+        opts,
+        db: estimator::shared_cost_db(),
+        checks: 0,
+        points: 0,
+        failures: Vec::new(),
+        rows: Vec::new(),
+        fault_armed: opts.inject_fault,
+    };
+
+    let mut kernels_run = 0usize;
+    for sc in kernels::registry() {
+        let k = sc.parse()?;
+        let lk = frontend::analyze_kernel(&k)?;
+        let hand = (sc.hand_tir)();
+        h.conform_kernel(sc.name, &k, &lk, Some(hand.as_str()))?;
+        kernels_run += 1;
+    }
+
+    let mut rng = Prng::new(opts.seed ^ 0xD1FF_C0DE);
+    let mut skipped_random = 0usize;
+    for case in 0..opts.random_cases {
+        let src = random::random_kernel(&mut rng, case);
+        let k = frontend::parse_kernel(&src).map_err(|e| format!("generated kernel: {e}\n{src}"))?;
+        let name = format!("random/{case}");
+        if h.conform_random(&name, &k)? {
+            kernels_run += 1;
+        } else {
+            skipped_random += 1;
+        }
+    }
+
+    Ok(ConformanceReport {
+        rows: h.rows,
+        failures: h.failures,
+        kernels: kernels_run,
+        points: h.points,
+        checks: h.checks,
+        skipped_random,
+    })
+}
+
+struct Harness<'a> {
+    opts: &'a Options,
+    db: &'static CostDb,
+    checks: u64,
+    points: u64,
+    failures: Vec<CheckFailure>,
+    rows: Vec<KernelRow>,
+    fault_armed: bool,
+}
+
+impl Harness<'_> {
+    fn check(
+        &mut self,
+        kernel: &str,
+        point: &str,
+        name: &'static str,
+        ok: bool,
+        detail: impl FnOnce() -> String,
+    ) {
+        self.checks += 1;
+        if !ok {
+            self.failures.push(CheckFailure {
+                kernel: kernel.into(),
+                point: point.into(),
+                check: name,
+                detail: detail(),
+            });
+        }
+    }
+
+    /// Conformance for one kernel from its pre-analysed form (shared by
+    /// the registry and random paths — analysis happens exactly once).
+    fn conform_kernel(
+        &mut self,
+        name: &str,
+        k: &KernelDef,
+        lk: &frontend::LoweredKernel,
+        hand_tir: Option<&str>,
+    ) -> Result<(), String> {
+        let checks0 = self.checks;
+        let fails0 = self.failures.len();
+        let points0 = self.points;
+
+        for &p in &self.opts.points.clone() {
+            self.conform_point(name, k, lk, p)?;
+        }
+        if let Some(src) = hand_tir {
+            self.conform_hand_tir(name, k, lk, src)?;
+        }
+
+        self.rows.push(KernelRow {
+            kernel: name.to_string(),
+            points: self.points - points0,
+            checks: self.checks - checks0,
+            mismatches: (self.failures.len() - fails0) as u64,
+        });
+        Ok(())
+    }
+
+    /// Conformance for a generated kernel; returns false when the
+    /// kernel's exact widths overflow 64 bits (a legal generator
+    /// outcome, skipped wholesale so every point sees the same set).
+    fn conform_random(&mut self, name: &str, k: &KernelDef) -> Result<bool, String> {
+        match frontend::analyze_kernel(k) {
+            Ok(lk) => {
+                self.conform_kernel(name, k, &lk, None)?;
+                Ok(true)
+            }
+            Err(e) if e.contains("exceeds 64") => Ok(false),
+            Err(e) => Err(format!("{name}: unexpected analysis failure: {e}")),
+        }
+    }
+
+    /// All per-design-point differential checks for one kernel.
+    fn conform_point(
+        &mut self,
+        name: &str,
+        k: &KernelDef,
+        lk: &frontend::LoweredKernel,
+        p: DesignPoint,
+    ) -> Result<(), String> {
+        let dev = self.opts.device.clone();
+        let m = frontend::lower_point(lk, p)?;
+        let pl = p.label();
+        let ix = ModuleIndex::build(&m)?;
+        self.points += 1;
+
+        // --- estimator: slot-indexed walk vs name-resolved reference ---------
+        let mut fast = accumulate::estimate_resources(&m, self.db, &dev)?;
+        let slow = accumulate::estimate_resources_reference(&m, self.db, &dev)?;
+        if self.fault_armed {
+            fast.alut += 1; // deliberate corruption (--inject-mismatch)
+            self.fault_armed = false;
+        }
+        self.check(name, &pl, "estimator/indexed-vs-reference", fast == slow, || {
+            format!("indexed {fast:?} vs reference {slow:?}")
+        });
+
+        let si_fast = structure::analyze_ix(&ix)?;
+        let si_slow = structure::analyze(&m)?;
+        self.check(name, &pl, "structure/indexed-vs-reference", si_fast == si_slow, || {
+            format!("indexed {si_fast:?} vs reference {si_slow:?}")
+        });
+
+        // --- simulator: compiled lanes vs reference interpreter --------------
+        let w = Workload::random_for(&m, self.opts.seed);
+        let d = sim::elaborate_with(&ix)?;
+        let mut compiled = w.mems.clone();
+        let mut interpreted = w.mems.clone();
+        exec::run_pass(&m, &d, &mut compiled)?;
+        exec::run_pass_interpreted(&m, &d, &mut interpreted)?;
+        self.check(name, &pl, "simulator/compiled-vs-interpreted", compiled == interpreted, || {
+            first_mem_diff(&compiled, &interpreted)
+        });
+
+        // --- timing: closed form vs state-machine oracle ----------------------
+        for (li, lane) in d.lanes.iter().enumerate() {
+            let (items, fill, seq_work) = engine::lane_timing_inputs(&d, li, dev.seq_cpi);
+            let cf = engine::lane_cycles_closed_form(lane.kind, items, fill, seq_work);
+            let or = engine::lane_cycles_oracle(lane.kind, items, fill, seq_work, |_| false);
+            self.check(name, &pl, "timing/closed-form-vs-oracle", cf == or, || {
+                format!("lane {li}: closed form {cf} vs oracle {or}")
+            });
+        }
+
+        // --- full run: estimate bound + golden kernel model -------------------
+        let r = sim::simulate(&m, &dev, &w)?;
+        let est = estimator::estimate_ix(&ix, &dev, self.db)?;
+        self.check(
+            name,
+            &pl,
+            "timing/actual-covers-estimate",
+            r.cycles_per_pass >= est.cycles_per_pass,
+            || format!("actual {} < estimate {}", r.cycles_per_pass, est.cycles_per_pass),
+        );
+
+        let out_key = format!("mem_{}", k.outputs[0].name);
+        let gr = golden::check_kernel_model(k, &w.mems, &r.mems[out_key.as_str()])?;
+        self.check(name, &pl, "golden/simulator-vs-kernel-model", gr.ok(), || {
+            format!("{} of {} elements diverge, first {:?}", gr.mismatches, gr.n, gr.first)
+        });
+
+        // --- emitted Verilog: structural invariants ---------------------------
+        if self.opts.check_hdl {
+            self.conform_hdl(name, &pl, &m, &d)?;
+        }
+        Ok(())
+    }
+
+    /// The hand-written paper-style TIR must match both the golden model
+    /// and the front-end lowering bit-for-bit on the same seeded
+    /// workload.
+    fn conform_hand_tir(
+        &mut self,
+        name: &str,
+        k: &KernelDef,
+        lk: &frontend::LoweredKernel,
+        src: &str,
+    ) -> Result<(), String> {
+        let dev = self.opts.device.clone();
+        let hm = tir::parse_and_validate(src).map_err(|e| format!("{name} hand TIR: {e}"))?;
+        tir::validate::require_synthesizable(&hm).map_err(|e| format!("{name} hand TIR: {e}"))?;
+        let out_key = format!("mem_{}", k.outputs[0].name);
+
+        let wh = Workload::random_for(&hm, self.opts.seed);
+        let rh = sim::simulate(&hm, &dev, &wh)?;
+        let gr = golden::check_kernel_model(k, &wh.mems, &rh.mems[out_key.as_str()])?;
+        self.check(name, "hand-tir", "golden/hand-tir-vs-kernel-model", gr.ok(), || {
+            format!("{} of {} elements diverge, first {:?}", gr.mismatches, gr.n, gr.first)
+        });
+
+        let mc2 = frontend::lower_point(lk, DesignPoint::c2())?;
+        let wl = Workload::random_for(&mc2, self.opts.seed);
+        self.check(name, "hand-tir", "workload/identical-across-forms", wl.mems == wh.mems, || {
+            "hand TIR and lowered module draw different seeded workloads \
+             (memory naming convention broken)"
+                .into()
+        });
+        let rl = sim::simulate(&mc2, &dev, &wl)?;
+        self.check(
+            name,
+            "hand-tir",
+            "sim/hand-tir-vs-lowered",
+            rh.mems[out_key.as_str()] == rl.mems[out_key.as_str()],
+            || first_vec_diff(&rh.mems[out_key.as_str()], &rl.mems[out_key.as_str()]),
+        );
+        Ok(())
+    }
+
+    /// Structural invariants on the emitted Verilog.
+    fn conform_hdl(&mut self, name: &str, pl: &str, m: &tir::Module, d: &sim::Design) -> Result<(), String> {
+        let v = hdl::generate_verilog(m)?;
+        let v2 = hdl::generate_verilog(m)?;
+        self.check(name, pl, "hdl/deterministic-emission", v == v2, || {
+            "re-generation produced different text".into()
+        });
+
+        let opens = v.lines().filter(|l| l.starts_with("module ")).count();
+        let closes = v.lines().filter(|l| l.trim() == "endmodule").count();
+        self.check(name, pl, "hdl/balanced-modules", opens == closes && opens > 0, || {
+            format!("{opens} `module` vs {closes} `endmodule`")
+        });
+
+        let mut begins = 0i64;
+        let mut ends = 0i64;
+        for t in v.split(|c: char| !c.is_ascii_alphanumeric() && c != '_') {
+            match t {
+                "begin" => begins += 1,
+                "end" => ends += 1,
+                _ => {}
+            }
+        }
+        self.check(name, pl, "hdl/balanced-begin-end", begins == ends, || {
+            format!("{begins} begin vs {ends} end")
+        });
+
+        let lanes = v.matches("u_lane").count();
+        self.check(name, pl, "hdl/lane-replication", lanes == d.lanes.len(), || {
+            format!("{lanes} lane instantiations vs {} elaborated lanes", d.lanes.len())
+        });
+
+        // Line buffers appear exactly for the streams with offset taps,
+        // at the right window span.
+        let mut streams: Vec<&str> = m
+            .ports
+            .values()
+            .filter(|p| p.dir == Dir::Read && p.offset != 0)
+            .map(|p| p.stream.as_str())
+            .collect();
+        streams.sort_unstable();
+        streams.dedup();
+        for s in &streams {
+            let span = accumulate::stream_offset_span(m, s);
+            let head = format!("module linebuf_{s} (");
+            let window = format!("win [0:{span}];");
+            self.check(name, pl, "hdl/line-buffer-span", v.contains(&head) && v.contains(&window), || {
+                format!("stream `{s}`: expected `{head}` with `{window}`")
+            });
+        }
+        if streams.is_empty() {
+            self.check(name, pl, "hdl/no-spurious-line-buffer", !v.contains("module linebuf_"), || {
+                "line buffer emitted for a design with no offset taps".into()
+            });
+        }
+
+        let undeclared = undeclared_locals(&v);
+        self.check(name, pl, "hdl/locals-declared", undeclared.is_empty(), || {
+            format!("undeclared local signals referenced: {undeclared:?}")
+        });
+        Ok(())
+    }
+}
+
+/// All `v_*` signal tokens referenced in the Verilog that no `reg`/`wire`
+/// line declares. The generated RTL scopes every datapath value as
+/// `v_<ssa>`; an undeclared reference means the emitter forgot a
+/// declaration (Verilog would silently infer a 1-bit wire) — the exact
+/// class of bug structural checking exists to catch.
+pub fn undeclared_locals(v: &str) -> Vec<String> {
+    let mut declared: BTreeSet<&str> = BTreeSet::new();
+    for line in v.lines() {
+        let t = line.trim_start();
+        if t.starts_with("reg ") || t.starts_with("wire ") {
+            if let Some(tok) = tokens(line).find(|t| t.starts_with("v_")) {
+                declared.insert(tok);
+            }
+        }
+    }
+    let mut missing: Vec<String> = Vec::new();
+    for tok in tokens(v) {
+        if tok.starts_with("v_") && !declared.contains(tok) && !missing.iter().any(|m| m == tok) {
+            missing.push(tok.to_string());
+        }
+    }
+    missing
+}
+
+fn tokens(s: &str) -> impl Iterator<Item = &str> {
+    s.split(|c: char| !c.is_ascii_alphanumeric() && c != '_').filter(|t| !t.is_empty())
+}
+
+/// First differing element across two memory states.
+fn first_mem_diff(a: &exec::MemState, b: &exec::MemState) -> String {
+    for (name, va) in a {
+        match b.get(name) {
+            None => return format!("memory `{name}` missing on one side"),
+            Some(vb) => {
+                if let Some(i) = va.iter().zip(vb).position(|(x, y)| x != y) {
+                    return format!("memory `{name}`[{i}]: {} vs {}", va[i], vb[i]);
+                }
+                if va.len() != vb.len() {
+                    return format!("memory `{name}` length {} vs {}", va.len(), vb.len());
+                }
+            }
+        }
+    }
+    "memory key sets differ".into()
+}
+
+fn first_vec_diff(a: &[u64], b: &[u64]) -> String {
+    match a.iter().zip(b).position(|(x, y)| x != y) {
+        Some(i) => format!("element {i}: {} vs {}", a[i], b[i]),
+        None => format!("lengths {} vs {}", a.len(), b.len()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> Options {
+        let mut o = Options::quick(Device::stratix4());
+        o.random_cases = 1;
+        o
+    }
+
+    #[test]
+    fn quick_sweep_is_clean() {
+        let r = run(&quick_opts()).unwrap();
+        assert!(r.ok(), "{}", r.render());
+        assert!(r.kernels >= 7, "{}", r.kernels);
+        assert!(r.points >= 7 * 4, "{}", r.points);
+        assert!(r.checks > r.points, "every point runs several checks");
+    }
+
+    #[test]
+    fn injected_fault_is_detected_exactly_once() {
+        let mut o = quick_opts();
+        o.inject_fault = true;
+        o.random_cases = 0;
+        let r = run(&o).unwrap();
+        assert_eq!(r.mismatches(), 1, "{}", r.render());
+        assert_eq!(r.failures[0].check, "estimator/indexed-vs-reference");
+        assert!(r.render().contains("MISMATCH"));
+        assert!(r.render().contains("FAIL"));
+    }
+
+    #[test]
+    fn report_renders_table_and_json() {
+        let mut o = quick_opts();
+        o.points = vec![DesignPoint::c2()];
+        o.random_cases = 0;
+        o.check_hdl = false;
+        let r = run(&o).unwrap();
+        let text = r.render();
+        assert!(text.contains("kernel"), "{text}");
+        assert!(text.contains("ALL OK"), "{text}");
+        let json = r.render_json();
+        assert!(json.contains("\"mismatches\": 0"), "{json}");
+    }
+
+    #[test]
+    fn undeclared_local_scan_catches_missing_decls() {
+        let good = "module m (\n    input  wire clk\n);\n    reg [3:0] v_a;\n    wire [3:0] v_b = v_a;\n    always @(posedge clk) v_a <= v_b;\nendmodule\n";
+        assert!(undeclared_locals(good).is_empty());
+        let bad = "module m ();\n    always @(posedge clk) v_x <= v_y;\nendmodule\n";
+        let missing = undeclared_locals(bad);
+        assert_eq!(missing, vec!["v_x".to_string(), "v_y".to_string()]);
+    }
+}

@@ -1,0 +1,73 @@
+//! Random kernel generation for differential testing — the library-side
+//! generalisation of the generator `rust/tests/property.rs` introduced
+//! (the property suite now imports it from here, and the conformance
+//! harness drives the same distribution through the full differential
+//! check set, so `tytra conformance` fuzzes exactly the space the
+//! property tests pin).
+//!
+//! Kernels are 1-D loop nests over ui18 arrays using only the *golden
+//! operator set* (`+ * >> & | ^` with literal shift amounts): every
+//! generated kernel is exactly interpretable by
+//! [`crate::runtime::golden::run_kernel_model`] (no subtraction
+//! underflow, no division), and every design-space point of it must
+//! compute the same function.
+
+use crate::util::Prng;
+
+/// Generate a random kernel in the mini-language. 1-D, ui18 arrays,
+/// modular ops only (`+ * << >> & | ^`), depth-bounded expressions.
+pub fn random_kernel(rng: &mut Prng, id: usize) -> String {
+    let n = *rng.choose(&[256u64, 512, 1000]);
+    let n_inputs = rng.range_u64(1, 3);
+    let names = ["a", "b", "c"];
+    let inputs: Vec<&str> = names[..n_inputs as usize].to_vec();
+
+    fn expr(rng: &mut Prng, inputs: &[&str], depth: u32) -> String {
+        if depth == 0 || rng.below(4) == 0 {
+            // leaf: tap or small literal
+            if rng.below(3) == 0 {
+                return format!("{}", rng.range_u64(1, 4000));
+            }
+            return format!("{}[n]", rng.choose(inputs));
+        }
+        let a = expr(rng, inputs, depth - 1);
+        let b = expr(rng, inputs, depth - 1);
+        match rng.below(6) {
+            0 => format!("({a} + {b})"),
+            1 => format!("({a} * {b})"),
+            2 => format!("({a} >> {})", rng.range_u64(1, 6)),
+            3 => format!("({a} & {b})"),
+            4 => format!("({a} | {b})"),
+            _ => format!("({a} ^ {b})"),
+        }
+    }
+    let body = expr(rng, &inputs, 3);
+    format!(
+        "kernel gen{id} {{\n  in {} : ui18[{n}]\n  out y : ui18[{n}]\n  for n in 0..{n} {{ y[n] = {body} }}\n}}",
+        inputs.join(", ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_kernels_parse() {
+        let mut rng = Prng::new(0x5EED);
+        for case in 0..20 {
+            let src = random_kernel(&mut rng, case);
+            crate::frontend::parse_kernel(&src)
+                .unwrap_or_else(|e| panic!("generated kernel must parse: {e}\n{src}"));
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let a = random_kernel(&mut Prng::new(9), 0);
+        let b = random_kernel(&mut Prng::new(9), 0);
+        let c = random_kernel(&mut Prng::new(10), 0);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -142,6 +142,19 @@ impl Session {
         Ok(dse::Candidate { point, module, estimate, walls })
     }
 
+    /// Batched exploration over the whole kernel scenario library
+    /// (`crate::kernels::registry`) × a device list: the standing
+    /// regression sweep (`tytra sweep builtin:all`, the benches) that
+    /// keeps every library workload exercising the DSE path.
+    pub fn explore_registry(
+        &self,
+        devices: &[Device],
+        limits: &SweepLimits,
+    ) -> Result<Vec<BatchResult>, String> {
+        let kernels = crate::kernels::resolve_specs(&["builtin:all".to_string()])?;
+        self.explore_batch(&kernels, devices, limits)
+    }
+
     /// Batched exploration over a (kernel × device) grid. All
     /// kernel/device/point triples flatten into **one** job list over the
     /// pool, so a wide grid keeps every worker busy even when a single
@@ -287,6 +300,22 @@ mod tests {
                 cell.device
             );
             assert_eq!(single.candidates.len(), cell.exploration.candidates.len());
+        }
+    }
+
+    #[test]
+    fn registry_sweep_covers_every_library_kernel() {
+        let session = Session::new(4);
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, pow2_only: true, include_seq: true };
+        let cells = session.explore_registry(&[Device::stratix4()], &limits).unwrap();
+        let names: Vec<&str> = cells.iter().map(|c| c.kernel.as_str()).collect();
+        assert_eq!(names, crate::kernels::names(), "one cell per registry kernel, in order");
+        for cell in &cells {
+            assert!(
+                cell.exploration.best.is_some(),
+                "{}: no deployable configuration on the big device",
+                cell.kernel
+            );
         }
     }
 

@@ -1,0 +1,116 @@
+//! 3-tap FIR filter — the canonical 1-D streaming DSP workload: a
+//! sliding window over one input stream, constant tap weights, and a
+//! power-of-two normalising shift. The sparse weights (3/10/3, popcount
+//! ≤ 2) exercise the cost model's shift-add lowering of constant
+//! multiplies (paper §7.2), and the ±1 offset streams exercise the 1-D
+//! line buffer — the smallest window the SOR/Jacobi machinery supports.
+
+/// Default stream length.
+pub const N: usize = 256;
+/// Tap weights (symmetric low-pass, sum 16) and normalising shift.
+pub const W0: i64 = 3;
+pub const W1: i64 = 10;
+pub const W2: i64 = 3;
+pub const SHIFT: i64 = 4;
+
+/// The kernel in the front-end mini-language at an arbitrary length.
+pub fn fir_source(n: usize) -> String {
+    assert!(n >= 3);
+    format!(
+        r#"
+kernel fir3 {{
+    const W0 : ui18 = {W0}
+    const W1 : ui18 = {W1}
+    const W2 : ui18 = {W2}
+    in  x : ui18[{n}]
+    out y : ui18[{n}]
+    for n in 1..{last} {{
+        y[n] = (W0 * x[n-1] + W1 * x[n] + W2 * x[n+1]) >> {SHIFT}
+    }}
+}}
+"#,
+        last = n - 1,
+    )
+}
+
+/// Default-workload front-end source.
+pub fn source() -> String {
+    fir_source(N)
+}
+
+/// Hand-written parameterised TIR. Exact ui36/ui37/ui38 intermediates
+/// (an 18-bit sample times a ≤4-bit weight never exceeds 22 bits, so
+/// nothing wraps); the ostream port truncates the normalised result to
+/// ui18, exactly as the front-end lowering's demand-narrowed datapath
+/// does.
+pub fn fir_tir(n: usize) -> String {
+    assert!(n >= 3);
+    format!(
+        r#"; ***** Manage-IR ***** (3-tap FIR, single pipeline)
+define void launch() {{
+    @mem_x = addrspace(3) <{n} x ui18>
+    @mem_y = addrspace(3) <{n} x ui18>
+    @strobj_x = addrspace(10), !"source", !"@mem_x"
+    @strobj_y = addrspace(10), !"dest", !"@mem_y"
+    @ctr_n = counter(1, {last})
+    call @main ()
+}}
+; ***** Compute-IR *****
+@w0 = const ui18 {W0}
+@w1 = const ui18 {W1}
+@w2 = const ui18 {W2}
+@main.xm = addrSpace(12) ui18, !"istream", !"CONT", !-1, !"strobj_x"
+@main.xc = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_x"
+@main.xp = addrSpace(12) ui18, !"istream", !"CONT", !1, !"strobj_x"
+@main.y = addrSpace(12) ui18, !"ostream", !"CONT", !0, !"strobj_y"
+define void @f1 (ui18 %xm, ui18 %xc, ui18 %xp) pipe {{
+    ui36 %1 = mul ui36 %xm, @w0
+    ui36 %2 = mul ui36 %xc, @w1
+    ui36 %3 = mul ui36 %xp, @w2
+    ui37 %4 = add ui37 %1, %2
+    ui38 %5 = add ui38 %4, %3
+    ui38 %y = lshr ui38 %5, {SHIFT}
+}}
+define void @main () pipe {{
+    call @f1 (@main.xm, @main.xc, @main.xp) pipe
+}}
+"#,
+        last = n - 2,
+    )
+}
+
+/// Default-workload hand TIR.
+pub fn tir() -> String {
+    fir_tir(N)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::tir::{parse_and_validate, validate::require_synthesizable};
+
+    #[test]
+    fn source_parses() {
+        let k = parse_kernel(&source()).unwrap();
+        assert_eq!(k.name, "fir3");
+        assert_eq!(k.consts.len(), 3);
+        assert_eq!(k.loops, vec![("n".to_string(), 1, (N - 1) as i64)]);
+    }
+
+    #[test]
+    fn tir_parses_and_validates() {
+        let m = parse_and_validate(&tir()).unwrap();
+        require_synthesizable(&m).unwrap();
+        assert_eq!(m.work_items(), (N - 2) as u64);
+        assert_eq!(m.ports["main.xm"].offset, -1);
+        assert_eq!(m.ports["main.xp"].offset, 1);
+    }
+
+    #[test]
+    fn constant_taps_lower_to_shift_add_no_dsp() {
+        let m = parse_and_validate(&tir()).unwrap();
+        let e = crate::estimator::estimate(&m, &crate::device::Device::stratix4()).unwrap();
+        assert_eq!(e.resources.dsp, 0, "sparse tap weights must avoid DSP slices");
+    }
+}

@@ -1,0 +1,100 @@
+//! 3-point moving average — a 1-D smoothing window normalised by a
+//! *non-power-of-two* divisor (`/ 3`), the smallest kernel that drives
+//! the restoring-divider cost path (`width²/2` ALUTs, paper §7.2) and
+//! the width-inference rule that exempts division from demand narrowing
+//! (a truncated divider is not congruent modulo 2^w).
+
+/// Default stream length.
+pub const N: usize = 512;
+
+/// The kernel in the front-end mini-language at an arbitrary length.
+pub fn mavg_source(n: usize) -> String {
+    assert!(n >= 3);
+    format!(
+        r#"
+kernel mavg3 {{
+    in  x : ui18[{n}]
+    out y : ui18[{n}]
+    for n in 1..{last} {{
+        y[n] = (x[n-1] + x[n] + x[n+1]) / 3
+    }}
+}}
+"#,
+        last = n - 1,
+    )
+}
+
+/// Default-workload front-end source.
+pub fn source() -> String {
+    mavg_source(N)
+}
+
+/// Hand-written parameterised TIR: exact ui19/ui20 window sum, ui20
+/// divide by the literal 3 (divisor is never zero, so the
+/// hardware-divider all-ones probe path cannot trigger).
+pub fn mavg_tir(n: usize) -> String {
+    assert!(n >= 3);
+    format!(
+        r#"; ***** Manage-IR ***** (3-point moving average, single pipeline)
+define void launch() {{
+    @mem_x = addrspace(3) <{n} x ui18>
+    @mem_y = addrspace(3) <{n} x ui18>
+    @strobj_x = addrspace(10), !"source", !"@mem_x"
+    @strobj_y = addrspace(10), !"dest", !"@mem_y"
+    @ctr_n = counter(1, {last})
+    call @main ()
+}}
+; ***** Compute-IR *****
+@main.xm = addrSpace(12) ui18, !"istream", !"CONT", !-1, !"strobj_x"
+@main.xc = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_x"
+@main.xp = addrSpace(12) ui18, !"istream", !"CONT", !1, !"strobj_x"
+@main.y = addrSpace(12) ui18, !"ostream", !"CONT", !0, !"strobj_y"
+define void @f1 (ui18 %xm, ui18 %xc, ui18 %xp) pipe {{
+    ui19 %1 = add ui19 %xm, %xc
+    ui20 %2 = add ui20 %1, %xp
+    ui20 %y = div ui20 %2, 3
+}}
+define void @main () pipe {{
+    call @f1 (@main.xm, @main.xc, @main.xp) pipe
+}}
+"#,
+        last = n - 2,
+    )
+}
+
+/// Default-workload hand TIR.
+pub fn tir() -> String {
+    mavg_tir(N)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::tir::{parse_and_validate, validate::require_synthesizable};
+
+    #[test]
+    fn source_parses() {
+        let k = parse_kernel(&source()).unwrap();
+        assert_eq!(k.name, "mavg3");
+        assert_eq!(k.inputs.len(), 1);
+        assert_eq!(k.iter, 1);
+    }
+
+    #[test]
+    fn tir_parses_and_validates() {
+        let m = parse_and_validate(&tir()).unwrap();
+        require_synthesizable(&m).unwrap();
+        assert_eq!(m.work_items(), (N - 2) as u64);
+    }
+
+    #[test]
+    fn divider_dominates_aluts() {
+        let m = parse_and_validate(&tir()).unwrap();
+        let e = crate::estimator::estimate(&m, &crate::device::Device::stratix4()).unwrap();
+        // ui20 restoring divider alone is 200 ALUTs — the datapath is
+        // divider-bound, unlike every other library kernel.
+        assert!(e.resources.alut >= 200, "{:?}", e.resources);
+        assert_eq!(e.resources.dsp, 0);
+    }
+}

@@ -1,0 +1,104 @@
+//! Scale-and-offset map (`y = K·x + B`) — the affine elementwise
+//! workload (the SAXPY shape with a constant coefficient). The dense
+//! constant K (popcount > 4) defeats the shift-add lowering, so unlike
+//! the FIR kernel this one *does* pay a DSP slice for a constant
+//! multiply — the two kernels bracket the cost model's
+//! `SHIFT_ADD_MAX_POP` decision boundary from both sides. No offset
+//! streams: the simplest possible port/stream plumbing in the library.
+
+/// Default stream length (matches the paper's Table 1 workload).
+pub const N: usize = 1000;
+/// Dense multiplier constant (0b101011011101, popcount 8 → DSP).
+pub const K: i64 = 2781;
+/// Additive offset.
+pub const B: i64 = 977;
+
+/// The kernel in the front-end mini-language at an arbitrary length.
+pub fn scale_source(n: usize) -> String {
+    assert!(n >= 1);
+    format!(
+        r#"
+kernel scale {{
+    const K : ui18 = {K}
+    const B : ui18 = {B}
+    in  x : ui18[{n}]
+    out y : ui18[{n}]
+    for n in 0..{n} {{
+        y[n] = K * x[n] + B
+    }}
+}}
+"#
+    )
+}
+
+/// Default-workload front-end source.
+pub fn source() -> String {
+    scale_source(N)
+}
+
+/// Hand-written parameterised TIR: exact ui36 product and ui37 sum; the
+/// ui18 ostream port truncates, which is congruent with the front-end
+/// lowering's 18-bit demand-narrowed datapath (modular ops only).
+pub fn scale_tir(n: usize) -> String {
+    assert!(n >= 1);
+    format!(
+        r#"; ***** Manage-IR ***** (scale-and-offset map, single pipeline)
+define void launch() {{
+    @mem_x = addrspace(3) <{n} x ui18>
+    @mem_y = addrspace(3) <{n} x ui18>
+    @strobj_x = addrspace(10), !"source", !"@mem_x"
+    @strobj_y = addrspace(10), !"dest", !"@mem_y"
+    @ctr_n = counter(0, {last})
+    call @main ()
+}}
+; ***** Compute-IR *****
+@k = const ui18 {K}
+@b = const ui18 {B}
+@main.x = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_x"
+@main.y = addrSpace(12) ui18, !"ostream", !"CONT", !0, !"strobj_y"
+define void @f1 (ui18 %x) pipe {{
+    ui36 %1 = mul ui36 %x, @k
+    ui37 %y = add ui37 %1, @b
+}}
+define void @main () pipe {{
+    call @f1 (@main.x) pipe
+}}
+"#,
+        last = n - 1,
+    )
+}
+
+/// Default-workload hand TIR.
+pub fn tir() -> String {
+    scale_tir(N)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::tir::{parse_and_validate, validate::require_synthesizable};
+
+    #[test]
+    fn source_parses() {
+        let k = parse_kernel(&source()).unwrap();
+        assert_eq!(k.name, "scale");
+        assert_eq!(k.consts.len(), 2);
+        assert_eq!(k.loops, vec![("n".to_string(), 0, N as i64)]);
+    }
+
+    #[test]
+    fn tir_parses_and_validates() {
+        let m = parse_and_validate(&tir()).unwrap();
+        require_synthesizable(&m).unwrap();
+        assert_eq!(m.work_items(), N as u64);
+        assert!(m.ports.values().all(|p| p.offset == 0), "no stencil window");
+    }
+
+    #[test]
+    fn dense_constant_costs_a_dsp() {
+        let m = parse_and_validate(&tir()).unwrap();
+        let e = crate::estimator::estimate(&m, &crate::device::Device::stratix4()).unwrap();
+        assert!(e.resources.dsp >= 1, "{:?}", e.resources);
+    }
+}

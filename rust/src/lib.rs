@@ -25,6 +25,12 @@
 //! * [`coordinator`] — the L3 exploration driver: a thread-pool that
 //!   fans estimation/simulation jobs across the design space, with a
 //!   result cache and metrics.
+//! * [`kernels`] — the kernel scenario library: every workload in both
+//!   the front-end mini-language and hand-written paper-style TIR.
+//! * [`conformance`] — the cross-layer differential harness: every
+//!   library (and random) kernel, at several design points, through
+//!   estimator/simulator/golden-model/HDL with every redundant pair of
+//!   paths diffed (`tytra conformance`).
 //! * [`runtime`] — PJRT bridge: loads the AOT-compiled JAX/Pallas golden
 //!   models from `artifacts/` and cross-checks the simulator's
 //!   functional output.
@@ -36,12 +42,14 @@
 pub mod bench_harness;
 pub mod cli;
 pub mod config;
+pub mod conformance;
 pub mod coordinator;
 pub mod device;
 pub mod dse;
 pub mod estimator;
 pub mod frontend;
 pub mod hdl;
+pub mod kernels;
 pub mod runtime;
 pub mod sim;
 pub mod synth;

@@ -1,11 +1,33 @@
-//! Golden-model comparisons: TIR dataflow simulator vs the PJRT-executed
-//! JAX/Pallas artifacts.
+//! Golden-model comparisons for the simulator's functional output.
 //!
-//! This closes the three-layer loop: the L1 Pallas kernels are verified
-//! against the pure-jnp oracle by pytest at build time; here the Rust
-//! simulator's functional output is verified bit-for-bit against the
-//! same artifacts at run time. A TIR configuration that passes both is
-//! functionally faithful to the paper's kernels end to end.
+//! Two independent golden substrates live here:
+//!
+//! * **PJRT artifacts** (`pjrt` feature): the AOT-compiled JAX/Pallas
+//!   models, executed natively and compared bit-for-bit — the paper
+//!   kernels' external oracle.
+//! * **The kernel model** ([`run_kernel_model`], always built): a direct
+//!   interpreter of the front-end loop-nest semantics — exact `i128`
+//!   arithmetic over the expression tree, truncated only at the output
+//!   element width. It shares *no* code with the TIR pipeline (no
+//!   lowering, no elaboration, no slot index), which is what makes the
+//!   `simulator ≡ model` comparison in `crate::conformance` a real
+//!   differential: the whole lower/elaborate/execute stack must agree
+//!   with a four-line interpretation of the source program.
+//!
+//! Exactness caveat: the model computes each intermediate exactly, while
+//! TIR instructions wrap at their (demand-narrowed but
+//! congruence-preserving) emission widths. The two agree at the
+//! truncated output for the modular operators (`+ * << >> & | ^`) and
+//! for full-width division — precisely the operator set the front-end's
+//! width-inference rules guarantee (see `frontend::dfg`). Subtraction
+//! below zero and division by zero are excluded (the library and the
+//! random-kernel generator avoid both; the model reports an error
+//! rather than silently diverging from the width-dependent hardware
+//! probe value).
+
+use crate::frontend::lang::{ArrayRef, BinOp, Expr, KernelDef};
+use crate::sim::value::wrap;
+use crate::sim::MemState;
 
 #[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
@@ -43,8 +65,9 @@ impl GoldenReport {
     }
 }
 
-#[cfg(feature = "pjrt")]
-fn compare(kernel: &str, sim_out: &[u64], golden: &[u64]) -> GoldenReport {
+/// Element-wise comparison of a simulator output against a golden
+/// vector (shared by the PJRT path and the kernel-model path).
+pub fn compare_outputs(kernel: &str, sim_out: &[u64], golden: &[u64]) -> GoldenReport {
     assert_eq!(sim_out.len(), golden.len(), "{kernel}: length mismatch");
     let mut mismatches = 0;
     let mut first = None;
@@ -57,6 +80,11 @@ fn compare(kernel: &str, sim_out: &[u64], golden: &[u64]) -> GoldenReport {
         }
     }
     GoldenReport { kernel: kernel.into(), n: sim_out.len(), mismatches, first }
+}
+
+#[cfg(feature = "pjrt")]
+fn compare(kernel: &str, sim_out: &[u64], golden: &[u64]) -> GoldenReport {
+    compare_outputs(kernel, sim_out, golden)
 }
 
 /// Simple kernel: simulate the TIR pipeline configuration on a random
@@ -129,3 +157,229 @@ pub fn run_all(_artifacts_dir: &std::path::Path, _seed: u64) -> Result<Vec<Golde
          see Cargo.toml)"
         .into())
 }
+
+// ---------------------------------------------------------------------------
+// Kernel model: direct loop-nest interpretation (feature-independent)
+// ---------------------------------------------------------------------------
+
+/// Run the front-end kernel's exact semantics over named memories
+/// (`mem_<array>` keys, the lowering's convention), including all `iter`
+/// chained passes with the simulator's ping-pong rule (the output array
+/// feeds every shape/type-matched input between passes, mirroring
+/// `sim::exec::pingpong_pairs`). Cells outside the loop ranges keep
+/// their initial values, exactly as the streaming hardware leaves
+/// boundary cells untouched.
+pub fn run_kernel_model(k: &KernelDef, mems: &mut MemState) -> Result<(), String> {
+    let out = k.outputs.first().ok_or("kernel model: no output array")?;
+    for a in k.inputs.iter().chain(&k.outputs) {
+        if a.dims != out.dims {
+            return Err(format!(
+                "kernel model: array `{}` is not conformant with output `{}` (the streaming \
+                 lowering indexes every array at the same linear point)",
+                a.name, out.name
+            ));
+        }
+    }
+    if k.target.indices.iter().any(|(_, off)| *off != 0) {
+        return Err("kernel model: offset writes are not supported by the lowering".into());
+    }
+    let dims = out.dims.clone();
+    let strides: Vec<i64> = (0..dims.len())
+        .map(|d| dims[d + 1..].iter().product::<u64>() as i64)
+        .collect();
+    let out_key = format!("mem_{}", out.name);
+
+    let passes = k.iter.max(1);
+    for pass in 0..passes {
+        let mut out_buf = mems
+            .get(&out_key)
+            .cloned()
+            .ok_or_else(|| format!("kernel model: memory `{out_key}` not initialised"))?;
+        // Loop-nest sweep (1-D or 2-D, like the prototype front-end).
+        let (olo, ohi) = (k.loops[0].1, k.loops[0].2);
+        for i in olo..ohi {
+            let (ilo, ihi) = if k.loops.len() == 2 { (k.loops[1].1, k.loops[1].2) } else { (0, 1) };
+            for j in ilo..ihi {
+                let lin = if k.loops.len() == 2 {
+                    i * strides[0] + j * strides[1]
+                } else {
+                    i * strides[0]
+                };
+                let v = eval_expr(&k.expr, k, mems, lin, &strides)?;
+                let idx = lin as usize;
+                if idx >= out_buf.len() {
+                    return Err(format!("kernel model: write out of bounds at {idx}"));
+                }
+                out_buf[idx] = wrap(out.ty, v);
+            }
+        }
+        mems.insert(out_key.clone(), out_buf);
+        if pass + 1 < passes {
+            // Ping-pong: the output feeds every matching input.
+            for a in &k.inputs {
+                if a.elems() == out.elems() && a.ty == out.ty {
+                    let data = mems[&out_key].clone();
+                    mems.insert(format!("mem_{}", a.name), data);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Convenience wrapper: run the model and report it against a simulator
+/// output memory.
+pub fn check_kernel_model(
+    k: &KernelDef,
+    initial: &MemState,
+    sim_out: &[u64],
+) -> Result<GoldenReport, String> {
+    let mut mems = initial.clone();
+    run_kernel_model(k, &mut mems)?;
+    let out_key = format!("mem_{}", k.outputs[0].name);
+    let golden = mems.get(&out_key).ok_or_else(|| format!("kernel model: no `{out_key}`"))?;
+    Ok(compare_outputs(&k.name, sim_out, golden))
+}
+
+/// Exact expression evaluation at one loop point (`lin` = the point's
+/// linear memory index).
+fn eval_expr(
+    e: &Expr,
+    k: &KernelDef,
+    mems: &MemState,
+    lin: i64,
+    strides: &[i64],
+) -> Result<i128, String> {
+    match e {
+        Expr::Int(v) => Ok(*v as i128),
+        Expr::Const(name) => {
+            let (_, ty, v) = k
+                .consts
+                .iter()
+                .find(|(n, _, _)| n == name)
+                .ok_or_else(|| format!("kernel model: unknown constant `{name}`"))?;
+            Ok(((*v as u64) & ty.mask()) as i128)
+        }
+        Expr::Ref(r) => read_tap(r, k, mems, lin, strides),
+        Expr::Bin(op, a, b) => {
+            let x = eval_expr(a, k, mems, lin, strides)?;
+            let y = eval_expr(b, k, mems, lin, strides)?;
+            Ok(match op {
+                BinOp::Add => x + y,
+                BinOp::Sub => {
+                    let d = x - y;
+                    if d < 0 {
+                        return Err("kernel model: subtraction below zero (width-dependent \
+                                    wrap; excluded from the golden operator set)"
+                            .into());
+                    }
+                    d
+                }
+                BinOp::Mul => x * y,
+                BinOp::Div => {
+                    if y == 0 {
+                        return Err("kernel model: division by zero (the hardware probe value \
+                                    is width-dependent; excluded from the golden operator set)"
+                            .into());
+                    }
+                    x / y
+                }
+                BinOp::Shl => x << (y.clamp(0, 63) as u32),
+                BinOp::Shr => x >> (y.clamp(0, 63) as u32),
+                BinOp::And => x & y,
+                BinOp::Or => x | y,
+                BinOp::Xor => x ^ y,
+            })
+        }
+    }
+}
+
+/// Read one array tap at a loop point through its per-dimension offsets.
+fn read_tap(
+    r: &ArrayRef,
+    k: &KernelDef,
+    mems: &MemState,
+    lin: i64,
+    strides: &[i64],
+) -> Result<i128, String> {
+    let decl = k
+        .inputs
+        .iter()
+        .find(|a| a.name == r.array)
+        .ok_or_else(|| format!("kernel model: `{}` is not an input", r.array))?;
+    let off: i64 = r.indices.iter().enumerate().map(|(d, (_, o))| o * strides[d]).sum();
+    let idx = lin + off;
+    let key = format!("mem_{}", r.array);
+    let buf = mems.get(&key).ok_or_else(|| format!("kernel model: memory `{key}` not initialised"))?;
+    if idx < 0 || idx as usize >= buf.len() {
+        return Err(format!("kernel model: tap `{}` reads out of bounds at {idx}", r.array));
+    }
+    Ok((buf[idx as usize] & decl.ty.mask()) as i128)
+}
+
+#[cfg(test)]
+mod model_tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::frontend::{self, DesignPoint};
+    use crate::sim::{self, Workload};
+
+    fn run_model(k: &KernelDef, w: &Workload) -> MemState {
+        let mut mems = w.mems.clone();
+        run_kernel_model(k, &mut mems).unwrap();
+        mems
+    }
+
+    #[test]
+    fn model_matches_simple_golden_formula() {
+        let k = frontend::parse_kernel(frontend::lang::simple_kernel_source()).unwrap();
+        let m = frontend::lower(&k, DesignPoint::c2()).unwrap();
+        let w = Workload::random_for(&m, 21);
+        let mems = run_model(&k, &w);
+        const MASK18: u64 = (1 << 18) - 1;
+        for i in 0..1000 {
+            let (a, b, c) = (w.mems["mem_a"][i], w.mems["mem_b"][i], w.mems["mem_c"][i]);
+            let want = (42 + (a + b) * (c + c)) & MASK18;
+            assert_eq!(mems["mem_y"][i], want, "item {i}");
+        }
+    }
+
+    #[test]
+    fn model_matches_simulator_on_sor() {
+        let k = frontend::parse_kernel(frontend::lang::sor_kernel_source()).unwrap();
+        let m = frontend::lower(&k, DesignPoint::c2()).unwrap();
+        let w = Workload::random_for(&m, 7);
+        let r = sim::simulate(&m, &Device::stratix4(), &w).unwrap();
+        let mems = run_model(&k, &w);
+        assert_eq!(r.mems["mem_q"], mems["mem_q"]);
+    }
+
+    #[test]
+    fn check_kernel_model_reports_clean_and_dirty() {
+        let k = frontend::parse_kernel(frontend::lang::simple_kernel_source()).unwrap();
+        let m = frontend::lower(&k, DesignPoint::c2()).unwrap();
+        let w = Workload::random_for(&m, 3);
+        let r = sim::simulate(&m, &Device::stratix4(), &w).unwrap();
+        let ok = check_kernel_model(&k, &w.mems, &r.mems["mem_y"]).unwrap();
+        assert!(ok.ok(), "{ok:?}");
+        let mut corrupted = r.mems["mem_y"].clone();
+        corrupted[17] ^= 1;
+        let bad = check_kernel_model(&k, &w.mems, &corrupted).unwrap();
+        assert_eq!(bad.mismatches, 1);
+        assert_eq!(bad.first.map(|(i, _, _)| i), Some(17));
+    }
+
+    #[test]
+    fn model_rejects_division_by_zero() {
+        let k = frontend::parse_kernel(
+            "kernel t { in a : ui18[4]\nout y : ui18[4]\nfor n in 0..4 { y[n] = a[n] / a[n] } }",
+        )
+        .unwrap();
+        let mut mems: MemState = Default::default();
+        mems.insert("mem_a".into(), vec![0, 1, 2, 3]);
+        mems.insert("mem_y".into(), vec![0; 4]);
+        let e = run_kernel_model(&k, &mut mems).unwrap_err();
+        assert!(e.contains("division by zero"), "{e}");
+    }
+}
+

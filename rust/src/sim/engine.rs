@@ -147,20 +147,29 @@ pub fn lane_cycles_oracle(
     }
 }
 
+/// The `(items, fill, seq_work)` inputs one lane's cycle computation
+/// takes — the single source both [`time_pass`] and the conformance
+/// harness's closed-form-vs-oracle differential derive them from.
+pub fn lane_timing_inputs(d: &Design, lane_idx: usize, seq_cpi: u64) -> (u64, u64, u64) {
+    let nlanes = d.lanes.len();
+    let (start, end) = d.lane_range(lane_idx, nlanes);
+    let items = end - start;
+    let fill = d.info.datapath_depth + d.info.window_span;
+    let seq_work =
+        if matches!(d.lanes[lane_idx].kind, Kind::Seq) { d.info.seq_ni.max(1) * seq_cpi } else { 0 };
+    (items, fill, seq_work)
+}
+
 /// Time one pass of the whole design on a device.
 pub fn time_pass(d: &Design, _dev: &Device, seq_cpi: u64) -> PassTiming {
     let nlanes = d.lanes.len();
-    let fill = d.info.datapath_depth + d.info.window_span;
     let mut per_lane = Vec::with_capacity(nlanes);
     for k in 0..nlanes {
-        let (start, end) = d.lane_range(k, nlanes);
-        let items = end - start;
-        let lane = &d.lanes[k];
-        let seq_work = if matches!(lane.kind, Kind::Seq) { d.info.seq_ni.max(1) * seq_cpi } else { 0 };
+        let (items, fill, seq_work) = lane_timing_inputs(d, k, seq_cpi);
         // CONT streams over banked memories never stall in this design,
         // so the closed form applies; the state-machine oracle stays for
         // FIFO-continuity stall hooks (and as the property-test oracle).
-        let busy = lane_cycles_closed_form(lane.kind, items, fill, seq_work);
+        let busy = lane_cycles_closed_form(d.lanes[k].kind, items, fill, seq_work);
         per_lane.push(busy);
     }
     let slowest = per_lane.iter().copied().max().unwrap_or(0);

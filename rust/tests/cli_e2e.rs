@@ -75,6 +75,55 @@ fn emit_hdl_writes_consumable_verilog() {
 }
 
 #[test]
+fn sweep_covers_the_whole_kernel_library() {
+    let out = dispatch(&args(
+        "sweep builtin:all --devices stratix4 --jobs 2 --max-lanes 2 --max-dv 2",
+    ))
+    .unwrap();
+    assert!(out.contains("7 kernel(s) × 1 device(s)"), "{out}");
+    for name in ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale"] {
+        assert!(out.contains(name), "missing `{name}` in:\n{out}");
+    }
+}
+
+#[test]
+fn sweep_mixes_library_and_user_kernel_files() {
+    let dir = tmpdir("mix");
+    let path = dir.join("blur.knl");
+    std::fs::write(
+        &path,
+        "kernel blur {\n  in p : ui18[34][34]\n  out q : ui18[34][34]\n  for i in 1..33, j in 1..33 {\n    q[i][j] = (p[i-1][j] + p[i+1][j] + p[i][j-1] + p[i][j+1]) >> 2\n  }\n}\n",
+    )
+    .unwrap();
+    let out = dispatch(&args(&format!(
+        "sweep builtin:fir3 {} --jobs 2 --max-lanes 2 --max-dv 2",
+        path.display()
+    )))
+    .unwrap();
+    assert!(out.contains("fir3"), "{out}");
+    assert!(out.contains("blur"), "{out}");
+}
+
+#[test]
+fn conformance_quick_end_to_end_is_clean() {
+    let out = dispatch(&args("conformance --quick --random 1 --seed 3")).unwrap();
+    assert!(out.contains("ALL OK"), "{out}");
+    assert!(out.contains("jacobi2d"), "{out}");
+    assert!(out.contains("mismatches"), "{out}");
+}
+
+#[test]
+fn conformance_injected_mismatch_exits_nonzero() {
+    // dispatch() must surface the failure as an Err…
+    let argv = args("conformance --quick --random 0 --inject-mismatch");
+    let e = dispatch(&argv).unwrap_err();
+    assert!(e.contains("conformance: MISMATCH"), "{e}");
+    assert!(e.contains("estimator/indexed-vs-reference"), "{e}");
+    // …and the process-level entry point must turn it into exit code 2.
+    assert_eq!(tytra::cli::run(&argv), 2);
+}
+
+#[test]
 fn missing_files_produce_helpful_errors() {
     let e = dispatch(&args("estimate /nonexistent/x.tir")).unwrap_err();
     assert!(e.contains("x.tir"), "{e}");

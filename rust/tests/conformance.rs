@@ -1,0 +1,64 @@
+//! Integration gate for the cross-layer differential conformance
+//! harness (ISSUE 2 acceptance): every library kernel (SOR + the five
+//! new workloads + the paper's simple kernel), at ≥ 4 design points
+//! each, with **zero** mismatches across the estimator, simulator,
+//! golden kernel model and Verilog structural checks — plus the
+//! injected-fault path proving the harness actually detects divergence.
+
+use tytra::conformance::{self, Options};
+use tytra::device::Device;
+
+#[test]
+fn full_registry_sweep_has_zero_mismatches() {
+    let mut opts = Options::full(Device::stratix4());
+    opts.random_cases = 4;
+    let r = conformance::run(&opts).unwrap();
+    assert!(r.ok(), "{}", r.render());
+    // ≥ 6 kernels (SOR + 5 new) at ≥ 4 design points each — the
+    // acceptance floor, counted from the registry rows alone.
+    let registry_rows: Vec<_> =
+        r.rows.iter().filter(|row| !row.kernel.starts_with("random/")).collect();
+    assert!(registry_rows.len() >= 6, "{:?}", r.rows);
+    for row in &registry_rows {
+        assert!(row.points >= 4, "{}: only {} points", row.kernel, row.points);
+        assert_eq!(row.mismatches, 0, "{}", r.render());
+    }
+    assert!(r.points >= 6 * 4);
+    assert!(r.checks >= r.points * 5, "each point runs the full differential set");
+}
+
+#[test]
+fn conformance_covers_random_kernels_too() {
+    let mut opts = Options::quick(Device::stratix4());
+    opts.random_cases = 3;
+    opts.seed = 7;
+    let r = conformance::run(&opts).unwrap();
+    assert!(r.ok(), "{}", r.render());
+    let random_rows = r.rows.iter().filter(|row| row.kernel.starts_with("random/")).count();
+    assert!(random_rows + r.skipped_random == 3, "{} + {}", random_rows, r.skipped_random);
+}
+
+#[test]
+fn injected_fault_propagates_to_a_failing_report() {
+    let mut opts = Options::quick(Device::stratix4());
+    opts.random_cases = 0;
+    opts.inject_fault = true;
+    let r = conformance::run(&opts).unwrap();
+    assert!(!r.ok());
+    assert_eq!(r.mismatches(), 1);
+    let text = r.render();
+    assert!(text.contains("MISMATCH"), "{text}");
+    assert!(text.contains("estimator/indexed-vs-reference"), "{text}");
+}
+
+#[test]
+fn small_device_conformance_is_also_clean() {
+    // The differential properties are device-independent; run the quick
+    // sweep against the Cyclone-class part to prove no check silently
+    // bakes in Stratix constants.
+    let mut opts = Options::quick(Device::cyclone4());
+    opts.random_cases = 1;
+    opts.seed = 11;
+    let r = conformance::run(&opts).unwrap();
+    assert!(r.ok(), "{}", r.render());
+}

@@ -1,0 +1,90 @@
+//! Golden-snapshot tests for `hdl::verilog::generate` over the kernel
+//! scenario library.
+//!
+//! Two layers of stability are checked:
+//!
+//! 1. **In-process determinism** — generating twice from the same
+//!    module, and from the module's pretty-print → re-parse roundtrip,
+//!    must produce byte-identical Verilog (no iteration-order or
+//!    hidden-state leaks into the emission).
+//! 2. **Cross-run snapshots** — the emitted text is pinned to files
+//!    under `tests/snapshots/hdl/`. The first run (or a run with
+//!    `TYTRA_BLESS=1`) writes the snapshot; later runs diff against it,
+//!    so any emission drift across commits fails with the kernel named.
+//!    Re-bless intentionally changed output with
+//!    `TYTRA_BLESS=1 cargo test --test hdl_golden`.
+
+use std::fs;
+use std::path::PathBuf;
+
+use tytra::frontend::{self, DesignPoint};
+use tytra::hdl;
+use tytra::kernels;
+use tytra::tir;
+
+fn snapshot_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/snapshots/hdl")
+}
+
+/// Compare against (or create) the named snapshot.
+fn check_snapshot(name: &str, content: &str) {
+    let dir = snapshot_dir();
+    fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}.v"));
+    let bless = std::env::var_os("TYTRA_BLESS").is_some();
+    if bless || !path.exists() {
+        fs::write(&path, content).unwrap();
+        return;
+    }
+    let want = fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        want, content,
+        "HDL emission drift for `{name}` (re-bless intentional changes with TYTRA_BLESS=1)"
+    );
+}
+
+#[test]
+fn lowered_kernels_emit_deterministic_snapshotted_verilog() {
+    for sc in kernels::registry() {
+        let k = sc.parse().unwrap();
+        for (suffix, point) in [("c2", DesignPoint::c2()), ("c1x2", DesignPoint::c1(2))] {
+            let m = frontend::lower(&k, point).unwrap();
+            let v1 = hdl::generate_verilog(&m).unwrap();
+            let v2 = hdl::generate_verilog(&m).unwrap();
+            assert_eq!(v1, v2, "{}: re-generation differs", sc.name);
+            // stable through the canonical-text roundtrip
+            let m2 = tir::parse_and_validate(&tir::pretty::print(&m)).unwrap();
+            let v3 = hdl::generate_verilog(&m2).unwrap();
+            assert_eq!(v1, v3, "{}: roundtripped module emits differently", sc.name);
+            check_snapshot(&format!("{}_{suffix}", sc.name), &v1);
+        }
+    }
+}
+
+#[test]
+fn hand_tir_emits_deterministic_snapshotted_verilog() {
+    for sc in kernels::registry() {
+        let m = tir::parse_and_validate(&(sc.hand_tir)()).unwrap();
+        let v1 = hdl::generate_verilog(&m).unwrap();
+        let v2 = hdl::generate_verilog(&m).unwrap();
+        assert_eq!(v1, v2, "{}: re-generation differs", sc.name);
+        check_snapshot(&format!("{}_hand", sc.name), &v1);
+    }
+}
+
+#[test]
+fn emitted_verilog_passes_the_structural_scan() {
+    // The conformance harness's structural invariants, applied to every
+    // snapshot candidate directly (so this test fails even when the
+    // snapshot was just (re-)blessed).
+    for sc in kernels::registry() {
+        let k = sc.parse().unwrap();
+        let m = frontend::lower(&k, DesignPoint::c2()).unwrap();
+        let v = hdl::generate_verilog(&m).unwrap();
+        let missing = tytra::conformance::undeclared_locals(&v);
+        assert!(missing.is_empty(), "{}: undeclared locals {missing:?}", sc.name);
+        let opens = v.lines().filter(|l| l.starts_with("module ")).count();
+        let closes = v.lines().filter(|l| l.trim() == "endmodule").count();
+        assert_eq!(opens, closes, "{}: unbalanced modules", sc.name);
+    }
+}

@@ -22,46 +22,13 @@
 //!    `lane_cycles` expression equals the state-machine oracle for
 //!    stall-free runs.
 
+use tytra::conformance::random::random_kernel;
 use tytra::device::Device;
 use tytra::estimator;
 use tytra::frontend::{self, DesignPoint};
 use tytra::sim::{self, Workload};
 use tytra::tir;
 use tytra::util::Prng;
-
-/// Generate a random kernel in the mini-language. 1-D, ui18 arrays,
-/// modular ops only (`+ * << >> & | ^`), depth-bounded expressions.
-fn random_kernel(rng: &mut Prng, id: usize) -> String {
-    let n = *rng.choose(&[256u64, 512, 1000]);
-    let n_inputs = rng.range_u64(1, 3);
-    let names = ["a", "b", "c"];
-    let inputs: Vec<&str> = names[..n_inputs as usize].to_vec();
-
-    fn expr(rng: &mut Prng, inputs: &[&str], depth: u32) -> String {
-        if depth == 0 || rng.below(4) == 0 {
-            // leaf: tap or small literal
-            if rng.below(3) == 0 {
-                return format!("{}", rng.range_u64(1, 4000));
-            }
-            return format!("{}[n]", rng.choose(inputs));
-        }
-        let a = expr(rng, inputs, depth - 1);
-        let b = expr(rng, inputs, depth - 1);
-        match rng.below(6) {
-            0 => format!("({a} + {b})"),
-            1 => format!("({a} * {b})"),
-            2 => format!("({a} >> {})", rng.range_u64(1, 6)),
-            3 => format!("({a} & {b})"),
-            4 => format!("({a} | {b})"),
-            _ => format!("({a} ^ {b})"),
-        }
-    }
-    let body = expr(rng, &inputs, 3);
-    format!(
-        "kernel gen{id} {{\n  in {} : ui18[{n}]\n  out y : ui18[{n}]\n  for n in 0..{n} {{ y[n] = {body} }}\n}}",
-        inputs.join(", ")
-    )
-}
 
 const CASES: usize = 25;
 
@@ -117,6 +84,42 @@ fn pretty_print_roundtrips_generated_modules() {
             let m2 = tir::parse_and_validate(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
             assert_eq!(m, m2, "roundtrip mismatch for {p:?}:\n{src}");
         }
+    }
+}
+
+#[test]
+fn parser_pretty_parser_is_fixed_point_for_library_tir() {
+    // parse → print → parse → print must reach a fixed point on the
+    // first print, for every paper listing, every library kernel's
+    // hand-written TIR, and every library kernel's lowered TIR.
+    let mut listings: Vec<(String, String)> = vec![
+        ("fig5".into(), tir::examples::fig5_seq()),
+        ("fig7".into(), tir::examples::fig7_pipe()),
+        ("fig9".into(), tir::examples::fig9_multi_pipe(4)),
+        ("fig11".into(), tir::examples::fig11_vector_seq(4)),
+        ("fig15".into(), tir::examples::fig15_sor_default()),
+    ];
+    for sc in tytra::kernels::registry() {
+        listings.push((format!("{}-hand", sc.name), (sc.hand_tir)()));
+        let k = sc.parse().unwrap();
+        for p in [DesignPoint::c2(), DesignPoint::c1(2), DesignPoint::c4()] {
+            let m = frontend::lower(&k, p).unwrap();
+            listings.push((format!("{}-{}", sc.name, p.label()), tir::pretty::print(&m)));
+        }
+    }
+    for (name, src) in listings {
+        let m1 = tir::parse_and_validate(&src).unwrap_or_else(|e| panic!("{name}: {e}\n{src}"));
+        let t1 = tir::pretty::print(&m1);
+        let m2 = tir::parse_and_validate(&t1).unwrap_or_else(|e| panic!("{name} reparse: {e}\n{t1}"));
+        let t2 = tir::pretty::print(&m2);
+        assert_eq!(t1, t2, "{name}: pretty output is not a parser fixed point");
+        // and the second parse reproduces the first module up to the
+        // synthesised module name of headerless sources
+        let mut m1n = m1.clone();
+        let mut m2n = m2.clone();
+        m1n.name = String::new();
+        m2n.name = String::new();
+        assert_eq!(m1n, m2n, "{name}: module drifted through the roundtrip");
     }
 }
 

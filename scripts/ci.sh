@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# CI gate: format check, release build, full test suite, and a smoke
+# conformance run of the cross-layer differential harness.
+#
+# Usage:
+#   scripts/ci.sh              # everything
+#   CI_FMT=strict scripts/ci.sh  # make formatting drift a hard failure
+#
+# The conformance pass counts also land in BENCH_dse_throughput.json via
+# `scripts/bench.sh` (the estimator_speed bench runs the same harness in
+# quick mode and records the counts next to the perf trajectory).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+MANIFEST=rust/Cargo.toml
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found — the growth container ships no Rust toolchain;" >&2
+    echo "run scripts/ci.sh on a machine with cargo (see EXPERIMENTS.md)." >&2
+    exit 1
+fi
+
+echo "== fmt-check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    if ! cargo fmt --manifest-path "$MANIFEST" -- --check; then
+        if [ "${CI_FMT:-warn}" = "strict" ]; then
+            echo "fmt-check failed (CI_FMT=strict)" >&2
+            exit 1
+        fi
+        echo "warning: formatting drift (non-fatal; set CI_FMT=strict to gate on it)" >&2
+    fi
+else
+    echo "rustfmt unavailable — skipping fmt-check" >&2
+fi
+
+echo "== build (release) =="
+cargo build --release --manifest-path "$MANIFEST"
+
+echo "== tests =="
+cargo test -q --manifest-path "$MANIFEST"
+
+echo "== conformance (smoke) =="
+cargo run --quiet --release --manifest-path "$MANIFEST" -- conformance --quick
+
+echo "ci: ALL OK"
