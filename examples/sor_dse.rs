@@ -22,7 +22,7 @@ fn main() {
     for dev in [Device::cyclone4(), Device::stratix4(), Device::stratix5()] {
         println!("════════ {} ════════", dev.name);
         let r = session
-            .explore(src, &k, &dev, &SweepLimits { max_lanes: 16, max_dv: 16, pow2_only: true, include_seq: true })
+            .explore(src, &k, &dev, &SweepLimits::default())
             .expect("exploration");
 
         let mut t = Table::new(vec!["config", "class", "ALUTs", "BRAM(bits)", "cycles", "EWGT", "util%", "status"]);

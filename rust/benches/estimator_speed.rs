@@ -88,18 +88,20 @@ fn main() {
     println!("{}", section("parallel DSE sweep throughput (estimate-only jobs, cold cache)"));
     let src = frontend::lang::sor_kernel_source();
     let k = frontend::parse_kernel(src).unwrap();
-    let limits = SweepLimits { max_lanes: 16, max_dv: 16, pow2_only: false, include_seq: true }; // 32 points
+    // dense 1..16 on the pipe, comb and seq axes → 48 points
+    let limits = SweepLimits { max_lanes: 16, max_dv: 16, pow2_only: false, ..SweepLimits::default() };
+    let n_points = tytra::dse::enumerate(&limits).len();
     let mut sweep_rows: Vec<(usize, f64)> = Vec::new();
     let (w, i) = scale(3, 30);
     for jobs in [1usize, 2, 4, 8] {
         // A fresh Session per iteration: the estimate cache starts cold,
         // so every iteration measures real estimation work (a shared
         // session would replay cache hits from the warmup on).
-        let r = bench(&format!("32-point sweep, {jobs} worker(s)"), w, i, || {
+        let r = bench(&format!("{n_points}-point sweep, {jobs} worker(s)"), w, i, || {
             let session = Session::new(jobs);
             black_box(session.explore(src, &k, &dev, &limits).unwrap())
         });
-        let cps = 32.0 / r.summary.mean;
+        let cps = n_points as f64 / r.summary.mean;
         println!("{}  ({:.0} configs/s)", r.line(), cps);
         sweep_rows.push((jobs, cps));
     }
@@ -108,10 +110,10 @@ fn main() {
     // sweep_throughput so the trajectory stays estimator-vs-estimator).
     let warm_session = Session::new(8);
     let (w, i) = scale(3, 30);
-    let r_warm = bench("32-point sweep, 8 worker(s), warm cache", w, i, || {
+    let r_warm = bench(&format!("{n_points}-point sweep, 8 worker(s), warm cache"), w, i, || {
         black_box(warm_session.explore(src, &k, &dev, &limits).unwrap())
     });
-    println!("{}  ({:.0} configs/s)", r_warm.line(), 32.0 / r_warm.summary.mean);
+    println!("{}  ({:.0} configs/s)", r_warm.line(), n_points as f64 / r_warm.summary.mean);
 
     println!("{}", section("batched (kernel × device) grid via Session::explore_batch (cold cache)"));
     let kernels = vec![

@@ -1,7 +1,8 @@
 //! Bench: regenerate **Figure 3** — the design-space abstraction — as
 //! data: both kernels swept along the pipeline axis (C2 → C1 with
-//! growing L) and the sequential axis (C4 → C5 with growing D_v),
-//! reporting class, cycles and EWGT per point; plus the sweep timing.
+//! growing L), the comb/par plane (C3 with growing core count) and the
+//! sequential axis (C4 → C5 with growing D_v), reporting class, cycles
+//! and EWGT per point; plus the sweep timing.
 //!
 //! Run with: `cargo bench --bench fig3_design_space`
 
@@ -13,7 +14,7 @@ use tytra::util::table::{human_count, Table};
 
 fn main() {
     let dev = Device::stratix4();
-    let limits = SweepLimits { max_lanes: 16, max_dv: 16, pow2_only: true, include_seq: true };
+    let limits = SweepLimits::default();
 
     for (name, src) in [
         ("simple", frontend::lang::simple_kernel_source()),
@@ -32,6 +33,7 @@ fn main() {
         for c in &r.candidates {
             let axis = match c.point.style {
                 frontend::Style::Pipe => "pipeline",
+                frontend::Style::Comb => "comb/par",
                 frontend::Style::Seq => "sequential",
             };
             t.row(vec![
@@ -62,7 +64,7 @@ fn main() {
     let k = frontend::parse_kernel(frontend::lang::simple_kernel_source()).unwrap();
     println!(
         "{}",
-        bench("full 10-point sweep (serial)", 5, 50, || {
+        bench("full 15-point sweep (serial)", 5, 50, || {
             black_box(dse::explore(&k, &dev, &limits).unwrap())
         })
         .line()

@@ -40,7 +40,8 @@ pub struct Cli {
 const VALUE_FLAGS: &[&str] =
     &["device", "devices", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts", "random"];
 /// Boolean flags.
-const BOOL_FLAGS: &[&str] = &["dense", "tb", "help", "pipes-only", "quick", "json", "inject-mismatch"];
+const BOOL_FLAGS: &[&str] =
+    &["dense", "tb", "help", "pipes-only", "chain", "quick", "json", "inject-mismatch"];
 
 impl Cli {
     /// Parse an argv (excluding argv[0]).
@@ -147,8 +148,8 @@ pub fn usage() -> String {
        configurations                 print the paper's Fig 5/7/9/11/15 TIR listings\n\
      \n\
      FLAGS: --device s4|s5|c4   --devices s4,c4   --seed N   --jobs N   --max-lanes N\n\
-            --max-dv N   --dense   --pipes-only   --config tytra.toml   --artifacts DIR\n\
-            --tb   --quick   --random N   --json   --inject-mismatch"
+            --max-dv N   --dense   --pipes-only   --chain   --config tytra.toml\n\
+            --artifacts DIR   --tb   --quick   --random N   --json   --inject-mismatch"
         .to_string()
 }
 
@@ -248,6 +249,11 @@ fn sweep_config(cli: &Cli) -> Result<Config, String> {
     if cli.has("pipes-only") {
         // restrict to the custom-pipeline (C1) plane, the paper's HPC focus
         cfg.sweep.include_seq = false;
+        cfg.sweep.include_comb = false;
+    }
+    if cli.has("chain") {
+        // additionally sweep each point's comb-call-chain variant
+        cfg.sweep.include_chain = true;
     }
     if let Some(v) = cli.flag("jobs") {
         cfg.jobs = v.parse().map_err(|e| format!("--jobs: {e}"))?;
@@ -524,7 +530,8 @@ mod tests {
         assert!(out.contains("simple"), "{out}");
         assert!(out.contains("sor"), "{out}");
         assert!(out.contains("CycloneIV"), "{out}");
-        assert!(out.contains("pipe×"), "{out}");
+        // best labels are `style×N`; either streaming plane may win
+        assert!(out.contains("pipe×") || out.contains("comb×"), "{out}");
     }
 
     #[test]
@@ -561,16 +568,34 @@ mod tests {
     #[test]
     fn kernels_lists_the_library() {
         let out = dispatch(&args("kernels")).unwrap();
-        for name in ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale"] {
+        for name in ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow"] {
             assert!(out.contains(name), "missing `{name}` in:\n{out}");
         }
+    }
+
+    #[test]
+    fn dse_sweeps_the_comb_plane_and_chain_axis() {
+        let out = dispatch(&args("dse builtin:simple --jobs 2 --max-lanes 2 --max-dv 2 --chain")).unwrap();
+        // 2 pipe + 2 comb + 2 seq points, each with a +chain variant
+        assert!(out.contains("(12 points"), "{out}");
+        assert!(out.contains("comb×2"), "{out}");
+        assert!(out.contains("+chain"), "{out}");
+        assert!(out.contains("C3"), "{out}");
+    }
+
+    #[test]
+    fn pipes_only_restricts_to_the_pipeline_plane() {
+        let out = dispatch(&args("dse builtin:simple --jobs 2 --max-lanes 2 --max-dv 2 --pipes-only")).unwrap();
+        assert!(out.contains("(2 points"), "{out}");
+        assert!(!out.contains("comb×"), "{out}");
+        assert!(!out.contains("seq×"), "{out}");
     }
 
     #[test]
     fn conformance_quick_json_counts() {
         let out = dispatch(&args("conformance --quick --random 0 --json")).unwrap();
         assert!(out.contains("\"mismatches\": 0"), "{out}");
-        assert!(out.contains("\"kernels\": 7"), "{out}");
+        assert!(out.contains("\"kernels\": 8"), "{out}");
     }
 
     #[test]

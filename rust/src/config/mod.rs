@@ -73,6 +73,14 @@ impl Config {
                     self.sweep.include_seq =
                         v.as_bool().ok_or("`sweep.include_seq` must be a boolean")?;
                 }
+                "sweep.include_comb" => {
+                    self.sweep.include_comb =
+                        v.as_bool().ok_or("`sweep.include_comb` must be a boolean")?;
+                }
+                "sweep.include_chain" => {
+                    self.sweep.include_chain =
+                        v.as_bool().ok_or("`sweep.include_chain` must be a boolean")?;
+                }
                 other => return Err(format!("unknown config key `{other}`")),
             }
         }

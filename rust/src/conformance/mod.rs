@@ -16,7 +16,13 @@
 //! | `timing/actual-covers-estimate` | simulated cycles | estimator lower bound |
 //! | `golden/simulator-vs-kernel-model` | full simulation | `runtime::golden::run_kernel_model` |
 //! | `sim/hand-tir-vs-lowered` | hand-written paper-style TIR | front-end lowering |
-//! | `hdl/*` | emitted Verilog | structural invariants |
+//! | `hdl/*` | emitted Verilog | structural invariants (incl. declared signals and defined-module instantiation) |
+//!
+//! Design points cover the full C1–C4 space — pipe lanes (C1/C2), comb
+//! cores (C3), sequential PEs (C4/C5) — plus mixed call-chain
+//! (`+chain`) variants; the hand-written TIR listings (including the
+//! `shadow` shadowed-callee-parameter regression kernel) additionally
+//! run the HDL scans.
 //!
 //! A clean run is the regression gate every backend/optimisation PR
 //! runs against (`tytra conformance`, `scripts/ci.sh`,
@@ -33,7 +39,7 @@ use crate::frontend::{self, DesignPoint, KernelDef};
 use crate::hdl;
 use crate::kernels;
 use crate::runtime::golden;
-use crate::sim::{self, engine, exec, Workload};
+use crate::sim::{self, engine, exec, DestInit, Workload};
 use crate::tir::{self, Dir, ModuleIndex};
 use crate::util::{Prng, Table};
 
@@ -56,29 +62,45 @@ pub struct Options {
 }
 
 impl Options {
-    /// Smoke configuration (`tytra conformance --quick`): 4 points per
-    /// kernel, a couple of random cases.
+    /// Smoke configuration (`tytra conformance --quick`): the full
+    /// C1–C4 style space at small replication — one point per paper
+    /// configuration class plus one mixed call-chain point — and a
+    /// couple of random cases. This is the `scripts/ci.sh` gate, so the
+    /// C3 comb/par plane and the call-chain shape are always smoked.
     pub fn quick(device: Device) -> Options {
         Options {
             device,
             seed: 42,
-            points: vec![DesignPoint::c2(), DesignPoint::c1(2), DesignPoint::c4(), DesignPoint::c5(2)],
+            points: vec![
+                DesignPoint::c2(),
+                DesignPoint::c1(2),
+                DesignPoint::c3(2),
+                DesignPoint::c4(),
+                DesignPoint::c5(2),
+                DesignPoint::c2().chained(),
+            ],
             random_cases: 2,
             check_hdl: true,
             inject_fault: false,
         }
     }
 
-    /// Full configuration (default `tytra conformance`): 5 points per
-    /// kernel, a deeper random sweep.
+    /// Full configuration (default `tytra conformance`): wider
+    /// replication on every axis and the call-chain variant of each
+    /// leaf style, plus a deeper random sweep.
     pub fn full(device: Device) -> Options {
         Options {
             points: vec![
                 DesignPoint::c2(),
                 DesignPoint::c1(2),
                 DesignPoint::c1(4),
+                DesignPoint::c3(1),
+                DesignPoint::c3(4),
                 DesignPoint::c4(),
                 DesignPoint::c5(2),
+                DesignPoint::c2().chained(),
+                DesignPoint::c3(2).chained(),
+                DesignPoint::c4().chained(),
             ],
             random_cases: 8,
             ..Options::quick(device)
@@ -195,7 +217,7 @@ pub fn run(opts: &Options) -> Result<ConformanceReport, String> {
         let k = sc.parse()?;
         let lk = frontend::analyze_kernel(&k)?;
         let hand = (sc.hand_tir)();
-        h.conform_kernel(sc.name, &k, &lk, Some(hand.as_str()))?;
+        h.conform_kernel(sc.name, &k, &lk, Some(hand.as_str()), Some(sc.dest_init))?;
         kernels_run += 1;
     }
 
@@ -252,6 +274,16 @@ impl Harness<'_> {
         }
     }
 
+    /// Build the seeded workload for one module: library kernels use
+    /// their explicit destination-init spec, random/unknown modules fall
+    /// back to the generic heuristic.
+    fn workload(&self, m: &tir::Module, spec: Option<DestInit>) -> Result<Workload, String> {
+        match spec {
+            Some(init) => Workload::with_dest_init(m, self.opts.seed, init),
+            None => Ok(Workload::random_for(m, self.opts.seed)),
+        }
+    }
+
     /// Conformance for one kernel from its pre-analysed form (shared by
     /// the registry and random paths — analysis happens exactly once).
     fn conform_kernel(
@@ -260,16 +292,17 @@ impl Harness<'_> {
         k: &KernelDef,
         lk: &frontend::LoweredKernel,
         hand_tir: Option<&str>,
+        spec: Option<DestInit>,
     ) -> Result<(), String> {
         let checks0 = self.checks;
         let fails0 = self.failures.len();
         let points0 = self.points;
 
         for &p in &self.opts.points.clone() {
-            self.conform_point(name, k, lk, p)?;
+            self.conform_point(name, k, lk, p, spec)?;
         }
         if let Some(src) = hand_tir {
-            self.conform_hand_tir(name, k, lk, src)?;
+            self.conform_hand_tir(name, k, lk, src, spec)?;
         }
 
         self.rows.push(KernelRow {
@@ -287,7 +320,7 @@ impl Harness<'_> {
     fn conform_random(&mut self, name: &str, k: &KernelDef) -> Result<bool, String> {
         match frontend::analyze_kernel(k) {
             Ok(lk) => {
-                self.conform_kernel(name, k, &lk, None)?;
+                self.conform_kernel(name, k, &lk, None, None)?;
                 Ok(true)
             }
             Err(e) if e.contains("exceeds 64") => Ok(false),
@@ -302,6 +335,7 @@ impl Harness<'_> {
         k: &KernelDef,
         lk: &frontend::LoweredKernel,
         p: DesignPoint,
+        spec: Option<DestInit>,
     ) -> Result<(), String> {
         let dev = self.opts.device.clone();
         let m = frontend::lower_point(lk, p)?;
@@ -327,7 +361,7 @@ impl Harness<'_> {
         });
 
         // --- simulator: compiled lanes vs reference interpreter --------------
-        let w = Workload::random_for(&m, self.opts.seed);
+        let w = self.workload(&m, spec)?;
         let d = sim::elaborate_with(&ix)?;
         let mut compiled = w.mems.clone();
         let mut interpreted = w.mems.clone();
@@ -373,20 +407,23 @@ impl Harness<'_> {
 
     /// The hand-written paper-style TIR must match both the golden model
     /// and the front-end lowering bit-for-bit on the same seeded
-    /// workload.
+    /// workload — and emit structurally sound Verilog (the hand listings
+    /// are where call chains with shadowed/renamed callee parameters
+    /// live, e.g. the `shadow` regression kernel).
     fn conform_hand_tir(
         &mut self,
         name: &str,
         k: &KernelDef,
         lk: &frontend::LoweredKernel,
         src: &str,
+        spec: Option<DestInit>,
     ) -> Result<(), String> {
         let dev = self.opts.device.clone();
         let hm = tir::parse_and_validate(src).map_err(|e| format!("{name} hand TIR: {e}"))?;
         tir::validate::require_synthesizable(&hm).map_err(|e| format!("{name} hand TIR: {e}"))?;
         let out_key = format!("mem_{}", k.outputs[0].name);
 
-        let wh = Workload::random_for(&hm, self.opts.seed);
+        let wh = self.workload(&hm, spec)?;
         let rh = sim::simulate(&hm, &dev, &wh)?;
         let gr = golden::check_kernel_model(k, &wh.mems, &rh.mems[out_key.as_str()])?;
         self.check(name, "hand-tir", "golden/hand-tir-vs-kernel-model", gr.ok(), || {
@@ -394,7 +431,7 @@ impl Harness<'_> {
         });
 
         let mc2 = frontend::lower_point(lk, DesignPoint::c2())?;
-        let wl = Workload::random_for(&mc2, self.opts.seed);
+        let wl = self.workload(&mc2, spec)?;
         self.check(name, "hand-tir", "workload/identical-across-forms", wl.mems == wh.mems, || {
             "hand TIR and lowered module draw different seeded workloads \
              (memory naming convention broken)"
@@ -408,6 +445,10 @@ impl Harness<'_> {
             rh.mems[out_key.as_str()] == rl.mems[out_key.as_str()],
             || first_vec_diff(&rh.mems[out_key.as_str()], &rl.mems[out_key.as_str()]),
         );
+        if self.opts.check_hdl {
+            let hd = sim::elaborate(&hm)?;
+            self.conform_hdl(name, "hand-tir", &hm, &hd)?;
+        }
         Ok(())
     }
 
@@ -471,8 +512,42 @@ impl Harness<'_> {
         self.check(name, pl, "hdl/locals-declared", undeclared.is_empty(), || {
             format!("undeclared local signals referenced: {undeclared:?}")
         });
+
+        let undefined = undefined_module_instantiations(&v);
+        self.check(name, pl, "hdl/instantiated-modules-defined", undefined.is_empty(), || {
+            format!("instantiated but never defined: {undefined:?}")
+        });
         Ok(())
     }
+}
+
+/// Module names instantiated in the RTL (`<module> u_<inst> (` lines)
+/// that no `module <name>` line defines. The locals scan cannot see this
+/// class of bug: a top module instantiating `f_pe` while the emitter
+/// produced `f_comb` is structurally clean signal-wise and only fails at
+/// elaboration in a real Verilog tool — exactly what the comb/par lanes
+/// used to do.
+pub fn undefined_module_instantiations(v: &str) -> Vec<String> {
+    let defined: BTreeSet<&str> = v
+        .lines()
+        .filter_map(|l| l.trim_start().strip_prefix("module "))
+        .filter_map(|rest| rest.split(|c: char| c == '(' || c.is_whitespace()).next())
+        .filter(|n| !n.is_empty())
+        .collect();
+    let mut missing: Vec<String> = Vec::new();
+    for l in v.lines() {
+        let mut toks = l.split_whitespace();
+        if let (Some(mname), Some(iname)) = (toks.next(), toks.next()) {
+            if iname.starts_with("u_")
+                && mname.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+                && !defined.contains(mname)
+                && !missing.iter().any(|m| m == mname)
+            {
+                missing.push(mname.to_string());
+            }
+        }
+    }
+    missing
 }
 
 /// All `v_*` signal tokens referenced in the Verilog that no `reg`/`wire`
@@ -571,6 +646,28 @@ mod tests {
         assert!(text.contains("ALL OK"), "{text}");
         let json = r.render_json();
         assert!(json.contains("\"mismatches\": 0"), "{json}");
+    }
+
+    #[test]
+    fn undefined_instantiation_scan_catches_module_mismatch() {
+        let good = "module f_comb (\n    output wire ok\n);\nendmodule\nmodule t_top (\n    output wire done\n);\n    f_comb u_lane0 (\n        .ok(done)\n    );\nendmodule\n";
+        assert!(undefined_module_instantiations(good).is_empty(), "{good}");
+        // the exact historical bug: comb lanes instantiated as `_pe`
+        let bad = good.replace("f_comb u_lane0", "f_pe u_lane0");
+        assert_eq!(undefined_module_instantiations(&bad), vec!["f_pe".to_string()]);
+    }
+
+    #[test]
+    fn quick_points_cover_c1_through_c4_plus_a_call_chain() {
+        // The CI smoke (`tytra conformance --quick`) must exercise every
+        // paper configuration class and at least one mixed call chain.
+        let o = Options::quick(Device::stratix4());
+        use crate::frontend::Style;
+        assert!(o.points.iter().any(|p| p.style == Style::Pipe && p.lanes == 1));
+        assert!(o.points.iter().any(|p| p.style == Style::Pipe && p.lanes > 1));
+        assert!(o.points.iter().any(|p| p.style == Style::Comb));
+        assert!(o.points.iter().any(|p| p.style == Style::Seq));
+        assert!(o.points.iter().any(|p| p.chain));
     }
 
     #[test]

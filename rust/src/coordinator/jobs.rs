@@ -134,6 +134,11 @@ impl Session {
     ) -> Result<dse::Candidate, String> {
         self.metrics.jobs.inc();
         let module = frontend::lower_point(lk, point)?;
+        // Same normalisation as `dse::evaluate_lowered`: a degenerate
+        // chained point realises the unchained module and must be
+        // keyed/labelled as such (the cache then also short-circuits the
+        // duplicate estimate).
+        let point = frontend::lower::realised_point(&module, point);
         let ck = key(key_src, &point.label(), &dev.name);
         let estimate = self
             .cache
@@ -258,10 +263,10 @@ mod tests {
         session.explore(src, &k, &dev, &limits).unwrap();
         let (h0, m0) = session.cache_stats();
         assert_eq!(h0, 0);
-        assert_eq!(m0, 10);
+        assert_eq!(m0, 15);
         session.explore(src, &k, &dev, &limits).unwrap();
         let (h1, _) = session.cache_stats();
-        assert_eq!(h1, 10);
+        assert_eq!(h1, 15);
     }
 
     #[test]
@@ -270,7 +275,7 @@ mod tests {
         let k = parse_kernel(src).unwrap();
         let session = Session::new(2);
         session.explore(src, &k, &Device::stratix4(), &SweepLimits::default()).unwrap();
-        assert_eq!(session.metrics().jobs.get(), 10);
+        assert_eq!(session.metrics().jobs.get(), 15);
         assert_eq!(session.metrics().sweeps.get(), 1);
     }
 
@@ -281,7 +286,7 @@ mod tests {
             (sor_kernel_source().to_string(), parse_kernel(sor_kernel_source()).unwrap()),
         ];
         let devs = [Device::stratix4(), Device::cyclone4()];
-        let limits = SweepLimits { max_lanes: 4, max_dv: 2, pow2_only: true, include_seq: true };
+        let limits = SweepLimits { max_lanes: 4, max_dv: 2, ..SweepLimits::default() };
         let session = Session::new(4);
         let batch = session.explore_batch(&ks, &devs, &limits).unwrap();
         assert_eq!(batch.len(), 4);
@@ -306,7 +311,7 @@ mod tests {
     #[test]
     fn registry_sweep_covers_every_library_kernel() {
         let session = Session::new(4);
-        let limits = SweepLimits { max_lanes: 2, max_dv: 2, pow2_only: true, include_seq: true };
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
         let cells = session.explore_registry(&[Device::stratix4()], &limits).unwrap();
         let names: Vec<&str> = cells.iter().map(|c| c.kernel.as_str()).collect();
         assert_eq!(names, crate::kernels::names(), "one cell per registry kernel, in order");
@@ -324,10 +329,10 @@ mod tests {
         let ks = [(simple_kernel_source().to_string(), parse_kernel(simple_kernel_source()).unwrap())];
         let devs = [Device::stratix4(), Device::cyclone4()];
         let session = Session::new(2);
-        let limits = SweepLimits { max_lanes: 2, max_dv: 2, pow2_only: true, include_seq: true };
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
         session.explore_batch(&ks, &devs, &limits).unwrap();
         assert_eq!(session.metrics().sweeps.get(), 2);
-        // 4 points × 2 devices
-        assert_eq!(session.metrics().jobs.get(), 8);
+        // 6 points (2 pipe + 2 comb + 2 seq) × 2 devices
+        assert_eq!(session.metrics().jobs.get(), 12);
     }
 }

@@ -142,6 +142,10 @@ pub fn evaluate_lowered(
     db: &CostDb,
 ) -> Result<Candidate, String> {
     let module = frontend::lower_point(lk, point)?;
+    // A degenerate chained point lowers to the identical unchained
+    // module; report the point the module actually realises, so no
+    // candidate label claims a call chain that does not exist.
+    let point = frontend::lower::realised_point(&module, point);
     let estimate = estimator::estimate_with_db(&module, dev, db)?;
     let walls = walls::check(&module, &estimate, dev);
     Ok(Candidate { point, module, estimate, walls })
@@ -160,30 +164,38 @@ mod tests {
     #[test]
     fn explores_simple_kernel_and_picks_lanes() {
         let r = explore(&simple(), &Device::stratix4(), &SweepLimits::default()).unwrap();
-        assert_eq!(r.candidates.len(), 10); // 5 lane steps + 5 dv steps
+        assert_eq!(r.candidates.len(), 15); // 5 lane + 5 comb + 5 dv steps
         let best = r.best.unwrap();
-        // On the big device the paper's preferred region is C1 (Fig 3
-        // commentary). Beyond 4 lanes the IO wall flattens EWGT (Fig 4),
-        // so the DSE picks the cheapest configuration at the wall.
-        assert_eq!(best.label, "pipe×4", "{best:?}");
+        // On the big device the paper's preferred region is the
+        // replicated-core plane (Fig 3 commentary). Beyond 4 replicas
+        // the IO wall flattens EWGT (Fig 4), so the DSE picks the
+        // cheapest configuration at the wall — ×4 of either streaming
+        // style (pipe×4 and comb×4 tie exactly at the clipped value).
+        assert!(best.label.ends_with("×4"), "{best:?}");
         // wall-clipped EWGT: io bandwidth / bytes-per-workgroup
         let dev = Device::stratix4();
-        let c4 = r.candidates.iter().find(|c| c.point.label() == "pipe×4").unwrap();
-        assert!(c4.walls.io_utilisation > 1.0, "{:?}", c4.walls);
-        assert!((best.ewgt - dev.io_bytes_per_sec / walls::bytes_per_workgroup(&c4.module)).abs() < 1.0);
+        let cb = r.candidates.iter().find(|c| c.point.label() == best.label).unwrap();
+        assert!(cb.walls.io_utilisation > 1.0, "{:?}", cb.walls);
+        assert!((best.ewgt - dev.io_bytes_per_sec / walls::bytes_per_workgroup(&cb.module)).abs() < 1.0);
+        // the pipeline point at the wall is clipped to the same value
+        let p4 = r.candidates.iter().find(|c| c.point.label() == "pipe×4").unwrap();
+        assert!(p4.walls.io_utilisation > 1.0, "{:?}", p4.walls);
     }
 
     #[test]
     fn small_device_clips_lane_count() {
         let big = explore(&simple(), &Device::stratix4(), &SweepLimits::default()).unwrap();
         let small = explore(&simple(), &Device::cyclone4(), &SweepLimits::default()).unwrap();
-        let lanes = |e: &Exploration| {
+        // replicas from a `style×N[+chain]` label
+        let replicas = |e: &Exploration| {
             e.best
                 .as_ref()
-                .map(|b| b.label.trim_start_matches("pipe×").parse::<u64>().unwrap_or(1))
+                .and_then(|b| b.label.split('×').nth(1))
+                .and_then(|s| s.split('+').next())
+                .and_then(|s| s.parse::<u64>().ok())
                 .unwrap_or(0)
         };
-        assert!(lanes(&small) < lanes(&big), "{:?} vs {:?}", small.best, big.best);
+        assert!(replicas(&small) < replicas(&big), "{:?} vs {:?}", small.best, big.best);
     }
 
     #[test]
@@ -199,7 +211,8 @@ mod tests {
     #[test]
     fn sor_explores_cleanly() {
         let k = parse_kernel(sor_kernel_source()).unwrap();
-        let r = explore(&k, &Device::stratix4(), &SweepLimits { max_lanes: 4, max_dv: 4, pow2_only: true, include_seq: true }).unwrap();
+        let limits = SweepLimits { max_lanes: 4, max_dv: 4, ..SweepLimits::default() };
+        let r = explore(&k, &Device::stratix4(), &limits).unwrap();
         assert!(r.best.is_some());
         // pipelines dominate sequential for the stencil too
         assert_eq!(
@@ -233,15 +246,20 @@ mod tests {
         // §3 observation: "re-use of logic resources is possible for
         // larger kernels by cycling through some instructions in a
         // scalar fashion" — the sequential PE fits where the spatial
-        // pipeline cannot.
-        let full = SweepLimits { max_lanes: 1, max_dv: 1, pow2_only: true, include_seq: true };
+        // pipeline (and the equally ALUT-hungry comb core) cannot.
+        let full = SweepLimits { max_lanes: 1, max_dv: 1, ..SweepLimits::default() };
         let r = explore(&k, &dev, &full).unwrap();
         let best = r.best.expect("seq PE must fit");
         assert!(best.label.starts_with("seq"), "{best:?}");
 
-        // Restricted to the pipeline plane (C1), nothing fits — the DSE
-        // falls back to C6: run-time reconfiguration.
-        let pipes = SweepLimits { max_lanes: 1, max_dv: 1, pow2_only: true, include_seq: false };
+        // Restricted to the streaming planes (C1/C3), nothing fits — the
+        // DSE falls back to C6: run-time reconfiguration.
+        let pipes = SweepLimits {
+            max_lanes: 1,
+            max_dv: 1,
+            include_seq: false,
+            ..SweepLimits::default()
+        };
         let r = explore(&k, &dev, &pipes).unwrap();
         assert!(r.candidates.iter().all(|c| !c.walls.feasible()), "kernel unexpectedly fits");
         let best = r.best.expect("C6 fallback must deploy");

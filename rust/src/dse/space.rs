@@ -1,8 +1,8 @@
 //! The design-space abstraction (paper Fig 3): enumerate candidate
-//! configurations of a kernel along the two replication axes (pipeline
-//! lanes; vector PEs) plus the pipeline/sequential style choice, with
-//! C6 (multi-configuration with run-time reconfiguration) modelled at
-//! the DSE level.
+//! configurations of a kernel along the replication axes (pipeline
+//! lanes; comb cores; vector PEs) plus the pipe/comb/seq style choice
+//! and the comb call-chain structure axis, with C6 (multi-configuration
+//! with run-time reconfiguration) modelled at the DSE level.
 
 use crate::frontend::{DesignPoint, Style};
 
@@ -19,17 +19,34 @@ pub struct SweepLimits {
     /// the custom-pipeline plane (the paper's requirement 1: "a
     /// particular focus on custom pipelines … the C1 plane").
     pub include_seq: bool,
+    /// Include the comb/par (C3) plane: replicated single-cycle cores,
+    /// no pipelining (`P = 1`). On by default — it is part of the
+    /// paper's Fig 3 space and now reachable from the front end.
+    pub include_comb: bool,
+    /// Additionally enumerate each point's comb-call-chain variant
+    /// (same function, datapath split into a `comb` prefix callee).
+    /// Off by default: the chain axis changes module structure, not the
+    /// estimation-space position, so sweeps only pay for it on request
+    /// (`--chain`; the conformance harness always covers it).
+    pub include_chain: bool,
 }
 
 impl Default for SweepLimits {
     fn default() -> Self {
-        SweepLimits { max_lanes: 16, max_dv: 16, pow2_only: true, include_seq: true }
+        SweepLimits {
+            max_lanes: 16,
+            max_dv: 16,
+            pow2_only: true,
+            include_seq: true,
+            include_comb: true,
+            include_chain: false,
+        }
     }
 }
 
-/// Enumerate the design-space points to evaluate (paper Fig 3: the C2→C1
-/// pipeline axis and the C4→C5 sequential axis; C3 arises when the
-/// datapath is single-stage, C0/C6 are handled by the explorer).
+/// Enumerate the design-space points to evaluate (paper Fig 3: the
+/// C2→C1 pipeline axis, the C3 comb/par plane, and the C4→C5 sequential
+/// axis; C0/C6 are handled by the explorer).
 pub fn enumerate(limits: &SweepLimits) -> Vec<DesignPoint> {
     let mut out = Vec::new();
     let steps = |max: u64| -> Vec<u64> {
@@ -43,12 +60,21 @@ pub fn enumerate(limits: &SweepLimits) -> Vec<DesignPoint> {
         }
     };
     for l in steps(limits.max_lanes) {
-        out.push(DesignPoint { style: Style::Pipe, lanes: l, dv: 1 });
+        out.push(DesignPoint { style: Style::Pipe, lanes: l, dv: 1, chain: false });
+    }
+    if limits.include_comb {
+        for l in steps(limits.max_lanes) {
+            out.push(DesignPoint { style: Style::Comb, lanes: l, dv: 1, chain: false });
+        }
     }
     if limits.include_seq {
         for d in steps(limits.max_dv) {
-            out.push(DesignPoint { style: Style::Seq, lanes: 1, dv: d });
+            out.push(DesignPoint { style: Style::Seq, lanes: 1, dv: d, chain: false });
         }
+    }
+    if limits.include_chain {
+        let base: Vec<DesignPoint> = out.clone();
+        out.extend(base.into_iter().map(DesignPoint::chained));
     }
     out
 }
@@ -63,13 +89,48 @@ mod tests {
         let lanes: Vec<u64> =
             pts.iter().filter(|p| p.style == Style::Pipe).map(|p| p.lanes).collect();
         assert_eq!(lanes, vec![1, 2, 4, 8, 16]);
+        let combs: Vec<u64> =
+            pts.iter().filter(|p| p.style == Style::Comb).map(|p| p.lanes).collect();
+        assert_eq!(combs, vec![1, 2, 4, 8, 16]);
         let dvs: Vec<u64> = pts.iter().filter(|p| p.style == Style::Seq).map(|p| p.dv).collect();
         assert_eq!(dvs, vec![1, 2, 4, 8, 16]);
+        assert!(pts.iter().all(|p| !p.chain), "chain axis is opt-in");
+        assert_eq!(pts.len(), 15);
     }
 
     #[test]
     fn dense_enumeration() {
-        let pts = enumerate(&SweepLimits { max_lanes: 3, max_dv: 2, pow2_only: false, include_seq: true });
+        let pts = enumerate(&SweepLimits {
+            max_lanes: 3,
+            max_dv: 2,
+            pow2_only: false,
+            include_seq: true,
+            include_comb: true,
+            include_chain: false,
+        });
+        // 3 pipe + 3 comb + 2 seq
+        assert_eq!(pts.len(), 8);
+    }
+
+    #[test]
+    fn chain_axis_doubles_the_space() {
+        let base = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
+        let with_chain = SweepLimits { include_chain: true, ..base };
+        let plain = enumerate(&base);
+        let chained = enumerate(&with_chain);
+        assert_eq!(chained.len(), 2 * plain.len());
+        assert_eq!(chained.iter().filter(|p| p.chain).count(), plain.len());
+    }
+
+    #[test]
+    fn planes_can_be_disabled() {
+        let pipes_only = SweepLimits {
+            include_seq: false,
+            include_comb: false,
+            ..SweepLimits::default()
+        };
+        let pts = enumerate(&pipes_only);
+        assert!(pts.iter().all(|p| p.style == Style::Pipe));
         assert_eq!(pts.len(), 5);
     }
 }

@@ -106,12 +106,33 @@ fn narrow(g: &mut Dfg, out_width: u32) {
             g.widths[id] = w;
             let operand_demand = |arg_idx: usize| -> u32 {
                 match op {
-                    Op::Add | Op::Sub | Op::Mul | Op::Shl | Op::And | Op::Or | Op::Xor => w,
+                    Op::Add | Op::Sub | Op::Mul | Op::And | Op::Or | Op::Xor => w,
+                    // Left shift: the result's low `w` bits depend only on
+                    // the value's low `w` bits — but the *amount* operand
+                    // must never narrow (a truncated runtime amount shifts
+                    // by the wrong distance).
+                    Op::Shl => {
+                        if arg_idx == 0 {
+                            w
+                        } else {
+                            64
+                        }
+                    }
                     Op::Lshr => {
                         if arg_idx == 0 {
                             let s = match &g.nodes[args[1]] {
                                 Node::Lit(v) if *v >= 0 => *v as u32,
-                                _ => 0,
+                                // Variable shift: any amount the shift
+                                // operand can encode may move high bits
+                                // into the demanded window, so demand the
+                                // worst case `w + s_max` (capped at the 6
+                                // bits a ≤64-bit value can meaningfully
+                                // shift by; the `.min(forward width)`
+                                // below keeps it exact). Demanding only
+                                // `w` here narrowed the value operand so
+                                // a runtime shift pulled in zeros where
+                                // real bits belonged.
+                                _ => (1u32 << g.widths[args[1]].min(6)) - 1,
                             };
                             w.saturating_add(s)
                         } else {
@@ -333,6 +354,61 @@ mod tests {
         .unwrap();
         let g = build(&narrow).unwrap();
         assert_eq!(g.widths[g.root], 18);
+    }
+
+    #[test]
+    fn variable_shift_demand_keeps_shifted_out_bits() {
+        // `(a*a) >> (b & 15)`: the product's low 18 bits are NOT enough
+        // when the shift amount is a runtime value — demand must grow by
+        // the worst-case shift, keeping the full 36-bit product.
+        let k = parse_kernel(
+            "kernel t { in a, b : ui18[64]\nout y : ui18[64]\nfor n in 0..64 { y[n] = (a[n] * a[n]) >> (b[n] & 15) } }",
+        )
+        .unwrap();
+        let g = build(&k).unwrap();
+        let pre_shift = match &g.nodes[g.root] {
+            Node::Op { op: Op::Lshr, args, .. } => args[0],
+            other => panic!("{other:?}"),
+        };
+        assert!(matches!(g.nodes[pre_shift], Node::Op { op: Op::Mul, .. }));
+        assert_eq!(g.widths[pre_shift], 36, "variable shift must not narrow the product");
+        // …while a literal shift still narrows exactly (18 + 4 = 22).
+        let k = parse_kernel(
+            "kernel t { in a : ui18[64]\nout y : ui18[64]\nfor n in 0..64 { y[n] = (a[n] * a[n]) >> 4 } }",
+        )
+        .unwrap();
+        let g = build(&k).unwrap();
+        let pre_shift = match &g.nodes[g.root] {
+            Node::Op { op: Op::Lshr, args, .. } => args[0],
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(g.widths[pre_shift], 22);
+    }
+
+    #[test]
+    fn variable_shift_amount_operand_is_never_narrowed() {
+        // `a << (b & 7)` with a ui4 output: the demanded result width (4)
+        // must NOT narrow the computed shift amount — a ui4-truncated
+        // amount turns a shift by 4..7 into a shift by 0..3. The amount
+        // node keeps its full inferred width; only the value narrows.
+        let k = parse_kernel(
+            "kernel t { in a, b : ui18[64]\nout y : ui4[64]\nfor n in 0..64 { y[n] = a[n] << (b[n] & 7) } }",
+        )
+        .unwrap();
+        let g = build(&k).unwrap();
+        let amount = match &g.nodes[g.root] {
+            Node::Op { op: Op::Shl, args, .. } => args[1],
+            other => panic!("{other:?}"),
+        };
+        assert!(matches!(g.nodes[amount], Node::Op { op: Op::And, .. }));
+        assert_eq!(g.widths[amount], 18, "shift amount must keep its full width");
+        // …and the shifted value narrows to the demanded 4 bits.
+        let value = match &g.nodes[g.root] {
+            Node::Op { op: Op::Shl, args, .. } => args[0],
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(g.widths[value], 18); // leaf tap: unchanged
+        assert_eq!(g.widths[g.root], 4);
     }
 
     #[test]

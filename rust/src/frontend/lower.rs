@@ -1,15 +1,37 @@
 //! Lowering: kernel DFG → TIR module at a chosen design-space point.
 //!
 //! This is the generator the paper's Fig 1 front-end would drive: one
-//! kernel, many TIR variants (the C1/C2/C4/C5 configurations of §6),
-//! each of which the estimator can place in the estimation space. The
-//! generated modules follow the same conventions as the hand-written
-//! paper listings (`tir::examples`), so the simulator, estimator,
-//! synthesis model and HDL backend treat them identically.
+//! kernel, many TIR variants (the C1–C5 configurations of §6), each of
+//! which the estimator can place in the estimation space. The generated
+//! modules follow the same conventions as the hand-written paper
+//! listings (`tir::examples`), so the simulator, estimator, synthesis
+//! model and HDL backend treat them identically.
+//!
+//! Lowering is an explicit **pass pipeline** (the LLHD/HIR lesson:
+//! staged passes over one canonical form, not ad-hoc per-backend
+//! walks):
+//!
+//! 1. **analyze** ([`analyze_kernel`]) — DFG build, exact width
+//!    inference, demand narrowing and instruction-template rendering;
+//!    runs once per kernel, independent of the design point.
+//! 2. **variant-expand** ([`plan_variant`]) — map a [`DesignPoint`] to a
+//!    concrete [`VariantPlan`]: replica count, leaf execution kind and
+//!    (for chained points) where the datapath splits into a callee.
+//! 3. **inline / alpha-rename** (`emit_datapath`) — materialise the
+//!    datapath functions. A chained plan emits a `comb` prefix function
+//!    whose parameters are *freshly named* (`h<i>` instead of `t<i>`)
+//!    and rewrites the prefix instructions accordingly — the call site
+//!    then exercises real argument-to-parameter wiring in every
+//!    downstream consumer (the HDL emitters' per-call-site
+//!    alpha-renaming in particular), instead of the old correct-only-
+//!    by-same-name convention.
+//! 4. **leaf-select** — the leaf function kind (`pipe`/`seq`/`comb`)
+//!    and the matching wrapper shape are fixed and the module is
+//!    assembled.
 
 use super::dfg::{self, Node};
 use super::lang::KernelDef;
-use crate::tir::builder::ModuleBuilder;
+use crate::tir::builder::{FuncBuilder, ModuleBuilder};
 use crate::tir::{Kind, Module, Op, Ty};
 
 /// How the datapath is realised (the paper's design-space axes).
@@ -19,49 +41,69 @@ pub enum Style {
     Pipe,
     /// Sequential instruction processor (C4; C5 when `dv > 1`).
     Seq,
+    /// Single-cycle combinatorial core (C3; replicated when
+    /// `lanes > 1` — the paper's "no pipeline parallelism, P = 1").
+    Comb,
 }
 
 /// A point in the design space (Fig 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct DesignPoint {
     pub style: Style,
-    /// Pipeline lanes (`L`); meaningful for `Style::Pipe`.
+    /// Replicated cores (`L`); meaningful for `Style::Pipe` (pipeline
+    /// lanes) and `Style::Comb` (comb cores).
     pub lanes: u64,
     /// Vectorisation degree (`D_v`); meaningful for `Style::Seq`.
     pub dv: u64,
+    /// Split the datapath into a `comb` prefix function called by the
+    /// leaf (a mixed call chain): same function, different module
+    /// structure — the shape that exercises callee-body emission and
+    /// per-call-site alpha-renaming in every backend.
+    pub chain: bool,
 }
 
 impl DesignPoint {
     /// Single pipeline (C2).
     pub fn c2() -> DesignPoint {
-        DesignPoint { style: Style::Pipe, lanes: 1, dv: 1 }
+        DesignPoint { style: Style::Pipe, lanes: 1, dv: 1, chain: false }
     }
     /// Replicated pipelines (C1).
     pub fn c1(lanes: u64) -> DesignPoint {
-        DesignPoint { style: Style::Pipe, lanes, dv: 1 }
+        DesignPoint { style: Style::Pipe, lanes, dv: 1, chain: false }
+    }
+    /// Replicated single-cycle comb cores (C3).
+    pub fn c3(lanes: u64) -> DesignPoint {
+        DesignPoint { style: Style::Comb, lanes, dv: 1, chain: false }
     }
     /// Scalar sequential PE (C4).
     pub fn c4() -> DesignPoint {
-        DesignPoint { style: Style::Seq, lanes: 1, dv: 1 }
+        DesignPoint { style: Style::Seq, lanes: 1, dv: 1, chain: false }
     }
     /// Vectorised sequential PEs (C5).
     pub fn c5(dv: u64) -> DesignPoint {
-        DesignPoint { style: Style::Seq, lanes: 1, dv }
+        DesignPoint { style: Style::Seq, lanes: 1, dv, chain: false }
+    }
+    /// The same point with the datapath split into a comb call chain.
+    pub fn chained(mut self) -> DesignPoint {
+        self.chain = true;
+        self
     }
     /// Replication degree (lanes or PEs) of this point.
     pub fn replicas(&self) -> u64 {
         match self.style {
-            Style::Pipe => self.lanes.max(1),
+            Style::Pipe | Style::Comb => self.lanes.max(1),
             Style::Seq => self.dv.max(1),
         }
     }
-    /// Short label (`pipe×4`, `seq×2`).
+    /// Short label (`pipe×4`, `seq×2`, `comb×2`, `pipe×1+chain`).
     pub fn label(&self) -> String {
         let s = match self.style {
             Style::Pipe => "pipe",
             Style::Seq => "seq",
+            Style::Comb => "comb",
         };
-        format!("{s}×{}", self.replicas())
+        let chain = if self.chain { "+chain" } else { "" };
+        format!("{s}×{}{chain}", self.replicas())
     }
 }
 
@@ -82,7 +124,7 @@ pub struct LoweredKernel {
     pub taps: Vec<dfg::Tap>,
     /// Datapath instructions in emission order: (result, op, type,
     /// operand shorthands). Identical at every design point — only the
-    /// function *kind* differs.
+    /// function *kind* and call-chain split differ.
     instrs: Vec<InstrTemplate>,
 }
 
@@ -102,7 +144,7 @@ impl LoweredKernel {
     }
 }
 
-/// Run the once-per-kernel analysis: DFG build + width narrowing +
+/// Run the once-per-kernel analysis pass: DFG build + width narrowing +
 /// instruction template rendering.
 pub fn analyze_kernel(k: &KernelDef) -> Result<LoweredKernel, String> {
     let g = dfg::build(k)?;
@@ -189,13 +231,92 @@ pub fn analyze_kernel(k: &KernelDef) -> Result<LoweredKernel, String> {
     Ok(LoweredKernel { kernel: k.clone(), taps: g.taps, instrs })
 }
 
-/// The cheap per-point half of lowering: replay the pre-rendered
-/// templates into a module for one design point (streams/ports/wrapper
-/// per replica, function kind per style). No DFG work happens here.
+/// The variant-expand pass's output: everything `lower_point` needs to
+/// materialise one design point, resolved from the [`DesignPoint`] axes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct VariantPlan {
+    /// Leaf replica count (lanes or vector PEs).
+    replicas: usize,
+    /// Execution kind of the datapath leaf (the leaf-select decision).
+    leaf_kind: Kind,
+    /// Instruction index where the datapath splits into a `comb` prefix
+    /// callee; 0 = single-function datapath (no chain).
+    split_at: usize,
+}
+
+/// Variant-expand + leaf-select: map a design point onto a concrete
+/// module plan. A chained point degenerates to the unchained plan when
+/// the datapath is too small to split (the leaf must keep at least the
+/// root instruction).
+fn plan_variant(lk: &LoweredKernel, point: DesignPoint) -> VariantPlan {
+    let leaf_kind = match point.style {
+        Style::Pipe => Kind::Pipe,
+        Style::Seq => Kind::Seq,
+        Style::Comb => Kind::Comb,
+    };
+    let n = lk.instrs.len();
+    let mut split_at = if point.chain && n >= 2 { n / 2 } else { 0 };
+    let out = &lk.kernel.outputs[0];
+    if lk.instrs[..split_at].iter().any(|i| i.result == out.name) {
+        // The ostream-bound root must stay in the leaf.
+        split_at = 0;
+    }
+    VariantPlan { replicas: point.replicas().max(1) as usize, leaf_kind, split_at }
+}
+
+/// Name of the comb prefix function a chained plan emits. Public so
+/// downstream layers (the DSE candidate labelling) can detect whether a
+/// chained point actually realised its chain.
+pub const CHAIN_PREFIX_FN: &str = "f_pre";
+
+/// The design point a lowered module actually realises: a chained point
+/// whose datapath was too small to split degenerates to the unchained
+/// point (the module contains no [`CHAIN_PREFIX_FN`]), and must be
+/// reported as such.
+pub fn realised_point(module: &Module, point: DesignPoint) -> DesignPoint {
+    if point.chain && !module.funcs.contains_key(CHAIN_PREFIX_FN) {
+        DesignPoint { chain: false, ..point }
+    } else {
+        point
+    }
+}
+
+/// The cheap per-point half of lowering: run the variant-expand pass and
+/// replay the pre-rendered templates into a module for one design point
+/// (streams/ports/wrapper per replica, function kind per style, optional
+/// alpha-renamed comb call chain). No DFG work happens here.
 pub fn lower_point(lk: &LoweredKernel, point: DesignPoint) -> Result<Module, String> {
+    let plan = plan_variant(lk, point);
     let k = &lk.kernel;
-    let replicas = point.replicas().max(1) as usize;
-    let mut b = ModuleBuilder::new(format!("{}_{}", k.name, point.label().replace('×', "x")));
+    // A degenerate chained point (datapath too small to split) produces
+    // exactly the unchained module — name it as such, so the artifact
+    // never claims a call chain it does not contain.
+    let effective = if point.chain && plan.split_at == 0 {
+        DesignPoint { chain: false, ..point }
+    } else {
+        point
+    };
+    let name = effective.label().replace('×', "x").replace('+', "_");
+    let mut b = ModuleBuilder::new(format!("{}_{}", k.name, name));
+    emit_manage(&mut b, lk, plan.replicas);
+    emit_datapath(&mut b, lk, plan);
+    emit_wrapper(&mut b, lk, plan);
+    b.launch_call("main", k.iter);
+    b.finish().map_err(|e| e.to_string())
+}
+
+/// `_NN` replica suffix (empty for single-replica designs).
+fn suffix(replicas: usize, r: usize) -> String {
+    if replicas == 1 {
+        String::new()
+    } else {
+        format!("_{:02}", r + 1)
+    }
+}
+
+/// Manage-IR emission: constants, memories, streams, ports, counters.
+fn emit_manage(b: &mut ModuleBuilder, lk: &LoweredKernel, replicas: usize) {
+    let k = &lk.kernel;
 
     // --- constants -------------------------------------------------------
     for (name, ty, v) in &k.consts {
@@ -208,10 +329,9 @@ pub fn lower_point(lk: &LoweredKernel, point: DesignPoint) -> Result<Module, Str
     }
 
     // --- streams + ports per replica ---------------------------------------
-    let suffix = |r: usize| if replicas == 1 { String::new() } else { format!("_{:02}", r + 1) };
     let out = &k.outputs[0];
     for r in 0..replicas {
-        let sfx = suffix(r);
+        let sfx = suffix(replicas, r);
         // one source stream per input array per replica
         for a in &k.inputs {
             b.source_stream(format!("str_{}{}", a.name, sfx), format!("mem_{}", a.name));
@@ -239,39 +359,77 @@ pub fn lower_point(lk: &LoweredKernel, point: DesignPoint) -> Result<Module, Str
         let (ref nv, lo, hi) = k.loops[0];
         b.counter(format!("ctr_{nv}"), lo, hi - 1, None);
     }
+}
 
-    // --- datapath function -----------------------------------------------------
-    let kind = match point.style {
-        Style::Pipe => Kind::Pipe,
-        Style::Seq => Kind::Seq,
-    };
-    let mut fb = b.func("f_dp", kind);
+/// Inline/alpha-rename + leaf emission: materialise the datapath
+/// function(s) for the plan. A chained plan first emits the `comb`
+/// prefix with alpha-renamed parameters (`h<i>`), then the leaf, which
+/// calls it with its own `%t<i>` locals — argument names and parameter
+/// names deliberately differ at the call site.
+fn emit_datapath(b: &mut ModuleBuilder, lk: &LoweredKernel, plan: VariantPlan) {
+    if plan.split_at > 0 {
+        let ntaps = lk.taps.len();
+        let mut fb = b.func(CHAIN_PREFIX_FN, Kind::Comb);
+        for (t, tap) in lk.taps.iter().enumerate() {
+            fb = fb.param(format!("h{t}"), tap.ty);
+        }
+        for i in &lk.instrs[..plan.split_at] {
+            let renamed: Vec<String> =
+                i.operands.iter().map(|o| alpha_rename_tap(o, ntaps)).collect();
+            let refs: Vec<&str> = renamed.iter().map(String::as_str).collect();
+            fb = fb.instr(i.result.clone(), i.op, i.ty, &refs);
+        }
+        fb.finish();
+    }
+
+    let mut fb = b.func("f_dp", plan.leaf_kind);
     for (t, tap) in lk.taps.iter().enumerate() {
         fb = fb.param(format!("t{t}"), tap.ty);
     }
-    for i in &lk.instrs {
+    if plan.split_at > 0 {
+        let args: Vec<String> = (0..lk.taps.len()).map(|t| format!("%t{t}")).collect();
+        let refs: Vec<&str> = args.iter().map(String::as_str).collect();
+        fb = fb.call(CHAIN_PREFIX_FN, &refs, Some(Kind::Comb), 1);
+    }
+    for i in &lk.instrs[plan.split_at..] {
         let refs: Vec<&str> = i.operands.iter().map(String::as_str).collect();
         fb = fb.instr(i.result.clone(), i.op, i.ty, &refs);
     }
     fb.finish();
+}
 
-    // --- main wrapper ---------------------------------------------------------
+/// Alpha-rename a template operand for the chain prefix scope: tap
+/// locals `%t<i>` become the prefix's own `%h<i>` parameters; every
+/// other operand (SSA locals, constants, immediates) is scope-neutral.
+fn alpha_rename_tap(operand: &str, ntaps: usize) -> String {
+    if let Some(idx) = operand.strip_prefix("%t") {
+        if let Ok(t) = idx.parse::<usize>() {
+            if t < ntaps {
+                return format!("%h{t}");
+            }
+        }
+    }
+    operand.to_string()
+}
+
+/// Wrapper emission: `@main` calling the leaf once per replica.
+fn emit_wrapper(b: &mut ModuleBuilder, lk: &LoweredKernel, plan: VariantPlan) {
+    let replicas = plan.replicas;
+    let kind = plan.leaf_kind;
     if replicas == 1 {
         let args: Vec<String> = (0..lk.taps.len()).map(|t| format!("@main.t{t}")).collect();
         let refs: Vec<&str> = args.iter().map(String::as_str).collect();
         b.func("main", kind).call("f_dp", &refs, Some(kind), 1).finish();
     } else {
-        let mut mb = b.func("main", Kind::Par);
+        let mut mb: FuncBuilder<'_> = b.func("main", Kind::Par);
         for r in 0..replicas {
-            let sfx = suffix(r);
+            let sfx = suffix(replicas, r);
             let args: Vec<String> = (0..lk.taps.len()).map(|t| format!("@main.t{t}{sfx}")).collect();
             let refs: Vec<&str> = args.iter().map(String::as_str).collect();
             mb = mb.call("f_dp", &refs, Some(kind), 1);
         }
         mb.finish();
     }
-    b.launch_call("main", k.iter);
-    b.finish().map_err(|e| e.to_string())
 }
 
 /// Lower a kernel to TIR at a design point (one-shot convenience:
@@ -305,10 +463,24 @@ mod tests {
         parse_kernel(sor_kernel_source()).unwrap()
     }
 
+    fn all_points() -> Vec<DesignPoint> {
+        vec![
+            DesignPoint::c2(),
+            DesignPoint::c1(4),
+            DesignPoint::c3(1),
+            DesignPoint::c3(4),
+            DesignPoint::c4(),
+            DesignPoint::c5(4),
+            DesignPoint::c2().chained(),
+            DesignPoint::c3(2).chained(),
+            DesignPoint::c4().chained(),
+        ]
+    }
+
     #[test]
     fn lowers_all_design_points_validly() {
         for k in [simple(), sor()] {
-            for p in [DesignPoint::c2(), DesignPoint::c1(4), DesignPoint::c4(), DesignPoint::c5(4)] {
+            for p in all_points() {
                 let m = lower(&k, p).unwrap_or_else(|e| panic!("{} {:?}: {e}", k.name, p));
                 crate::tir::validate::require_synthesizable(&m).unwrap();
             }
@@ -320,13 +492,21 @@ mod tests {
         let cases = [
             (DesignPoint::c2(), ConfigClass::C2),
             (DesignPoint::c1(4), ConfigClass::C1),
+            (DesignPoint::c3(1), ConfigClass::C3),
+            (DesignPoint::c3(4), ConfigClass::C3),
             (DesignPoint::c4(), ConfigClass::C4),
             (DesignPoint::c5(4), ConfigClass::C5),
+            (DesignPoint::c2().chained(), ConfigClass::C2),
+            (DesignPoint::c3(2).chained(), ConfigClass::C3),
+            (DesignPoint::c4().chained(), ConfigClass::C4),
         ];
         for (p, want) in cases {
             let m = lower(&simple(), p).unwrap();
             let s = crate::estimator::analyze(&m).unwrap();
             assert_eq!(s.class, want, "{p:?}");
+            if p.style == Style::Comb {
+                assert_eq!(s.lanes, p.replicas(), "{p:?}");
+            }
         }
     }
 
@@ -398,6 +578,78 @@ mod tests {
     }
 
     #[test]
+    fn comb_point_matches_pipe_point_functionally() {
+        // The C3 comb/par plane computes the same function as the C2
+        // pipeline — and streams at one item per cycle after a 1-cycle
+        // fill, so it is marginally *faster* per pass in the cycle model.
+        let dev = Device::stratix4();
+        for k in [simple(), sor()] {
+            let mp = lower(&k, DesignPoint::c2()).unwrap();
+            let mc = lower(&k, DesignPoint::c3(1)).unwrap();
+            let out = format!("mem_{}", k.outputs[0].name);
+            let wp = Workload::random_for(&mp, 23);
+            let wc = Workload::random_for(&mc, 23);
+            let rp = sim::simulate(&mp, &dev, &wp).unwrap();
+            let rc = sim::simulate(&mc, &dev, &wc).unwrap();
+            assert_eq!(rp.mems[&out], rc.mems[&out], "{}", k.name);
+            assert!(rc.cycles_per_pass <= rp.cycles_per_pass, "{}", k.name);
+        }
+    }
+
+    #[test]
+    fn chained_points_match_unchained_functionally() {
+        // The chain split is pure structure: a comb prefix called by the
+        // leaf computes exactly what the single-function leaf does.
+        let dev = Device::stratix4();
+        for k in [simple(), sor()] {
+            let out = format!("mem_{}", k.outputs[0].name);
+            for base in [DesignPoint::c2(), DesignPoint::c3(2), DesignPoint::c4()] {
+                let mb = lower(&k, base).unwrap();
+                let mc = lower(&k, base.chained()).unwrap();
+                // the chained module really has the call chain
+                assert!(mc.funcs.contains_key(CHAIN_PREFIX_FN), "{} {:?}", k.name, base);
+                assert!(!mb.funcs.contains_key(CHAIN_PREFIX_FN));
+                let wb = Workload::random_for(&mb, 17);
+                let wc = Workload::random_for(&mc, 17);
+                let rb = sim::simulate(&mb, &dev, &wb).unwrap();
+                let rc = sim::simulate(&mc, &dev, &wc).unwrap();
+                assert_eq!(rb.mems[&out], rc.mems[&out], "{} {:?}", k.name, base);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_prefix_params_are_alpha_renamed() {
+        // The call site must pass `%t<i>` arguments to `%h<i>` parameters
+        // — argument and parameter names differ by construction, so the
+        // same-name aliasing convention cannot silently hold.
+        let m = lower(&simple(), DesignPoint::c2().chained()).unwrap();
+        let pre = &m.funcs[CHAIN_PREFIX_FN];
+        assert!(pre.params.iter().all(|(p, _)| p.starts_with('h')), "{:?}", pre.params);
+        let leaf = &m.funcs["f_dp"];
+        let call = m.calls_of(leaf).next().expect("leaf calls the prefix");
+        assert!(call
+            .args
+            .iter()
+            .all(|a| matches!(a, crate::tir::Operand::Local(n) if n.starts_with('t'))));
+    }
+
+    #[test]
+    fn chain_degenerates_when_datapath_is_too_small_to_split() {
+        let k = parse_kernel("kernel t { in a : ui18[16]\nout y : ui18[16]\nfor n in 0..16 { y[n] = a[n] } }")
+            .unwrap();
+        let m = lower(&k, DesignPoint::c2().chained()).unwrap();
+        // one-instruction datapath: the leaf keeps the root, no prefix —
+        // and the module is *identical* to the unchained point (name
+        // included), so nothing downstream mistakes it for a chain
+        assert!(!m.funcs.contains_key(CHAIN_PREFIX_FN));
+        assert_eq!(m, lower(&k, DesignPoint::c2()).unwrap());
+        let w = Workload::random_for(&m, 3);
+        let r = sim::simulate(&m, &Device::stratix4(), &w).unwrap();
+        assert_eq!(r.mems["mem_y"], w.mems["mem_a"]);
+    }
+
+    #[test]
     fn specialisation_replay_is_deterministic_and_reusable() {
         // One `LoweredKernel` replayed many times — across points and
         // repeatedly at the same point — must always produce the same
@@ -410,7 +662,7 @@ mod tests {
         for k in [simple(), sor()] {
             let shared = analyze_kernel(&k).unwrap();
             assert!(shared.instr_count() > 0);
-            for p in [DesignPoint::c2(), DesignPoint::c1(4), DesignPoint::c4(), DesignPoint::c5(2)] {
+            for p in all_points() {
                 let first = lower_point(&shared, p).unwrap();
                 let second = lower_point(&shared, p).unwrap();
                 let fresh = lower_point(&analyze_kernel(&k).unwrap(), p).unwrap();
@@ -428,5 +680,14 @@ mod tests {
         let w = Workload::random_for(&m, 3);
         let r = sim::simulate(&m, &Device::stratix4(), &w).unwrap();
         assert_eq!(r.mems["mem_y"], w.mems["mem_a"]);
+    }
+
+    #[test]
+    fn labels_and_module_names_are_identifier_safe() {
+        let p = DesignPoint::c3(2).chained();
+        assert_eq!(p.label(), "comb×2+chain");
+        let m = lower(&simple(), p).unwrap();
+        assert_eq!(m.name, "simple_combx2_chain");
+        assert!(m.name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'));
     }
 }

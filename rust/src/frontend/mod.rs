@@ -6,7 +6,10 @@
 //!   built-in sources);
 //! * [`dfg`] — dataflow-graph construction with exact width inference
 //!   and hash-consing;
-//! * [`lower`] — TIR generation for C1/C2/C4/C5 points.
+//! * [`lower`] — TIR generation for the full C1–C5 space (pipe lanes,
+//!   comb/par cores, sequential PEs, optional comb call chains), run as
+//!   an explicit pass pipeline (analyze → variant-expand →
+//!   inline/alpha-rename → leaf-select).
 
 pub mod dfg;
 pub mod lang;

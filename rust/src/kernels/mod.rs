@@ -25,14 +25,17 @@
 //! | `mavg3`    | 1-D window / 3          | restoring divider, no-narrow rule   |
 //! | `dot3`     | 1-D windowed dot (2 in) | variable muls → DSP pressure        |
 //! | `scale`    | 1-D affine map          | dense-const DSP, no-window plumbing |
+//! | `shadow`   | 1-D map + call chain    | per-call-site alpha-renaming        |
 
 pub mod dot;
 pub mod fir;
 pub mod jacobi;
 pub mod mavg;
 pub mod scale;
+pub mod shadow;
 
 use crate::frontend::{self, KernelDef};
+use crate::sim::DestInit;
 
 /// One library scenario: a named workload with its two source forms.
 #[derive(Debug, Clone, Copy)]
@@ -47,12 +50,24 @@ pub struct KernelScenario {
     /// memory names matching the lowering's `mem_<array>` convention so
     /// the same seeded [`crate::sim::Workload`] drives both.
     pub hand_tir: fn() -> String,
+    /// How this scenario's destination memories start (explicit per
+    /// kernel — the old `Workload::random_for` heuristic copied the
+    /// alphabetically first same-shape source, which made `dot3`'s
+    /// output silently start as a copy of `mem_a`).
+    pub dest_init: DestInit,
 }
 
 impl KernelScenario {
     /// Parse the front-end source into a kernel definition.
     pub fn parse(&self) -> Result<KernelDef, String> {
         frontend::parse_kernel(&(self.frontend)())
+    }
+
+    /// Seeded workload for a module of this scenario (hand-written or
+    /// lowered — identical memory names draw identical contents), using
+    /// the scenario's explicit destination-init spec.
+    pub fn workload(&self, m: &crate::tir::Module, seed: u64) -> Result<crate::sim::Workload, String> {
+        crate::sim::Workload::with_dest_init(m, seed, self.dest_init)
     }
 }
 
@@ -77,42 +92,56 @@ pub fn registry() -> Vec<KernelScenario> {
             about: "paper Table 1 three-input map (y = K + (a+b)*(c+c))",
             frontend: simple_frontend,
             hand_tir: simple_hand_tir,
+            dest_init: DestInit::Zero,
         },
         KernelScenario {
             name: "sor",
             about: "paper Table 2 five-point SOR stencil (Q14, 15 chained passes)",
             frontend: sor_frontend,
             hand_tir: sor_hand_tir,
+            dest_init: DestInit::CopyOf("p"),
         },
         KernelScenario {
             name: "jacobi2d",
             about: "Jacobi four-point smoother (shift-only datapath, 10 passes)",
             frontend: jacobi::source,
             hand_tir: jacobi::tir,
+            dest_init: DestInit::CopyOf("p"),
         },
         KernelScenario {
             name: "fir3",
             about: "3-tap FIR filter (sparse constant taps, shift-add lowering)",
             frontend: fir::source,
             hand_tir: fir::tir,
+            dest_init: DestInit::Zero,
         },
         KernelScenario {
             name: "mavg3",
             about: "3-point moving average (non-power-of-two divider)",
             frontend: mavg::source,
             hand_tir: mavg::tir,
+            dest_init: DestInit::Zero,
         },
         KernelScenario {
             name: "dot3",
             about: "sliding 3-point dot product of two streams (DSP-heavy)",
             frontend: dot::source,
             hand_tir: dot::tir,
+            dest_init: DestInit::Zero,
         },
         KernelScenario {
             name: "scale",
             about: "affine scale-and-offset map (dense constant multiply)",
             frontend: scale::source,
             hand_tir: scale::tir,
+            dest_init: DestInit::Zero,
+        },
+        KernelScenario {
+            name: "shadow",
+            about: "call-chain regression: callee parameter shadows a caller local",
+            frontend: shadow::source,
+            hand_tir: shadow::tir,
+            dest_init: DestInit::Zero,
         },
     ]
 }
@@ -162,11 +191,36 @@ mod tests {
 
     #[test]
     fn registry_has_the_acceptance_floor() {
-        // ISSUE 2 acceptance: SOR + ≥5 new workloads beyond the paper's.
+        // ISSUE 2 acceptance: SOR + ≥5 new workloads beyond the paper's;
+        // ISSUE 3 adds the shadowed-callee-param regression kernel.
         let names = names();
-        assert!(names.len() >= 7, "{names:?}");
-        for required in ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale"] {
+        assert!(names.len() >= 8, "{names:?}");
+        for required in ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow"] {
             assert!(names.contains(&required), "missing `{required}`");
+        }
+    }
+
+    #[test]
+    fn dot3_workload_spec_zeroes_the_output() {
+        // The old heuristic initialised dot3's `mem_y` as a copy of the
+        // alphabetically first same-shape source (`mem_a`); the explicit
+        // spec starts it clean while the sources stay seed-identical.
+        let sc = find("dot3").unwrap();
+        let m = crate::frontend::lower(&sc.parse().unwrap(), crate::frontend::DesignPoint::c2()).unwrap();
+        let heuristic = crate::sim::Workload::random_for(&m, 42);
+        assert_eq!(heuristic.mems["mem_y"], heuristic.mems["mem_a"], "the documented surprise");
+        let spec = sc.workload(&m, 42).unwrap();
+        assert_eq!(spec.mems["mem_a"], heuristic.mems["mem_a"]);
+        assert!(spec.mems["mem_y"].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn stencil_workload_specs_keep_boundary_passthrough() {
+        for name in ["sor", "jacobi2d"] {
+            let sc = find(name).unwrap();
+            let m = crate::tir::parse_and_validate(&(sc.hand_tir)()).unwrap();
+            let w = sc.workload(&m, 7).unwrap();
+            assert_eq!(w.mems["mem_p"], w.mems["mem_q"], "{name}: q must start as a copy of p");
         }
     }
 

@@ -370,6 +370,31 @@ mod model_tests {
     }
 
     #[test]
+    fn model_matches_simulator_on_runtime_shift_kernel() {
+        // Regression for the variable-shift demand-narrowing rule: a
+        // runtime shift amount must propagate demand `w + s_max` to the
+        // shifted value, or the narrowed datapath drops exactly the bits
+        // the shift pulls in — the golden model (exact i128) catches it.
+        let kernels = [
+            // right shift: demand must grow by the worst-case amount
+            "kernel rshift { in a, b : ui18[64]\nout y : ui18[64]\nfor n in 0..64 { y[n] = (a[n] * a[n]) >> (b[n] & 15) } }",
+            // left shift into a narrow output: the computed *amount*
+            // operand must never narrow to the demanded result width
+            "kernel lshift { in a, b : ui18[64]\nout y : ui4[64]\nfor n in 0..64 { y[n] = a[n] << (b[n] & 7) } }",
+        ];
+        for src in kernels {
+            let k = frontend::parse_kernel(src).unwrap();
+            for p in [DesignPoint::c2(), DesignPoint::c3(2), DesignPoint::c4(), DesignPoint::c2().chained()] {
+                let m = frontend::lower(&k, p).unwrap();
+                let w = Workload::random_for(&m, 91);
+                let r = sim::simulate(&m, &Device::stratix4(), &w).unwrap();
+                let rep = check_kernel_model(&k, &w.mems, &r.mems["mem_y"]).unwrap();
+                assert!(rep.ok(), "{} {p:?}: {rep:?}", k.name);
+            }
+        }
+    }
+
+    #[test]
     fn model_rejects_division_by_zero() {
         let k = frontend::parse_kernel(
             "kernel t { in a : ui18[4]\nout y : ui18[4]\nfor n in 0..4 { y[n] = a[n] / a[n] } }",

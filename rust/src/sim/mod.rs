@@ -32,16 +32,31 @@ pub struct Workload {
     pub seed: u64,
 }
 
+/// How a kernel's destination memories are initialised in a seeded
+/// workload. Library kernels declare this explicitly per scenario
+/// (`crate::kernels::KernelScenario::dest_init`), replacing
+/// [`Workload::random_for`]'s copy-the-alphabetically-first-same-shape
+/// -source heuristic (which surprised on multi-source kernels: `dot3`'s
+/// output silently started as a copy of `mem_a`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DestInit {
+    /// Zero-filled: pure maps, and windowed kernels whose boundary
+    /// cells are simply never written.
+    Zero,
+    /// Copy of the named source *array* (memory `mem_<array>`): stencil
+    /// boundary pass-through and `repeat` ping-pong chaining (SOR's `q`
+    /// starts as a copy of `p`).
+    CopyOf(&'static str),
+}
+
 impl Workload {
-    /// Deterministic random workload for a module: source memories get
-    /// uniform values masked to their element width; destination
-    /// memories start as a *copy of a matching source* when the design
-    /// uses offset taps (stencil boundary pass-through), else zeros.
-    pub fn random_for(m: &Module, seed: u64) -> Workload {
-        let mut rng = Prng::new(seed);
+    /// Seed every source memory (memories feeding at least one source
+    /// stream) with uniform values masked to the element width, in
+    /// memory-name order — the part every workload constructor shares,
+    /// so the same seed draws identical sources for the hand-written
+    /// and lowered forms of a kernel.
+    fn random_sources(m: &Module, rng: &mut Prng) -> MemState {
         let mut mems: MemState = BTreeMap::new();
-        let stencil = m.ports.values().any(|p| p.offset != 0);
-        // memories with at least one source stream
         let mut is_source: BTreeMap<&str, bool> = BTreeMap::new();
         for s in m.streams.values() {
             let e = is_source.entry(s.mem.as_str()).or_insert(false);
@@ -56,6 +71,21 @@ impl Workload {
                 mems.insert(mem.name.clone(), data);
             }
         }
+        mems
+    }
+
+    /// Deterministic random workload for a module: source memories get
+    /// uniform values masked to their element width; destination
+    /// memories start as a *copy of a matching source* when the design
+    /// uses offset taps (stencil boundary pass-through), else zeros.
+    ///
+    /// This is the spec-free fallback for arbitrary modules (random
+    /// kernels, user TIR files); library kernels carry an explicit
+    /// [`DestInit`] and go through [`Workload::with_dest_init`].
+    pub fn random_for(m: &Module, seed: u64) -> Workload {
+        let mut rng = Prng::new(seed);
+        let mut mems = Self::random_sources(m, &mut rng);
+        let stencil = m.ports.values().any(|p| p.offset != 0);
         for mem in m.mems.values() {
             if mems.contains_key(&mem.name) {
                 continue;
@@ -73,6 +103,45 @@ impl Workload {
             mems.insert(mem.name.clone(), init);
         }
         Workload { mems, seed }
+    }
+
+    /// Deterministic random workload with an explicit destination-init
+    /// spec: sources exactly as [`Workload::random_for`] (same seed ⇒
+    /// same sources), destinations per `init` — no shape-matching
+    /// guesswork.
+    pub fn with_dest_init(m: &Module, seed: u64, init: DestInit) -> Result<Workload, String> {
+        let mut rng = Prng::new(seed);
+        let mut mems = Self::random_sources(m, &mut rng);
+        for mem in m.mems.values() {
+            if mems.contains_key(&mem.name) {
+                continue;
+            }
+            let data = match init {
+                DestInit::Zero => vec![0; mem.elems as usize],
+                DestInit::CopyOf(array) => {
+                    let key = format!("mem_{array}");
+                    let src = mems.get(&key).ok_or_else(|| {
+                        format!(
+                            "workload spec: destination `{}` copies `{key}`, which is not a \
+                             seeded source memory of this module",
+                            mem.name
+                        )
+                    })?;
+                    if src.len() != mem.elems as usize {
+                        return Err(format!(
+                            "workload spec: destination `{}` ({} elems) cannot copy `{key}` \
+                             ({} elems)",
+                            mem.name,
+                            mem.elems,
+                            src.len()
+                        ));
+                    }
+                    src.clone()
+                }
+            };
+            mems.insert(mem.name.clone(), data);
+        }
+        Ok(Workload { mems, seed })
     }
 }
 
@@ -143,6 +212,21 @@ mod tests {
         for j in 0..18 {
             assert_eq!(r.mems["mem_q"][j], w.mems["mem_p"][j]);
         }
+    }
+
+    #[test]
+    fn dest_init_spec_replaces_the_copy_heuristic() {
+        // SOR with an explicit CopyOf("p") spec matches the heuristic…
+        let m = parse_and_validate(&examples::fig15_sor_default()).unwrap();
+        let spec = Workload::with_dest_init(&m, 9, DestInit::CopyOf("p")).unwrap();
+        assert_eq!(spec.mems, Workload::random_for(&m, 9).mems);
+        // …a Zero spec starts the destination clean (same sources)…
+        let zero = Workload::with_dest_init(&m, 9, DestInit::Zero).unwrap();
+        assert_eq!(zero.mems["mem_p"], spec.mems["mem_p"]);
+        assert!(zero.mems["mem_q"].iter().all(|&v| v == 0));
+        // …and a dangling copy target is an error, not a silent guess.
+        let e = Workload::with_dest_init(&m, 9, DestInit::CopyOf("nope")).unwrap_err();
+        assert!(e.contains("mem_nope"), "{e}");
     }
 
     #[test]

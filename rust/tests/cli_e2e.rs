@@ -47,8 +47,8 @@ fn config_file_drives_dse() {
     std::fs::write(&cfg, "device = \"cyclone4\"\njobs = 2\n[sweep]\nmax_lanes = 4\nmax_dv = 2\n").unwrap();
     let out = dispatch(&args(&format!("dse builtin:simple --config {}", cfg.display()))).unwrap();
     assert!(out.contains("CycloneIV"), "{out}");
-    // 3 lane steps + 2 dv steps = 5 points
-    assert!(out.contains("(5 points"), "{out}");
+    // 3 lane steps + 3 comb steps + 2 dv steps = 8 points
+    assert!(out.contains("(8 points"), "{out}");
 }
 
 #[test]
@@ -80,8 +80,8 @@ fn sweep_covers_the_whole_kernel_library() {
         "sweep builtin:all --devices stratix4 --jobs 2 --max-lanes 2 --max-dv 2",
     ))
     .unwrap();
-    assert!(out.contains("7 kernel(s) × 1 device(s)"), "{out}");
-    for name in ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale"] {
+    assert!(out.contains("8 kernel(s) × 1 device(s)"), "{out}");
+    for name in ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow"] {
         assert!(out.contains(name), "missing `{name}` in:\n{out}");
     }
 }

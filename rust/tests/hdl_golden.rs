@@ -47,7 +47,12 @@ fn check_snapshot(name: &str, content: &str) {
 fn lowered_kernels_emit_deterministic_snapshotted_verilog() {
     for sc in kernels::registry() {
         let k = sc.parse().unwrap();
-        for (suffix, point) in [("c2", DesignPoint::c2()), ("c1x2", DesignPoint::c1(2))] {
+        for (suffix, point) in [
+            ("c2", DesignPoint::c2()),
+            ("c1x2", DesignPoint::c1(2)),
+            ("c3x2", DesignPoint::c3(2)),
+            ("c2chain", DesignPoint::c2().chained()),
+        ] {
             let m = frontend::lower(&k, point).unwrap();
             let v1 = hdl::generate_verilog(&m).unwrap();
             let v2 = hdl::generate_verilog(&m).unwrap();
@@ -76,15 +81,32 @@ fn hand_tir_emits_deterministic_snapshotted_verilog() {
 fn emitted_verilog_passes_the_structural_scan() {
     // The conformance harness's structural invariants, applied to every
     // snapshot candidate directly (so this test fails even when the
-    // snapshot was just (re-)blessed).
+    // snapshot was just (re-)blessed) — including the C3 comb/par and
+    // call-chain shapes, and the acceptance criterion that no snapshot
+    // instantiates a module the emitter never defined.
     for sc in kernels::registry() {
         let k = sc.parse().unwrap();
-        let m = frontend::lower(&k, DesignPoint::c2()).unwrap();
-        let v = hdl::generate_verilog(&m).unwrap();
-        let missing = tytra::conformance::undeclared_locals(&v);
-        assert!(missing.is_empty(), "{}: undeclared locals {missing:?}", sc.name);
-        let opens = v.lines().filter(|l| l.starts_with("module ")).count();
-        let closes = v.lines().filter(|l| l.trim() == "endmodule").count();
-        assert_eq!(opens, closes, "{}: unbalanced modules", sc.name);
+        for point in [
+            DesignPoint::c2(),
+            DesignPoint::c3(2),
+            DesignPoint::c2().chained(),
+            DesignPoint::c4().chained(),
+        ] {
+            let m = frontend::lower(&k, point).unwrap();
+            let v = hdl::generate_verilog(&m).unwrap();
+            let missing = tytra::conformance::undeclared_locals(&v);
+            assert!(missing.is_empty(), "{} {point:?}: undeclared locals {missing:?}", sc.name);
+            let undefined = tytra::conformance::undefined_module_instantiations(&v);
+            assert!(undefined.is_empty(), "{} {point:?}: undefined modules {undefined:?}", sc.name);
+            let opens = v.lines().filter(|l| l.starts_with("module ")).count();
+            let closes = v.lines().filter(|l| l.trim() == "endmodule").count();
+            assert_eq!(opens, closes, "{}: unbalanced modules", sc.name);
+        }
+        // hand-written listings go through the same scans (the shadow
+        // kernel's call chain lives here)
+        let hm = tir::parse_and_validate(&(sc.hand_tir)()).unwrap();
+        let v = hdl::generate_verilog(&hm).unwrap();
+        assert!(tytra::conformance::undeclared_locals(&v).is_empty(), "{} hand", sc.name);
+        assert!(tytra::conformance::undefined_module_instantiations(&v).is_empty(), "{} hand", sc.name);
     }
 }

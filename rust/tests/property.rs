@@ -43,8 +43,16 @@ fn all_design_points_compute_the_same_function() {
             Ok(k) => k,
             Err(e) => panic!("generated kernel must parse: {e}\n{src}"),
         };
-        let points =
-            [DesignPoint::c2(), DesignPoint::c1(2), DesignPoint::c1(4), DesignPoint::c4(), DesignPoint::c5(2)];
+        let points = [
+            DesignPoint::c2(),
+            DesignPoint::c1(2),
+            DesignPoint::c1(4),
+            DesignPoint::c3(2),
+            DesignPoint::c4(),
+            DesignPoint::c5(2),
+            DesignPoint::c2().chained(),
+            DesignPoint::c4().chained(),
+        ];
         let mut reference: Option<Vec<u64>> = None;
         for p in points {
             let m = match frontend::lower(&k, p) {
@@ -78,7 +86,7 @@ fn pretty_print_roundtrips_generated_modules() {
     for case in 0..CASES {
         let src = random_kernel(&mut rng, case);
         let k = frontend::parse_kernel(&src).unwrap();
-        for p in [DesignPoint::c2(), DesignPoint::c1(2), DesignPoint::c4()] {
+        for p in [DesignPoint::c2(), DesignPoint::c1(2), DesignPoint::c3(2), DesignPoint::c4(), DesignPoint::c2().chained()] {
             let Ok(m) = frontend::lower(&k, p) else { continue };
             let text = tir::pretty::print(&m);
             let m2 = tir::parse_and_validate(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
@@ -102,7 +110,14 @@ fn parser_pretty_parser_is_fixed_point_for_library_tir() {
     for sc in tytra::kernels::registry() {
         listings.push((format!("{}-hand", sc.name), (sc.hand_tir)()));
         let k = sc.parse().unwrap();
-        for p in [DesignPoint::c2(), DesignPoint::c1(2), DesignPoint::c4()] {
+        for p in [
+            DesignPoint::c2(),
+            DesignPoint::c1(2),
+            DesignPoint::c3(2),
+            DesignPoint::c4(),
+            DesignPoint::c2().chained(),
+            DesignPoint::c4().chained(),
+        ] {
             let m = frontend::lower(&k, p).unwrap();
             listings.push((format!("{}-{}", sc.name, p.label()), tir::pretty::print(&m)));
         }
@@ -130,7 +145,7 @@ fn actual_cycles_bound_estimated_cycles() {
     for case in 0..CASES {
         let src = random_kernel(&mut rng, case);
         let k = frontend::parse_kernel(&src).unwrap();
-        for p in [DesignPoint::c2(), DesignPoint::c1(4), DesignPoint::c4()] {
+        for p in [DesignPoint::c2(), DesignPoint::c1(4), DesignPoint::c3(4), DesignPoint::c4()] {
             let Ok(m) = frontend::lower(&k, p) else { continue };
             let e = estimator::estimate(&m, &dev).unwrap();
             let w = Workload::random_for(&m, case as u64);
@@ -246,7 +261,16 @@ fn indexed_estimator_is_bit_identical_to_reference() {
     for case in 0..CASES {
         let src = random_kernel(&mut rng, case);
         let k = frontend::parse_kernel(&src).unwrap();
-        for p in [DesignPoint::c2(), DesignPoint::c1(2), DesignPoint::c1(4), DesignPoint::c4(), DesignPoint::c5(4)] {
+        for p in [
+            DesignPoint::c2(),
+            DesignPoint::c1(2),
+            DesignPoint::c1(4),
+            DesignPoint::c3(4),
+            DesignPoint::c4(),
+            DesignPoint::c5(4),
+            DesignPoint::c2().chained(),
+            DesignPoint::c3(2).chained(),
+        ] {
             let Ok(m) = frontend::lower(&k, p) else { continue };
             let ix = ModuleIndex::build(&m).unwrap();
             // resource accumulation: indexed == name-resolved walk
@@ -271,7 +295,14 @@ fn slot_indexed_executor_is_bit_identical_to_eval_func() {
     for case in 0..CASES {
         let src = random_kernel(&mut rng, case);
         let k = frontend::parse_kernel(&src).unwrap();
-        for p in [DesignPoint::c2(), DesignPoint::c1(4), DesignPoint::c4()] {
+        for p in [
+            DesignPoint::c2(),
+            DesignPoint::c1(4),
+            DesignPoint::c3(2),
+            DesignPoint::c4(),
+            DesignPoint::c2().chained(),
+            DesignPoint::c4().chained(),
+        ] {
             let Ok(m) = frontend::lower(&k, p) else { continue };
             let d = sim::elaborate(&m).unwrap();
             let w = Workload::random_for(&m, 1000 + case as u64);
