@@ -175,6 +175,33 @@ fn main() {
         std::process::exit(1);
     }
 
+    println!("{}", section("reduction sweep (acc/tree axis over the reduction kernels)"));
+    // ISSUE 4: the trajectory JSON records how many reduction points the
+    // DSE explores (and how many realise the tree shape), so a regression
+    // that silently collapses the new axis shows up in one diff.
+    let rlimits = SweepLimits { max_lanes: 2, max_dv: 2, include_reduce: true, ..SweepLimits::default() };
+    let rkernels = tytra::kernels::resolve_specs(&[
+        "builtin:dotn".to_string(),
+        "builtin:vsum".to_string(),
+        "builtin:matvec".to_string(),
+    ])
+    .expect("reduction kernels resolve");
+    let rcells = Session::new(4)
+        .explore_batch(&rkernels, &[Device::stratix4()], &rlimits)
+        .expect("reduction sweep failed");
+    let reduce_points: usize = rcells.iter().map(|c| c.exploration.candidates.len()).sum();
+    let tree_points: usize = rcells
+        .iter()
+        .flat_map(|c| &c.exploration.candidates)
+        .filter(|cand| cand.point.reduce == tytra::tir::ReduceShape::Tree)
+        .count();
+    println!(
+        "  {} reduction kernels, {} points explored, {} tree-shaped",
+        rcells.len(),
+        reduce_points,
+        tree_points
+    );
+
     if let Some(path) = std::env::var_os("TYTRA_BENCH_JSON") {
         let json = render_json(
             smoke,
@@ -184,6 +211,7 @@ fn main() {
             batch_cps,
             &validated_rows,
             &conf,
+            (rcells.len(), reduce_points, tree_points),
         );
         if let Err(e) = std::fs::write(&path, json) {
             eprintln!("cannot write {}: {e}", path.to_string_lossy());
@@ -195,6 +223,7 @@ fn main() {
 
 /// Hand-rolled JSON (no serde in the offline image): flat, stable keys
 /// so `BENCH_dse_throughput.json` diffs cleanly across PRs.
+#[allow(clippy::too_many_arguments)]
 fn render_json(
     smoke: bool,
     est_simple_s: f64,
@@ -203,6 +232,7 @@ fn render_json(
     batch_cps: f64,
     validated: &[(usize, f64)],
     conf: &tytra::conformance::ConformanceReport,
+    reduction: (usize, usize, usize),
 ) -> String {
     let rows = |xs: &[(usize, f64)]| -> String {
         xs.iter()
@@ -210,13 +240,15 @@ fn render_json(
             .collect::<Vec<_>>()
             .join(", ")
     };
+    let (rkernels, rpoints, rtrees) = reduction;
     format!(
         "{{\n  \"bench\": \"estimator_speed\",\n  \"mode\": \"{}\",\n  \
          \"single_estimate_us\": {{\"simple_c2\": {:.3}, \"sor_c2\": {:.3}}},\n  \
          \"sweep_throughput\": [{}],\n  \
          \"batch_grid_configs_per_sec\": {:.1},\n  \
          \"validated_sweep_throughput\": [{}],\n  \
-         \"conformance\": {}\n}}\n",
+         \"conformance\": {},\n  \
+         \"reduction\": {{\"kernels\": {rkernels}, \"points\": {rpoints}, \"tree_points\": {rtrees}}}\n}}\n",
         if smoke { "smoke" } else { "full" },
         est_simple_s * 1e6,
         est_sor_s * 1e6,

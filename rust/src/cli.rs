@@ -41,7 +41,7 @@ const VALUE_FLAGS: &[&str] =
     &["device", "devices", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts", "random"];
 /// Boolean flags.
 const BOOL_FLAGS: &[&str] =
-    &["dense", "tb", "help", "pipes-only", "chain", "quick", "json", "inject-mismatch"];
+    &["dense", "tb", "help", "pipes-only", "chain", "reduce", "quick", "json", "inject-mismatch"];
 
 impl Cli {
     /// Parse an argv (excluding argv[0]).
@@ -148,7 +148,7 @@ pub fn usage() -> String {
        configurations                 print the paper's Fig 5/7/9/11/15 TIR listings\n\
      \n\
      FLAGS: --device s4|s5|c4   --devices s4,c4   --seed N   --jobs N   --max-lanes N\n\
-            --max-dv N   --dense   --pipes-only   --chain   --config tytra.toml\n\
+            --max-dv N   --dense   --pipes-only   --chain   --reduce   --config tytra.toml\n\
             --artifacts DIR   --tb   --quick   --random N   --json   --inject-mismatch"
         .to_string()
 }
@@ -254,6 +254,10 @@ fn sweep_config(cli: &Cli) -> Result<Config, String> {
     if cli.has("chain") {
         // additionally sweep each point's comb-call-chain variant
         cfg.sweep.include_chain = true;
+    }
+    if cli.has("reduce") {
+        // additionally sweep each point's tree-reduction variant
+        cfg.sweep.include_reduce = true;
     }
     if let Some(v) = cli.flag("jobs") {
         cfg.jobs = v.parse().map_err(|e| format!("--jobs: {e}"))?;
@@ -568,9 +572,30 @@ mod tests {
     #[test]
     fn kernels_lists_the_library() {
         let out = dispatch(&args("kernels")).unwrap();
-        for name in ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow"] {
+        for name in
+            ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow", "dotn", "vsum", "matvec"]
+        {
             assert!(out.contains(name), "missing `{name}` in:\n{out}");
         }
+    }
+
+    #[test]
+    fn dse_sweeps_the_reduce_axis_on_a_reduction_kernel() {
+        let out = dispatch(&args("dse builtin:dotn --jobs 2 --max-lanes 2 --max-dv 2 --reduce")).unwrap();
+        // 6 base points + their tree twins; replication clamps to ×1
+        assert!(out.contains("(12 points"), "{out}");
+        assert!(out.contains("+tree"), "{out}");
+        assert!(out.contains("pipe×1"), "{out}");
+        assert!(!out.contains("pipe×2"), "reduction kernels must clamp lanes:\n{out}");
+        assert!(out.contains("BEST:"), "{out}");
+    }
+
+    #[test]
+    fn reduce_flag_is_inert_without_a_reduction() {
+        let out = dispatch(&args("dse builtin:simple --jobs 2 --max-lanes 2 --max-dv 2 --reduce")).unwrap();
+        // tree twins degenerate back to the plain points
+        assert!(out.contains("(12 points"), "{out}");
+        assert!(!out.contains("+tree"), "{out}");
     }
 
     #[test]
@@ -595,7 +620,7 @@ mod tests {
     fn conformance_quick_json_counts() {
         let out = dispatch(&args("conformance --quick --random 0 --json")).unwrap();
         assert!(out.contains("\"mismatches\": 0"), "{out}");
-        assert!(out.contains("\"kernels\": 8"), "{out}");
+        assert!(out.contains("\"kernels\": 11"), "{out}");
     }
 
     #[test]

@@ -81,6 +81,10 @@ impl Config {
                     self.sweep.include_chain =
                         v.as_bool().ok_or("`sweep.include_chain` must be a boolean")?;
                 }
+                "sweep.include_reduce" => {
+                    self.sweep.include_reduce =
+                        v.as_bool().ok_or("`sweep.include_reduce` must be a boolean")?;
+                }
                 other => return Err(format!("unknown config key `{other}`")),
             }
         }

@@ -16,13 +16,16 @@
 //! | `timing/actual-covers-estimate` | simulated cycles | estimator lower bound |
 //! | `golden/simulator-vs-kernel-model` | full simulation | `runtime::golden::run_kernel_model` |
 //! | `sim/hand-tir-vs-lowered` | hand-written paper-style TIR | front-end lowering |
-//! | `hdl/*` | emitted Verilog | structural invariants (incl. declared signals and defined-module instantiation) |
+//! | `reduce/acc-vs-tree` | accumulator-shape simulation | tree-shape simulation (order-insensitive combiners) |
+//! | `timing/reduce-drain-covered` | tree-shape simulated cycles | tree-shape estimate (drain included) |
+//! | `hdl/*` | emitted Verilog | structural invariants (incl. declared signals, defined-module instantiation and the single-driver accumulator register) |
 //!
 //! Design points cover the full C1–C4 space — pipe lanes (C1/C2), comb
 //! cores (C3), sequential PEs (C4/C5) — plus mixed call-chain
-//! (`+chain`) variants; the hand-written TIR listings (including the
-//! `shadow` shadowed-callee-parameter regression kernel) additionally
-//! run the HDL scans.
+//! (`+chain`) and tree-reduction (`+tree`) variants; the hand-written
+//! TIR listings (including the `shadow` shadowed-callee-parameter
+//! regression kernel and the `dotn`/`vsum`/`matvec` reductions)
+//! additionally run the HDL scans.
 //!
 //! A clean run is the regression gate every backend/optimisation PR
 //! runs against (`tytra conformance`, `scripts/ci.sh`,
@@ -78,6 +81,7 @@ impl Options {
                 DesignPoint::c4(),
                 DesignPoint::c5(2),
                 DesignPoint::c2().chained(),
+                DesignPoint::c2().tree(),
             ],
             random_cases: 2,
             check_hdl: true,
@@ -101,6 +105,9 @@ impl Options {
                 DesignPoint::c2().chained(),
                 DesignPoint::c3(2).chained(),
                 DesignPoint::c4().chained(),
+                DesignPoint::c2().tree(),
+                DesignPoint::c3(1).tree(),
+                DesignPoint::c4().tree(),
             ],
             random_cases: 8,
             ..Options::quick(device)
@@ -373,9 +380,9 @@ impl Harness<'_> {
 
         // --- timing: closed form vs state-machine oracle ----------------------
         for (li, lane) in d.lanes.iter().enumerate() {
-            let (items, fill, seq_work) = engine::lane_timing_inputs(&d, li, dev.seq_cpi);
-            let cf = engine::lane_cycles_closed_form(lane.kind, items, fill, seq_work);
-            let or = engine::lane_cycles_oracle(lane.kind, items, fill, seq_work, |_| false);
+            let (items, fill, seq_work, drain) = engine::lane_timing_inputs(&d, li, dev.seq_cpi);
+            let cf = engine::lane_cycles_closed_form(lane.kind, items, fill, seq_work, drain);
+            let or = engine::lane_cycles_oracle(lane.kind, items, fill, seq_work, drain, |_| false);
             self.check(name, &pl, "timing/closed-form-vs-oracle", cf == or, || {
                 format!("lane {li}: closed form {cf} vs oracle {or}")
             });
@@ -397,6 +404,44 @@ impl Harness<'_> {
         self.check(name, &pl, "golden/simulator-vs-kernel-model", gr.ok(), || {
             format!("{} of {} elements diverge, first {:?}", gr.mismatches, gr.n, gr.first)
         });
+
+        // --- reduction: the tree twin of every acc-shaped point ---------------
+        // Order-insensitive combiners make the accumulator and the
+        // balanced tree two shapes of the same value: simulate the tree
+        // twin, diff it against the acc result and the golden model, and
+        // require its (deeper) drain to stay inside the simulated cycles.
+        if m.has_reduce() && p.reduce == crate::tir::ReduceShape::Acc {
+            let mt = frontend::lower_point(lk, p.tree())?;
+            let wt = self.workload(&mt, spec)?;
+            let rt = sim::simulate(&mt, &dev, &wt)?;
+            self.check(
+                name,
+                &pl,
+                "reduce/acc-vs-tree",
+                rt.mems[out_key.as_str()] == r.mems[out_key.as_str()],
+                || first_vec_diff(&r.mems[out_key.as_str()], &rt.mems[out_key.as_str()]),
+            );
+            let grt = golden::check_kernel_model(k, &wt.mems, &rt.mems[out_key.as_str()])?;
+            self.check(name, &pl, "golden/tree-vs-kernel-model", grt.ok(), || {
+                format!("{} of {} elements diverge, first {:?}", grt.mismatches, grt.n, grt.first)
+            });
+            let ixt = ModuleIndex::build(&mt)?;
+            let est_t = estimator::estimate_ix(&ixt, &dev, self.db)?;
+            self.check(
+                name,
+                &pl,
+                "timing/reduce-drain-covered",
+                rt.cycles_per_pass >= est_t.cycles_per_pass
+                    && est_t.cycles_per_pass >= est.cycles_per_pass
+                    && rt.cycles_per_pass >= r.cycles_per_pass,
+                || {
+                    format!(
+                        "tree actual {} / estimate {} vs acc actual {} / estimate {}",
+                        rt.cycles_per_pass, est_t.cycles_per_pass, r.cycles_per_pass, est.cycles_per_pass
+                    )
+                },
+            );
+        }
 
         // --- emitted Verilog: structural invariants ---------------------------
         if self.opts.check_hdl {
@@ -517,6 +562,35 @@ impl Harness<'_> {
         self.check(name, pl, "hdl/instantiated-modules-defined", undefined.is_empty(), || {
             format!("instantiated but never defined: {undefined:?}")
         });
+
+        // Periodic (WRAP) streams appear exactly as wrapbuf modules
+        // (same `Module::wrap_streams` source the emitter consumes).
+        let wrap_streams = m.wrap_streams();
+        for s in &wrap_streams {
+            let head = format!("module wrapbuf_{s} (");
+            self.check(name, pl, "hdl/wrap-stream-buffer", v.contains(&head), || {
+                format!("WRAP stream `{s}`: expected `{head}`")
+            });
+        }
+        if wrap_streams.is_empty() {
+            self.check(name, pl, "hdl/no-spurious-wrap-buffer", !v.contains("module wrapbuf_"), || {
+                "wrap buffer emitted for a design with no WRAP ports".into()
+            });
+        }
+
+        // Reduction designs: the accumulator/tree output register must be
+        // declared and single-driver (and, for the acc shape, actually
+        // fold through a feedback path).
+        if let Some((_, rstmt)) = m.reduce_stmt() {
+            let issues = reduce_register_issues(
+                &v,
+                &rstmt.result,
+                rstmt.shape == crate::tir::ReduceShape::Acc,
+            );
+            self.check(name, pl, "hdl/reduce-register-single-driver", issues.is_empty(), || {
+                format!("{issues:?}")
+            });
+        }
         Ok(())
     }
 }
@@ -576,6 +650,93 @@ pub fn undeclared_locals(v: &str) -> Vec<String> {
 
 fn tokens(s: &str) -> impl Iterator<Item = &str> {
     s.split(|c: char| !c.is_ascii_alphanumeric() && c != '_').filter(|t| !t.is_empty())
+}
+
+/// Structural scan for a reduction's output register `v_<result>`: in
+/// every module that drives it, the register must be *declared* as a
+/// `reg` and *single-driver* — all its nonblocking assignments governed
+/// by one `always` block (two blocks assigning one reg is a Verilog
+/// elaboration error the text-level emitters could silently produce).
+/// With `expect_feedback`, at least one driver must read the register
+/// on its own right-hand side (the accumulator's feedback path — a
+/// "accumulator" that never feeds back is a pipeline register, not a
+/// fold). Returns human-readable issues; empty = clean.
+pub fn reduce_register_issues(v: &str, result: &str, expect_feedback: bool) -> Vec<String> {
+    let target = format!("v_{result}");
+    let mut issues = Vec::new();
+    let mut driving_modules = 0usize;
+    let is_token_at = |line: &str, pos: usize| -> bool {
+        // the match is a whole token (not a suffix of a longer name)
+        pos == 0
+            || !line[..pos]
+                .chars()
+                .next_back()
+                .map(|c| c.is_ascii_alphanumeric() || c == '_')
+                .unwrap_or(false)
+    };
+    for chunk in v.split("\nmodule ") {
+        let lines: Vec<&str> = chunk.lines().collect();
+        let mname = lines
+            .first()
+            .map(|l| l.trim_start_matches("module ").split('(').next().unwrap_or("?").trim())
+            .unwrap_or("?");
+        // driver lines: `v_<result> <=` with the target as a whole token
+        let mut drivers: Vec<usize> = Vec::new();
+        for (i, l) in lines.iter().enumerate() {
+            let mut search = 0usize;
+            while let Some(off) = l[search..].find(&target) {
+                let pos = search + off;
+                let after = &l[pos + target.len()..];
+                if is_token_at(l, pos) && after.trim_start().starts_with("<=") {
+                    drivers.push(i);
+                    break;
+                }
+                search = pos + target.len();
+            }
+        }
+        if drivers.is_empty() {
+            continue;
+        }
+        driving_modules += 1;
+        let declared = lines.iter().any(|l| {
+            let t = l.trim_start();
+            t.starts_with("reg") && tokens(l).any(|tok| tok == target)
+        });
+        if !declared {
+            issues.push(format!("`{mname}`: `{target}` driven but not declared as a reg"));
+        }
+        // all drivers must be governed by the same always block
+        let governing: Vec<Option<usize>> = drivers
+            .iter()
+            .map(|&d| (0..=d).rev().find(|&i| lines[i].contains("always")))
+            .collect();
+        if governing.iter().any(|g| g.is_none()) {
+            issues.push(format!("`{mname}`: `{target}` assigned outside an always block"));
+        } else {
+            let first = governing[0];
+            if governing.iter().any(|&g| g != first) {
+                issues.push(format!(
+                    "`{mname}`: `{target}` driven from {} always blocks (multi-driver)",
+                    governing.iter().collect::<std::collections::BTreeSet<_>>().len()
+                ));
+            }
+        }
+        if expect_feedback {
+            let feeds_back = drivers.iter().any(|&d| {
+                lines[d]
+                    .split_once("<=")
+                    .map(|(_, rhs)| tokens(rhs).any(|tok| tok == target))
+                    .unwrap_or(false)
+            });
+            if !feeds_back {
+                issues.push(format!("`{mname}`: accumulator `{target}` has no feedback path"));
+            }
+        }
+    }
+    if driving_modules == 0 {
+        issues.push(format!("no module drives the reduction register `{target}`"));
+    }
+    issues
 }
 
 /// First differing element across two memory states.
@@ -668,6 +829,40 @@ mod tests {
         assert!(o.points.iter().any(|p| p.style == Style::Comb));
         assert!(o.points.iter().any(|p| p.style == Style::Seq));
         assert!(o.points.iter().any(|p| p.chain));
+    }
+
+    #[test]
+    fn reduce_register_scan_catches_structural_breakage() {
+        let good = "\nmodule f_dp (\n    input wire clk\n);\n    reg [17:0] v_y;\n    always @(posedge clk) if (en) begin\n        v_y <= (first) ? (18'd0 + v_1) : (v_y + v_1);\n    end\nendmodule\n";
+        assert!(reduce_register_issues(good, "y", true).is_empty(), "{good}");
+        // undeclared accumulator
+        let undecl = good.replace("    reg [17:0] v_y;\n", "");
+        assert!(reduce_register_issues(&undecl, "y", true)
+            .iter()
+            .any(|i| i.contains("not declared")));
+        // a second always block driving the same register = multi-driver
+        let multi = good.replace(
+            "endmodule",
+            "    always @(posedge clk) v_y <= 18'd0;\nendmodule",
+        );
+        assert!(reduce_register_issues(&multi, "y", true)
+            .iter()
+            .any(|i| i.contains("multi-driver")));
+        // an "accumulator" that never feeds back is not a fold
+        let nofb = good.replace("(v_y + v_1)", "(v_2 + v_1)");
+        assert!(reduce_register_issues(&nofb, "y", true)
+            .iter()
+            .any(|i| i.contains("feedback")));
+        // …but the tree shape legitimately has no output feedback
+        assert!(reduce_register_issues(&nofb, "y", false).is_empty());
+        // nothing driving the register at all
+        assert!(!reduce_register_issues("\nmodule t ();\nendmodule\n", "y", true).is_empty());
+    }
+
+    #[test]
+    fn quick_points_include_a_tree_reduction_point() {
+        let o = Options::quick(Device::stratix4());
+        assert!(o.points.iter().any(|p| p.reduce == crate::tir::ReduceShape::Tree));
     }
 
     #[test]

@@ -29,6 +29,14 @@ pub struct SweepLimits {
     /// estimation-space position, so sweeps only pay for it on request
     /// (`--chain`; the conformance harness always covers it).
     pub include_chain: bool,
+    /// Additionally enumerate each point's tree-reduction variant
+    /// (`reduce` realised as a balanced combiner tree instead of the
+    /// sequential accumulator). Off by default for the same reason as
+    /// the chain axis — only reduction kernels occupy a different
+    /// estimation-space position, and they opt in via `--reduce`
+    /// (degenerate tree points on non-reducing kernels realise back to
+    /// the plain point).
+    pub include_reduce: bool,
 }
 
 impl Default for SweepLimits {
@@ -40,6 +48,7 @@ impl Default for SweepLimits {
             include_seq: true,
             include_comb: true,
             include_chain: false,
+            include_reduce: false,
         }
     }
 }
@@ -60,21 +69,25 @@ pub fn enumerate(limits: &SweepLimits) -> Vec<DesignPoint> {
         }
     };
     for l in steps(limits.max_lanes) {
-        out.push(DesignPoint { style: Style::Pipe, lanes: l, dv: 1, chain: false });
+        out.push(DesignPoint { lanes: l, ..DesignPoint::c2() });
     }
     if limits.include_comb {
         for l in steps(limits.max_lanes) {
-            out.push(DesignPoint { style: Style::Comb, lanes: l, dv: 1, chain: false });
+            out.push(DesignPoint { style: Style::Comb, lanes: l, ..DesignPoint::c2() });
         }
     }
     if limits.include_seq {
         for d in steps(limits.max_dv) {
-            out.push(DesignPoint { style: Style::Seq, lanes: 1, dv: d, chain: false });
+            out.push(DesignPoint { style: Style::Seq, dv: d, ..DesignPoint::c2() });
         }
     }
     if limits.include_chain {
         let base: Vec<DesignPoint> = out.clone();
         out.extend(base.into_iter().map(DesignPoint::chained));
+    }
+    if limits.include_reduce {
+        let base: Vec<DesignPoint> = out.clone();
+        out.extend(base.into_iter().map(DesignPoint::tree));
     }
     out
 }
@@ -107,6 +120,7 @@ mod tests {
             include_seq: true,
             include_comb: true,
             include_chain: false,
+            include_reduce: false,
         });
         // 3 pipe + 3 comb + 2 seq
         assert_eq!(pts.len(), 8);
@@ -120,6 +134,22 @@ mod tests {
         let chained = enumerate(&with_chain);
         assert_eq!(chained.len(), 2 * plain.len());
         assert_eq!(chained.iter().filter(|p| p.chain).count(), plain.len());
+    }
+
+    #[test]
+    fn reduce_axis_doubles_the_space_with_tree_twins() {
+        use crate::tir::ReduceShape;
+        let base = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
+        let with_reduce = SweepLimits { include_reduce: true, ..base };
+        let plain = enumerate(&base);
+        let pts = enumerate(&with_reduce);
+        assert_eq!(pts.len(), 2 * plain.len());
+        assert_eq!(pts.iter().filter(|p| p.reduce == ReduceShape::Tree).count(), plain.len());
+        // both axes compose: chain × reduce quadruples the base space
+        let both = SweepLimits { include_chain: true, include_reduce: true, ..base };
+        let pts = enumerate(&both);
+        assert_eq!(pts.len(), 4 * plain.len());
+        assert!(pts.iter().any(|p| p.chain && p.reduce == ReduceShape::Tree));
     }
 
     #[test]

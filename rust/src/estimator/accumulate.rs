@@ -16,7 +16,7 @@ use super::cost_db::CostDb;
 use super::resources::Resources;
 use crate::device::Device;
 use crate::tir::index::{FuncIndex, ModuleIndex, SlotStmt};
-use crate::tir::{Dir, Func, Kind, Module, Op, Operand, SlotOperand, Stmt};
+use crate::tir::{reduce_tree_depth, Dir, Func, Kind, Module, Op, Operand, ReduceShape, SlotOperand, Stmt, Ty};
 
 /// Per-port stream-synchronisation logic: valid/ready handshake + ALUT
 /// share of the address generator.
@@ -146,6 +146,8 @@ fn func_cost_ix(ix: &ModuleIndex, fi: &FuncIndex, db: &CostDb) -> Result<Resourc
                             }
                         }
                     }
+                    // Costed uniformly below (shape-dependent).
+                    SlotStmt::Reduce(_) => {}
                 }
             }
         }
@@ -184,7 +186,31 @@ fn func_cost_ix(ix: &ModuleIndex, fi: &FuncIndex, db: &CostDb) -> Result<Resourc
             }
         }
     }
+    if fi.n_reduces > 0 {
+        let seg = ix.module.reduce_segment();
+        for s in &fi.body {
+            if let SlotStmt::Reduce(red) = s {
+                r += reduce_cost(db, red.op, red.ty, red.shape, seg);
+            }
+        }
+    }
     Ok(r)
+}
+
+/// Cost of one reduce tail. The accumulator shape is one combiner plus
+/// the accumulator register (cheap LUT/FF, II-cycle feedback); the tree
+/// shape pays `ceil(log2(segment))` pipelined combiner stages with their
+/// stage registers plus a phase counter (DSP/LUT heavy).
+fn reduce_cost(db: &CostDb, op: Op, ty: Ty, shape: ReduceShape, seg: u64) -> Resources {
+    let bits = ty.bits() as u64;
+    let one = db.instr_cost(op, ty, None) + Resources::new(0, bits, 0, 0);
+    match shape {
+        ReduceShape::Acc => one + Resources::new(2, 8, 0, 0), // segment counter share
+        ReduceShape::Tree => {
+            let depth = reduce_tree_depth(seg).max(1);
+            one * depth + Resources::new(depth, depth + 8, 0, 0) // phase counter + control
+        }
+    }
 }
 
 /// Indexed mirror of [`const_operand`]: constant slots resolve in O(1).
@@ -211,7 +237,7 @@ fn count_cores_ix(ix: &ModuleIndex, mult: &[u64]) -> u64 {
     ix.funcs
         .iter()
         .enumerate()
-        .filter(|(_, fi)| fi.kind != Kind::Par && fi.n_instrs > 0)
+        .filter(|(_, fi)| fi.kind != Kind::Par && fi.n_instrs + fi.n_reduces > 0)
         .map(|(slot, _)| mult[slot])
         .max()
         .unwrap_or(1)
@@ -305,6 +331,8 @@ fn func_cost(m: &Module, f: &Func, db: &CostDb) -> Result<Resources, String> {
                             }
                         }
                     }
+                    // Costed uniformly below (shape-dependent).
+                    Stmt::Reduce(_) => {}
                 }
             }
         }
@@ -344,6 +372,12 @@ fn func_cost(m: &Module, f: &Func, db: &CostDb) -> Result<Resources, String> {
             }
         }
     }
+    if m.reduces_of(f).next().is_some() {
+        let seg = m.reduce_segment();
+        for red in m.reduces_of(f) {
+            r += reduce_cost(db, red.op, red.ty, red.shape, seg);
+        }
+    }
     Ok(r)
 }
 
@@ -380,9 +414,9 @@ fn count_cores(m: &Module, mult: &BTreeMap<&str, u64>) -> u64 {
     m.funcs
         .values()
         .filter(|f| {
-            // a leaf core: has instructions and is not a pure wrapper
-            matches!(f.kind, Kind::Pipe | Kind::Seq) && m.instrs_of(f).next().is_some()
-                || (f.kind == Kind::Comb && m.instrs_of(f).next().is_some())
+            // a leaf core: has datapath statements and is not a pure wrapper
+            let has_stmts = m.instrs_of(f).next().is_some() || m.reduces_of(f).next().is_some();
+            f.kind != Kind::Par && has_stmts
         })
         .filter_map(|f| mult.get(f.name.as_str()))
         .copied()
@@ -552,6 +586,38 @@ mod tests {
             let m = parse_and_validate(&src).unwrap();
             let fast = estimate_resources(&m, &db, &dev).unwrap();
             let slow = estimate_resources_reference(&m, &db, &dev).unwrap();
+            assert_eq!(fast, slow);
+        }
+    }
+
+    #[test]
+    fn reduce_costing_acc_cheap_tree_heavy() {
+        let src = r#"
+@mem_a = addrspace(3) <256 x ui18>
+@mem_y = addrspace(3) <1 x ui18>
+@s_a = addrspace(10), !"source", !"@mem_a"
+@s_y = addrspace(10), !"dest", !"@mem_y"
+@main.a = addrspace(12) ui18, !"istream", !"CONT", !0, !"s_a"
+@main.y = addrspace(12) ui18, !"ostream", !"CONT", !0, !"s_y"
+define void @main () pipe {
+    ui36 %1 = mul ui36 @main.a, @main.a
+    ui36 %y = reduce add acc ui36 0, %1
+}
+"#;
+        let acc = est(src);
+        let tree = est(&src.replace("acc ui36", "tree ui36"));
+        let plain = est(&src.replace("    ui36 %y = reduce add acc ui36 0, %1\n", ""));
+        // the accumulator adds one adder + register over the plain datapath
+        assert!(acc.alut > plain.alut, "acc {acc} vs plain {plain}");
+        assert!(acc.reg >= plain.reg + 36, "acc {acc} vs plain {plain}");
+        // the 8-deep tree is several times the accumulator's combiner cost
+        assert!(tree.alut >= acc.alut + 6 * 36, "tree {tree} vs acc {acc}");
+        assert!(tree.reg > acc.reg + 6 * 36, "tree {tree} vs acc {acc}");
+        // both paths stay bit-identical to the reference walk
+        for s in [src.to_string(), src.replace("acc ui36", "tree ui36")] {
+            let m = parse_and_validate(&s).unwrap();
+            let fast = estimate_resources(&m, &CostDb::default(), &Device::stratix4()).unwrap();
+            let slow = estimate_resources_reference(&m, &CostDb::default(), &Device::stratix4()).unwrap();
             assert_eq!(fast, slow);
         }
     }

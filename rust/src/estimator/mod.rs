@@ -23,7 +23,7 @@ pub mod throughput;
 pub use accumulate::estimate_resources;
 pub use cost_db::{shared_cost_db, CostDb};
 pub use resources::Resources;
-pub use structure::{analyze, analyze_ix, ConfigClass, StructInfo};
+pub use structure::{analyze, analyze_ix, ConfigClass, ReduceInfo, StructInfo};
 pub use throughput::{cycles_per_pass, ewgt_from_cycles, EwgtParams};
 
 use crate::device::Device;
@@ -74,7 +74,7 @@ pub fn estimate_ix(ix: &ModuleIndex, dev: &Device, db: &CostDb) -> Result<Estima
     let resources = accumulate::estimate_resources_ix(ix, db, dev)?;
     let cycles = throughput::cycles_per_pass(&info, dev.seq_cpi);
     let cycles_wg = cycles * info.repeat;
-    let fmax = dev.nominal_fmax_mhz;
+    let fmax = estimated_fmax_mhz(&info, dev);
     let ewgt = throughput::ewgt_from_cycles(cycles, info.repeat, fmax * 1e6, 1, 0.0);
     Ok(Estimate {
         class: info.class,
@@ -85,6 +85,25 @@ pub fn estimate_ix(ix: &ModuleIndex, dev: &Device, db: &CostDb) -> Result<Estima
         fmax_mhz: fmax,
         ewgt,
     })
+}
+
+/// Estimated clock. Pipelined and sequential designs assume the nominal
+/// device figure (the paper's simplification — the E-vs-A gap is the
+/// achieved clock); C3 comb cores additionally apply a depth-dependent
+/// derate from the structural chain facts, closing the honesty gap a
+/// single-cycle core's unregistered critical path would otherwise hide
+/// (a 10-deep comb datapath cannot stream at the nominal clock).
+pub fn estimated_fmax_mhz(info: &StructInfo, dev: &Device) -> f64 {
+    let mut fmax = dev.nominal_fmax_mhz;
+    if info.class == ConfigClass::C3 && info.comb_depth > 0 {
+        use crate::synth::timing::{T_CARRY_NS, T_FF_NS, T_LUT_NS, T_ROUTE_NS};
+        let period_ns = T_FF_NS
+            + T_ROUTE_NS
+            + info.comb_depth as f64 * T_LUT_NS
+            + info.comb_carry as f64 * T_CARRY_NS;
+        fmax = fmax.min(1000.0 / period_ns);
+    }
+    fmax
 }
 
 #[cfg(test)]
@@ -143,6 +162,48 @@ mod tests {
         let c5 = est(&examples::fig11_vector_seq(4));
         let ratio = c5.ewgt / c4.ewgt;
         assert!(ratio > 3.5 && ratio <= 4.2, "{ratio}");
+    }
+
+    #[test]
+    fn deep_comb_cores_derate_the_estimated_clock() {
+        // A shallow comb datapath stays at the nominal clock…
+        let shallow = est("define void @main (ui18 %a) comb { %1 = add ui18 %a, %a }");
+        assert_eq!(shallow.fmax_mhz, Device::stratix4().nominal_fmax_mhz);
+        // …a deep dependency chain cannot close timing at it (the
+        // ROADMAP "comb cores priced at nominal clock" honesty gap).
+        let mut body = String::new();
+        let mut prev = "%a".to_string();
+        for i in 1..=10 {
+            body.push_str(&format!(" ui32 %{i} = add ui32 {prev}, {prev}\n"));
+            prev = format!("%{i}");
+        }
+        let deep = est(&format!("define void @main (ui32 %a) comb {{\n{body}}}"));
+        assert_eq!(deep.class, ConfigClass::C3);
+        assert!(deep.fmax_mhz < Device::stratix4().nominal_fmax_mhz, "{}", deep.fmax_mhz);
+        assert!(deep.fmax_mhz > 50.0, "{}", deep.fmax_mhz);
+        // …and the derate flows into the EWGT.
+        assert!(deep.ewgt < shallow.ewgt);
+    }
+
+    #[test]
+    fn reduce_drain_reaches_the_cycle_estimate() {
+        let src = r#"
+@mem_a = addrspace(3) <256 x ui18>
+@mem_y = addrspace(3) <1 x ui18>
+@s_a = addrspace(10), !"source", !"@mem_a"
+@s_y = addrspace(10), !"dest", !"@mem_y"
+@main.a = addrspace(12) ui18, !"istream", !"CONT", !0, !"s_a"
+@main.y = addrspace(12) ui18, !"ostream", !"CONT", !0, !"s_y"
+define void @main () pipe {
+    ui36 %1 = mul ui36 @main.a, @main.a
+    ui36 %y = reduce add acc ui36 0, %1
+}
+"#;
+        let acc = est(src);
+        let tree = est(&src.replace("acc ui36", "tree ui36"));
+        // acc: P(1) + I(256) + drain(1); tree: + drain(8)
+        assert_eq!(acc.cycles_per_pass, 1 + 256 + 1);
+        assert_eq!(tree.cycles_per_pass, 1 + 256 + 8);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 
 use crate::tir::index::{ModuleIndex, SchedStmt, SlotStmt};
-use crate::tir::{Dir, Func, Kind, Module, Slot, Stmt};
+use crate::tir::{Dir, Func, Kind, Module, Op, Operand, ReduceShape, Slot, Stmt};
 
 /// Design-space configuration class (paper Fig 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -37,6 +37,34 @@ impl std::fmt::Display for ConfigClass {
     }
 }
 
+/// Structural facts about the module's reduction, when it has one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReduceInfo {
+    /// Hardware shape (accumulator / balanced tree).
+    pub shape: ReduceShape,
+    /// Combiner op.
+    pub op: Op,
+    /// Accumulator width in bits.
+    pub width: u32,
+    /// Work-items folded into one output (the index segment).
+    pub seg: u64,
+}
+
+impl ReduceInfo {
+    /// Drain latency after the last input of a segment, cycles.
+    pub fn drain(&self) -> u64 {
+        self.shape.drain(self.seg)
+    }
+
+    /// Combiner-tree depth (0 for the accumulator shape).
+    pub fn tree_depth(&self) -> u64 {
+        match self.shape {
+            ReduceShape::Acc => 0,
+            ReduceShape::Tree => crate::tir::reduce_tree_depth(self.seg).max(1),
+        }
+    }
+}
+
 /// Structural facts about one module.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StructInfo {
@@ -60,12 +88,25 @@ pub struct StructInfo {
     pub work_items: u64,
     /// Chained passes per work-group (the `repeat` keyword).
     pub repeat: u64,
+    /// Reduction facts (shape, width, segment) when the module reduces.
+    pub reduce: Option<ReduceInfo>,
+    /// Dependency-chain length (instructions) of the largest comb leaf —
+    /// drives the C3 depth-dependent Fmax derate (a deep single-cycle
+    /// datapath cannot close timing at the nominal clock).
+    pub comb_depth: u64,
+    /// Widest instruction (carry bits) on a comb leaf's chain.
+    pub comb_carry: u64,
 }
 
 impl StructInfo {
     /// Total pipeline latency `P` (datapath + window fill).
     pub fn pipeline_depth(&self) -> u64 {
         self.datapath_depth + self.window_span
+    }
+
+    /// Reduction drain cycles (0 without a reduction).
+    pub fn reduce_drain(&self) -> u64 {
+        self.reduce.as_ref().map(|r| r.drain()).unwrap_or(0)
     }
 }
 
@@ -78,6 +119,22 @@ struct PeCounts {
     combs: u64,
     max_pipe_depth: u64,
     max_seq_ni: u64,
+    /// Longest comb-leaf dependency chain (instructions).
+    comb_depth: u64,
+    /// Widest instruction on a comb leaf (carry bits).
+    comb_carry: u64,
+}
+
+/// Reduction facts extracted from the module's reduce statement (shared
+/// by both analysis paths — the facts are module-level constants, so
+/// the indexed walk gains nothing from re-deriving them over slots).
+fn reduce_info(m: &Module) -> Option<ReduceInfo> {
+    m.reduce_stmt().map(|(_, r)| ReduceInfo {
+        shape: r.shape,
+        op: r.op,
+        width: r.ty.bits(),
+        seg: m.reduce_segment(),
+    })
 }
 
 /// Analyse the structure of a validated module.
@@ -90,7 +147,7 @@ pub fn analyze(m: &Module) -> Result<StructInfo, String> {
     let counts = walk(m, main)?;
     let repeat = m.launch.iter().map(|c| c.repeat).max().unwrap_or(1);
     let window_span = max_window_span(m);
-    classify(counts, window_span, m.work_items(), repeat)
+    classify(counts, window_span, m.work_items(), repeat, reduce_info(m))
 }
 
 /// Analyse the structure through the slot-indexed view — no string
@@ -104,11 +161,17 @@ pub fn analyze_ix(ix: &ModuleIndex) -> Result<StructInfo, String> {
     let repeat = ix.module.launch.iter().map(|c| c.repeat).max().unwrap_or(1);
     let spans = ix.read_offset_spans();
     let window_span = spans.iter().map(|(lo, hi)| (hi - lo) as u64).max().unwrap_or(0);
-    classify(counts, window_span, work_items_ix(ix), repeat)
+    classify(counts, window_span, work_items_ix(ix), repeat, reduce_info(ix.module))
 }
 
 /// Shared classification tail of both analysis paths.
-fn classify(counts: PeCounts, window_span: u64, work_items: u64, repeat: u64) -> Result<StructInfo, String> {
+fn classify(
+    counts: PeCounts,
+    window_span: u64,
+    work_items: u64,
+    repeat: u64,
+    reduce: Option<ReduceInfo>,
+) -> Result<StructInfo, String> {
     let (class, lanes, dv) = match (counts.pipes, counts.seqs, counts.combs) {
         (0, 0, 0) => return Err("no compute leaves reachable from @main".into()),
         (p, 0, _) if p > 1 => (ConfigClass::C1, p, 1),
@@ -128,6 +191,9 @@ fn classify(counts: PeCounts, window_span: u64, work_items: u64, repeat: u64) ->
         seq_ni: counts.max_seq_ni,
         work_items,
         repeat,
+        reduce,
+        comb_depth: counts.comb_depth,
+        comb_carry: counts.comb_carry,
     })
 }
 
@@ -162,19 +228,21 @@ fn walk_ix(
     }
     let fi = ix.func(f);
     let own_instrs = fi.n_instrs as u64;
+    let own_stmts = own_instrs + fi.n_reduces as u64;
     let counts = match fi.kind {
         Kind::Comb => {
-            let mut ni = own_instrs;
+            let mut ni = own_stmts;
             for s in &fi.body {
                 if let SlotStmt::Call(c) = s {
                     let sub = walk_ix(ix, c.callee, memo, depth_memo)?;
                     ni += sub.max_seq_ni.max(sub.combs);
                 }
             }
-            PeCounts { combs: 1, max_seq_ni: ni, ..Default::default() }
+            let (cd, cc) = comb_chain_ix(ix, f);
+            PeCounts { combs: 1, max_seq_ni: ni, comb_depth: cd, comb_carry: cc, ..Default::default() }
         }
         Kind::Seq => {
-            let mut ni = own_instrs;
+            let mut ni = own_stmts;
             for s in &fi.body {
                 if let SlotStmt::Call(c) = s {
                     let sub = walk_ix(ix, c.callee, memo, depth_memo)?;
@@ -197,17 +265,83 @@ fn walk_ix(
                     acc.combs += sub.combs;
                     acc.max_pipe_depth = acc.max_pipe_depth.max(sub.max_pipe_depth);
                     acc.max_seq_ni = acc.max_seq_ni.max(sub.max_seq_ni);
+                    acc.comb_depth = acc.comb_depth.max(sub.comb_depth);
+                    acc.comb_carry = acc.comb_carry.max(sub.comb_carry);
                 }
             }
-            if own_instrs > 0 && acc.pipes + acc.seqs + acc.combs == 0 {
+            if own_stmts > 0 && acc.pipes + acc.seqs + acc.combs == 0 {
                 acc.combs = 1;
-                acc.max_seq_ni = own_instrs;
+                acc.max_seq_ni = own_stmts;
+                let (cd, cc) = comb_chain_ix(ix, f);
+                acc.comb_depth = cd;
+                acc.comb_carry = cc;
             }
             acc
         }
     };
     memo[f as usize] = Some(counts);
     Ok(counts)
+}
+
+/// Dependency-chain length and widest carry of one comb function's body
+/// over local slots, call chains included (callee results land at the
+/// call's argument depth plus the callee's own chain). Mirrors
+/// [`comb_chain`] exactly; both feed the C3 Fmax derate.
+fn comb_chain_ix(ix: &ModuleIndex, f: Slot) -> (u64, u64) {
+    use crate::tir::index::SlotOperand;
+    let fi = ix.func(f);
+    let mut depth_of = vec![0u64; fi.n_locals as usize];
+    let mut defined = vec![false; fi.n_locals as usize];
+    let mut depth = 0u64;
+    let mut carry = 0u64;
+    let operand_depth = |o: &SlotOperand, depth_of: &[u64], defined: &[bool]| -> Option<u64> {
+        match o {
+            SlotOperand::Local(s) => defined[*s as usize].then(|| depth_of[*s as usize]),
+            _ => Some(0),
+        }
+    };
+    for s in &fi.body {
+        match s {
+            SlotStmt::Instr(i) => {
+                let base = i
+                    .operands
+                    .iter()
+                    .filter_map(|o| operand_depth(o, &depth_of, &defined))
+                    .max()
+                    .unwrap_or(0);
+                let d = base + 1;
+                depth_of[i.dst as usize] = d;
+                defined[i.dst as usize] = true;
+                depth = depth.max(d);
+                carry = carry.max(i.ty.bits() as u64);
+            }
+            SlotStmt::Call(c) => {
+                let base = c
+                    .args
+                    .iter()
+                    .filter_map(|o| operand_depth(o, &depth_of, &defined))
+                    .max()
+                    .unwrap_or(0);
+                let (cd, cc) = comb_chain_ix(ix, c.callee);
+                let d = base + cd;
+                // Imported callee results land at the call's end depth.
+                let callee = ix.func(c.callee);
+                for cs in &callee.body {
+                    if let SlotStmt::Instr(ci) = cs {
+                        let name = callee.local_names[ci.dst as usize];
+                        if let Some(slot) = fi.local_names.iter().position(|&n| n == name) {
+                            depth_of[slot] = d;
+                            defined[slot] = true;
+                        }
+                    }
+                }
+                depth = depth.max(d);
+                carry = carry.max(cc);
+            }
+            SlotStmt::Reduce(_) => {}
+        }
+    }
+    (depth, carry)
 }
 
 /// Pipe depth over the pre-extracted schedule program: a dense stage
@@ -255,20 +389,21 @@ fn pipe_depth_ix(ix: &ModuleIndex, f: Slot, depth_memo: &mut Vec<Option<u64>>) -
 
 /// Recursive walk accumulating leaf-PE counts with multiplicity.
 fn walk(m: &Module, f: &Func) -> Result<PeCounts, String> {
-    let own_instrs = m.instrs_of(f).count() as u64;
+    let own_stmts = m.instrs_of(f).count() as u64 + m.reduces_of(f).count() as u64;
     match f.kind {
         Kind::Comb => {
             // A comb leaf; nested comb calls fold into this block.
-            let mut ni = own_instrs;
+            let mut ni = own_stmts;
             for c in m.calls_of(f) {
                 let callee = &m.funcs[&c.callee];
                 let sub = walk(m, callee)?;
                 ni += sub.max_seq_ni.max(sub.combs); // nested comb sizes
             }
-            Ok(PeCounts { combs: 1, max_seq_ni: ni, ..Default::default() })
+            let (cd, cc) = comb_chain(m, f);
+            Ok(PeCounts { combs: 1, max_seq_ni: ni, comb_depth: cd, comb_carry: cc, ..Default::default() })
         }
         Kind::Seq => {
-            let mut ni = own_instrs;
+            let mut ni = own_stmts;
             for c in m.calls_of(f) {
                 let callee = &m.funcs[&c.callee];
                 let sub = walk(m, callee)?;
@@ -295,14 +430,70 @@ fn walk(m: &Module, f: &Func) -> Result<PeCounts, String> {
                 acc.combs += sub.combs;
                 acc.max_pipe_depth = acc.max_pipe_depth.max(sub.max_pipe_depth);
                 acc.max_seq_ni = acc.max_seq_ni.max(sub.max_seq_ni);
+                acc.comb_depth = acc.comb_depth.max(sub.comb_depth);
+                acc.comb_carry = acc.comb_carry.max(sub.comb_carry);
             }
-            if own_instrs > 0 && acc.pipes + acc.seqs + acc.combs == 0 {
+            if own_stmts > 0 && acc.pipes + acc.seqs + acc.combs == 0 {
                 acc.combs = 1;
-                acc.max_seq_ni = own_instrs;
+                acc.max_seq_ni = own_stmts;
+                let (cd, cc) = comb_chain(m, f);
+                acc.comb_depth = cd;
+                acc.comb_carry = cc;
             }
             Ok(acc)
         }
     }
+}
+
+/// Dependency-chain length (instructions) and widest carry of one comb
+/// function's body, call chains included — the name-resolved reference
+/// twin of [`comb_chain_ix`].
+fn comb_chain(m: &Module, f: &Func) -> (u64, u64) {
+    let mut depth_of: BTreeMap<&str, u64> = BTreeMap::new();
+    let mut depth = 0u64;
+    let mut carry = 0u64;
+    for s in &f.body {
+        match s {
+            Stmt::Instr(i) => {
+                let base = i
+                    .operands
+                    .iter()
+                    .filter_map(|o| match o {
+                        Operand::Local(n) => depth_of.get(n.as_str()).copied(),
+                        _ => Some(0),
+                    })
+                    .max()
+                    .unwrap_or(0);
+                let d = base + 1;
+                depth_of.insert(i.result.as_str(), d);
+                depth = depth.max(d);
+                carry = carry.max(i.ty.bits() as u64);
+            }
+            Stmt::Call(c) => {
+                let callee = &m.funcs[&c.callee];
+                let base = c
+                    .args
+                    .iter()
+                    .filter_map(|o| match o {
+                        Operand::Local(n) => depth_of.get(n.as_str()).copied(),
+                        _ => Some(0),
+                    })
+                    .max()
+                    .unwrap_or(0);
+                let (cd, cc) = comb_chain(m, callee);
+                let d = base + cd;
+                for stmt in &callee.body {
+                    if let Stmt::Instr(ci) = stmt {
+                        depth_of.insert(ci.result.as_str(), d);
+                    }
+                }
+                depth = depth.max(d);
+                carry = carry.max(cc);
+            }
+            Stmt::Reduce(_) => {}
+        }
+    }
+    (depth, carry)
 }
 
 /// ASAP stage assignment for a `pipe` function (paper §6.2: "our
@@ -361,6 +552,9 @@ pub fn pipe_schedule<'a>(m: &'a Module, f: &'a Func) -> Result<(u64, BTreeMap<&'
                 }
                 depth = depth.max(s_end);
             }
+            // A reduce sits outside the per-item stage chain: its latency
+            // is the drain, priced separately by the throughput model.
+            Stmt::Reduce(_) => {}
         }
     }
     Ok((depth, stage))
@@ -490,6 +684,53 @@ mod tests {
             let ix = crate::tir::ModuleIndex::build(&m).unwrap();
             assert_eq!(analyze(&m).unwrap(), analyze_ix(&ix).unwrap());
         }
+    }
+
+    #[test]
+    fn reduce_facts_extracted_by_both_walks() {
+        let src = r#"
+@mem_a = addrspace(3) <256 x ui18>
+@mem_y = addrspace(3) <1 x ui18>
+@s_a = addrspace(10), !"source", !"@mem_a"
+@s_y = addrspace(10), !"dest", !"@mem_y"
+@main.a = addrspace(12) ui18, !"istream", !"CONT", !0, !"s_a"
+@main.y = addrspace(12) ui18, !"ostream", !"CONT", !0, !"s_y"
+@ctr_n = counter(0, 255)
+define void @main () pipe {
+    ui36 %1 = mul ui36 @main.a, @main.a
+    ui36 %y = reduce add tree ui36 0, %1
+}
+"#;
+        let m = parse_and_validate(src).unwrap();
+        let s = analyze(&m).unwrap();
+        let r = s.reduce.expect("reduce facts");
+        assert_eq!(r.shape, crate::tir::ReduceShape::Tree);
+        assert_eq!(r.seg, 256);
+        assert_eq!(r.width, 36);
+        assert_eq!(r.drain(), 8);
+        assert_eq!(s.reduce_drain(), 8);
+        // the accumulator is not a pipeline stage
+        assert_eq!(s.datapath_depth, 1);
+        let ix = crate::tir::ModuleIndex::build(&m).unwrap();
+        assert_eq!(analyze_ix(&ix).unwrap(), s);
+        // acc shape drains in one cycle
+        let m2 = parse_and_validate(&src.replace("tree", "acc")).unwrap();
+        assert_eq!(analyze(&m2).unwrap().reduce_drain(), 1);
+    }
+
+    #[test]
+    fn comb_depth_and_carry_tracked_for_c3() {
+        let src = "define void @main (ui18 %a) comb {\n %1 = add ui18 %a, %a\n %2 = add ui18 %1, %1\n ui20 %3 = mul ui20 %2, %2 }";
+        let m = parse_and_validate(src).unwrap();
+        let s = analyze(&m).unwrap();
+        assert_eq!(s.class, ConfigClass::C3);
+        assert_eq!(s.comb_depth, 3);
+        assert_eq!(s.comb_carry, 20);
+        let ix = crate::tir::ModuleIndex::build(&m).unwrap();
+        assert_eq!(analyze_ix(&ix).unwrap(), s);
+        // pipelined designs carry no comb-leaf chain
+        let p = analyze(&parse_and_validate(&examples::fig7_pipe()).unwrap()).unwrap();
+        assert_eq!((p.comb_depth, p.comb_carry), (0, 0));
     }
 
     #[test]

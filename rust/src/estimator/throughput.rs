@@ -116,11 +116,14 @@ pub fn ewgt_for_class(class: ConfigClass, p: &EwgtParams) -> f64 {
 
 /// Cycle count for one kernel pass, dividing the index space across
 /// lanes / vector PEs (the form the paper's Table 1/2 `Cycles/Kernel`
-/// rows take: C1(E) = I/L = 250 for the simple kernel).
+/// rows take: C1(E) = I/L = 250 for the simple kernel). A reduction
+/// additionally pays its drain latency once per pass (accumulator:
+/// 1 cycle; tree: `ceil(log2(segment))` stages) — the last input must
+/// traverse the combiner before the final value commits.
 pub fn cycles_per_pass(s: &StructInfo, nto: u64) -> u64 {
     let p = s.pipeline_depth();
     let i = s.work_items;
-    match s.class {
+    let base = match s.class {
         ConfigClass::C1 | ConfigClass::C2 => p + i.div_ceil(s.lanes),
         ConfigClass::C3 => 1 + i.div_ceil(s.lanes),
         ConfigClass::C4 => s.seq_ni * nto * (1 + i),
@@ -131,7 +134,8 @@ pub fn cycles_per_pass(s: &StructInfo, nto: u64) -> u64 {
             let seq = if s.seq_ni > 0 { (s.seq_ni * nto * (1 + i)).div_ceil(s.dv.max(1)) } else { 0 };
             pipe.max(seq)
         }
-    }
+    };
+    base + s.reduce_drain()
 }
 
 /// EWGT from a cycle count: `f / (N_R·(T_R·f + repeat · cycles))`, i.e.

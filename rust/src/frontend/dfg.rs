@@ -37,6 +37,11 @@ pub struct Tap {
     pub offset: i64,
     /// Element type of the array.
     pub ty: Ty,
+    /// Periodic stream: the array has fewer dimensions than the loop
+    /// nest (it is indexed by the inner loops only), so its elements
+    /// repeat every segment — lowered to a `WRAP` port whose index wraps
+    /// modulo the memory length (matvec's `x`).
+    pub periodic: bool,
 }
 
 /// The kernel's dataflow graph.
@@ -81,7 +86,17 @@ pub fn build(k: &KernelDef) -> Result<Dfg, String> {
     let root = b.expr(&k.expr)?;
     let mut g = Dfg { nodes: b.nodes, taps: b.taps, root, widths: b.widths };
     let out_width = k.outputs.first().map(|o| o.ty.bits()).unwrap_or(64);
-    narrow(&mut g, out_width);
+    // Accumulator demand rule: a `sum` reduction is modular (addition
+    // mod 2^w commutes with truncation), so the per-item value narrows
+    // to the output demand exactly like a plain map. Order-sensitive-in-
+    // truncation combiners (min/max and the bitwise ops compare/combine
+    // *whole* values) must keep the value exact — truncate-then-combine
+    // differs from combine-then-truncate for them.
+    let demand = match &k.reduce {
+        Some(spec) if spec.op != crate::tir::Op::Add => g.widths[root],
+        _ => out_width,
+    };
+    narrow(&mut g, demand);
     Ok(g)
 }
 
@@ -186,12 +201,25 @@ impl<'k> Builder<'k> {
             .iter()
             .find(|a| a.name == r.array)
             .ok_or_else(|| format!("`{}` is not an input", r.array))?;
+        // Loop-suffix alignment: a full-rank array is indexed by all the
+        // loops in order; in a reduction kernel an array with fewer
+        // dimensions is indexed by the *last* dims.len() loops (matvec's
+        // `x[j]`) and streams periodically.
+        let d0 = self.k.loops.len() - decl.dims.len().min(self.k.loops.len());
+        if d0 > 0 && self.k.reduce.is_none() {
+            return Err(format!(
+                "`{}` has {} dims but the loop nest has {} loops",
+                r.array,
+                decl.dims.len(),
+                self.k.loops.len()
+            ));
+        }
         // Linear offset: dims outer-first; index k strides by the product
         // of the inner dims.
         let mut offset = 0i64;
         for (d, (var, off)) in r.indices.iter().enumerate() {
-            // loop order must match dimension order
-            let (lv, _, _) = &self.k.loops[d];
+            // loop order must match dimension order (suffix-aligned)
+            let (lv, _, _) = &self.k.loops[d0 + d];
             if lv != var {
                 return Err(format!(
                     "`{}[{var}…]`: dimension {d} must be indexed by loop `{lv}`",
@@ -201,7 +229,7 @@ impl<'k> Builder<'k> {
             let stride: u64 = decl.dims[d + 1..].iter().product();
             offset += off * stride as i64;
         }
-        let tap = Tap { array: r.array.clone(), offset, ty: decl.ty };
+        let tap = Tap { array: r.array.clone(), offset, ty: decl.ty, periodic: d0 > 0 };
         let idx = match self.taps.iter().position(|t| *t == tap) {
             Some(i) => i,
             None => {
@@ -297,7 +325,7 @@ mod tests {
         // (a+b), (c+c), mul, +K — c+c's operands dedupe to one tap
         assert_eq!(g.op_count(), 4);
         assert_eq!(g.taps.len(), 3);
-        assert_eq!(g.taps[0], Tap { array: "a".into(), offset: 0, ty: Ty::UInt(18) });
+        assert_eq!(g.taps[0], Tap { array: "a".into(), offset: 0, ty: Ty::UInt(18), periodic: false });
     }
 
     #[test]
@@ -409,6 +437,55 @@ mod tests {
         };
         assert_eq!(g.widths[value], 18); // leaf tap: unchanged
         assert_eq!(g.widths[g.root], 4);
+    }
+
+    #[test]
+    fn sum_reduction_narrows_like_a_map() {
+        // dotn: ui18 output demand narrows the 36-bit product to 18 bits
+        // (modular accumulation commutes with truncation).
+        let k = parse_kernel(
+            "kernel dotn { in a, b : ui18[64]\nout y : ui18[1]\nfor n in 0..64 { y[0] = sum(a[n] * b[n]) } }",
+        )
+        .unwrap();
+        let g = build(&k).unwrap();
+        assert_eq!(g.widths[g.root], 18);
+    }
+
+    #[test]
+    fn min_reduction_keeps_exact_value_width() {
+        // min must compare whole values: truncate-then-min ≠ min-then-
+        // truncate, so the per-item product keeps its exact 36 bits.
+        let k = parse_kernel(
+            "kernel t { in a, b : ui18[64]\nout y : ui18[1]\nfor n in 0..64 { y[0] = reduce(min, 0, a[n] * b[n]) } }",
+        )
+        .unwrap();
+        let g = build(&k).unwrap();
+        assert_eq!(g.widths[g.root], 36);
+    }
+
+    #[test]
+    fn matvec_taps_suffix_align_and_wrap() {
+        let k = parse_kernel(
+            "kernel mv { in A : ui18[16][16]\nin x : ui18[16]\nout y : ui18[16]\nfor i in 0..16, j in 0..16 { y[i] = sum(A[i][j] * x[j]) } }",
+        )
+        .unwrap();
+        let g = build(&k).unwrap();
+        assert_eq!(g.taps.len(), 2);
+        let a = g.taps.iter().find(|t| t.array == "A").unwrap();
+        let x = g.taps.iter().find(|t| t.array == "x").unwrap();
+        assert!(!a.periodic);
+        assert!(x.periodic, "short operand vector must stream periodically");
+        assert_eq!((a.offset, x.offset), (0, 0));
+    }
+
+    #[test]
+    fn short_array_requires_a_reduction() {
+        let k = parse_kernel(
+            "kernel t { in A : ui18[4][4]\nin x : ui18[4]\nout y : ui18[4][4]\nfor i in 0..4, j in 0..4 { y[i][j] = A[i][j] * x[j] } }",
+        )
+        .unwrap();
+        let e = build(&k).unwrap_err();
+        assert!(e.contains("loops"), "{e}");
     }
 
     #[test]

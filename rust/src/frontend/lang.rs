@@ -30,10 +30,44 @@
 //! << >> & | ^` with C precedence; array references may offset the loop
 //! indices by integer constants (`p[i-1][j]` — these become the TIR
 //! offset streams).
+//!
+//! Reductions wrap the right-hand side in `sum(...)` (or the general
+//! `reduce(op, init, ...)` with an associative/commutative combiner):
+//!
+//! ```text
+//! kernel dotn {
+//!     in  a, b : ui18[256]
+//!     out y    : ui18[1]
+//!     for n in 0..256 { y[0] = sum(a[n] * b[n]) }
+//! }
+//!
+//! kernel matvec {
+//!     in  A : ui18[16][16]
+//!     in  x : ui18[16]
+//!     out y : ui18[16]
+//!     for i in 0..16, j in 0..16 { y[i] = sum(A[i][j] * x[j]) }
+//! }
+//! ```
+//!
+//! The innermost loop is the reduction axis; arrays with fewer
+//! dimensions than the loop nest (matvec's `x`) are indexed by the
+//! matching *inner* loops and become periodic (`WRAP`) streams.
 
 use std::fmt;
 
-use crate::tir::Ty;
+use crate::tir::{Op, Ty};
+
+/// A reduction wrapper around the kernel expression: `y[0] = sum(...)`
+/// or `y[i] = reduce(min, 262143, ...)`. The *innermost* loop variable
+/// is the reduction axis; the target is indexed by the remaining outer
+/// loops (or the literal `0` for full 1-D reductions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReduceSpec {
+    /// Combiner (associative + commutative TIR subset).
+    pub op: Op,
+    /// Initial accumulator value.
+    pub init: i64,
+}
 
 /// A parsed kernel.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,6 +86,8 @@ pub struct KernelDef {
     /// Single assignment statement: target array ref = expression.
     pub target: ArrayRef,
     pub expr: Expr,
+    /// `Some` when the expression is reduced over the innermost loop.
+    pub reduce: Option<ReduceSpec>,
 }
 
 /// An array declaration.
@@ -75,7 +111,9 @@ impl ArrayDecl {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArrayRef {
     pub array: String,
-    /// One (loop-var, constant offset) per dimension.
+    /// One (loop-var, constant offset) per dimension. An empty variable
+    /// name is an absolute literal index (`y[0]` — only legal as the
+    /// target of a full 1-D reduction).
     pub indices: Vec<(String, i64)>,
 }
 
@@ -349,14 +387,53 @@ pub fn parse_kernel(src: &str) -> Result<KernelDef, String> {
     p.sym("{")?;
     let target = parse_ref(&mut p, &loops)?;
     p.sym("=")?;
-    let expr = parse_expr(&mut p, &loops, 0)?;
+    // `sum(expr)` / `reduce(op, init, expr)` wrap the whole RHS; a bare
+    // `sum`/`reduce` identifier not followed by `(` stays a constant ref.
+    let mut reduce = None;
+    let expr = match p.peek().clone() {
+        Tok::Ident(id) if id == "sum" || id == "reduce" => {
+            p.bump();
+            if p.peek() == &Tok::Sym("(") {
+                p.bump();
+                if id == "reduce" {
+                    let opname = p.ident()?;
+                    let op = match opname.as_str() {
+                        "add" => Op::Add,
+                        "min" => Op::Min,
+                        "max" => Op::Max,
+                        "and" => Op::And,
+                        "or" => Op::Or,
+                        "xor" => Op::Xor,
+                        other => {
+                            return Err(format!(
+                                "`{other}` is not a reduce combiner (add|min|max|and|or|xor)"
+                            ))
+                        }
+                    };
+                    p.sym(",")?;
+                    let init = p.int()?;
+                    p.sym(",")?;
+                    reduce = Some(ReduceSpec { op, init });
+                } else {
+                    reduce = Some(ReduceSpec { op: Op::Add, init: 0 });
+                }
+                let e = parse_expr(&mut p, &loops, 0)?;
+                p.sym(")")?;
+                e
+            } else {
+                p.i -= 1; // push the identifier back: it is a const ref
+                parse_expr(&mut p, &loops, 0)?
+            }
+        }
+        _ => parse_expr(&mut p, &loops, 0)?,
+    };
     p.sym("}")?;
     p.sym("}")?;
     if p.peek() != &Tok::Eof {
         return Err(format!("trailing input after kernel: {:?}", p.peek()));
     }
 
-    let k = KernelDef { name, consts, inputs, outputs, iter, loops, target, expr };
+    let k = KernelDef { name, consts, inputs, outputs, iter, loops, target, expr, reduce };
     check(&k)?;
     Ok(k)
 }
@@ -366,6 +443,13 @@ fn parse_ref(p: &mut P, loops: &[(String, i64, i64)]) -> Result<ArrayRef, String
     let mut indices = Vec::new();
     while p.peek() == &Tok::Sym("[") {
         p.bump();
+        // Literal index (`y[0]`): the target form of a full reduction.
+        if let Tok::Int(v) = p.peek().clone() {
+            p.bump();
+            indices.push((String::new(), v));
+            p.sym("]")?;
+            continue;
+        }
         let var = p.ident()?;
         if !loops.iter().any(|(v, _, _)| v == &var) {
             return Err(format!("index `{var}` is not a loop variable"));
@@ -461,10 +545,56 @@ fn check(k: &KernelDef) -> Result<(), String> {
     if !k.outputs.iter().any(|o| o.name == k.target.array) {
         return Err(format!("assignment target `{}` is not an output", k.target.array));
     }
+    match &k.reduce {
+        None => {
+            if k.target.indices.iter().any(|(v, _)| v.is_empty()) {
+                return Err("literal indices are only allowed on reduction targets".into());
+            }
+        }
+        Some(spec) => {
+            if !spec.op.is_reduce_combiner() {
+                return Err(format!("`{}` is not a reduce combiner", spec.op));
+            }
+            if k.iter != 1 {
+                return Err("`iter` chaining is not supported for reduction kernels".into());
+            }
+            let out = k.outputs.iter().find(|o| o.name == k.target.array).expect("checked above");
+            if out.dims.len() != 1 {
+                return Err("reduction output must be a 1-D array (one element per segment)".into());
+            }
+            if k.loops.len() == 1 {
+                // Full reduction: the single output cell, written as `y[0]`.
+                if k.target.indices != vec![(String::new(), 0)] {
+                    return Err(format!(
+                        "1-D reduction target must be `{}[0]` (the whole stream folds to one value)",
+                        out.name
+                    ));
+                }
+            } else {
+                // Row-wise reduction: indexed by the outer loop only.
+                let (outer, lo, hi) = &k.loops[0];
+                if k.target.indices != vec![(outer.clone(), 0)] {
+                    return Err(format!(
+                        "2-D reduction target must be `{}[{outer}]` (one value per outer index)",
+                        out.name
+                    ));
+                }
+                if *lo < 0 || *hi as u64 > out.dims[0] {
+                    return Err(format!(
+                        "outer range {lo}..{hi} does not fit reduction output `{}[{}]`",
+                        out.name, out.dims[0]
+                    ));
+                }
+            }
+        }
+    }
     fn walk(e: &Expr, k: &KernelDef, f: &impl Fn(&ArrayRef) -> Result<(), String>) -> Result<(), String> {
         match e {
             Expr::Ref(r) => {
                 f(r)?;
+                if r.indices.iter().any(|(v, _)| v.is_empty()) {
+                    return Err(format!("`{}`: reads must be indexed by loop variables", r.array));
+                }
                 if !k.inputs.iter().any(|i| i.name == r.array) {
                     return Err(format!("read of `{}` which is not an input", r.array));
                 }
@@ -612,6 +742,73 @@ mod tests {
         )
         .unwrap();
         assert_eq!(k.name, "t");
+    }
+
+    #[test]
+    fn parses_sum_reduction() {
+        let k = parse_kernel(
+            "kernel dotn { in a, b : ui18[256]\nout y : ui18[1]\nfor n in 0..256 { y[0] = sum(a[n] * b[n]) } }",
+        )
+        .unwrap();
+        assert_eq!(k.reduce, Some(ReduceSpec { op: Op::Add, init: 0 }));
+        assert_eq!(k.target.indices, vec![(String::new(), 0)]);
+        assert!(matches!(k.expr, Expr::Bin(BinOp::Mul, _, _)));
+    }
+
+    #[test]
+    fn parses_general_reduce_and_rowwise_target() {
+        let k = parse_kernel(
+            "kernel mv { in A : ui18[8][8]\nin x : ui18[8]\nout y : ui18[8]\nfor i in 0..8, j in 0..8 { y[i] = reduce(max, 0, A[i][j] * x[j]) } }",
+        )
+        .unwrap();
+        assert_eq!(k.reduce, Some(ReduceSpec { op: Op::Max, init: 0 }));
+        assert_eq!(k.target.indices, vec![("i".to_string(), 0)]);
+    }
+
+    #[test]
+    fn sum_ident_without_parens_is_a_const() {
+        let k = parse_kernel(
+            "kernel t { const sum : ui18 = 3\nin a : ui18[4]\nout y : ui18[4]\nfor n in 0..4 { y[n] = sum + a[n] } }",
+        )
+        .unwrap();
+        assert!(k.reduce.is_none());
+    }
+
+    #[test]
+    fn rejects_bad_reduction_targets() {
+        // 1-D reduction must write y[0]
+        let e = parse_kernel(
+            "kernel t { in a : ui18[4]\nout y : ui18[4]\nfor n in 0..4 { y[n] = sum(a[n]) } }",
+        )
+        .unwrap_err();
+        assert!(e.contains("y[0]"), "{e}");
+        // 2-D reduction must write y[<outer>]
+        let e = parse_kernel(
+            "kernel t { in a : ui18[4][4]\nout y : ui18[4]\nfor i in 0..4, j in 0..4 { y[0] = sum(a[i][j]) } }",
+        )
+        .unwrap_err();
+        assert!(e.contains("y[i]"), "{e}");
+        // literal target index without a reduction is rejected
+        let e = parse_kernel(
+            "kernel t { in a : ui18[4]\nout y : ui18[4]\nfor n in 0..4 { y[0] = a[n] } }",
+        )
+        .unwrap_err();
+        assert!(e.contains("reduction targets"), "{e}");
+        // the output must cover the outer range
+        let e = parse_kernel(
+            "kernel t { in a : ui18[4][4]\nout y : ui18[2]\nfor i in 0..4, j in 0..4 { y[i] = sum(a[i][j]) } }",
+        )
+        .unwrap_err();
+        assert!(e.contains("does not fit"), "{e}");
+    }
+
+    #[test]
+    fn rejects_reduce_with_iter_chaining() {
+        let e = parse_kernel(
+            "kernel t { in a : ui18[4]\nout y : ui18[1]\niter 3\nfor n in 0..4 { y[0] = sum(a[n]) } }",
+        )
+        .unwrap_err();
+        assert!(e.contains("iter"), "{e}");
     }
 
     #[test]

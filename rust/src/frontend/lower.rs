@@ -32,7 +32,7 @@
 use super::dfg::{self, Node};
 use super::lang::KernelDef;
 use crate::tir::builder::{FuncBuilder, ModuleBuilder};
-use crate::tir::{Kind, Module, Op, Ty};
+use crate::tir::{Kind, Module, Op, ReduceShape, Ty};
 
 /// How the datapath is realised (the paper's design-space axes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -60,32 +60,41 @@ pub struct DesignPoint {
     /// structure — the shape that exercises callee-body emission and
     /// per-call-site alpha-renaming in every backend.
     pub chain: bool,
+    /// Hardware shape of the kernel's reduction, when it has one:
+    /// sequential accumulator (the default) or balanced combiner tree.
+    /// Ignored (and normalised back to `Acc`) for non-reduction kernels.
+    pub reduce: ReduceShape,
 }
 
 impl DesignPoint {
     /// Single pipeline (C2).
     pub fn c2() -> DesignPoint {
-        DesignPoint { style: Style::Pipe, lanes: 1, dv: 1, chain: false }
+        DesignPoint { style: Style::Pipe, lanes: 1, dv: 1, chain: false, reduce: ReduceShape::Acc }
     }
     /// Replicated pipelines (C1).
     pub fn c1(lanes: u64) -> DesignPoint {
-        DesignPoint { style: Style::Pipe, lanes, dv: 1, chain: false }
+        DesignPoint { lanes, ..DesignPoint::c2() }
     }
     /// Replicated single-cycle comb cores (C3).
     pub fn c3(lanes: u64) -> DesignPoint {
-        DesignPoint { style: Style::Comb, lanes, dv: 1, chain: false }
+        DesignPoint { style: Style::Comb, lanes, ..DesignPoint::c2() }
     }
     /// Scalar sequential PE (C4).
     pub fn c4() -> DesignPoint {
-        DesignPoint { style: Style::Seq, lanes: 1, dv: 1, chain: false }
+        DesignPoint { style: Style::Seq, ..DesignPoint::c2() }
     }
     /// Vectorised sequential PEs (C5).
     pub fn c5(dv: u64) -> DesignPoint {
-        DesignPoint { style: Style::Seq, lanes: 1, dv, chain: false }
+        DesignPoint { style: Style::Seq, dv, ..DesignPoint::c2() }
     }
     /// The same point with the datapath split into a comb call chain.
     pub fn chained(mut self) -> DesignPoint {
         self.chain = true;
+        self
+    }
+    /// The same point with the reduction realised as a balanced tree.
+    pub fn tree(mut self) -> DesignPoint {
+        self.reduce = ReduceShape::Tree;
         self
     }
     /// Replication degree (lanes or PEs) of this point.
@@ -95,7 +104,8 @@ impl DesignPoint {
             Style::Seq => self.dv.max(1),
         }
     }
-    /// Short label (`pipe×4`, `seq×2`, `comb×2`, `pipe×1+chain`).
+    /// Short label (`pipe×4`, `seq×2`, `comb×2`, `pipe×1+chain`,
+    /// `pipe×1+tree`).
     pub fn label(&self) -> String {
         let s = match self.style {
             Style::Pipe => "pipe",
@@ -103,7 +113,8 @@ impl DesignPoint {
             Style::Comb => "comb",
         };
         let chain = if self.chain { "+chain" } else { "" };
-        format!("{s}×{}{chain}", self.replicas())
+        let tree = if self.reduce == ReduceShape::Tree { "+tree" } else { "" };
+        format!("{s}×{}{chain}{tree}", self.replicas())
     }
 }
 
@@ -126,6 +137,10 @@ pub struct LoweredKernel {
     /// operand shorthands). Identical at every design point — only the
     /// function *kind* and call-chain split differ.
     instrs: Vec<InstrTemplate>,
+    /// Pre-rendered reduce tail, when the kernel reduces: the leaf ends
+    /// with `reduce <op> <shape> <ty> <init>, <value>` whose shape is
+    /// the only per-point decision (the acc/tree design axis).
+    reduce: Option<ReduceTemplate>,
 }
 
 /// One pre-rendered datapath instruction.
@@ -137,10 +152,31 @@ struct InstrTemplate {
     operands: Vec<String>,
 }
 
+/// The pre-rendered reduce tail of a reduction kernel.
+#[derive(Debug, Clone)]
+struct ReduceTemplate {
+    /// Result name (the output array's name, so the ostream binds it).
+    result: String,
+    op: Op,
+    /// Accumulator type (the per-item value's emission width — modular
+    /// for `sum`, exact for order-sensitive combiners; see `dfg::build`).
+    ty: Ty,
+    init: i64,
+    /// Operand shorthand for the per-item value.
+    operand: String,
+    /// Segment length (items folded per output element).
+    seg: u64,
+}
+
 impl LoweredKernel {
     /// Number of datapath instructions.
     pub fn instr_count(&self) -> usize {
         self.instrs.len()
+    }
+
+    /// Does this kernel reduce its stream?
+    pub fn reduces(&self) -> bool {
+        self.reduce.is_some()
     }
 }
 
@@ -149,11 +185,14 @@ impl LoweredKernel {
 pub fn analyze_kernel(k: &KernelDef) -> Result<LoweredKernel, String> {
     let g = dfg::build(k)?;
     let out = &k.outputs[0];
+    let reducing = k.reduce.is_some();
 
     // Emit ops in topological (creation) order; name nodes %n<id>, and
     // the root after the output array so the ostream binding finds it.
+    // In a reduction kernel the *reduce statement* produces the output
+    // value, so the root keeps its node name and feeds the reduce.
     let node_name = |id: usize| -> String {
-        if id == g.root {
+        if id == g.root && !reducing {
             out.name.clone()
         } else {
             format!("n{id}")
@@ -210,6 +249,49 @@ pub fn analyze_kernel(k: &KernelDef) -> Result<LoweredKernel, String> {
             }
         }
     }
+    if let Some(spec) = &k.reduce {
+        // The reduce tail consumes the root value directly — even a bare
+        // tap (vsum's `sum(a[n])` has an empty datapath).
+        let value_w = match &g.nodes[g.root] {
+            Node::Op { .. } => emit_w[g.root],
+            Node::Input(t) => g.taps[*t].ty.bits(),
+            Node::Const(c) => {
+                k.consts.iter().find(|(n, _, _)| n == c).map(|(_, ty, _)| ty.bits()).expect("checked")
+            }
+            Node::Lit(v) => dfg_lit_width(*v) as u32,
+        };
+        // Accumulator width (the DFG demand rule for accumulators): a
+        // modular sum needs `value + ceil(log2(seg))` exact bits, but
+        // never more than what covers the output demand — min(exact,
+        // max(out, value)). Order-sensitive combiners (min/max/bitwise)
+        // compare whole values, so they stay at the exact value width.
+        let seg = if k.loops.len() == 2 {
+            (k.loops[1].2 - k.loops[1].1).unsigned_abs()
+        } else {
+            (k.loops[0].2 - k.loops[0].1).unsigned_abs()
+        };
+        let acc_w = if spec.op == Op::Add {
+            let exact = value_w as u64 + crate::tir::reduce_tree_depth(seg.max(1));
+            let out_w = out.ty.bits() as u64;
+            exact.min(out_w.max(value_w as u64))
+        } else {
+            value_w as u64
+        };
+        let ty = Ty::UInt(acc_w.clamp(1, 64) as u8);
+        return Ok(LoweredKernel {
+            kernel: k.clone(),
+            reduce: Some(ReduceTemplate {
+                result: out.name.clone(),
+                op: spec.op,
+                ty,
+                init: spec.init,
+                operand: operand(g.root),
+                seg: seg.max(1),
+            }),
+            taps: g.taps,
+            instrs,
+        });
+    }
     if !emitted_root {
         // Root is a bare tap/const (y[n] = a[n]): pass through via add 0.
         let (ty, opnd) = match &g.nodes[g.root] {
@@ -228,7 +310,7 @@ pub fn analyze_kernel(k: &KernelDef) -> Result<LoweredKernel, String> {
             operands: vec![opnd, "0".to_string()],
         });
     }
-    Ok(LoweredKernel { kernel: k.clone(), taps: g.taps, instrs })
+    Ok(LoweredKernel { kernel: k.clone(), taps: g.taps, instrs, reduce: None })
 }
 
 /// The variant-expand pass's output: everything `lower_point` needs to
@@ -242,12 +324,17 @@ struct VariantPlan {
     /// Instruction index where the datapath splits into a `comb` prefix
     /// callee; 0 = single-function datapath (no chain).
     split_at: usize,
+    /// Hardware shape of the reduce tail (ignored without one).
+    reduce_shape: ReduceShape,
 }
 
 /// Variant-expand + leaf-select: map a design point onto a concrete
 /// module plan. A chained point degenerates to the unchained plan when
 /// the datapath is too small to split (the leaf must keep at least the
-/// root instruction).
+/// root instruction). A reduction kernel pins the replica count to 1:
+/// its output rate differs from its input rate, and partial-reduction
+/// recombination across lanes is outside the prototype's streaming
+/// model (ROADMAP notes the lane-partial combiner as follow-up work).
 fn plan_variant(lk: &LoweredKernel, point: DesignPoint) -> VariantPlan {
     let leaf_kind = match point.style {
         Style::Pipe => Kind::Pipe,
@@ -261,7 +348,15 @@ fn plan_variant(lk: &LoweredKernel, point: DesignPoint) -> VariantPlan {
         // The ostream-bound root must stay in the leaf.
         split_at = 0;
     }
-    VariantPlan { replicas: point.replicas().max(1) as usize, leaf_kind, split_at }
+    let replicas = if lk.reduce.is_some() { 1 } else { point.replicas().max(1) as usize };
+    // The pairwise-combining tree re-aligns its stage toggles at segment
+    // boundaries only for power-of-two segments; other segment lengths
+    // degrade to the accumulator shape (and are reported as such).
+    let reduce_shape = match (&lk.reduce, point.reduce) {
+        (Some(r), ReduceShape::Tree) if r.seg.is_power_of_two() => ReduceShape::Tree,
+        _ => ReduceShape::Acc,
+    };
+    VariantPlan { replicas, leaf_kind, split_at, reduce_shape }
 }
 
 /// Name of the comb prefix function a chained plan emits. Public so
@@ -269,16 +364,43 @@ fn plan_variant(lk: &LoweredKernel, point: DesignPoint) -> VariantPlan {
 /// chained point actually realised its chain.
 pub const CHAIN_PREFIX_FN: &str = "f_pre";
 
+/// The single source of degenerate-point truth: a chained point whose
+/// datapath did not split reports no chain, a reduction pins the
+/// replication axes to 1 and reports the shape *actually realised*
+/// (non-power-of-two trees degrade to acc), and the reduce axis is
+/// inert without a reduction. Both [`lower_point`] (naming the module)
+/// and [`realised_point`] (labelling candidates) go through here, so
+/// the two can never drift.
+fn normalise_point(
+    mut p: DesignPoint,
+    reduce_shape: Option<ReduceShape>,
+    chain_realised: bool,
+) -> DesignPoint {
+    p.chain = p.chain && chain_realised;
+    match reduce_shape {
+        Some(shape) => {
+            p.lanes = 1;
+            p.dv = 1;
+            p.reduce = shape;
+        }
+        None => p.reduce = ReduceShape::Acc,
+    }
+    p
+}
+
 /// The design point a lowered module actually realises: a chained point
 /// whose datapath was too small to split degenerates to the unchained
-/// point (the module contains no [`CHAIN_PREFIX_FN`]), and must be
-/// reported as such.
+/// point (the module contains no [`CHAIN_PREFIX_FN`]), a tree point on
+/// a kernel without a reduction degenerates to the plain (acc-labelled)
+/// point, and a reduction module pins its replication axes to 1 and
+/// reports its statement's actual shape — all so no candidate label
+/// claims structure the module does not contain.
 pub fn realised_point(module: &Module, point: DesignPoint) -> DesignPoint {
-    if point.chain && !module.funcs.contains_key(CHAIN_PREFIX_FN) {
-        DesignPoint { chain: false, ..point }
-    } else {
-        point
-    }
+    normalise_point(
+        point,
+        module.reduce_stmt().map(|(_, r)| r.shape),
+        module.funcs.contains_key(CHAIN_PREFIX_FN),
+    )
 }
 
 /// The cheap per-point half of lowering: run the variant-expand pass and
@@ -288,14 +410,15 @@ pub fn realised_point(module: &Module, point: DesignPoint) -> DesignPoint {
 pub fn lower_point(lk: &LoweredKernel, point: DesignPoint) -> Result<Module, String> {
     let plan = plan_variant(lk, point);
     let k = &lk.kernel;
-    // A degenerate chained point (datapath too small to split) produces
-    // exactly the unchained module — name it as such, so the artifact
-    // never claims a call chain it does not contain.
-    let effective = if point.chain && plan.split_at == 0 {
-        DesignPoint { chain: false, ..point }
-    } else {
-        point
-    };
+    // A degenerate point produces exactly the base module — name it
+    // through the shared normalisation, so the artifact never claims
+    // structure it does not contain (chain without a split, tree/lane
+    // shapes a reduction cannot realise).
+    let effective = normalise_point(
+        point,
+        lk.reduce.as_ref().map(|_| plan.reduce_shape),
+        plan.split_at > 0,
+    );
     let name = effective.label().replace('×', "x").replace('+', "_");
     let mut b = ModuleBuilder::new(format!("{}_{}", k.name, name));
     emit_manage(&mut b, lk, plan.replicas);
@@ -337,13 +460,14 @@ fn emit_manage(b: &mut ModuleBuilder, lk: &LoweredKernel, replicas: usize) {
             b.source_stream(format!("str_{}{}", a.name, sfx), format!("mem_{}", a.name));
         }
         b.dest_stream(format!("str_{}{}", out.name, sfx), format!("mem_{}", out.name));
-        // one input port per tap
+        // one input port per tap (periodic taps re-stream via WRAP)
         for (t, tap) in lk.taps.iter().enumerate() {
-            b.istream_port(
+            b.istream_port_full(
                 format!("main.t{t}{sfx}"),
                 tap.ty,
                 format!("str_{}{}", tap.array, sfx),
                 tap.offset,
+                tap.periodic,
             );
         }
         b.ostream_port(format!("main.{}{}", out.name, sfx), out.ty, format!("str_{}{}", out.name, sfx));
@@ -394,6 +518,9 @@ fn emit_datapath(b: &mut ModuleBuilder, lk: &LoweredKernel, plan: VariantPlan) {
     for i in &lk.instrs[plan.split_at..] {
         let refs: Vec<&str> = i.operands.iter().map(String::as_str).collect();
         fb = fb.instr(i.result.clone(), i.op, i.ty, &refs);
+    }
+    if let Some(r) = &lk.reduce {
+        fb = fb.reduce(r.result.clone(), r.op, plan.reduce_shape, r.ty, r.init, &r.operand);
     }
     fb.finish();
 }
@@ -670,6 +797,91 @@ mod tests {
                 assert_eq!(first, fresh, "{} {:?}: shared analysis drifted", k.name, p);
             }
         }
+    }
+
+    fn dot_reduce() -> KernelDef {
+        parse_kernel(
+            "kernel dk { in a, b : ui18[64]\nout y : ui18[1]\nfor n in 0..64 { y[0] = sum(a[n] * b[n]) } }",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn reduce_kernel_lowers_validly_at_every_point_and_shape() {
+        let lk = analyze_kernel(&dot_reduce()).unwrap();
+        assert!(lk.reduces());
+        for p in all_points() {
+            for p in [p, p.tree()] {
+                let m = lower_point(&lk, p).unwrap_or_else(|e| panic!("{p:?}: {e}"));
+                crate::tir::validate::require_synthesizable(&m).unwrap();
+                let (_, r) = m.reduce_stmt().expect("reduce tail emitted");
+                assert_eq!(r.shape, p.reduce, "{p:?}");
+                assert_eq!(r.result, "y");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_kernel_pins_replication_to_one() {
+        // Output rate ≠ input rate: lanes would need a partial-combiner
+        // the prototype does not model, so replication clamps to 1 and
+        // the realised point says so.
+        let lk = analyze_kernel(&dot_reduce()).unwrap();
+        for p in [DesignPoint::c1(4), DesignPoint::c3(4), DesignPoint::c5(4)] {
+            let m = lower_point(&lk, p).unwrap();
+            let base = realised_point(&m, p);
+            assert_eq!((base.lanes, base.dv), (1, 1), "{p:?}");
+            assert_eq!(m, lower_point(&lk, base).unwrap(), "{p:?}: clamped module must equal the ×1 point");
+        }
+    }
+
+    #[test]
+    fn tree_point_degenerates_on_non_reduce_kernels() {
+        let lk = analyze_kernel(&simple()).unwrap();
+        let acc = lower_point(&lk, DesignPoint::c2()).unwrap();
+        let tree = lower_point(&lk, DesignPoint::c2().tree()).unwrap();
+        assert_eq!(acc, tree, "reduce axis is inert without a reduction");
+        assert_eq!(realised_point(&tree, DesignPoint::c2().tree()), DesignPoint::c2());
+    }
+
+    #[test]
+    fn non_pow2_segment_degrades_tree_to_acc() {
+        let k = parse_kernel(
+            "kernel t { in a : ui18[100]\nout y : ui18[1]\nfor n in 0..100 { y[0] = sum(a[n]) } }",
+        )
+        .unwrap();
+        let lk = analyze_kernel(&k).unwrap();
+        let m = lower_point(&lk, DesignPoint::c2().tree()).unwrap();
+        let (_, r) = m.reduce_stmt().unwrap();
+        assert_eq!(r.shape, crate::tir::ReduceShape::Acc, "100-item tree must degrade");
+        assert_eq!(m, lower_point(&lk, DesignPoint::c2()).unwrap());
+        assert_eq!(realised_point(&m, DesignPoint::c2().tree()), DesignPoint::c2());
+    }
+
+    #[test]
+    fn vsum_empty_datapath_reduces_a_bare_tap() {
+        let k = parse_kernel(
+            "kernel vs { in a : ui18[32]\nout y : ui18[1]\nfor n in 0..32 { y[0] = sum(a[n]) } }",
+        )
+        .unwrap();
+        let lk = analyze_kernel(&k).unwrap();
+        assert_eq!(lk.instr_count(), 0);
+        let m = lower_point(&lk, DesignPoint::c2()).unwrap();
+        let (f, r) = m.reduce_stmt().unwrap();
+        assert_eq!(f.name, "f_dp");
+        assert_eq!(r.operand, crate::tir::Operand::Local("t0".into()));
+    }
+
+    #[test]
+    fn matvec_lowering_emits_wrap_port() {
+        let k = parse_kernel(
+            "kernel mv { in A : ui18[8][8]\nin x : ui18[8]\nout y : ui18[8]\nfor i in 0..8, j in 0..8 { y[i] = sum(A[i][j] * x[j]) } }",
+        )
+        .unwrap();
+        let m = lower(&k, DesignPoint::c2()).unwrap();
+        let wraps: Vec<bool> = m.ports.values().filter(|p| p.dir == crate::tir::Dir::Read).map(|p| p.wrap).collect();
+        assert_eq!(wraps.iter().filter(|&&w| w).count(), 1, "exactly the x tap wraps");
+        assert_eq!(m.reduce_segment(), 8);
     }
 
     #[test]

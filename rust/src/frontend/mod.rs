@@ -15,7 +15,7 @@ pub mod dfg;
 pub mod lang;
 pub mod lower;
 
-pub use lang::{parse_kernel, KernelDef};
+pub use lang::{parse_kernel, KernelDef, ReduceSpec};
 pub use lower::{analyze_kernel, lower, lower_point, DesignPoint, LoweredKernel, Style};
 
 /// Parse + lower in one step.

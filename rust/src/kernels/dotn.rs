@@ -1,0 +1,102 @@
+//! Full dot product of two streams — the first *true* reduction in the
+//! library: 256 work-items stream in, **one** value comes out. This is
+//! the workload class the windowed `dot3` only approximated (ROADMAP's
+//! "no accumulator construct in TIR" gap): the datapath ends in a
+//! `reduce add` whose acc/tree shape is a design-space axis of its own.
+
+/// Default stream length.
+pub const N: usize = 256;
+
+/// The kernel in the front-end mini-language at an arbitrary length.
+pub fn dotn_source(n: usize) -> String {
+    assert!(n >= 2);
+    format!(
+        r#"
+kernel dotn {{
+    in  a, b : ui18[{n}]
+    out y : ui18[1]
+    for n in 0..{n} {{
+        y[0] = sum(a[n] * b[n])
+    }}
+}}
+"#
+    )
+}
+
+/// Default-workload front-end source.
+pub fn source() -> String {
+    dotn_source(N)
+}
+
+/// Hand-written parameterised TIR (C2 pipeline, acc shape): exact ui36
+/// products folded by a ui44 accumulator (256 × ui36 never wraps in 44
+/// bits); the ui18 ostream port truncates — the same low bits the
+/// demand-narrowed (18-bit accumulator) lowering produces, because
+/// modular addition commutes with truncation.
+pub fn dotn_tir(n: usize) -> String {
+    assert!(n >= 2);
+    format!(
+        r#"; ***** Manage-IR ***** (full dot product, single pipeline + accumulator)
+define void launch() {{
+    @mem_a = addrspace(3) <{n} x ui18>
+    @mem_b = addrspace(3) <{n} x ui18>
+    @mem_y = addrspace(3) <1 x ui18>
+    @strobj_a = addrspace(10), !"source", !"@mem_a"
+    @strobj_b = addrspace(10), !"source", !"@mem_b"
+    @strobj_y = addrspace(10), !"dest", !"@mem_y"
+    @ctr_n = counter(0, {last})
+    call @main ()
+}}
+; ***** Compute-IR *****
+@main.a = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_a"
+@main.b = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_b"
+@main.y = addrSpace(12) ui18, !"ostream", !"CONT", !0, !"strobj_y"
+define void @f1 (ui18 %a, ui18 %b) pipe {{
+    ui36 %1 = mul ui36 %a, %b
+    ui44 %y = reduce add acc ui44 0, %1
+}}
+define void @main () pipe {{
+    call @f1 (@main.a, @main.b) pipe
+}}
+"#,
+        last = n - 1,
+    )
+}
+
+/// Default-workload hand TIR.
+pub fn tir() -> String {
+    dotn_tir(N)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::tir::{parse_and_validate, validate::require_synthesizable};
+
+    #[test]
+    fn source_parses_as_a_reduction() {
+        let k = parse_kernel(&source()).unwrap();
+        assert_eq!(k.name, "dotn");
+        assert!(k.reduce.is_some());
+        assert_eq!(k.outputs[0].dims, vec![1]);
+    }
+
+    #[test]
+    fn tir_parses_and_validates() {
+        let m = parse_and_validate(&tir()).unwrap();
+        require_synthesizable(&m).unwrap();
+        assert!(m.has_reduce());
+        assert_eq!(m.reduce_segment(), N as u64);
+        assert_eq!(m.work_items(), N as u64);
+    }
+
+    #[test]
+    fn estimator_prices_the_drain() {
+        let m = parse_and_validate(&tir()).unwrap();
+        let e = crate::estimator::estimate(&m, &crate::device::Device::stratix4()).unwrap();
+        // P(1) + I(256) + acc drain(1)
+        assert_eq!(e.cycles_per_pass, 258, "{e:?}");
+        assert_eq!(e.resources.dsp, 4, "one ui36 variable product");
+    }
+}

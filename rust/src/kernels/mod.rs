@@ -26,13 +26,24 @@
 //! | `dot3`     | 1-D windowed dot (2 in) | variable muls → DSP pressure        |
 //! | `scale`    | 1-D affine map          | dense-const DSP, no-window plumbing |
 //! | `shadow`   | 1-D map + call chain    | per-call-site alpha-renaming        |
+//! | `dotn`     | 1-D full dot reduction  | reduce acc/tree axis, drain timing  |
+//! | `vsum`     | 1-D bare-tap reduction  | empty datapath + accumulator        |
+//! | `matvec`   | 2-D row-wise reduction  | segmented reduce, WRAP streams      |
+//!
+//! The three reduction kernels (`dotn`/`vsum`/`matvec`) are the BLAS-1/2
+//! story the windowed `dot3` used to stand in for: their output rate
+//! differs from their input rate, which is exactly what the TIR
+//! `reduce` construct models.
 
 pub mod dot;
+pub mod dotn;
 pub mod fir;
 pub mod jacobi;
+pub mod matvec;
 pub mod mavg;
 pub mod scale;
 pub mod shadow;
+pub mod vsum;
 
 use crate::frontend::{self, KernelDef};
 use crate::sim::DestInit;
@@ -143,6 +154,27 @@ pub fn registry() -> Vec<KernelScenario> {
             hand_tir: shadow::tir,
             dest_init: DestInit::Zero,
         },
+        KernelScenario {
+            name: "dotn",
+            about: "full dot product (true reduction; acc/tree shapes, DSP-heavy)",
+            frontend: dotn::source,
+            hand_tir: dotn::tir,
+            dest_init: DestInit::Zero,
+        },
+        KernelScenario {
+            name: "vsum",
+            about: "vector sum (bare-tap reduction over an empty datapath)",
+            frontend: vsum::source,
+            hand_tir: vsum::tir,
+            dest_init: DestInit::Zero,
+        },
+        KernelScenario {
+            name: "matvec",
+            about: "matrix-vector multiply (row-wise reduction, periodic operand stream)",
+            frontend: matvec::source,
+            hand_tir: matvec::tir,
+            dest_init: DestInit::Zero,
+        },
     ]
 }
 
@@ -192,11 +224,26 @@ mod tests {
     #[test]
     fn registry_has_the_acceptance_floor() {
         // ISSUE 2 acceptance: SOR + ≥5 new workloads beyond the paper's;
-        // ISSUE 3 adds the shadowed-callee-param regression kernel.
+        // ISSUE 3 adds the shadowed-callee-param regression kernel;
+        // ISSUE 4 adds the three reduction kernels (the BLAS-1/2 story).
         let names = names();
-        assert!(names.len() >= 8, "{names:?}");
-        for required in ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow"] {
+        assert!(names.len() >= 11, "{names:?}");
+        for required in [
+            "simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow", "dotn",
+            "vsum", "matvec",
+        ] {
             assert!(names.contains(&required), "missing `{required}`");
+        }
+    }
+
+    #[test]
+    fn reduction_kernels_reduce_and_the_rest_do_not() {
+        for sc in registry() {
+            let k = sc.parse().unwrap();
+            let is_reduce = matches!(sc.name, "dotn" | "vsum" | "matvec");
+            assert_eq!(k.reduce.is_some(), is_reduce, "{}", sc.name);
+            let hand = crate::tir::parse_and_validate(&(sc.hand_tir)()).unwrap();
+            assert_eq!(hand.has_reduce(), is_reduce, "{} hand TIR", sc.name);
         }
     }
 

@@ -18,7 +18,7 @@
 
 use crate::estimator::structure::{self, StructInfo};
 use crate::tir::index::{ModuleIndex, SlotStmt};
-use crate::tir::{Dir, Kind, Module, Slot, SlotOperand, Stmt};
+use crate::tir::{Dir, Kind, Module, Op, ReduceShape, Slot, SlotOperand, Stmt, Ty};
 
 /// One leaf compute core and its stream bindings.
 #[derive(Debug, Clone, PartialEq)]
@@ -68,6 +68,36 @@ impl IndexSpace {
     }
 }
 
+/// The design's reduction, resolved against the index space: segment
+/// length, write base and drain latency are what both execution engines
+/// and the timing engine consume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignReduce {
+    /// SSA result name of the reduce statement (the value the ostream
+    /// port binds).
+    pub result: String,
+    /// Combiner op.
+    pub op: Op,
+    /// Accumulator type.
+    pub ty: Ty,
+    /// Hardware shape (drives the drain latency).
+    pub shape: ReduceShape,
+    /// Initial accumulator value.
+    pub init: i64,
+    /// Work-items folded into each output element.
+    pub seg: u64,
+    /// Output index of segment 0 (the outer counter's first value for
+    /// 2-D row reductions, 0 for full 1-D reductions).
+    pub out_base: i64,
+}
+
+impl DesignReduce {
+    /// Drain latency after a segment's last input, cycles.
+    pub fn drain(&self) -> u64 {
+        self.shape.drain(self.seg)
+    }
+}
+
 /// An elaborated design.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Design {
@@ -77,6 +107,8 @@ pub struct Design {
     pub info: StructInfo,
     /// Work-item index space.
     pub index: IndexSpace,
+    /// The module's reduction, when it has one.
+    pub reduce: Option<DesignReduce>,
 }
 
 impl Design {
@@ -111,7 +143,36 @@ pub fn elaborate_with(ix: &ModuleIndex) -> Result<Design, String> {
     bind_out_ports(ix.module, &mut lanes)?;
 
     let index = index_space(ix.module)?;
-    Ok(Design { lanes, info, index })
+    let reduce = match ix.module.reduce_stmt() {
+        None => None,
+        Some((_, r)) => {
+            if lanes.len() > 1 {
+                return Err(format!(
+                    "{} lanes with a reduce statement: partial-reduction recombination across \
+                     lanes is not modelled (reduction designs are single-lane)",
+                    lanes.len()
+                ));
+            }
+            let seg = ix.module.reduce_segment();
+            if seg == 0 || index.len() % seg != 0 {
+                return Err(format!(
+                    "index space of {} items is not divisible into {seg}-item reduction segments",
+                    index.len()
+                ));
+            }
+            let out_base = if index.dims.len() == 2 { index.dims[0].0 } else { 0 };
+            Some(DesignReduce {
+                result: r.result.clone(),
+                op: r.op,
+                ty: r.ty,
+                shape: r.shape,
+                init: r.init,
+                seg,
+                out_base,
+            })
+        }
+    };
+    Ok(Design { lanes, info, index, reduce })
 }
 
 /// Walk from a function slot, descending through pure wrappers, emitting
@@ -126,7 +187,7 @@ fn collect_lanes(
 ) -> Result<(), String> {
     let fi = ix.func(f);
     let has_calls = fi.body.iter().any(|s| matches!(s, SlotStmt::Call(_)));
-    if fi.n_instrs > 0 || !has_calls {
+    if fi.n_instrs > 0 || fi.n_reduces > 0 || !has_calls {
         // Leaf: bind input ports.
         let mut in_ports = Vec::new();
         let args = call_args.filter(|(a, _)| !a.is_empty());
@@ -252,7 +313,9 @@ fn index_space(m: &Module) -> Result<IndexSpace, String> {
         vec![1]
     } else {
         // Row stride of the 2-D space: the magnitude of the ±row stream
-        // offsets (the line-buffer length — 18 for the SOR grid).
+        // offsets (the line-buffer length — 18 for the SOR grid). A
+        // dense grid with no offset taps (matvec sweeping a full matrix)
+        // strides by the inner counter's span instead.
         let stride = m
             .ports
             .values()
@@ -260,7 +323,7 @@ fn index_space(m: &Module) -> Result<IndexSpace, String> {
             .map(|p| p.offset.unsigned_abs())
             .filter(|&o| o > 1)
             .max()
-            .ok_or("2-D index space needs row-offset ports to infer the row stride")?;
+            .unwrap_or_else(|| chain[1].span());
         vec![stride as i64, 1]
     };
     Ok(IndexSpace { dims, strides })

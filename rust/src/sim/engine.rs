@@ -62,25 +62,29 @@ pub struct GroupTiming {
 ///
 /// * pipelines/comb cores: `fill` cycles, then one item per cycle;
 /// * sequential PEs: `seq_work + 1` cycles per item (compute + the
-///   1-cycle fetch/writeback bubble).
+///   1-cycle fetch/writeback bubble);
+/// * a reduction adds its `drain` after the last item (accumulator
+///   register or combiner-tree traversal before the value commits).
 ///
 /// The explicit state machine below is retained as the oracle — it is
 /// where stall hooks plug in, and the property tests
 /// (`rust/tests/property.rs`) hold this expression to it cycle-exactly.
-pub fn lane_cycles_closed_form(kind: Kind, items: u64, fill: u64, seq_work: u64) -> u64 {
+pub fn lane_cycles_closed_form(kind: Kind, items: u64, fill: u64, seq_work: u64, drain: u64) -> u64 {
     if items == 0 {
         return 0;
     }
-    match kind {
+    let busy = match kind {
         Kind::Pipe | Kind::Comb => fill + items,
         Kind::Seq | Kind::Par => (seq_work + SEQ_ITEM_BUBBLE) * items,
-    }
+    };
+    busy + drain
 }
 
 /// Step one lane through a pass, cycle by cycle, and return its busy
 /// cycles. Deliberately written as an explicit state machine rather than
 /// a closed-form sum: stall hooks (`stall_fn`) plug into the `Stream`
-/// state, and the structure mirrors the generated HDL's FSM. The
+/// state, and the structure mirrors the generated HDL's FSM (including
+/// the `Drain` state a reduction's accumulator/tree adds). The
 /// stall-free special case has a closed form
 /// ([`lane_cycles_closed_form`]) which [`time_pass`] uses.
 pub fn lane_cycles_oracle(
@@ -88,12 +92,14 @@ pub fn lane_cycles_oracle(
     items: u64,
     fill: u64,
     seq_work: u64, // N_I × CPI for seq PEs, 0 for pipelines
+    drain: u64,    // reduction drain after the last item, 0 without one
     mut stall_fn: impl FnMut(u64) -> bool,
 ) -> u64 {
     #[derive(PartialEq)]
     enum S {
         Fill(u64),
         Stream { done: u64, in_item: u64 },
+        Drain(u64),
         Done,
     }
     let mut state = if matches!(kind, Kind::Pipe | Kind::Comb) {
@@ -114,11 +120,12 @@ pub fn lane_cycles_oracle(
                 if stall_fn(t) {
                     S::Stream { done, in_item } // stalled: no progress
                 } else {
+                    let finished = |drain: u64| if drain > 0 { S::Drain(drain) } else { S::Done };
                     match kind {
                         Kind::Pipe | Kind::Comb => {
                             // one valid output per un-stalled cycle
                             if done + 1 >= items {
-                                S::Done
+                                finished(drain)
                             } else {
                                 S::Stream { done: done + 1, in_item: 0 }
                             }
@@ -128,7 +135,7 @@ pub fn lane_cycles_oracle(
                             let per_item = seq_work + SEQ_ITEM_BUBBLE;
                             if in_item + 1 >= per_item {
                                 if done + 1 >= items {
-                                    S::Done
+                                    finished(drain)
                                 } else {
                                     S::Stream { done: done + 1, in_item: 0 }
                                 }
@@ -139,6 +146,8 @@ pub fn lane_cycles_oracle(
                     }
                 }
             }
+            S::Drain(1) => S::Done,
+            S::Drain(n) => S::Drain(n - 1),
             S::Done => unreachable!("stepped past Done"),
         };
         if state == S::Done {
@@ -147,17 +156,19 @@ pub fn lane_cycles_oracle(
     }
 }
 
-/// The `(items, fill, seq_work)` inputs one lane's cycle computation
-/// takes — the single source both [`time_pass`] and the conformance
-/// harness's closed-form-vs-oracle differential derive them from.
-pub fn lane_timing_inputs(d: &Design, lane_idx: usize, seq_cpi: u64) -> (u64, u64, u64) {
+/// The `(items, fill, seq_work, drain)` inputs one lane's cycle
+/// computation takes — the single source both [`time_pass`] and the
+/// conformance harness's closed-form-vs-oracle differential derive them
+/// from.
+pub fn lane_timing_inputs(d: &Design, lane_idx: usize, seq_cpi: u64) -> (u64, u64, u64, u64) {
     let nlanes = d.lanes.len();
     let (start, end) = d.lane_range(lane_idx, nlanes);
     let items = end - start;
     let fill = d.info.datapath_depth + d.info.window_span;
     let seq_work =
         if matches!(d.lanes[lane_idx].kind, Kind::Seq) { d.info.seq_ni.max(1) * seq_cpi } else { 0 };
-    (items, fill, seq_work)
+    let drain = d.reduce.as_ref().map(|r| r.drain()).unwrap_or(0);
+    (items, fill, seq_work, drain)
 }
 
 /// Time one pass of the whole design on a device.
@@ -165,11 +176,11 @@ pub fn time_pass(d: &Design, _dev: &Device, seq_cpi: u64) -> PassTiming {
     let nlanes = d.lanes.len();
     let mut per_lane = Vec::with_capacity(nlanes);
     for k in 0..nlanes {
-        let (items, fill, seq_work) = lane_timing_inputs(d, k, seq_cpi);
+        let (items, fill, seq_work, drain) = lane_timing_inputs(d, k, seq_cpi);
         // CONT streams over banked memories never stall in this design,
         // so the closed form applies; the state-machine oracle stays for
         // FIFO-continuity stall hooks (and as the property-test oracle).
-        let busy = lane_cycles_closed_form(d.lanes[k].kind, items, fill, seq_work);
+        let busy = lane_cycles_closed_form(d.lanes[k].kind, items, fill, seq_work, drain);
         per_lane.push(busy);
     }
     let slowest = per_lane.iter().copied().max().unwrap_or(0);
@@ -271,15 +282,18 @@ mod tests {
 
     #[test]
     fn empty_lane_costs_nothing() {
-        assert_eq!(lane_cycles_oracle(Kind::Pipe, 0, 5, 0, |_| false), 0);
-        assert_eq!(lane_cycles_closed_form(Kind::Pipe, 0, 5, 0), 0);
+        assert_eq!(lane_cycles_oracle(Kind::Pipe, 0, 5, 0, 0, |_| false), 0);
+        assert_eq!(lane_cycles_closed_form(Kind::Pipe, 0, 5, 0, 0), 0);
+        // …even with a drain configured: no items, no value to drain
+        assert_eq!(lane_cycles_oracle(Kind::Pipe, 0, 5, 0, 8, |_| false), 0);
+        assert_eq!(lane_cycles_closed_form(Kind::Pipe, 0, 5, 0, 8), 0);
     }
 
     #[test]
     fn stalls_extend_streaming() {
         // every other cycle stalled → ~2× streaming time
-        let no_stall = lane_cycles_oracle(Kind::Pipe, 100, 3, 0, |_| false);
-        let stalled = lane_cycles_oracle(Kind::Pipe, 100, 3, 0, |t| t % 2 == 0);
+        let no_stall = lane_cycles_oracle(Kind::Pipe, 100, 3, 0, 0, |_| false);
+        let stalled = lane_cycles_oracle(Kind::Pipe, 100, 3, 0, 0, |t| t % 2 == 0);
         assert!(stalled > no_stall + 90, "{no_stall} vs {stalled}");
     }
 
@@ -289,14 +303,28 @@ mod tests {
             for items in [0u64, 1, 2, 7, 100, 1000] {
                 for fill in [0u64, 1, 3, 40] {
                     for seq_work in [0u64, 1, 2, 8] {
-                        assert_eq!(
-                            lane_cycles_closed_form(kind, items, fill, seq_work),
-                            lane_cycles_oracle(kind, items, fill, seq_work, |_| false),
-                            "{kind:?} items={items} fill={fill} seq_work={seq_work}"
-                        );
+                        for drain in [0u64, 1, 8] {
+                            assert_eq!(
+                                lane_cycles_closed_form(kind, items, fill, seq_work, drain),
+                                lane_cycles_oracle(kind, items, fill, seq_work, drain, |_| false),
+                                "{kind:?} items={items} fill={fill} seq_work={seq_work} drain={drain}"
+                            );
+                        }
                     }
                 }
             }
         }
+    }
+
+    #[test]
+    fn drain_extends_the_pass_by_its_latency() {
+        let base = lane_cycles_closed_form(Kind::Pipe, 256, 1, 0, 0);
+        assert_eq!(lane_cycles_closed_form(Kind::Pipe, 256, 1, 0, 1), base + 1);
+        assert_eq!(lane_cycles_closed_form(Kind::Pipe, 256, 1, 0, 8), base + 8);
+        assert_eq!(
+            lane_cycles_oracle(Kind::Pipe, 256, 1, 0, 8, |_| false),
+            base + 8,
+            "oracle drains stage by stage"
+        );
     }
 }

@@ -56,6 +56,13 @@ pub fn eval_func(
                 let sub = eval_func(m, callee, &argv, port_vals)?;
                 env.extend(sub);
             }
+            Stmt::Reduce(r) => {
+                // Per-item view: bind the masked per-item value under the
+                // result name; the cross-item accumulation lives in the
+                // pass runner (the construct's state spans work-items).
+                let v = resolve(m, &r.operand, &env, port_vals)?;
+                env.insert(r.result.clone(), v & r.ty.mask());
+            }
         }
     }
     Ok(env)
@@ -120,13 +127,15 @@ struct CompiledOp {
 }
 
 /// A pre-resolved input-port read: destination register, source memory
-/// index, stream offset, port mask.
+/// index, stream offset, port mask, periodic wrap.
 #[derive(Debug, Clone)]
 struct PortRead {
     dst: usize,
     mem: usize,
     offset: i64,
     mask: u64,
+    /// `WRAP` port: index modulo the backing memory's length.
+    wrap: bool,
 }
 
 /// A pre-resolved output binding: source register, destination memory
@@ -145,6 +154,9 @@ pub struct CompiledLane {
     ops: Vec<CompiledOp>,
     writes: Vec<PortWrite>,
     n_regs: usize,
+    /// Register holding the per-item reduce value (masked copy of the
+    /// reduce operand), when the lane's datapath ends in a reduction.
+    reduce_reg: Option<usize>,
 }
 
 /// Compile one lane of a design against the module's slot index: every
@@ -154,7 +166,13 @@ fn compile_lane(ix: &ModuleIndex, lane: &Lane) -> Result<CompiledLane, String> {
     let leaf = ix
         .func_slot(&lane.func)
         .ok_or_else(|| format!("unknown function `@{}`", lane.func))?;
-    let mut c = CompiledLane { reads: Vec::new(), ops: Vec::new(), writes: Vec::new(), n_regs: 0 };
+    let mut c = CompiledLane {
+        reads: Vec::new(),
+        ops: Vec::new(),
+        writes: Vec::new(),
+        n_regs: 0,
+        reduce_reg: None,
+    };
 
     // Register per referenced input port, by port slot.
     let mut port_reg: HashMap<Slot, usize> = HashMap::new();
@@ -167,7 +185,13 @@ fn compile_lane(ix: &ModuleIndex, lane: &Lane) -> Result<CompiledLane, String> {
         let mem = ix.stream_mem[ix.port_stream[pslot as usize] as usize];
         let r = c.n_regs;
         c.n_regs += 1;
-        c.reads.push(PortRead { dst: r, mem: mem as usize, offset: port.offset, mask: port.ty.mask() });
+        c.reads.push(PortRead {
+            dst: r,
+            mem: mem as usize,
+            offset: port.offset,
+            mask: port.ty.mask(),
+            wrap: port.wrap,
+        });
         port_reg.insert(pslot, r);
         r
     }
@@ -229,6 +253,20 @@ fn compile_lane(ix: &ModuleIndex, lane: &Lane) -> Result<CompiledLane, String> {
                     }
                     compile_func(ix, call.callee, &argv, env, c, port_reg)?;
                 }
+                SlotStmt::Reduce(r) => {
+                    // Masked copy of the per-item value (mirrors
+                    // `eval_func`'s Reduce arm); the pass runner folds it
+                    // across items through `CompiledLane::reduce_reg`.
+                    let a = resolve_src(ix, fi, &r.operand, env, c, port_reg)?;
+                    let dst = c.n_regs;
+                    c.n_regs += 1;
+                    c.ops.push(CompiledOp { op: None, ty: r.ty, a, b: Src::Imm(0), c: None, dst });
+                    env.insert(fi.local_names[r.dst as usize], dst);
+                    if c.reduce_reg.is_some() {
+                        return Err("multiple reduce statements reached one lane".into());
+                    }
+                    c.reduce_reg = Some(dst);
+                }
             }
         }
         Ok(())
@@ -288,19 +326,17 @@ fn compile_lane(ix: &ModuleIndex, lane: &Lane) -> Result<CompiledLane, String> {
 }
 
 impl CompiledLane {
-    /// Evaluate one work-item at linear index `lin` against the memory
-    /// buffers, appending writes to `out`.
+    /// Evaluate one work-item's reads + datapath at linear index `lin`
+    /// (no writes — callers commit per their rate: one write per item
+    /// for maps, one per segment for reductions).
     #[inline]
-    fn eval_item(
-        &self,
-        regs: &mut [u64],
-        bufs: &[Vec<u64>],
-        lin: u64,
-        out: &mut Vec<(usize, u64, u64)>,
-    ) -> Result<(), String> {
+    fn eval_core(&self, regs: &mut [u64], bufs: &[Vec<u64>], lin: u64) -> Result<(), String> {
         for r in &self.reads {
-            let idx = lin as i64 + r.offset;
             let buf = &bufs[r.mem];
+            let mut idx = lin as i64 + r.offset;
+            if r.wrap && !buf.is_empty() {
+                idx = idx.rem_euclid(buf.len() as i64);
+            }
             if idx < 0 || idx as usize >= buf.len() {
                 return Err(format!(
                     "port read out of bounds: index {idx} (mem #{} has {} elems)",
@@ -330,6 +366,20 @@ impl CompiledLane {
                 }
             };
         }
+        Ok(())
+    }
+
+    /// Evaluate one work-item at linear index `lin` against the memory
+    /// buffers, appending writes to `out` (the one-output-per-item path).
+    #[inline]
+    fn eval_item(
+        &self,
+        regs: &mut [u64],
+        bufs: &[Vec<u64>],
+        lin: u64,
+        out: &mut Vec<(usize, u64, u64)>,
+    ) -> Result<(), String> {
+        self.eval_core(regs, bufs, lin)?;
         for w in &self.writes {
             out.push((w.mem, lin, regs[w.src] & w.mask));
         }
@@ -371,17 +421,44 @@ fn restore_bufs(ix: &ModuleIndex, mems: &mut MemState, bufs: Vec<Vec<u64>>) {
 /// Run one pass over dense buffers with pre-compiled lanes — the
 /// per-item hot path, with no name resolution at all. Writes commit only
 /// when every lane evaluated cleanly (streaming semantics: all reads of
-/// a pass see the pass's input state).
+/// a pass see the pass's input state). A reducing lane carries its
+/// accumulator across items and commits one value per index segment.
 fn run_pass_bufs(d: &Design, compiled: &[CompiledLane], bufs: &mut [Vec<u64>]) -> Result<(), String> {
     let nlanes = d.lanes.len();
     let mut writes: Vec<(usize, u64, u64)> = Vec::new();
     let mut regs = vec![0u64; compiled.iter().map(|c| c.n_regs).max().unwrap_or(0)];
     for (k, lane) in compiled.iter().enumerate() {
         let (start, end) = d.lane_range(k, nlanes);
-        for item in start..end {
-            let lin = d.index.linear(item);
-            lane.eval_item(&mut regs, bufs, lin, &mut writes)
-                .map_err(|e| format!("lane {k}, item {item}: {e}"))?;
+        match (&d.reduce, lane.reduce_reg) {
+            (Some(rd), Some(reg)) => {
+                let init = value::wrap(rd.ty, rd.init as i128);
+                let mut acc = init;
+                for item in start..end {
+                    let lin = d.index.linear(item);
+                    lane.eval_core(&mut regs, bufs, lin)
+                        .map_err(|e| format!("lane {k}, item {item}: {e}"))?;
+                    acc = value::eval(rd.op, rd.ty, acc, regs[reg], None);
+                    if (item + 1) % rd.seg == 0 {
+                        let out_idx = (rd.out_base + (item / rd.seg) as i64) as u64;
+                        for w in &lane.writes {
+                            writes.push((w.mem, out_idx, acc & w.mask));
+                        }
+                        acc = init;
+                    }
+                }
+            }
+            (None, None) => {
+                for item in start..end {
+                    let lin = d.index.linear(item);
+                    lane.eval_item(&mut regs, bufs, lin, &mut writes)
+                        .map_err(|e| format!("lane {k}, item {item}: {e}"))?;
+                }
+            }
+            _ => {
+                return Err(format!(
+                    "lane {k}: design and compiled lane disagree about the reduction"
+                ))
+            }
         }
     }
     for (mem, idx, v) in writes {
@@ -395,7 +472,9 @@ fn run_pass_bufs(d: &Design, compiled: &[CompiledLane], bufs: &mut [Vec<u64>]) -
 }
 
 /// Reference (interpreted) pass runner — the semantics oracle the
-/// compiled path is property-tested against.
+/// compiled path is property-tested against. Carries the reduction
+/// accumulator across items exactly like the compiled path (init →
+/// combine per item → commit once per segment).
 pub fn run_pass_interpreted(m: &Module, d: &Design, mems: &mut MemState) -> Result<(), String> {
     let nlanes = d.lanes.len();
     // Collect writes first (streaming semantics: all reads of a pass see
@@ -404,6 +483,7 @@ pub fn run_pass_interpreted(m: &Module, d: &Design, mems: &mut MemState) -> Resu
     for (k, lane) in d.lanes.iter().enumerate() {
         let (start, end) = d.lane_range(k, nlanes);
         let leaf = &m.funcs[&lane.func];
+        let mut acc = d.reduce.as_ref().map(|rd| value::wrap(rd.ty, rd.init as i128));
         for item in start..end {
             let lin = d.index.linear(item);
             // Gather input-port values through stream offsets.
@@ -421,7 +501,10 @@ pub fn run_pass_interpreted(m: &Module, d: &Design, mems: &mut MemState) -> Resu
                 let stream = &m.streams[&port.stream];
                 let mem =
                     mems.get(&stream.mem).ok_or_else(|| format!("memory `@{}` not initialised", stream.mem))?;
-                let idx = lin as i64 + port.offset;
+                let mut idx = lin as i64 + port.offset;
+                if port.wrap && !mem.is_empty() {
+                    idx = idx.rem_euclid(mem.len() as i64);
+                }
                 if idx < 0 || idx as usize >= mem.len() {
                     return Err(format!(
                         "port `@{pname}` reads out of bounds: item {item} → index {idx} (mem `{}` has {} elems)",
@@ -439,7 +522,10 @@ pub fn run_pass_interpreted(m: &Module, d: &Design, mems: &mut MemState) -> Resu
                 if p.dir == Dir::Read && !port_vals.contains_key(p.name.as_str()) {
                     let stream = &m.streams[&p.stream];
                     if let Some(mem) = mems.get(&stream.mem) {
-                        let idx = lin as i64 + p.offset;
+                        let mut idx = lin as i64 + p.offset;
+                        if p.wrap && !mem.is_empty() {
+                            idx = idx.rem_euclid(mem.len() as i64);
+                        }
                         if idx >= 0 && (idx as usize) < mem.len() {
                             port_vals.insert(p.name.as_str(), mem[idx as usize] & p.ty.mask());
                         }
@@ -448,6 +534,22 @@ pub fn run_pass_interpreted(m: &Module, d: &Design, mems: &mut MemState) -> Resu
             }
             let argv = if leaf.params.is_empty() { Vec::new() } else { args };
             let env = eval_func(m, leaf, &argv, &port_vals)?;
+            if let (Some(rd), Some(acc)) = (&d.reduce, acc.as_mut()) {
+                let v = env.get(&rd.result).copied().ok_or_else(|| {
+                    format!("lane `@{}` computes no reduce value `%{}`", lane.func, rd.result)
+                })?;
+                *acc = value::eval(rd.op, rd.ty, *acc, v, None);
+                if (item + 1) % rd.seg == 0 {
+                    let out_idx = (rd.out_base + (item / rd.seg) as i64) as u64;
+                    for out in &lane.out_ports {
+                        let port = &m.ports[out];
+                        let stream = &m.streams[&port.stream];
+                        writes.push((stream.mem.clone(), out_idx, *acc & port.ty.mask()));
+                    }
+                    *acc = value::wrap(rd.ty, rd.init as i128);
+                }
+                continue;
+            }
             for out in &lane.out_ports {
                 let port = &m.ports[out];
                 let local = port_local_name(out);
@@ -690,6 +792,77 @@ mod tests {
             run_pass(&m, &d, &mut fast).unwrap();
             run_pass_interpreted(&m, &d, &mut slow).unwrap();
             assert_eq!(fast, slow, "{name}: compiled != interpreted");
+        }
+    }
+
+    #[test]
+    fn reduce_pass_accumulates_and_matches_interpreter() {
+        let src = r#"
+@mem_a = addrspace(3) <64 x ui18>
+@mem_y = addrspace(3) <1 x ui18>
+@s_a = addrspace(10), !"source", !"@mem_a"
+@s_y = addrspace(10), !"dest", !"@mem_y"
+@main.a = addrspace(12) ui18, !"istream", !"CONT", !0, !"s_a"
+@main.y = addrspace(12) ui18, !"ostream", !"CONT", !0, !"s_y"
+@ctr_n = counter(0, 63)
+define void @main () pipe {
+    ui24 %y = reduce add acc ui24 0, @main.a
+}
+"#;
+        let m = parse_and_validate(src).unwrap();
+        let d = elaborate(&m).unwrap();
+        let rd = d.reduce.as_ref().expect("design carries the reduction");
+        assert_eq!((rd.seg, rd.out_base), (64, 0));
+        let mut rng = Prng::new(5);
+        let a: Vec<u64> = rng.vec_ui18(64).into_iter().map(|v| v as u64).collect();
+        let mut mems = MemState::new();
+        mems.insert("mem_a".into(), a.clone());
+        mems.insert("mem_y".into(), vec![0]);
+        let mut interp = mems.clone();
+        run_pass(&m, &d, &mut mems).unwrap();
+        run_pass_interpreted(&m, &d, &mut interp).unwrap();
+        assert_eq!(mems, interp, "compiled != interpreted on a reduction");
+        let want = a.iter().sum::<u64>() & MASK18;
+        assert_eq!(mems["mem_y"][0], want);
+    }
+
+    #[test]
+    fn rowwise_reduce_with_wrap_port_matches_matvec() {
+        // 4×4 matvec: A row-major, x periodic via WRAP; y[i] = Σ A[i][j]·x[j].
+        let src = r#"
+@mem_A = addrspace(3) <16 x ui18>
+@mem_x = addrspace(3) <4 x ui18>
+@mem_y = addrspace(3) <4 x ui18>
+@s_A = addrspace(10), !"source", !"@mem_A"
+@s_x = addrspace(10), !"source", !"@mem_x"
+@s_y = addrspace(10), !"dest", !"@mem_y"
+@main.a = addrspace(12) ui18, !"istream", !"CONT", !0, !"s_A"
+@main.x = addrspace(12) ui18, !"istream", !"CONT", !"WRAP", !0, !"s_x"
+@main.y = addrspace(12) ui18, !"ostream", !"CONT", !0, !"s_y"
+@ctr_j = counter(0, 3)
+@ctr_i = counter(0, 3) nest(@ctr_j)
+define void @main () pipe {
+    ui36 %1 = mul ui36 @main.a, @main.x
+    ui36 %y = reduce add acc ui36 0, %1
+}
+"#;
+        let m = parse_and_validate(src).unwrap();
+        let d = elaborate(&m).unwrap();
+        assert_eq!(d.index.strides, vec![4, 1], "dense grid strides by the inner span");
+        assert_eq!(d.reduce.as_ref().unwrap().seg, 4);
+        let a: Vec<u64> = (1..=16).collect();
+        let x: Vec<u64> = vec![1, 2, 3, 4];
+        let mut mems = MemState::new();
+        mems.insert("mem_A".into(), a.clone());
+        mems.insert("mem_x".into(), x.clone());
+        mems.insert("mem_y".into(), vec![0; 4]);
+        let mut interp = mems.clone();
+        run_pass(&m, &d, &mut mems).unwrap();
+        run_pass_interpreted(&m, &d, &mut interp).unwrap();
+        assert_eq!(mems, interp);
+        for i in 0..4 {
+            let want: u64 = (0..4).map(|j| a[i * 4 + j] * x[j]).sum();
+            assert_eq!(mems["mem_y"][i], want & MASK18, "row {i}");
         }
     }
 

@@ -166,6 +166,7 @@ fn elaborate_func(m: &Module, f: &Func, db: &CostDb, k: u64, n: &mut Netlist) ->
                             }
                         }
                     }
+                    Stmt::Reduce(_) => {} // elaborated below, shape-dependent
                 }
             }
             for (lv, carry) in stage_levels.values() {
@@ -211,6 +212,32 @@ fn elaborate_func(m: &Module, f: &Func, db: &CostDb, k: u64, n: &mut Netlist) ->
                 n.luts += k * SEQ_FSM_LUT;
                 n.regs += k * (SEQ_FSM_REG + regfile_bits);
                 n.bram_bits += k * ni * SEQ_INSTR_WORD_BITS;
+            }
+        }
+    }
+    // Reduce tail at netlist granularity: the accumulator pays one
+    // combiner whose register feedback path is a real timing stage (the
+    // carry chain cannot be pipelined away — the acc shape's II-cycle
+    // feedback); the tree pays one combiner + stage register per level
+    // and derates the clock via `Netlist::reduce_levels`.
+    for rs in m.reduces_of(f) {
+        let bits = rs.ty.bits() as u64;
+        let cost = db.instr_cost(rs.op, rs.ty, None);
+        let (lv, _) = instr_levels(m, rs.op, bits, &[]);
+        match rs.shape {
+            crate::tir::ReduceShape::Acc => {
+                n.luts += k * (cost.alut + 3); // combiner + segment-counter share
+                n.dsps += k * cost.dsp;
+                n.regs += k * (bits + 8);
+                n.observe_stage(lv + 1, bits); // register→combiner→register feedback
+            }
+            crate::tir::ReduceShape::Tree => {
+                let depth = crate::tir::reduce_tree_depth(m.reduce_segment()).max(1);
+                n.luts += k * (depth * cost.alut + depth + 4);
+                n.dsps += k * depth * cost.dsp;
+                n.regs += k * (depth * bits + depth + 8);
+                n.observe_stage(lv, bits);
+                n.reduce_levels = n.reduce_levels.max(depth);
             }
         }
     }
@@ -380,6 +407,35 @@ mod tests {
             assert!(dev_pct(e.resources.bram_bits, s.resources.bram_bits) < 10.0);
             assert_eq!(e.resources.dsp, s.resources.dsp);
         }
+    }
+
+    #[test]
+    fn reduce_shapes_elaborate_with_tree_derate() {
+        let src = r#"
+@mem_a = addrspace(3) <256 x ui18>
+@mem_y = addrspace(3) <1 x ui18>
+@s_a = addrspace(10), !"source", !"@mem_a"
+@s_y = addrspace(10), !"dest", !"@mem_y"
+@main.a = addrspace(12) ui18, !"istream", !"CONT", !0, !"s_a"
+@main.y = addrspace(12) ui18, !"ostream", !"CONT", !0, !"s_y"
+define void @main () pipe {
+    ui36 %1 = mul ui36 @main.a, @main.a
+    ui36 %y = reduce add acc ui36 0, %1
+}
+"#;
+        let acc = synth(src);
+        let tree = synth(&src.replace("acc ui36", "tree ui36"));
+        assert_eq!(acc.netlist.reduce_levels, 0);
+        assert_eq!(tree.netlist.reduce_levels, 8, "{:?}", tree.netlist);
+        assert!(tree.resources.alut > acc.resources.alut);
+        assert!(tree.resources.reg > acc.resources.reg + 7 * 36);
+        // the acc feedback path registers as a timing stage
+        assert!(acc.netlist.crit_carry_bits >= 36, "{:?}", acc.netlist);
+        // tree shape derates the achieved clock below the acc shape
+        let dev = Device::stratix4();
+        let f_acc = super::super::timing::achieved_fmax_mhz(&acc.netlist, acc.resources.alut, &dev);
+        let f_tree = super::super::timing::achieved_fmax_mhz(&tree.netlist, tree.resources.alut, &dev);
+        assert!(f_tree < f_acc, "{f_tree} vs {f_acc}");
     }
 
     #[test]

@@ -23,6 +23,10 @@ pub struct Netlist {
     pub crit_carry_bits: u64,
     /// Mux levels added by multi-port distribution networks.
     pub xbar_levels: u64,
+    /// Pipelined combiner-tree stages of a tree-shaped reduction (0 for
+    /// the accumulator shape / no reduction): each stage adds clock
+    /// distribution + retiming pressure, derating the achieved Fmax.
+    pub reduce_levels: u64,
     /// True when the design uses offset (line-buffered) streams — the
     /// line-buffer address path adds routing delay.
     pub stencil: bool,

@@ -34,6 +34,10 @@ pub const T_CARRY_NS: f64 = 0.05;
 pub const T_STENCIL_NS: f64 = 1.0;
 /// Congestion coefficient: ns of extra routing at 100 % ALUT utilisation.
 pub const T_CONGESTION_NS: f64 = 6.0;
+/// Per-stage penalty of a tree-shaped reduction, ns: each pipelined
+/// combiner stage adds clock-distribution and retiming pressure on the
+/// feedback-free path (depth-dependent Fmax derate of the tree shape).
+pub const T_REDUCE_TREE_NS: f64 = 0.15;
 
 /// Achieved clock for a placed netlist on a device, MHz.
 pub fn achieved_fmax_mhz(n: &Netlist, alut_used: u64, dev: &Device) -> f64 {
@@ -43,6 +47,7 @@ pub fn achieved_fmax_mhz(n: &Netlist, alut_used: u64, dev: &Device) -> f64 {
         + n.crit_levels as f64 * T_LUT_NS
         + n.crit_carry_bits as f64 * T_CARRY_NS
         + n.xbar_levels as f64 * T_LUT_NS
+        + n.reduce_levels as f64 * T_REDUCE_TREE_NS
         + if n.stencil { T_STENCIL_NS } else { 0.0 }
         + T_CONGESTION_NS * util;
     (1000.0 / period).min(dev.ceiling_fmax_mhz)
@@ -77,6 +82,15 @@ mod tests {
         let f = achieved_fmax_mhz(&n, 500, &dev());
         // paper SOR C2(A): ≈199 MHz
         assert!((190.0..240.0).contains(&f), "{f}");
+    }
+
+    #[test]
+    fn tree_reduction_stages_derate_fmax() {
+        let acc = Netlist { crit_levels: 2, crit_carry_bits: 36, ..Default::default() };
+        let tree = Netlist { reduce_levels: 8, ..acc };
+        let f_acc = achieved_fmax_mhz(&acc, 5_000, &dev());
+        let f_tree = achieved_fmax_mhz(&tree, 5_000, &dev());
+        assert!(f_tree < f_acc, "{f_tree} vs {f_acc}");
     }
 
     #[test]

@@ -78,6 +78,15 @@ impl Op {
         }
     }
 
+    /// May this op combine a `reduce` stream? Restricted to the
+    /// associative *and* commutative subset, so the sequential
+    /// accumulator and the balanced tree are interchangeable shapes of
+    /// the same value (order-insensitivity is what the conformance
+    /// harness's acc-vs-tree diff relies on).
+    pub fn is_reduce_combiner(&self) -> bool {
+        matches!(self, Op::Add | Op::Min | Op::Max | Op::And | Op::Or | Op::Xor)
+    }
+
     /// Parse an opcode mnemonic.
     pub fn parse(s: &str) -> Option<Op> {
         Some(match s {
@@ -168,6 +177,72 @@ pub struct Call {
     pub repeat: u64,
 }
 
+/// How a `reduce` statement is realised in hardware — the paper-style
+/// design-space axis the front-end sweeps (`DesignPoint::tree()`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ReduceShape {
+    /// Sequential accumulator: one combiner with a register feedback
+    /// path (II-cycle feedback; cheap LUT/FF, 1-cycle drain).
+    #[default]
+    Acc,
+    /// Balanced combiner tree: log-depth pipelined partial combining
+    /// (DSP/LUT heavy, `ceil(log2(segment))`-cycle drain).
+    Tree,
+}
+
+impl fmt::Display for ReduceShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReduceShape::Acc => write!(f, "acc"),
+            ReduceShape::Tree => write!(f, "tree"),
+        }
+    }
+}
+
+/// Combiner-tree depth for a segment length (0 for 1-element segments).
+pub fn reduce_tree_depth(seg: u64) -> u64 {
+    if seg <= 1 {
+        0
+    } else {
+        64 - (seg - 1).leading_zeros() as u64
+    }
+}
+
+impl ReduceShape {
+    /// Drain latency in cycles: how long after the last input the
+    /// reduced value takes to reach the output register.
+    pub fn drain(&self, seg: u64) -> u64 {
+        match self {
+            ReduceShape::Acc => 1,
+            ReduceShape::Tree => reduce_tree_depth(seg).max(1),
+        }
+    }
+}
+
+/// A stream reduction: `ui38 %y = reduce add acc ui38 0, %5`.
+///
+/// Unlike an [`Instr`], a reduce consumes one value per work-item but
+/// produces **one result per index segment** (the innermost counter
+/// span, or the whole pass when the index space is 1-D) — the first
+/// TIR construct whose output rate differs from its input rate. The
+/// result may only feed an ostream port; it never re-enters the
+/// per-item datapath (validated).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReduceStmt {
+    /// SSA result name (without `%`).
+    pub result: String,
+    /// Accumulator type (must accept the operand's type).
+    pub ty: Ty,
+    /// Combiner op ([`Op::is_reduce_combiner`] subset).
+    pub op: Op,
+    /// Hardware shape (accumulator or balanced tree).
+    pub shape: ReduceShape,
+    /// Initial accumulator value (re-loaded at each segment start).
+    pub init: i64,
+    /// The per-item value being reduced.
+    pub operand: Operand,
+}
+
 /// A statement in a compute function body.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Stmt {
@@ -175,6 +250,8 @@ pub enum Stmt {
     Instr(Instr),
     /// Call to another compute function.
     Call(Call),
+    /// Stream reduction (accumulator / tree).
+    Reduce(ReduceStmt),
 }
 
 /// A compute function: `define void @f1 (...) pipe { ... }`.
@@ -266,6 +343,11 @@ pub struct Port {
     /// Stream offset in elements (paper's offset streams, Fig 15): the
     /// `!N` metadata. `+cols`/`-cols` offsets realise ±1-row stencil taps.
     pub offset: i64,
+    /// Periodic stream (`!"WRAP"` metadata): the element index wraps
+    /// modulo the backing memory's length, so a short operand vector is
+    /// re-streamed once per index segment (matvec's `x` against each
+    /// matrix row).
+    pub wrap: bool,
     /// Name of the stream object this port taps.
     pub stream: String,
 }
@@ -372,6 +454,64 @@ impl Module {
             _ => None,
         })
     }
+
+    /// Iterate reduce statements of one function.
+    pub fn reduces_of<'a>(&'a self, func: &'a Func) -> impl Iterator<Item = &'a ReduceStmt> {
+        func.body.iter().filter_map(|s| match s {
+            Stmt::Reduce(r) => Some(r),
+            _ => None,
+        })
+    }
+
+    /// The module's unique reduce statement (the validator enforces at
+    /// most one per module) together with the function holding it.
+    pub fn reduce_stmt(&self) -> Option<(&Func, &ReduceStmt)> {
+        self.funcs.values().find_map(|f| self.reduces_of(f).next().map(|r| (f, r)))
+    }
+
+    /// Does the module contain a reduce statement?
+    pub fn has_reduce(&self) -> bool {
+        self.reduce_stmt().is_some()
+    }
+
+    /// Names of the streams tapped by periodic (`WRAP`) read ports,
+    /// sorted and deduplicated — the set the HDL emitter materialises
+    /// as `wrapbuf_<stream>` modules and the conformance scan checks
+    /// against (one shared source, so the two cannot drift).
+    pub fn wrap_streams(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .ports
+            .values()
+            .filter(|p| p.dir == Dir::Read && p.wrap)
+            .map(|p| p.stream.as_str())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Reduction segment length: how many consecutive work-items fold
+    /// into one reduced output. The innermost counter's span when the
+    /// index space is multi-dimensional (matvec reduces each row), else
+    /// the whole pass (dot products / vector sums).
+    pub fn reduce_segment(&self) -> u64 {
+        if self.counters.len() >= 2 {
+            let nested: Vec<&str> = self.counters.values().filter_map(|c| c.nest.as_deref()).collect();
+            let Some(outer) = self.counters.values().find(|c| !nested.contains(&c.name.as_str())) else {
+                return self.work_items().max(1);
+            };
+            let mut cur = outer;
+            while let Some(inner) = cur.nest.as_deref() {
+                match self.counters.get(inner) {
+                    Some(c) => cur = c,
+                    None => break,
+                }
+            }
+            cur.span()
+        } else {
+            self.work_items().max(1)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -422,7 +562,7 @@ mod tests {
         m.streams.insert("strobj_a".into(), StreamObject { name: "strobj_a".into(), mem: "mem_a".into(), dir: Dir::Read });
         m.ports.insert(
             "main.a".into(),
-            Port { name: "main.a".into(), ty: Ty::UInt(18), dir: Dir::Read, continuity: Continuity::Cont, offset: 0, stream: "strobj_a".into() },
+            Port { name: "main.a".into(), ty: Ty::UInt(18), dir: Dir::Read, continuity: Continuity::Cont, offset: 0, wrap: false, stream: "strobj_a".into() },
         );
         assert_eq!(m.work_items(), 1000);
     }
@@ -432,5 +572,39 @@ mod tests {
         assert_eq!(Operand::Local("x".into()).to_string(), "%x");
         assert_eq!(Operand::Global("k".into()).to_string(), "@k");
         assert_eq!(Operand::Imm(-3).to_string(), "-3");
+    }
+
+    #[test]
+    fn reduce_combiner_subset() {
+        for op in [Op::Add, Op::Min, Op::Max, Op::And, Op::Or, Op::Xor] {
+            assert!(op.is_reduce_combiner(), "{op}");
+        }
+        for op in [Op::Sub, Op::Mul, Op::Div, Op::Shl, Op::Lshr, Op::Ashr, Op::Mac] {
+            assert!(!op.is_reduce_combiner(), "{op}");
+        }
+    }
+
+    #[test]
+    fn tree_depth_and_drain() {
+        assert_eq!(reduce_tree_depth(1), 0);
+        assert_eq!(reduce_tree_depth(2), 1);
+        assert_eq!(reduce_tree_depth(3), 2);
+        assert_eq!(reduce_tree_depth(256), 8);
+        assert_eq!(ReduceShape::Acc.drain(256), 1);
+        assert_eq!(ReduceShape::Tree.drain(256), 8);
+        assert_eq!(ReduceShape::Tree.drain(1), 1, "tree of one segment still registers once");
+    }
+
+    #[test]
+    fn reduce_segment_from_counters() {
+        let mut m = Module::new("t");
+        // 1-D: the whole index space is one segment.
+        m.counters.insert("n".into(), Counter { name: "n".into(), from: 0, to: 255, nest: None });
+        assert_eq!(m.reduce_segment(), 256);
+        // 2-D: the innermost counter's span.
+        m.counters.insert("i".into(), Counter { name: "i".into(), from: 0, to: 15, nest: Some("n".into()) });
+        assert_eq!(m.reduce_segment(), 256);
+        m.counters.get_mut("n").unwrap().to = 15;
+        assert_eq!(m.reduce_segment(), 16);
     }
 }

@@ -80,10 +80,23 @@ impl ModuleBuilder {
         stream: T,
         offset: i64,
     ) -> &mut Self {
+        self.istream_port_full(name, ty, stream, offset, false)
+    }
+
+    /// Declare an input port with a stream offset and an explicit wrap
+    /// (periodic re-streaming) flag.
+    pub fn istream_port_full<S: Into<String>, T: Into<String>>(
+        &mut self,
+        name: S,
+        ty: Ty,
+        stream: T,
+        offset: i64,
+        wrap: bool,
+    ) -> &mut Self {
         let name = name.into();
         self.m.ports.insert(
             name.clone(),
-            Port { name, ty, dir: Dir::Read, continuity: Continuity::Cont, offset, stream: stream.into() },
+            Port { name, ty, dir: Dir::Read, continuity: Continuity::Cont, offset, wrap, stream: stream.into() },
         );
         self
     }
@@ -98,7 +111,7 @@ impl ModuleBuilder {
         let name = name.into();
         self.m.ports.insert(
             name.clone(),
-            Port { name, ty, dir: Dir::Write, continuity: Continuity::Cont, offset: 0, stream: stream.into() },
+            Port { name, ty, dir: Dir::Write, continuity: Continuity::Cont, offset: 0, wrap: false, stream: stream.into() },
         );
         self
     }
@@ -164,6 +177,27 @@ impl<'a> FuncBuilder<'a> {
     pub fn call<S: Into<String>>(mut self, callee: S, args: &[&str], kind: Option<Kind>, repeat: u64) -> Self {
         let args = args.iter().map(|s| parse_operand(s)).collect();
         self.f.body.push(Stmt::Call(Call { callee: callee.into(), args, kind, repeat }));
+        self
+    }
+
+    /// Add a reduce statement (accumulator / tree stream reduction).
+    pub fn reduce<S: Into<String>>(
+        mut self,
+        result: S,
+        op: Op,
+        shape: ReduceShape,
+        ty: Ty,
+        init: i64,
+        operand: &str,
+    ) -> Self {
+        self.f.body.push(Stmt::Reduce(ReduceStmt {
+            result: result.into(),
+            ty,
+            op,
+            shape,
+            init,
+            operand: parse_operand(operand),
+        }));
         self
     }
 
@@ -236,6 +270,28 @@ mod tests {
     #[should_panic]
     fn bad_operand_shorthand_panics() {
         parse_operand("not-an-operand");
+    }
+
+    #[test]
+    fn builds_reduce_module_and_roundtrips() {
+        let mut b = ModuleBuilder::new("r");
+        b.local_mem("mem_a", 16, u18());
+        b.local_mem("mem_y", 1, u18());
+        b.source_stream("s_a", "mem_a");
+        b.dest_stream("s_y", "mem_y");
+        b.istream_port_full("main.a", u18(), "s_a", 0, true);
+        b.ostream_port("main.y", u18(), "s_y");
+        b.func("main", Kind::Pipe)
+            .instr("1", Op::Add, u18(), &["@main.a", "@main.a"])
+            .reduce("y", Op::Add, ReduceShape::Tree, u18(), 0, "%1")
+            .finish();
+        b.launch_call("main", 1);
+        let m = b.finish().unwrap();
+        assert!(m.has_reduce());
+        assert!(m.ports["main.a"].wrap);
+        let text = crate::tir::pretty::print(&m);
+        let reparsed = crate::tir::parse_and_validate(&text).unwrap();
+        assert_eq!(m, reparsed);
     }
 
     #[test]

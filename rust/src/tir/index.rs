@@ -19,7 +19,7 @@
 
 use std::collections::HashMap;
 
-use super::ast::{Const, Func, Kind, MemObject, Module, Op, Port, Stmt, StreamObject};
+use super::ast::{Const, Func, Kind, MemObject, Module, Op, Port, ReduceShape, Stmt, StreamObject};
 use super::types::Ty;
 
 /// Dense index into one of the per-namespace slot tables.
@@ -60,6 +60,20 @@ pub struct SlotCall {
     pub repeat: u64,
 }
 
+/// One reduce statement with slot-resolved result and operand. The
+/// shape/segment facts stay on the statement (they are module-level
+/// constants, resolved by the consumers via [`Module::reduce_segment`]).
+#[derive(Debug, Clone)]
+pub struct SlotReduce {
+    /// Local slot of the result.
+    pub dst: Slot,
+    pub op: Op,
+    pub ty: Ty,
+    pub shape: ReduceShape,
+    pub init: i64,
+    pub operand: SlotOperand,
+}
+
 /// A statement of an indexed function body. The vector is 1:1 with the
 /// AST body (`FuncIndex::ast.body[i]` is the source of `body[i]`), so
 /// diagnostics can always recover the original text.
@@ -67,6 +81,7 @@ pub struct SlotCall {
 pub enum SlotStmt {
     Instr(SlotInstr),
     Call(SlotCall),
+    Reduce(SlotReduce),
 }
 
 /// A statement of the pre-extracted ASAP-schedule program (see
@@ -96,6 +111,8 @@ pub struct FuncIndex<'m> {
     pub n_locals: u32,
     /// Own SSA instruction count.
     pub n_instrs: u32,
+    /// Own reduce-statement count (0 or 1 after validation).
+    pub n_reduces: u32,
     /// Slot-resolved body, 1:1 with `ast.body`.
     pub body: Vec<SlotStmt>,
     /// Local slot → name (borrowed from the module AST).
@@ -307,8 +324,31 @@ impl<'m> ModuleIndex<'m> {
         let mut body = Vec::with_capacity(f.body.len());
         let mut sched = Vec::with_capacity(f.body.len());
         let mut n_instrs = 0u32;
+        let mut n_reduces = 0u32;
         for s in &f.body {
             match s {
+                Stmt::Reduce(r) => {
+                    n_reduces += 1;
+                    // No schedule statement: the accumulator sits outside
+                    // the per-item stage chain (its latency is the drain,
+                    // priced separately by estimator and timing engine).
+                    let operand = match &r.operand {
+                        super::ast::Operand::Local(n) => {
+                            SlotOperand::Local(intern_local(n.as_str(), &mut local_names))
+                        }
+                        super::ast::Operand::Global(g) => self.resolve_global(g.as_str())?,
+                        super::ast::Operand::Imm(v) => SlotOperand::Imm(*v),
+                    };
+                    let dst = intern_local(r.result.as_str(), &mut local_names);
+                    body.push(SlotStmt::Reduce(SlotReduce {
+                        dst,
+                        op: r.op,
+                        ty: r.ty,
+                        shape: r.shape,
+                        init: r.init,
+                        operand,
+                    }));
+                }
                 Stmt::Instr(i) => {
                     n_instrs += 1;
                     let mut operands = Vec::with_capacity(i.operands.len());
@@ -354,9 +394,17 @@ impl<'m> ModuleIndex<'m> {
                     let callee_ast = &self.module.funcs[&c.callee];
                     let mut defs = Vec::new();
                     for cs in &callee_ast.body {
-                        if let Stmt::Instr(ci) = cs {
-                            defs.push(sched_intern(ci.result.as_str(), &mut n_sched));
-                            intern_local(ci.result.as_str(), &mut local_names);
+                        match cs {
+                            Stmt::Instr(ci) => {
+                                defs.push(sched_intern(ci.result.as_str(), &mut n_sched));
+                                intern_local(ci.result.as_str(), &mut local_names);
+                            }
+                            // Imported reduce results resolve by name but
+                            // take no schedule stage (drain-only values).
+                            Stmt::Reduce(cr) => {
+                                intern_local(cr.result.as_str(), &mut local_names);
+                            }
+                            Stmt::Call(_) => {}
                         }
                     }
                     body.push(SlotStmt::Call(SlotCall { callee, args, repeat: c.repeat }));
@@ -371,6 +419,7 @@ impl<'m> ModuleIndex<'m> {
             n_params,
             n_locals: local_names.len() as u32,
             n_instrs,
+            n_reduces,
             body,
             local_names,
             sched,

@@ -40,8 +40,8 @@ pub mod types;
 pub mod validate;
 
 pub use ast::{
-    addrspace, Call, Const, Continuity, Counter, Dir, Func, Instr, Kind, MemObject, Module, Op,
-    Operand, Port, Stmt, StreamObject,
+    addrspace, reduce_tree_depth, Call, Const, Continuity, Counter, Dir, Func, Instr, Kind,
+    MemObject, Module, Op, Operand, Port, ReduceShape, ReduceStmt, Stmt, StreamObject,
 };
 pub use index::{ModuleIndex, Slot, SlotOperand};
 pub use types::Ty;

@@ -202,7 +202,7 @@ impl Parser {
     fn parse_stmt(&mut self) -> Result<Stmt, Error> {
         match self.peek() {
             Tok::Ident(kw) if kw == "call" => Ok(Stmt::Call(self.parse_call()?)),
-            _ => Ok(Stmt::Instr(self.parse_instr()?)),
+            _ => self.parse_instr(),
         }
     }
 
@@ -244,8 +244,9 @@ impl Parser {
         Ok(Call { callee, args, kind, repeat })
     }
 
-    /// `[ty] %r = op ty a, b[, c]`.
-    fn parse_instr(&mut self) -> Result<Instr, Error> {
+    /// `[ty] %r = op ty a, b[, c]`, or the reduce form
+    /// `[ty] %r = reduce <op> <acc|tree> <ty> <init>, <operand>`.
+    fn parse_instr(&mut self) -> Result<Stmt, Error> {
         // Optional leading result type (the paper writes it, LLVM omits it).
         if let Tok::Ident(_) = self.peek() {
             // lookahead: Ident Local Eq => leading type form
@@ -261,6 +262,9 @@ impl Parser {
         self.eat(&Tok::Eq)?;
         let sp = self.span();
         let op_name = self.ident()?;
+        if op_name == "reduce" {
+            return Ok(Stmt::Reduce(self.parse_reduce_tail(result)?));
+        }
         let op = Op::parse(&op_name)
             .ok_or_else(|| Error::parse(sp, format!("unknown opcode `{op_name}`")))?;
         let ty = self.ty()?;
@@ -273,7 +277,26 @@ impl Parser {
                 break;
             }
         }
-        Ok(Instr { result, ty, op, operands })
+        Ok(Stmt::Instr(Instr { result, ty, op, operands }))
+    }
+
+    /// Continue after `%r = reduce`: `<op> <acc|tree> <ty> <init>, <operand>`.
+    fn parse_reduce_tail(&mut self, result: String) -> Result<ReduceStmt, Error> {
+        let sp = self.span();
+        let op_name = self.ident()?;
+        let op = Op::parse(&op_name)
+            .ok_or_else(|| Error::parse(sp, format!("unknown reduce combiner `{op_name}`")))?;
+        let sp = self.span();
+        let shape = match self.ident()?.as_str() {
+            "acc" => ReduceShape::Acc,
+            "tree" => ReduceShape::Tree,
+            other => return Err(Error::parse(sp, format!("expected reduce shape acc|tree, found `{other}`"))),
+        };
+        let ty = self.ty()?;
+        let init = self.int()?;
+        self.eat(&Tok::Comma)?;
+        let operand = self.parse_operand()?;
+        Ok(ReduceStmt { result, ty, op, shape, init, operand })
     }
 
     fn parse_operand(&mut self) -> Result<Operand, Error> {
@@ -416,11 +439,13 @@ pub enum Meta {
     Int(i64),
 }
 
-/// Interpret port metadata: direction, continuity, offset, stream name.
+/// Interpret port metadata: direction, continuity, wrap, offset, stream
+/// name.
 fn port_from_meta(name: String, ty: Ty, meta: Vec<Meta>) -> Result<Port, String> {
     let mut dir = None;
     let mut continuity = Continuity::Cont;
     let mut offset = 0i64;
+    let mut wrap = false;
     let mut stream = None;
     for item in meta {
         match item {
@@ -429,6 +454,7 @@ fn port_from_meta(name: String, ty: Ty, meta: Vec<Meta>) -> Result<Port, String>
                 "ostream" => dir = Some(Dir::Write),
                 "CONT" => continuity = Continuity::Cont,
                 "FIFO" => continuity = Continuity::Fifo,
+                "WRAP" => wrap = true,
                 other => stream = Some(other.trim_start_matches('@').to_string()),
             },
             Meta::Int(v) => offset = v,
@@ -436,7 +462,7 @@ fn port_from_meta(name: String, ty: Ty, meta: Vec<Meta>) -> Result<Port, String>
     }
     let dir = dir.ok_or_else(|| format!("port `@{name}` missing !\"istream\"/!\"ostream\""))?;
     let stream = stream.ok_or_else(|| format!("port `@{name}` missing stream-object metadata"))?;
-    Ok(Port { name, ty, dir, continuity, offset, stream })
+    Ok(Port { name, ty, dir, continuity, offset, wrap, stream })
 }
 
 /// Interpret stream-object metadata: direction + backing memory.
@@ -544,6 +570,42 @@ mod tests {
             Stmt::Instr(i) => assert_eq!(i.operands.len(), 3),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn parses_reduce_statement_both_shapes() {
+        for (shape_kw, shape) in [("acc", crate::tir::ast::ReduceShape::Acc), ("tree", crate::tir::ast::ReduceShape::Tree)] {
+            let src = format!(
+                "define void @f (ui18 %a) pipe {{ ui36 %1 = mul ui36 %a, %a\n ui36 %y = reduce add {shape_kw} ui36 0, %1 }}"
+            );
+            let m = parse(&src).unwrap();
+            match &m.funcs["f"].body[1] {
+                Stmt::Reduce(r) => {
+                    assert_eq!(r.result, "y");
+                    assert_eq!(r.op, Op::Add);
+                    assert_eq!(r.shape, shape);
+                    assert_eq!(r.init, 0);
+                    assert_eq!(r.operand, Operand::Local("1".into()));
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_reduce_shape() {
+        let src = "define void @f (ui18 %a) pipe { %y = reduce add ring ui18 0, %a }";
+        let e = parse(src).unwrap_err();
+        assert!(e.to_string().contains("acc|tree"), "{e}");
+    }
+
+    #[test]
+    fn parses_wrap_port_metadata() {
+        let src = r#"@main.x = addrspace(12) ui18, !"istream", !"CONT", !"WRAP", !0, !"strobj_x""#;
+        let m = parse(src).unwrap();
+        assert!(m.ports["main.x"].wrap);
+        let plain = parse(r#"@main.a = addrspace(12) ui18, !"istream", !"CONT", !0, !"strobj_a""#).unwrap();
+        assert!(!plain.ports["main.a"].wrap);
     }
 
     #[test]

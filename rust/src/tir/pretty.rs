@@ -44,9 +44,10 @@ pub fn print(m: &Module) -> String {
     for p in m.ports.values() {
         let dir = if p.dir == Dir::Read { "istream" } else { "ostream" };
         let cont = if p.continuity == Continuity::Cont { "CONT" } else { "FIFO" };
+        let wrap = if p.wrap { ", !\"WRAP\"" } else { "" };
         let _ = writeln!(
             out,
-            "@{} = addrspace(12) {}, !\"{dir}\", !\"{cont}\", !{}, !\"{}\"",
+            "@{} = addrspace(12) {}, !\"{dir}\", !\"{cont}\"{wrap}, !{}, !\"{}\"",
             p.name, p.ty, p.offset, p.stream
         );
     }
@@ -66,6 +67,13 @@ pub fn print(m: &Module) -> String {
                 }
                 Stmt::Call(c) => {
                     let _ = writeln!(out, "    {}", fmt_call(c));
+                }
+                Stmt::Reduce(r) => {
+                    let _ = writeln!(
+                        out,
+                        "    {} %{} = reduce {} {} {} {}, {}",
+                        r.ty, r.result, r.op, r.shape, r.ty, r.init, r.operand
+                    );
                 }
             }
         }
@@ -112,6 +120,29 @@ mod tests {
     fn roundtrip_is_fixpoint() {
         let m1 = parse(&examples::fig15_sor_default()).unwrap();
         let t1 = print(&m1);
+        let m2 = parse(&t1).unwrap();
+        let t2 = print(&m2);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn reduce_and_wrap_roundtrip() {
+        let src = r#"
+@mem_a = addrspace(3) <16 x ui18>
+@mem_y = addrspace(3) <1 x ui18>
+@s_a = addrspace(10), !"source", !"@mem_a"
+@s_y = addrspace(10), !"dest", !"@mem_y"
+@main.a = addrspace(12) ui18, !"istream", !"CONT", !"WRAP", !0, !"s_a"
+@main.y = addrspace(12) ui18, !"ostream", !"CONT", !0, !"s_y"
+define void @main () pipe {
+    ui24 %1 = mul ui24 @main.a, @main.a
+    ui24 %y = reduce add tree ui24 0, %1
+}
+"#;
+        let m1 = parse(src).unwrap();
+        let t1 = print(&m1);
+        assert!(t1.contains("reduce add tree ui24 0, %1"), "{t1}");
+        assert!(t1.contains("!\"WRAP\""), "{t1}");
         let m2 = parse(&t1).unwrap();
         let t2 = print(&m2);
         assert_eq!(t1, t2);

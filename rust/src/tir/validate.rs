@@ -27,6 +27,17 @@ pub fn validate(m: &Module) -> Result<(), Error> {
 
     // --- 1. object references ------------------------------------------------
     for p in m.ports.values() {
+        if p.wrap && p.offset != 0 {
+            // The wrapbuf realisation replays the captured vector at
+            // phase `lin mod N` with no offset path; a wrap+offset port
+            // would silently diverge from the simulator's
+            // `(lin+offset) mod N` read (and spuriously line-buffer).
+            return err(format!(
+                "port `@{}` combines WRAP with a nonzero offset ({}): periodic streams must \
+                 tap at offset 0",
+                p.name, p.offset
+            ));
+        }
         let Some(s) = m.streams.get(&p.stream) else {
             return err(format!("port `@{}` references unknown stream `{}`", p.name, p.stream));
         };
@@ -66,6 +77,26 @@ pub fn validate(m: &Module) -> Result<(), Error> {
         validate_func(m, f)?;
     }
 
+    // A reduce statement fans the whole index stream into one value, so
+    // its segmentation, drain timing and output binding are module-level
+    // facts: the prototype supports exactly one per module.
+    let n_reduces: usize = m.funcs.values().map(|f| m.reduces_of(f).count()).sum();
+    if n_reduces > 1 {
+        return err(format!("{n_reduces} reduce statements: the prototype supports one reduction per module"));
+    }
+    if let Some((_, r)) = m.reduce_stmt() {
+        // The tree shape's pairwise-combining cascade re-aligns at
+        // segment boundaries only when segments are powers of two.
+        let seg = m.reduce_segment();
+        if r.shape == ReduceShape::Tree && !seg.is_power_of_two() {
+            return err(format!(
+                "tree-shaped reduce `%{}` over a {seg}-item segment: the combiner tree needs a \
+                 power-of-two segment (use the accumulator shape)",
+                r.result
+            ));
+        }
+    }
+
     // --- 5. call graph -------------------------------------------------------
     check_call_graph(m)?;
 
@@ -95,17 +126,20 @@ pub fn validate(m: &Module) -> Result<(), Error> {
 pub fn require_synthesizable(m: &Module) -> Result<(), Error> {
     for f in m.funcs.values() {
         for s in &f.body {
-            if let Stmt::Instr(i) = s {
-                if !i.ty.is_synthesizable() {
-                    return Err(Error::validate(
-                        m.name.clone(),
-                        format!(
-                            "instruction `%{}` in `@{}` uses `{}`: floating point is parsed but not \
-                             supported by the prototype estimator/simulator (paper §8 footnote 2)",
-                            i.result, f.name, i.ty
-                        ),
-                    ));
-                }
+            let (result, ty) = match s {
+                Stmt::Instr(i) => (&i.result, i.ty),
+                Stmt::Reduce(r) => (&r.result, r.ty),
+                Stmt::Call(_) => continue,
+            };
+            if !ty.is_synthesizable() {
+                return Err(Error::validate(
+                    m.name.clone(),
+                    format!(
+                        "instruction `%{result}` in `@{}` uses `{ty}`: floating point is parsed but not \
+                         supported by the prototype estimator/simulator (paper §8 footnote 2)",
+                        f.name
+                    ),
+                ));
             }
         }
         for (p, ty) in &f.params {
@@ -131,6 +165,10 @@ fn validate_func(m: &Module, f: &Func) -> Result<(), Error> {
     // present but unusable.
     let mut local_ty: BTreeMap<&str, Ty> = BTreeMap::new();
     let mut ambiguous: BTreeSet<&str> = BTreeSet::new();
+    // Reduce results exist only at drain time (output rate ≠ input
+    // rate): they may bind an ostream port but never re-enter the
+    // per-item datapath as an operand.
+    let mut reduce_results: BTreeSet<&str> = BTreeSet::new();
     for (p, ty) in &f.params {
         if local_ty.insert(p.as_str(), *ty).is_some() {
             return err(format!("duplicate parameter `%{p}` in `@{}`", f.name));
@@ -153,6 +191,13 @@ fn validate_func(m: &Module, f: &Func) -> Result<(), Error> {
                 for opnd in &i.operands {
                     match opnd {
                         Operand::Local(n) => {
+                            if reduce_results.contains(n.as_str()) {
+                                return err(format!(
+                                    "`%{}` in `@{}` consumes reduce result `%{n}`: a reduction \
+                                     exists only at drain time and may only feed an ostream port",
+                                    i.result, f.name
+                                ));
+                            }
                             if ambiguous.contains(n.as_str()) {
                                 return err(format!(
                                     "`%{}` in `@{}` uses `%{n}`, which is ambiguous (imported \
@@ -247,13 +292,24 @@ fn validate_func(m: &Module, f: &Func) -> Result<(), Error> {
                 // Import the callee's SSA results into this scope; a name
                 // imported twice (or colliding with a local) is poisoned.
                 for stmt in &callee.body {
-                    if let Stmt::Instr(ci) = stmt {
-                        let name = ci.result.as_str();
-                        // Find the interned &str living in the callee AST —
-                        // lifetime is tied to `m`, same as everything else.
-                        if local_ty.insert(name, ci.ty).is_some() {
-                            ambiguous.insert(name);
+                    match stmt {
+                        Stmt::Instr(ci) => {
+                            let name = ci.result.as_str();
+                            // Find the interned &str living in the callee AST —
+                            // lifetime is tied to `m`, same as everything else.
+                            if local_ty.insert(name, ci.ty).is_some() {
+                                ambiguous.insert(name);
+                            }
                         }
+                        Stmt::Reduce(cr) => {
+                            // Imported reduce results stay drain-only.
+                            let name = cr.result.as_str();
+                            if local_ty.insert(name, cr.ty).is_some() {
+                                ambiguous.insert(name);
+                            }
+                            reduce_results.insert(name);
+                        }
+                        Stmt::Call(_) => {}
                     }
                 }
                 if c.repeat > 1 && f.name != "main" {
@@ -263,6 +319,84 @@ fn validate_func(m: &Module, f: &Func) -> Result<(), Error> {
                         c.callee, f.name
                     ));
                 }
+            }
+            Stmt::Reduce(r) => {
+                if !r.op.is_reduce_combiner() {
+                    return err(format!(
+                        "`%{}` in `@{}`: `{}` is not an associative/commutative reduce \
+                         combiner (use add|min|max|and|or|xor)",
+                        r.result, f.name, r.op
+                    ));
+                }
+                let bits = r.ty.bits();
+                if bits < 64 && !r.ty.is_signed() && (r.init < 0 || (r.init as u64) > r.ty.mask()) {
+                    return err(format!(
+                        "reduce init {} does not fit `{}` in `@{}`",
+                        r.init, r.ty, f.name
+                    ));
+                }
+                match &r.operand {
+                    Operand::Local(n) => {
+                        if reduce_results.contains(n.as_str()) {
+                            return err(format!(
+                                "reduce `%{}` in `@{}` consumes reduce result `%{n}`",
+                                r.result, f.name
+                            ));
+                        }
+                        if ambiguous.contains(n.as_str()) {
+                            return err(format!(
+                                "reduce `%{}` in `@{}` uses `%{n}`, which is ambiguous",
+                                r.result, f.name
+                            ));
+                        }
+                        let Some(t) = local_ty.get(n.as_str()) else {
+                            return err(format!(
+                                "reduce `%{}` in `@{}` uses `%{n}` before definition (SSA)",
+                                r.result, f.name
+                            ));
+                        };
+                        if !r.ty.accepts(t) {
+                            return err(format!(
+                                "type mismatch in `@{}`: reduce operand `%{n}` is {t}, \
+                                 accumulator is {} (only implicit widening is allowed)",
+                                f.name, r.ty
+                            ));
+                        }
+                    }
+                    Operand::Global(g) => {
+                        let gty = m
+                            .consts
+                            .get(g)
+                            .map(|c| c.ty)
+                            .or_else(|| m.ports.get(g).map(|p| p.ty));
+                        let Some(gty) = gty else {
+                            return err(format!(
+                                "reduce `%{}` in `@{}` references unknown global `@{g}`",
+                                r.result, f.name
+                            ));
+                        };
+                        if !r.ty.accepts(&gty) {
+                            return err(format!(
+                                "type mismatch in `@{}`: reduce operand `@{g}` is {gty}, \
+                                 accumulator is {}",
+                                f.name, r.ty
+                            ));
+                        }
+                    }
+                    Operand::Imm(v) => {
+                        if bits < 64 && !r.ty.is_signed() && (*v < 0 || (*v as u64) > r.ty.mask()) {
+                            return err(format!(
+                                "reduce operand {v} does not fit `{}` in `@{}`",
+                                r.ty, f.name
+                            ));
+                        }
+                    }
+                }
+                let name = r.result.as_str();
+                if local_ty.insert(name, r.ty).is_some() && !ambiguous.contains(name) {
+                    return err(format!("SSA violation: `%{}` redefined in `@{}`", r.result, f.name));
+                }
+                reduce_results.insert(name);
             }
         }
     }
@@ -435,6 +569,86 @@ define void @main () pipe { %1 = add ui18 1, 1 }
         validate(&m).unwrap();
         let e = require_synthesizable(&m).unwrap_err();
         assert!(e.to_string().contains("floating point"), "{e}");
+    }
+
+    fn reduce_src(body: &str) -> String {
+        format!(
+            "@mem_a = addrspace(3) <16 x ui18>\n\
+             @mem_y = addrspace(3) <1 x ui18>\n\
+             @s_a = addrspace(10), !\"source\", !\"@mem_a\"\n\
+             @s_y = addrspace(10), !\"dest\", !\"@mem_y\"\n\
+             @main.a = addrspace(12) ui18, !\"istream\", !\"CONT\", !0, !\"s_a\"\n\
+             @main.y = addrspace(12) ui18, !\"ostream\", !\"CONT\", !0, !\"s_y\"\n\
+             define void @main () pipe {{\n{body}\n}}"
+        )
+    }
+
+    #[test]
+    fn reduce_statement_validates() {
+        let src = reduce_src("    ui24 %1 = mul ui24 @main.a, @main.a\n    ui24 %y = reduce add acc ui24 0, %1");
+        parse_and_validate(&src).unwrap();
+    }
+
+    #[test]
+    fn reduce_result_may_not_reenter_the_datapath() {
+        let src = reduce_src(
+            "    ui24 %1 = mul ui24 @main.a, @main.a\n    ui24 %y = reduce add acc ui24 0, %1\n    ui24 %2 = add ui24 %y, %y",
+        );
+        let e = parse_and_validate(&src).unwrap_err();
+        assert!(e.to_string().contains("drain"), "{e}");
+    }
+
+    #[test]
+    fn reduce_rejects_non_associative_combiner() {
+        let src = reduce_src("    ui24 %y = reduce sub acc ui24 0, @main.a");
+        let e = parse_and_validate(&src).unwrap_err();
+        assert!(e.to_string().contains("combiner"), "{e}");
+    }
+
+    #[test]
+    fn reduce_rejects_narrowing_operand() {
+        let src = reduce_src("    ui24 %1 = mul ui24 @main.a, @main.a\n    ui18 %y = reduce add acc ui18 0, %1");
+        let e = parse_and_validate(&src).unwrap_err();
+        assert!(e.to_string().contains("widening"), "{e}");
+    }
+
+    #[test]
+    fn reduce_rejects_oversized_init() {
+        let src = reduce_src("    ui18 %y = reduce add acc ui18 300000, @main.a");
+        let e = parse_and_validate(&src).unwrap_err();
+        assert!(e.to_string().contains("init"), "{e}");
+    }
+
+    #[test]
+    fn rejects_wrap_port_with_offset() {
+        let src = reduce_src("    ui24 %y = reduce add acc ui24 0, @main.a")
+            .replace("!\"CONT\", !0, !\"s_a\"", "!\"CONT\", !\"WRAP\", !1, !\"s_a\"");
+        let e = parse_and_validate(&src).unwrap_err();
+        assert!(e.to_string().contains("WRAP"), "{e}");
+        // offset-0 wrap ports stay legal
+        let ok = src.replace("!\"WRAP\", !1,", "!\"WRAP\", !0,");
+        parse_and_validate(&ok).unwrap();
+    }
+
+    #[test]
+    fn rejects_tree_reduce_over_non_pow2_segment() {
+        // mem_a has 16 elems but the counter sweeps 12 items
+        let src = reduce_src("    ui22 %y = reduce add tree ui22 0, @main.a")
+            .replace("define void @main", "@ctr_n = counter(0, 11)\ndefine void @main");
+        let e = parse_and_validate(&src).unwrap_err();
+        assert!(e.to_string().contains("power-of-two"), "{e}");
+        // the accumulator shape has no such restriction
+        let acc = src.replace("tree", "acc");
+        parse_and_validate(&acc).unwrap();
+    }
+
+    #[test]
+    fn rejects_two_reductions_per_module() {
+        let src = reduce_src(
+            "    ui18 %y = reduce add acc ui18 0, @main.a\n    ui18 %z = reduce max acc ui18 0, @main.a",
+        );
+        let e = parse_and_validate(&src).unwrap_err();
+        assert!(e.to_string().contains("one reduction"), "{e}");
     }
 
     #[test]

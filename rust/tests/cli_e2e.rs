@@ -80,8 +80,10 @@ fn sweep_covers_the_whole_kernel_library() {
         "sweep builtin:all --devices stratix4 --jobs 2 --max-lanes 2 --max-dv 2",
     ))
     .unwrap();
-    assert!(out.contains("8 kernel(s) × 1 device(s)"), "{out}");
-    for name in ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow"] {
+    assert!(out.contains("11 kernel(s) × 1 device(s)"), "{out}");
+    for name in
+        ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow", "dotn", "vsum", "matvec"]
+    {
         assert!(out.contains(name), "missing `{name}` in:\n{out}");
     }
 }
@@ -102,6 +104,22 @@ fn sweep_mixes_library_and_user_kernel_files() {
     .unwrap();
     assert!(out.contains("fir3"), "{out}");
     assert!(out.contains("blur"), "{out}");
+}
+
+#[test]
+fn sweep_explores_acc_and_tree_points_for_reduction_kernels() {
+    // ISSUE 4 acceptance: `tytra sweep` explores acc and tree reduce
+    // points for dotn/vsum/matvec.
+    let out = dispatch(&args(
+        "sweep builtin:dotn builtin:vsum builtin:matvec --devices stratix4 --jobs 2 --max-lanes 2 --max-dv 2 --reduce",
+    ))
+    .unwrap();
+    assert!(out.contains("3 kernel(s) × 1 device(s)"), "{out}");
+    for name in ["dotn", "vsum", "matvec"] {
+        assert!(out.contains(name), "missing `{name}` in:\n{out}");
+    }
+    // 12 points per kernel (6 base + 6 tree twins)
+    assert!(out.contains("12 points each"), "{out}");
 }
 
 #[test]

@@ -47,12 +47,20 @@ fn check_snapshot(name: &str, content: &str) {
 fn lowered_kernels_emit_deterministic_snapshotted_verilog() {
     for sc in kernels::registry() {
         let k = sc.parse().unwrap();
-        for (suffix, point) in [
+        let reduces = k.reduce.is_some();
+        let mut points = vec![
             ("c2", DesignPoint::c2()),
             ("c1x2", DesignPoint::c1(2)),
             ("c3x2", DesignPoint::c3(2)),
             ("c2chain", DesignPoint::c2().chained()),
-        ] {
+        ];
+        if reduces {
+            // both reduce shapes at the pipeline and comb styles (the
+            // non-reduce kernels would just duplicate their base files)
+            points.push(("c2tree", DesignPoint::c2().tree()));
+            points.push(("c3x2tree", DesignPoint::c3(2).tree()));
+        }
+        for (suffix, point) in points {
             let m = frontend::lower(&k, point).unwrap();
             let v1 = hdl::generate_verilog(&m).unwrap();
             let v2 = hdl::generate_verilog(&m).unwrap();
@@ -81,9 +89,9 @@ fn hand_tir_emits_deterministic_snapshotted_verilog() {
 fn emitted_verilog_passes_the_structural_scan() {
     // The conformance harness's structural invariants, applied to every
     // snapshot candidate directly (so this test fails even when the
-    // snapshot was just (re-)blessed) — including the C3 comb/par and
-    // call-chain shapes, and the acceptance criterion that no snapshot
-    // instantiates a module the emitter never defined.
+    // snapshot was just (re-)blessed) — including the C3 comb/par,
+    // call-chain and both reduce shapes, and the acceptance criterion
+    // that no snapshot instantiates a module the emitter never defined.
     for sc in kernels::registry() {
         let k = sc.parse().unwrap();
         for point in [
@@ -91,6 +99,9 @@ fn emitted_verilog_passes_the_structural_scan() {
             DesignPoint::c3(2),
             DesignPoint::c2().chained(),
             DesignPoint::c4().chained(),
+            DesignPoint::c2().tree(),
+            DesignPoint::c3(1).tree(),
+            DesignPoint::c4().tree(),
         ] {
             let m = frontend::lower(&k, point).unwrap();
             let v = hdl::generate_verilog(&m).unwrap();
@@ -101,12 +112,25 @@ fn emitted_verilog_passes_the_structural_scan() {
             let opens = v.lines().filter(|l| l.starts_with("module ")).count();
             let closes = v.lines().filter(|l| l.trim() == "endmodule").count();
             assert_eq!(opens, closes, "{}: unbalanced modules", sc.name);
+            // reduction registers: declared, single-driver, acc feeds back
+            if let Some((_, r)) = m.reduce_stmt() {
+                let issues = tytra::conformance::reduce_register_issues(
+                    &v,
+                    &r.result,
+                    r.shape == tytra::tir::ReduceShape::Acc,
+                );
+                assert!(issues.is_empty(), "{} {point:?}: {issues:?}", sc.name);
+            }
         }
         // hand-written listings go through the same scans (the shadow
-        // kernel's call chain lives here)
+        // kernel's call chain and the reduction accumulators live here)
         let hm = tir::parse_and_validate(&(sc.hand_tir)()).unwrap();
         let v = hdl::generate_verilog(&hm).unwrap();
         assert!(tytra::conformance::undeclared_locals(&v).is_empty(), "{} hand", sc.name);
         assert!(tytra::conformance::undefined_module_instantiations(&v).is_empty(), "{} hand", sc.name);
+        if let Some((_, r)) = hm.reduce_stmt() {
+            let issues = tytra::conformance::reduce_register_issues(&v, &r.result, true);
+            assert!(issues.is_empty(), "{} hand: {issues:?}", sc.name);
+        }
     }
 }

@@ -117,6 +117,9 @@ fn parser_pretty_parser_is_fixed_point_for_library_tir() {
             DesignPoint::c4(),
             DesignPoint::c2().chained(),
             DesignPoint::c4().chained(),
+            // reduce syntax (both shapes) must survive the roundtrip too
+            DesignPoint::c2().tree(),
+            DesignPoint::c4().tree(),
         ] {
             let m = frontend::lower(&k, p).unwrap();
             listings.push((format!("{}-{}", sc.name, p.label()), tir::pretty::print(&m)));
@@ -215,6 +218,9 @@ fn ewgt_specialisations_agree_with_cycle_domain() {
             seq_ni: if matches!(class, ConfigClass::C4 | ConfigClass::C5) { rng.range_u64(1, 12) } else { 0 },
             work_items: rng.range_u64(16, 4096),
             repeat: 1,
+            reduce: None,
+            comb_depth: 0,
+            comb_carry: 0,
         };
         let t = 4e-9;
         let nto = 2;
@@ -326,11 +332,94 @@ fn closed_form_lane_cycles_equals_state_machine_oracle() {
         let items = rng.range_u64(0, 2000);
         let fill = rng.range_u64(0, 64);
         let seq_work = rng.range_u64(0, 24);
+        // reduction drain included: 0 (no reduce), 1 (acc) and the
+        // tree's log-depth range
+        let drain = rng.range_u64(0, 12);
         assert_eq!(
-            lane_cycles_closed_form(kind, items, fill, seq_work),
-            lane_cycles_oracle(kind, items, fill, seq_work, |_| false),
-            "kind {kind:?} items {items} fill {fill} seq_work {seq_work}"
+            lane_cycles_closed_form(kind, items, fill, seq_work, drain),
+            lane_cycles_oracle(kind, items, fill, seq_work, drain, |_| false),
+            "kind {kind:?} items {items} fill {fill} seq_work {seq_work} drain {drain}"
         );
+    }
+}
+
+#[test]
+fn indexed_paths_are_bit_identical_on_reduction_modules() {
+    // ISSUE 4 satellite: estimator (resources + structure) indexed ==
+    // reference, and compiled == interpreted execution, on the reduction
+    // kernels at every style × shape combination.
+    use tytra::estimator::accumulate::{estimate_resources, estimate_resources_reference};
+    use tytra::estimator::structure::{analyze, analyze_ix};
+    use tytra::estimator::CostDb;
+    use tytra::sim::exec::{run_pass, run_pass_interpreted};
+    use tytra::tir::ModuleIndex;
+
+    let db = CostDb::default();
+    let dev = Device::stratix4();
+    for name in ["dotn", "vsum", "matvec"] {
+        let sc = tytra::kernels::find(name).unwrap();
+        let k = sc.parse().unwrap();
+        for base in [DesignPoint::c2(), DesignPoint::c3(1), DesignPoint::c4()] {
+            for p in [base, base.tree()] {
+                let m = frontend::lower(&k, p).unwrap();
+                let ix = ModuleIndex::build(&m).unwrap();
+                assert_eq!(
+                    estimate_resources(&m, &db, &dev).unwrap(),
+                    estimate_resources_reference(&m, &db, &dev).unwrap(),
+                    "{name} {p:?}: resources diverge"
+                );
+                assert_eq!(
+                    analyze_ix(&ix).unwrap(),
+                    analyze(&m).unwrap(),
+                    "{name} {p:?}: structure diverges"
+                );
+                let d = sim::elaborate(&m).unwrap();
+                let w = sc.workload(&m, 404).unwrap();
+                let mut fast = w.mems.clone();
+                let mut slow = w.mems.clone();
+                run_pass(&m, &d, &mut fast).unwrap();
+                run_pass_interpreted(&m, &d, &mut slow).unwrap();
+                assert_eq!(fast, slow, "{name} {p:?}: compiled != interpreted");
+            }
+        }
+    }
+}
+
+#[test]
+fn reduce_shapes_agree_and_drain_orders_cycles() {
+    // acc-result == tree-result at every base style, the hand TIR
+    // agrees with both, and the tree's deeper drain never undercuts
+    // the acc shape's cycle count (simulated and estimated).
+    let dev = Device::stratix4();
+    for name in ["dotn", "vsum", "matvec"] {
+        let sc = tytra::kernels::find(name).unwrap();
+        let k = sc.parse().unwrap();
+        let out_key = format!("mem_{}", k.outputs[0].name);
+        let hand = tir::parse_and_validate(&(sc.hand_tir)()).unwrap();
+        let wh = sc.workload(&hand, 7).unwrap();
+        let rh = sim::simulate(&hand, &dev, &wh).unwrap();
+        for base in [DesignPoint::c2(), DesignPoint::c3(1), DesignPoint::c4()] {
+            let ma = frontend::lower(&k, base).unwrap();
+            let mt = frontend::lower(&k, base.tree()).unwrap();
+            assert_eq!(
+                ma.reduce_stmt().unwrap().1.shape,
+                tytra::tir::ReduceShape::Acc,
+                "{name} {base:?}"
+            );
+            assert_eq!(mt.reduce_stmt().unwrap().1.shape, tytra::tir::ReduceShape::Tree);
+            let wa = sc.workload(&ma, 7).unwrap();
+            let wt = sc.workload(&mt, 7).unwrap();
+            let ra = sim::simulate(&ma, &dev, &wa).unwrap();
+            let rt = sim::simulate(&mt, &dev, &wt).unwrap();
+            assert_eq!(ra.mems[&out_key], rt.mems[&out_key], "{name} {base:?}: acc != tree");
+            assert_eq!(ra.mems[&out_key], rh.mems[&out_key], "{name} {base:?}: lowered != hand TIR");
+            assert!(rt.cycles_per_pass >= ra.cycles_per_pass, "{name} {base:?}");
+            let ea = estimator::estimate(&ma, &dev).unwrap();
+            let et = estimator::estimate(&mt, &dev).unwrap();
+            assert!(et.cycles_per_pass >= ea.cycles_per_pass, "{name} {base:?}");
+            assert!(ra.cycles_per_pass >= ea.cycles_per_pass, "{name} {base:?}: actual < estimate");
+            assert!(rt.cycles_per_pass >= et.cycles_per_pass, "{name} {base:?}: actual < estimate");
+        }
     }
 }
 

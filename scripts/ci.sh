@@ -39,16 +39,24 @@ cargo build --release --manifest-path "$MANIFEST"
 echo "== tests =="
 cargo test -q --manifest-path "$MANIFEST"
 
-echo "== conformance (smoke: C1-C4 incl. comb/par + call-chain points) =="
+echo "== conformance (smoke: C1-C4 incl. comb/par, call-chain + reduction points) =="
 # --quick sweeps every library kernel through one point per paper
 # configuration class — C2 pipe, C1 pipe x2, C3 comb x2, C4 seq, C5
-# seq x2 — plus the pipe+chain mixed call-chain point, so the comb/par
-# backends and the per-call-site alpha-renaming stay gated on every run
-# (see conformance::Options::quick; a dedicated test pins this coverage).
+# seq x2 — plus the pipe+chain mixed call-chain point and the pipe+tree
+# reduction point, so the comb/par backends, the per-call-site
+# alpha-renaming and the acc-vs-tree reduction diffs stay gated on every
+# run (see conformance::Options::quick; a dedicated test pins this
+# coverage — the registry includes the dotn/vsum/matvec reductions).
 cargo run --quiet --release --manifest-path "$MANIFEST" -- conformance --quick
 
 echo "== dse smoke over the enlarged variant axis (comb plane + chain) =="
 cargo run --quiet --release --manifest-path "$MANIFEST" -- \
     dse builtin:simple --jobs 2 --max-lanes 2 --max-dv 2 --chain > /dev/null
+
+echo "== dse smoke over the reduction axis (acc + tree shapes) =="
+cargo run --quiet --release --manifest-path "$MANIFEST" -- \
+    dse builtin:dotn --jobs 2 --max-lanes 2 --max-dv 2 --reduce > /dev/null
+cargo run --quiet --release --manifest-path "$MANIFEST" -- \
+    sweep builtin:dotn builtin:vsum builtin:matvec --jobs 2 --max-lanes 2 --max-dv 2 --reduce > /dev/null
 
 echo "ci: ALL OK"
