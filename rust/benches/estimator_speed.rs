@@ -202,6 +202,37 @@ fn main() {
         tree_points
     );
 
+    println!("{}", section("transform sweep (TIR-to-TIR rewrite-recipe axis)"));
+    // ISSUE 5: the trajectory JSON records how many transform-recipe
+    // points the DSE explores and how many actually realised a rewrite
+    // (degenerate recipes collapse to the base label), so a regression
+    // that silently disables a pass shows up in one diff.
+    let xlimits =
+        SweepLimits { max_lanes: 2, max_dv: 2, include_transforms: true, ..SweepLimits::default() };
+    let xkernels = tytra::kernels::resolve_specs(&[
+        "builtin:blend6".to_string(),
+        "builtin:scale".to_string(),
+        "builtin:jacobi2d".to_string(),
+    ])
+    .expect("transform kernels resolve");
+    let xcells = Session::new(4)
+        .explore_batch(&xkernels, &[Device::stratix4()], &xlimits)
+        .expect("transform sweep failed");
+    let xf_points: usize = xcells.iter().map(|c| c.exploration.candidates.len()).sum();
+    let xf_realised: usize = xcells
+        .iter()
+        .flat_map(|c| &c.exploration.candidates)
+        .filter(|cand| !cand.point.transforms.is_none())
+        .count();
+    let xf_recipes = tytra::transform::TransformRecipe::named().len();
+    println!(
+        "  {} kernels, {} recipes, {} points explored, {} transformed points realised",
+        xcells.len(),
+        xf_recipes,
+        xf_points,
+        xf_realised
+    );
+
     if let Some(path) = std::env::var_os("TYTRA_BENCH_JSON") {
         let json = render_json(
             smoke,
@@ -212,6 +243,7 @@ fn main() {
             &validated_rows,
             &conf,
             (rcells.len(), reduce_points, tree_points),
+            (xcells.len(), xf_recipes, xf_points, xf_realised),
         );
         if let Err(e) = std::fs::write(&path, json) {
             eprintln!("cannot write {}: {e}", path.to_string_lossy());
@@ -233,6 +265,7 @@ fn render_json(
     validated: &[(usize, f64)],
     conf: &tytra::conformance::ConformanceReport,
     reduction: (usize, usize, usize),
+    transforms: (usize, usize, usize, usize),
 ) -> String {
     let rows = |xs: &[(usize, f64)]| -> String {
         xs.iter()
@@ -241,6 +274,7 @@ fn render_json(
             .join(", ")
     };
     let (rkernels, rpoints, rtrees) = reduction;
+    let (xkernels, xrecipes, xpoints, xrealised) = transforms;
     format!(
         "{{\n  \"bench\": \"estimator_speed\",\n  \"mode\": \"{}\",\n  \
          \"single_estimate_us\": {{\"simple_c2\": {:.3}, \"sor_c2\": {:.3}}},\n  \
@@ -248,7 +282,9 @@ fn render_json(
          \"batch_grid_configs_per_sec\": {:.1},\n  \
          \"validated_sweep_throughput\": [{}],\n  \
          \"conformance\": {},\n  \
-         \"reduction\": {{\"kernels\": {rkernels}, \"points\": {rpoints}, \"tree_points\": {rtrees}}}\n}}\n",
+         \"reduction\": {{\"kernels\": {rkernels}, \"points\": {rpoints}, \"tree_points\": {rtrees}}},\n  \
+         \"transforms\": {{\"kernels\": {xkernels}, \"recipes\": {xrecipes}, \"points\": {xpoints}, \
+         \"transformed_points\": {xrealised}}}\n}}\n",
         if smoke { "smoke" } else { "full" },
         est_simple_s * 1e6,
         est_sor_s * 1e6,

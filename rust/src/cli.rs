@@ -40,8 +40,18 @@ pub struct Cli {
 const VALUE_FLAGS: &[&str] =
     &["device", "devices", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts", "random"];
 /// Boolean flags.
-const BOOL_FLAGS: &[&str] =
-    &["dense", "tb", "help", "pipes-only", "chain", "reduce", "quick", "json", "inject-mismatch"];
+const BOOL_FLAGS: &[&str] = &[
+    "dense",
+    "tb",
+    "help",
+    "pipes-only",
+    "chain",
+    "reduce",
+    "transforms",
+    "quick",
+    "json",
+    "inject-mismatch",
+];
 
 impl Cli {
     /// Parse an argv (excluding argv[0]).
@@ -139,7 +149,8 @@ pub fn usage() -> String {
        compare  <file.tir>            estimated vs actual, paper-table layout\n\
        dse      <kernel.knl|builtin:NAME>  explore the design space (see `tytra kernels`)\n\
        sweep    <kernel>... [--devices s4,c4]  batched DSE over a kernel × device grid\n\
-                                      (builtin:all = the whole scenario library)\n\
+                                      (builtin:all = the whole scenario library;\n\
+                                      --json = machine-readable frontier + wall checks)\n\
        conformance [--quick] [--json] cross-layer differential checks over the kernel\n\
                                       library + random kernels (non-zero exit on mismatch)\n\
        emit-hdl <file.tir> [--tb]     generate Verilog (+ testbench)\n\
@@ -148,8 +159,9 @@ pub fn usage() -> String {
        configurations                 print the paper's Fig 5/7/9/11/15 TIR listings\n\
      \n\
      FLAGS: --device s4|s5|c4   --devices s4,c4   --seed N   --jobs N   --max-lanes N\n\
-            --max-dv N   --dense   --pipes-only   --chain   --reduce   --config tytra.toml\n\
-            --artifacts DIR   --tb   --quick   --random N   --json   --inject-mismatch"
+            --max-dv N   --dense   --pipes-only   --chain   --reduce   --transforms\n\
+            --config tytra.toml   --artifacts DIR   --tb   --quick   --random N   --json\n\
+            --inject-mismatch"
         .to_string()
 }
 
@@ -259,6 +271,11 @@ fn sweep_config(cli: &Cli) -> Result<Config, String> {
         // additionally sweep each point's tree-reduction variant
         cfg.sweep.include_reduce = true;
     }
+    if cli.has("transforms") {
+        // additionally sweep each point's transform-recipe variants
+        // (TIR-to-TIR rewrites: simplify/shiftadd/balance/full)
+        cfg.sweep.include_transforms = true;
+    }
     if let Some(v) = cli.flag("jobs") {
         cfg.jobs = v.parse().map_err(|e| format!("--jobs: {e}"))?;
     }
@@ -337,6 +354,10 @@ fn cmd_sweep(cli: &Cli) -> Result<String, String> {
     let session = Session::new(jobs);
     let cells = session.explore_batch(&kernels, &devices, &limits)?;
 
+    if cli.has("json") {
+        return Ok(sweep_json(&kernels, &devices, &limits, &cells));
+    }
+
     let mut out = String::new();
     out.push_str(&format!(
         "{} kernel(s) × {} device(s), {} points each, {} workers\n\n",
@@ -372,6 +393,72 @@ fn cmd_sweep(cli: &Cli) -> Result<String, String> {
     out.push('\n');
     out.push_str(&session.metrics().summary());
     Ok(out)
+}
+
+/// Machine-readable sweep export (`tytra sweep --json`): per (kernel ×
+/// device) cell the full candidate list with wall checks, the Pareto
+/// frontier and the selected best — hand-rolled JSON (no serde offline),
+/// with fixed float precision and label-tie-broken frontiers so repeated
+/// runs are byte-identical (external tooling can diff snapshots).
+fn sweep_json(
+    kernels: &[(String, frontend::KernelDef)],
+    devices: &[Device],
+    limits: &crate::dse::SweepLimits,
+    cells: &[crate::coordinator::BatchResult],
+) -> String {
+    let point_json = |c: &crate::dse::Candidate| -> String {
+        let ev = c.evaluated();
+        format!(
+            "{{\"label\": \"{}\", \"class\": \"{}\", \"alut\": {}, \"reg\": {}, \
+             \"bram_bits\": {}, \"dsp\": {}, \"cycles\": {}, \"ewgt\": {:.3}, \
+             \"utilisation\": {:.6}, \"io_utilisation\": {:.6}, \"feasible\": {}}}",
+            ev.label,
+            c.estimate.class,
+            c.estimate.resources.alut,
+            c.estimate.resources.reg,
+            c.estimate.resources.bram_bits,
+            c.estimate.resources.dsp,
+            c.estimate.cycles_per_pass,
+            ev.ewgt,
+            ev.utilisation,
+            c.walls.io_utilisation,
+            ev.feasible
+        )
+    };
+    let mut cells_json = Vec::with_capacity(cells.len());
+    for cell in cells {
+        let points: Vec<String> = cell.exploration.candidates.iter().map(point_json).collect();
+        let frontier: Vec<String> = cell
+            .exploration
+            .frontier
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"label\": \"{}\", \"ewgt\": {:.3}, \"utilisation\": {:.6}}}",
+                    p.label, p.ewgt, p.utilisation
+                )
+            })
+            .collect();
+        let best = match &cell.exploration.best {
+            Some(b) => format!("\"{}\"", b.label),
+            None => "null".to_string(),
+        };
+        cells_json.push(format!(
+            "    {{\"kernel\": \"{}\", \"device\": \"{}\", \"best\": {best},\n     \
+             \"frontier\": [{}],\n     \"points\": [{}]}}",
+            cell.kernel,
+            cell.device,
+            frontier.join(", "),
+            points.join(", ")
+        ));
+    }
+    format!(
+        "{{\n  \"kernels\": {}, \"devices\": {}, \"points_per_cell\": {},\n  \"cells\": [\n{}\n  ]\n}}",
+        kernels.len(),
+        devices.len(),
+        crate::dse::enumerate(limits).len(),
+        cells_json.join(",\n")
+    )
 }
 
 fn cmd_emit_hdl(cli: &Cli) -> Result<String, String> {
@@ -572,9 +659,10 @@ mod tests {
     #[test]
     fn kernels_lists_the_library() {
         let out = dispatch(&args("kernels")).unwrap();
-        for name in
-            ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow", "dotn", "vsum", "matvec"]
-        {
+        for name in [
+            "simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow", "dotn",
+            "vsum", "matvec", "blend6",
+        ] {
             assert!(out.contains(name), "missing `{name}` in:\n{out}");
         }
     }
@@ -620,7 +708,51 @@ mod tests {
     fn conformance_quick_json_counts() {
         let out = dispatch(&args("conformance --quick --random 0 --json")).unwrap();
         assert!(out.contains("\"mismatches\": 0"), "{out}");
-        assert!(out.contains("\"kernels\": 11"), "{out}");
+        assert!(out.contains("\"kernels\": 12"), "{out}");
+    }
+
+    #[test]
+    fn dse_sweeps_the_transform_axis() {
+        let out =
+            dispatch(&args("dse builtin:blend6 --jobs 2 --max-lanes 2 --max-dv 2 --transforms")).unwrap();
+        // 6 base points × (1 + 4 named recipes)
+        assert!(out.contains("(30 points"), "{out}");
+        // blend6's constant tail folds and its add chain balances: the
+        // recipes realise and show up in the candidate labels
+        assert!(out.contains("+simplify"), "{out}");
+        assert!(out.contains("+balance"), "{out}");
+        assert!(out.contains("BEST:"), "{out}");
+    }
+
+    #[test]
+    fn transform_recipes_degenerate_where_nothing_rewrites() {
+        // `simple` is hash-consed and constant-free: simplify/shiftadd/
+        // balance all rewrite nothing and their labels collapse to the
+        // base point; only the chain-splitting `full` recipe realises.
+        let out =
+            dispatch(&args("dse builtin:simple --jobs 2 --max-lanes 2 --max-dv 2 --transforms")).unwrap();
+        assert!(out.contains("(30 points"), "{out}");
+        assert!(!out.contains("+simplify"), "{out}");
+        assert!(!out.contains("+shiftadd"), "{out}");
+        assert!(!out.contains("+balance"), "{out}");
+        assert!(out.contains("+full"), "{out}");
+    }
+
+    #[test]
+    fn sweep_json_exports_frontier_and_wall_checks() {
+        let argv = args(
+            "sweep builtin:blend6 --devices stratix4 --jobs 2 --max-lanes 2 --max-dv 2 --transforms --json",
+        );
+        let out = dispatch(&argv).unwrap();
+        assert!(out.contains("\"cells\""), "{out}");
+        assert!(out.contains("\"frontier\""), "{out}");
+        assert!(out.contains("\"best\""), "{out}");
+        assert!(out.contains("\"io_utilisation\""), "{out}");
+        assert!(out.contains("\"points_per_cell\": 30"), "{out}");
+        assert!(out.contains("+simplify"), "{out}");
+        // byte-stable across runs (the deterministic-frontier satellite)
+        let again = dispatch(&argv).unwrap();
+        assert_eq!(out, again);
     }
 
     #[test]

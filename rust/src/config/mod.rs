@@ -85,6 +85,10 @@ impl Config {
                     self.sweep.include_reduce =
                         v.as_bool().ok_or("`sweep.include_reduce` must be a boolean")?;
                 }
+                "sweep.include_transforms" => {
+                    self.sweep.include_transforms =
+                        v.as_bool().ok_or("`sweep.include_transforms` must be a boolean")?;
+                }
                 other => return Err(format!("unknown config key `{other}`")),
             }
         }
@@ -117,6 +121,14 @@ mod tests {
         assert_eq!(c.sweep.max_lanes, 8);
         assert_eq!(c.sweep.max_dv, 2);
         assert!(!c.sweep.pow2_only);
+    }
+
+    #[test]
+    fn parses_transform_axis_key() {
+        let c = Config::from_str("[sweep]\ninclude_transforms = true\n").unwrap();
+        assert!(c.sweep.include_transforms);
+        assert!(!Config::default().sweep.include_transforms);
+        assert!(Config::from_str("[sweep]\ninclude_transforms = 3").is_err());
     }
 
     #[test]

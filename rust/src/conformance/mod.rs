@@ -18,6 +18,10 @@
 //! | `sim/hand-tir-vs-lowered` | hand-written paper-style TIR | front-end lowering |
 //! | `reduce/acc-vs-tree` | accumulator-shape simulation | tree-shape simulation (order-insensitive combiners) |
 //! | `timing/reduce-drain-covered` | tree-shape simulated cycles | tree-shape estimate (drain included) |
+//! | `transform/semantics-preserved` | every realised transform recipe's module | untransformed simulation (bit-identical) |
+//! | `transform/golden-model` | transformed simulation | `runtime::golden` exact-i128 fold |
+//! | `transform/degenerate-is-identity` | zero-rewrite recipe's module | byte-identical to the untransformed module |
+//! | `transform/depth-improved` | balance-recipe structural depth | untransformed depth (never worse) |
 //! | `hdl/*` | emitted Verilog | structural invariants (incl. declared signals, defined-module instantiation and the single-driver accumulator register) |
 //!
 //! Design points cover the full C1–C4 space — pipe lanes (C1/C2), comb
@@ -443,9 +447,102 @@ impl Harness<'_> {
             );
         }
 
+        // --- transforms: every recipe must preserve semantics -----------------
+        // Transformed vs untransformed bit-identity at every kernel ×
+        // point, plus the golden model on the rewritten module (zero
+        // shared code with the pass pipeline), plus the structural
+        // depth gate for the balancing recipe. The recipes only apply
+        // once per base point (transform twins of transformed points
+        // would re-run identical pipelines).
+        if p.transforms.is_none() {
+            self.conform_transforms(name, k, lk, p, spec, &m, &r, &si_slow)?;
+        }
+
         // --- emitted Verilog: structural invariants ---------------------------
         if self.opts.check_hdl {
             self.conform_hdl(name, &pl, &m, &d)?;
+        }
+        Ok(())
+    }
+
+    /// Transform-recipe checks for one (kernel, base point): see
+    /// [`conform_point`]. `base_mod`/`base_run` are the untransformed
+    /// module and its simulation, `base_struct` its structural facts.
+    #[allow(clippy::too_many_arguments)]
+    fn conform_transforms(
+        &mut self,
+        name: &str,
+        k: &KernelDef,
+        lk: &frontend::LoweredKernel,
+        p: DesignPoint,
+        spec: Option<DestInit>,
+        base_mod: &tir::Module,
+        base_run: &sim::SimResult,
+        base_struct: &estimator::StructInfo,
+    ) -> Result<(), String> {
+        use crate::transform::TransformRecipe;
+        let dev = self.opts.device.clone();
+        let out_key = format!("mem_{}", k.outputs[0].name);
+        for (recipe, rname) in TransformRecipe::named() {
+            let pl = format!("{}+{rname}", p.label());
+            let mt = frontend::lower_point(lk, p.with_transforms(recipe))?;
+            if mt.name == base_mod.name {
+                // The recipe degenerated (zero rewrites): gate the
+                // byte-identity contract instead of re-simulating an
+                // identical module — same signal `realised_point` uses.
+                self.check(name, &pl, "transform/degenerate-is-identity", mt == *base_mod, || {
+                    "degenerate recipe produced a module that differs from the base".into()
+                });
+                continue;
+            }
+            let wt = self.workload(&mt, spec)?;
+            let rt = sim::simulate(&mt, &dev, &wt)?;
+            self.check(
+                name,
+                &pl,
+                "transform/semantics-preserved",
+                rt.mems[out_key.as_str()] == base_run.mems[out_key.as_str()],
+                || first_vec_diff(&base_run.mems[out_key.as_str()], &rt.mems[out_key.as_str()]),
+            );
+            let gt = golden::check_kernel_model(k, &wt.mems, &rt.mems[out_key.as_str()])?;
+            self.check(name, &pl, "transform/golden-model", gt.ok(), || {
+                format!("{} of {} elements diverge, first {:?}", gt.mismatches, gt.n, gt.first)
+            });
+            let est_t = estimator::estimate_with_db(&mt, &dev, self.db)?;
+            self.check(
+                name,
+                &pl,
+                "transform/actual-covers-estimate",
+                rt.cycles_per_pass >= est_t.cycles_per_pass,
+                || format!("actual {} < estimate {}", rt.cycles_per_pass, est_t.cycles_per_pass),
+            );
+            if recipe == TransformRecipe::balance() {
+                // The balancing recipe may never deepen a dependency
+                // chain (it strictly improves where a linear chain
+                // exists — EXPERIMENTS §Transforms shows the strict
+                // cases; here the universal ≤ gate).
+                let si_t = structure::analyze(&mt)?;
+                let depth = |s: &estimator::StructInfo| s.datapath_depth.max(s.comb_depth);
+                self.check(
+                    name,
+                    &pl,
+                    "transform/depth-improved",
+                    depth(&si_t) <= depth(base_struct),
+                    || {
+                        format!(
+                            "balanced depth {} > untransformed {}",
+                            depth(&si_t),
+                            depth(base_struct)
+                        )
+                    },
+                );
+            }
+            if recipe == TransformRecipe::full() && self.opts.check_hdl {
+                // The deepest-rewriting recipe also runs the full HDL
+                // structural scans (stage callees, shift-add networks).
+                let dt = sim::elaborate(&mt)?;
+                self.conform_hdl(name, &pl, &mt, &dt)?;
+            }
         }
         Ok(())
     }
@@ -494,6 +591,25 @@ impl Harness<'_> {
             let hd = sim::elaborate(&hm)?;
             self.conform_hdl(name, "hand-tir", &hm, &hd)?;
         }
+
+        // The transform pipeline must hold on hand-written TIR too —
+        // the hand listings are where cross-function imports, shadowed
+        // callee parameters and real CSE opportunities live.
+        let mut hm_t = hm.clone();
+        crate::transform::apply_recipe(&mut hm_t, crate::transform::TransformRecipe::full())
+            .map_err(|e| format!("{name} hand TIR transforms: {e}"))?;
+        let wht = self.workload(&hm_t, spec)?;
+        self.check(name, "hand-tir", "transform/manage-ir-untouched", wht.mems == wh.mems, || {
+            "transform passes must not touch Manage-IR (memories drifted)".into()
+        });
+        let rht = sim::simulate(&hm_t, &dev, &wht)?;
+        self.check(
+            name,
+            "hand-tir",
+            "transform/hand-tir-semantics-preserved",
+            rht.mems[out_key.as_str()] == rh.mems[out_key.as_str()],
+            || first_vec_diff(&rh.mems[out_key.as_str()], &rht.mems[out_key.as_str()]),
+        );
         Ok(())
     }
 

@@ -30,8 +30,11 @@ impl EvaluatedPoint {
     }
 }
 
-/// The Pareto frontier of the feasible points (sorted by ascending
-/// utilisation).
+/// The Pareto frontier of the feasible points, sorted by ascending
+/// utilisation with **deterministic tie-breaks**: equal-utilisation
+/// points order by ascending EWGT, then lexicographically by label — so
+/// repeated runs, parallel sweeps and snapshot files are byte-stable
+/// regardless of how candidates were produced.
 pub fn frontier(points: &[EvaluatedPoint]) -> Vec<EvaluatedPoint> {
     let mut front: Vec<EvaluatedPoint> = Vec::new();
     for p in points.iter().filter(|p| p.feasible) {
@@ -40,14 +43,21 @@ pub fn frontier(points: &[EvaluatedPoint]) -> Vec<EvaluatedPoint> {
         }
         front.push(p.clone());
     }
-    front.sort_by(|a, b| a.utilisation.partial_cmp(&b.utilisation).expect("no NaN"));
+    front.sort_by(|a, b| {
+        a.utilisation
+            .partial_cmp(&b.utilisation)
+            .expect("no NaN")
+            .then(a.ewgt.partial_cmp(&b.ewgt).expect("no NaN"))
+            .then_with(|| a.label.cmp(&b.label))
+    });
     front.dedup_by(|a, b| a.label == b.label);
     front
 }
 
 /// The best feasible point: maximum wall-clipped EWGT, ties broken by
 /// lower utilisation (the paper's DSE objective: as high as possible on
-/// the performance axis while inside the walls).
+/// the performance axis while inside the walls), then by label — fully
+/// deterministic, independent of candidate order.
 pub fn best(points: &[EvaluatedPoint]) -> Option<EvaluatedPoint> {
     points
         .iter()
@@ -57,6 +67,7 @@ pub fn best(points: &[EvaluatedPoint]) -> Option<EvaluatedPoint> {
                 .partial_cmp(&b.ewgt)
                 .expect("no NaN")
                 .then(b.utilisation.partial_cmp(&a.utilisation).expect("no NaN"))
+                .then_with(|| b.label.cmp(&a.label))
         })
         .cloned()
 }
@@ -120,5 +131,23 @@ mod tests {
     fn tie_broken_by_utilisation() {
         let pts = vec![pt("big", 100.0, 0.9, true), pt("small", 100.0, 0.1, true)];
         assert_eq!(best(&pts).unwrap().label, "small");
+    }
+
+    #[test]
+    fn exact_ties_break_by_label_independent_of_order() {
+        // IO-clipped sweeps produce exact (ewgt, utilisation) ties; the
+        // selection and frontier order must not depend on candidate
+        // order, so snapshots stay byte-stable across runs.
+        let pts = vec![pt("b-point", 100.0, 0.1, true), pt("a-point", 100.0, 0.1, true)];
+        let rev: Vec<EvaluatedPoint> = pts.iter().rev().cloned().collect();
+        assert_eq!(best(&pts).unwrap().label, "a-point");
+        assert_eq!(best(&rev).unwrap().label, "a-point");
+        let f1 = frontier(&pts);
+        let f2 = frontier(&rev);
+        assert_eq!(f1, f2);
+        assert_eq!(
+            f1.iter().map(|p| p.label.as_str()).collect::<Vec<_>>(),
+            vec!["a-point", "b-point"]
+        );
     }
 }

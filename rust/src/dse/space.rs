@@ -5,6 +5,7 @@
 //! with run-time reconfiguration) modelled at the DSE level.
 
 use crate::frontend::{DesignPoint, Style};
+use crate::transform::TransformRecipe;
 
 /// Enumeration limits for a sweep.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -37,6 +38,13 @@ pub struct SweepLimits {
     /// (degenerate tree points on non-reducing kernels realise back to
     /// the plain point).
     pub include_reduce: bool,
+    /// Additionally enumerate each point's transform-recipe variants
+    /// (`TransformRecipe::named()`: simplify / shiftadd / balance /
+    /// full — TIR-to-TIR rewrites applied after lowering). Off by
+    /// default: the axis multiplies the space by the recipe count
+    /// (`--transforms`; the conformance harness always covers every
+    /// recipe at every point regardless).
+    pub include_transforms: bool,
 }
 
 impl Default for SweepLimits {
@@ -49,6 +57,7 @@ impl Default for SweepLimits {
             include_comb: true,
             include_chain: false,
             include_reduce: false,
+            include_transforms: false,
         }
     }
 }
@@ -89,6 +98,12 @@ pub fn enumerate(limits: &SweepLimits) -> Vec<DesignPoint> {
         let base: Vec<DesignPoint> = out.clone();
         out.extend(base.into_iter().map(DesignPoint::tree));
     }
+    if limits.include_transforms {
+        let base: Vec<DesignPoint> = out.clone();
+        for (recipe, _) in TransformRecipe::named() {
+            out.extend(base.iter().map(|p| p.with_transforms(recipe)));
+        }
+    }
     out
 }
 
@@ -121,9 +136,32 @@ mod tests {
             include_comb: true,
             include_chain: false,
             include_reduce: false,
+            include_transforms: false,
         });
         // 3 pipe + 3 comb + 2 seq
         assert_eq!(pts.len(), 8);
+    }
+
+    #[test]
+    fn transform_axis_multiplies_by_the_named_recipes() {
+        let base = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
+        let with_xf = SweepLimits { include_transforms: true, ..base };
+        let plain = enumerate(&base);
+        let pts = enumerate(&with_xf);
+        let recipes = TransformRecipe::named().len();
+        assert_eq!(pts.len(), (1 + recipes) * plain.len());
+        assert_eq!(
+            pts.iter().filter(|p| !p.transforms.is_none()).count(),
+            recipes * plain.len()
+        );
+        // every named recipe appears on every base point
+        for (r, _) in TransformRecipe::named() {
+            assert_eq!(pts.iter().filter(|p| p.transforms == r).count(), plain.len());
+        }
+        // composes with the chain axis
+        let both = SweepLimits { include_chain: true, include_transforms: true, ..base };
+        let pts = enumerate(&both);
+        assert!(pts.iter().any(|p| p.chain && p.transforms == TransformRecipe::full()));
     }
 
     #[test]

@@ -18,8 +18,12 @@ pub struct WallCheck {
     /// Required streaming bandwidth at the estimated throughput, bytes/s.
     pub io_required: f64,
     /// Fraction of the device's IO bandwidth required (>1 ⇒ IO-bound;
-    /// the deployable throughput is clipped by 1/io_utilisation).
+    /// the deployable throughput is clipped to the wall).
     pub io_utilisation: f64,
+    /// Bytes moved per work-group (the clip denominator).
+    pub bytes_per_workgroup: f64,
+    /// The device's IO bandwidth, bytes/s (the clip numerator).
+    pub io_bandwidth: f64,
 }
 
 impl WallCheck {
@@ -35,10 +39,20 @@ impl WallCheck {
     /// EWGT after clipping by the IO wall (an IO-bound kernel cannot
     /// stream faster than memory feeds it — paper §7: "the simplifying
     /// assumption that all kernels are compute-bound"; the wall makes
-    /// that assumption checkable).
+    /// that assumption checkable). The clip is `min(ewgt, wall)` with
+    /// the wall computed directly (`bandwidth / bytes-per-workgroup`)
+    /// rather than `ewgt / utilisation`: mathematically identical for
+    /// the estimate that produced `io_utilisation`, but the direct form
+    /// is *bit-identical for every configuration of one kernel* —
+    /// IO-bound sweeps produce exact EWGT ties, which keeps Pareto
+    /// selection (and its label tie-breaks) deterministic instead of
+    /// hinging on last-ulp rounding of per-point arithmetic. The `min`
+    /// matters for callers passing a *different* throughput than the
+    /// checked estimate (the C6 fallback's reconfiguration-degraded
+    /// EWGT must come back untouched, not inflated to the wall).
     pub fn io_clipped_ewgt(&self, ewgt: f64) -> f64 {
         if self.io_utilisation > 1.0 {
-            ewgt / self.io_utilisation
+            ewgt.min(self.io_bandwidth / self.bytes_per_workgroup)
         } else {
             ewgt
         }
@@ -81,13 +95,16 @@ pub fn bytes_per_workgroup(m: &Module) -> f64 {
 pub fn check(m: &Module, est: &Estimate, dev: &Device) -> WallCheck {
     let compute_utilisation = est.resources.utilisation(dev);
     let binding = est.resources.binding_resource(dev);
-    let io_required = bytes_per_workgroup(m) * est.ewgt;
+    let bytes = bytes_per_workgroup(m);
+    let io_required = bytes * est.ewgt;
     let io_utilisation = io_required / dev.io_bytes_per_sec;
     WallCheck {
         compute_utilisation,
         binding_resource: binding,
         io_required,
         io_utilisation,
+        bytes_per_workgroup: bytes,
+        io_bandwidth: dev.io_bytes_per_sec,
     }
 }
 

@@ -33,6 +33,7 @@ use super::dfg::{self, Node};
 use super::lang::KernelDef;
 use crate::tir::builder::{FuncBuilder, ModuleBuilder};
 use crate::tir::{Kind, Module, Op, ReduceShape, Ty};
+use crate::transform::{self, TransformRecipe};
 
 /// How the datapath is realised (the paper's design-space axes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -64,12 +65,24 @@ pub struct DesignPoint {
     /// sequential accumulator (the default) or balanced combiner tree.
     /// Ignored (and normalised back to `Acc`) for non-reduction kernels.
     pub reduce: ReduceShape,
+    /// TIR-to-TIR transform recipe applied after module assembly (the
+    /// rewrite axis of the design space, `--transforms`). A recipe that
+    /// performs zero rewrites degenerates to [`TransformRecipe::NONE`]
+    /// in the realised point, exactly like a chain that could not split.
+    pub transforms: TransformRecipe,
 }
 
 impl DesignPoint {
     /// Single pipeline (C2).
     pub fn c2() -> DesignPoint {
-        DesignPoint { style: Style::Pipe, lanes: 1, dv: 1, chain: false, reduce: ReduceShape::Acc }
+        DesignPoint {
+            style: Style::Pipe,
+            lanes: 1,
+            dv: 1,
+            chain: false,
+            reduce: ReduceShape::Acc,
+            transforms: TransformRecipe::NONE,
+        }
     }
     /// Replicated pipelines (C1).
     pub fn c1(lanes: u64) -> DesignPoint {
@@ -97,6 +110,11 @@ impl DesignPoint {
         self.reduce = ReduceShape::Tree;
         self
     }
+    /// The same point with a transform recipe applied.
+    pub fn with_transforms(mut self, recipe: TransformRecipe) -> DesignPoint {
+        self.transforms = recipe;
+        self
+    }
     /// Replication degree (lanes or PEs) of this point.
     pub fn replicas(&self) -> u64 {
         match self.style {
@@ -105,7 +123,7 @@ impl DesignPoint {
         }
     }
     /// Short label (`pipe×4`, `seq×2`, `comb×2`, `pipe×1+chain`,
-    /// `pipe×1+tree`).
+    /// `pipe×1+tree`, `pipe×1+balance`).
     pub fn label(&self) -> String {
         let s = match self.style {
             Style::Pipe => "pipe",
@@ -114,7 +132,12 @@ impl DesignPoint {
         };
         let chain = if self.chain { "+chain" } else { "" };
         let tree = if self.reduce == ReduceShape::Tree { "+tree" } else { "" };
-        format!("{s}×{}{chain}{tree}", self.replicas())
+        let xf = if self.transforms.is_none() {
+            String::new()
+        } else {
+            format!("+{}", self.transforms.name())
+        };
+        format!("{s}×{}{chain}{tree}{xf}", self.replicas())
     }
 }
 
@@ -367,16 +390,21 @@ pub const CHAIN_PREFIX_FN: &str = "f_pre";
 /// The single source of degenerate-point truth: a chained point whose
 /// datapath did not split reports no chain, a reduction pins the
 /// replication axes to 1 and reports the shape *actually realised*
-/// (non-power-of-two trees degrade to acc), and the reduce axis is
-/// inert without a reduction. Both [`lower_point`] (naming the module)
-/// and [`realised_point`] (labelling candidates) go through here, so
-/// the two can never drift.
+/// (non-power-of-two trees degrade to acc), the reduce axis is inert
+/// without a reduction, and a transform recipe whose passes performed
+/// zero rewrites reports no transforms. Both [`lower_point`] (naming
+/// the module) and [`realised_point`] (labelling candidates) go through
+/// here, so the two can never drift.
 fn normalise_point(
     mut p: DesignPoint,
     reduce_shape: Option<ReduceShape>,
     chain_realised: bool,
+    transforms_realised: bool,
 ) -> DesignPoint {
     p.chain = p.chain && chain_realised;
+    if !transforms_realised {
+        p.transforms = TransformRecipe::NONE;
+    }
     match reduce_shape {
         Some(shape) => {
             p.lanes = 1;
@@ -388,44 +416,74 @@ fn normalise_point(
     p
 }
 
+/// Identifier-safe rendering of a point's label (the module-name tail).
+fn point_suffix(p: &DesignPoint) -> String {
+    p.label().replace('×', "x").replace('+', "_")
+}
+
+/// Identifier-safe module name of a kernel at a (normalised) point.
+fn module_name(kernel: &str, p: DesignPoint) -> String {
+    format!("{}_{}", kernel, point_suffix(&p))
+}
+
 /// The design point a lowered module actually realises: a chained point
 /// whose datapath was too small to split degenerates to the unchained
 /// point (the module contains no [`CHAIN_PREFIX_FN`]), a tree point on
 /// a kernel without a reduction degenerates to the plain (acc-labelled)
-/// point, and a reduction module pins its replication axes to 1 and
-/// reports its statement's actual shape — all so no candidate label
-/// claims structure the module does not contain.
+/// point, a reduction module pins its replication axes to 1 and reports
+/// its statement's actual shape, and a transform recipe that changed
+/// nothing degenerates to the untransformed point (detected from the
+/// recipe-suffixed module name [`lower_point`] assigns exactly when its
+/// pipeline reports rewrites) — all so no candidate label claims
+/// structure the module does not contain.
 pub fn realised_point(module: &Module, point: DesignPoint) -> DesignPoint {
-    normalise_point(
-        point,
-        module.reduce_stmt().map(|(_, r)| r.shape),
-        module.funcs.contains_key(CHAIN_PREFIX_FN),
-    )
+    let reduce_shape = module.reduce_stmt().map(|(_, r)| r.shape);
+    let chain_realised = module.funcs.contains_key(CHAIN_PREFIX_FN);
+    // The recipe fired iff the module carries the *full* realised-point
+    // suffix (style, replicas, chain/tree and recipe together — far
+    // harder to collide with than the bare recipe name); `lower_point`
+    // assigns that name exactly when its pipeline reports rewrites.
+    let with_transforms = normalise_point(point, reduce_shape, chain_realised, true);
+    if !point.transforms.is_none()
+        && module.name.ends_with(&format!("_{}", point_suffix(&with_transforms)))
+    {
+        with_transforms
+    } else {
+        normalise_point(point, reduce_shape, chain_realised, false)
+    }
 }
 
-/// The cheap per-point half of lowering: run the variant-expand pass and
+/// The cheap per-point half of lowering: run the variant-expand pass,
 /// replay the pre-rendered templates into a module for one design point
 /// (streams/ports/wrapper per replica, function kind per style, optional
-/// alpha-renamed comb call chain). No DFG work happens here.
+/// alpha-renamed comb call chain — no DFG work happens here), then run
+/// the point's transform recipe over the assembled module (the rewrite
+/// pass of the pipeline, between variant expansion and the consumers).
 pub fn lower_point(lk: &LoweredKernel, point: DesignPoint) -> Result<Module, String> {
     let plan = plan_variant(lk, point);
     let k = &lk.kernel;
     // A degenerate point produces exactly the base module — name it
     // through the shared normalisation, so the artifact never claims
     // structure it does not contain (chain without a split, tree/lane
-    // shapes a reduction cannot realise).
-    let effective = normalise_point(
-        point,
-        lk.reduce.as_ref().map(|_| plan.reduce_shape),
-        plan.split_at > 0,
-    );
-    let name = effective.label().replace('×', "x").replace('+', "_");
-    let mut b = ModuleBuilder::new(format!("{}_{}", k.name, name));
+    // shapes a reduction cannot realise, recipes that rewrote nothing).
+    let reduce_shape = lk.reduce.as_ref().map(|_| plan.reduce_shape);
+    let effective = normalise_point(point, reduce_shape, plan.split_at > 0, false);
+    let mut b = ModuleBuilder::new(module_name(&k.name, effective));
     emit_manage(&mut b, lk, plan.replicas);
     emit_datapath(&mut b, lk, plan);
     emit_wrapper(&mut b, lk, plan);
     b.launch_call("main", k.iter);
-    b.finish().map_err(|e| e.to_string())
+    let mut m = b.finish().map_err(|e| e.to_string())?;
+    if !point.transforms.is_none() {
+        let report = transform::PassPipeline::for_recipe(point.transforms).run(&mut m)?;
+        if report.changed() {
+            let realised = normalise_point(point, reduce_shape, plan.split_at > 0, true);
+            m.name = module_name(&k.name, realised);
+        }
+        // zero rewrites: the module (name included) is byte-identical to
+        // the untransformed point's — the recipe degenerated.
+    }
+    Ok(m)
 }
 
 /// `_NN` replica suffix (empty for single-replica designs).

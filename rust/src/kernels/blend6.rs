@@ -1,0 +1,168 @@
+//! Six-stream blend with a constant polynomial tail — the transform
+//! subsystem's showpiece workload.
+//!
+//! `y = a+b+c+d+e+f + (g0·g0·g1 + g0·g1·g1)` over ui36 streams:
+//!
+//! * the constant subtree (four const-multiplies + adds) exists only to
+//!   be **folded** — the `simplify` recipe deletes it wholesale;
+//! * the six-stream accumulation is a 7-deep left-leaning add chain —
+//!   the **balance** recipe re-trees it to depth 3 (and the chain-split
+//!   pass stages it);
+//! * seven ui36 ports over 256-element streams put every streaming
+//!   configuration *on the IO wall* (`io_utilisation > 1` already at one
+//!   lane on the Stratix-IV target), so every pipe/comb point clips to
+//!   the same EWGT and the sweep's frontier collapses onto the cheapest
+//!   point — which a transformed twin then strictly Pareto-dominates
+//!   (same clipped EWGT, strictly fewer resources). That dominance is
+//!   the ISSUE 5 acceptance, pinned by `rust/tests/transforms.rs` and
+//!   reported in EXPERIMENTS §Transforms.
+
+/// Default stream length.
+pub const N: usize = 256;
+/// Constant coefficients of the folded tail (3²·5 + 3·5² = 45+75 = 120).
+pub const G0: i64 = 3;
+/// See [`G0`].
+pub const G1: i64 = 5;
+
+/// The kernel in the front-end mini-language at an arbitrary length.
+pub fn blend6_source(n: usize) -> String {
+    assert!(n >= 2);
+    format!(
+        r#"
+kernel blend6 {{
+    const g0 : ui18 = {G0}
+    const g1 : ui18 = {G1}
+    in  a, b, c, d, e, f : ui36[{n}]
+    out y : ui36[{n}]
+    for n in 0..{n} {{
+        y[n] = a[n] + b[n] + c[n] + d[n] + e[n] + f[n] + g0 * g0 * g1 + g0 * g1 * g1
+    }}
+}}
+"#
+    )
+}
+
+/// Default-workload front-end source.
+pub fn source() -> String {
+    blend6_source(N)
+}
+
+/// Hand-written parameterised TIR (C2 pipeline): the same left-leaning
+/// add chain and explicit constant-product tail as the source — hand
+/// material for the transform passes too (the conformance harness runs
+/// the full recipe over this listing and diffs the simulation).
+pub fn blend6_tir(n: usize) -> String {
+    assert!(n >= 2);
+    format!(
+        r#"; ***** Manage-IR ***** (six-stream blend + constant polynomial tail)
+define void launch() {{
+    @mem_a = addrspace(3) <{n} x ui36>
+    @mem_b = addrspace(3) <{n} x ui36>
+    @mem_c = addrspace(3) <{n} x ui36>
+    @mem_d = addrspace(3) <{n} x ui36>
+    @mem_e = addrspace(3) <{n} x ui36>
+    @mem_f = addrspace(3) <{n} x ui36>
+    @mem_y = addrspace(3) <{n} x ui36>
+    @strobj_a = addrspace(10), !"source", !"@mem_a"
+    @strobj_b = addrspace(10), !"source", !"@mem_b"
+    @strobj_c = addrspace(10), !"source", !"@mem_c"
+    @strobj_d = addrspace(10), !"source", !"@mem_d"
+    @strobj_e = addrspace(10), !"source", !"@mem_e"
+    @strobj_f = addrspace(10), !"source", !"@mem_f"
+    @strobj_y = addrspace(10), !"dest", !"@mem_y"
+    @ctr_n = counter(0, {last})
+    call @main ()
+}}
+; ***** Compute-IR *****
+@g0 = const ui18 {G0}
+@g1 = const ui18 {G1}
+@main.a = addrSpace(12) ui36, !"istream", !"CONT", !0, !"strobj_a"
+@main.b = addrSpace(12) ui36, !"istream", !"CONT", !0, !"strobj_b"
+@main.c = addrSpace(12) ui36, !"istream", !"CONT", !0, !"strobj_c"
+@main.d = addrSpace(12) ui36, !"istream", !"CONT", !0, !"strobj_d"
+@main.e = addrSpace(12) ui36, !"istream", !"CONT", !0, !"strobj_e"
+@main.f = addrSpace(12) ui36, !"istream", !"CONT", !0, !"strobj_f"
+@main.y = addrSpace(12) ui36, !"ostream", !"CONT", !0, !"strobj_y"
+define void @f1 (ui36 %a, ui36 %b, ui36 %c, ui36 %d, ui36 %e, ui36 %f) pipe {{
+    ui36 %1 = add ui36 %a, %b
+    ui36 %2 = add ui36 %1, %c
+    ui36 %3 = add ui36 %2, %d
+    ui36 %4 = add ui36 %3, %e
+    ui36 %5 = add ui36 %4, %f
+    ui36 %6 = mul ui36 @g0, @g0
+    ui36 %7 = mul ui36 %6, @g1
+    ui36 %8 = add ui36 %5, %7
+    ui36 %9 = mul ui36 @g0, @g1
+    ui36 %10 = mul ui36 %9, @g1
+    ui36 %y = add ui36 %8, %10
+}}
+define void @main () pipe {{
+    call @f1 (@main.a, @main.b, @main.c, @main.d, @main.e, @main.f) pipe
+}}
+"#,
+        last = n - 1,
+    )
+}
+
+/// Default-workload hand TIR.
+pub fn tir() -> String {
+    blend6_tir(N)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::frontend::parse_kernel;
+    use crate::tir::{parse_and_validate, validate::require_synthesizable};
+
+    #[test]
+    fn source_parses() {
+        let k = parse_kernel(&source()).unwrap();
+        assert_eq!(k.name, "blend6");
+        assert_eq!(k.inputs.len(), 6);
+        assert_eq!(k.consts.len(), 2);
+    }
+
+    #[test]
+    fn tir_parses_and_validates() {
+        let m = parse_and_validate(&tir()).unwrap();
+        require_synthesizable(&m).unwrap();
+        assert_eq!(m.work_items(), N as u64);
+        assert_eq!(m.mems.len(), 7);
+    }
+
+    #[test]
+    fn every_streaming_point_sits_on_the_io_wall() {
+        // The kernel's whole purpose: 7 ui36 ports clip even the 1-lane
+        // pipeline, so the untransformed frontier collapses to one point.
+        let k = parse_kernel(&source()).unwrap();
+        let dev = Device::stratix4();
+        let m = crate::frontend::lower(&k, crate::frontend::DesignPoint::c2()).unwrap();
+        let e = crate::estimator::estimate(&m, &dev).unwrap();
+        let w = crate::dse::walls::check(&m, &e, &dev);
+        assert!(w.io_utilisation > 1.0, "{w:?}");
+        assert!(w.feasible(), "{w:?}");
+    }
+
+    #[test]
+    fn constant_tail_folds_and_chain_balances() {
+        use crate::transform::TransformRecipe;
+        let k = parse_kernel(&source()).unwrap();
+        let base = crate::frontend::lower(&k, crate::frontend::DesignPoint::c2()).unwrap();
+        let folded = crate::frontend::lower(
+            &k,
+            crate::frontend::DesignPoint::c2().with_transforms(TransformRecipe::simplify()),
+        )
+        .unwrap();
+        assert!(folded.static_instr_count() < base.static_instr_count());
+        let balanced = crate::frontend::lower(
+            &k,
+            crate::frontend::DesignPoint::c2().with_transforms(TransformRecipe::balance()),
+        )
+        .unwrap();
+        let db = crate::estimator::structure::analyze(&base).unwrap().datapath_depth;
+        let dt = crate::estimator::structure::analyze(&balanced).unwrap().datapath_depth;
+        assert!(dt < db, "balance must cut the 7-deep add chain ({dt} vs {db})");
+    }
+}

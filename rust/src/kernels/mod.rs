@@ -29,12 +29,14 @@
 //! | `dotn`     | 1-D full dot reduction  | reduce acc/tree axis, drain timing  |
 //! | `vsum`     | 1-D bare-tap reduction  | empty datapath + accumulator        |
 //! | `matvec`   | 2-D row-wise reduction  | segmented reduce, WRAP streams      |
+//! | `blend6`   | 1-D 6-stream blend      | transform recipes (fold/balance), IO wall |
 //!
 //! The three reduction kernels (`dotn`/`vsum`/`matvec`) are the BLAS-1/2
 //! story the windowed `dot3` used to stand in for: their output rate
 //! differs from their input rate, which is exactly what the TIR
 //! `reduce` construct models.
 
+pub mod blend6;
 pub mod dot;
 pub mod dotn;
 pub mod fir;
@@ -175,6 +177,13 @@ pub fn registry() -> Vec<KernelScenario> {
             hand_tir: matvec::tir,
             dest_init: DestInit::Zero,
         },
+        KernelScenario {
+            name: "blend6",
+            about: "six-stream blend + constant tail (transform-recipe showpiece, on the IO wall)",
+            frontend: blend6::source,
+            hand_tir: blend6::tir,
+            dest_init: DestInit::Zero,
+        },
     ]
 }
 
@@ -225,12 +234,13 @@ mod tests {
     fn registry_has_the_acceptance_floor() {
         // ISSUE 2 acceptance: SOR + ≥5 new workloads beyond the paper's;
         // ISSUE 3 adds the shadowed-callee-param regression kernel;
-        // ISSUE 4 adds the three reduction kernels (the BLAS-1/2 story).
+        // ISSUE 4 adds the three reduction kernels (the BLAS-1/2 story);
+        // ISSUE 5 adds the transform-recipe showpiece.
         let names = names();
-        assert!(names.len() >= 11, "{names:?}");
+        assert!(names.len() >= 12, "{names:?}");
         for required in [
             "simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow", "dotn",
-            "vsum", "matvec",
+            "vsum", "matvec", "blend6",
         ] {
             assert!(names.contains(&required), "missing `{required}`");
         }

@@ -22,6 +22,9 @@
 //!   selection.
 //! * [`frontend`] — a loop-nest mini-language lowered to TIR at any
 //!   design-space point (the Fig 1 front-end path, minimally).
+//! * [`transform`] — the TIR-to-TIR rewrite subsystem: a pass manager
+//!   with folding/CSE/strength-reduction/balancing/chain-splitting
+//!   passes; recipes are a swept `DesignPoint` axis (`--transforms`).
 //! * [`coordinator`] — the L3 exploration driver: a thread-pool that
 //!   fans estimation/simulation jobs across the design space, with a
 //!   result cache and metrics.
@@ -54,6 +57,7 @@ pub mod runtime;
 pub mod sim;
 pub mod synth;
 pub mod tir;
+pub mod transform;
 pub mod util;
 
 pub use tir::Module;

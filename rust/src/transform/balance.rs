@@ -1,0 +1,508 @@
+//! Reassociation / operator balancing: linear chains of one associative
+//! modular op (`add`/`mul`/`and`/`or`/`xor`) re-tree into balanced
+//! binary form, cutting the dependency depth from `n−1` to `⌈log2 n⌉`.
+//!
+//! Depth is a costed quantity on two axes: a pipe leaf's ASAP depth `P`
+//! (cycles/pass = `P + I`) and a comb leaf's `comb_depth` (the C3
+//! depth-dependent Fmax derate from PR 4) — so this pass genuinely moves
+//! a configuration in the estimation space, not just in the IR.
+//!
+//! ## Legality
+//!
+//! Only *single-use, unprotected, same-function* interior nodes merge
+//! (the tree is invisible outside the rewritten expression), and ops are
+//! restricted to the low-bits-closed modular set — `min`/`max` compare
+//! whole values and are excluded. Width handling is where reassociation
+//! can silently go wrong, so the rule is strict and shape-independent:
+//!
+//! * every rebuilt node is emitted at `min(exact subtree width, W_root)`
+//!   (`W_root` = the root instruction's type), so intermediate values
+//!   are either exact or truncated at exactly `W_root`;
+//! * the original tree is only rebuilt if each *interior* node is
+//!   truncation-free (`exact ≤ declared width`) **or** declared at
+//!   exactly `W_root` — in both cases the original root value equals the
+//!   exact value mod `2^W_root`, which is what the rebuilt tree computes
+//!   (low-bits-closure of the modular ops). Anything else (a narrower
+//!   intermediate that drops bits the final width still carries) is left
+//!   alone.
+//!
+//! The root instruction keeps its name and type, so consumers — the
+//! ostream binding included — are untouched.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{protected_names, scope_types, Pass};
+use crate::tir::{Instr, Module, Op, Operand, Stmt, Ty};
+
+/// The balancing pass.
+pub struct Balance;
+
+/// Ops that may reassociate: associative, commutative, and closed under
+/// low-bit truncation (bit `k` of the result depends only on bits
+/// `0..=k` of the operands).
+fn balanceable(op: Op) -> bool {
+    matches!(op, Op::Add | Op::Mul | Op::And | Op::Or | Op::Xor)
+}
+
+/// Exact result width of one combine step (saturating; capped later).
+fn combine_width(op: Op, wa: u32, wb: u32) -> u32 {
+    match op {
+        Op::Add => wa.max(wb).saturating_add(1),
+        Op::Mul => wa.saturating_add(wb),
+        _ => wa.max(wb),
+    }
+}
+
+fn ceil_log2(n: usize) -> u32 {
+    debug_assert!(n >= 1);
+    if n <= 1 {
+        0
+    } else {
+        usize::BITS - (n - 1).leading_zeros()
+    }
+}
+
+impl Pass for Balance {
+    fn name(&self) -> &'static str {
+        "balance"
+    }
+
+    fn run(&self, m: &mut Module) -> Result<usize, String> {
+        let protected = protected_names(m);
+        let mut global_widths: BTreeMap<String, u32> = BTreeMap::new();
+        for c in m.consts.values() {
+            global_widths.insert(c.name.clone(), c.ty.bits());
+        }
+        for p in m.ports.values() {
+            global_widths.insert(p.name.clone(), p.ty.bits());
+        }
+        let mut changes = 0usize;
+        let names: Vec<String> = m.funcs.keys().cloned().collect();
+        for name in names {
+            let scope = scope_types(m, &m.funcs[&name]);
+            let mut f = m.funcs.remove(&name).expect("key enumerated above");
+            changes += balance_func(&mut f.body, &scope, &global_widths, &protected);
+            m.funcs.insert(name, f);
+        }
+        Ok(changes)
+    }
+}
+
+/// Value width of a leaf operand, if statically known.
+fn operand_width(
+    o: &Operand,
+    scope: &BTreeMap<String, Ty>,
+    globals: &BTreeMap<String, u32>,
+) -> Option<u32> {
+    match o {
+        Operand::Local(n) => scope.get(n.as_str()).map(|t| t.bits()),
+        Operand::Global(g) => globals.get(g.as_str()).copied(),
+        Operand::Imm(v) => {
+            if *v < 0 {
+                None // only reachable at ui64; bit-width reasoning breaks
+            } else if *v == 0 {
+                Some(1)
+            } else {
+                Some(64 - (*v as u64).leading_zeros())
+            }
+        }
+    }
+}
+
+struct Analysis<'a> {
+    body: &'a [Stmt],
+    /// result name → body index, own `Instr` statements only.
+    def_idx: BTreeMap<&'a str, usize>,
+    /// local name → number of uses across the whole body.
+    use_count: BTreeMap<&'a str, usize>,
+    scope: &'a BTreeMap<String, Ty>,
+    globals: &'a BTreeMap<String, u32>,
+    protected: &'a BTreeSet<String>,
+}
+
+impl<'a> Analysis<'a> {
+    fn instr(&self, idx: usize) -> Option<&'a Instr> {
+        match &self.body[idx] {
+            Stmt::Instr(i) => Some(i),
+            _ => None,
+        }
+    }
+
+    /// Is this instruction a potential chain node of op `op`?
+    fn candidate(&self, idx: usize, op: Op) -> bool {
+        self.instr(idx)
+            .map(|i| i.op == op && !i.ty.is_signed() && i.operands.len() == 2)
+            .unwrap_or(false)
+    }
+
+    /// May operand `o` of a node with op `op` merge as an interior node?
+    fn mergeable(&self, o: &Operand, op: Op) -> Option<usize> {
+        let Operand::Local(n) = o else { return None };
+        let idx = *self.def_idx.get(n.as_str())?;
+        if !self.candidate(idx, op) {
+            return None;
+        }
+        if self.protected.contains(n.as_str()) {
+            return None;
+        }
+        if self.use_count.get(n.as_str()).copied().unwrap_or(0) != 1 {
+            return None;
+        }
+        Some(idx)
+    }
+
+    /// Collect the maximal chain tree under `idx`. Returns
+    /// `(internal depth, exact width)` and pushes leaves/interior nodes;
+    /// `None` aborts the whole tree (unknown width or an interior node
+    /// whose truncation the rebuild could not reproduce).
+    fn collect(
+        &self,
+        idx: usize,
+        op: Op,
+        root_bits: u32,
+        leaves: &mut Vec<(Operand, u32)>,
+        interior: &mut Vec<usize>,
+    ) -> Option<(u32, u32)> {
+        let i = self.instr(idx).expect("candidate checked");
+        let mut depths = [0u32; 2];
+        let mut exacts = [0u32; 2];
+        for (k, o) in i.operands.iter().enumerate() {
+            match self.mergeable(o, op) {
+                Some(child) => {
+                    interior.push(child);
+                    let (d, e) = self.collect(child, op, root_bits, leaves, interior)?;
+                    // Interior legality: the child's declared width must
+                    // be exact or the full root width.
+                    let child_bits = self.instr(child).expect("instr").ty.bits();
+                    if child_bits < e.min(root_bits) {
+                        return None;
+                    }
+                    depths[k] = d;
+                    exacts[k] = e;
+                }
+                None => {
+                    let w = operand_width(o, self.scope, self.globals)?;
+                    leaves.push((o.clone(), w));
+                    depths[k] = 0;
+                    exacts[k] = w;
+                }
+            }
+        }
+        Some((1 + depths[0].max(depths[1]), combine_width(op, exacts[0], exacts[1])))
+    }
+}
+
+/// One planned rebuild.
+struct Plan {
+    root_idx: usize,
+    remove: Vec<usize>,
+    emit: Vec<Stmt>,
+}
+
+fn balance_func(
+    body: &mut Vec<Stmt>,
+    scope: &BTreeMap<String, Ty>,
+    globals: &BTreeMap<String, u32>,
+    protected: &BTreeSet<String>,
+) -> usize {
+    // --- analysis over an immutable snapshot -------------------------------
+    let body_snapshot: Vec<Stmt> = body.clone();
+    let mut use_count_full: BTreeMap<&str, usize> = BTreeMap::new();
+    for s in &body_snapshot {
+        let mut note = |o: &Operand| {
+            if let Operand::Local(n) = o {
+                *use_count_full.entry(n.as_str()).or_insert(0) += 1;
+            }
+        };
+        match s {
+            Stmt::Instr(i) => i.operands.iter().for_each(&mut note),
+            Stmt::Call(c) => c.args.iter().for_each(&mut note),
+            Stmt::Reduce(r) => note(&r.operand),
+        }
+    }
+    let mut def_idx_snap: BTreeMap<&str, usize> = BTreeMap::new();
+    for (idx, s) in body_snapshot.iter().enumerate() {
+        if let Stmt::Instr(i) = s {
+            def_idx_snap.insert(i.result.as_str(), idx);
+        }
+    }
+    let a = Analysis {
+        body: &body_snapshot,
+        def_idx: def_idx_snap,
+        use_count: use_count_full,
+        scope,
+        globals,
+        protected,
+    };
+
+    // --- roots: candidates not merged into a same-op parent ---------------
+    let mut merged: BTreeSet<usize> = BTreeSet::new();
+    for (idx, s) in body_snapshot.iter().enumerate() {
+        let Stmt::Instr(i) = s else { continue };
+        if !balanceable(i.op) || !a.candidate(idx, i.op) {
+            continue;
+        }
+        for o in &i.operands {
+            if let Some(child) = a.mergeable(o, i.op) {
+                merged.insert(child);
+            }
+        }
+    }
+
+    let mut plans: Vec<Plan> = Vec::new();
+    for (idx, s) in body_snapshot.iter().enumerate() {
+        let Stmt::Instr(root) = s else { continue };
+        if !balanceable(root.op) || !a.candidate(idx, root.op) || merged.contains(&idx) {
+            continue;
+        }
+        let root_bits = root.ty.bits();
+        let mut leaves: Vec<(Operand, u32)> = Vec::new();
+        let mut interior: Vec<usize> = Vec::new();
+        let Some((depth, _exact)) = a.collect(idx, root.op, root_bits, &mut leaves, &mut interior)
+        else {
+            continue;
+        };
+        if interior.is_empty() {
+            continue;
+        }
+        let n = leaves.len();
+        let balanced = ceil_log2(n);
+        if balanced >= depth {
+            continue; // already optimal (or nothing to gain)
+        }
+        // Reuse the interior nodes' names (they are single-use and
+        // unprotected; count matches: a binary tree over n leaves has
+        // n−1 internal nodes, root keeps its own name).
+        let mut sorted_interior = interior.clone();
+        sorted_interior.sort_unstable();
+        let mut names: Vec<String> = sorted_interior
+            .iter()
+            .map(|&i| match &body_snapshot[i] {
+                Stmt::Instr(ins) => ins.result.clone(),
+                _ => unreachable!("interior nodes are instrs"),
+            })
+            .collect();
+        debug_assert_eq!(names.len(), n.saturating_sub(2));
+        names.reverse(); // pop() hands them out in ascending order
+
+        let mut emit: Vec<Stmt> = Vec::new();
+        let (la, wa) = build_subtree(&leaves, 0, (n + 1) / 2, root.op, root_bits, &mut names, &mut emit);
+        let (lb, wb) = build_subtree(&leaves, (n + 1) / 2, n, root.op, root_bits, &mut names, &mut emit);
+        let _ = (wa, wb);
+        emit.push(Stmt::Instr(Instr {
+            result: root.result.clone(),
+            ty: root.ty,
+            op: root.op,
+            operands: vec![la, lb],
+        }));
+        plans.push(Plan { root_idx: idx, remove: sorted_interior, emit });
+    }
+
+    if plans.is_empty() {
+        return 0;
+    }
+
+    // --- apply -------------------------------------------------------------
+    let mut removed: BTreeSet<usize> = BTreeSet::new();
+    let mut replace: BTreeMap<usize, Vec<Stmt>> = BTreeMap::new();
+    let nplans = plans.len();
+    for p in plans {
+        removed.extend(p.remove.iter().copied());
+        replace.insert(p.root_idx, p.emit);
+    }
+    let mut new_body: Vec<Stmt> = Vec::with_capacity(body_snapshot.len());
+    for (idx, s) in body_snapshot.into_iter().enumerate() {
+        if removed.contains(&idx) {
+            continue;
+        }
+        match replace.remove(&idx) {
+            Some(emit) => new_body.extend(emit),
+            None => new_body.push(s),
+        }
+    }
+    *body = new_body;
+    nplans
+}
+
+/// Emit a balanced subtree over `leaves[lo..hi]`; returns the subtree's
+/// result operand and width.
+fn build_subtree(
+    leaves: &[(Operand, u32)],
+    lo: usize,
+    hi: usize,
+    op: Op,
+    root_bits: u32,
+    names: &mut Vec<String>,
+    emit: &mut Vec<Stmt>,
+) -> (Operand, u32) {
+    debug_assert!(hi > lo);
+    if hi - lo == 1 {
+        let (o, w) = &leaves[lo];
+        return (o.clone(), *w);
+    }
+    let mid = lo + (hi - lo + 1) / 2;
+    let (la, wa) = build_subtree(leaves, lo, mid, op, root_bits, names, emit);
+    let (lb, wb) = build_subtree(leaves, mid, hi, op, root_bits, names, emit);
+    let w = combine_width(op, wa, wb).min(root_bits).clamp(1, 64);
+    let name = names.pop().expect("one reusable name per internal node");
+    emit.push(Stmt::Instr(Instr {
+        result: name.clone(),
+        ty: Ty::UInt(w as u8),
+        op,
+        operands: vec![la, lb],
+    }));
+    (Operand::Local(name), w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::sim::{self, Workload};
+    use crate::tir::{parse_and_validate, validate};
+
+    fn run_balance(m: &mut Module) -> usize {
+        let n = Balance.run(m).unwrap();
+        validate::validate(m).unwrap();
+        n
+    }
+
+    fn chain_module(body: &str) -> Module {
+        let src = format!(
+            "@mem_a = addrspace(3) <32 x ui18>\n\
+             @mem_b = addrspace(3) <32 x ui18>\n\
+             @mem_c = addrspace(3) <32 x ui18>\n\
+             @mem_d = addrspace(3) <32 x ui18>\n\
+             @mem_y = addrspace(3) <32 x ui18>\n\
+             @s_a = addrspace(10), !\"source\", !\"@mem_a\"\n\
+             @s_b = addrspace(10), !\"source\", !\"@mem_b\"\n\
+             @s_c = addrspace(10), !\"source\", !\"@mem_c\"\n\
+             @s_d = addrspace(10), !\"source\", !\"@mem_d\"\n\
+             @s_y = addrspace(10), !\"dest\", !\"@mem_y\"\n\
+             @main.a = addrspace(12) ui18, !\"istream\", !\"CONT\", !0, !\"s_a\"\n\
+             @main.b = addrspace(12) ui18, !\"istream\", !\"CONT\", !0, !\"s_b\"\n\
+             @main.c = addrspace(12) ui18, !\"istream\", !\"CONT\", !0, !\"s_c\"\n\
+             @main.d = addrspace(12) ui18, !\"istream\", !\"CONT\", !0, !\"s_d\"\n\
+             @main.y = addrspace(12) ui18, !\"ostream\", !\"CONT\", !0, !\"s_y\"\n\
+             define void @main () pipe {{\n{body}\n}}"
+        );
+        parse_and_validate(&src).unwrap()
+    }
+
+    fn depth(m: &Module) -> u64 {
+        crate::estimator::structure::analyze(m).unwrap().datapath_depth
+    }
+
+    #[test]
+    fn uniform_add_chain_rebalances_and_preserves_output() {
+        let base = chain_module(
+            "    ui18 %1 = add ui18 @main.a, @main.b\n\
+             \x20   ui18 %2 = add ui18 %1, @main.c\n\
+             \x20   ui18 %y = add ui18 %2, @main.d",
+        );
+        assert_eq!(depth(&base), 3);
+        let mut m = base.clone();
+        assert_eq!(run_balance(&mut m), 1);
+        assert_eq!(depth(&m), 2, "{m:?}");
+        // same instruction count, root name preserved
+        assert_eq!(m.static_instr_count(), 3);
+        let main = &m.funcs["main"];
+        assert!(m.instrs_of(main).any(|i| i.result == "y"));
+        // bit-identical output
+        let dev = Device::stratix4();
+        let w = Workload::random_for(&base, 6);
+        let rb = sim::simulate(&base, &dev, &w).unwrap();
+        let rt = sim::simulate(&m, &dev, &Workload::random_for(&m, 6)).unwrap();
+        assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"]);
+        // idempotent: a balanced tree has nothing left to improve
+        assert_eq!(run_balance(&mut m), 0);
+    }
+
+    #[test]
+    fn widening_exact_chain_rebalances() {
+        // jacobi-style: exact interior widths (19, 20) — truncation-free
+        // interiors are legal to re-tree even though the widths differ.
+        let base = chain_module(
+            "    ui19 %1 = add ui19 @main.a, @main.b\n\
+             \x20   ui20 %2 = add ui20 %1, @main.c\n\
+             \x20   ui20 %3 = add ui20 %2, @main.d\n\
+             \x20   ui18 %y = lshr ui18 %3, 2",
+        );
+        assert_eq!(depth(&base), 4);
+        let mut m = base.clone();
+        assert_eq!(run_balance(&mut m), 1);
+        assert_eq!(depth(&m), 3, "adds now 2 deep, shift 1 more");
+        let dev = Device::stratix4();
+        let w = Workload::random_for(&base, 11);
+        let rb = sim::simulate(&base, &dev, &w).unwrap();
+        let rt = sim::simulate(&m, &dev, &Workload::random_for(&m, 11)).unwrap();
+        assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"]);
+    }
+
+    #[test]
+    fn truncating_interior_blocks_the_rebuild() {
+        // %1 truncates (exact 19 bits declared at 18) while the root is
+        // ui20: re-treeing would change which bits are lost — must skip.
+        let base = chain_module(
+            "    ui18 %1 = add ui18 @main.a, @main.b\n\
+             \x20   ui20 %2 = add ui20 %1, @main.c\n\
+             \x20   ui20 %3 = add ui20 %2, @main.d\n\
+             \x20   ui18 %y = lshr ui18 %3, 2",
+        );
+        let mut m = base.clone();
+        assert_eq!(run_balance(&mut m), 0, "illegal tree must be left alone");
+        assert_eq!(m, base);
+    }
+
+    #[test]
+    fn multi_use_interior_blocks_merging() {
+        // %1 feeds both %2 and %y: not single-use, chain must not merge
+        // through it (though the top 3-leaf chain alone has no gain).
+        let base = chain_module(
+            "    ui18 %1 = add ui18 @main.a, @main.b\n\
+             \x20   ui18 %2 = add ui18 %1, @main.c\n\
+             \x20   ui18 %3 = add ui18 %2, @main.d\n\
+             \x20   ui18 %y = add ui18 %3, %1",
+        );
+        let mut m = base.clone();
+        let n = run_balance(&mut m);
+        // the %2–%3–%y chain (leaves %1, c, d, %1-again) may rebalance,
+        // but %1's definition must survive untouched.
+        let main = &m.funcs["main"];
+        assert!(m.instrs_of(main).any(|i| i.result == "1"), "{n} rewrites\n{m:?}");
+        let dev = Device::stratix4();
+        let w = Workload::random_for(&base, 2);
+        let rb = sim::simulate(&base, &dev, &w).unwrap();
+        let rt = sim::simulate(&m, &dev, &Workload::random_for(&m, 2)).unwrap();
+        assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"]);
+    }
+
+    #[test]
+    fn mul_chain_rebalances_at_uniform_width() {
+        let base = chain_module(
+            "    ui18 %1 = mul ui18 @main.a, @main.b\n\
+             \x20   ui18 %2 = mul ui18 %1, @main.c\n\
+             \x20   ui18 %y = mul ui18 %2, @main.d",
+        );
+        let mut m = base.clone();
+        assert_eq!(run_balance(&mut m), 1);
+        assert_eq!(depth(&m), 2);
+        let dev = Device::stratix4();
+        let w = Workload::random_for(&base, 21);
+        let rb = sim::simulate(&base, &dev, &w).unwrap();
+        let rt = sim::simulate(&m, &dev, &Workload::random_for(&m, 21)).unwrap();
+        assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"]);
+    }
+
+    #[test]
+    fn min_max_chains_are_never_touched() {
+        let base = chain_module(
+            "    ui18 %1 = min ui18 @main.a, @main.b\n\
+             \x20   ui18 %2 = min ui18 %1, @main.c\n\
+             \x20   ui18 %y = min ui18 %2, @main.d",
+        );
+        let mut m = base.clone();
+        assert_eq!(run_balance(&mut m), 0);
+        assert_eq!(m, base);
+    }
+}

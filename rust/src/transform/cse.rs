@@ -1,0 +1,202 @@
+//! Common-subexpression elimination.
+//!
+//! Two instructions in the same function computing the same `(op, type,
+//! operands)` are one piece of hardware computed twice: the later one is
+//! deleted and its uses re-routed to the earlier result (commutative
+//! ops match under operand order normalisation). Per-lane datapath cost
+//! shrinks accordingly — on replicated configurations the saving
+//! multiplies by the lane count.
+//!
+//! The front-end's DFG hash-consing already dedupes *lowered* modules,
+//! so CSE mostly fires on hand-written TIR and on the redundancy other
+//! passes introduce (the strength-reduction pass emits one shift per
+//! set bit — two multiplies by constants sharing set bits then share
+//! the shifts).
+//!
+//! Protected results (ostream-bound / imported by other functions) are
+//! never deleted; a protected duplicate is instead rewritten to the
+//! forwarding form `add <first>, 0` — same value, one combiner instead
+//! of a recomputed expression.
+
+use std::collections::BTreeMap;
+
+use super::{protected_names, substitute_locals, Pass};
+use crate::tir::{Module, Op, Operand, Stmt};
+
+/// The CSE pass.
+pub struct Cse;
+
+impl Pass for Cse {
+    fn name(&self) -> &'static str {
+        "cse"
+    }
+
+    fn run(&self, m: &mut Module) -> Result<usize, String> {
+        let protected = protected_names(m);
+        let mut changes = 0usize;
+        let names: Vec<String> = m.funcs.keys().cloned().collect();
+        for name in names {
+            let mut f = m.funcs.remove(&name).expect("key enumerated above");
+            changes += cse_func(&mut f.body, &protected);
+            m.funcs.insert(name, f);
+        }
+        Ok(changes)
+    }
+}
+
+/// May the two operands of this op swap without changing the value?
+fn commutative(op: Op) -> bool {
+    matches!(op, Op::Add | Op::Mul | Op::And | Op::Or | Op::Xor | Op::Min | Op::Max)
+}
+
+/// Structural key of an instruction's computation. Operands render
+/// through their `Display` form (`%x` / `@g` / `42`), which is injective
+/// across operand kinds.
+fn expr_key(op: Op, ty: crate::tir::Ty, operands: &[Operand]) -> String {
+    let mut rendered: Vec<String> = operands.iter().map(|o| o.to_string()).collect();
+    if commutative(op) && rendered.len() == 2 && rendered[1] < rendered[0] {
+        rendered.swap(0, 1);
+    }
+    format!("{op} {ty} {}", rendered.join(", "))
+}
+
+fn cse_func(body: &mut Vec<Stmt>, protected: &std::collections::BTreeSet<String>) -> usize {
+    let mut changes = 0usize;
+    let mut seen: BTreeMap<String, String> = BTreeMap::new(); // key → first result
+    let mut subst: BTreeMap<String, Operand> = BTreeMap::new();
+
+    let old = std::mem::take(body);
+    for mut s in old {
+        substitute_locals(&mut s, &subst);
+        let Stmt::Instr(ref mut i) = s else {
+            body.push(s);
+            continue;
+        };
+        let key = expr_key(i.op, i.ty, &i.operands);
+        match seen.get(&key) {
+            None => {
+                seen.insert(key, i.result.clone());
+                body.push(s);
+            }
+            Some(first) if first == &i.result => {
+                // The canonical forwarding form re-keys to itself.
+                body.push(s);
+            }
+            Some(first) => {
+                if protected.contains(&i.result) {
+                    // keep the name alive: forward the first result
+                    let forward =
+                        vec![Operand::Local(first.clone()), Operand::Imm(0)];
+                    if !(i.op == Op::Add && i.operands == forward) {
+                        i.op = Op::Add;
+                        i.operands = forward;
+                        changes += 1;
+                    }
+                    body.push(s);
+                } else {
+                    subst.insert(i.result.clone(), Operand::Local(first.clone()));
+                    changes += 1; // statement deleted
+                }
+            }
+        }
+    }
+    changes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::sim::{self, Workload};
+    use crate::tir::{parse_and_validate, validate};
+
+    fn run_cse(m: &mut Module) -> usize {
+        let n = Cse.run(m).unwrap();
+        validate::validate(m).unwrap();
+        n
+    }
+
+    fn module_with_body(body: &str) -> Module {
+        let src = format!(
+            "@mem_a = addrspace(3) <16 x ui18>\n\
+             @mem_y = addrspace(3) <16 x ui18>\n\
+             @s_a = addrspace(10), !\"source\", !\"@mem_a\"\n\
+             @s_y = addrspace(10), !\"dest\", !\"@mem_y\"\n\
+             @main.a = addrspace(12) ui18, !\"istream\", !\"CONT\", !0, !\"s_a\"\n\
+             @main.y = addrspace(12) ui18, !\"ostream\", !\"CONT\", !0, !\"s_y\"\n\
+             define void @main () pipe {{\n{body}\n}}"
+        );
+        parse_and_validate(&src).unwrap()
+    }
+
+    #[test]
+    fn duplicate_subexpression_is_merged() {
+        let base = module_with_body(
+            "    ui18 %1 = add ui18 @main.a, 7\n\
+             \x20   ui18 %2 = add ui18 @main.a, 7\n\
+             \x20   ui18 %y = mul ui18 %1, %2",
+        );
+        let mut m = base.clone();
+        let n = run_cse(&mut m);
+        assert_eq!(n, 1);
+        let main = &m.funcs["main"];
+        let instrs: Vec<_> = m.instrs_of(main).collect();
+        assert_eq!(instrs.len(), 2);
+        assert_eq!(
+            instrs[1].operands,
+            vec![Operand::Local("1".into()), Operand::Local("1".into())]
+        );
+        // behaviour unchanged
+        let dev = Device::stratix4();
+        let w = Workload::random_for(&base, 4);
+        let rb = sim::simulate(&base, &dev, &w).unwrap();
+        let rt = sim::simulate(&m, &dev, &Workload::random_for(&m, 4)).unwrap();
+        assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"]);
+    }
+
+    #[test]
+    fn commutative_duplicates_match_in_either_order() {
+        let mut m = module_with_body(
+            "    ui18 %1 = add ui18 @main.a, 3\n\
+             \x20   ui18 %2 = add ui18 3, @main.a\n\
+             \x20   ui18 %y = mul ui18 %1, %2",
+        );
+        assert_eq!(run_cse(&mut m), 1);
+        // …but non-commutative ops never merge across operand order
+        let mut m2 = module_with_body(
+            "    ui18 %1 = sub ui18 @main.a, 3\n\
+             \x20   ui18 %2 = sub ui18 3, @main.a\n\
+             \x20   ui18 %y = mul ui18 %1, %2",
+        );
+        assert_eq!(run_cse(&mut m2), 0);
+    }
+
+    #[test]
+    fn protected_duplicate_becomes_a_forward() {
+        // %y duplicates %1 but is ostream-bound: it must stay, as a
+        // cheap forward of the first computation.
+        let mut m = module_with_body(
+            "    ui18 %1 = add ui18 @main.a, @main.a\n\
+             \x20   ui18 %y = add ui18 @main.a, @main.a",
+        );
+        assert_eq!(run_cse(&mut m), 1);
+        let main = &m.funcs["main"];
+        let instrs: Vec<_> = m.instrs_of(main).collect();
+        assert_eq!(instrs.len(), 2);
+        assert_eq!(instrs[1].result, "y");
+        assert_eq!(instrs[1].op, Op::Add);
+        assert_eq!(instrs[1].operands, vec![Operand::Local("1".into()), Operand::Imm(0)]);
+        // idempotent
+        assert_eq!(run_cse(&mut m), 0);
+    }
+
+    #[test]
+    fn different_types_never_merge() {
+        let mut m = module_with_body(
+            "    ui18 %1 = add ui18 @main.a, 1\n\
+             \x20   ui20 %2 = add ui20 @main.a, 1\n\
+             \x20   ui20 %y = add ui20 %1, %2",
+        );
+        assert_eq!(run_cse(&mut m), 0);
+    }
+}

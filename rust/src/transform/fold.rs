@@ -1,0 +1,323 @@
+//! Constant folding + identity simplification.
+//!
+//! * An instruction whose operands are all compile-time constants
+//!   (immediates, named `@const`s, or previously folded locals) is
+//!   evaluated through the *simulator's own* scalar semantics
+//!   ([`crate::sim::value::eval`] — one source of arithmetic truth,
+//!   including the divide-by-zero convention) and replaced by its
+//!   result: unprotected instructions are deleted and their uses
+//!   substituted with the immediate; protected ones are rewritten to
+//!   the canonical constant form `add <imm>, 0` in place.
+//! * Algebraic identities collapse: `x+0`, `x-0`, `x*1`, `x/1`,
+//!   `x<<0`, `x>>0`, `x|0`, `x^0` forward the operand; `x*0` and `x&0`
+//!   fold to zero; `mac a,b,c` with a zero multiplicand forwards `c`.
+//!
+//! Folding is restricted to unsigned instruction types (the lowered
+//! datapath is unsigned; signed identities interact with sign extension
+//! and are not worth the risk for the prototype).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{protected_names, substitute_locals, Pass};
+use crate::sim::value;
+use crate::tir::{Instr, Module, Op, Operand, Stmt};
+
+/// The folding/simplification pass.
+pub struct FoldSimplify;
+
+impl Pass for FoldSimplify {
+    fn name(&self) -> &'static str {
+        "fold-simplify"
+    }
+
+    fn run(&self, m: &mut Module) -> Result<usize, String> {
+        let protected = protected_names(m);
+        // Named-constant values as raw bit patterns (masked to the
+        // constant's own type — exactly how the interpreters read them).
+        let consts: BTreeMap<String, u64> = m
+            .consts
+            .values()
+            .map(|c| (c.name.clone(), (c.value as u64) & c.ty.mask()))
+            .collect();
+        let mut changes = 0usize;
+        let names: Vec<String> = m.funcs.keys().cloned().collect();
+        for name in names {
+            let mut f = m.funcs.remove(&name).expect("key enumerated above");
+            changes += fold_func(&mut f.body, &consts, &protected);
+            m.funcs.insert(name, f);
+        }
+        Ok(changes)
+    }
+}
+
+/// Constant value of an operand, if statically known.
+fn const_of(
+    o: &Operand,
+    consts: &BTreeMap<String, u64>,
+    known: &BTreeMap<String, u64>,
+) -> Option<u64> {
+    match o {
+        Operand::Imm(v) => Some(*v as u64),
+        Operand::Global(g) => consts.get(g.as_str()).copied(),
+        Operand::Local(n) => known.get(n.as_str()).copied(),
+    }
+}
+
+fn is_canonical_const(i: &Instr, val: u64) -> bool {
+    i.op == Op::Add
+        && i.operands.len() == 2
+        && i.operands[0] == Operand::Imm(val as i64)
+        && i.operands[1] == Operand::Imm(0)
+}
+
+fn fold_func(
+    body: &mut Vec<Stmt>,
+    consts: &BTreeMap<String, u64>,
+    protected: &BTreeSet<String>,
+) -> usize {
+    let mut changes = 0usize;
+    // Locals known to hold a constant (raw pattern at their def type).
+    let mut known: BTreeMap<String, u64> = BTreeMap::new();
+    // Deleted results → replacement operand.
+    let mut subst: BTreeMap<String, Operand> = BTreeMap::new();
+
+    let old = std::mem::take(body);
+    for mut s in old {
+        // Substitutions accompany a counted deletion from this same run;
+        // they are not counted again (keeps the fixpoint counter honest).
+        substitute_locals(&mut s, &subst);
+        let Stmt::Instr(ref mut i) = s else {
+            body.push(s);
+            continue;
+        };
+        if i.ty.is_signed() {
+            body.push(s);
+            continue;
+        }
+
+        // --- full fold: every operand constant ---------------------------
+        let vals: Vec<Option<u64>> =
+            i.operands.iter().map(|o| const_of(o, consts, &known)).collect();
+        if !vals.is_empty() && vals.iter().all(Option::is_some) {
+            let a = vals[0].unwrap_or(0);
+            let b = vals.get(1).copied().flatten().unwrap_or(0);
+            let c = if i.operands.len() > 2 { vals[2] } else { None };
+            let val = value::eval(i.op, i.ty, a, b, c);
+            known.insert(i.result.clone(), val);
+            if protected.contains(&i.result) {
+                if !is_canonical_const(i, val) {
+                    i.op = Op::Add;
+                    i.operands = vec![Operand::Imm(val as i64), Operand::Imm(0)];
+                    changes += 1;
+                }
+                body.push(s);
+            } else {
+                subst.insert(i.result.clone(), Operand::Imm(val as i64));
+                changes += 1; // statement deleted
+            }
+            continue;
+        }
+
+        // --- identity simplification -------------------------------------
+        if !protected.contains(&i.result) {
+            if let Some(rep) = identity_replacement(i, consts, &known) {
+                if let Operand::Imm(v) = &rep {
+                    known.insert(i.result.clone(), *v as u64);
+                }
+                subst.insert(i.result.clone(), rep);
+                changes += 1;
+                continue;
+            }
+        }
+        body.push(s);
+    }
+    changes
+}
+
+/// The operand a pure-identity instruction forwards, if any. Safe
+/// because the validator's widening rule guarantees every operand's
+/// value already fits the instruction type (masking is the identity).
+fn identity_replacement(
+    i: &Instr,
+    consts: &BTreeMap<String, u64>,
+    known: &BTreeMap<String, u64>,
+) -> Option<Operand> {
+    if i.operands.len() < 2 {
+        return None;
+    }
+    let a = &i.operands[0];
+    let b = &i.operands[1];
+    let ca = const_of(a, consts, known);
+    let cb = const_of(b, consts, known);
+    match i.op {
+        Op::Add | Op::Or | Op::Xor => {
+            if cb == Some(0) {
+                return Some(a.clone());
+            }
+            if ca == Some(0) {
+                return Some(b.clone());
+            }
+        }
+        Op::Sub => {
+            if cb == Some(0) {
+                return Some(a.clone());
+            }
+        }
+        Op::Shl | Op::Lshr | Op::Ashr => {
+            if cb == Some(0) {
+                return Some(a.clone());
+            }
+        }
+        Op::Mul => {
+            if cb == Some(1) {
+                return Some(a.clone());
+            }
+            if ca == Some(1) {
+                return Some(b.clone());
+            }
+            if ca == Some(0) || cb == Some(0) {
+                return Some(Operand::Imm(0));
+            }
+        }
+        Op::Div => {
+            if cb == Some(1) {
+                return Some(a.clone());
+            }
+        }
+        Op::And => {
+            if ca == Some(0) || cb == Some(0) {
+                return Some(Operand::Imm(0));
+            }
+        }
+        Op::Mac => {
+            // a*b + c with a zero multiplicand forwards the addend.
+            if (ca == Some(0) || cb == Some(0)) && i.operands.len() == 3 {
+                return Some(i.operands[2].clone());
+            }
+        }
+        _ => {}
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::frontend::{self, DesignPoint};
+    use crate::sim::{self, Workload};
+    use crate::tir::{parse_and_validate, validate};
+
+    fn run_fold(m: &mut Module) -> usize {
+        let n = FoldSimplify.run(m).unwrap();
+        validate::validate(m).unwrap();
+        n
+    }
+
+    #[test]
+    fn folds_constant_subtree_and_preserves_output() {
+        let k = frontend::parse_kernel(
+            "kernel t { const g : ui18 = 3\nin a : ui18[16]\nout y : ui18[16]\n\
+             for n in 0..16 { y[n] = a[n] + g * g } }",
+        )
+        .unwrap();
+        let base = frontend::lower(&k, DesignPoint::c2()).unwrap();
+        let mut m = base.clone();
+        let n = run_fold(&mut m);
+        assert!(n > 0, "the g*g multiply must fold");
+        assert!(m.static_instr_count() < base.static_instr_count());
+        // no multiply survives
+        assert!(m.funcs.values().all(|f| m.instrs_of(f).all(|i| i.op != Op::Mul)), "{m:?}");
+        // bit-identical behaviour
+        let dev = Device::stratix4();
+        let w = Workload::random_for(&base, 9);
+        let wt = Workload::random_for(&m, 9);
+        let rb = sim::simulate(&base, &dev, &w).unwrap();
+        let rt = sim::simulate(&m, &dev, &wt).unwrap();
+        assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"]);
+    }
+
+    #[test]
+    fn protected_fold_keeps_the_defining_instruction() {
+        // The whole datapath is constant: the root is ostream-bound and
+        // must survive as the canonical `add <imm>, 0`.
+        let src = "@mem_a = addrspace(3) <8 x ui18>\n\
+                   @mem_y = addrspace(3) <8 x ui18>\n\
+                   @s_a = addrspace(10), !\"source\", !\"@mem_a\"\n\
+                   @s_y = addrspace(10), !\"dest\", !\"@mem_y\"\n\
+                   @main.a = addrspace(12) ui18, !\"istream\", !\"CONT\", !0, !\"s_a\"\n\
+                   @main.y = addrspace(12) ui18, !\"ostream\", !\"CONT\", !0, !\"s_y\"\n\
+                   define void @main () pipe { ui18 %y = mul ui18 7, 6 }";
+        let mut m = parse_and_validate(src).unwrap();
+        let n = run_fold(&mut m);
+        assert_eq!(n, 1);
+        let main = &m.funcs["main"];
+        let i = m.instrs_of(main).next().unwrap();
+        assert_eq!(i.result, "y");
+        assert_eq!(i.op, Op::Add);
+        assert_eq!(i.operands, vec![Operand::Imm(42), Operand::Imm(0)]);
+        // idempotent: the canonical form does not re-count
+        assert_eq!(run_fold(&mut m), 0);
+    }
+
+    #[test]
+    fn identities_forward_operands() {
+        let src = "define void @main (ui18 %a) pipe {\n\
+                   ui18 %1 = add ui18 %a, 0\n\
+                   ui18 %2 = mul ui18 %1, 1\n\
+                   ui18 %3 = lshr ui18 %2, 0\n\
+                   ui18 %y = add ui18 %3, %3 }";
+        let mut m = parse_and_validate(src).unwrap();
+        let n = run_fold(&mut m);
+        assert_eq!(n, 3, "three identities collapse");
+        let main = &m.funcs["main"];
+        let instrs: Vec<_> = m.instrs_of(main).collect();
+        assert_eq!(instrs.len(), 1);
+        assert_eq!(
+            instrs[0].operands,
+            vec![Operand::Local("a".into()), Operand::Local("a".into())]
+        );
+    }
+
+    #[test]
+    fn mul_by_zero_and_and_zero_fold() {
+        let src = "@mem_a = addrspace(3) <8 x ui18>\n\
+                   @mem_y = addrspace(3) <8 x ui18>\n\
+                   @s_a = addrspace(10), !\"source\", !\"@mem_a\"\n\
+                   @s_y = addrspace(10), !\"dest\", !\"@mem_y\"\n\
+                   @main.a = addrspace(12) ui18, !\"istream\", !\"CONT\", !0, !\"s_a\"\n\
+                   @main.y = addrspace(12) ui18, !\"ostream\", !\"CONT\", !0, !\"s_y\"\n\
+                   define void @main () pipe {\n\
+                   ui18 %1 = mul ui18 @main.a, 0\n\
+                   ui18 %2 = and ui18 @main.a, 0\n\
+                   ui18 %y = add ui18 %1, %2 }";
+        let mut m = parse_and_validate(src).unwrap();
+        run_fold(&mut m);
+        let main = &m.funcs["main"];
+        let instrs: Vec<_> = m.instrs_of(main).collect();
+        // %1 and %2 fold to the constant 0; the ostream-bound %y then
+        // full-folds in place to the canonical constant-zero form.
+        assert_eq!(instrs.len(), 1);
+        assert_eq!(instrs[0].result, "y");
+        assert_eq!(instrs[0].operands, vec![Operand::Imm(0), Operand::Imm(0)]);
+    }
+
+    #[test]
+    fn div_by_zero_folds_to_the_simulator_convention() {
+        let src = "define void @main (ui18 %a) pipe {\n\
+                   ui18 %1 = div ui18 5, 0\n\
+                   ui18 %y = min ui18 %1, %a }";
+        let mut m = parse_and_validate(src).unwrap();
+        run_fold(&mut m);
+        let main = &m.funcs["main"];
+        let i = m.instrs_of(main).next().unwrap();
+        assert_eq!(i.operands[0], Operand::Imm(((1u64 << 18) - 1) as i64), "x/0 = all-ones");
+    }
+
+    #[test]
+    fn signed_instructions_are_left_alone() {
+        let src = "define void @main (si18 %a) pipe { si18 %y = add si18 %a, 0 }";
+        let mut m = parse_and_validate(src).unwrap();
+        assert_eq!(FoldSimplify.run(&mut m).unwrap(), 0);
+    }
+}

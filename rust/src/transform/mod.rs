@@ -1,0 +1,420 @@
+//! TIR-to-TIR transform subsystem: rewrite passes over a validated
+//! [`Module`], driven to a fixpoint by a [`PassPipeline`].
+//!
+//! The paper's premise is that TyTra-IR configurations are *generated*
+//! and costed by an automated flow — but until this subsystem every
+//! swept variant came from the hand-enumerated `DesignPoint` axes; the
+//! IR itself was never rewritten. Pass infrastructures over hardware
+//! IRs (HIR's MLIR transformations, LLHD's multi-level lowering) show
+//! that rewrites are where the design space really opens up: a pass
+//! that changes dependency depth or DSP usage moves a point *inside*
+//! the estimation-space walls. Here a [`TransformRecipe`] is a swept
+//! axis of `frontend::DesignPoint`: `dse::space` enumerates the named
+//! recipes (`--transforms`), `frontend::lower_point` applies them
+//! between variant expansion and leaf selection, and every downstream
+//! layer (estimator, simulator, synthesis model, HDL) consumes the
+//! rewritten module unchanged.
+//!
+//! Initial passes:
+//!
+//! | pass | rewrite | estimation-space effect |
+//! |---|---|---|
+//! | [`FoldSimplify`] | constant folding + identity simplification | fewer instrs: ALUT/REG/depth down |
+//! | [`Cse`] | common-subexpression elimination | dedup: per-lane resources down |
+//! | [`StrengthReduce`] | const-mul → shift-add network | DSP → ALUT trade |
+//! | [`Balance`] | reassociation / operator balancing | dependency depth down (C3 Fmax derate up, pipe `P` down) |
+//! | [`ChainSplit`] | balance-aware multi-way comb-stage split | equalised stage depth (the ROADMAP chain-split item) |
+//!
+//! **Legality.** Every pass preserves the module's streaming semantics
+//! bit-for-bit (gated by `conformance`'s `transform/semantics-preserved`
+//! check and the property tests): rewrites stay inside one function's
+//! SSA scope, and names that are externally visible — ostream-bound
+//! results and values imported by other functions — are *protected*:
+//! their defining statement is never deleted, renamed or moved out of
+//! its function (see [`protected_names`]).
+
+pub mod balance;
+pub mod cse;
+pub mod fold;
+pub mod recipe;
+pub mod split;
+pub mod strength;
+
+pub use balance::Balance;
+pub use cse::Cse;
+pub use fold::FoldSimplify;
+pub use recipe::TransformRecipe;
+pub use split::ChainSplit;
+pub use strength::StrengthReduce;
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::tir::{validate, Dir, Func, Module, Operand, Stmt, Ty};
+
+/// One rewrite pass over a module.
+pub trait Pass {
+    /// Stable pass name (reports, error attribution).
+    fn name(&self) -> &'static str;
+
+    /// Apply the pass once; returns the number of rewrites performed
+    /// (0 ⇒ the module is unchanged — the pipeline's fixpoint signal).
+    fn run(&self, m: &mut Module) -> Result<usize, String>;
+}
+
+/// Per-pass rewrite totals of one pipeline run.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    /// Fixpoint rounds executed (≥ 1).
+    pub rounds: usize,
+    /// (pass name, total rewrites across all rounds), in pipeline order.
+    pub per_pass: Vec<(&'static str, usize)>,
+}
+
+impl PipelineReport {
+    /// Total rewrites across all passes and rounds.
+    pub fn total(&self) -> usize {
+        self.per_pass.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Did any pass change the module?
+    pub fn changed(&self) -> bool {
+        self.total() > 0
+    }
+
+    /// Rewrites attributed to one pass.
+    pub fn rewrites_of(&self, pass: &str) -> usize {
+        self.per_pass.iter().filter(|(n, _)| *n == pass).map(|(_, k)| k).sum()
+    }
+}
+
+/// An ordered pass list with a fixpoint driver: passes run in order,
+/// repeatedly, until a full round performs zero rewrites (or the round
+/// cap is hit — a safety net, not an expected exit).
+pub struct PassPipeline {
+    passes: Vec<Box<dyn Pass>>,
+    /// Fixpoint round cap (default 8).
+    pub max_rounds: usize,
+}
+
+impl PassPipeline {
+    /// A pipeline over an explicit pass list.
+    pub fn new(passes: Vec<Box<dyn Pass>>) -> PassPipeline {
+        PassPipeline { passes, max_rounds: 8 }
+    }
+
+    /// The canonical pipeline for a recipe: fold → cse → strength →
+    /// balance → split (cleanups first so later passes see canonical
+    /// IR; the splitter last so stage boundaries see the final shape).
+    pub fn for_recipe(recipe: TransformRecipe) -> PassPipeline {
+        let mut passes: Vec<Box<dyn Pass>> = Vec::new();
+        if recipe.has(TransformRecipe::FOLD) {
+            passes.push(Box::new(FoldSimplify));
+        }
+        if recipe.has(TransformRecipe::CSE) {
+            passes.push(Box::new(Cse));
+        }
+        if recipe.has(TransformRecipe::STRENGTH) {
+            passes.push(Box::new(StrengthReduce));
+        }
+        if recipe.has(TransformRecipe::BALANCE) {
+            passes.push(Box::new(Balance));
+        }
+        if recipe.has(TransformRecipe::SPLIT) {
+            passes.push(Box::new(ChainSplit::default()));
+        }
+        PassPipeline::new(passes)
+    }
+
+    /// Drive the passes to a fixpoint. The module is re-validated after
+    /// every pass that reports rewrites — an invalid module is a pass
+    /// bug, reported with the pass attributed, never silently passed
+    /// downstream.
+    pub fn run(&self, m: &mut Module) -> Result<PipelineReport, String> {
+        let mut report = PipelineReport {
+            rounds: 0,
+            per_pass: self.passes.iter().map(|p| (p.name(), 0)).collect(),
+        };
+        for _ in 0..self.max_rounds {
+            report.rounds += 1;
+            let mut round_changes = 0usize;
+            for (k, pass) in self.passes.iter().enumerate() {
+                let n = pass.run(m)?;
+                if n > 0 {
+                    validate::validate(m).map_err(|e| {
+                        format!("transform pass `{}` produced an invalid module: {e}", pass.name())
+                    })?;
+                }
+                report.per_pass[k].1 += n;
+                round_changes += n;
+            }
+            if round_changes == 0 {
+                break;
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// Apply a recipe's pipeline to a module (convenience façade).
+pub fn apply_recipe(m: &mut Module, recipe: TransformRecipe) -> Result<PipelineReport, String> {
+    PassPipeline::for_recipe(recipe).run(m)
+}
+
+// ---------------------------------------------------------------------------
+// Shared rewrite-legality analysis
+// ---------------------------------------------------------------------------
+
+/// Names whose defining statement must stay in place (never deleted,
+/// renamed, or moved to another function):
+///
+/// * ostream-bound result names — the simulator/HDL bind output ports by
+///   the `main.y_NN ↔ %y` naming convention;
+/// * cross-function values — any local referenced by a function that
+///   does not define it in its own body/params (the callee-result import
+///   convention of the paper's Fig 7): deleting the definition in the
+///   callee would break every importer.
+///
+/// Passes may still rewrite a protected statement's *operands*, or
+/// replace its computation wholesale, as long as the result name, type
+/// and owning function stay put.
+pub fn protected_names(m: &Module) -> BTreeSet<String> {
+    let mut protected: BTreeSet<String> = BTreeSet::new();
+    for p in m.ports.values() {
+        if p.dir == Dir::Write {
+            protected.insert(crate::sim::elaborate::port_local_name(&p.name).to_string());
+        }
+    }
+    for f in m.funcs.values() {
+        let mut defined: BTreeSet<&str> = f.params.iter().map(|(p, _)| p.as_str()).collect();
+        for s in &f.body {
+            match s {
+                Stmt::Instr(i) => {
+                    defined.insert(i.result.as_str());
+                }
+                Stmt::Reduce(r) => {
+                    defined.insert(r.result.as_str());
+                }
+                Stmt::Call(_) => {}
+            }
+        }
+        let mut note = |o: &Operand| {
+            if let Operand::Local(n) = o {
+                if !defined.contains(n.as_str()) {
+                    protected.insert(n.clone());
+                }
+            }
+        };
+        for s in &f.body {
+            match s {
+                Stmt::Instr(i) => i.operands.iter().for_each(&mut note),
+                Stmt::Call(c) => c.args.iter().for_each(&mut note),
+                Stmt::Reduce(r) => note(&r.operand),
+            }
+        }
+    }
+    protected
+}
+
+/// Every SSA name visible inside `f` mapped to its type: parameters, own
+/// results, and direct-callee results (the validator's import
+/// semantics — imports are *not* transitive through nested calls).
+pub fn scope_types(m: &Module, f: &Func) -> BTreeMap<String, Ty> {
+    let mut tys: BTreeMap<String, Ty> = BTreeMap::new();
+    for (p, ty) in &f.params {
+        tys.insert(p.clone(), *ty);
+    }
+    for s in &f.body {
+        match s {
+            Stmt::Instr(i) => {
+                tys.insert(i.result.clone(), i.ty);
+            }
+            Stmt::Reduce(r) => {
+                tys.insert(r.result.clone(), r.ty);
+            }
+            Stmt::Call(c) => {
+                if let Some(callee) = m.funcs.get(&c.callee) {
+                    for cs in &callee.body {
+                        match cs {
+                            Stmt::Instr(ci) => {
+                                tys.entry(ci.result.clone()).or_insert(ci.ty);
+                            }
+                            Stmt::Reduce(cr) => {
+                                tys.entry(cr.result.clone()).or_insert(cr.ty);
+                            }
+                            Stmt::Call(_) => {}
+                        }
+                    }
+                }
+            }
+        }
+    }
+    tys
+}
+
+/// Apply `rewrite` to every operand position of a statement (instruction
+/// operands, call arguments, the reduce operand).
+pub(crate) fn for_each_operand_mut<F: FnMut(&mut Operand)>(s: &mut Stmt, mut rewrite: F) {
+    match s {
+        Stmt::Instr(i) => i.operands.iter_mut().for_each(&mut rewrite),
+        Stmt::Call(c) => c.args.iter_mut().for_each(&mut rewrite),
+        Stmt::Reduce(r) => rewrite(&mut r.operand),
+    }
+}
+
+/// Substitute uses of locals per `subst` in one statement; returns the
+/// number of substitutions performed. Substitution chains resolve
+/// transitively (a → b → 5 lands on 5) with a visited guard.
+pub(crate) fn substitute_locals(s: &mut Stmt, subst: &BTreeMap<String, Operand>) -> usize {
+    let mut n = 0;
+    for_each_operand_mut(s, |o| {
+        let mut guard = 0usize;
+        loop {
+            let rep = match &*o {
+                Operand::Local(name) => subst.get(name.as_str()).cloned(),
+                _ => None,
+            };
+            let Some(rep) = rep else { break };
+            *o = rep;
+            n += 1;
+            guard += 1;
+            if guard > subst.len() {
+                break; // defensive: substitution cycles cannot occur in SSA
+            }
+        }
+    });
+    n
+}
+
+/// Every local SSA name in use anywhere in the module (parameters and
+/// statement results) — the freshness domain for passes that mint new
+/// names (callee results import into callers by name, so freshness must
+/// be module-global, not per-function).
+pub fn local_names_in_use(m: &Module) -> BTreeSet<String> {
+    let mut used: BTreeSet<String> = BTreeSet::new();
+    for f in m.funcs.values() {
+        for (p, _) in &f.params {
+            used.insert(p.clone());
+        }
+        for s in &f.body {
+            match s {
+                Stmt::Instr(i) => {
+                    used.insert(i.result.clone());
+                }
+                Stmt::Reduce(r) => {
+                    used.insert(r.result.clone());
+                }
+                Stmt::Call(_) => {}
+            }
+        }
+    }
+    used
+}
+
+/// Claim a fresh name derived from `base`: `base`, else `base_u1`, …
+/// The returned name is inserted into `used`.
+pub(crate) fn fresh_name(used: &mut BTreeSet<String>, base: &str) -> String {
+    if used.insert(base.to_string()) {
+        return base.to_string();
+    }
+    let mut k = 1usize;
+    loop {
+        let cand = format!("{base}_u{k}");
+        if used.insert(cand.clone()) {
+            return cand;
+        }
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{self, DesignPoint};
+
+    fn simple_module() -> Module {
+        let k = frontend::parse_kernel(frontend::lang::simple_kernel_source()).unwrap();
+        frontend::lower(&k, DesignPoint::c2()).unwrap()
+    }
+
+    #[test]
+    fn protected_names_cover_ostream_and_imports() {
+        // Lowered simple kernel: `y` is ostream-bound.
+        let m = simple_module();
+        let p = protected_names(&m);
+        assert!(p.contains("y"), "{p:?}");
+
+        // A chained point imports the prefix's results into the leaf:
+        // every prefix result is protected, the leaf's internal ones are
+        // not.
+        let k = frontend::parse_kernel(frontend::lang::simple_kernel_source()).unwrap();
+        let mc = frontend::lower(&k, DesignPoint::c2().chained()).unwrap();
+        let pc = protected_names(&mc);
+        assert!(pc.contains("y"));
+        let pre = &mc.funcs[frontend::lower::CHAIN_PREFIX_FN];
+        for i in mc.instrs_of(pre) {
+            assert!(pc.contains(&i.result), "prefix result `{}` must be protected", i.result);
+        }
+    }
+
+    #[test]
+    fn scope_types_import_callee_results() {
+        let k = frontend::parse_kernel(frontend::lang::simple_kernel_source()).unwrap();
+        let mc = frontend::lower(&k, DesignPoint::c2().chained()).unwrap();
+        let leaf = &mc.funcs["f_dp"];
+        let tys = scope_types(&mc, leaf);
+        // own params visible…
+        assert!(tys.contains_key("t0"));
+        // …and the comb prefix's results imported by the call
+        let pre = &mc.funcs[frontend::lower::CHAIN_PREFIX_FN];
+        for i in mc.instrs_of(pre) {
+            assert!(tys.contains_key(&i.result), "missing imported `{}`", i.result);
+        }
+    }
+
+    #[test]
+    fn substitution_resolves_chains() {
+        let mut subst = BTreeMap::new();
+        subst.insert("a".to_string(), Operand::Local("b".into()));
+        subst.insert("b".to_string(), Operand::Imm(5));
+        let mut s = Stmt::Instr(crate::tir::Instr {
+            result: "r".into(),
+            ty: Ty::UInt(18),
+            op: crate::tir::Op::Add,
+            operands: vec![Operand::Local("a".into()), Operand::Local("x".into())],
+        });
+        let n = substitute_locals(&mut s, &subst);
+        assert_eq!(n, 2, "a → b → 5");
+        let Stmt::Instr(i) = &s else { unreachable!() };
+        assert_eq!(i.operands[0], Operand::Imm(5));
+        assert_eq!(i.operands[1], Operand::Local("x".into()));
+    }
+
+    #[test]
+    fn fresh_names_never_collide() {
+        let mut used: BTreeSet<String> = ["x".to_string(), "x_u1".to_string()].into();
+        assert_eq!(fresh_name(&mut used, "y"), "y");
+        assert_eq!(fresh_name(&mut used, "x"), "x_u2");
+        assert!(used.contains("x_u2"));
+    }
+
+    #[test]
+    fn empty_recipe_pipeline_is_identity() {
+        let mut m = simple_module();
+        let before = m.clone();
+        let r = apply_recipe(&mut m, TransformRecipe::NONE).unwrap();
+        assert!(!r.changed());
+        assert_eq!(r.rounds, 1);
+        assert_eq!(m, before);
+    }
+
+    #[test]
+    fn full_recipe_reaches_a_fixpoint_and_stays_valid() {
+        let mut m = simple_module();
+        let r = apply_recipe(&mut m, TransformRecipe::full()).unwrap();
+        assert!(r.rounds < 8, "must converge before the cap: {r:?}");
+        validate::validate(&m).unwrap();
+        // applying the same recipe again is a no-op
+        let again = apply_recipe(&mut m, TransformRecipe::full()).unwrap();
+        assert!(!again.changed(), "{again:?}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Transform recipes: named pass combinations swept as a design-space
+//! axis.
+//!
+//! A [`TransformRecipe`] is a small bit-set of rewrite passes. It rides
+//! on `frontend::DesignPoint` (so it must be `Copy + Eq + Hash` like
+//! every other axis), names itself for candidate labels
+//! (`pipe×4+balance`), and enumerates the *named* recipes the DSE
+//! sweeps when `SweepLimits::include_transforms` is on. The mapping from
+//! recipe bits to an ordered pass pipeline lives in
+//! [`super::PassPipeline::for_recipe`].
+
+use std::fmt;
+
+/// A set of TIR-to-TIR rewrite passes applied between variant expansion
+/// and leaf selection (see `frontend::lower_point`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct TransformRecipe(u8);
+
+impl TransformRecipe {
+    /// The identity recipe: no rewriting (every pre-transform sweep).
+    pub const NONE: TransformRecipe = TransformRecipe(0);
+
+    /// Constant folding + identity simplification.
+    pub const FOLD: u8 = 1 << 0;
+    /// Common-subexpression elimination.
+    pub const CSE: u8 = 1 << 1;
+    /// Strength-reduction choice: const-multiplies become shift-add
+    /// networks (DSP ↔ ALUT trade).
+    pub const STRENGTH: u8 = 1 << 2;
+    /// Reassociation / operator balancing (reduces dependency depth).
+    pub const BALANCE: u8 = 1 << 3;
+    /// Balance-aware multi-way chain splitting (comb stage callees).
+    pub const SPLIT: u8 = 1 << 4;
+
+    const ALL: u8 = Self::FOLD | Self::CSE | Self::STRENGTH | Self::BALANCE | Self::SPLIT;
+
+    /// Recipe from raw bits (unknown bits are dropped).
+    pub fn from_bits(bits: u8) -> TransformRecipe {
+        TransformRecipe(bits & Self::ALL)
+    }
+
+    /// Raw pass bits.
+    pub fn bits(self) -> u8 {
+        self.0
+    }
+
+    /// Does the recipe include a pass bit?
+    pub fn has(self, bit: u8) -> bool {
+        self.0 & bit != 0
+    }
+
+    /// Is this the identity recipe?
+    pub fn is_none(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Cleanup-only recipe: folding + CSE.
+    pub fn simplify() -> TransformRecipe {
+        TransformRecipe(Self::FOLD | Self::CSE)
+    }
+
+    /// Simplify + const-mul strength reduction (the DSP→shift-add
+    /// choice the cost DB used to hard-code behind `SHIFT_ADD_MAX_POP`).
+    pub fn shiftadd() -> TransformRecipe {
+        TransformRecipe(Self::FOLD | Self::CSE | Self::STRENGTH)
+    }
+
+    /// Simplify + operator balancing (dependency-depth reduction).
+    pub fn balance() -> TransformRecipe {
+        TransformRecipe(Self::FOLD | Self::CSE | Self::BALANCE)
+    }
+
+    /// Every pass, including the multi-way chain split.
+    pub fn full() -> TransformRecipe {
+        TransformRecipe(Self::ALL)
+    }
+
+    /// The named recipes the DSE enumerates (`--transforms`), in
+    /// canonical sweep order.
+    pub fn named() -> [(TransformRecipe, &'static str); 4] {
+        [
+            (Self::simplify(), "simplify"),
+            (Self::shiftadd(), "shiftadd"),
+            (Self::balance(), "balance"),
+            (Self::full(), "full"),
+        ]
+    }
+
+    /// Stable name used in candidate labels and module names. The named
+    /// recipes get friendly names; ad-hoc combinations a hex tag.
+    pub fn name(self) -> String {
+        if self.is_none() {
+            return String::new();
+        }
+        for (r, n) in Self::named() {
+            if r == self {
+                return n.to_string();
+            }
+        }
+        format!("xf{:02x}", self.0)
+    }
+
+    /// Parse a recipe by its stable name (`simplify`, …, `none`).
+    pub fn parse(s: &str) -> Option<TransformRecipe> {
+        if s.is_empty() || s == "none" {
+            return Some(Self::NONE);
+        }
+        Self::named().into_iter().find(|(_, n)| *n == s).map(|(r, _)| r)
+    }
+}
+
+impl fmt::Display for TransformRecipe {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_none() {
+            write!(f, "none")
+        } else {
+            write!(f, "{}", self.name())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_recipes_roundtrip_their_names() {
+        for (r, n) in TransformRecipe::named() {
+            assert_eq!(r.name(), n);
+            assert_eq!(TransformRecipe::parse(n), Some(r));
+            assert!(!r.is_none());
+        }
+        assert_eq!(TransformRecipe::parse("none"), Some(TransformRecipe::NONE));
+        assert_eq!(TransformRecipe::parse("frobnicate"), None);
+        assert_eq!(TransformRecipe::NONE.name(), "");
+    }
+
+    #[test]
+    fn bits_accessors() {
+        let r = TransformRecipe::shiftadd();
+        assert!(r.has(TransformRecipe::FOLD));
+        assert!(r.has(TransformRecipe::STRENGTH));
+        assert!(!r.has(TransformRecipe::BALANCE));
+        assert_eq!(TransformRecipe::from_bits(r.bits()), r);
+        // unknown bits dropped
+        assert_eq!(TransformRecipe::from_bits(0xE0), TransformRecipe::NONE);
+    }
+
+    #[test]
+    fn ad_hoc_combo_gets_a_stable_tag() {
+        let r = TransformRecipe::from_bits(TransformRecipe::BALANCE);
+        assert_eq!(r.name(), "xf08");
+        assert_eq!(r.to_string(), "xf08");
+    }
+
+    #[test]
+    fn ordering_and_default_are_stable() {
+        assert_eq!(TransformRecipe::default(), TransformRecipe::NONE);
+        assert!(TransformRecipe::NONE < TransformRecipe::simplify());
+    }
+}

@@ -1,0 +1,401 @@
+//! Balance-aware multi-way chain splitting — the ROADMAP item ("the
+//! chain axis always splits at `n/2` with one comb prefix; a
+//! balance-aware split (equalising stage depth) and multi-way chains
+//! would explore genuinely different pipeline shapes"), closed as a
+//! transform pass.
+//!
+//! A leaf datapath function is cut into up to `ways` stages of
+//! *equalised ASAP depth*: instructions are bucketed by their dependency
+//! depth (not their count — a lopsided datapath still yields balanced
+//! stages), every bucket but the last becomes a `comb` stage callee with
+//! alpha-renamed parameters (`h<stage>_<name>`), and the residual
+//! function calls the stages in order, passing each stage its live-ins —
+//! function parameters and earlier-stage results alike (earlier results
+//! are visible at the call site through the callee-import convention,
+//! the same scoping every backend already implements for the `+chain`
+//! axis; stage results keep their original names, so the residual body
+//! and the ostream binding are untouched).
+//!
+//! Eligibility is conservative: only call-free functions whose body is
+//! instructions followed by at most a trailing reduce, never `@main`,
+//! never `par` wrappers, and protected results (ostream-bound /
+//! cross-function) always stay in the residual function.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{local_names_in_use, protected_names, Pass};
+use crate::tir::{Call, Func, Kind, Module, Operand, Stmt, Ty};
+
+/// The multi-way chain splitter.
+pub struct ChainSplit {
+    /// Maximum number of stages (callees + residual). Clamped per
+    /// function to the datapath's ASAP depth.
+    pub ways: usize,
+}
+
+impl Default for ChainSplit {
+    fn default() -> ChainSplit {
+        ChainSplit { ways: 3 }
+    }
+}
+
+impl Pass for ChainSplit {
+    fn name(&self) -> &'static str {
+        "chain-split"
+    }
+
+    fn run(&self, m: &mut Module) -> Result<usize, String> {
+        if self.ways < 2 {
+            return Ok(0);
+        }
+        let protected = protected_names(m);
+        let mut used_locals = local_names_in_use(m);
+        let mut changes = 0usize;
+        let names: Vec<String> = m.funcs.keys().cloned().collect();
+        for name in names {
+            if name == "main" {
+                continue;
+            }
+            let Some(f) = m.funcs.get(&name) else { continue };
+            if f.kind == Kind::Par {
+                continue;
+            }
+            let Some((stages, residual)) =
+                plan_split(f, self.ways, &protected, &mut used_locals, m)
+            else {
+                continue;
+            };
+            changes += stages.len();
+            for sf in stages {
+                m.funcs.insert(sf.name.clone(), sf);
+            }
+            let f = m.funcs.get_mut(&name).expect("planned above");
+            f.body = residual;
+        }
+        Ok(changes)
+    }
+}
+
+/// Plan one function's split: returns the stage callees and the new
+/// residual body, or `None` when the function is ineligible.
+fn plan_split(
+    f: &Func,
+    ways: usize,
+    protected: &BTreeSet<String>,
+    used_locals: &mut BTreeSet<String>,
+    m: &Module,
+) -> Option<(Vec<Func>, Vec<Stmt>)> {
+    // Shape: instructions, then (optionally) reduce statements. Any call
+    // means the function already has chain structure — leave it alone.
+    let mut instr_end = 0usize;
+    for (idx, s) in f.body.iter().enumerate() {
+        match s {
+            Stmt::Call(_) => return None,
+            Stmt::Instr(_) => {
+                if idx != instr_end {
+                    return None; // instr after a reduce: unexpected shape
+                }
+                instr_end = idx + 1;
+            }
+            Stmt::Reduce(_) => {}
+        }
+    }
+    if instr_end < 4 {
+        return None; // too small to be worth staging
+    }
+
+    // Movable prefix: everything before the first protected result.
+    let mut limit = instr_end;
+    for (idx, s) in f.body[..instr_end].iter().enumerate() {
+        let Stmt::Instr(i) = s else { unreachable!("prefix is instrs") };
+        if protected.contains(&i.result) {
+            limit = idx;
+            break;
+        }
+    }
+    if limit < 2 {
+        return None;
+    }
+
+    // ASAP depth over the movable prefix (operands defined outside it —
+    // parameters — sit at depth 0).
+    let mut depth_of: BTreeMap<&str, u64> = BTreeMap::new();
+    let mut d = vec![0u64; limit];
+    let mut total = 0u64;
+    for (idx, s) in f.body[..limit].iter().enumerate() {
+        let Stmt::Instr(i) = s else { unreachable!() };
+        let base = i
+            .operands
+            .iter()
+            .filter_map(|o| match o {
+                Operand::Local(n) => depth_of.get(n.as_str()).copied(),
+                _ => Some(0),
+            })
+            .max()
+            .unwrap_or(0);
+        d[idx] = base + 1;
+        depth_of.insert(i.result.as_str(), d[idx]);
+        total = total.max(d[idx]);
+    }
+    let ways = ways.min(total as usize);
+    if ways < 2 {
+        return None;
+    }
+
+    // Depth buckets 1..=ways: instruction idx goes to
+    // ceil(depth · ways / total) — equalised stage depth by construction
+    // (every depth value 1..=total is occupied: an instruction at depth
+    // t has an operand at depth t−1).
+    let bucket = |idx: usize| -> usize {
+        ((d[idx] * ways as u64).div_ceil(total)) as usize
+    };
+
+    // Local types of the function (params + own results) for stage
+    // parameter declarations. Call-free ⇒ complete.
+    let mut local_ty: BTreeMap<&str, Ty> = BTreeMap::new();
+    for (p, ty) in &f.params {
+        local_ty.insert(p.as_str(), *ty);
+    }
+    for s in &f.body {
+        match s {
+            Stmt::Instr(i) => {
+                local_ty.insert(i.result.as_str(), i.ty);
+            }
+            Stmt::Reduce(r) => {
+                local_ty.insert(r.result.as_str(), r.ty);
+            }
+            Stmt::Call(_) => unreachable!("call-free checked"),
+        }
+    }
+
+    let mut stages: Vec<Func> = Vec::new();
+    let mut calls: Vec<Stmt> = Vec::new();
+    for s in 1..ways {
+        let idxs: Vec<usize> = (0..limit).filter(|&i| bucket(i) == s).collect();
+        debug_assert!(!idxs.is_empty(), "every depth bucket is occupied");
+        // Names defined inside this stage.
+        let defined: BTreeSet<&str> = idxs
+            .iter()
+            .map(|&i| match &f.body[i] {
+                Stmt::Instr(ins) => ins.result.as_str(),
+                _ => unreachable!(),
+            })
+            .collect();
+        // Live-ins in first-use order.
+        let mut live_in: Vec<String> = Vec::new();
+        for &i in &idxs {
+            let Stmt::Instr(ins) = &f.body[i] else { unreachable!() };
+            for o in &ins.operands {
+                if let Operand::Local(n) = o {
+                    if !defined.contains(n.as_str()) && !live_in.iter().any(|l| l == n) {
+                        live_in.push(n.clone());
+                    }
+                }
+            }
+        }
+        // Alpha-renamed parameters (module-globally fresh, so the
+        // imported-by-name convention cannot collide anywhere).
+        let mut rename: BTreeMap<String, String> = BTreeMap::new();
+        let mut params: Vec<(String, Ty)> = Vec::new();
+        for n in &live_in {
+            let pname = super::fresh_name(used_locals, &format!("h{s}_{n}"));
+            let ty = *local_ty.get(n.as_str())?;
+            params.push((pname.clone(), ty));
+            rename.insert(n.clone(), pname);
+        }
+        // Stage body: the bucket's instructions with live-ins renamed to
+        // the stage parameters; results keep their names (they import
+        // back into the residual function).
+        let mut body: Vec<Stmt> = Vec::with_capacity(idxs.len());
+        for &i in &idxs {
+            let Stmt::Instr(ins) = &f.body[i] else { unreachable!() };
+            let mut ins = ins.clone();
+            for o in &mut ins.operands {
+                let rep = match &*o {
+                    Operand::Local(n) => rename.get(n.as_str()).cloned(),
+                    _ => None,
+                };
+                if let Some(p) = rep {
+                    *o = Operand::Local(p);
+                }
+            }
+            body.push(Stmt::Instr(ins));
+        }
+        let fname = stage_fn_name(m, &f.name, s, &stages);
+        calls.push(Stmt::Call(Call {
+            callee: fname.clone(),
+            args: live_in.into_iter().map(Operand::Local).collect(),
+            kind: Some(Kind::Comb),
+            repeat: 1,
+        }));
+        stages.push(Func { name: fname, params, kind: Kind::Comb, body });
+    }
+
+    // Residual: stage calls, then the kept instructions (last bucket +
+    // protected tail) in original order, then the reduce tail.
+    let mut residual = calls;
+    for (idx, s) in f.body.iter().enumerate() {
+        match s {
+            Stmt::Instr(_) if idx < limit && bucket(idx) < ways => {}
+            other => residual.push(other.clone()),
+        }
+    }
+    Some((stages, residual))
+}
+
+/// Fresh stage-function name: `<f>_xs<s>`, bumped on collision.
+fn stage_fn_name(m: &Module, base: &str, s: usize, pending: &[Func]) -> String {
+    let mut k = 0usize;
+    loop {
+        let cand = if k == 0 {
+            format!("{base}_xs{s}")
+        } else {
+            format!("{base}_xs{s}_u{k}")
+        };
+        if !m.funcs.contains_key(&cand) && !pending.iter().any(|f| f.name == cand) {
+            return cand;
+        }
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::frontend::{self, DesignPoint};
+    use crate::sim::{self, Workload};
+    use crate::tir::validate;
+
+    fn run_split(m: &mut Module, ways: usize) -> usize {
+        let n = ChainSplit { ways }.run(m).unwrap();
+        validate::validate(m).unwrap();
+        n
+    }
+
+    fn deep_kernel() -> frontend::KernelDef {
+        // a 6-deep dependent chain plus side work
+        frontend::parse_kernel(
+            "kernel deep { in a, b : ui18[64]\nout y : ui18[64]\n\
+             for n in 0..64 { y[n] = ((((((a[n] + b[n]) * 3) + a[n]) * 5) + b[n]) * 7) + 1 } }",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn splits_into_comb_stages_and_preserves_output() {
+        let base = frontend::lower(&deep_kernel(), DesignPoint::c2()).unwrap();
+        let mut m = base.clone();
+        let n = run_split(&mut m, 3);
+        assert_eq!(n, 2, "3-way split = 2 stage callees + residual");
+        assert!(m.funcs.contains_key("f_dp_xs1"), "{:?}", m.funcs.keys());
+        assert!(m.funcs.contains_key("f_dp_xs2"));
+        for s in ["f_dp_xs1", "f_dp_xs2"] {
+            assert_eq!(m.funcs[s].kind, Kind::Comb);
+            assert!(!m.funcs[s].body.is_empty());
+            // alpha-renamed parameters
+            assert!(m.funcs[s].params.iter().all(|(p, _)| p.starts_with('h')), "{:?}", m.funcs[s].params);
+        }
+        // the residual leaf calls the stages in order and keeps the root
+        let leaf = &m.funcs["f_dp"];
+        let callees: Vec<&str> = m.calls_of(leaf).map(|c| c.callee.as_str()).collect();
+        assert_eq!(callees, vec!["f_dp_xs1", "f_dp_xs2"]);
+        assert!(m.instrs_of(leaf).any(|i| i.result == "y"));
+
+        // bit-identical behaviour
+        let dev = Device::stratix4();
+        let w = Workload::random_for(&base, 5);
+        let rb = sim::simulate(&base, &dev, &w).unwrap();
+        let rt = sim::simulate(&m, &dev, &Workload::random_for(&m, 5)).unwrap();
+        assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"]);
+
+        // idempotent: the residual now has calls, stages are protected
+        assert_eq!(run_split(&mut m, 3), 0);
+    }
+
+    #[test]
+    fn stage_depths_are_balanced_not_counts() {
+        // A lopsided datapath: a long dependent chain — splitting by
+        // instruction count would put all of the depth in one stage.
+        let base = frontend::lower(&deep_kernel(), DesignPoint::c2()).unwrap();
+        let mut m = base.clone();
+        run_split(&mut m, 2);
+        let s1 = &m.funcs["f_dp_xs1"];
+        // stage 1 holds roughly half the chain's depth
+        let depth = |f: &Func| -> u64 {
+            let mut dm: BTreeMap<&str, u64> = BTreeMap::new();
+            let mut best = 0;
+            for s in &f.body {
+                if let Stmt::Instr(i) = s {
+                    let b = i
+                        .operands
+                        .iter()
+                        .filter_map(|o| match o {
+                            Operand::Local(n) => Some(dm.get(n.as_str()).copied().unwrap_or(0)),
+                            _ => Some(0),
+                        })
+                        .max()
+                        .unwrap_or(0);
+                    dm.insert(i.result.as_str(), b + 1);
+                    best = best.max(b + 1);
+                }
+            }
+            best
+        };
+        let total = depth(&m.funcs["f_dp"]).max(1) + depth(s1);
+        assert!(depth(s1) >= total / 2 - 1, "stage 1 depth {} of {total}", depth(s1));
+    }
+
+    #[test]
+    fn estimator_sees_a_shallower_pipeline() {
+        // comb stage callees collapse to one ASAP stage each (the same
+        // modelling the +chain axis uses), so the estimated pipeline
+        // depth drops — a genuinely different estimation-space position.
+        let base = frontend::lower(&deep_kernel(), DesignPoint::c2()).unwrap();
+        let mut m = base.clone();
+        run_split(&mut m, 3);
+        let db = crate::estimator::structure::analyze(&base).unwrap();
+        let dt = crate::estimator::structure::analyze(&m).unwrap();
+        assert!(dt.datapath_depth < db.datapath_depth, "{dt:?} vs {db:?}");
+    }
+
+    #[test]
+    fn chained_points_and_small_leaves_are_left_alone() {
+        // +chain leaves have a call in the body — ineligible.
+        let k = deep_kernel();
+        let mut chained = frontend::lower(&k, DesignPoint::c2().chained()).unwrap();
+        let before = chained.clone();
+        // f_pre's results are all imported by f_dp → protected; f_dp has
+        // a call → skipped. Nothing may change.
+        assert_eq!(run_split(&mut chained, 3), 0);
+        assert_eq!(chained, before);
+
+        // tiny datapaths are not worth staging
+        let small = frontend::parse_kernel(
+            "kernel s { in a : ui18[8]\nout y : ui18[8]\nfor n in 0..8 { y[n] = a[n] + 1 } }",
+        )
+        .unwrap();
+        let mut m = frontend::lower(&small, DesignPoint::c2()).unwrap();
+        assert_eq!(run_split(&mut m, 3), 0);
+    }
+
+    #[test]
+    fn reduce_tails_stay_in_the_residual_function() {
+        let k = frontend::parse_kernel(
+            "kernel dr { in a, b : ui18[64]\nout y : ui18[1]\n\
+             for n in 0..64 { y[0] = sum((((a[n] * 3) + b[n]) * 5) + (a[n] * b[n])) } }",
+        )
+        .unwrap();
+        let base = frontend::lower(&k, DesignPoint::c2()).unwrap();
+        let mut m = base.clone();
+        let n = run_split(&mut m, 2);
+        assert!(n >= 1, "the reduce kernel's datapath must split");
+        let leaf = &m.funcs["f_dp"];
+        assert!(m.reduces_of(leaf).next().is_some(), "reduce stays in the leaf");
+        let dev = Device::stratix4();
+        let w = Workload::random_for(&base, 8);
+        let rb = sim::simulate(&base, &dev, &w).unwrap();
+        let rt = sim::simulate(&m, &dev, &Workload::random_for(&m, 8)).unwrap();
+        assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"]);
+    }
+}

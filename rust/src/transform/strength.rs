@@ -1,0 +1,275 @@
+//! Strength-reduction choice: constant multiplies as shift-add networks.
+//!
+//! The cost DB prices a const-multiply as a shift-add network only up to
+//! `estimator::cost_db::SHIFT_ADD_MAX_POP` set bits, and as a DSP slice
+//! beyond — a *threshold hard-coded in the estimator*. This pass
+//! promotes that decision into an actual IR rewrite the sweep can
+//! toggle: with the pass on, **every** const-multiply becomes an
+//! explicit shift-add network (`x·c = Σ (x << k)` over the set bits of
+//! `c`), trading the DSP for ALUTs; with it off the multiply stays and
+//! dense constants keep their DSP. The estimator then simply prices
+//! what the IR says — const shifts are wiring, the adds are carry
+//! chains — instead of guessing the lowering.
+//!
+//! Legality: the rewrite is modular arithmetic at the instruction width
+//! (`Σ (x·2^k) ≡ x·c (mod 2^w)`), valid for unsigned instructions. The
+//! validator's widening rule guarantees every set bit of the constant
+//! sits below the instruction width (the constant's type is accepted by
+//! the instruction), so no term is silently dropped.
+
+use std::collections::BTreeMap;
+
+use super::{local_names_in_use, Pass};
+use crate::tir::{Instr, Module, Op, Operand, Stmt};
+
+/// The strength-reduction pass.
+pub struct StrengthReduce;
+
+impl Pass for StrengthReduce {
+    fn name(&self) -> &'static str {
+        "strength-reduce"
+    }
+
+    fn run(&self, m: &mut Module) -> Result<usize, String> {
+        let consts: BTreeMap<String, u64> = m
+            .consts
+            .values()
+            .map(|c| (c.name.clone(), (c.value as u64) & c.ty.mask()))
+            .collect();
+        // New SSA names import into callers by name: freshness must be
+        // module-global.
+        let mut used = local_names_in_use(m);
+        let mut changes = 0usize;
+        let names: Vec<String> = m.funcs.keys().cloned().collect();
+        for name in names {
+            let mut f = m.funcs.remove(&name).expect("key enumerated above");
+            changes += reduce_func(&mut f.body, &consts, &mut used);
+            m.funcs.insert(name, f);
+        }
+        Ok(changes)
+    }
+}
+
+/// The (constant value, variable operand) split of a const-multiply.
+fn const_mul_split(i: &Instr, consts: &BTreeMap<String, u64>) -> Option<(u64, Operand)> {
+    if i.op != Op::Mul || i.operands.len() != 2 || i.ty.is_signed() {
+        return None;
+    }
+    let val = |o: &Operand| -> Option<u64> {
+        match o {
+            Operand::Imm(v) => Some(*v as u64),
+            Operand::Global(g) => consts.get(g.as_str()).copied(),
+            Operand::Local(_) => None,
+        }
+    };
+    match (val(&i.operands[0]), val(&i.operands[1])) {
+        // both constant: the fold pass's case, not ours
+        (Some(_), Some(_)) => None,
+        (Some(c), None) => Some((c, i.operands[1].clone())),
+        (None, Some(c)) => Some((c, i.operands[0].clone())),
+        (None, None) => None,
+    }
+}
+
+fn reduce_func(
+    body: &mut Vec<Stmt>,
+    consts: &BTreeMap<String, u64>,
+    used: &mut std::collections::BTreeSet<String>,
+) -> usize {
+    let mut changes = 0usize;
+    let old = std::mem::take(body);
+    for s in old {
+        let Stmt::Instr(i) = s else {
+            body.push(s);
+            continue;
+        };
+        let Some((c, x)) = const_mul_split(&i, consts) else {
+            body.push(Stmt::Instr(i));
+            continue;
+        };
+        // Effective multiplier at the instruction width. The validator's
+        // widening rule puts every set bit below `w` already; the mask is
+        // defensive.
+        let c_eff = c & i.ty.mask();
+        let set_bits: Vec<u32> = (0..i.ty.bits()).filter(|k| c_eff >> k & 1 == 1).collect();
+        changes += 1;
+        match set_bits.as_slice() {
+            [] => {
+                // ×0: the canonical constant-zero form (same shape the
+                // fold pass emits for protected results; fold cleans up
+                // unprotected ones next round).
+                body.push(Stmt::Instr(Instr {
+                    result: i.result,
+                    ty: i.ty,
+                    op: Op::Add,
+                    operands: vec![Operand::Imm(0), Operand::Imm(0)],
+                }));
+            }
+            [0] => {
+                // ×1: forward (fold collapses it when unprotected).
+                body.push(Stmt::Instr(Instr {
+                    result: i.result,
+                    ty: i.ty,
+                    op: Op::Add,
+                    operands: vec![x, Operand::Imm(0)],
+                }));
+            }
+            [k] => {
+                // a single set bit: one wiring-free shift
+                body.push(Stmt::Instr(Instr {
+                    result: i.result,
+                    ty: i.ty,
+                    op: Op::Shl,
+                    operands: vec![x, Operand::Imm(*k as i64)],
+                }));
+            }
+            bits => {
+                // Σ (x << k): one shift per set bit (bit 0 is x itself),
+                // combined by an add chain whose last link keeps the
+                // original result name. The balance pass re-trees the
+                // chain when the recipe includes it.
+                let mut terms: Vec<Operand> = Vec::with_capacity(bits.len());
+                let mut emit: Vec<Stmt> = Vec::new();
+                for &k in bits {
+                    if k == 0 {
+                        terms.push(x.clone());
+                        continue;
+                    }
+                    let name = super::fresh_name(used, &format!("{}_sr{k}", i.result));
+                    emit.push(Stmt::Instr(Instr {
+                        result: name.clone(),
+                        ty: i.ty,
+                        op: Op::Shl,
+                        operands: vec![x.clone(), Operand::Imm(k as i64)],
+                    }));
+                    terms.push(Operand::Local(name));
+                }
+                let mut acc = terms[0].clone();
+                for (j, t) in terms.iter().enumerate().skip(1) {
+                    let last = j == terms.len() - 1;
+                    let name = if last {
+                        i.result.clone()
+                    } else {
+                        super::fresh_name(used, &format!("{}_sa{j}", i.result))
+                    };
+                    emit.push(Stmt::Instr(Instr {
+                        result: name.clone(),
+                        ty: i.ty,
+                        op: Op::Add,
+                        operands: vec![acc.clone(), t.clone()],
+                    }));
+                    acc = Operand::Local(name);
+                }
+                body.extend(emit);
+            }
+        }
+    }
+    changes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::estimator;
+    use crate::sim::{self, Workload};
+    use crate::tir::{parse_and_validate, validate, Module};
+
+    fn run_sr(m: &mut Module) -> usize {
+        let n = StrengthReduce.run(m).unwrap();
+        validate::validate(m).unwrap();
+        n
+    }
+
+    fn scale_like(k: i64) -> Module {
+        let src = format!(
+            "@k = const ui18 {k}\n\
+             @mem_x = addrspace(3) <64 x ui18>\n\
+             @mem_y = addrspace(3) <64 x ui18>\n\
+             @s_x = addrspace(10), !\"source\", !\"@mem_x\"\n\
+             @s_y = addrspace(10), !\"dest\", !\"@mem_y\"\n\
+             @main.x = addrspace(12) ui18, !\"istream\", !\"CONT\", !0, !\"s_x\"\n\
+             @main.y = addrspace(12) ui18, !\"ostream\", !\"CONT\", !0, !\"s_y\"\n\
+             define void @main () pipe {{\n\
+                 ui18 %1 = mul ui18 @main.x, @k\n\
+                 ui18 %y = add ui18 %1, 1\n\
+             }}"
+        );
+        parse_and_validate(&src).unwrap()
+    }
+
+    #[test]
+    fn dense_const_mul_trades_dsp_for_shift_adds() {
+        // 2781 = 0b101011011101: popcount 8 > SHIFT_ADD_MAX_POP, so the
+        // unrewritten module pays a DSP; the rewritten one must not.
+        let base = scale_like(2781);
+        let dev = Device::stratix4();
+        let eb = estimator::estimate(&base, &dev).unwrap();
+        assert!(eb.resources.dsp >= 1, "{:?}", eb.resources);
+
+        let mut m = base.clone();
+        assert_eq!(run_sr(&mut m), 1);
+        let et = estimator::estimate(&m, &dev).unwrap();
+        assert_eq!(et.resources.dsp, 0, "{:?}", et.resources);
+        assert!(et.resources.alut > eb.resources.alut, "ALUTs must absorb the multiply");
+
+        // 7 shifts (bit 0 set → x itself is a term) + 7 adds
+        let main = &m.funcs["main"];
+        assert_eq!(m.instrs_of(main).filter(|i| i.op == Op::Shl).count(), 7);
+        assert_eq!(m.instrs_of(main).filter(|i| i.op == Op::Add).count(), 8); // 7 combine + %y
+
+        // bit-identical output
+        let w = Workload::random_for(&base, 3);
+        let rb = sim::simulate(&base, &dev, &w).unwrap();
+        let rt = sim::simulate(&m, &dev, &Workload::random_for(&m, 3)).unwrap();
+        assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"]);
+    }
+
+    #[test]
+    fn power_of_two_becomes_one_shift() {
+        let mut m = scale_like(1024);
+        assert_eq!(run_sr(&mut m), 1);
+        let main = &m.funcs["main"];
+        let i = m.instrs_of(main).next().unwrap();
+        assert_eq!(i.op, Op::Shl);
+        assert_eq!(i.operands[1], Operand::Imm(10));
+    }
+
+    #[test]
+    fn mul_by_one_and_zero_canonicalise() {
+        let mut m1 = scale_like(1);
+        assert_eq!(run_sr(&mut m1), 1);
+        let i = m1.instrs_of(&m1.funcs["main"]).next().unwrap().clone();
+        assert_eq!((i.op, i.operands[1].clone()), (Op::Add, Operand::Imm(0)));
+
+        let mut m0 = scale_like(0);
+        assert_eq!(run_sr(&mut m0), 1);
+        let i = m0.instrs_of(&m0.funcs["main"]).next().unwrap().clone();
+        assert_eq!(i.operands, vec![Operand::Imm(0), Operand::Imm(0)]);
+    }
+
+    #[test]
+    fn variable_muls_are_untouched_and_pass_is_idempotent() {
+        let src = "define void @main (ui18 %a, ui18 %b) pipe { ui36 %y = mul ui36 %a, %b }";
+        let mut m = parse_and_validate(src).unwrap();
+        assert_eq!(run_sr(&mut m), 0);
+
+        let mut m2 = scale_like(2781);
+        run_sr(&mut m2);
+        assert_eq!(run_sr(&mut m2), 0, "no multiplies left to rewrite");
+    }
+
+    #[test]
+    fn rewrite_semantics_match_for_every_popcount() {
+        let dev = Device::stratix4();
+        for c in [2, 3, 5, 7, 15, 100, 2781, 262143] {
+            let base = scale_like(c);
+            let mut m = base.clone();
+            run_sr(&mut m);
+            let w = Workload::random_for(&base, c as u64);
+            let rb = sim::simulate(&base, &dev, &w).unwrap();
+            let rt = sim::simulate(&m, &dev, &Workload::random_for(&m, c as u64)).unwrap();
+            assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"], "c = {c}");
+        }
+    }
+}

@@ -80,10 +80,11 @@ fn sweep_covers_the_whole_kernel_library() {
         "sweep builtin:all --devices stratix4 --jobs 2 --max-lanes 2 --max-dv 2",
     ))
     .unwrap();
-    assert!(out.contains("11 kernel(s) × 1 device(s)"), "{out}");
-    for name in
-        ["simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow", "dotn", "vsum", "matvec"]
-    {
+    assert!(out.contains("12 kernel(s) × 1 device(s)"), "{out}");
+    for name in [
+        "simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow", "dotn", "vsum",
+        "matvec", "blend6",
+    ] {
         assert!(out.contains(name), "missing `{name}` in:\n{out}");
     }
 }
@@ -120,6 +121,45 @@ fn sweep_explores_acc_and_tree_points_for_reduction_kernels() {
     }
     // 12 points per kernel (6 base + 6 tree twins)
     assert!(out.contains("12 points each"), "{out}");
+}
+
+#[test]
+fn transforms_flag_from_cli_and_config_file() {
+    // CLI flag: the transform axis multiplies the swept space ×5.
+    let out = dispatch(&args("dse builtin:jacobi2d --jobs 2 --max-lanes 2 --max-dv 2 --transforms"))
+        .unwrap();
+    assert!(out.contains("(30 points"), "{out}");
+    assert!(out.contains("+balance"), "jacobi's add chain must rebalance:\n{out}");
+    // …and the same axis via the config key.
+    let dir = tmpdir("xfcfg");
+    let cfg = dir.join("tytra.toml");
+    std::fs::write(
+        &cfg,
+        "jobs = 2\n[sweep]\nmax_lanes = 2\nmax_dv = 2\ninclude_transforms = true\n",
+    )
+    .unwrap();
+    let out = dispatch(&args(&format!("dse builtin:jacobi2d --config {}", cfg.display()))).unwrap();
+    assert!(out.contains("(30 points"), "{out}");
+}
+
+#[test]
+fn sweep_json_is_machine_readable_and_byte_stable() {
+    let argv = args(
+        "sweep builtin:blend6 builtin:scale --devices stratix4,cyclone4 --jobs 2 --max-lanes 2 --max-dv 2 --transforms --json",
+    );
+    let out = dispatch(&argv).unwrap();
+    assert!(out.trim_start().starts_with('{') && out.trim_end().ends_with('}'), "{out}");
+    assert!(out.contains("\"kernels\": 2, \"devices\": 2"), "{out}");
+    assert!(out.contains("\"frontier\""), "{out}");
+    assert!(out.contains("\"feasible\""), "{out}");
+    // scale's dense-constant multiply: the shiftadd recipe realises and
+    // its DSP→ALUT trade is visible in the export
+    assert!(out.contains("+shiftadd"), "{out}");
+    // repeated runs export byte-identical text (deterministic frontier)
+    assert_eq!(out, dispatch(&argv).unwrap());
+    // exit path: --json on a sweep with a bad kernel spec still errors
+    let e = dispatch(&args("sweep builtin:nope --json")).unwrap_err();
+    assert!(e.contains("unknown builtin"), "{e}");
 }
 
 #[test]

@@ -424,6 +424,96 @@ fn reduce_shapes_agree_and_drain_orders_cycles() {
 }
 
 #[test]
+fn transform_recipes_preserve_semantics_on_random_kernels() {
+    // ISSUE 5 satellite: every named transform recipe × every design
+    // point stays bit-identical to the untransformed module on random
+    // kernels, and the rewritten modules survive the pretty→parse
+    // fixed point (rewritten IR is still first-class TIR).
+    use tytra::transform::TransformRecipe;
+    let mut rng = Prng::new(0x7F0A);
+    let dev = Device::stratix4();
+    let mut exercised = 0usize;
+    for case in 0..CASES {
+        let src = random_kernel(&mut rng, case);
+        let k = frontend::parse_kernel(&src).unwrap();
+        for p in [
+            DesignPoint::c2(),
+            DesignPoint::c1(2),
+            DesignPoint::c3(2),
+            DesignPoint::c4(),
+            DesignPoint::c2().chained(),
+            DesignPoint::c2().tree(),
+        ] {
+            let Ok(base) = frontend::lower(&k, p) else { continue };
+            let w = Workload::random_for(&base, 100 + case as u64);
+            let rb = sim::simulate(&base, &dev, &w).unwrap_or_else(|e| panic!("{e}\n{src}"));
+            for (recipe, rname) in TransformRecipe::named() {
+                let mt = frontend::lower(&k, p.with_transforms(recipe))
+                    .unwrap_or_else(|e| panic!("{rname} {p:?}: {e}\n{src}"));
+                let wt = Workload::random_for(&mt, 100 + case as u64);
+                assert_eq!(wt.mems, w.mems, "{rname}: transforms must not touch Manage-IR\n{src}");
+                let rt = sim::simulate(&mt, &dev, &wt).unwrap_or_else(|e| panic!("{rname}: {e}\n{src}"));
+                assert_eq!(
+                    rt.mems["mem_y"], rb.mems["mem_y"],
+                    "{rname} at {p:?} diverges for:\n{src}"
+                );
+                // pretty → parse → pretty fixed point on the rewritten IR
+                let t1 = tir::pretty::print(&mt);
+                let m2 = tir::parse_and_validate(&t1).unwrap_or_else(|e| panic!("{rname}: {e}\n{t1}"));
+                assert_eq!(mt, m2, "{rname}: rewritten module drifts through the roundtrip\n{src}");
+                if mt != base {
+                    exercised += 1;
+                }
+            }
+        }
+    }
+    assert!(exercised > 0, "no recipe ever rewrote anything — generator too tame?");
+}
+
+#[test]
+fn transformed_modules_keep_indexed_paths_bit_identical() {
+    // The slot-indexed estimator/structure/executor paths must agree
+    // with their name-resolved references on rewritten modules too.
+    use tytra::estimator::accumulate::{estimate_resources, estimate_resources_reference};
+    use tytra::estimator::structure::{analyze, analyze_ix};
+    use tytra::estimator::CostDb;
+    use tytra::sim::exec::{run_pass, run_pass_interpreted};
+    use tytra::tir::ModuleIndex;
+    use tytra::transform::TransformRecipe;
+
+    let db = CostDb::default();
+    let dev = Device::stratix4();
+    let mut rng = Prng::new(0x7F0B);
+    for case in 0..CASES {
+        let src = random_kernel(&mut rng, case);
+        let k = frontend::parse_kernel(&src).unwrap();
+        for p in [DesignPoint::c2(), DesignPoint::c3(2), DesignPoint::c4()] {
+            for (recipe, rname) in TransformRecipe::named() {
+                let Ok(m) = frontend::lower(&k, p.with_transforms(recipe)) else { continue };
+                let ix = ModuleIndex::build(&m).unwrap();
+                assert_eq!(
+                    estimate_resources(&m, &db, &dev).unwrap(),
+                    estimate_resources_reference(&m, &db, &dev).unwrap(),
+                    "{rname} {p:?}: resources diverge\n{src}"
+                );
+                assert_eq!(
+                    analyze_ix(&ix).unwrap(),
+                    analyze(&m).unwrap(),
+                    "{rname} {p:?}: structure diverges\n{src}"
+                );
+                let d = sim::elaborate(&m).unwrap();
+                let w = Workload::random_for(&m, 2000 + case as u64);
+                let mut fast = w.mems.clone();
+                let mut slow = w.mems.clone();
+                run_pass(&m, &d, &mut fast).unwrap_or_else(|e| panic!("{rname}: {e}\n{src}"));
+                run_pass_interpreted(&m, &d, &mut slow).unwrap_or_else(|e| panic!("{rname}: {e}\n{src}"));
+                assert_eq!(fast, slow, "{rname} {p:?}: compiled != interpreted\n{src}");
+            }
+        }
+    }
+}
+
+#[test]
 fn workloads_are_deterministic_and_seed_sensitive() {
     let k = frontend::parse_kernel(frontend::lang::simple_kernel_source()).unwrap();
     let m = frontend::lower(&k, DesignPoint::c2()).unwrap();

@@ -1,0 +1,141 @@
+//! ISSUE 5 acceptance gates for the TIR-to-TIR transform subsystem:
+//!
+//! 1. every shipped recipe is conformance-gated as semantics-preserving
+//!    (`tytra conformance` runs the `transform/*` checks — pinned here
+//!    by running the harness and asserting the check volume);
+//! 2. at least one library kernel has a transformed point that
+//!    *strictly Pareto-dominates* every untransformed point on its
+//!    frontier (`blend6`, pipes-only sweep — the EXPERIMENTS
+//!    §Transforms table);
+//! 3. the rewrite axis is a first-class design-space axis: labels,
+//!    realised-point degeneration and the DSE cache all agree.
+
+use tytra::conformance::{self, Options};
+use tytra::device::Device;
+use tytra::dse::{self, SweepLimits};
+use tytra::frontend::{self, DesignPoint};
+use tytra::transform::{self, TransformRecipe};
+
+#[test]
+fn transformed_point_strictly_dominates_the_untransformed_frontier() {
+    // blend6 sits on the IO wall at every streaming point: the
+    // pipes-only untransformed frontier collapses onto the cheapest
+    // clipped point, and a transformed twin (same clipped EWGT,
+    // strictly fewer resources after folding the constant tail)
+    // strictly dominates every untransformed frontier point.
+    let sc = tytra::kernels::find("blend6").expect("blend6 in the registry");
+    let k = sc.parse().unwrap();
+    let dev = Device::stratix4();
+    let pipes_only =
+        SweepLimits { include_seq: false, include_comb: false, ..SweepLimits::default() };
+
+    let base = dse::explore(&k, &dev, &pipes_only).unwrap();
+    assert!(!base.frontier.is_empty());
+    assert!(
+        base.candidates.iter().all(|c| c.walls.io_utilisation > 1.0),
+        "blend6 must sit on the IO wall at every pipe point"
+    );
+
+    let with_xf = SweepLimits { include_transforms: true, ..pipes_only };
+    let combined = dse::explore(&k, &dev, &with_xf).unwrap();
+    let transformed: Vec<_> =
+        combined.candidates.iter().filter(|c| !c.point.transforms.is_none()).collect();
+    assert!(!transformed.is_empty(), "recipes must realise on blend6");
+
+    let dominant = transformed.iter().find(|t| {
+        let te = t.evaluated();
+        base.frontier.iter().all(|u| te.dominates(u))
+    });
+    let labels: Vec<&str> = base.frontier.iter().map(|p| p.label.as_str()).collect();
+    assert!(
+        dominant.is_some(),
+        "no transformed point dominates the whole untransformed frontier {labels:?}"
+    );
+    let d = dominant.unwrap().evaluated();
+    // strictness: same clipped EWGT, strictly lower utilisation
+    for u in &base.frontier {
+        assert!(d.ewgt >= u.ewgt, "{d:?} vs {u:?}");
+        assert!(d.utilisation < u.utilisation, "{d:?} vs {u:?}");
+    }
+    // and the combined sweep selects a transformed point as best
+    let best = combined.best.unwrap();
+    assert!(best.label.contains('+'), "best must be a transformed point: {best:?}");
+}
+
+#[test]
+fn conformance_gates_every_recipe_at_every_point() {
+    // A reduced quick run: the transform checks (semantics, golden
+    // model, estimate coverage, balance depth) execute for all four
+    // named recipes at every kernel × point.
+    let mut o = Options::quick(Device::stratix4());
+    o.points = vec![DesignPoint::c2(), DesignPoint::c4()];
+    o.random_cases = 0;
+    o.check_hdl = false;
+    let r = conformance::run(&o).unwrap();
+    assert!(r.ok(), "{}", r.render());
+    // per point: ≥6 base checks, plus per recipe either the 3-check
+    // simulate/golden/estimate battery (realised) or the byte-identity
+    // gate (degenerate) — at least one check per recipe either way
+    let recipes = TransformRecipe::named().len() as u64;
+    assert!(
+        r.checks >= r.points * (6 + recipes),
+        "{} checks over {} points — transform checks missing?",
+        r.checks,
+        r.points
+    );
+}
+
+#[test]
+fn recipe_labels_and_realised_points_agree() {
+    let sc = tytra::kernels::find("blend6").unwrap();
+    let k = sc.parse().unwrap();
+    let lk = frontend::analyze_kernel(&k).unwrap();
+
+    // realised: simplify fires on blend6
+    let p = DesignPoint::c2().with_transforms(TransformRecipe::simplify());
+    let m = frontend::lower_point(&lk, p).unwrap();
+    assert_eq!(m.name, "blend6_pipex1_simplify");
+    assert_eq!(frontend::lower::realised_point(&m, p), p);
+
+    // degenerate: nothing rewrites on the already-minimal `scale` at
+    // the simplify recipe (single const-mul + add; no folds, no dups)
+    let sc2 = tytra::kernels::find("scale").unwrap();
+    let k2 = sc2.parse().unwrap();
+    let lk2 = frontend::analyze_kernel(&k2).unwrap();
+    let p2 = DesignPoint::c2().with_transforms(TransformRecipe::simplify());
+    let m2 = frontend::lower_point(&lk2, p2).unwrap();
+    let base2 = frontend::lower_point(&lk2, DesignPoint::c2()).unwrap();
+    assert_eq!(m2, base2, "degenerate recipe must reproduce the base module byte-for-byte");
+    assert_eq!(frontend::lower::realised_point(&m2, p2), DesignPoint::c2());
+
+    // …while shiftadd genuinely rewrites scale's dense constant
+    let p3 = DesignPoint::c2().with_transforms(TransformRecipe::shiftadd());
+    let m3 = frontend::lower_point(&lk2, p3).unwrap();
+    assert_eq!(m3.name, "scale_pipex1_shiftadd");
+    let e_base = tytra::estimator::estimate(&base2, &Device::stratix4()).unwrap();
+    let e_sr = tytra::estimator::estimate(&m3, &Device::stratix4()).unwrap();
+    assert!(e_base.resources.dsp > e_sr.resources.dsp, "the DSP→ALUT trade");
+    assert!(e_sr.resources.alut > e_base.resources.alut);
+}
+
+#[test]
+fn pipeline_reports_attribute_rewrites_to_passes() {
+    let sc = tytra::kernels::find("blend6").unwrap();
+    let k = sc.parse().unwrap();
+    let mut m = frontend::lower(&k, DesignPoint::c2()).unwrap();
+    let report = transform::apply_recipe(&mut m, TransformRecipe::full()).unwrap();
+    assert!(report.changed());
+    assert!(report.rewrites_of("fold-simplify") > 0, "{report:?}");
+    assert!(report.rewrites_of("balance") > 0, "{report:?}");
+    assert!(report.rewrites_of("chain-split") > 0, "{report:?}");
+    assert!(report.rounds >= 2, "fixpoint needs a confirming round: {report:?}");
+    // the rewritten module still validates and simulates like the base
+    tytra::tir::validate::validate(&m).unwrap();
+    let base = frontend::lower(&k, DesignPoint::c2()).unwrap();
+    let dev = Device::stratix4();
+    let w = tytra::sim::Workload::random_for(&base, 77);
+    let wt = tytra::sim::Workload::random_for(&m, 77);
+    let rb = tytra::sim::simulate(&base, &dev, &w).unwrap();
+    let rt = tytra::sim::simulate(&m, &dev, &wt).unwrap();
+    assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"]);
+}

@@ -39,7 +39,7 @@ cargo build --release --manifest-path "$MANIFEST"
 echo "== tests =="
 cargo test -q --manifest-path "$MANIFEST"
 
-echo "== conformance (smoke: C1-C4 incl. comb/par, call-chain + reduction points) =="
+echo "== conformance (smoke: C1-C4 incl. comb/par, call-chain, reduction + transform points) =="
 # --quick sweeps every library kernel through one point per paper
 # configuration class — C2 pipe, C1 pipe x2, C3 comb x2, C4 seq, C5
 # seq x2 — plus the pipe+chain mixed call-chain point and the pipe+tree
@@ -47,6 +47,10 @@ echo "== conformance (smoke: C1-C4 incl. comb/par, call-chain + reduction points
 # alpha-renaming and the acc-vs-tree reduction diffs stay gated on every
 # run (see conformance::Options::quick; a dedicated test pins this
 # coverage — the registry includes the dotn/vsum/matvec reductions).
+# Every base point additionally runs the transform/* checks: all four
+# named TIR-to-TIR rewrite recipes are simulated and diffed against the
+# untransformed module and the golden model (ISSUE 5 acceptance: every
+# shipped recipe is conformance-gated as semantics-preserving).
 cargo run --quiet --release --manifest-path "$MANIFEST" -- conformance --quick
 
 echo "== dse smoke over the enlarged variant axis (comb plane + chain) =="
@@ -58,5 +62,12 @@ cargo run --quiet --release --manifest-path "$MANIFEST" -- \
     dse builtin:dotn --jobs 2 --max-lanes 2 --max-dv 2 --reduce > /dev/null
 cargo run --quiet --release --manifest-path "$MANIFEST" -- \
     sweep builtin:dotn builtin:vsum builtin:matvec --jobs 2 --max-lanes 2 --max-dv 2 --reduce > /dev/null
+
+echo "== dse smoke over the transform axis (rewrite recipes + JSON export) =="
+cargo run --quiet --release --manifest-path "$MANIFEST" -- \
+    dse builtin:blend6 --jobs 2 --max-lanes 2 --max-dv 2 --transforms > /dev/null
+cargo run --quiet --release --manifest-path "$MANIFEST" -- \
+    sweep builtin:blend6 builtin:scale builtin:jacobi2d \
+    --jobs 2 --max-lanes 2 --max-dv 2 --transforms --json > /dev/null
 
 echo "ci: ALL OK"
