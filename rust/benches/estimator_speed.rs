@@ -5,8 +5,12 @@
 //! * single-estimate latency and estimates/sec, vs the synthesis-model
 //!   and cycle-accurate-simulation alternatives it avoids;
 //! * simulator throughput in simulated cycles/sec;
+//! * simulation-engine throughput (items/sec): the batched
+//!   compile-once-run-many bytecode engine vs the interpreted oracle;
 //! * parallel DSE sweep throughput (configurations/sec) vs worker count;
-//! * batched (kernel × device) grid throughput via `explore_batch`.
+//! * batched (kernel × device) grid throughput via `explore_batch`;
+//! * validated-sweep throughput (configs/sec) through the session's
+//!   `KernelCache` (`Session::validate_sweep`).
 //!
 //! This is also the §Perf harness used for the optimisation passes
 //! (EXPERIMENTS.md §Perf records before/after from this bench).
@@ -85,6 +89,34 @@ fn main() {
         r_syn.summary.mean / r_est1.summary.mean,
     );
 
+    println!("{}", section("simulation engines: interpreted oracle vs batched SoA bytecode"));
+    // ISSUE 6: compile-once-run-many. The batched engine lowers each
+    // module to dense bytecode once, then replays 64-item blocks
+    // op-major; the interpreted oracle re-walks the IR per item per op.
+    // Both run the full multi-pass schedule (SOR repeats 5 passes).
+    let ck_sor = sim::CompiledKernel::compile(&sor).unwrap();
+    let d_sor = sim::elaborate(&sor).unwrap();
+    let w_sor = Workload::random_for(&sor, 1);
+    let sor_items =
+        estimator::estimate_with_db(&sor, &dev, &db).unwrap().info.work_items * ck_sor.passes();
+    let (w, i) = scale(5, 100);
+    let r_sim_int = bench("interpreted oracle (SOR C2, all passes)", w, i, || {
+        let mut mems = w_sor.mems.clone();
+        tytra::sim::exec::run_all_passes_interpreted(&sor, &d_sor, &mut mems).unwrap();
+        black_box(mems)
+    });
+    let int_ips = r_sim_int.units_per_sec(sor_items);
+    println!("{}  ({:.2} M items/s)", r_sim_int.line(), int_ips / 1e6);
+    let r_sim_bat = bench("batched bytecode (SOR C2, all passes)", w, i, || {
+        let mut mems = w_sor.mems.clone();
+        ck_sor.run(&mut mems).unwrap();
+        black_box(mems)
+    });
+    let bat_ips = r_sim_bat.units_per_sec(sor_items);
+    println!("{}  ({:.2} M items/s)", r_sim_bat.line(), bat_ips / 1e6);
+    let sim_speedup = r_sim_int.summary.mean / r_sim_bat.summary.mean;
+    println!("  batched speedup vs interpreted: {sim_speedup:.1}×");
+
     println!("{}", section("parallel DSE sweep throughput (estimate-only jobs, cold cache)"));
     let src = frontend::lang::sor_kernel_source();
     let k = frontend::parse_kernel(src).unwrap();
@@ -131,31 +163,31 @@ fn main() {
     let batch_cps = grid_points as f64 / r_batch.summary.mean;
     println!("{}  ({:.0} configs/s)", r_batch.line(), batch_cps);
 
-    println!("{}", section("parallel validation sweep (estimate+synth+simulate per point)"));
+    println!("{}", section("parallel validation sweep (estimate + batched simulate per point)"));
     // The heavyweight flow a cautious user runs: every point fully
-    // validated against the actual substrate. Here the pool pays off.
-    let points: Vec<tytra::frontend::DesignPoint> = tytra::dse::enumerate(&limits);
-    let lk = frontend::analyze_kernel(&k).unwrap();
-    let modules: Vec<tytra::tir::Module> =
-        points.iter().filter_map(|&p| frontend::lower_point(&lk, p).ok()).collect();
+    // validated against the simulated substrate, now through
+    // `Session::validate_sweep` — the session's `KernelCache` compiles
+    // each realised module once, so after the warmup every iteration
+    // replays cached bytecode (the compile-once-run-many case the cache
+    // is for). Here the pool pays off too.
     let mut validated_rows: Vec<(usize, f64)> = Vec::new();
+    let mut kcache_stats = (0u64, 0u64);
     let (w, i) = scale(2, 10);
     for jobs in [1usize, 2, 4, 8] {
-        let pool = tytra::coordinator::Pool::new(jobs);
+        let session = Session::new(jobs);
+        let n_validated = session.validate_sweep(&k, &dev, &limits, 1).unwrap().len();
         let r = bench(&format!("validated sweep, {jobs} worker(s)"), w, i, || {
-            let results = pool.map(modules.clone(), |m| {
-                let e = estimator::estimate_with_db(m, &dev, &db).ok()?;
-                let s = synth::synthesize(m, &dev).ok()?;
-                let wl = Workload::random_for(m, 1);
-                let r = sim::simulate(m, &dev, &wl).ok()?;
-                Some((e.ewgt, s.fmax_mhz, r.cycles_per_pass))
-            });
-            black_box(results)
+            black_box(session.validate_sweep(&k, &dev, &limits, 1).unwrap())
         });
-        let vps = modules.len() as f64 / r.summary.mean;
+        let vps = r.units_per_sec(n_validated as u64);
         println!("{}  ({:.0} validated configs/s)", r.line(), vps);
         validated_rows.push((jobs, vps));
+        kcache_stats = session.kernel_cache_stats();
     }
+    println!(
+        "  kernel cache (8-worker session): {} hits / {} compiles",
+        kcache_stats.0, kcache_stats.1
+    );
 
     println!("{}", section("conformance harness (kernel library + random kernels, quick mode)"));
     // The trajectory JSON records the conformance pass counts alongside
@@ -244,6 +276,7 @@ fn main() {
             &conf,
             (rcells.len(), reduce_points, tree_points),
             (xcells.len(), xf_recipes, xf_points, xf_realised),
+            (int_ips, bat_ips, sim_speedup, kcache_stats),
         );
         if let Err(e) = std::fs::write(&path, json) {
             eprintln!("cannot write {}: {e}", path.to_string_lossy());
@@ -266,6 +299,7 @@ fn render_json(
     conf: &tytra::conformance::ConformanceReport,
     reduction: (usize, usize, usize),
     transforms: (usize, usize, usize, usize),
+    sim: (f64, f64, f64, (u64, u64)),
 ) -> String {
     let rows = |xs: &[(usize, f64)]| -> String {
         xs.iter()
@@ -275,6 +309,7 @@ fn render_json(
     };
     let (rkernels, rpoints, rtrees) = reduction;
     let (xkernels, xrecipes, xpoints, xrealised) = transforms;
+    let (int_ips, bat_ips, speedup, (khits, kcompiles)) = sim;
     format!(
         "{{\n  \"bench\": \"estimator_speed\",\n  \"mode\": \"{}\",\n  \
          \"single_estimate_us\": {{\"simple_c2\": {:.3}, \"sor_c2\": {:.3}}},\n  \
@@ -284,7 +319,10 @@ fn render_json(
          \"conformance\": {},\n  \
          \"reduction\": {{\"kernels\": {rkernels}, \"points\": {rpoints}, \"tree_points\": {rtrees}}},\n  \
          \"transforms\": {{\"kernels\": {xkernels}, \"recipes\": {xrecipes}, \"points\": {xpoints}, \
-         \"transformed_points\": {xrealised}}}\n}}\n",
+         \"transformed_points\": {xrealised}}},\n  \
+         \"sim\": {{\"items_per_sec_interpreted\": {int_ips:.1}, \
+         \"items_per_sec_batched\": {bat_ips:.1}, \"batched_speedup\": {speedup:.2}, \
+         \"kernel_cache\": {{\"hits\": {khits}, \"compiles\": {kcompiles}}}}}\n}}\n",
         if smoke { "smoke" } else { "full" },
         est_simple_s * 1e6,
         est_sor_s * 1e6,

@@ -26,6 +26,13 @@ impl BenchResult {
         }
     }
 
+    /// Mean processed units per second, for benches whose single
+    /// iteration handles `units` items (simulated work items, sweep
+    /// configurations, …).
+    pub fn units_per_sec(&self, units: u64) -> f64 {
+        self.per_sec() * units as f64
+    }
+
     /// One-line report.
     pub fn line(&self) -> String {
         format!(
@@ -78,6 +85,17 @@ mod tests {
         assert_eq!(r.iters, 10);
         assert!(r.summary.mean >= 0.0);
         assert!(r.line().contains("noop"));
+    }
+
+    #[test]
+    fn units_scale_the_rate() {
+        let r = BenchResult {
+            name: "x".into(),
+            summary: Summary::of(&[0.5, 0.5]),
+            iters: 2,
+        };
+        assert!((r.per_sec() - 2.0).abs() < 1e-12);
+        assert!((r.units_per_sec(100) - 200.0).abs() < 1e-9);
     }
 
     #[test]

@@ -3,13 +3,13 @@
 //!
 //! ```text
 //! tytra estimate  <file.tir>  [--device s4]
-//! tytra simulate  <file.tir>  [--device s4] [--seed N]
+//! tytra simulate  <file.tir>  [--device s4] [--seed N] [--engine batched|compiled|interpreted]
 //! tytra synth     <file.tir>  [--device s4]
 //! tytra compare   <file.tir>  [--device s4] [--seed N]   # E vs A, paper-table style
 //! tytra dse       <kernel.knl|builtin:NAME> [--device s4]
 //!                 [--max-lanes N] [--max-dv N] [--dense] [--jobs N] [--config f]
 //! tytra sweep     <kernel>... [--devices s4,c4]          # builtin:all = whole library
-//! tytra conformance [--quick] [--seed N] [--random N] [--json]
+//! tytra conformance [--quick] [--seed N] [--random N] [--json] [--engine E]
 //! tytra emit-hdl  <file.tir>  [--tb] [--seed N]
 //! tytra golden    [--artifacts DIR] [--seed N]
 //! tytra kernels                                          # list the kernel scenario library
@@ -37,8 +37,10 @@ pub struct Cli {
 }
 
 /// Flags that take a value.
-const VALUE_FLAGS: &[&str] =
-    &["device", "devices", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts", "random"];
+const VALUE_FLAGS: &[&str] = &[
+    "device", "devices", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts", "random",
+    "engine",
+];
 /// Boolean flags.
 const BOOL_FLAGS: &[&str] = &[
     "dense",
@@ -98,6 +100,13 @@ impl Cli {
     fn seed(&self) -> u64 {
         self.flag("seed").and_then(|s| s.parse().ok()).unwrap_or(42)
     }
+
+    fn engine(&self) -> Result<sim::Engine, String> {
+        match self.flag("engine") {
+            Some(s) => sim::Engine::parse(s),
+            None => Ok(sim::Engine::default()),
+        }
+    }
 }
 
 /// Run the CLI; returns the process exit code.
@@ -144,7 +153,8 @@ pub fn usage() -> String {
      \n\
      COMMANDS:\n\
        estimate <file.tir>            TyBEC estimates (resources, cycles, EWGT)\n\
-       simulate <file.tir>            cycle-accurate simulation ('actual' cycles)\n\
+       simulate <file.tir>            cycle-accurate simulation ('actual' cycles;\n\
+                                      --engine batched|compiled|interpreted)\n\
        synth    <file.tir>            synthesis model ('actual' resources + Fmax)\n\
        compare  <file.tir>            estimated vs actual, paper-table layout\n\
        dse      <kernel.knl|builtin:NAME>  explore the design space (see `tytra kernels`)\n\
@@ -161,7 +171,7 @@ pub fn usage() -> String {
      FLAGS: --device s4|s5|c4   --devices s4,c4   --seed N   --jobs N   --max-lanes N\n\
             --max-dv N   --dense   --pipes-only   --chain   --reduce   --transforms\n\
             --config tytra.toml   --artifacts DIR   --tb   --quick   --random N   --json\n\
-            --inject-mismatch"
+            --inject-mismatch   --engine batched|compiled|interpreted"
         .to_string()
 }
 
@@ -206,7 +216,7 @@ fn cmd_simulate(cli: &Cli) -> Result<String, String> {
     let m = load_tir(cli)?;
     let dev = cli.device()?;
     let w = Workload::random_for(&m, cli.seed());
-    let r = sim::simulate(&m, &dev, &w)?;
+    let r = sim::simulate_with(&m, &dev, &w, cli.engine()?)?;
     Ok(format!(
         "cycles/pass = {}\npasses = {}\ntotal cycles = {}\noutput memories: {}",
         r.cycles_per_pass,
@@ -509,6 +519,7 @@ fn cmd_conformance(cli: &Cli) -> Result<String, String> {
     if cli.has("inject-mismatch") {
         opts.inject_fault = true;
     }
+    opts.engine = cli.engine()?;
     let report = crate::conformance::run(&opts)?;
     if cli.has("json") {
         let json = report.render_json();
@@ -588,6 +599,19 @@ mod tests {
     fn simulate_builtin_fig9() {
         let out = dispatch(&args("simulate builtin:fig9 --seed 1")).unwrap();
         assert!(out.contains("cycles/pass = 258"), "{out}");
+    }
+
+    #[test]
+    fn simulate_engine_flag_round_trips() {
+        // the same (kernel, seed) gives byte-identical output whichever
+        // engine runs it — the CI smoke asserts the same equivalence
+        let base = dispatch(&args("simulate builtin:fig9 --seed 1")).unwrap();
+        for eng in ["batched", "compiled", "interpreted"] {
+            let out = dispatch(&args(&format!("simulate builtin:fig9 --seed 1 --engine {eng}"))).unwrap();
+            assert_eq!(out, base, "engine {eng} diverged");
+        }
+        let e = dispatch(&args("simulate builtin:fig9 --engine warp")).unwrap_err();
+        assert!(e.contains("batched|compiled|interpreted"), "{e}");
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //! | `estimator/indexed-vs-reference` | `estimate_resources` (slot index) | `estimate_resources_reference` |
 //! | `structure/indexed-vs-reference` | `analyze_ix` | `analyze` |
 //! | `simulator/compiled-vs-interpreted` | `run_pass` (compiled lanes) | `run_pass_interpreted` |
+//! | `sim/batched-vs-interpreted` | batched SoA bytecode (`sim::CompiledKernel`, all passes) | `run_all_passes_interpreted` |
+//! | `sim/batched-vs-golden` | batched engine output | `runtime::golden::run_kernel_model` |
 //! | `timing/closed-form-vs-oracle` | `lane_cycles_closed_form` | `lane_cycles_oracle` |
 //! | `timing/actual-covers-estimate` | simulated cycles | estimator lower bound |
 //! | `golden/simulator-vs-kernel-model` | full simulation | `runtime::golden::run_kernel_model` |
@@ -66,6 +68,9 @@ pub struct Options {
     /// Deliberately corrupt the first estimator comparison — proves the
     /// harness detects divergence end to end (`--inject-mismatch`).
     pub inject_fault: bool,
+    /// Simulation engine for the full-run checks (`--engine`). The
+    /// differential sim checks always run all engines regardless.
+    pub engine: sim::Engine,
 }
 
 impl Options {
@@ -90,6 +95,7 @@ impl Options {
             random_cases: 2,
             check_hdl: true,
             inject_fault: false,
+            engine: sim::Engine::Batched,
         }
     }
 
@@ -382,6 +388,24 @@ impl Harness<'_> {
             first_mem_diff(&compiled, &interpreted)
         });
 
+        // --- batched engine: SoA bytecode vs the interpreted oracle -----------
+        // Full multi-pass runs (ping-pong copies included), so reduce
+        // drain and repeated-pass state carry through both engines.
+        let ck = sim::CompiledKernel::compile(&m)?;
+        let mut batched = w.mems.clone();
+        ck.run(&mut batched)?;
+        let mut oracle = w.mems.clone();
+        exec::run_all_passes_interpreted(&m, &d, &mut oracle)?;
+        self.check(name, &pl, "sim/batched-vs-interpreted", batched == oracle, || {
+            first_mem_diff(&batched, &oracle)
+        });
+
+        let out_key = format!("mem_{}", k.outputs[0].name);
+        let gb = golden::check_kernel_model(k, &w.mems, &batched[out_key.as_str()])?;
+        self.check(name, &pl, "sim/batched-vs-golden", gb.ok(), || {
+            format!("{} of {} elements diverge, first {:?}", gb.mismatches, gb.n, gb.first)
+        });
+
         // --- timing: closed form vs state-machine oracle ----------------------
         for (li, lane) in d.lanes.iter().enumerate() {
             let (items, fill, seq_work, drain) = engine::lane_timing_inputs(&d, li, dev.seq_cpi);
@@ -393,7 +417,7 @@ impl Harness<'_> {
         }
 
         // --- full run: estimate bound + golden kernel model -------------------
-        let r = sim::simulate(&m, &dev, &w)?;
+        let r = sim::simulate_with(&m, &dev, &w, self.opts.engine)?;
         let est = estimator::estimate_ix(&ix, &dev, self.db)?;
         self.check(
             name,
@@ -403,7 +427,6 @@ impl Harness<'_> {
             || format!("actual {} < estimate {}", r.cycles_per_pass, est.cycles_per_pass),
         );
 
-        let out_key = format!("mem_{}", k.outputs[0].name);
         let gr = golden::check_kernel_model(k, &w.mems, &r.mems[out_key.as_str()])?;
         self.check(name, &pl, "golden/simulator-vs-kernel-model", gr.ok(), || {
             format!("{} of {} elements diverge, first {:?}", gr.mismatches, gr.n, gr.first)
@@ -417,7 +440,7 @@ impl Harness<'_> {
         if m.has_reduce() && p.reduce == crate::tir::ReduceShape::Acc {
             let mt = frontend::lower_point(lk, p.tree())?;
             let wt = self.workload(&mt, spec)?;
-            let rt = sim::simulate(&mt, &dev, &wt)?;
+            let rt = sim::simulate_with(&mt, &dev, &wt, self.opts.engine)?;
             self.check(
                 name,
                 &pl,
@@ -496,7 +519,21 @@ impl Harness<'_> {
                 continue;
             }
             let wt = self.workload(&mt, spec)?;
-            let rt = sim::simulate(&mt, &dev, &wt)?;
+            let rt = sim::simulate_with(&mt, &dev, &wt, self.opts.engine)?;
+
+            // Batched-vs-interpreted differential on the *rewritten*
+            // module: the recipes reshape arity chains and rebalance
+            // trees, so the bytecode lowering must track every rewrite.
+            let ckt = sim::CompiledKernel::compile(&mt)?;
+            let dt = sim::elaborate(&mt)?;
+            let mut batched = wt.mems.clone();
+            ckt.run(&mut batched)?;
+            let mut oracle = wt.mems.clone();
+            exec::run_all_passes_interpreted(&mt, &dt, &mut oracle)?;
+            self.check(name, &pl, "sim/batched-vs-interpreted", batched == oracle, || {
+                first_mem_diff(&batched, &oracle)
+            });
+
             self.check(
                 name,
                 &pl,
@@ -540,7 +577,6 @@ impl Harness<'_> {
             if recipe == TransformRecipe::full() && self.opts.check_hdl {
                 // The deepest-rewriting recipe also runs the full HDL
                 // structural scans (stage callees, shift-add networks).
-                let dt = sim::elaborate(&mt)?;
                 self.conform_hdl(name, &pl, &mt, &dt)?;
             }
         }
@@ -566,7 +602,7 @@ impl Harness<'_> {
         let out_key = format!("mem_{}", k.outputs[0].name);
 
         let wh = self.workload(&hm, spec)?;
-        let rh = sim::simulate(&hm, &dev, &wh)?;
+        let rh = sim::simulate_with(&hm, &dev, &wh, self.opts.engine)?;
         let gr = golden::check_kernel_model(k, &wh.mems, &rh.mems[out_key.as_str()])?;
         self.check(name, "hand-tir", "golden/hand-tir-vs-kernel-model", gr.ok(), || {
             format!("{} of {} elements diverge, first {:?}", gr.mismatches, gr.n, gr.first)
@@ -579,7 +615,7 @@ impl Harness<'_> {
              (memory naming convention broken)"
                 .into()
         });
-        let rl = sim::simulate(&mc2, &dev, &wl)?;
+        let rl = sim::simulate_with(&mc2, &dev, &wl, self.opts.engine)?;
         self.check(
             name,
             "hand-tir",
@@ -602,7 +638,7 @@ impl Harness<'_> {
         self.check(name, "hand-tir", "transform/manage-ir-untouched", wht.mems == wh.mems, || {
             "transform passes must not touch Manage-IR (memories drifted)".into()
         });
-        let rht = sim::simulate(&hm_t, &dev, &wht)?;
+        let rht = sim::simulate_with(&hm_t, &dev, &wht, self.opts.engine)?;
         self.check(
             name,
             "hand-tir",
@@ -923,6 +959,22 @@ mod tests {
         assert!(text.contains("ALL OK"), "{text}");
         let json = r.render_json();
         assert!(json.contains("\"mismatches\": 0"), "{json}");
+    }
+
+    #[test]
+    fn engines_agree_under_the_harness() {
+        // The full-run checks pass under every engine: whichever engine
+        // drives `sim/actual-covers-estimate` and the golden diff, the
+        // results are bit-identical and the sweep stays clean.
+        for eng in [sim::Engine::Batched, sim::Engine::Compiled, sim::Engine::Interpreted] {
+            let mut o = quick_opts();
+            o.points = vec![DesignPoint::c2()];
+            o.random_cases = 0;
+            o.check_hdl = false;
+            o.engine = eng;
+            let r = run(&o).unwrap();
+            assert!(r.ok(), "engine {}: {}", eng.name(), r.render());
+        }
     }
 
     #[test]

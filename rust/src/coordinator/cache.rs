@@ -1,12 +1,17 @@
-//! Estimate cache: DSE sweeps re-evaluate the same (kernel, point,
+//! Session caches: DSE sweeps re-evaluate the same (kernel, point,
 //! device) triples across iterations of an exploration session; the
-//! cache memoises TyBEC results behind a mutex (estimates are small and
-//! pure).
+//! [`EstimateCache`] memoises TyBEC results behind a mutex (estimates
+//! are small and pure), and the [`KernelCache`] memoises batched
+//! simulation bytecode ([`sim::CompiledKernel`]) per realised module so
+//! validated sweeps compile each rewritten module once and replay it
+//! across every point, device, and workload.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::estimator::Estimate;
+use crate::sim::CompiledKernel;
+use crate::tir::Module;
 
 /// Cache key: the full identifying material. Since the cached estimate
 /// is now *returned* on hit (not just counted), the key must be
@@ -51,6 +56,66 @@ impl EstimateCache {
         let v = f()?;
         self.map.lock().expect("cache poisoned").insert(k, v.clone());
         Ok(v)
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(std::sync::atomic::Ordering::Relaxed),
+            self.misses.load(std::sync::atomic::Ordering::Relaxed),
+        )
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("cache poisoned").len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Compiled-kernel cache for the batched simulation engine. Distinct
+/// design points of one sweep realise distinct modules, but repeated
+/// sweeps, degenerate points (a chained point collapsing to the
+/// unchained module), and the many (workload × device) runs of
+/// conformance all replay the same module — and the compiled bytecode
+/// depends on nothing but the module. Keyed by the pretty-printed
+/// module text: collision-proof for the same reason [`Key`] stores full
+/// material (the printer is the parser's inverse, pinned by the
+/// parse→pretty→parse fixed-point tests), and shared via `Arc` so a hit
+/// costs one refcount, not a bytecode clone.
+#[derive(Debug, Default)]
+pub struct KernelCache {
+    map: Mutex<HashMap<String, Arc<CompiledKernel>>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl KernelCache {
+    /// Empty cache.
+    pub fn new() -> KernelCache {
+        KernelCache::default()
+    }
+
+    /// Look up or compile. Returns the shared kernel and whether it was
+    /// a cache hit (callers feed that into `coordinator::Metrics`).
+    /// Compile errors are not cached, mirroring
+    /// [`EstimateCache::get_or_insert_with`]; the lock is released
+    /// during compilation, so concurrent misses may compile twice and
+    /// the last insert wins — both products are identical.
+    pub fn get_or_compile(&self, m: &Module) -> Result<(Arc<CompiledKernel>, bool), String> {
+        let key = crate::tir::pretty::print(m);
+        if let Some(hit) = self.map.lock().expect("cache poisoned").get(&key).cloned() {
+            self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return Ok((hit, true));
+        }
+        self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let ck = Arc::new(CompiledKernel::compile(m)?);
+        self.map.lock().expect("cache poisoned").insert(key, Arc::clone(&ck));
+        Ok((ck, false))
     }
 
     /// (hits, misses) so far.
@@ -120,5 +185,33 @@ mod tests {
         assert_ne!(key("a", "b", "c"), key("a", "b", "d"));
         assert_ne!(key("a", "b", "c"), key("x", "b", "c"));
         assert_eq!(key("a", "b", "c"), key("a", "b", "c"));
+    }
+
+    #[test]
+    fn kernel_cache_shares_one_compile_per_module() {
+        let c = KernelCache::new();
+        let m = crate::tir::parse_and_validate(&examples::fig7_pipe()).unwrap();
+        let (k1, hit1) = c.get_or_compile(&m).unwrap();
+        let (k2, hit2) = c.get_or_compile(&m).unwrap();
+        assert!(!hit1, "first lookup compiles");
+        assert!(hit2, "second lookup hits");
+        assert!(Arc::ptr_eq(&k1, &k2), "hit returns the shared kernel");
+        assert_eq!(c.stats(), (1, 1));
+        assert_eq!(c.len(), 1);
+        // a different module is a different entry
+        let m2 = crate::tir::parse_and_validate(&examples::fig9_multi_pipe(4)).unwrap();
+        let (_, hit3) = c.get_or_compile(&m2).unwrap();
+        assert!(!hit3);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn kernel_cache_serves_runnable_bytecode() {
+        let c = KernelCache::new();
+        let m = crate::tir::parse_and_validate(&examples::fig7_pipe()).unwrap();
+        let w = crate::sim::Workload::random_for(&m, 42);
+        let (ck, _) = c.get_or_compile(&m).unwrap();
+        let r = crate::sim::simulate_compiled(&ck, &Device::stratix4(), &w).unwrap();
+        assert_eq!(r, crate::sim::simulate(&m, &Device::stratix4(), &w).unwrap());
     }
 }

@@ -12,19 +12,23 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::cache::{key, EstimateCache};
+use super::cache::{key, EstimateCache, KernelCache};
 use super::metrics::Metrics;
 use super::pool::Pool;
 use crate::device::Device;
 use crate::dse::{self, Exploration, SweepLimits};
-use crate::estimator::{self, CostDb};
+use crate::estimator::{self, CostDb, Estimate};
 use crate::frontend::{self, DesignPoint, KernelDef, LoweredKernel};
+use crate::sim;
+use crate::tir::Module;
 
-/// A parallel exploration session: pool + shared cache + metrics + the
-/// process-wide cost database.
+/// A parallel exploration session: pool + shared caches (estimates and
+/// compiled simulation kernels) + metrics + the process-wide cost
+/// database.
 pub struct Session {
     pool: Pool,
     cache: Arc<EstimateCache>,
+    kernels: Arc<KernelCache>,
     metrics: Arc<Metrics>,
     db: &'static CostDb,
 }
@@ -47,6 +51,25 @@ pub struct BatchResult {
     pub exploration: Exploration,
 }
 
+/// One fully validated design point: the estimator's prediction *and*
+/// the simulator's measured actuals for the same realised module — the
+/// estimate-vs-actual pairing the paper's Tables 1/2 report per
+/// configuration.
+#[derive(Debug, Clone)]
+pub struct ValidatedPoint {
+    /// The (realised) design point.
+    pub point: DesignPoint,
+    /// TyBEC estimate for the point.
+    pub estimate: Estimate,
+    /// Simulated cycles for one kernel pass (`Cycles/Kernel (A)`).
+    pub cycles_per_pass: u64,
+    /// Simulated total cycles across all passes.
+    pub total_cycles: u64,
+    /// Final memory state of the batched simulation (outputs live in
+    /// the destination memories).
+    pub mems: sim::MemState,
+}
+
 impl Session {
     /// New session with `jobs` workers.
     pub fn new(jobs: usize) -> Session {
@@ -57,6 +80,7 @@ impl Session {
         Session {
             pool,
             cache: Arc::new(EstimateCache::new()),
+            kernels: Arc::new(KernelCache::new()),
             metrics: Arc::new(Metrics::new()),
             db: estimator::shared_cost_db(),
         }
@@ -70,6 +94,25 @@ impl Session {
     /// Cache statistics (hits, misses).
     pub fn cache_stats(&self) -> (u64, u64) {
         self.cache.stats()
+    }
+
+    /// Compiled-kernel cache statistics (hits, misses).
+    pub fn kernel_cache_stats(&self) -> (u64, u64) {
+        self.kernels.stats()
+    }
+
+    /// The batched simulation bytecode for a module, through the
+    /// session cache: one compile per distinct module text for the
+    /// session's lifetime, with hits/misses surfaced in
+    /// [`Metrics::sim_cache_hits`]/[`Metrics::sim_compiles`].
+    pub fn compiled_kernel(&self, m: &Module) -> Result<Arc<sim::CompiledKernel>, String> {
+        let (ck, hit) = self.kernels.get_or_compile(m)?;
+        if hit {
+            self.metrics.sim_cache_hits.inc();
+        } else {
+            self.metrics.sim_compiles.inc();
+        }
+        Ok(ck)
     }
 
     /// Explore a kernel across the design space in parallel.
@@ -145,6 +188,52 @@ impl Session {
             .get_or_insert_with(ck, || estimator::estimate_with_db(&module, dev, self.db))?;
         let walls = dse::walls::check(&module, &estimate, dev);
         Ok(dse::Candidate { point, module, estimate, walls })
+    }
+
+    /// Validated sweep: every design point is lowered, estimated *and*
+    /// simulated against a seeded workload — the heavyweight flow the
+    /// estimator exists to avoid, run here to pin it down. This is the
+    /// path the `KernelCache` pays for itself on: each realised module
+    /// compiles once per session, so repeated sweeps (and degenerate
+    /// points realising an already-seen module) replay cached bytecode
+    /// through `sim::simulate_compiled` instead of re-lowering.
+    pub fn validate_sweep(
+        &self,
+        k: &KernelDef,
+        dev: &Device,
+        limits: &SweepLimits,
+        seed: u64,
+    ) -> Result<Vec<ValidatedPoint>, String> {
+        let t0 = Instant::now();
+        let lk = frontend::analyze_kernel(k)?;
+        let key_src = format!("kerneldef:{k:?}");
+        let points = dse::enumerate(limits);
+        let results: Vec<Result<ValidatedPoint, String>> = self.pool.map(points, |&point| {
+            self.metrics.jobs.inc();
+            let module = frontend::lower_point(&lk, point)?;
+            let point = frontend::lower::realised_point(&module, point);
+            let ck = key(&key_src, &point.label(), &dev.name);
+            let estimate = self
+                .cache
+                .get_or_insert_with(ck, || estimator::estimate_with_db(&module, dev, self.db))?;
+            let compiled = self.compiled_kernel(&module)?;
+            let w = sim::Workload::random_for(&module, seed);
+            let r = sim::simulate_compiled(&compiled, dev, &w)?;
+            Ok(ValidatedPoint {
+                point,
+                estimate,
+                cycles_per_pass: r.cycles_per_pass,
+                total_cycles: r.total_cycles,
+                mems: r.mems,
+            })
+        });
+        let mut out = Vec::with_capacity(results.len());
+        for r in results {
+            out.push(r?);
+        }
+        self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
+        self.metrics.sweeps.inc();
+        Ok(out)
     }
 
     /// Batched exploration over the whole kernel scenario library
@@ -321,6 +410,55 @@ mod tests {
                 "{}: no deployable configuration on the big device",
                 cell.kernel
             );
+        }
+    }
+
+    #[test]
+    fn validated_sweep_hits_the_kernel_cache_on_repeat() {
+        let k = parse_kernel(simple_kernel_source()).unwrap();
+        let dev = Device::stratix4();
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
+        let session = Session::new(4);
+        let v1 = session.validate_sweep(&k, &dev, &limits, 7).unwrap();
+        assert_eq!(v1.len(), 6, "2 pipe + 2 comb + 2 seq points");
+        let (h0, m0) = session.kernel_cache_stats();
+        assert_eq!(h0, 0, "first sweep compiles everything");
+        assert_eq!(m0 as usize, v1.len());
+        let v2 = session.validate_sweep(&k, &dev, &limits, 7).unwrap();
+        let (h1, m1) = session.kernel_cache_stats();
+        assert_eq!(h1 as usize, v1.len(), "repeat sweep is all cache hits");
+        assert_eq!(m1, m0, "no new compiles on replay");
+        // …observable through the session metrics too
+        assert!(session.metrics().sim_cache_hits.get() >= 1);
+        assert_eq!(session.metrics().sim_compiles.get(), m0);
+        assert!(session.metrics().summary().contains(&format!("sim_cache_hits={h1}")));
+        // replay is bit-identical
+        for (a, b) in v1.iter().zip(&v2) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(a.cycles_per_pass, b.cycles_per_pass);
+            assert_eq!(a.mems, b.mems);
+        }
+    }
+
+    #[test]
+    fn validated_sweep_matches_direct_simulation() {
+        // The cached-bytecode path must agree with a from-scratch
+        // lower + simulate per point, values and cycles alike.
+        let k = parse_kernel(sor_kernel_source()).unwrap();
+        let dev = Device::stratix4();
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
+        let session = Session::new(2);
+        let validated = session.validate_sweep(&k, &dev, &limits, 11).unwrap();
+        let lk = frontend::analyze_kernel(&k).unwrap();
+        for v in &validated {
+            let module = frontend::lower_point(&lk, v.point).unwrap();
+            let w = sim::Workload::random_for(&module, 11);
+            let r = sim::simulate(&module, &dev, &w).unwrap();
+            assert_eq!(v.cycles_per_pass, r.cycles_per_pass, "{}", v.point.label());
+            assert_eq!(v.total_cycles, r.total_cycles, "{}", v.point.label());
+            assert_eq!(v.mems, r.mems, "{}", v.point.label());
+            // estimate stays a lower bound on the simulated pass
+            assert!(v.cycles_per_pass >= v.estimate.cycles_per_pass, "{}", v.point.label());
         }
     }
 

@@ -31,6 +31,10 @@ pub struct Metrics {
     pub sweeps: Counter,
     /// Total sweep wall time, microseconds.
     pub sweep_time: Counter,
+    /// Batched simulation kernels compiled (`KernelCache` misses).
+    pub sim_compiles: Counter,
+    /// Compiled-kernel cache hits (a hit skips the whole compile).
+    pub sim_cache_hits: Counter,
 }
 
 impl Metrics {
@@ -43,10 +47,12 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let sweeps = self.sweeps.get().max(1);
         format!(
-            "jobs={} sweeps={} avg_sweep={:.1}ms",
+            "jobs={} sweeps={} avg_sweep={:.1}ms sim_compiles={} sim_cache_hits={}",
             self.jobs.get(),
             self.sweeps.get(),
-            self.sweep_time.get() as f64 / sweeps as f64 / 1000.0
+            self.sweep_time.get() as f64 / sweeps as f64 / 1000.0,
+            self.sim_compiles.get(),
+            self.sim_cache_hits.get()
         )
     }
 }
@@ -63,6 +69,9 @@ mod tests {
         m.sweep_time.add(1500);
         assert_eq!(m.jobs.get(), 2);
         assert!(m.summary().contains("jobs=2"));
+        m.sim_compiles.inc();
+        m.sim_cache_hits.add(3);
+        assert!(m.summary().contains("sim_compiles=1 sim_cache_hits=3"));
     }
 
     #[test]

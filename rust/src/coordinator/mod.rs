@@ -1,19 +1,22 @@
 //! L3 coordination: the parallel design-space-exploration driver.
 //!
 //! [`pool`] is a scoped `std::thread` worker pool; [`jobs::Session`]
-//! fans point-evaluation jobs across it with a shared [`cache`] and
-//! [`metrics`]. The CLI (`crate::cli`) builds a `Session` per
-//! invocation, and `dse::explore` delegates here with a single worker —
-//! the Session **is** the one exploration code path. Results are
-//! deterministic and equal to direct cache-free point evaluation
-//! (tested in `jobs`).
+//! fans point-evaluation jobs across it with shared [`cache`]s (TyBEC
+//! estimates and compiled simulation bytecode) and [`metrics`]. The CLI
+//! (`crate::cli`) builds a `Session` per invocation, and `dse::explore`
+//! delegates here with a single worker — the Session **is** the one
+//! exploration code path. Results are deterministic and equal to direct
+//! cache-free point evaluation (tested in `jobs`); validated sweeps
+//! ([`jobs::Session::validate_sweep`]) additionally simulate every
+//! point through the session's [`cache::KernelCache`], compiling each
+//! realised module once per session.
 
 pub mod cache;
 pub mod jobs;
 pub mod metrics;
 pub mod pool;
 
-pub use cache::EstimateCache;
-pub use jobs::{BatchResult, Session};
+pub use cache::{EstimateCache, KernelCache};
+pub use jobs::{BatchResult, Session, ValidatedPoint};
 pub use metrics::Metrics;
 pub use pool::Pool;

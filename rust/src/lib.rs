@@ -12,7 +12,10 @@
 //!   estimates straight from TIR, no synthesis involved.
 //! * [`sim`] — a cycle-accurate dataflow simulator of the elaborated
 //!   design: the stand-in for the paper's hand-crafted-HDL ModelSim runs
-//!   (the "actual" cycle counts in Tables 1 and 2).
+//!   (the "actual" cycle counts in Tables 1 and 2). Three engines: the
+//!   default batched compile-once-run-many bytecode engine
+//!   (`sim::CompiledKernel`, cached per session) plus the compiled-lane
+//!   and interpreted oracles it is conformance-diffed against.
 //! * [`synth`] — a netlist-level synthesis model: the stand-in for
 //!   Quartus (the "actual" resource counts and achieved Fmax).
 //! * [`hdl`] — the Verilog back-end (the paper's "straightforward next

@@ -1,0 +1,752 @@
+//! Batched compile-once-run-many execution engine — the simulator's hot
+//! path (ROADMAP direction 1).
+//!
+//! The exec engines in `exec.rs` re-compile every lane on each call and
+//! walk items one at a time through enum-dispatched [`exec::Src`]
+//! operands. This module lowers that register code one step further,
+//! into a dense SoA bytecode that a [`CompiledKernel`] owns and can
+//! replay against any workload:
+//!
+//! * **one `u8` opcode per op** ([`BOp`], `#[repr(u8)]`) in a flat
+//!   `Vec` — no `Option<Op>` matching and no operand-source enum on the
+//!   hot path;
+//! * **pre-resolved register-file slots** — immediates (TIR constants,
+//!   literal operands) are deduplicated into *splat slots* past the
+//!   datapath registers and broadcast once per lane invocation, so
+//!   every operand of every op is a plain slot index;
+//! * **block-batched execution** — items run [`BLOCK`] at a time with
+//!   op-major inner loops (valid because the lowered code is SSA: each
+//!   slot is written exactly once per item), amortising opcode decode
+//!   across the block; port gathers amortise their bounds checks with a
+//!   per-block min/max range test and fall back to an item-major
+//!   re-scan only to report an error in the oracle engines' exact
+//!   order and wording.
+//!
+//! Compilation happens **once per module**: `coordinator::KernelCache`
+//! memoises `CompiledKernel`s per pretty-printed module text, so
+//! validated sweeps and conformance runs pay the lowering cost once and
+//! replay the bytecode across every workload, device, and repeat pass —
+//! the same amortisation `analyze_kernel` gives the lowering frontend.
+//! The per-item engines remain as bit-exactness oracles; the
+//! `sim/batched-vs-*` conformance checks and the property suite hold
+//! this engine to them bit-for-bit, errors included.
+
+use std::collections::HashMap;
+
+use super::elaborate::{self, IndexSpace};
+use super::{engine, exec, value};
+use crate::device::Device;
+use crate::tir::{Kind, Module, ModuleIndex, Op, Ty};
+
+/// Work-items executed per batch. 64 keeps the active register file
+/// (slots × BLOCK × 8 bytes) inside L1 for every kernel in the registry
+/// while still amortising decode ~64× (EXPERIMENTS.md §SimPerf).
+pub const BLOCK: usize = 64;
+
+/// Batched opcode: [`exec::CompiledOp`]'s `Option<Op>` flattened into a
+/// single dense byte. `Copy` is the masked parameter-binding move
+/// (`op == None` in the per-item engine); the rest mirror [`Op`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+enum BOp {
+    Copy = 0,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Shl,
+    Lshr,
+    Ashr,
+    And,
+    Or,
+    Xor,
+    Min,
+    Max,
+    Mac,
+}
+
+impl BOp {
+    fn encode(op: Option<Op>) -> BOp {
+        match op {
+            None => BOp::Copy,
+            Some(Op::Add) => BOp::Add,
+            Some(Op::Sub) => BOp::Sub,
+            Some(Op::Mul) => BOp::Mul,
+            Some(Op::Div) => BOp::Div,
+            Some(Op::Shl) => BOp::Shl,
+            Some(Op::Lshr) => BOp::Lshr,
+            Some(Op::Ashr) => BOp::Ashr,
+            Some(Op::And) => BOp::And,
+            Some(Op::Or) => BOp::Or,
+            Some(Op::Xor) => BOp::Xor,
+            Some(Op::Min) => BOp::Min,
+            Some(Op::Max) => BOp::Max,
+            Some(Op::Mac) => BOp::Mac,
+        }
+    }
+}
+
+/// A port gather lowered to slot form: destination slot, source memory
+/// slot, stream offset, port mask, periodic wrap.
+#[derive(Debug, Clone)]
+struct BatchRead {
+    dst: u32,
+    mem: u32,
+    offset: i64,
+    mask: u64,
+    wrap: bool,
+}
+
+/// An output binding lowered to slot form.
+#[derive(Debug, Clone)]
+struct BatchWrite {
+    src: u32,
+    mem: u32,
+    mask: u64,
+}
+
+/// Marks an absent third operand in the `c` column.
+const NO_SLOT: u32 = u32::MAX;
+
+/// One lane's bytecode in struct-of-arrays layout: column `j` across
+/// `code`/`ty`/`a`/`b`/`c`/`dst` is one datapath op. Register-file slot
+/// `s` occupies `regs[s * BLOCK ..][..BLOCK]` at run time.
+#[derive(Debug, Clone)]
+struct LaneCode {
+    reads: Vec<BatchRead>,
+    code: Vec<BOp>,
+    ty: Vec<Ty>,
+    a: Vec<u32>,
+    b: Vec<u32>,
+    c: Vec<u32>,
+    dst: Vec<u32>,
+    writes: Vec<BatchWrite>,
+    /// Total slots: datapath registers first, immediate splats after.
+    n_slots: usize,
+    /// Deduplicated immediates as (splat slot, value). Splat slots are
+    /// never written by reads or ops, so one broadcast per lane
+    /// invocation serves every block.
+    imms: Vec<(u32, u64)>,
+    /// Slot holding the per-item reduce value, when the lane reduces.
+    reduce_slot: Option<u32>,
+    /// Work-item range `[start, end)` this lane covers.
+    start: u64,
+    end: u64,
+}
+
+/// The reduction, with the init value pre-wrapped to raw accumulator
+/// bits (the per-item engines wrap it on every pass).
+#[derive(Debug, Clone)]
+struct ReduceCode {
+    op: Op,
+    ty: Ty,
+    init: u64,
+    seg: u64,
+    out_base: i64,
+}
+
+/// Per-lane timing inputs captured at compile time; only the device's
+/// `seq_cpi` is left to bind at [`CompiledKernel::time_group`] time.
+#[derive(Debug, Clone)]
+struct LaneTiming {
+    kind: Kind,
+    items: u64,
+    fill: u64,
+    /// `seq_work` at CPI 1 ([`engine::lane_timing_inputs`] with
+    /// `seq_cpi = 1`): multiply by the device CPI to recover it.
+    seq_unit: u64,
+    drain: u64,
+}
+
+/// A module compiled once into replayable SoA bytecode: functional
+/// passes ([`CompiledKernel::run`]) and timing
+/// ([`CompiledKernel::time_group`]) with no per-run elaboration, name
+/// resolution, or lane compilation. Bit-identical to both per-item
+/// engines, error messages included.
+#[derive(Debug, Clone)]
+pub struct CompiledKernel {
+    /// Memory names in dense slot order (touched at entry/exit only).
+    mem_names: Vec<String>,
+    /// (dest-slot, source-slot) ping-pong pairs between chained passes.
+    pingpong: Vec<(usize, usize)>,
+    /// Chained passes (`repeat`, at least 1).
+    passes: u64,
+    index: IndexSpace,
+    lanes: Vec<LaneCode>,
+    reduce: Option<ReduceCode>,
+    timing: Vec<LaneTiming>,
+    /// Register-file size: max lane slots × [`BLOCK`].
+    regs_len: usize,
+}
+
+impl CompiledKernel {
+    /// Compile a module into batched bytecode.
+    pub fn compile(m: &Module) -> Result<CompiledKernel, String> {
+        let ix = ModuleIndex::build(m)?;
+        let d = elaborate::elaborate_with(&ix)?;
+        let nlanes = d.lanes.len();
+        let mut lanes = Vec::with_capacity(nlanes);
+        let mut timing = Vec::with_capacity(nlanes);
+        for (k, lane) in d.lanes.iter().enumerate() {
+            let cl = exec::compile_lane(&ix, lane)?;
+            let (start, end) = d.lane_range(k, nlanes);
+            lanes.push(lower_lane(&cl, start, end));
+            let (items, fill, seq_unit, drain) = engine::lane_timing_inputs(&d, k, 1);
+            timing.push(LaneTiming { kind: lane.kind, items, fill, seq_unit, drain });
+        }
+        let regs_len = lanes.iter().map(|l| l.n_slots).max().unwrap_or(0) * BLOCK;
+        Ok(CompiledKernel {
+            mem_names: ix.mems.iter().map(|mem| mem.name.clone()).collect(),
+            pingpong: exec::pingpong_slots(&ix),
+            passes: d.info.repeat.max(1),
+            index: d.index.clone(),
+            lanes,
+            reduce: d.reduce.as_ref().map(|rd| ReduceCode {
+                op: rd.op,
+                ty: rd.ty,
+                init: value::wrap(rd.ty, rd.init as i128),
+                seg: rd.seg,
+                out_base: rd.out_base,
+            }),
+            timing,
+            regs_len,
+        })
+    }
+
+    /// Number of chained passes this kernel runs.
+    pub fn passes(&self) -> u64 {
+        self.passes
+    }
+
+    /// Run all `repeat` passes over a memory state — the counterpart of
+    /// `exec::run_all_passes_with`, same entry/exit contract: every
+    /// module memory must be present (checked before anything moves),
+    /// buffers go dense for the whole run, and the state is restored
+    /// even when a pass errors.
+    pub fn run(&self, mems: &mut exec::MemState) -> Result<(), String> {
+        for name in &self.mem_names {
+            if !mems.contains_key(name) {
+                return Err(format!("memory `@{name}` not initialised"));
+            }
+        }
+        let mut bufs: Vec<Vec<u64>> =
+            self.mem_names.iter().map(|n| mems.remove(n).expect("checked present")).collect();
+        let mut regs = vec![0u64; self.regs_len];
+        let mut result = Ok(());
+        for pass in 0..self.passes {
+            if let Err(e) = self.run_pass(&mut regs, &mut bufs) {
+                result = Err(e);
+                break;
+            }
+            if pass + 1 < self.passes {
+                for &(dst, src) in &self.pingpong {
+                    let data = bufs[dst].clone();
+                    bufs[src] = data;
+                }
+            }
+        }
+        for (name, buf) in self.mem_names.iter().zip(bufs) {
+            mems.insert(name.clone(), buf);
+        }
+        result
+    }
+
+    /// Timing of the whole work-group on a device. Numerically identical
+    /// to `engine::time_group` on the elaborated design: the per-lane
+    /// inputs were captured through `engine::lane_timing_inputs` at
+    /// compile time, and assembly goes through the same
+    /// [`engine::compose_pass`]/[`engine::compose_group`].
+    pub fn time_group(&self, dev: &Device) -> engine::GroupTiming {
+        let per_lane = self
+            .timing
+            .iter()
+            .map(|t| {
+                engine::lane_cycles_closed_form(
+                    t.kind,
+                    t.items,
+                    t.fill,
+                    t.seq_unit * dev.seq_cpi,
+                    t.drain,
+                )
+            })
+            .collect();
+        engine::compose_group(engine::compose_pass(per_lane), self.passes)
+    }
+
+    /// One batched pass: every lane over its item range in [`BLOCK`]-item
+    /// batches, writes committed only after every lane evaluated cleanly
+    /// (the streaming semantics all three engines share).
+    fn run_pass(&self, regs: &mut [u64], bufs: &mut [Vec<u64>]) -> Result<(), String> {
+        let mut writes: Vec<(usize, u64, u64)> = Vec::new();
+        for (k, lane) in self.lanes.iter().enumerate() {
+            match (&self.reduce, lane.reduce_slot) {
+                (Some(rd), Some(slot)) => {
+                    self.run_lane_reduce(k, lane, rd, slot, regs, bufs, &mut writes)?
+                }
+                (None, None) => self.run_lane_map(k, lane, regs, bufs, &mut writes)?,
+                _ => {
+                    return Err(format!(
+                        "lane {k}: design and compiled lane disagree about the reduction"
+                    ))
+                }
+            }
+        }
+        for (mem, idx, v) in writes {
+            let buf = &mut bufs[mem];
+            if idx as usize >= buf.len() {
+                return Err(format!("write out of bounds: mem #{mem}[{idx}]"));
+            }
+            buf[idx as usize] = v;
+        }
+        Ok(())
+    }
+
+    /// Map lane: one write per item, item-major push order within each
+    /// block (matching the per-item engines' overwrite order exactly).
+    fn run_lane_map(
+        &self,
+        k: usize,
+        lane: &LaneCode,
+        regs: &mut [u64],
+        bufs: &[Vec<u64>],
+        writes: &mut Vec<(usize, u64, u64)>,
+    ) -> Result<(), String> {
+        splat_imms(lane, regs);
+        let mut lin = [0u64; BLOCK];
+        let mut item = lane.start;
+        while item < lane.end {
+            let bn = ((lane.end - item) as usize).min(BLOCK);
+            for (i, l) in lin[..bn].iter_mut().enumerate() {
+                *l = self.index.linear(item + i as u64);
+            }
+            gather(k, lane, item, &lin[..bn], regs, bufs)?;
+            execute(lane, bn, regs);
+            for (i, &l) in lin[..bn].iter().enumerate() {
+                for w in &lane.writes {
+                    writes.push((w.mem as usize, l, regs[w.src as usize * BLOCK + i] & w.mask));
+                }
+            }
+            item += bn as u64;
+        }
+        Ok(())
+    }
+
+    /// Reduce lane: the accumulator folds across items (and blocks) and
+    /// commits once per index segment, exactly like the per-item
+    /// engines' reduce arm.
+    #[allow(clippy::too_many_arguments)]
+    fn run_lane_reduce(
+        &self,
+        k: usize,
+        lane: &LaneCode,
+        rd: &ReduceCode,
+        slot: u32,
+        regs: &mut [u64],
+        bufs: &[Vec<u64>],
+        writes: &mut Vec<(usize, u64, u64)>,
+    ) -> Result<(), String> {
+        splat_imms(lane, regs);
+        let base = slot as usize * BLOCK;
+        let mut lin = [0u64; BLOCK];
+        let mut acc = rd.init;
+        let mut item = lane.start;
+        while item < lane.end {
+            let bn = ((lane.end - item) as usize).min(BLOCK);
+            for (i, l) in lin[..bn].iter_mut().enumerate() {
+                *l = self.index.linear(item + i as u64);
+            }
+            gather(k, lane, item, &lin[..bn], regs, bufs)?;
+            execute(lane, bn, regs);
+            for i in 0..bn {
+                let it = item + i as u64;
+                acc = value::eval(rd.op, rd.ty, acc, regs[base + i], None);
+                if (it + 1) % rd.seg == 0 {
+                    let out_idx = (rd.out_base + (it / rd.seg) as i64) as u64;
+                    for w in &lane.writes {
+                        writes.push((w.mem as usize, out_idx, acc & w.mask));
+                    }
+                    acc = rd.init;
+                }
+            }
+            item += bn as u64;
+        }
+        Ok(())
+    }
+}
+
+/// Lower a per-item [`exec::CompiledLane`] into SoA bytecode.
+fn lower_lane(cl: &exec::CompiledLane, start: u64, end: u64) -> LaneCode {
+    let n_ops = cl.ops.len();
+    let mut lc = LaneCode {
+        reads: cl
+            .reads
+            .iter()
+            .map(|r| BatchRead {
+                dst: r.dst as u32,
+                mem: r.mem as u32,
+                offset: r.offset,
+                mask: r.mask,
+                wrap: r.wrap,
+            })
+            .collect(),
+        code: Vec::with_capacity(n_ops),
+        ty: Vec::with_capacity(n_ops),
+        a: Vec::with_capacity(n_ops),
+        b: Vec::with_capacity(n_ops),
+        c: Vec::with_capacity(n_ops),
+        dst: Vec::with_capacity(n_ops),
+        writes: cl
+            .writes
+            .iter()
+            .map(|w| BatchWrite { src: w.src as u32, mem: w.mem as u32, mask: w.mask })
+            .collect(),
+        n_slots: cl.n_regs,
+        imms: Vec::new(),
+        reduce_slot: cl.reduce_reg.map(|r| r as u32),
+        start,
+        end,
+    };
+    let mut imm_slot: HashMap<u64, u32> = HashMap::new();
+    for op in &cl.ops {
+        let a = slot_of(op.a, &mut lc, &mut imm_slot);
+        lc.code.push(BOp::encode(op.op));
+        lc.ty.push(op.ty);
+        lc.a.push(a);
+        // A masked copy never reads `b` (the per-item engine carries a
+        // dummy `Imm(0)` there); reusing `a` avoids a dead splat slot.
+        lc.b.push(if op.op.is_some() { slot_of(op.b, &mut lc, &mut imm_slot) } else { a });
+        lc.c.push(match op.c {
+            Some(s) => slot_of(s, &mut lc, &mut imm_slot),
+            None => NO_SLOT,
+        });
+        lc.dst.push(op.dst as u32);
+    }
+    lc
+}
+
+/// Resolve an operand source to a register-file slot, allocating a
+/// deduplicated splat slot for immediates.
+fn slot_of(src: exec::Src, lc: &mut LaneCode, imm_slot: &mut HashMap<u64, u32>) -> u32 {
+    match src {
+        exec::Src::Reg(r) => r as u32,
+        exec::Src::Imm(v) => *imm_slot.entry(v).or_insert_with(|| {
+            let slot = lc.n_slots as u32;
+            lc.n_slots += 1;
+            lc.imms.push((slot, v));
+            slot
+        }),
+    }
+}
+
+/// Broadcast the lane's immediates across their splat slots. Once per
+/// lane invocation: ops and reads never write these slots.
+fn splat_imms(lane: &LaneCode, regs: &mut [u64]) {
+    for &(slot, v) in &lane.imms {
+        let base = slot as usize * BLOCK;
+        regs[base..base + BLOCK].fill(v);
+    }
+}
+
+/// Gather every port read for a block of items. The fast path validates
+/// a whole read with one min/max range test (`linear` is not monotone
+/// across a block — 2-D spaces stride by rows — so the extremes are
+/// computed, not assumed at the block ends); when any read of the block
+/// can fail, the slow path re-scans item-major over *all* reads to
+/// report the first failure in the per-item engines' order and wording.
+fn gather(
+    k: usize,
+    lane: &LaneCode,
+    item0: u64,
+    lin: &[u64],
+    regs: &mut [u64],
+    bufs: &[Vec<u64>],
+) -> Result<(), String> {
+    let lo = *lin.iter().min().expect("non-empty block") as i64;
+    let hi = *lin.iter().max().expect("non-empty block") as i64;
+    for r in &lane.reads {
+        let buf = &bufs[r.mem as usize];
+        let base = r.dst as usize * BLOCK;
+        if r.wrap && !buf.is_empty() {
+            let len = buf.len() as i64;
+            for (i, &l) in lin.iter().enumerate() {
+                let idx = (l as i64 + r.offset).rem_euclid(len);
+                regs[base + i] = buf[idx as usize] & r.mask;
+            }
+        } else if lo + r.offset >= 0 && hi + r.offset < buf.len() as i64 {
+            for (i, &l) in lin.iter().enumerate() {
+                regs[base + i] = buf[(l as i64 + r.offset) as usize] & r.mask;
+            }
+        } else {
+            return Err(first_read_failure(k, lane, item0, lin, bufs));
+        }
+    }
+    Ok(())
+}
+
+/// Item-major re-scan of a failing block: finds the first (item, read)
+/// that runs out of bounds and formats it exactly as the per-item
+/// engines do, so `--engine` A/B comparisons agree on errors too.
+fn first_read_failure(k: usize, lane: &LaneCode, item0: u64, lin: &[u64], bufs: &[Vec<u64>]) -> String {
+    for (i, &l) in lin.iter().enumerate() {
+        for r in &lane.reads {
+            let buf = &bufs[r.mem as usize];
+            let mut idx = l as i64 + r.offset;
+            if r.wrap && !buf.is_empty() {
+                idx = idx.rem_euclid(buf.len() as i64);
+            }
+            if idx < 0 || idx as usize >= buf.len() {
+                let item = item0 + i as u64;
+                return format!(
+                    "lane {k}, item {item}: port read out of bounds: index {idx} (mem #{} has {} elems)",
+                    r.mem,
+                    buf.len()
+                );
+            }
+        }
+    }
+    // A failed range check always has a witness item (the min or max of
+    // the block for that read), so this is unreachable; kept as a
+    // defensive message rather than a panic.
+    format!("lane {k}: block range check failed without a failing read")
+}
+
+/// Execute a lane's bytecode op-major over `bn` items. Valid because the
+/// code is SSA at slot level: every slot is written by exactly one read
+/// or op, so op-major and item-major orders compute identical values.
+fn execute(lane: &LaneCode, bn: usize, regs: &mut [u64]) {
+    for j in 0..lane.code.len() {
+        let ty = lane.ty[j];
+        let dst = lane.dst[j] as usize * BLOCK;
+        let a = lane.a[j] as usize * BLOCK;
+        let op = match lane.code[j] {
+            BOp::Copy => {
+                let mask = ty.mask();
+                for i in 0..bn {
+                    regs[dst + i] = regs[a + i] & mask;
+                }
+                continue;
+            }
+            BOp::Add => Op::Add,
+            BOp::Sub => Op::Sub,
+            BOp::Mul => Op::Mul,
+            BOp::Div => Op::Div,
+            BOp::Shl => Op::Shl,
+            BOp::Lshr => Op::Lshr,
+            BOp::Ashr => Op::Ashr,
+            BOp::And => Op::And,
+            BOp::Or => Op::Or,
+            BOp::Xor => Op::Xor,
+            BOp::Min => Op::Min,
+            BOp::Max => Op::Max,
+            BOp::Mac => Op::Mac,
+        };
+        let b = lane.b[j] as usize * BLOCK;
+        if lane.c[j] != NO_SLOT {
+            let c = lane.c[j] as usize * BLOCK;
+            for i in 0..bn {
+                regs[dst + i] =
+                    value::eval(op, ty, regs[a + i], regs[b + i], Some(regs[c + i]));
+            }
+        } else {
+            for i in 0..bn {
+                regs[dst + i] = value::eval(op, ty, regs[a + i], regs[b + i], None);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::elaborate::elaborate;
+    use crate::sim::exec::MemState;
+    use crate::tir::{examples, parse_and_validate};
+    use crate::util::Prng;
+
+    const MASK18: u64 = (1 << 18) - 1;
+
+    fn simple_mems(seed: u64) -> MemState {
+        let mut rng = Prng::new(seed);
+        let mut mems = MemState::new();
+        for name in ["mem_a", "mem_b", "mem_c"] {
+            mems.insert(name.into(), rng.vec_ui18(1000).into_iter().map(|v| v as u64).collect());
+        }
+        mems.insert("mem_y".into(), vec![0; 1000]);
+        mems
+    }
+
+    fn sor_mems(seed: u64) -> MemState {
+        let mut rng = Prng::new(seed);
+        let p: Vec<u64> = rng.vec_ui18(18 * 18).into_iter().map(|v| v as u64).collect();
+        let mut mems = MemState::new();
+        mems.insert("mem_q".into(), p.clone());
+        mems.insert("mem_p".into(), p);
+        mems
+    }
+
+    #[test]
+    fn batched_matches_both_oracles_on_all_listings() {
+        for (name, src) in [
+            ("fig5", examples::fig5_seq()),
+            ("fig7", examples::fig7_pipe()),
+            ("fig9", examples::fig9_multi_pipe(4)),
+            ("fig11", examples::fig11_vector_seq(4)),
+            ("fig15", examples::fig15_sor_pipe(18, 18, 1)),
+            ("fig15x5", examples::fig15_sor_pipe(18, 18, 5)),
+        ] {
+            let m = parse_and_validate(&src).unwrap();
+            let d = elaborate(&m).unwrap();
+            let ck = CompiledKernel::compile(&m).unwrap();
+            let mut batched =
+                if name.starts_with("fig15") { sor_mems(77) } else { simple_mems(77) };
+            let mut compiled = batched.clone();
+            let mut interp = batched.clone();
+            ck.run(&mut batched).unwrap();
+            exec::run_all_passes(&m, &d, &mut compiled).unwrap();
+            exec::run_all_passes_interpreted(&m, &d, &mut interp).unwrap();
+            assert_eq!(batched, compiled, "{name}: batched != compiled");
+            assert_eq!(batched, interp, "{name}: batched != interpreted");
+        }
+    }
+
+    #[test]
+    fn batched_reduce_accumulates_like_the_oracles() {
+        let src = r#"
+@mem_a = addrspace(3) <64 x ui18>
+@mem_y = addrspace(3) <1 x ui18>
+@s_a = addrspace(10), !"source", !"@mem_a"
+@s_y = addrspace(10), !"dest", !"@mem_y"
+@main.a = addrspace(12) ui18, !"istream", !"CONT", !0, !"s_a"
+@main.y = addrspace(12) ui18, !"ostream", !"CONT", !0, !"s_y"
+@ctr_n = counter(0, 63)
+define void @main () pipe {
+    ui24 %y = reduce add acc ui24 0, @main.a
+}
+"#;
+        let m = parse_and_validate(src).unwrap();
+        let d = elaborate(&m).unwrap();
+        let ck = CompiledKernel::compile(&m).unwrap();
+        let mut rng = Prng::new(5);
+        let a: Vec<u64> = rng.vec_ui18(64).into_iter().map(|v| v as u64).collect();
+        let mut mems = MemState::new();
+        mems.insert("mem_a".into(), a.clone());
+        mems.insert("mem_y".into(), vec![0]);
+        let mut interp = mems.clone();
+        ck.run(&mut mems).unwrap();
+        exec::run_pass_interpreted(&m, &d, &mut interp).unwrap();
+        assert_eq!(mems, interp);
+        assert_eq!(mems["mem_y"][0], a.iter().sum::<u64>() & MASK18);
+    }
+
+    #[test]
+    fn batched_rowwise_reduce_with_wrap_matches_matvec() {
+        // Segment (4) much smaller than BLOCK: several commits per batch;
+        // the WRAP port exercises the modulo gather path.
+        let src = r#"
+@mem_A = addrspace(3) <16 x ui18>
+@mem_x = addrspace(3) <4 x ui18>
+@mem_y = addrspace(3) <4 x ui18>
+@s_A = addrspace(10), !"source", !"@mem_A"
+@s_x = addrspace(10), !"source", !"@mem_x"
+@s_y = addrspace(10), !"dest", !"@mem_y"
+@main.a = addrspace(12) ui18, !"istream", !"CONT", !0, !"s_A"
+@main.x = addrspace(12) ui18, !"istream", !"CONT", !"WRAP", !0, !"s_x"
+@main.y = addrspace(12) ui18, !"ostream", !"CONT", !0, !"s_y"
+@ctr_j = counter(0, 3)
+@ctr_i = counter(0, 3) nest(@ctr_j)
+define void @main () pipe {
+    ui36 %1 = mul ui36 @main.a, @main.x
+    ui36 %y = reduce add acc ui36 0, %1
+}
+"#;
+        let m = parse_and_validate(src).unwrap();
+        let ck = CompiledKernel::compile(&m).unwrap();
+        let a: Vec<u64> = (1..=16).collect();
+        let x: Vec<u64> = vec![1, 2, 3, 4];
+        let mut mems = MemState::new();
+        mems.insert("mem_A".into(), a.clone());
+        mems.insert("mem_x".into(), x.clone());
+        mems.insert("mem_y".into(), vec![0; 4]);
+        ck.run(&mut mems).unwrap();
+        for i in 0..4 {
+            let want: u64 = (0..4).map(|j| a[i * 4 + j] * x[j]).sum();
+            assert_eq!(mems["mem_y"][i], want & MASK18, "row {i}");
+        }
+    }
+
+    #[test]
+    fn compile_once_run_many_is_deterministic() {
+        let m = parse_and_validate(&examples::fig9_multi_pipe(4)).unwrap();
+        let ck = CompiledKernel::compile(&m).unwrap();
+        let mut first = simple_mems(3);
+        ck.run(&mut first).unwrap();
+        for seed in [3u64, 9, 12] {
+            let mut mems = simple_mems(seed);
+            ck.run(&mut mems).unwrap();
+            if seed == 3 {
+                assert_eq!(mems, first, "replay diverged");
+            }
+            assert!(mems["mem_y"].iter().any(|&v| v != 0));
+        }
+    }
+
+    #[test]
+    fn timing_matches_the_engine_on_all_listings() {
+        for src in [
+            examples::fig5_seq(),
+            examples::fig7_pipe(),
+            examples::fig9_multi_pipe(4),
+            examples::fig11_vector_seq(4),
+            examples::fig15_sor_default(),
+        ] {
+            let m = parse_and_validate(&src).unwrap();
+            let d = elaborate(&m).unwrap();
+            let ck = CompiledKernel::compile(&m).unwrap();
+            let dev = Device::stratix4();
+            assert_eq!(ck.time_group(&dev), engine::time_group(&d, &dev));
+        }
+    }
+
+    #[test]
+    fn out_of_bounds_error_matches_the_compiled_engine_exactly() {
+        // Same failing kernel through both engines: identical message,
+        // including the failing lane/item and memory slot — the contract
+        // that makes `--engine` A/B debugging of errors meaningful.
+        let src = examples::fig15_sor_pipe(18, 18, 1).replace("counter(1, 16)", "counter(0, 17)");
+        let m = parse_and_validate(&src).unwrap();
+        let d = elaborate(&m).unwrap();
+        let ck = CompiledKernel::compile(&m).unwrap();
+        let mut mems = sor_mems(1);
+        let before = mems.clone();
+        let e_batched = ck.run(&mut mems).unwrap_err();
+        assert_eq!(mems, before, "error must leave the state restored");
+        let e_compiled = exec::run_pass(&m, &d, &mut mems).unwrap_err();
+        assert_eq!(e_batched, e_compiled);
+    }
+
+    #[test]
+    fn missing_memory_is_reported_before_anything_moves() {
+        let m = parse_and_validate(&examples::fig7_pipe()).unwrap();
+        let ck = CompiledKernel::compile(&m).unwrap();
+        let mut mems = simple_mems(1);
+        mems.remove("mem_b");
+        let e = ck.run(&mut mems).unwrap_err();
+        assert!(e.contains("`@mem_b` not initialised"), "{e}");
+        assert!(mems.contains_key("mem_a"), "state untouched on entry error");
+    }
+
+    #[test]
+    fn immediates_are_deduplicated_into_splat_slots() {
+        // fig7's leaf chain carries the literal scale constant; compile
+        // and check no immediate value appears twice in any lane.
+        let m = parse_and_validate(&examples::fig7_pipe()).unwrap();
+        let ck = CompiledKernel::compile(&m).unwrap();
+        for lane in &ck.lanes {
+            let mut seen = std::collections::HashSet::new();
+            for &(_, v) in &lane.imms {
+                assert!(seen.insert(v), "immediate {v} splatted twice");
+            }
+            assert!(lane.n_slots >= lane.imms.len());
+        }
+    }
+}

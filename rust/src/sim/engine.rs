@@ -171,6 +171,23 @@ pub fn lane_timing_inputs(d: &Design, lane_idx: usize, seq_cpi: u64) -> (u64, u6
     (items, fill, seq_work, drain)
 }
 
+/// Assemble per-lane busy cycles into a pass timing: the shared
+/// start/commit/done protocol wraps the slowest lane. Shared by
+/// [`time_pass`] and the batched engine's `CompiledKernel::time_group`,
+/// so both report identical cycle counts by construction.
+pub fn compose_pass(per_lane: Vec<u64>) -> PassTiming {
+    let slowest = per_lane.iter().copied().max().unwrap_or(0);
+    PassTiming { cycles: START_CYCLES + slowest + COMMIT_CYCLES + DONE_CYCLES, per_lane }
+}
+
+/// Chain `passes` identical passes with re-arm gaps into a work-group
+/// timing (the counterpart of the exec engines' ping-pong chaining).
+pub fn compose_group(pass: PassTiming, passes: u64) -> GroupTiming {
+    let passes = passes.max(1);
+    let total = pass.cycles * passes + REARM_CYCLES * (passes - 1);
+    GroupTiming { pass, total_cycles: total, passes }
+}
+
 /// Time one pass of the whole design on a device.
 pub fn time_pass(d: &Design, _dev: &Device, seq_cpi: u64) -> PassTiming {
     let nlanes = d.lanes.len();
@@ -183,16 +200,12 @@ pub fn time_pass(d: &Design, _dev: &Device, seq_cpi: u64) -> PassTiming {
         let busy = lane_cycles_closed_form(d.lanes[k].kind, items, fill, seq_work, drain);
         per_lane.push(busy);
     }
-    let slowest = per_lane.iter().copied().max().unwrap_or(0);
-    PassTiming { cycles: START_CYCLES + slowest + COMMIT_CYCLES + DONE_CYCLES, per_lane }
+    compose_pass(per_lane)
 }
 
 /// Time a whole work-group (`repeat` chained passes).
 pub fn time_group(d: &Design, dev: &Device) -> GroupTiming {
-    let pass = time_pass(d, dev, dev.seq_cpi);
-    let passes = d.info.repeat.max(1);
-    let total = pass.cycles * passes + REARM_CYCLES * (passes - 1);
-    GroupTiming { pass, total_cycles: total, passes }
+    compose_group(time_pass(d, dev, dev.seq_cpi), d.info.repeat.max(1))
 }
 
 #[cfg(test)]

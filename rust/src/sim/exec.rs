@@ -107,9 +107,10 @@ fn resolve(
 // simple kernel for compilation alone; the slot index removes the
 // remaining name probes from compile + pass chaining).
 
-/// A compiled operand source.
+/// A compiled operand source. `pub(crate)` so the batched engine
+/// (`sim::compile`) can lower it into dense register-file slots.
 #[derive(Debug, Clone, Copy)]
-enum Src {
+pub(crate) enum Src {
     Reg(usize),
     Imm(u64),
 }
@@ -117,52 +118,52 @@ enum Src {
 /// One compiled datapath operation; `op == None` is a masked copy
 /// (parameter-binding semantics of `eval_func`).
 #[derive(Debug, Clone)]
-struct CompiledOp {
-    op: Option<crate::tir::Op>,
-    ty: crate::tir::Ty,
-    a: Src,
-    b: Src,
-    c: Option<Src>,
-    dst: usize,
+pub(crate) struct CompiledOp {
+    pub(crate) op: Option<crate::tir::Op>,
+    pub(crate) ty: crate::tir::Ty,
+    pub(crate) a: Src,
+    pub(crate) b: Src,
+    pub(crate) c: Option<Src>,
+    pub(crate) dst: usize,
 }
 
 /// A pre-resolved input-port read: destination register, source memory
 /// index, stream offset, port mask, periodic wrap.
 #[derive(Debug, Clone)]
-struct PortRead {
-    dst: usize,
-    mem: usize,
-    offset: i64,
-    mask: u64,
+pub(crate) struct PortRead {
+    pub(crate) dst: usize,
+    pub(crate) mem: usize,
+    pub(crate) offset: i64,
+    pub(crate) mask: u64,
     /// `WRAP` port: index modulo the backing memory's length.
-    wrap: bool,
+    pub(crate) wrap: bool,
 }
 
 /// A pre-resolved output binding: source register, destination memory
 /// index, mask.
 #[derive(Debug, Clone)]
-struct PortWrite {
-    src: usize,
-    mem: usize,
-    mask: u64,
+pub(crate) struct PortWrite {
+    pub(crate) src: usize,
+    pub(crate) mem: usize,
+    pub(crate) mask: u64,
 }
 
 /// A lane compiled to straight-line register code.
 #[derive(Debug, Clone)]
 pub struct CompiledLane {
-    reads: Vec<PortRead>,
-    ops: Vec<CompiledOp>,
-    writes: Vec<PortWrite>,
-    n_regs: usize,
+    pub(crate) reads: Vec<PortRead>,
+    pub(crate) ops: Vec<CompiledOp>,
+    pub(crate) writes: Vec<PortWrite>,
+    pub(crate) n_regs: usize,
     /// Register holding the per-item reduce value (masked copy of the
     /// reduce operand), when the lane's datapath ends in a reduction.
-    reduce_reg: Option<usize>,
+    pub(crate) reduce_reg: Option<usize>,
 }
 
 /// Compile one lane of a design against the module's slot index: every
 /// operand is already a [`SlotOperand`], and port/const/memory
 /// resolution is a dense slot access.
-fn compile_lane(ix: &ModuleIndex, lane: &Lane) -> Result<CompiledLane, String> {
+pub(crate) fn compile_lane(ix: &ModuleIndex, lane: &Lane) -> Result<CompiledLane, String> {
     let leaf = ix
         .func_slot(&lane.func)
         .ok_or_else(|| format!("unknown function `@{}`", lane.func))?;
@@ -608,8 +609,29 @@ pub fn run_all_passes_with(ix: &ModuleIndex, d: &Design, mems: &mut MemState) ->
     result
 }
 
+/// Multi-pass reference runner: [`run_pass_interpreted`] chained
+/// through the same name-keyed ping-pong copies the compiled paths make
+/// by slot — the whole-group oracle the batched engine
+/// (`sim::compile`) is conformance- and property-tested against,
+/// covering `repeat` chaining as well as single passes.
+pub fn run_all_passes_interpreted(m: &Module, d: &Design, mems: &mut MemState) -> Result<(), String> {
+    let repeat = d.info.repeat.max(1);
+    let pairs = pingpong_pairs(m);
+    for pass in 0..repeat {
+        run_pass_interpreted(m, d, mems)?;
+        if pass + 1 < repeat {
+            for (dst, src) in &pairs {
+                if let Some(data) = mems.get(dst).cloned() {
+                    mems.insert(src.clone(), data);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// [`pingpong_pairs`] resolved to memory slots.
-fn pingpong_slots(ix: &ModuleIndex) -> Vec<(usize, usize)> {
+pub(crate) fn pingpong_slots(ix: &ModuleIndex) -> Vec<(usize, usize)> {
     pingpong_pairs(ix.module)
         .into_iter()
         .filter_map(|(d, s)| Some((ix.mem_slot(&d)? as usize, ix.mem_slot(&s)? as usize)))
@@ -864,6 +886,19 @@ define void @main () pipe {
             let want: u64 = (0..4).map(|j| a[i * 4 + j] * x[j]).sum();
             assert_eq!(mems["mem_y"][i], want & MASK18, "row {i}");
         }
+    }
+
+    #[test]
+    fn interpreted_multi_pass_oracle_matches_compiled_runner() {
+        // The whole-group oracle (repeat + ping-pong chaining by name)
+        // must agree with the slot-dense compiled runner bit-for-bit.
+        let m = parse_and_validate(&examples::fig15_sor_pipe(18, 18, 5)).unwrap();
+        let d = elaborate(&m).unwrap();
+        let mut fast = sor_mems(23);
+        let mut slow = fast.clone();
+        run_all_passes(&m, &d, &mut fast).unwrap();
+        run_all_passes_interpreted(&m, &d, &mut slow).unwrap();
+        assert_eq!(fast, slow);
     }
 
     #[test]

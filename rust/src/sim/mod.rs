@@ -3,17 +3,22 @@
 //! §Substitutions).
 //!
 //! Split into value semantics ([`value`]), design elaboration
-//! ([`elaborate`]), functional execution ([`exec`]) and the cycle-level
-//! timing engine ([`engine`]). The façade [`simulate`] runs both halves
-//! and returns functional outputs + cycle counts; golden-model
-//! comparisons against the PJRT-executed JAX artifacts live in
-//! `crate::runtime::golden`.
+//! ([`elaborate`]), functional execution ([`exec`] per-item oracles,
+//! [`compile`] batched hot path) and the cycle-level timing engine
+//! ([`engine`]). The façade [`simulate`] runs both halves and returns
+//! functional outputs + cycle counts — through the batched
+//! compile-once-run-many engine by default, with [`simulate_with`] for
+//! explicit [`Engine`] selection (A/B debugging, conformance oracles);
+//! golden-model comparisons against the PJRT-executed JAX artifacts
+//! live in `crate::runtime::golden`.
 
+pub mod compile;
 pub mod elaborate;
 pub mod engine;
 pub mod exec;
 pub mod value;
 
+pub use compile::CompiledKernel;
 pub use elaborate::{elaborate, elaborate_with, Design, IndexSpace, Lane};
 pub use exec::MemState;
 
@@ -166,15 +171,99 @@ impl SimResult {
     }
 }
 
-/// Run the full simulation: functional passes + cycle-level timing.
-/// The module's names are resolved into a slot index **once**, shared by
-/// elaboration and every chained execution pass.
+/// Which functional execution engine a simulation runs through. All
+/// three are bit-identical — the conformance checks
+/// (`sim/batched-vs-interpreted`, `sim/compiled-vs-interpreted`) and
+/// the property suite gate that — so the choice only affects speed and
+/// is exposed (`--engine`) for A/B debugging of engine mismatches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// Block-batched SoA bytecode ([`CompiledKernel`]) — the default
+    /// hot path; compiles once, replays across workloads and passes.
+    #[default]
+    Batched,
+    /// Per-item compiled register code (`exec::run_all_passes_with`,
+    /// recompiled per call) — the first-level oracle.
+    Compiled,
+    /// Name-resolved reference interpreter
+    /// (`exec::run_all_passes_interpreted`) — the root oracle.
+    Interpreted,
+}
+
+impl Engine {
+    /// Parse a `--engine` flag value.
+    pub fn parse(s: &str) -> Result<Engine, String> {
+        match s {
+            "batched" => Ok(Engine::Batched),
+            "compiled" => Ok(Engine::Compiled),
+            "interpreted" => Ok(Engine::Interpreted),
+            other => Err(format!("unknown engine `{other}` (batched|compiled|interpreted)")),
+        }
+    }
+
+    /// The flag spelling of this engine.
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Batched => "batched",
+            Engine::Compiled => "compiled",
+            Engine::Interpreted => "interpreted",
+        }
+    }
+}
+
+/// Run the full simulation: functional passes + cycle-level timing,
+/// through the batched compile-once-run-many engine. Callers that
+/// already hold a cached [`CompiledKernel`] (`coordinator::Session`)
+/// use [`simulate_compiled`] and skip the per-call compile entirely.
 pub fn simulate(m: &Module, dev: &Device, w: &Workload) -> Result<SimResult, String> {
-    let ix = crate::tir::ModuleIndex::build(m)?;
-    let d = elaborate::elaborate_with(&ix)?;
+    simulate_with(m, dev, w, Engine::Batched)
+}
+
+/// [`simulate`] with an explicit engine choice. Every engine returns
+/// identical results; the per-item engines exist as oracles and for
+/// `--engine` A/B debugging.
+pub fn simulate_with(m: &Module, dev: &Device, w: &Workload, eng: Engine) -> Result<SimResult, String> {
+    match eng {
+        Engine::Batched => {
+            let ck = CompiledKernel::compile(m)?;
+            simulate_compiled(&ck, dev, w)
+        }
+        Engine::Compiled => {
+            let ix = crate::tir::ModuleIndex::build(m)?;
+            let d = elaborate::elaborate_with(&ix)?;
+            let mut mems = w.mems.clone();
+            exec::run_all_passes_with(&ix, &d, &mut mems)?;
+            let t = engine::time_group(&d, dev);
+            Ok(SimResult {
+                cycles_per_pass: t.pass.cycles,
+                total_cycles: t.total_cycles,
+                passes: t.passes,
+                mems,
+            })
+        }
+        Engine::Interpreted => {
+            let ix = crate::tir::ModuleIndex::build(m)?;
+            let d = elaborate::elaborate_with(&ix)?;
+            let mut mems = w.mems.clone();
+            exec::run_all_passes_interpreted(m, &d, &mut mems)?;
+            let t = engine::time_group(&d, dev);
+            Ok(SimResult {
+                cycles_per_pass: t.pass.cycles,
+                total_cycles: t.total_cycles,
+                passes: t.passes,
+                mems,
+            })
+        }
+    }
+}
+
+/// Simulate through a pre-compiled kernel — the compile-once-run-many
+/// path the session's `KernelCache` feeds: one [`CompiledKernel`]
+/// serves every workload, device, and repeat pass of its module.
+pub fn simulate_compiled(ck: &CompiledKernel, dev: &Device, w: &Workload) -> Result<SimResult, String> {
     let mut mems = w.mems.clone();
-    exec::run_all_passes_with(&ix, &d, &mut mems)?;
-    let t = engine::time_group(&d, dev);
+    ck.run(&mut mems)?;
+    let t = ck.time_group(dev);
     Ok(SimResult { cycles_per_pass: t.pass.cycles, total_cycles: t.total_cycles, passes: t.passes, mems })
 }
 
@@ -227,6 +316,35 @@ mod tests {
         // …and a dangling copy target is an error, not a silent guess.
         let e = Workload::with_dest_init(&m, 9, DestInit::CopyOf("nope")).unwrap_err();
         assert!(e.contains("mem_nope"), "{e}");
+    }
+
+    #[test]
+    fn all_engines_return_identical_results() {
+        // The batched default, the per-item compiled path, and the
+        // reference interpreter agree on values AND cycles — including
+        // the multi-pass ping-pong kernel.
+        for src in [examples::fig7_pipe(), examples::fig15_sor_default()] {
+            let m = parse_and_validate(&src).unwrap();
+            let w = Workload::random_for(&m, 13);
+            let base = simulate_with(&m, &Device::stratix4(), &w, Engine::Batched).unwrap();
+            for eng in [Engine::Compiled, Engine::Interpreted] {
+                let r = simulate_with(&m, &Device::stratix4(), &w, eng).unwrap();
+                assert_eq!(r, base, "{} diverged", eng.name());
+            }
+            // the cached-kernel path is the same computation
+            let ck = CompiledKernel::compile(&m).unwrap();
+            assert_eq!(simulate_compiled(&ck, &Device::stratix4(), &w).unwrap(), base);
+        }
+    }
+
+    #[test]
+    fn engine_flag_spelling_round_trips() {
+        for eng in [Engine::Batched, Engine::Compiled, Engine::Interpreted] {
+            assert_eq!(Engine::parse(eng.name()).unwrap(), eng);
+        }
+        let e = Engine::parse("warp").unwrap_err();
+        assert!(e.contains("batched|compiled|interpreted"), "{e}");
+        assert_eq!(Engine::default(), Engine::Batched);
     }
 
     #[test]

@@ -21,6 +21,9 @@
 //!    `run_pass_interpreted`/`eval_func`), and the closed-form
 //!    `lane_cycles` expression equals the state-machine oracle for
 //!    stall-free runs.
+//! 6. **Batched-engine soundness** — the compile-once-run-many SoA
+//!    bytecode engine is bit-identical to the interpreted oracle across
+//!    points, chains, reductions and transform recipes.
 
 use tytra::conformance::random::random_kernel;
 use tytra::device::Device;
@@ -508,6 +511,50 @@ fn transformed_modules_keep_indexed_paths_bit_identical() {
                 run_pass(&m, &d, &mut fast).unwrap_or_else(|e| panic!("{rname}: {e}\n{src}"));
                 run_pass_interpreted(&m, &d, &mut slow).unwrap_or_else(|e| panic!("{rname}: {e}\n{src}"));
                 assert_eq!(fast, slow, "{rname} {p:?}: compiled != interpreted\n{src}");
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_engine_is_bit_identical_to_the_interpreted_oracle() {
+    // ISSUE 6 satellite: the batched SoA bytecode engine
+    // (`sim::CompiledKernel`) replays full multi-pass runs bit-identically
+    // to `run_all_passes_interpreted` on random kernels across the C1–C4
+    // planes, call chains, tree reductions, and every transform recipe.
+    use tytra::sim::exec::run_all_passes_interpreted;
+    use tytra::sim::CompiledKernel;
+    use tytra::transform::TransformRecipe;
+
+    let mut rng = Prng::new(0xB47C);
+    for case in 0..CASES {
+        let src = random_kernel(&mut rng, case);
+        let k = frontend::parse_kernel(&src).unwrap();
+        for p in [
+            DesignPoint::c2(),
+            DesignPoint::c1(4),
+            DesignPoint::c3(2),
+            DesignPoint::c4(),
+            DesignPoint::c2().chained(),
+            DesignPoint::c2().tree(),
+        ] {
+            let mut recipes = vec![(None, "base")];
+            recipes.extend(TransformRecipe::named().into_iter().map(|(r, n)| (Some(r), n)));
+            for (recipe, rname) in recipes {
+                let point = match recipe {
+                    Some(r) => p.with_transforms(r),
+                    None => p,
+                };
+                let Ok(m) = frontend::lower(&k, point) else { continue };
+                let ck = CompiledKernel::compile(&m).unwrap_or_else(|e| panic!("{rname}: {e}\n{src}"));
+                let d = sim::elaborate(&m).unwrap();
+                let w = Workload::random_for(&m, 3000 + case as u64);
+                let mut batched = w.mems.clone();
+                let mut oracle = w.mems.clone();
+                ck.run(&mut batched).unwrap_or_else(|e| panic!("{rname}: {e}\n{src}"));
+                run_all_passes_interpreted(&m, &d, &mut oracle)
+                    .unwrap_or_else(|e| panic!("{rname}: {e}\n{src}"));
+                assert_eq!(batched, oracle, "{rname} at {p:?}: batched != interpreted\n{src}");
             }
         }
     }

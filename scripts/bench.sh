@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # Perf-trajectory harness: runs the estimator_speed bench and writes the
 # headline numbers to BENCH_dse_throughput.json at the repo root, so the
-# sweep-throughput trend is machine-readable across PRs.
+# sweep-throughput trend is machine-readable across PRs. Since PR 6 the
+# bench also measures simulation-engine throughput (items/sec, batched
+# bytecode vs the interpreted oracle) and the validated sweep runs
+# through the session KernelCache (compile-once-run-many).
 #
 # Usage:
 #   scripts/bench.sh            # smoke mode (short, CI-friendly)

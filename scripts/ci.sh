@@ -51,7 +51,26 @@ echo "== conformance (smoke: C1-C4 incl. comb/par, call-chain, reduction + trans
 # named TIR-to-TIR rewrite recipes are simulated and diffed against the
 # untransformed module and the golden model (ISSUE 5 acceptance: every
 # shipped recipe is conformance-gated as semantics-preserving).
+# Since PR 6 the quick sweep also runs the sim/batched-vs-* checks: the
+# batched SoA bytecode engine is diffed against the interpreted oracle
+# and the golden model at every kernel x point and transform recipe.
 cargo run --quiet --release --manifest-path "$MANIFEST" -- conformance --quick
+
+echo "== batched-engine smoke (explicit --engine routing + equivalence) =="
+# The full-run conformance checks driven explicitly by the batched
+# engine (the default, but the flag must route), and the simulate CLI
+# must produce byte-identical output whichever engine runs the kernel.
+cargo run --quiet --release --manifest-path "$MANIFEST" -- \
+    conformance --quick --random 0 --engine batched > /dev/null
+OUT_BAT=$(cargo run --quiet --release --manifest-path "$MANIFEST" -- \
+    simulate builtin:fig9 --seed 1 --engine batched)
+OUT_INT=$(cargo run --quiet --release --manifest-path "$MANIFEST" -- \
+    simulate builtin:fig9 --seed 1 --engine interpreted)
+if [ "$OUT_BAT" != "$OUT_INT" ]; then
+    echo "error: batched and interpreted simulate output diverge" >&2
+    printf '%s\n---\n%s\n' "$OUT_BAT" "$OUT_INT" >&2
+    exit 1
+fi
 
 echo "== dse smoke over the enlarged variant axis (comb plane + chain) =="
 cargo run --quiet --release --manifest-path "$MANIFEST" -- \
