@@ -10,7 +10,10 @@
 //! * parallel DSE sweep throughput (configurations/sec) vs worker count;
 //! * batched (kernel × device) grid throughput via `explore_batch`;
 //! * validated-sweep throughput (configs/sec) through the session's
-//!   `KernelCache` (`Session::validate_sweep`).
+//!   `KernelCache` (`Session::validate_sweep`);
+//! * persistent-cache replay: a fresh session per iteration (modelling
+//!   a fresh process) sweeping cold (store to disk) vs warm (decode
+//!   and verify from disk) — the `tytra serve` restart case.
 //!
 //! This is also the §Perf harness used for the optimisation passes
 //! (EXPERIMENTS.md §Perf records before/after from this bench).
@@ -147,6 +150,50 @@ fn main() {
     });
     println!("{}  ({:.0} configs/s)", r_warm.line(), n_points as f64 / r_warm.summary.mean);
 
+    println!("{}", section("persistent on-disk estimate cache (cold store vs warm disk replay)"));
+    // ISSUE 7: `tytra serve` survives process restarts through the
+    // on-disk cache. A fresh `Session` per iteration models a fresh
+    // process — the in-memory cache never short-circuits the disk
+    // probe — so "warm" here is pure decode-and-verify replay.
+    let pdir = std::env::temp_dir().join(format!("tytra-bench-cache-{}", std::process::id()));
+    let open_disk = || {
+        std::sync::Arc::new(
+            tytra::coordinator::DiskCache::open(
+                pdir.clone(),
+                tytra::coordinator::DiskCache::DEFAULT_BUDGET_BYTES,
+            )
+            .expect("open bench cache dir"),
+        )
+    };
+    let (w, i) = scale(2, 20);
+    let r_cold_disk = bench(&format!("{n_points}-point sweep, cold disk cache"), w, i, || {
+        let _ = std::fs::remove_dir_all(&pdir);
+        let session = Session::new(8).with_disk_cache(open_disk());
+        black_box(session.explore(src, &k, &dev, &limits).unwrap())
+    });
+    let cold_disk_cps = n_points as f64 / r_cold_disk.summary.mean;
+    println!("{}  ({:.0} configs/s)", r_cold_disk.line(), cold_disk_cps);
+    {
+        // leave one fully populated store behind for the warm rows
+        let _ = std::fs::remove_dir_all(&pdir);
+        let session = Session::new(8).with_disk_cache(open_disk());
+        session.explore(src, &k, &dev, &limits).unwrap();
+    }
+    let mut disk_stats = (0u64, 0u64);
+    let r_warm_disk = bench(&format!("{n_points}-point sweep, warm disk cache"), w, i, || {
+        let session = Session::new(8).with_disk_cache(open_disk());
+        let r = session.explore(src, &k, &dev, &limits).unwrap();
+        disk_stats = (session.metrics().disk_hits.get(), session.metrics().cache_recovered.get());
+        black_box(r)
+    });
+    let warm_disk_cps = n_points as f64 / r_warm_disk.summary.mean;
+    println!("{}  ({:.0} configs/s)", r_warm_disk.line(), warm_disk_cps);
+    println!(
+        "  warm sweep: {} disk hits, {} recovered (must be 0)",
+        disk_stats.0, disk_stats.1
+    );
+    let _ = std::fs::remove_dir_all(&pdir);
+
     println!("{}", section("batched (kernel × device) grid via Session::explore_batch (cold cache)"));
     let kernels = vec![
         (frontend::lang::simple_kernel_source().to_string(),
@@ -277,6 +324,7 @@ fn main() {
             (rcells.len(), reduce_points, tree_points),
             (xcells.len(), xf_recipes, xf_points, xf_realised),
             (int_ips, bat_ips, sim_speedup, kcache_stats),
+            (cold_disk_cps, warm_disk_cps, disk_stats),
         );
         if let Err(e) = std::fs::write(&path, json) {
             eprintln!("cannot write {}: {e}", path.to_string_lossy());
@@ -300,6 +348,7 @@ fn render_json(
     reduction: (usize, usize, usize),
     transforms: (usize, usize, usize, usize),
     sim: (f64, f64, f64, (u64, u64)),
+    persist: (f64, f64, (u64, u64)),
 ) -> String {
     let rows = |xs: &[(usize, f64)]| -> String {
         xs.iter()
@@ -310,6 +359,7 @@ fn render_json(
     let (rkernels, rpoints, rtrees) = reduction;
     let (xkernels, xrecipes, xpoints, xrealised) = transforms;
     let (int_ips, bat_ips, speedup, (khits, kcompiles)) = sim;
+    let (cold_disk_cps, warm_disk_cps, (dhits, drecovered)) = persist;
     format!(
         "{{\n  \"bench\": \"estimator_speed\",\n  \"mode\": \"{}\",\n  \
          \"single_estimate_us\": {{\"simple_c2\": {:.3}, \"sor_c2\": {:.3}}},\n  \
@@ -322,7 +372,10 @@ fn render_json(
          \"transformed_points\": {xrealised}}},\n  \
          \"sim\": {{\"items_per_sec_interpreted\": {int_ips:.1}, \
          \"items_per_sec_batched\": {bat_ips:.1}, \"batched_speedup\": {speedup:.2}, \
-         \"kernel_cache\": {{\"hits\": {khits}, \"compiles\": {kcompiles}}}}}\n}}\n",
+         \"kernel_cache\": {{\"hits\": {khits}, \"compiles\": {kcompiles}}}}},\n  \
+         \"persist\": {{\"cold_disk_configs_per_sec\": {cold_disk_cps:.1}, \
+         \"warm_disk_configs_per_sec\": {warm_disk_cps:.1}, \
+         \"disk_hits_per_sweep\": {dhits}, \"recovered\": {drecovered}}}\n}}\n",
         if smoke { "smoke" } else { "full" },
         est_simple_s * 1e6,
         est_sor_s * 1e6,

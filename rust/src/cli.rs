@@ -39,7 +39,7 @@ pub struct Cli {
 /// Flags that take a value.
 const VALUE_FLAGS: &[&str] = &[
     "device", "devices", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts", "random",
-    "engine",
+    "engine", "cache-dir", "cache-budget", "timeout-ms", "socket",
 ];
 /// Boolean flags.
 const BOOL_FLAGS: &[&str] = &[
@@ -136,6 +136,7 @@ pub fn dispatch(args: &[String]) -> Result<String, String> {
         "compare" => cmd_compare(&cli),
         "dse" => cmd_dse(&cli),
         "sweep" => cmd_sweep(&cli),
+        "serve" => cmd_serve(&cli),
         "conformance" => cmd_conformance(&cli),
         "emit-hdl" => cmd_emit_hdl(&cli),
         "golden" => cmd_golden(&cli),
@@ -160,7 +161,11 @@ pub fn usage() -> String {
        dse      <kernel.knl|builtin:NAME>  explore the design space (see `tytra kernels`)\n\
        sweep    <kernel>... [--devices s4,c4]  batched DSE over a kernel × device grid\n\
                                       (builtin:all = the whole scenario library;\n\
-                                      --json = machine-readable frontier + wall checks)\n\
+                                      --json = machine-readable frontier + wall checks;\n\
+                                      --cache-dir DIR = persistent estimate cache)\n\
+       serve    [--socket PATH]       long-running sweep service: one JSON request per\n\
+                                      line on stdin (or the socket), one response per\n\
+                                      line; persistent cache on by default\n\
        conformance [--quick] [--json] cross-layer differential checks over the kernel\n\
                                       library + random kernels (non-zero exit on mismatch)\n\
        emit-hdl <file.tir> [--tb]     generate Verilog (+ testbench)\n\
@@ -171,7 +176,8 @@ pub fn usage() -> String {
      FLAGS: --device s4|s5|c4   --devices s4,c4   --seed N   --jobs N   --max-lanes N\n\
             --max-dv N   --dense   --pipes-only   --chain   --reduce   --transforms\n\
             --config tytra.toml   --artifacts DIR   --tb   --quick   --random N   --json\n\
-            --inject-mismatch   --engine batched|compiled|interpreted"
+            --inject-mismatch   --engine batched|compiled|interpreted\n\
+            --cache-dir DIR   --cache-budget BYTES   --timeout-ms N   --socket PATH"
         .to_string()
 }
 
@@ -289,7 +295,37 @@ fn sweep_config(cli: &Cli) -> Result<Config, String> {
     if let Some(v) = cli.flag("jobs") {
         cfg.jobs = v.parse().map_err(|e| format!("--jobs: {e}"))?;
     }
+    if let Some(d) = cli.flag("cache-dir") {
+        cfg.cache_dir = Some(d.to_string());
+    }
+    if let Some(v) = cli.flag("cache-budget") {
+        cfg.cache_budget_bytes = v.parse().map_err(|e| format!("--cache-budget: {e}"))?;
+    }
+    if let Some(v) = cli.flag("timeout-ms") {
+        cfg.serve_timeout_ms = v.parse().map_err(|e| format!("--timeout-ms: {e}"))?;
+    }
     Ok(cfg)
+}
+
+/// Session construction shared by `dse`, `sweep` and `serve`: worker
+/// count from config, persistent disk cache attached when configured
+/// (`--cache-dir` / `cache.dir`). `serve` additionally falls back to
+/// the per-user default cache directory — a service exists to stay
+/// warm; one-shot commands only persist on request.
+fn build_session(cfg: &Config, default_cache: bool) -> Result<Session, String> {
+    let session = Session::new(cfg.jobs);
+    let dir = match &cfg.cache_dir {
+        Some(d) => Some(PathBuf::from(d)),
+        None if default_cache => crate::coordinator::DiskCache::default_dir(),
+        None => None,
+    };
+    match dir {
+        Some(d) => {
+            let disk = crate::coordinator::DiskCache::open(d, cfg.cache_budget_bytes)?;
+            Ok(session.with_disk_cache(std::sync::Arc::new(disk)))
+        }
+        None => Ok(session),
+    }
 }
 
 fn cmd_dse(cli: &Cli) -> Result<String, String> {
@@ -302,11 +338,21 @@ fn cmd_dse(cli: &Cli) -> Result<String, String> {
     }
     let (src, k) = crate::kernels::resolve_specs(std::slice::from_ref(spec))?.remove(0);
 
-    let session = Session::new(cfg.jobs);
+    let session = build_session(&cfg, false)?;
     let r = session.explore(&src, &k, &dev, &cfg.sweep)?;
 
     let mut out = String::new();
-    out.push_str(&format!("kernel `{}` on {} ({} points, {} workers)\n\n", k.name, dev.name, r.candidates.len(), cfg.jobs));
+    // Enumerated vs realised: degenerate points (clamped reductions,
+    // recipes that rewrote nothing) collapse into one candidate row.
+    let enumerated = crate::dse::enumerate(&cfg.sweep).len();
+    out.push_str(&format!(
+        "kernel `{}` on {} ({} points → {} realised, {} workers)\n\n",
+        k.name,
+        dev.name,
+        enumerated,
+        r.candidates.len(),
+        cfg.jobs
+    ));
     let mut t = crate::util::Table::new(vec!["config", "class", "ALUTs", "BRAM", "DSP", "cycles", "EWGT", "util%", "feasible"]);
     for c in &r.candidates {
         let ev = c.evaluated();
@@ -361,11 +407,11 @@ fn cmd_sweep(cli: &Cli) -> Result<String, String> {
     let limits = cfg.sweep;
     let jobs = cfg.jobs;
 
-    let session = Session::new(jobs);
+    let session = build_session(&cfg, false)?;
     let cells = session.explore_batch(&kernels, &devices, &limits)?;
 
     if cli.has("json") {
-        return Ok(sweep_json(&kernels, &devices, &limits, &cells));
+        return Ok(crate::coordinator::serve::render_sweep_json(&kernels, &devices, &limits, &cells));
     }
 
     let mut out = String::new();
@@ -405,70 +451,38 @@ fn cmd_sweep(cli: &Cli) -> Result<String, String> {
     Ok(out)
 }
 
-/// Machine-readable sweep export (`tytra sweep --json`): per (kernel ×
-/// device) cell the full candidate list with wall checks, the Pareto
-/// frontier and the selected best — hand-rolled JSON (no serde offline),
-/// with fixed float precision and label-tie-broken frontiers so repeated
-/// runs are byte-identical (external tooling can diff snapshots).
-fn sweep_json(
-    kernels: &[(String, frontend::KernelDef)],
-    devices: &[Device],
-    limits: &crate::dse::SweepLimits,
-    cells: &[crate::coordinator::BatchResult],
-) -> String {
-    let point_json = |c: &crate::dse::Candidate| -> String {
-        let ev = c.evaluated();
-        format!(
-            "{{\"label\": \"{}\", \"class\": \"{}\", \"alut\": {}, \"reg\": {}, \
-             \"bram_bits\": {}, \"dsp\": {}, \"cycles\": {}, \"ewgt\": {:.3}, \
-             \"utilisation\": {:.6}, \"io_utilisation\": {:.6}, \"feasible\": {}}}",
-            ev.label,
-            c.estimate.class,
-            c.estimate.resources.alut,
-            c.estimate.resources.reg,
-            c.estimate.resources.bram_bits,
-            c.estimate.resources.dsp,
-            c.estimate.cycles_per_pass,
-            ev.ewgt,
-            ev.utilisation,
-            c.walls.io_utilisation,
-            ev.feasible
-        )
+/// `tytra serve` — the long-running sweep service: one JSON request per
+/// line on stdin (or a Unix socket), one response per line on stdout.
+/// Holds a single warm [`Session`] (with the persistent cache attached,
+/// defaulting to `~/.tytra/cache/`) for its whole lifetime; see
+/// `coordinator::serve` for the protocol.
+fn cmd_serve(cli: &Cli) -> Result<String, String> {
+    let cfg = sweep_config(cli)?;
+    let session = build_session(&cfg, true)?;
+    let timeout = std::time::Duration::from_millis(cfg.serve_timeout_ms.max(1));
+    let served = match cli.flag("socket") {
+        Some(path) => serve_on_socket(&session, Path::new(path), timeout)?,
+        None => crate::coordinator::serve::run_stdio(&session, timeout)?,
     };
-    let mut cells_json = Vec::with_capacity(cells.len());
-    for cell in cells {
-        let points: Vec<String> = cell.exploration.candidates.iter().map(point_json).collect();
-        let frontier: Vec<String> = cell
-            .exploration
-            .frontier
-            .iter()
-            .map(|p| {
-                format!(
-                    "{{\"label\": \"{}\", \"ewgt\": {:.3}, \"utilisation\": {:.6}}}",
-                    p.label, p.ewgt, p.utilisation
-                )
-            })
-            .collect();
-        let best = match &cell.exploration.best {
-            Some(b) => format!("\"{}\"", b.label),
-            None => "null".to_string(),
-        };
-        cells_json.push(format!(
-            "    {{\"kernel\": \"{}\", \"device\": \"{}\", \"best\": {best},\n     \
-             \"frontier\": [{}],\n     \"points\": [{}]}}",
-            cell.kernel,
-            cell.device,
-            frontier.join(", "),
-            points.join(", ")
-        ));
-    }
-    format!(
-        "{{\n  \"kernels\": {}, \"devices\": {}, \"points_per_cell\": {},\n  \"cells\": [\n{}\n  ]\n}}",
-        kernels.len(),
-        devices.len(),
-        crate::dse::enumerate(limits).len(),
-        cells_json.join(",\n")
-    )
+    Ok(format!("served {served} request(s)\n{}", session.metrics().summary()))
+}
+
+#[cfg(unix)]
+fn serve_on_socket(
+    session: &Session,
+    path: &Path,
+    timeout: std::time::Duration,
+) -> Result<u64, String> {
+    crate::coordinator::serve::run_socket(session, path, timeout)
+}
+
+#[cfg(not(unix))]
+fn serve_on_socket(
+    _session: &Session,
+    _path: &Path,
+    _timeout: std::time::Duration,
+) -> Result<u64, String> {
+    Err("--socket is only available on Unix platforms".into())
 }
 
 fn cmd_emit_hdl(cli: &Cli) -> Result<String, String> {
@@ -777,6 +791,37 @@ mod tests {
         // byte-stable across runs (the deterministic-frontier satellite)
         let again = dispatch(&argv).unwrap();
         assert_eq!(out, again);
+    }
+
+    #[test]
+    fn sweep_json_cold_vs_warm_disk_cache_is_bit_identical() {
+        // The persistent-cache acceptance: a repeat sweep against a warm
+        // on-disk cache must export byte-identical JSON to the cold run.
+        let dir = std::env::temp_dir().join(format!("tytra-cli-cache-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let argv = args(&format!(
+            "sweep builtin:simple --devices stratix4 --jobs 2 --max-lanes 2 --max-dv 2 --json --cache-dir {}",
+            dir.display()
+        ));
+        let cold = dispatch(&argv).unwrap();
+        let warm = dispatch(&argv).unwrap();
+        assert_eq!(cold, warm, "warm-disk sweep must be bit-identical to cold");
+        assert!(std::fs::read_dir(&dir).unwrap().next().is_some(), "cache populated");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_flags_parse() {
+        let c = Cli::parse(&args(
+            "serve --timeout-ms 250 --cache-dir /tmp/tc --cache-budget 1024 --socket /tmp/s.sock",
+        ))
+        .unwrap();
+        assert_eq!(c.command, "serve");
+        assert_eq!(c.flag("timeout-ms"), Some("250"));
+        assert_eq!(c.flag("cache-dir"), Some("/tmp/tc"));
+        assert_eq!(c.flag("cache-budget"), Some("1024"));
+        assert_eq!(c.flag("socket"), Some("/tmp/s.sock"));
+        assert!(usage().contains("serve"));
     }
 
     #[test]

@@ -21,6 +21,13 @@ pub struct Config {
     pub sweep: SweepLimits,
     /// Artifacts directory (PJRT golden models).
     pub artifacts: String,
+    /// Persistent estimate-cache directory (`None` = the per-user
+    /// default for `tytra serve`, no cache for one-shot commands).
+    pub cache_dir: Option<String>,
+    /// Persistent-cache LRU byte budget.
+    pub cache_budget_bytes: u64,
+    /// Per-request timeout for `tytra serve`, milliseconds.
+    pub serve_timeout_ms: u64,
 }
 
 impl Default for Config {
@@ -31,6 +38,9 @@ impl Default for Config {
             seed: 42,
             sweep: SweepLimits::default(),
             artifacts: "artifacts".into(),
+            cache_dir: None,
+            cache_budget_bytes: crate::coordinator::DiskCache::DEFAULT_BUDGET_BYTES,
+            serve_timeout_ms: 10_000,
         }
     }
 }
@@ -89,6 +99,16 @@ impl Config {
                     self.sweep.include_transforms =
                         v.as_bool().ok_or("`sweep.include_transforms` must be a boolean")?;
                 }
+                "cache.dir" => {
+                    self.cache_dir =
+                        Some(v.as_str().ok_or("`cache.dir` must be a string")?.to_string());
+                }
+                "cache.budget_bytes" => {
+                    self.cache_budget_bytes = get_int(v, "cache.budget_bytes")?.max(1) as u64;
+                }
+                "serve.timeout_ms" => {
+                    self.serve_timeout_ms = get_int(v, "serve.timeout_ms")?.max(1) as u64;
+                }
                 other => return Err(format!("unknown config key `{other}`")),
             }
         }
@@ -129,6 +149,23 @@ mod tests {
         assert!(c.sweep.include_transforms);
         assert!(!Config::default().sweep.include_transforms);
         assert!(Config::from_str("[sweep]\ninclude_transforms = 3").is_err());
+    }
+
+    #[test]
+    fn parses_service_keys() {
+        let c = Config::from_str(
+            "[cache]\ndir = \"/tmp/tc\"\nbudget_bytes = 1024\n[serve]\ntimeout_ms = 250\n",
+        )
+        .unwrap();
+        assert_eq!(c.cache_dir.as_deref(), Some("/tmp/tc"));
+        assert_eq!(c.cache_budget_bytes, 1024);
+        assert_eq!(c.serve_timeout_ms, 250);
+        let d = Config::default();
+        assert_eq!(d.cache_dir, None);
+        assert_eq!(d.cache_budget_bytes, crate::coordinator::DiskCache::DEFAULT_BUDGET_BYTES);
+        assert_eq!(d.serve_timeout_ms, 10_000);
+        assert!(Config::from_str("[cache]\ndir = 3").is_err());
+        assert!(Config::from_str("[serve]\ntimeout_ms = \"fast\"").is_err());
     }
 
     #[test]

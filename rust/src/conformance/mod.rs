@@ -25,6 +25,8 @@
 //! | `transform/degenerate-is-identity` | zero-rewrite recipe's module | byte-identical to the untransformed module |
 //! | `transform/depth-improved` | balance-recipe structural depth | untransformed depth (never worse) |
 //! | `hdl/*` | emitted Verilog | structural invariants (incl. declared signals, defined-module instantiation and the single-driver accumulator register) |
+//! | `cache/warm-vs-cold-bit-identical` | persistent on-disk estimate | fresh recompute |
+//! | `cache/corruption-recovers` | truncated cache entry | recompute (never stale bytes, never a panic) |
 //!
 //! Design points cover the full C1–C4 space — pipe lanes (C1/C2), comb
 //! cores (C3), sequential PEs (C4/C5) — plus mixed call-chain
@@ -250,6 +252,8 @@ pub fn run(opts: &Options) -> Result<ConformanceReport, String> {
             skipped_random += 1;
         }
     }
+
+    h.conform_persistent_cache()?;
 
     Ok(ConformanceReport {
         rows: h.rows,
@@ -646,6 +650,77 @@ impl Harness<'_> {
             rht.mems[out_key.as_str()] == rh.mems[out_key.as_str()],
             || first_vec_diff(&rh.mems[out_key.as_str()], &rht.mems[out_key.as_str()]),
         );
+        Ok(())
+    }
+
+    /// Persistence contract of the on-disk estimate cache
+    /// (`coordinator::persist`): every stored estimate re-loads
+    /// bit-identically on a warm pass, and an injected truncation
+    /// degrades to a recompute (`Load::Recovered`) rather than serving
+    /// stale bytes or panicking — the invariants `tytra serve` relies
+    /// on across process restarts.
+    fn conform_persistent_cache(&mut self) -> Result<(), String> {
+        use crate::coordinator::persist::{DiskCache, Load, PersistKey};
+        use crate::util::ContentHash;
+
+        let checks0 = self.checks;
+        let fails0 = self.failures.len();
+
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "tytra-conformance-cache-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        let disk = DiskCache::open(dir.clone(), DiskCache::DEFAULT_BUDGET_BYTES)?;
+
+        let dev = self.opts.device.clone();
+        let sc = &kernels::registry()[0];
+        let k = sc.parse()?;
+        let lk = frontend::analyze_kernel(&k)?;
+        let kh = ContentHash::of(sc.name.as_bytes());
+
+        for &p in &self.opts.points.clone() {
+            let m = frontend::lower_point(&lk, p)?;
+            let cold = estimator::estimate_with_db(&m, &dev, self.db)?;
+            let label = p.label();
+            let recipe = p.transforms.name();
+            let pk = PersistKey { kernel_hash: kh, device: &dev.name, label: &label, recipe: &recipe };
+            disk.store(&pk, &cold)?;
+            let warm = disk.load(&pk);
+            self.check(
+                sc.name,
+                &label,
+                "cache/warm-vs-cold-bit-identical",
+                warm == Load::Hit(cold.clone()),
+                || format!("stored {cold:?}, loaded {warm:?}"),
+            );
+        }
+
+        // Truncate every entry in place: each load must recover (and
+        // must not panic), and the cache must not serve the stale bytes.
+        for path in disk.entries() {
+            let bytes = std::fs::read(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+            std::fs::write(&path, &bytes[..bytes.len() / 2])
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+        }
+        if let Some(&p0) = self.opts.points.first() {
+            let label = p0.label();
+            let recipe = p0.transforms.name();
+            let pk = PersistKey { kernel_hash: kh, device: &dev.name, label: &label, recipe: &recipe };
+            let after = disk.load(&pk);
+            self.check(sc.name, &label, "cache/corruption-recovers", after == Load::Recovered, || {
+                format!("truncated entry loaded as {after:?}, expected Recovered")
+            });
+        }
+
+        self.rows.push(KernelRow {
+            kernel: "persist-cache".into(),
+            points: 0,
+            checks: self.checks - checks0,
+            mismatches: (self.failures.len() - fails0) as u64,
+        });
+        let _ = std::fs::remove_dir_all(&dir);
         Ok(())
     }
 

@@ -5,39 +5,96 @@
 //! simulation bytecode ([`sim::CompiledKernel`]) per realised module so
 //! validated sweeps compile each rewritten module once and replay it
 //! across every point, device, and workload.
+//!
+//! Both caches are **bounded**: a long-running sweep service
+//! (`tytra serve`) would otherwise grow them without limit. Keys are
+//! 128-bit content hashes ([`crate::util::ContentHash`]) instead of the
+//! full key material — the old `Key` retained every kernel's complete
+//! pretty-printed source per entry, which dominated the cache's memory
+//! — and eviction is LRU by access stamp once [`EstimateCache::MAX_ENTRIES`]
+//! / [`KernelCache::MAX_ENTRIES`] is reached. Debug/test builds retain
+//! the material alongside the hash and assert on any equal-hash /
+//! different-material pair, so a (≈2⁻⁶⁴-improbable) collision can never
+//! silently serve one kernel's estimate for another unnoticed by CI.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::estimator::Estimate;
 use crate::sim::CompiledKernel;
 use crate::tir::Module;
+use crate::util::ContentHash;
 
-/// Cache key: the full identifying material. Since the cached estimate
-/// is now *returned* on hit (not just counted), the key must be
-/// collision-proof — a truncated 64-bit hash would make a hash
-/// collision silently serve one kernel's estimate for another, so the
-/// key stores the actual (device, label, source) triple and lets the
-/// map's own hashing/equality do exact matching.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
-pub struct Key(String);
-
-/// Build a key from the kernel source, design-point label and device
-/// name (all of which fully determine the estimate). `\u{1f}` (ASCII
-/// unit separator) keeps the components unambiguous.
-pub fn key(kernel_src: &str, point_label: &str, device: &str) -> Key {
-    Key(format!("{device}\u{1f}{point_label}\u{1f}{kernel_src}"))
+/// Cache key: a 128-bit content hash of the identifying material
+/// (device, point label, kernel source — which fully determine the
+/// estimate). Constant-size per entry regardless of kernel size.
+#[derive(Debug, Clone)]
+pub struct Key {
+    hash: ContentHash,
+    /// Collision guard (debug/test builds only): the full key material,
+    /// asserted equal whenever two keys hash alike.
+    #[cfg(any(test, debug_assertions))]
+    material: Arc<str>,
 }
 
-/// Thread-safe estimate cache with hit/miss counters.
+/// Build a key from the kernel source, design-point label and device
+/// name. The hash frames each component by length
+/// ([`ContentHash::of_parts`]), so component boundaries cannot alias.
+pub fn key(kernel_src: &str, point_label: &str, device: &str) -> Key {
+    Key {
+        hash: ContentHash::of_parts(&["estimate", device, point_label, kernel_src]),
+        #[cfg(any(test, debug_assertions))]
+        material: Arc::from(format!("{device}\u{1f}{point_label}\u{1f}{kernel_src}")),
+    }
+}
+
+/// Key over a realised module's canonical text (the [`KernelCache`]
+/// namespace; framed apart from estimate keys by the leading tag).
+fn module_key(text: &str) -> Key {
+    Key {
+        hash: ContentHash::of_parts(&["module", text]),
+        #[cfg(any(test, debug_assertions))]
+        material: Arc::from(text),
+    }
+}
+
+impl PartialEq for Key {
+    fn eq(&self, other: &Key) -> bool {
+        let same = self.hash == other.hash;
+        #[cfg(any(test, debug_assertions))]
+        if same {
+            assert_eq!(self.material, other.material, "128-bit cache-key collision");
+        }
+        same
+    }
+}
+
+impl Eq for Key {}
+
+impl std::hash::Hash for Key {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.hash.hash(state);
+    }
+}
+
+/// Thread-safe estimate cache with hit/miss counters and an LRU entry
+/// bound.
 #[derive(Debug, Default)]
 pub struct EstimateCache {
-    map: Mutex<HashMap<Key, Estimate>>,
-    hits: std::sync::atomic::AtomicU64,
-    misses: std::sync::atomic::AtomicU64,
+    map: Mutex<HashMap<Key, (Estimate, u64)>>,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl EstimateCache {
+    /// Entry bound: the least-recently-used entry is evicted beyond
+    /// this. Estimates are a few hundred bytes; 4096 entries comfortably
+    /// cover a full registry × device × point grid while keeping a
+    /// long-running service's footprint flat.
+    pub const MAX_ENTRIES: usize = 4096;
+
     /// Empty cache.
     pub fn new() -> EstimateCache {
         EstimateCache::default()
@@ -48,22 +105,25 @@ impl EstimateCache {
     where
         F: FnOnce() -> Result<Estimate, String>,
     {
-        if let Some(hit) = self.map.lock().expect("cache poisoned").get(&k).cloned() {
-            self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            return Ok(hit);
+        let stamp = self.tick.fetch_add(1, Ordering::Relaxed);
+        if let Some(slot) = self.map.lock().expect("cache poisoned").get_mut(&k) {
+            slot.1 = stamp;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(slot.0.clone());
         }
-        self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let v = f()?;
-        self.map.lock().expect("cache poisoned").insert(k, v.clone());
+        let mut map = self.map.lock().expect("cache poisoned");
+        if map.len() >= Self::MAX_ENTRIES && !map.contains_key(&k) {
+            evict_lru(&mut map);
+        }
+        map.insert(k, (v.clone(), stamp));
         Ok(v)
     }
 
     /// (hits, misses) so far.
     pub fn stats(&self) -> (u64, u64) {
-        (
-            self.hits.load(std::sync::atomic::Ordering::Relaxed),
-            self.misses.load(std::sync::atomic::Ordering::Relaxed),
-        )
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
     /// Entries currently cached.
@@ -77,24 +137,36 @@ impl EstimateCache {
     }
 }
 
+/// Drop the least-recently-stamped entry (caller holds the lock).
+fn evict_lru<V>(map: &mut HashMap<Key, (V, u64)>) {
+    if let Some(victim) = map.iter().min_by_key(|(_, (_, s))| *s).map(|(k, _)| k.clone()) {
+        map.remove(&victim);
+    }
+}
+
 /// Compiled-kernel cache for the batched simulation engine. Distinct
 /// design points of one sweep realise distinct modules, but repeated
 /// sweeps, degenerate points (a chained point collapsing to the
 /// unchained module), and the many (workload × device) runs of
 /// conformance all replay the same module — and the compiled bytecode
-/// depends on nothing but the module. Keyed by the pretty-printed
-/// module text: collision-proof for the same reason [`Key`] stores full
-/// material (the printer is the parser's inverse, pinned by the
-/// parse→pretty→parse fixed-point tests), and shared via `Arc` so a hit
-/// costs one refcount, not a bytecode clone.
+/// depends on nothing but the module. Keyed by the content hash of the
+/// pretty-printed module text (the printer is the parser's inverse,
+/// pinned by the parse→pretty→parse fixed-point tests) and shared via
+/// `Arc` so a hit costs one refcount, not a bytecode clone. Bounded like
+/// [`EstimateCache`], with a smaller cap — compiled kernels are the
+/// heaviest thing a session retains.
 #[derive(Debug, Default)]
 pub struct KernelCache {
-    map: Mutex<HashMap<String, Arc<CompiledKernel>>>,
-    hits: std::sync::atomic::AtomicU64,
-    misses: std::sync::atomic::AtomicU64,
+    map: Mutex<HashMap<Key, (Arc<CompiledKernel>, u64)>>,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl KernelCache {
+    /// Entry bound (LRU beyond it).
+    pub const MAX_ENTRIES: usize = 512;
+
     /// Empty cache.
     pub fn new() -> KernelCache {
         KernelCache::default()
@@ -107,23 +179,26 @@ impl KernelCache {
     /// during compilation, so concurrent misses may compile twice and
     /// the last insert wins — both products are identical.
     pub fn get_or_compile(&self, m: &Module) -> Result<(Arc<CompiledKernel>, bool), String> {
-        let key = crate::tir::pretty::print(m);
-        if let Some(hit) = self.map.lock().expect("cache poisoned").get(&key).cloned() {
-            self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            return Ok((hit, true));
+        let k = module_key(&crate::tir::pretty::print(m));
+        let stamp = self.tick.fetch_add(1, Ordering::Relaxed);
+        if let Some(slot) = self.map.lock().expect("cache poisoned").get_mut(&k) {
+            slot.1 = stamp;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((Arc::clone(&slot.0), true));
         }
-        self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let ck = Arc::new(CompiledKernel::compile(m)?);
-        self.map.lock().expect("cache poisoned").insert(key, Arc::clone(&ck));
+        let mut map = self.map.lock().expect("cache poisoned");
+        if map.len() >= Self::MAX_ENTRIES && !map.contains_key(&k) {
+            evict_lru(&mut map);
+        }
+        map.insert(k, (Arc::clone(&ck), stamp));
         Ok((ck, false))
     }
 
     /// (hits, misses) so far.
     pub fn stats(&self) -> (u64, u64) {
-        (
-            self.hits.load(std::sync::atomic::Ordering::Relaxed),
-            self.misses.load(std::sync::atomic::Ordering::Relaxed),
-        )
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
     /// Entries currently cached.
@@ -185,6 +260,59 @@ mod tests {
         assert_ne!(key("a", "b", "c"), key("a", "b", "d"));
         assert_ne!(key("a", "b", "c"), key("x", "b", "c"));
         assert_eq!(key("a", "b", "c"), key("a", "b", "c"));
+        // component boundaries cannot alias under length framing
+        assert_ne!(key("ab", "c", "d"), key("a", "bc", "d"));
+    }
+
+    #[test]
+    fn keys_are_constant_size() {
+        // The whole point of the hash key: entry cost no longer scales
+        // with kernel source size (the old Key embedded the source).
+        let small = key("x", "p", "d");
+        let big = key(&"k".repeat(1 << 20), "p", "d");
+        assert_eq!(std::mem::size_of_val(&small), std::mem::size_of_val(&big));
+        assert_ne!(small, big);
+    }
+
+    #[test]
+    fn repeat_sweeps_keep_the_entry_count_bounded() {
+        // A long-running session churning through distinct kernels must
+        // not grow without bound: LRU eviction holds the map at the cap.
+        let c = EstimateCache::new();
+        let n = EstimateCache::MAX_ENTRIES + 100;
+        let e = some_estimate();
+        for i in 0..n {
+            let e = e.clone();
+            c.get_or_insert_with(key(&format!("kernel{i}"), "pipe×1", "s4"), move || Ok(e))
+                .unwrap();
+        }
+        assert_eq!(c.len(), EstimateCache::MAX_ENTRIES);
+        let (_, misses) = c.stats();
+        assert_eq!(misses as usize, n);
+    }
+
+    #[test]
+    fn eviction_is_least_recently_used() {
+        let c = EstimateCache::new();
+        let e = some_estimate();
+        for i in 0..EstimateCache::MAX_ENTRIES {
+            let e = e.clone();
+            c.get_or_insert_with(key(&format!("k{i}"), "p", "d"), move || Ok(e)).unwrap();
+        }
+        // refresh entry 0, then overflow by one: the victim must not be
+        // the freshly-touched entry
+        c.get_or_insert_with(key("k0", "p", "d"), || panic!("k0 is cached")).unwrap();
+        let e2 = e.clone();
+        c.get_or_insert_with(key("fresh", "p", "d"), move || Ok(e2)).unwrap();
+        assert_eq!(c.len(), EstimateCache::MAX_ENTRIES);
+        // k0 survived the eviction…
+        c.get_or_insert_with(key("k0", "p", "d"), || panic!("k0 was evicted")).unwrap();
+        // …and k1 (the oldest untouched entry) did not
+        let (_, m0) = c.stats();
+        let e3 = e.clone();
+        c.get_or_insert_with(key("k1", "p", "d"), move || Ok(e3)).unwrap();
+        let (_, m1) = c.stats();
+        assert_eq!(m1, m0 + 1, "k1 must have been the LRU victim");
     }
 
     #[test]
@@ -213,5 +341,13 @@ mod tests {
         let (ck, _) = c.get_or_compile(&m).unwrap();
         let r = crate::sim::simulate_compiled(&ck, &Device::stratix4(), &w).unwrap();
         assert_eq!(r, crate::sim::simulate(&m, &Device::stratix4(), &w).unwrap());
+    }
+
+    #[test]
+    fn estimate_and_module_keys_never_collide() {
+        // The two namespaces share the Key type; the tag keeps an
+        // estimate key for text T distinct from a module key for T.
+        let t = "some module text";
+        assert_ne!(key(t, "", ""), module_key(t));
     }
 }

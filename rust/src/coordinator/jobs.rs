@@ -14,6 +14,7 @@ use std::time::Instant;
 
 use super::cache::{key, EstimateCache, KernelCache};
 use super::metrics::Metrics;
+use super::persist::{DiskCache, Load, PersistKey};
 use super::pool::Pool;
 use crate::device::Device;
 use crate::dse::{self, Exploration, SweepLimits};
@@ -21,14 +22,24 @@ use crate::estimator::{self, CostDb, Estimate};
 use crate::frontend::{self, DesignPoint, KernelDef, LoweredKernel};
 use crate::sim;
 use crate::tir::Module;
+use crate::transform;
+use crate::util::ContentHash;
 
-/// A parallel exploration session: pool + shared caches (estimates and
-/// compiled simulation kernels) + metrics + the process-wide cost
+/// A parallel exploration session: pool + shared caches (estimates,
+/// compiled simulation kernels, memoised transform passes, optionally a
+/// persistent on-disk estimate cache) + metrics + the process-wide cost
 /// database.
+///
+/// `Clone` shares every cache and the metrics — a cloned session is a
+/// handle onto the same state, which is what the serve loop's
+/// per-request worker threads need.
+#[derive(Clone)]
 pub struct Session {
     pool: Pool,
     cache: Arc<EstimateCache>,
     kernels: Arc<KernelCache>,
+    xforms: Arc<transform::Memo>,
+    disk: Option<Arc<DiskCache>>,
     metrics: Arc<Metrics>,
     db: &'static CostDb,
 }
@@ -81,9 +92,24 @@ impl Session {
             pool,
             cache: Arc::new(EstimateCache::new()),
             kernels: Arc::new(KernelCache::new()),
+            xforms: Arc::new(transform::Memo::new()),
+            disk: None,
             metrics: Arc::new(Metrics::new()),
             db: estimator::shared_cost_db(),
         }
+    }
+
+    /// The same session with a persistent on-disk estimate cache
+    /// attached: every in-memory estimate miss probes (and backfills)
+    /// the cache directory, so estimates survive across processes.
+    pub fn with_disk_cache(mut self, disk: Arc<DiskCache>) -> Session {
+        self.disk = Some(disk);
+        self
+    }
+
+    /// The attached persistent cache, if any.
+    pub fn disk_cache(&self) -> Option<&DiskCache> {
+        self.disk.as_deref()
     }
 
     /// Session metrics.
@@ -164,10 +190,65 @@ impl Session {
         Ok(expl)
     }
 
-    /// Evaluate one design point: cheap per-point lowering, then the
-    /// estimate through the session cache (a hit skips the estimator
-    /// entirely; the wall check re-runs — it is device-cheap and the
-    /// `Candidate` needs the module anyway).
+    /// Per-point lowering through the session's transform memo: a
+    /// recipe sharing a pass-prefix with an already-evaluated one
+    /// replays the prefix from the memo and only runs the suffix live
+    /// (classified into the `xform_memo_*` metrics).
+    fn lower_memoised(&self, lk: &LoweredKernel, point: DesignPoint) -> Result<Module, String> {
+        let (module, memo_use) = frontend::lower::lower_point_memo(lk, point, Some(&self.xforms))?;
+        match memo_use {
+            Some(transform::MemoUse::Full) => self.metrics.xform_memo_full.inc(),
+            Some(transform::MemoUse::Partial) => self.metrics.xform_memo_partial.inc(),
+            Some(transform::MemoUse::Miss) => self.metrics.xform_memo_miss.inc(),
+            None => {}
+        }
+        Ok(module)
+    }
+
+    /// Estimate a realised point, through the persistent cache when one
+    /// is attached. Disk problems never fail the job: a corrupt entry
+    /// is discarded and recomputed (`cache_recovered`), a failed
+    /// write-back is logged and skipped.
+    fn estimate_point(
+        &self,
+        key_src: &str,
+        point: &DesignPoint,
+        dev: &Device,
+        module: &Module,
+    ) -> Result<Estimate, String> {
+        let Some(disk) = &self.disk else {
+            return estimator::estimate_with_db(module, dev, self.db);
+        };
+        let label = point.label();
+        let recipe = point.transforms.name();
+        let pk = PersistKey {
+            kernel_hash: ContentHash::of(key_src.as_bytes()),
+            device: &dev.name,
+            label: &label,
+            recipe: &recipe,
+        };
+        match disk.load(&pk) {
+            Load::Hit(e) => {
+                self.metrics.disk_hits.inc();
+                return Ok(e);
+            }
+            Load::Miss => self.metrics.disk_misses.inc(),
+            Load::Recovered => {
+                self.metrics.cache_recovered.inc();
+                self.metrics.disk_misses.inc();
+            }
+        }
+        let e = estimator::estimate_with_db(module, dev, self.db)?;
+        if let Err(err) = disk.store(&pk, &e) {
+            eprintln!("tytra: persistent cache store failed: {err}");
+        }
+        Ok(e)
+    }
+
+    /// Evaluate one design point: cheap per-point lowering (through the
+    /// transform memo), then the estimate through the session cache (a
+    /// hit skips the estimator entirely; the wall check re-runs — it is
+    /// device-cheap and the `Candidate` needs the module anyway).
     fn evaluate_cached(
         &self,
         key_src: &str,
@@ -176,7 +257,7 @@ impl Session {
         dev: &Device,
     ) -> Result<dse::Candidate, String> {
         self.metrics.jobs.inc();
-        let module = frontend::lower_point(lk, point)?;
+        let module = self.lower_memoised(lk, point)?;
         // Same normalisation as `dse::evaluate_lowered`: a degenerate
         // chained point realises the unchained module and must be
         // keyed/labelled as such (the cache then also short-circuits the
@@ -185,7 +266,7 @@ impl Session {
         let ck = key(key_src, &point.label(), &dev.name);
         let estimate = self
             .cache
-            .get_or_insert_with(ck, || estimator::estimate_with_db(&module, dev, self.db))?;
+            .get_or_insert_with(ck, || self.estimate_point(key_src, &point, dev, &module))?;
         let walls = dse::walls::check(&module, &estimate, dev);
         Ok(dse::Candidate { point, module, estimate, walls })
     }
@@ -210,12 +291,12 @@ impl Session {
         let points = dse::enumerate(limits);
         let results: Vec<Result<ValidatedPoint, String>> = self.pool.map(points, |&point| {
             self.metrics.jobs.inc();
-            let module = frontend::lower_point(&lk, point)?;
+            let module = self.lower_memoised(&lk, point)?;
             let point = frontend::lower::realised_point(&module, point);
             let ck = key(&key_src, &point.label(), &dev.name);
             let estimate = self
                 .cache
-                .get_or_insert_with(ck, || estimator::estimate_with_db(&module, dev, self.db))?;
+                .get_or_insert_with(ck, || self.estimate_point(&key_src, &point, dev, &module))?;
             let compiled = self.compiled_kernel(&module)?;
             let w = sim::Workload::random_for(&module, seed);
             let r = sim::simulate_compiled(&compiled, dev, &w)?;
@@ -227,9 +308,16 @@ impl Session {
                 mems: r.mems,
             })
         });
+        // Degenerate enumerated points (e.g. a reduction kernel clamping
+        // every lanes > 1 back to 1) realise byte-identical modules under
+        // the same realised label — report each realised point once.
         let mut out = Vec::with_capacity(results.len());
+        let mut seen = std::collections::BTreeSet::new();
         for r in results {
-            out.push(r?);
+            let v = r?;
+            if seen.insert(v.point.label()) {
+                out.push(v);
+            }
         }
         self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
         self.metrics.sweeps.inc();
@@ -472,5 +560,136 @@ mod tests {
         assert_eq!(session.metrics().sweeps.get(), 2);
         // 6 points (2 pipe + 2 comb + 2 seq) × 2 devices
         assert_eq!(session.metrics().jobs.get(), 12);
+    }
+
+    #[test]
+    fn transform_sweeps_replay_the_pass_memo() {
+        // Single worker: deterministic evaluation order, so the
+        // prefix-sharing assertions below are not racy.
+        let src = simple_kernel_source();
+        let k = parse_kernel(src).unwrap();
+        let dev = Device::stratix4();
+        let limits = SweepLimits {
+            max_lanes: 2,
+            max_dv: 2,
+            include_transforms: true,
+            ..SweepLimits::default()
+        };
+        let session = Session::new(1);
+        let first = session.explore(src, &k, &dev, &limits).unwrap();
+        let m = session.metrics();
+        assert!(m.xform_memo_miss.get() > 0, "cold sweep runs passes live");
+        assert!(
+            m.xform_memo_partial.get() > 0,
+            "recipes share pass prefixes (simplify ⊂ shiftadd ⊂ …), so later \
+             recipes replay the shared prefix and only run their suffix live"
+        );
+        let miss0 = m.xform_memo_miss.get();
+        let second = session.explore(src, &k, &dev, &limits).unwrap();
+        assert_eq!(m.xform_memo_miss.get(), miss0, "warm sweep never re-runs a pass");
+        assert!(m.xform_memo_full.get() > 0, "warm recipe points replay entirely");
+        assert!(m.summary().contains(&format!("memo_full={}", m.xform_memo_full.get())));
+
+        // Memoised results must equal the memo-free oracle exactly.
+        let db = CostDb::default();
+        let direct: Vec<dse::Candidate> = dse::enumerate(&limits)
+            .into_iter()
+            .map(|p| dse::evaluate_point(&k, p, &dev, &db).unwrap())
+            .collect();
+        let oracle = dse::assemble(direct, &dev);
+        for run in [&first, &second] {
+            assert_eq!(oracle.candidates.len(), run.candidates.len());
+            for (a, b) in oracle.candidates.iter().zip(&run.candidates) {
+                assert_eq!(a.point, b.point);
+                assert_eq!(a.estimate, b.estimate, "{}", a.point.label());
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_cache_serves_warm_sweeps_bit_identically() {
+        let dir = std::env::temp_dir()
+            .join(format!("tytra-jobs-disk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let disk =
+            Arc::new(DiskCache::open(&dir, DiskCache::DEFAULT_BUDGET_BYTES).unwrap());
+        let src = simple_kernel_source();
+        let k = parse_kernel(src).unwrap();
+        let dev = Device::stratix4();
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
+
+        let cold = Session::new(2).with_disk_cache(disk.clone());
+        let a = cold.explore(src, &k, &dev, &limits).unwrap();
+        assert_eq!(cold.metrics().disk_hits.get(), 0, "cold directory has no entries");
+        assert_eq!(cold.metrics().disk_misses.get(), 6);
+        assert_eq!(cold.metrics().cache_recovered.get(), 0);
+        assert_eq!(disk.entries().len(), 6, "every miss wrote back");
+
+        // A fresh session over the same directory models a process
+        // restart: the in-memory cache is empty, the disk is warm.
+        let warm = Session::new(2).with_disk_cache(disk.clone());
+        let b = warm.explore(src, &k, &dev, &limits).unwrap();
+        assert_eq!(warm.metrics().disk_hits.get(), 6, "every estimate came off disk");
+        assert_eq!(warm.metrics().disk_misses.get(), 0);
+        assert_eq!(warm.metrics().cache_recovered.get(), 0);
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.point, y.point);
+            assert_eq!(x.estimate, y.estimate, "{}", x.point.label());
+            assert_eq!(x.estimate.ewgt.to_bits(), y.estimate.ewgt.to_bits());
+            assert_eq!(x.estimate.fmax_mhz.to_bits(), y.estimate.fmax_mhz.to_bits());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_disk_entries_degrade_to_recompute() {
+        let dir = std::env::temp_dir()
+            .join(format!("tytra-jobs-corrupt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let disk =
+            Arc::new(DiskCache::open(&dir, DiskCache::DEFAULT_BUDGET_BYTES).unwrap());
+        let src = simple_kernel_source();
+        let k = parse_kernel(src).unwrap();
+        let dev = Device::stratix4();
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
+        let a = Session::new(2).with_disk_cache(disk.clone()).explore(src, &k, &dev, &limits).unwrap();
+
+        // Truncate one entry; the warm sweep must recover it silently.
+        let victim = disk.entries().remove(0);
+        let bytes = std::fs::read(&victim).unwrap();
+        std::fs::write(&victim, &bytes[..bytes.len() / 2]).unwrap();
+        let warm = Session::new(2).with_disk_cache(disk.clone());
+        let b = warm.explore(src, &k, &dev, &limits).unwrap();
+        assert_eq!(warm.metrics().cache_recovered.get(), 1);
+        assert_eq!(warm.metrics().disk_hits.get(), 5);
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.estimate, y.estimate, "{}", x.point.label());
+        }
+        assert_eq!(disk.entries().len(), 6, "the recovered entry was rewritten");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reduction_sweep_reports_each_realised_point_once() {
+        // A reduction kernel clamps every lanes/dv > 1 back to 1, so the
+        // 6 enumerated points realise only 3 distinct modules; the
+        // validated sweep must not report duplicate rows.
+        let (_, k) = crate::kernels::resolve_specs(&["builtin:dotn".to_string()])
+            .unwrap()
+            .remove(0);
+        let dev = Device::stratix4();
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
+        let session = Session::new(2);
+        let v = session.validate_sweep(&k, &dev, &limits, 3).unwrap();
+        let labels: Vec<String> = v.iter().map(|p| p.point.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(labels.len(), dedup.len(), "duplicate realised labels: {labels:?}");
+        assert!(labels.len() < 6, "clamped points collapsed: {labels:?}");
+        // all six enumerated points were still evaluated (and the
+        // duplicates served from the caches)
+        assert_eq!(session.metrics().jobs.get(), 6);
     }
 }

@@ -35,6 +35,23 @@ pub struct Metrics {
     pub sim_compiles: Counter,
     /// Compiled-kernel cache hits (a hit skips the whole compile).
     pub sim_cache_hits: Counter,
+    /// Persistent-cache hits: estimates served from the on-disk cache
+    /// (`coordinator::persist`) instead of recomputed.
+    pub disk_hits: Counter,
+    /// Persistent-cache misses (entry absent; estimate recomputed and
+    /// written back).
+    pub disk_misses: Counter,
+    /// Persistent-cache recoveries: a corrupt/truncated/stale entry was
+    /// discarded and the estimate recomputed — the never-panic,
+    /// never-serve-stale-bytes degradation path.
+    pub cache_recovered: Counter,
+    /// Transform-recipe evaluations fully replayed from the pass memo.
+    pub xform_memo_full: Counter,
+    /// Recipe evaluations sharing a pass-prefix with an earlier one:
+    /// the prefix replayed, only the suffix ran live.
+    pub xform_memo_partial: Counter,
+    /// Recipe evaluations that ran entirely live.
+    pub xform_memo_miss: Counter,
 }
 
 impl Metrics {
@@ -46,14 +63,30 @@ impl Metrics {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         let sweeps = self.sweeps.get().max(1);
-        format!(
+        let mut s = format!(
             "jobs={} sweeps={} avg_sweep={:.1}ms sim_compiles={} sim_cache_hits={}",
             self.jobs.get(),
             self.sweeps.get(),
             self.sweep_time.get() as f64 / sweeps as f64 / 1000.0,
             self.sim_compiles.get(),
             self.sim_cache_hits.get()
-        )
+        );
+        // The service-era counters only appear once their feature was
+        // touched, keeping the plain-CLI summary line stable.
+        if self.disk_hits.get() + self.disk_misses.get() + self.cache_recovered.get() > 0 {
+            s.push_str(&format!(
+                " disk_hits={} disk_misses={} cache_recovered={}",
+                self.disk_hits.get(),
+                self.disk_misses.get(),
+                self.cache_recovered.get()
+            ));
+        }
+        let (mf, mp, mm) =
+            (self.xform_memo_full.get(), self.xform_memo_partial.get(), self.xform_memo_miss.get());
+        if mf + mp + mm > 0 {
+            s.push_str(&format!(" memo_full={mf} memo_partial={mp} memo_miss={mm}"));
+        }
+        s
     }
 }
 
@@ -72,6 +105,21 @@ mod tests {
         m.sim_compiles.inc();
         m.sim_cache_hits.add(3);
         assert!(m.summary().contains("sim_compiles=1 sim_cache_hits=3"));
+    }
+
+    #[test]
+    fn service_counters_appear_only_when_used() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("disk_hits"), "untouched features stay off the line");
+        assert!(!m.summary().contains("memo_full"));
+        m.disk_misses.inc();
+        m.disk_hits.add(2);
+        m.cache_recovered.inc();
+        assert!(m.summary().contains("disk_hits=2 disk_misses=1 cache_recovered=1"), "{}", m.summary());
+        m.xform_memo_full.inc();
+        m.xform_memo_partial.add(2);
+        m.xform_memo_miss.add(3);
+        assert!(m.summary().contains("memo_full=1 memo_partial=2 memo_miss=3"), "{}", m.summary());
     }
 
     #[test]

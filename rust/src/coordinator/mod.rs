@@ -14,9 +14,12 @@
 pub mod cache;
 pub mod jobs;
 pub mod metrics;
+pub mod persist;
 pub mod pool;
+pub mod serve;
 
 pub use cache::{EstimateCache, KernelCache};
 pub use jobs::{BatchResult, Session, ValidatedPoint};
 pub use metrics::Metrics;
+pub use persist::DiskCache;
 pub use pool::Pool;

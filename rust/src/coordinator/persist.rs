@@ -1,0 +1,569 @@
+//! Persistent on-disk estimate cache: the durable half of the sweep
+//! service. Estimates survive the process, so iterating sessions (and
+//! `tytra serve` restarts) re-open a warm cache instead of re-running
+//! the estimator — the incremental-iteration loop TyBEC's persisted
+//! cost database and BEE's incremental compilation both motivate.
+//!
+//! ## Layout
+//!
+//! One file per entry under the cache directory (default
+//! `~/.tytra/cache/`, override with `--cache-dir`), named by the 128-bit
+//! content hash of the key `(kernel-hash, device, point-label,
+//! transform-recipe)`: `<hex32>.bin`. Writes go to a unique temp file in
+//! the same directory and `rename(2)` into place, so readers — including
+//! concurrent writers of the same key — only ever observe complete
+//! files.
+//!
+//! ## Entry format (version 1, little-endian)
+//!
+//! ```text
+//! magic   "TYTRA"                      5 bytes
+//! version u8 = 1
+//! key     4 × (u32 len + bytes)        kernel-hash hex, device, label, recipe
+//! payload the Estimate, field by field (f64 via to_bits; Op as mnemonic)
+//! check   u64 FNV-1a over everything above
+//! ```
+//!
+//! The embedded key material is verified on load: a filename-hash
+//! collision (or a file copied between keys) can therefore never serve
+//! a wrong estimate — it degrades to a recompute.
+//!
+//! ## Corruption tolerance
+//!
+//! *Any* load failure — truncation, a wrong magic/version byte, a
+//! checksum mismatch, key-material drift — logs to stderr, deletes the
+//! bad file (best-effort) and reports [`Load::Recovered`]; the caller
+//! recomputes and rewrites. The cache never panics on a bad file and
+//! never serves stale bytes.
+//!
+//! ## Budget
+//!
+//! [`DiskCache::enforce_budget`] keeps the directory under an LRU byte
+//! budget: entries are aged by file mtime, and a load hit re-writes the
+//! entry (atomically, same bytes) to refresh its age, so eviction drops
+//! the least-recently-*used* entry, not merely the oldest-written.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::estimator::{ConfigClass, Estimate, ReduceInfo, Resources, StructInfo};
+use crate::tir::{Op, ReduceShape};
+use crate::util::hash::{fnv64, ContentHash};
+
+/// Magic prefix of every cache entry.
+const MAGIC: &[u8; 5] = b"TYTRA";
+
+/// Identity of one persisted estimate.
+#[derive(Debug, Clone)]
+pub struct PersistKey<'a> {
+    /// Content hash of the kernel source (or definition) text.
+    pub kernel_hash: ContentHash,
+    /// Device name.
+    pub device: &'a str,
+    /// Realised design-point label.
+    pub label: &'a str,
+    /// Transform-recipe name ("" when the point carries none).
+    pub recipe: &'a str,
+}
+
+impl PersistKey<'_> {
+    /// The entry's file stem: hash of the full key tuple.
+    fn stem(&self) -> String {
+        ContentHash::of_parts(&["tytra-entry", &self.kernel_hash.hex(), self.device, self.label, self.recipe])
+            .hex()
+    }
+}
+
+/// Outcome of a cache probe.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Load {
+    /// Entry present and intact.
+    Hit(Estimate),
+    /// No entry for this key.
+    Miss,
+    /// An entry existed but was corrupt/truncated/stale; it has been
+    /// discarded. Callers recompute and count `cache_recovered`.
+    Recovered,
+}
+
+/// A persistent estimate cache rooted at one directory.
+#[derive(Debug)]
+pub struct DiskCache {
+    dir: PathBuf,
+    budget_bytes: u64,
+}
+
+/// Distinguishes concurrent writers' temp files (pid handles processes,
+/// this counter handles threads).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl DiskCache {
+    /// Current entry-format version byte.
+    pub const FORMAT_VERSION: u8 = 1;
+
+    /// Default LRU byte budget (64 MiB ≈ hundreds of thousands of
+    /// entries — a cache, not an archive).
+    pub const DEFAULT_BUDGET_BYTES: u64 = 64 * 1024 * 1024;
+
+    /// Open (creating if needed) a cache under `dir`.
+    pub fn open(dir: impl Into<PathBuf>, budget_bytes: u64) -> Result<DiskCache, String> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir).map_err(|e| format!("cache dir {}: {e}", dir.display()))?;
+        Ok(DiskCache { dir, budget_bytes: budget_bytes.max(1) })
+    }
+
+    /// The conventional per-user location: `$HOME/.tytra/cache`.
+    /// `None` when the environment defines no home directory.
+    pub fn default_dir() -> Option<PathBuf> {
+        std::env::var_os("HOME").map(|h| PathBuf::from(h).join(".tytra").join("cache"))
+    }
+
+    /// The cache's root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Entry files currently on disk (any order).
+    pub fn entries(&self) -> Vec<PathBuf> {
+        let mut out = Vec::new();
+        if let Ok(rd) = fs::read_dir(&self.dir) {
+            for e in rd.flatten() {
+                let p = e.path();
+                if p.extension().map(|x| x == "bin").unwrap_or(false) {
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+
+    /// Probe the cache for `key`. Never panics; see [`Load`].
+    pub fn load(&self, key: &PersistKey) -> Load {
+        let path = self.dir.join(format!("{}.bin", key.stem()));
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Load::Miss,
+            Err(e) => {
+                eprintln!("tytra: cache entry {} unreadable ({e}); recomputing", path.display());
+                let _ = fs::remove_file(&path);
+                return Load::Recovered;
+            }
+        };
+        match decode(&bytes, key) {
+            Ok(est) => {
+                // Refresh the entry's LRU age (atomic same-byte rewrite;
+                // best-effort — a failed touch only ages the entry).
+                let _ = self.write_atomic(&path, &bytes);
+                Load::Hit(est)
+            }
+            Err(why) => {
+                eprintln!("tytra: cache entry {} invalid ({why}); recomputing", path.display());
+                let _ = fs::remove_file(&path);
+                Load::Recovered
+            }
+        }
+    }
+
+    /// Write (or overwrite) the entry for `key`, then enforce the byte
+    /// budget.
+    pub fn store(&self, key: &PersistKey, est: &Estimate) -> Result<(), String> {
+        let path = self.dir.join(format!("{}.bin", key.stem()));
+        self.write_atomic(&path, &encode(key, est))?;
+        self.enforce_budget();
+        Ok(())
+    }
+
+    fn write_atomic(&self, path: &Path, bytes: &[u8]) -> Result<(), String> {
+        let tmp = self.dir.join(format!(
+            ".tmp.{}.{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let write = (|| -> std::io::Result<()> {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+            fs::rename(&tmp, path)
+        })();
+        if let Err(e) = write {
+            let _ = fs::remove_file(&tmp);
+            return Err(format!("cache write {}: {e}", path.display()));
+        }
+        Ok(())
+    }
+
+    /// Evict least-recently-used entries (by mtime) until the directory
+    /// fits the byte budget. Best-effort: IO races with concurrent
+    /// writers are ignored.
+    pub fn enforce_budget(&self) {
+        let mut entries: Vec<(PathBuf, u64, std::time::SystemTime)> = self
+            .entries()
+            .into_iter()
+            .filter_map(|p| {
+                let md = fs::metadata(&p).ok()?;
+                Some((p, md.len(), md.modified().ok()?))
+            })
+            .collect();
+        let mut total: u64 = entries.iter().map(|(_, len, _)| len).sum();
+        if total <= self.budget_bytes {
+            return;
+        }
+        entries.sort_by_key(|(_, _, mtime)| *mtime);
+        for (path, len, _) in entries {
+            if total <= self.budget_bytes {
+                break;
+            }
+            if fs::remove_file(&path).is_ok() {
+                total = total.saturating_sub(len);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary entry encoding
+// ---------------------------------------------------------------------------
+
+fn encode(key: &PersistKey, est: &Estimate) -> Vec<u8> {
+    let mut out = Vec::with_capacity(256);
+    out.extend_from_slice(MAGIC);
+    out.push(DiskCache::FORMAT_VERSION);
+    put_str(&mut out, &key.kernel_hash.hex());
+    put_str(&mut out, key.device);
+    put_str(&mut out, key.label);
+    put_str(&mut out, key.recipe);
+
+    out.push(class_byte(est.class));
+    out.push(class_byte(est.info.class));
+    for v in [
+        est.info.lanes,
+        est.info.dv,
+        est.info.datapath_depth,
+        est.info.window_span,
+        est.info.seq_ni,
+        est.info.work_items,
+        est.info.repeat,
+    ] {
+        put_u64(&mut out, v);
+    }
+    match &est.info.reduce {
+        None => out.push(0),
+        Some(r) => {
+            out.push(1);
+            out.push(match r.shape {
+                ReduceShape::Acc => 0,
+                ReduceShape::Tree => 1,
+            });
+            put_str(&mut out, &r.op.to_string());
+            out.extend_from_slice(&r.width.to_le_bytes());
+            put_u64(&mut out, r.seg);
+        }
+    }
+    for v in [
+        est.info.comb_depth,
+        est.info.comb_carry,
+        est.resources.alut,
+        est.resources.reg,
+        est.resources.bram_bits,
+        est.resources.dsp,
+        est.cycles_per_pass,
+        est.cycles_per_workgroup,
+        est.fmax_mhz.to_bits(),
+        est.ewgt.to_bits(),
+    ] {
+        put_u64(&mut out, v);
+    }
+    let check = fnv64(&out);
+    put_u64(&mut out, check);
+    out
+}
+
+fn decode(bytes: &[u8], key: &PersistKey) -> Result<Estimate, String> {
+    if bytes.len() < MAGIC.len() + 1 + 8 {
+        return Err("truncated header".into());
+    }
+    let (body, check_bytes) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(check_bytes.try_into().expect("8-byte slice"));
+    if fnv64(body) != stored {
+        return Err("checksum mismatch".into());
+    }
+    let mut r = Reader { b: body, pos: 0 };
+    if r.take(MAGIC.len())? != MAGIC {
+        return Err("bad magic".into());
+    }
+    let version = r.u8()?;
+    if version != DiskCache::FORMAT_VERSION {
+        return Err(format!("unsupported version {version}"));
+    }
+    let (kh, dev, label, recipe) = (r.str()?, r.str()?, r.str()?, r.str()?);
+    if kh != key.kernel_hash.hex() || dev != key.device || label != key.label || recipe != key.recipe {
+        return Err("key material mismatch (stale or colliding entry)".into());
+    }
+
+    let class = class_from_byte(r.u8()?)?;
+    let info_class = class_from_byte(r.u8()?)?;
+    let lanes = r.u64()?;
+    let dv = r.u64()?;
+    let datapath_depth = r.u64()?;
+    let window_span = r.u64()?;
+    let seq_ni = r.u64()?;
+    let work_items = r.u64()?;
+    let repeat = r.u64()?;
+    let reduce = match r.u8()? {
+        0 => None,
+        1 => {
+            let shape = match r.u8()? {
+                0 => ReduceShape::Acc,
+                1 => ReduceShape::Tree,
+                b => return Err(format!("bad reduce shape byte {b}")),
+            };
+            let op_name = r.str()?;
+            let op = Op::parse(&op_name).ok_or_else(|| format!("bad op mnemonic `{op_name}`"))?;
+            let width = u32::from_le_bytes(r.take(4)?.try_into().expect("4-byte slice"));
+            let seg = r.u64()?;
+            Some(ReduceInfo { shape, op, width, seg })
+        }
+        b => return Err(format!("bad reduce flag byte {b}")),
+    };
+    let comb_depth = r.u64()?;
+    let comb_carry = r.u64()?;
+    let resources = Resources { alut: r.u64()?, reg: r.u64()?, bram_bits: r.u64()?, dsp: r.u64()? };
+    let cycles_per_pass = r.u64()?;
+    let cycles_per_workgroup = r.u64()?;
+    let fmax_mhz = f64::from_bits(r.u64()?);
+    let ewgt = f64::from_bits(r.u64()?);
+    if r.pos != body.len() {
+        return Err("trailing bytes".into());
+    }
+    Ok(Estimate {
+        class,
+        info: StructInfo {
+            class: info_class,
+            lanes,
+            dv,
+            datapath_depth,
+            window_span,
+            seq_ni,
+            work_items,
+            repeat,
+            reduce,
+            comb_depth,
+            comb_carry,
+        },
+        resources,
+        cycles_per_pass,
+        cycles_per_workgroup,
+        fmax_mhz,
+        ewgt,
+    })
+}
+
+fn class_byte(c: ConfigClass) -> u8 {
+    c as u8
+}
+
+fn class_from_byte(b: u8) -> Result<ConfigClass, String> {
+    Ok(match b {
+        0 => ConfigClass::C0,
+        1 => ConfigClass::C1,
+        2 => ConfigClass::C2,
+        3 => ConfigClass::C3,
+        4 => ConfigClass::C4,
+        5 => ConfigClass::C5,
+        6 => ConfigClass::C6,
+        b => return Err(format!("bad config-class byte {b}")),
+    })
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.b.len() {
+            return Err("truncated entry".into());
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let len = u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")) as usize;
+        if len > self.b.len() {
+            return Err("string length exceeds entry".into());
+        }
+        String::from_utf8(self.take(len)?.to_vec()).map_err(|_| "non-UTF-8 string".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        std::env::temp_dir().join(format!(
+            "tytra-persist-{tag}-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    fn some_estimate() -> Estimate {
+        let m = crate::tir::parse_and_validate(&crate::tir::examples::fig7_pipe()).unwrap();
+        crate::estimator::estimate(&m, &Device::stratix4()).unwrap()
+    }
+
+    fn reducing_estimate() -> Estimate {
+        let (_, k) = crate::kernels::resolve_specs(&["builtin:dotn".to_string()]).unwrap().remove(0);
+        let m = crate::frontend::lower(&k, crate::frontend::DesignPoint::c2().tree()).unwrap();
+        crate::estimator::estimate(&m, &Device::stratix4()).unwrap()
+    }
+
+    fn a_key() -> PersistKey<'static> {
+        PersistKey {
+            kernel_hash: ContentHash::of(b"kernel text"),
+            device: "stratix4",
+            label: "pipe×2+tree",
+            recipe: "simplify",
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        for est in [some_estimate(), reducing_estimate()] {
+            let key = a_key();
+            let bytes = encode(&key, &est);
+            let back = decode(&bytes, &key).unwrap();
+            // PartialEq covers every field incl. exact f64 bits via the
+            // to_bits encoding
+            assert_eq!(est, back);
+            assert_eq!(est.fmax_mhz.to_bits(), back.fmax_mhz.to_bits());
+            assert_eq!(est.ewgt.to_bits(), back.ewgt.to_bits());
+        }
+    }
+
+    #[test]
+    fn store_then_load_hits(){
+        let dir = tmp_dir("hit");
+        let c = DiskCache::open(&dir, DiskCache::DEFAULT_BUDGET_BYTES).unwrap();
+        let est = some_estimate();
+        let key = a_key();
+        assert_eq!(c.load(&key), Load::Miss);
+        c.store(&key, &est).unwrap();
+        assert_eq!(c.load(&key), Load::Hit(est));
+        assert_eq!(c.entries().len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_key_material_never_serves_stale_bytes() {
+        let dir = tmp_dir("stale");
+        let c = DiskCache::open(&dir, DiskCache::DEFAULT_BUDGET_BYTES).unwrap();
+        let est = some_estimate();
+        let key = a_key();
+        c.store(&key, &est).unwrap();
+        // copy the entry onto a different key's filename — a simulated
+        // filename-hash collision
+        let other = PersistKey { label: "pipe×4", ..a_key() };
+        let src = c.entries().remove(0);
+        fs::copy(&src, dir.join(format!("{}.bin", other.stem()))).unwrap();
+        assert_eq!(c.load(&other), Load::Recovered, "embedded key must be verified");
+        // the bad file was discarded; a re-probe is a clean miss
+        assert_eq!(c.load(&other), Load::Miss);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_classes_recover_not_panic() {
+        let est = some_estimate();
+        let key = a_key();
+        let good = encode(&key, &est);
+        // truncations at every prefix length
+        for n in 0..good.len() {
+            assert!(decode(&good[..n], &key).is_err(), "prefix {n} must not decode");
+        }
+        // wrong version byte (checksum re-stamped so the version check
+        // itself is exercised)
+        let mut v = good.clone();
+        v[MAGIC.len()] = 99;
+        let body_len = v.len() - 8;
+        let check = fnv64(&v[..body_len]).to_le_bytes();
+        v[body_len..].copy_from_slice(&check);
+        let e = decode(&v, &key).unwrap_err();
+        assert!(e.contains("version"), "{e}");
+        // every single-byte flip is caught (checksum or field validation)
+        let mut flipped = good.clone();
+        flipped[good.len() / 2] ^= 0xff;
+        assert!(decode(&flipped, &key).is_err());
+    }
+
+    #[test]
+    fn budget_evicts_least_recently_used() {
+        let dir = tmp_dir("budget");
+        // tiny budget: roughly two entries' worth
+        let est = some_estimate();
+        let probe = encode(&a_key(), &est).len() as u64;
+        let c = DiskCache::open(&dir, probe * 2 + probe / 2).unwrap();
+        let keys: Vec<PersistKey> = vec![
+            PersistKey { label: "pipe×1", ..a_key() },
+            PersistKey { label: "pipe×2", ..a_key() },
+            PersistKey { label: "pipe×4", ..a_key() },
+        ];
+        for k in &keys {
+            c.store(k, &est).unwrap();
+            // keep mtimes strictly ordered even on coarse filesystems
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        // over budget after the third store: at most two entries remain,
+        // and the newest one always survives
+        assert!(c.entries().len() <= 2, "{:?}", c.entries());
+        assert_eq!(c.load(&keys[2]), Load::Hit(est));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_writers_leave_a_loadable_entry() {
+        let dir = tmp_dir("race");
+        let c = DiskCache::open(&dir, DiskCache::DEFAULT_BUDGET_BYTES).unwrap();
+        let est = some_estimate();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..16 {
+                        c.store(&a_key(), &est).unwrap();
+                        match c.load(&a_key()) {
+                            Load::Hit(e) => assert_eq!(e, est),
+                            other => panic!("load during concurrent writes: {other:?}"),
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(c.load(&a_key()), Load::Hit(est));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

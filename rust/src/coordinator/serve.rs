@@ -1,0 +1,475 @@
+//! `tytra serve` — the long-running sweep service.
+//!
+//! A line-delimited-JSON request loop: one request per line on stdin
+//! (or a Unix socket with `--socket`), one response per line on stdout.
+//! The [`Session`] — in-memory caches, transform memo, persistent disk
+//! cache — lives for the whole process, so consecutive requests hit
+//! warm caches instead of recomputing, which is the point of serving at
+//! all.
+//!
+//! ## Protocol
+//!
+//! Requests are JSON objects with an `op` and an optional `id` (echoed
+//! back verbatim so clients can match responses):
+//!
+//! ```text
+//! {"id": 1, "op": "sweep", "kernels": ["builtin:simple"], "devices": ["stratix4"], "max_lanes": 4}
+//! {"id": 2, "op": "ping"}
+//! {"id": 3, "op": "metrics"}
+//! {"id": 4, "op": "shutdown"}
+//! ```
+//!
+//! Responses are `{"id": …, "ok": true, "result": …}` or
+//! `{"id": …, "ok": false, "error": "…"}`. A `sweep` result carries the
+//! exact same schema as `tytra sweep --json` (rendered by
+//! [`render_sweep_json`], which the CLI shares), compacted onto one
+//! line for the framing. Sweep knobs mirror the CLI flags: `kernels`
+//! (required), `devices`, `max_lanes`, `max_dv`, `dense`, `pipes_only`,
+//! `chain`, `reduce`, `transforms`.
+//!
+//! ## Lifecycle
+//!
+//! - A malformed line (bad JSON, unknown op, bad arguments) produces an
+//!   `ok: false` response and the loop keeps serving — clients cannot
+//!   crash the service.
+//! - `sweep` runs on a worker thread under a per-request timeout; on
+//!   expiry the client gets an error response and the loop moves on
+//!   (the abandoned computation finishes in the background and is
+//!   dropped — its cache writes still land, so a retry is cheap).
+//! - Shutdown is graceful on EOF, a `shutdown` request, or SIGTERM: the
+//!   in-flight request is answered before the loop exits. (SIGTERM is
+//!   observed at request boundaries; an idle blocking read ends at the
+//!   next line or EOF.)
+
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use super::jobs::BatchResult;
+use super::Session;
+use crate::device::Device;
+use crate::dse::SweepLimits;
+use crate::frontend::KernelDef;
+use crate::util::json::{escape, Json};
+
+/// SIGTERM latch: set from the signal handler, checked at request
+/// boundaries.
+static TERM: AtomicBool = AtomicBool::new(false);
+
+/// Has a graceful-shutdown signal been received?
+pub fn term_requested() -> bool {
+    TERM.load(Ordering::SeqCst)
+}
+
+extern "C" fn on_term(_sig: i32) {
+    TERM.store(true, Ordering::SeqCst);
+}
+
+/// Install the SIGTERM handler (no-op off Unix).
+pub fn install_sigterm() {
+    #[cfg(unix)]
+    {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_term as usize);
+        }
+    }
+}
+
+/// Serve requests from `input` to `out` until EOF, a `shutdown`
+/// request, or SIGTERM. Returns the number of responses written.
+pub fn serve_lines<R: BufRead, W: Write>(
+    session: &Session,
+    input: R,
+    out: &mut W,
+    timeout: Duration,
+) -> Result<u64, String> {
+    let mut served = 0u64;
+    for line in input.lines() {
+        if term_requested() {
+            break;
+        }
+        let line = line.map_err(|e| format!("request stream: {e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, shutdown) = handle_request(session, &line, timeout);
+        writeln!(out, "{resp}").map_err(|e| format!("response stream: {e}"))?;
+        let _ = out.flush();
+        served += 1;
+        if shutdown {
+            break;
+        }
+    }
+    Ok(served)
+}
+
+/// Serve stdin → stdout (the `tytra serve` default transport).
+pub fn run_stdio(session: &Session, timeout: Duration) -> Result<u64, String> {
+    install_sigterm();
+    let stdin = std::io::stdin();
+    let mut stdout = std::io::stdout();
+    serve_lines(session, stdin.lock(), &mut stdout, timeout)
+}
+
+/// Serve over a Unix socket: accept one connection at a time, run the
+/// line loop on it, repeat until SIGTERM. Unix only.
+#[cfg(unix)]
+pub fn run_socket(session: &Session, path: &std::path::Path, timeout: Duration) -> Result<u64, String> {
+    use std::os::unix::net::UnixListener;
+    install_sigterm();
+    let _ = std::fs::remove_file(path);
+    let listener =
+        UnixListener::bind(path).map_err(|e| format!("socket {}: {e}", path.display()))?;
+    let mut served = 0u64;
+    for conn in listener.incoming() {
+        if term_requested() {
+            break;
+        }
+        let conn = conn.map_err(|e| format!("accept: {e}"))?;
+        let reader = std::io::BufReader::new(
+            conn.try_clone().map_err(|e| format!("socket clone: {e}"))?,
+        );
+        let mut writer = conn;
+        served += serve_lines(session, reader, &mut writer, timeout)?;
+    }
+    let _ = std::fs::remove_file(path);
+    Ok(served)
+}
+
+/// Handle one request line. Never panics and never returns a non-JSON
+/// line; the boolean says whether the client asked the service to shut
+/// down.
+pub fn handle_request(session: &Session, line: &str, timeout: Duration) -> (String, bool) {
+    let req = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return (respond_err("null", &format!("bad request: {e}")), false),
+    };
+    let id = id_of(&req);
+    let op = match req.get("op").and_then(Json::as_str) {
+        Some(op) => op.to_string(),
+        None => return (respond_err(&id, "missing `op` (sweep|ping|metrics|shutdown)"), false),
+    };
+    match op.as_str() {
+        "ping" => (format!("{{\"id\": {id}, \"ok\": true, \"result\": \"pong\"}}"), false),
+        "metrics" => (
+            format!(
+                "{{\"id\": {id}, \"ok\": true, \"result\": {}}}",
+                metrics_json(session)
+            ),
+            false,
+        ),
+        "shutdown" => {
+            (format!("{{\"id\": {id}, \"ok\": true, \"result\": \"shutting down\"}}"), true)
+        }
+        "sweep" => {
+            // The sweep runs on its own thread so a pathological request
+            // cannot wedge the loop past the timeout. The session clone
+            // shares all caches, so even an abandoned sweep warms them.
+            let worker = session.clone();
+            let (tx, rx) = mpsc::channel();
+            std::thread::spawn(move || {
+                let _ = tx.send(op_sweep(&worker, &req));
+            });
+            match rx.recv_timeout(timeout) {
+                Ok(Ok(result)) => {
+                    (format!("{{\"id\": {id}, \"ok\": true, \"result\": {result}}}"), false)
+                }
+                Ok(Err(e)) => (respond_err(&id, &e), false),
+                Err(_) => (
+                    respond_err(&id, &format!("timeout after {}ms", timeout.as_millis())),
+                    false,
+                ),
+            }
+        }
+        other => (respond_err(&id, &format!("unknown op `{other}`")), false),
+    }
+}
+
+/// Render the request's `id` for echoing: a JSON value, `null` when
+/// absent or non-scalar.
+fn id_of(req: &Json) -> String {
+    match req.get("id") {
+        Some(Json::Num(n)) if n.fract() == 0.0 && n.abs() < 9.0e15 => format!("{}", *n as i64),
+        Some(Json::Num(n)) => format!("{n}"),
+        Some(Json::Str(s)) => format!("\"{}\"", escape(s)),
+        Some(Json::Bool(b)) => b.to_string(),
+        _ => "null".to_string(),
+    }
+}
+
+fn respond_err(id: &str, msg: &str) -> String {
+    format!("{{\"id\": {id}, \"ok\": false, \"error\": \"{}\"}}", escape(msg))
+}
+
+fn metrics_json(session: &Session) -> String {
+    let m = session.metrics();
+    format!(
+        "{{\"summary\": \"{}\", \"jobs\": {}, \"sweeps\": {}, \"sim_compiles\": {}, \
+         \"sim_cache_hits\": {}, \"disk_hits\": {}, \"disk_misses\": {}, \
+         \"cache_recovered\": {}, \"memo_full\": {}, \"memo_partial\": {}, \"memo_miss\": {}}}",
+        escape(&m.summary()),
+        m.jobs.get(),
+        m.sweeps.get(),
+        m.sim_compiles.get(),
+        m.sim_cache_hits.get(),
+        m.disk_hits.get(),
+        m.disk_misses.get(),
+        m.cache_recovered.get(),
+        m.xform_memo_full.get(),
+        m.xform_memo_partial.get(),
+        m.xform_memo_miss.get()
+    )
+}
+
+/// Execute a `sweep` request: resolve kernels/devices/limits from the
+/// request body, run the batched exploration, render the `sweep --json`
+/// schema compacted to one line.
+fn op_sweep(session: &Session, req: &Json) -> Result<String, String> {
+    let specs: Vec<String> = req
+        .get("kernels")
+        .and_then(Json::as_array)
+        .map(|a| a.iter().filter_map(Json::as_str).map(str::to_string).collect())
+        .unwrap_or_default();
+    if specs.is_empty() {
+        return Err("sweep: `kernels` must be a non-empty array of kernel specs".into());
+    }
+    let kernels = crate::kernels::resolve_specs(&specs)?;
+
+    let device_names: Vec<String> = match req.get("devices").and_then(Json::as_array) {
+        Some(a) => a.iter().filter_map(Json::as_str).map(str::to_string).collect(),
+        None => vec!["stratix4".to_string()],
+    };
+    let mut devices = Vec::with_capacity(device_names.len());
+    for name in &device_names {
+        devices.push(
+            Device::by_name(name)
+                .ok_or_else(|| format!("unknown device `{name}` (try stratix4|stratix5|cyclone4)"))?,
+        );
+    }
+
+    let mut limits = SweepLimits::default();
+    if let Some(v) = req.get("max_lanes").and_then(Json::as_u64) {
+        limits.max_lanes = v.max(1);
+    }
+    if let Some(v) = req.get("max_dv").and_then(Json::as_u64) {
+        limits.max_dv = v.max(1);
+    }
+    if req.get("dense").and_then(Json::as_bool).unwrap_or(false) {
+        limits.pow2_only = false;
+    }
+    if req.get("pipes_only").and_then(Json::as_bool).unwrap_or(false) {
+        limits.include_seq = false;
+        limits.include_comb = false;
+    }
+    if req.get("chain").and_then(Json::as_bool).unwrap_or(false) {
+        limits.include_chain = true;
+    }
+    if req.get("reduce").and_then(Json::as_bool).unwrap_or(false) {
+        limits.include_reduce = true;
+    }
+    if req.get("transforms").and_then(Json::as_bool).unwrap_or(false) {
+        limits.include_transforms = true;
+    }
+
+    let cells = session.explore_batch(&kernels, &devices, &limits)?;
+    let rendered = render_sweep_json(&kernels, &devices, &limits, &cells);
+    // Compact the pretty block onto one line for LDJSON framing (no
+    // string in the schema contains a newline, so this is lossless).
+    Ok(rendered
+        .lines()
+        .map(str::trim)
+        .collect::<Vec<_>>()
+        .join(" "))
+}
+
+/// Machine-readable sweep export: per (kernel × device) cell the full
+/// candidate list with wall checks, the Pareto frontier and the
+/// selected best — hand-rolled JSON (no serde offline), with fixed
+/// float precision and label-tie-broken frontiers so repeated runs are
+/// byte-identical (external tooling can diff snapshots). Shared by
+/// `tytra sweep --json` and the serve loop, so the two speak one
+/// schema by construction.
+pub fn render_sweep_json(
+    kernels: &[(String, KernelDef)],
+    devices: &[Device],
+    limits: &SweepLimits,
+    cells: &[BatchResult],
+) -> String {
+    let point_json = |c: &crate::dse::Candidate| -> String {
+        let ev = c.evaluated();
+        format!(
+            "{{\"label\": \"{}\", \"class\": \"{}\", \"alut\": {}, \"reg\": {}, \
+             \"bram_bits\": {}, \"dsp\": {}, \"cycles\": {}, \"ewgt\": {:.3}, \
+             \"utilisation\": {:.6}, \"io_utilisation\": {:.6}, \"feasible\": {}}}",
+            ev.label,
+            c.estimate.class,
+            c.estimate.resources.alut,
+            c.estimate.resources.reg,
+            c.estimate.resources.bram_bits,
+            c.estimate.resources.dsp,
+            c.estimate.cycles_per_pass,
+            ev.ewgt,
+            ev.utilisation,
+            c.walls.io_utilisation,
+            ev.feasible
+        )
+    };
+    let mut cells_json = Vec::with_capacity(cells.len());
+    for cell in cells {
+        let points: Vec<String> = cell.exploration.candidates.iter().map(point_json).collect();
+        let frontier: Vec<String> = cell
+            .exploration
+            .frontier
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"label\": \"{}\", \"ewgt\": {:.3}, \"utilisation\": {:.6}}}",
+                    p.label, p.ewgt, p.utilisation
+                )
+            })
+            .collect();
+        let best = match &cell.exploration.best {
+            Some(b) => format!("\"{}\"", b.label),
+            None => "null".to_string(),
+        };
+        cells_json.push(format!(
+            "    {{\"kernel\": \"{}\", \"device\": \"{}\", \"best\": {best},\n     \
+             \"frontier\": [{}],\n     \"points\": [{}]}}",
+            cell.kernel,
+            cell.device,
+            frontier.join(", "),
+            points.join(", ")
+        ));
+    }
+    format!(
+        "{{\n  \"kernels\": {}, \"devices\": {}, \"points_per_cell\": {},\n  \"cells\": [\n{}\n  ]\n}}",
+        kernels.len(),
+        devices.len(),
+        crate::dse::enumerate(limits).len(),
+        cells_json.join(",\n")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const T: Duration = Duration::from_secs(60);
+
+    fn serve(input: &str, timeout: Duration) -> (Vec<String>, u64) {
+        let session = Session::new(2);
+        let mut out = Vec::new();
+        let n = serve_lines(&session, Cursor::new(input.to_string()), &mut out, timeout).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        (text.lines().map(str::to_string).collect(), n)
+    }
+
+    #[test]
+    fn ping_and_metrics_round_trip() {
+        let (lines, n) = serve("{\"id\": 1, \"op\": \"ping\"}\n{\"id\": 2, \"op\": \"metrics\"}\n", T);
+        assert_eq!(n, 2);
+        let r0 = Json::parse(&lines[0]).unwrap();
+        assert_eq!(r0.get("id").and_then(Json::as_u64), Some(1));
+        assert_eq!(r0.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(r0.get("result").and_then(Json::as_str), Some("pong"));
+        let r1 = Json::parse(&lines[1]).unwrap();
+        assert_eq!(r1.get("ok").and_then(Json::as_bool), Some(true));
+        let m = r1.get("result").unwrap();
+        assert_eq!(m.get("jobs").and_then(Json::as_u64), Some(0));
+        assert!(m.get("summary").and_then(Json::as_str).unwrap().contains("jobs=0"));
+    }
+
+    #[test]
+    fn sweep_request_speaks_the_sweep_json_schema() {
+        let (lines, _) = serve(
+            "{\"id\": 9, \"op\": \"sweep\", \"kernels\": [\"builtin:simple\"], \
+             \"devices\": [\"stratix4\"], \"max_lanes\": 2, \"max_dv\": 2}\n",
+            T,
+        );
+        let r = Json::parse(&lines[0]).unwrap();
+        assert_eq!(r.get("id").and_then(Json::as_u64), Some(9));
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        let result = r.get("result").unwrap();
+        assert_eq!(result.get("kernels").and_then(Json::as_u64), Some(1));
+        assert_eq!(result.get("points_per_cell").and_then(Json::as_u64), Some(6));
+        let cells = result.get("cells").and_then(Json::as_array).unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].get("kernel").and_then(Json::as_str), Some("simple"));
+        assert!(cells[0].get("best").and_then(Json::as_str).is_some());
+        assert!(!cells[0].get("points").and_then(Json::as_array).unwrap().is_empty());
+    }
+
+    #[test]
+    fn malformed_requests_keep_the_loop_alive() {
+        let input = "this is not json\n\
+                     {\"id\": 1, \"op\": \"frobnicate\"}\n\
+                     {\"id\": 2}\n\
+                     {\"id\": 3, \"op\": \"sweep\", \"kernels\": []}\n\
+                     {\"id\": 4, \"op\": \"sweep\", \"kernels\": [\"builtin:nope\"]}\n\
+                     {\"id\": 5, \"op\": \"ping\"}\n";
+        let (lines, n) = serve(input, T);
+        assert_eq!(n, 6, "every line answered, none fatal");
+        for line in &lines[..5] {
+            let r = Json::parse(line).unwrap();
+            assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{line}");
+            assert!(r.get("error").and_then(Json::as_str).is_some(), "{line}");
+        }
+        let last = Json::parse(&lines[5]).unwrap();
+        assert_eq!(last.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(last.get("id").and_then(Json::as_u64), Some(5));
+    }
+
+    #[test]
+    fn shutdown_request_stops_the_loop() {
+        let input = "{\"id\": 1, \"op\": \"shutdown\"}\n{\"id\": 2, \"op\": \"ping\"}\n";
+        let (lines, n) = serve(input, T);
+        assert_eq!(n, 1, "nothing served after shutdown");
+        let r = Json::parse(&lines[0]).unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn sweep_timeout_degrades_to_an_error_response() {
+        // A zero timeout expires before any sweep can answer; the loop
+        // must respond with a timeout error and keep serving.
+        let input = "{\"id\": 1, \"op\": \"sweep\", \"kernels\": [\"builtin:simple\"]}\n\
+                     {\"id\": 2, \"op\": \"ping\"}\n";
+        let (lines, n) = serve(input, Duration::ZERO);
+        assert_eq!(n, 2);
+        let r = Json::parse(&lines[0]).unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(r.get("error").and_then(Json::as_str).unwrap().contains("timeout"), "{}", lines[0]);
+        assert_eq!(Json::parse(&lines[1]).unwrap().get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn ids_echo_verbatim_including_strings() {
+        let session = Session::new(1);
+        let (resp, _) = handle_request(&session, "{\"id\": \"req-7\", \"op\": \"ping\"}", T);
+        let r = Json::parse(&resp).unwrap();
+        assert_eq!(r.get("id").and_then(Json::as_str), Some("req-7"));
+        let (resp, _) = handle_request(&session, "{\"op\": \"ping\"}", T);
+        assert_eq!(Json::parse(&resp).unwrap().get("id"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn warm_requests_reuse_the_session_caches() {
+        let session = Session::new(2);
+        let req = "{\"op\": \"sweep\", \"kernels\": [\"builtin:simple\"], \"max_lanes\": 2, \"max_dv\": 2}";
+        let (a, _) = handle_request(&session, req, T);
+        let (h0, m0) = session.cache_stats();
+        assert_eq!(h0, 0);
+        assert_eq!(m0, 6);
+        let (b, _) = handle_request(&session, req, T);
+        assert_eq!(a, b, "repeat request is byte-identical");
+        let (h1, m1) = session.cache_stats();
+        assert_eq!(h1, 6, "second request served from the estimate cache");
+        assert_eq!(m1, m0);
+    }
+}

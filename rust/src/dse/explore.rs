@@ -70,11 +70,21 @@ pub fn explore(k: &KernelDef, dev: &Device, limits: &SweepLimits) -> Result<Expl
     crate::coordinator::Session::new(1).explore_def(k, dev, limits)
 }
 
-/// Assemble an exploration from evaluated candidates: estimation-space
-/// projection, C6 fallback when nothing fits, Pareto frontier + best.
-/// Shared by the serial façade and the coordinator (both paths, one
-/// selection logic).
+/// Assemble an exploration from evaluated candidates: realised-label
+/// dedupe, estimation-space projection, C6 fallback when nothing fits,
+/// Pareto frontier + best. Shared by the serial façade and the
+/// coordinator (both paths, one selection logic).
+///
+/// Dedupe first: degenerate enumerated points (a reduction kernel
+/// clamping every `lanes/dv > 1` back to 1, a chain that could not
+/// split, a recipe that rewrote nothing) all normalise to the same
+/// realised point and byte-identical module — reporting them once per
+/// realised label keeps sweeps free of duplicate rows claiming to be
+/// distinct configurations.
 pub fn assemble(candidates: Vec<Candidate>, dev: &Device) -> Exploration {
+    let mut seen = std::collections::BTreeSet::new();
+    let candidates: Vec<Candidate> =
+        candidates.into_iter().filter(|c| seen.insert(c.point.label())).collect();
     let mut evaluated: Vec<EvaluatedPoint> = candidates.iter().map(Candidate::evaluated).collect();
     if pareto::best(&evaluated).is_none() {
         if let Some(c6) = c6_fallback(&candidates, dev) {
@@ -271,6 +281,49 @@ mod tests {
         assert!(best.ewgt > 0.0);
         // and the frontier contains exactly the C6 point
         assert_eq!(r.frontier.len(), 1);
+    }
+
+    #[test]
+    fn degenerate_points_are_reported_once() {
+        // A reduction kernel clamps every lanes/dv > 1 back to 1: the 6
+        // enumerated points realise only 3 distinct modules, and the
+        // assembled exploration must report each realised label once.
+        let (_, k) = crate::kernels::resolve_specs(&["builtin:dotn".to_string()])
+            .unwrap()
+            .remove(0);
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
+        let r = explore(&k, &Device::stratix4(), &limits).unwrap();
+        let labels: Vec<String> = r.candidates.iter().map(|c| c.point.label()).collect();
+        let mut sorted = labels.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(labels.len(), sorted.len(), "duplicate labels: {labels:?}");
+        assert!(labels.len() < 6, "clamped duplicates must collapse: {labels:?}");
+        // No two candidates may realise byte-identical modules under
+        // different labels — the realised label *is* module identity
+        // (module names embed the realised-point suffix).
+        let printed: Vec<String> =
+            r.candidates.iter().map(|c| crate::tir::pretty::print(&c.module)).collect();
+        for i in 0..printed.len() {
+            for j in i + 1..printed.len() {
+                assert_ne!(printed[i], printed[j], "{} / {}", labels[i], labels[j]);
+            }
+        }
+        // The same invariant across the transform axis on a
+        // non-reduction kernel: recipes that rewrite nothing collapse
+        // into their base point instead of duplicating it.
+        let limits = SweepLimits {
+            max_lanes: 2,
+            max_dv: 2,
+            include_transforms: true,
+            ..SweepLimits::default()
+        };
+        let r = explore(&simple(), &Device::stratix4(), &limits).unwrap();
+        let labels: Vec<String> = r.candidates.iter().map(|c| c.point.label()).collect();
+        let mut sorted = labels.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(labels.len(), sorted.len(), "duplicate labels: {labels:?}");
     }
 
     #[test]

@@ -460,6 +460,22 @@ pub fn realised_point(module: &Module, point: DesignPoint) -> DesignPoint {
 /// the point's transform recipe over the assembled module (the rewrite
 /// pass of the pipeline, between variant expansion and the consumers).
 pub fn lower_point(lk: &LoweredKernel, point: DesignPoint) -> Result<Module, String> {
+    Ok(lower_point_memo(lk, point, None)?.0)
+}
+
+/// [`lower_point`] with an optional transform-pass memo: when `memo` is
+/// supplied, the recipe pipeline runs through
+/// [`transform::PassPipeline::run_memo`], replaying pass applications
+/// already seen this session (a recipe sharing a pass-prefix with an
+/// evaluated one only runs the suffix live). The second element reports
+/// the memo outcome — `None` when the point has no recipe (nothing to
+/// memoise), `Some` otherwise — so the coordinator can count
+/// full/partial/miss recipe evaluations.
+pub fn lower_point_memo(
+    lk: &LoweredKernel,
+    point: DesignPoint,
+    memo: Option<&transform::Memo>,
+) -> Result<(Module, Option<transform::MemoUse>), String> {
     let plan = plan_variant(lk, point);
     let k = &lk.kernel;
     // A degenerate point produces exactly the base module — name it
@@ -474,8 +490,17 @@ pub fn lower_point(lk: &LoweredKernel, point: DesignPoint) -> Result<Module, Str
     emit_wrapper(&mut b, lk, plan);
     b.launch_call("main", k.iter);
     let mut m = b.finish().map_err(|e| e.to_string())?;
+    let mut memo_use = None;
     if !point.transforms.is_none() {
-        let report = transform::PassPipeline::for_recipe(point.transforms).run(&mut m)?;
+        let pipeline = transform::PassPipeline::for_recipe(point.transforms);
+        let report = match memo {
+            Some(memo) => {
+                let (report, used) = pipeline.run_memo(&mut m, memo)?;
+                memo_use = Some(used);
+                report
+            }
+            None => pipeline.run(&mut m)?,
+        };
         if report.changed() {
             let realised = normalise_point(point, reduce_shape, plan.split_at > 0, true);
             m.name = module_name(&k.name, realised);
@@ -483,7 +508,7 @@ pub fn lower_point(lk: &LoweredKernel, point: DesignPoint) -> Result<Module, Str
         // zero rewrites: the module (name included) is byte-identical to
         // the untransformed point's — the recipe degenerated.
     }
-    Ok(m)
+    Ok((m, memo_use))
 }
 
 /// `_NN` replica suffix (empty for single-replica designs).

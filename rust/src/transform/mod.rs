@@ -47,9 +47,11 @@ pub use recipe::TransformRecipe;
 pub use split::ChainSplit;
 pub use strength::StrengthReduce;
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::{Arc, Mutex};
 
 use crate::tir::{validate, Dir, Func, Module, Operand, Stmt, Ty};
+use crate::util::ContentHash;
 
 /// One rewrite pass over a module.
 pub trait Pass {
@@ -153,11 +155,161 @@ impl PassPipeline {
         }
         Ok(report)
     }
+
+    /// [`PassPipeline::run`] with single-pass memoisation: every pass
+    /// application is keyed by `(input-module content hash, pass name)`
+    /// and replayed from `memo` on hit. Because the fixpoint driver is a
+    /// deterministic round-robin, two recipes sharing a pass-prefix
+    /// replay the shared applications from the memo and only run the
+    /// suffix live — the incremental re-estimation the sweep service
+    /// needs when it walks the recipe axis. Returns the usual report
+    /// plus how much of the run the memo covered.
+    pub fn run_memo(&self, m: &mut Module, memo: &Memo) -> Result<(PipelineReport, MemoUse), String> {
+        let mut report = PipelineReport {
+            rounds: 0,
+            per_pass: self.passes.iter().map(|p| (p.name(), 0)).collect(),
+        };
+        let mut applications = 0usize;
+        let mut hits = 0usize;
+        for _ in 0..self.max_rounds {
+            report.rounds += 1;
+            let mut round_changes = 0usize;
+            for (k, pass) in self.passes.iter().enumerate() {
+                applications += 1;
+                let n = memo.apply(pass.as_ref(), m, &mut hits)?;
+                report.per_pass[k].1 += n;
+                round_changes += n;
+            }
+            if round_changes == 0 {
+                break;
+            }
+        }
+        let usage = if applications == 0 || hits == 0 {
+            MemoUse::Miss
+        } else if hits == applications {
+            MemoUse::Full
+        } else {
+            MemoUse::Partial
+        };
+        Ok((report, usage))
+    }
 }
 
 /// Apply a recipe's pipeline to a module (convenience façade).
 pub fn apply_recipe(m: &mut Module, recipe: TransformRecipe) -> Result<PipelineReport, String> {
     PassPipeline::for_recipe(recipe).run(m)
+}
+
+/// How much of a memo-aware pipeline run ([`PassPipeline::run_memo`])
+/// the memo covered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoUse {
+    /// Every pass application replayed a memoised result.
+    Full,
+    /// A shared prefix replayed from the memo; the rest ran live.
+    Partial,
+    /// Every pass application ran live (or the pipeline was empty).
+    Miss,
+}
+
+/// One memoised pass application: the (validated) output module and the
+/// rewrite count the pass reported.
+struct MemoEntry {
+    out: Module,
+    rewrites: usize,
+    /// Collision guard: the pretty-printed input module whose hash keys
+    /// this entry. Debug/test builds assert it matches on every hit; a
+    /// 128-bit FNV collision would otherwise silently replay the wrong
+    /// rewrite. Release builds accept the ~2⁻⁶⁴ risk and drop the text.
+    #[cfg(any(test, debug_assertions))]
+    input_text: String,
+}
+
+/// Structural-fact memo for pass applications, shared across a session
+/// (`coordinator::Session` holds one): `(input-module hash, pass name) →
+/// (output module, rewrite count)`. Sound because every pass is a pure
+/// deterministic function of the module. Bounded: when the map reaches
+/// [`Memo::MAX_ENTRIES`] it is cleared wholesale — a memo is a replay
+/// accelerator, not a correctness store, so losing it only costs
+/// recomputation.
+#[derive(Default)]
+pub struct Memo {
+    map: Mutex<HashMap<(u128, &'static str), Arc<MemoEntry>>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl Memo {
+    /// Entry cap; reaching it clears the memo (see type docs).
+    pub const MAX_ENTRIES: usize = 4096;
+
+    /// Empty memo.
+    pub fn new() -> Memo {
+        Memo::default()
+    }
+
+    /// (hits, misses) so far — single pass applications, not recipes.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(std::sync::atomic::Ordering::Relaxed),
+            self.misses.load(std::sync::atomic::Ordering::Relaxed),
+        )
+    }
+
+    /// Entries currently memoised.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("memo poisoned").len()
+    }
+
+    /// True when nothing is memoised.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Run `pass` on `m` through the memo (replay on hit, run + record
+    /// on miss). Live runs re-validate exactly like [`PassPipeline::run`]
+    /// before the result is memoised, so the memo only ever replays
+    /// validated modules.
+    fn apply(&self, pass: &dyn Pass, m: &mut Module, hits: &mut usize) -> Result<usize, String> {
+        let text = crate::tir::pretty::print(m);
+        let key = (ContentHash::of(text.as_bytes()).0, pass.name());
+        if let Some(entry) = self.map.lock().expect("memo poisoned").get(&key).cloned() {
+            #[cfg(any(test, debug_assertions))]
+            assert_eq!(entry.input_text, text, "128-bit memo-key collision on pass `{}`", pass.name());
+            self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            *hits += 1;
+            if entry.rewrites > 0 {
+                *m = entry.out.clone();
+            }
+            return Ok(entry.rewrites);
+        }
+        self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let n = pass.run(m)?;
+        if n > 0 {
+            validate::validate(m).map_err(|e| {
+                format!("transform pass `{}` produced an invalid module: {e}", pass.name())
+            })?;
+        }
+        let entry = Arc::new(MemoEntry {
+            out: m.clone(),
+            rewrites: n,
+            #[cfg(any(test, debug_assertions))]
+            input_text: text,
+        });
+        let mut map = self.map.lock().expect("memo poisoned");
+        if map.len() >= Memo::MAX_ENTRIES {
+            map.clear();
+        }
+        map.insert(key, entry);
+        Ok(n)
+    }
+}
+
+impl std::fmt::Debug for Memo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (h, m) = self.stats();
+        write!(f, "Memo {{ entries: {}, hits: {h}, misses: {m} }}", self.len())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -416,5 +568,78 @@ mod tests {
         // applying the same recipe again is a no-op
         let again = apply_recipe(&mut m, TransformRecipe::full()).unwrap();
         assert!(!again.changed(), "{again:?}");
+    }
+
+    /// A module with real rewrite opportunities for every recipe (the
+    /// blend6 kernel folds, CSEs and strength-reduces).
+    fn blend_module() -> Module {
+        let (_, k) = crate::kernels::resolve_specs(&["builtin:blend6".to_string()])
+            .unwrap()
+            .remove(0);
+        frontend::lower(&k, DesignPoint::c2()).unwrap()
+    }
+
+    #[test]
+    fn memoised_run_is_bit_identical_to_direct() {
+        let memo = Memo::new();
+        for recipe in [
+            TransformRecipe::simplify(),
+            TransformRecipe::shiftadd(),
+            TransformRecipe::balance(),
+            TransformRecipe::full(),
+        ] {
+            let mut direct = blend_module();
+            let rd = PassPipeline::for_recipe(recipe).run(&mut direct).unwrap();
+            // cold (records into the memo), then warm (replays from it)
+            let mut cold = blend_module();
+            let (rc, _) = PassPipeline::for_recipe(recipe).run_memo(&mut cold, &memo).unwrap();
+            let mut warm = blend_module();
+            let (rw, warm_use) = PassPipeline::for_recipe(recipe).run_memo(&mut warm, &memo).unwrap();
+            assert_eq!(direct, cold, "{recipe:?}: cold memo run diverged");
+            assert_eq!(direct, warm, "{recipe:?}: warm memo run diverged");
+            assert_eq!(rd.per_pass, rc.per_pass);
+            assert_eq!(rd.per_pass, rw.per_pass);
+            assert_eq!(rd.rounds, rw.rounds);
+            assert_eq!(warm_use, MemoUse::Full, "{recipe:?}: replay must be a full hit");
+        }
+    }
+
+    #[test]
+    fn shared_pass_prefix_replays_from_the_memo() {
+        // `simplify` = fold+cse is a pass-prefix of `full`: after running
+        // `simplify`, a `full` run must replay the shared applications
+        // (memo hits > 0) and classify as Partial, not Miss.
+        let memo = Memo::new();
+        let mut m1 = blend_module();
+        let (_, first) = PassPipeline::for_recipe(TransformRecipe::simplify())
+            .run_memo(&mut m1, &memo)
+            .unwrap();
+        assert_eq!(first, MemoUse::Miss, "cold run sees an empty memo");
+        let (h0, _) = memo.stats();
+        assert_eq!(h0, 0);
+
+        let mut m2 = blend_module();
+        let (_, second) =
+            PassPipeline::for_recipe(TransformRecipe::full()).run_memo(&mut m2, &memo).unwrap();
+        let (h1, _) = memo.stats();
+        assert!(h1 > 0, "the shared fold/cse prefix must replay from the memo");
+        assert_eq!(second, MemoUse::Partial, "suffix passes ran live");
+
+        // and the memoised result still matches the direct pipeline
+        let mut direct = blend_module();
+        PassPipeline::for_recipe(TransformRecipe::full()).run(&mut direct).unwrap();
+        assert_eq!(direct, m2);
+    }
+
+    #[test]
+    fn memo_is_bounded() {
+        let memo = Memo::new();
+        // Entries never exceed the cap even across many distinct inputs
+        // (here: the same passes over modules the memo already saturates
+        // with — the cap path clears rather than grows).
+        let mut m = blend_module();
+        let _ = PassPipeline::for_recipe(TransformRecipe::full()).run_memo(&mut m, &memo).unwrap();
+        assert!(memo.len() <= Memo::MAX_ENTRIES);
+        assert!(!memo.is_empty());
     }
 }

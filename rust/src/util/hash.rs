@@ -1,0 +1,104 @@
+//! Content hashing for cache keys: 128-bit FNV-1a (key identity) and
+//! 64-bit FNV-1a (file checksums).
+//!
+//! The offline image ships no hashing crate, so the caches use FNV-1a —
+//! deterministic, dependency-free, and at 128 bits wide enough that an
+//! accidental collision across a session's worth of kernels is
+//! negligible (~2⁻⁶⁴ at a billion entries). It is **not**
+//! collision-resistant against an adversary; the in-memory caches keep
+//! the full key material in debug/test builds and assert on any
+//! equal-hash/different-material pair, and the on-disk cache stores the
+//! key material in each entry and verifies it on load, so a collision
+//! degrades to a recomputed miss, never a wrong estimate.
+
+/// A 128-bit FNV-1a content hash.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ContentHash(pub u128);
+
+const FNV128_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+const FNV128_PRIME: u128 = 0x0000000001000000000000000000013B;
+
+const FNV64_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV64_PRIME: u64 = 0x00000100000001B3;
+
+impl ContentHash {
+    /// Hash a byte string.
+    pub fn of(bytes: &[u8]) -> ContentHash {
+        let mut h = FNV128_OFFSET;
+        for &b in bytes {
+            h ^= b as u128;
+            h = h.wrapping_mul(FNV128_PRIME);
+        }
+        ContentHash(h)
+    }
+
+    /// Hash a sequence of parts with unambiguous framing: each part is
+    /// preceded by its length, so `("ab", "c")` and `("a", "bc")` hash
+    /// differently.
+    pub fn of_parts(parts: &[&str]) -> ContentHash {
+        let mut h = FNV128_OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u128;
+                h = h.wrapping_mul(FNV128_PRIME);
+            }
+        };
+        for p in parts {
+            eat(&(p.len() as u64).to_le_bytes());
+            eat(p.as_bytes());
+        }
+        ContentHash(h)
+    }
+
+    /// Lower-case hex rendering (32 chars) — the on-disk file stem.
+    pub fn hex(&self) -> String {
+        format!("{:032x}", self.0)
+    }
+}
+
+/// 64-bit FNV-1a — the trailing checksum of persistent cache entries.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = FNV64_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV64_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // FNV-1a 64: published test vectors.
+        assert_eq!(fnv64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv64(b"a"), 0xaf63dc4c8601ec8c);
+        // FNV-1a 128 of the empty string is the offset basis.
+        assert_eq!(ContentHash::of(b"").0, FNV128_OFFSET);
+    }
+
+    #[test]
+    fn hashes_are_deterministic_and_sensitive() {
+        let a = ContentHash::of(b"kernel simple");
+        assert_eq!(a, ContentHash::of(b"kernel simple"));
+        assert_ne!(a, ContentHash::of(b"kernel simplf"));
+        assert_ne!(fnv64(b"x"), fnv64(b"y"));
+    }
+
+    #[test]
+    fn part_framing_is_unambiguous() {
+        assert_ne!(ContentHash::of_parts(&["ab", "c"]), ContentHash::of_parts(&["a", "bc"]));
+        assert_ne!(ContentHash::of_parts(&["ab"]), ContentHash::of_parts(&["ab", ""]));
+        assert_eq!(ContentHash::of_parts(&["a", "b"]), ContentHash::of_parts(&["a", "b"]));
+    }
+
+    #[test]
+    fn hex_is_stable_and_32_chars() {
+        let h = ContentHash::of(b"x");
+        assert_eq!(h.hex().len(), 32);
+        assert_eq!(h.hex(), h.hex());
+        assert!(h.hex().chars().all(|c| c.is_ascii_hexdigit()));
+    }
+}

@@ -1,13 +1,18 @@
-//! Small dependency-free utilities: PRNG, statistics, table formatting.
+//! Small dependency-free utilities: PRNG, statistics, table formatting,
+//! content hashing, JSON parsing.
 //!
 //! The build image has no network access, so the usual crates (`rand`,
-//! `criterion`'s stats, `comfy-table`) are replaced by these minimal,
-//! fully-tested equivalents.
+//! `criterion`'s stats, `comfy-table`, `fnv`, `serde_json`) are replaced
+//! by these minimal, fully-tested equivalents.
 
+pub mod hash;
+pub mod json;
 pub mod prng;
 pub mod stats;
 pub mod table;
 
+pub use hash::ContentHash;
+pub use json::Json;
 pub use prng::Prng;
 pub use stats::Summary;
 pub use table::Table;

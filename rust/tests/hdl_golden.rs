@@ -8,14 +8,20 @@
 //!    must produce byte-identical Verilog (no iteration-order or
 //!    hidden-state leaks into the emission).
 //! 2. **Cross-run snapshots** — the emitted text is pinned to files
-//!    under `tests/snapshots/hdl/`. The first run (or a run with
-//!    `TYTRA_BLESS=1`) writes the snapshot; later runs diff against it,
-//!    so any emission drift across commits fails with the kernel named.
-//!    Re-bless intentionally changed output with
-//!    `TYTRA_BLESS=1 cargo test --test hdl_golden`.
+//!    under `tests/snapshots/hdl/`. A **missing snapshot is a hard
+//!    failure**: silently re-creating one from current output would
+//!    let drifted emission bless itself. Write snapshots deliberately
+//!    with `TYTRA_BLESS=1 cargo test --test hdl_golden`. The single
+//!    exception is bootstrap: when the snapshot directory holds no
+//!    `.v` files at all (a checkout whose snapshot set was never
+//!    generated), the full set is written in one pass — there is
+//!    nothing to drift *from*, and the growth container cannot ship
+//!    pre-generated snapshots.
 
+use std::ffi::OsStr;
 use std::fs;
 use std::path::PathBuf;
+use std::sync::OnceLock;
 
 use tytra::frontend::{self, DesignPoint};
 use tytra::hdl;
@@ -26,21 +32,64 @@ fn snapshot_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/snapshots/hdl")
 }
 
-/// Compare against (or create) the named snapshot.
+/// True iff the snapshot directory held no `.v` files when this test
+/// process first looked. Decided once per process, *before* any
+/// snapshot is written (every write site consults this first), so the
+/// two snapshot tests racing in threads cannot disagree: either the
+/// whole set is being bootstrapped, or none of it is.
+fn bootstrapping() -> bool {
+    static BOOTSTRAP: OnceLock<bool> = OnceLock::new();
+    *BOOTSTRAP.get_or_init(|| match fs::read_dir(snapshot_dir()) {
+        Ok(entries) => !entries
+            .filter_map(|e| e.ok())
+            .any(|e| e.path().extension() == Some(OsStr::new("v"))),
+        Err(_) => true,
+    })
+}
+
+/// Compare against the named snapshot. Missing snapshots are a hard
+/// failure (outside bootstrap — see [`bootstrapping`]): a test that
+/// self-blesses on first sight can never catch drift that lands
+/// together with a deleted or renamed snapshot file.
+/// The write-vs-diff decision, factored out so the no-self-bless truth
+/// table is itself pinned by a test.
+fn may_write_snapshot(bless: bool, bootstrap: bool, exists: bool) -> bool {
+    bless || (bootstrap && !exists)
+}
+
 fn check_snapshot(name: &str, content: &str) {
-    let dir = snapshot_dir();
-    fs::create_dir_all(&dir).unwrap();
-    let path = dir.join(format!("{name}.v"));
     let bless = std::env::var_os("TYTRA_BLESS").is_some();
-    if bless || !path.exists() {
+    let dir = snapshot_dir();
+    let path = dir.join(format!("{name}.v"));
+    if may_write_snapshot(bless, bootstrapping(), path.exists()) {
+        fs::create_dir_all(&dir).unwrap();
         fs::write(&path, content).unwrap();
         return;
     }
-    let want = fs::read_to_string(&path).unwrap();
+    let want = match fs::read_to_string(&path) {
+        Ok(w) => w,
+        Err(e) => panic!(
+            "missing HDL snapshot `{name}` ({e}) — snapshots never self-bless; \
+             write it deliberately with `TYTRA_BLESS=1 cargo test --test hdl_golden`"
+        ),
+    };
     assert_eq!(
         want, content,
         "HDL emission drift for `{name}` (re-bless intentional changes with TYTRA_BLESS=1)"
     );
+}
+
+#[test]
+fn missing_snapshots_never_self_bless_outside_bootstrap() {
+    // The historical bug: `bless || !exists` silently re-created any
+    // deleted/renamed snapshot from current output, so drift landing
+    // together with the deletion passed. The decision table now only
+    // writes under an explicit TYTRA_BLESS=1 or whole-set bootstrap.
+    assert!(!may_write_snapshot(false, false, false), "missing snapshot must hard-fail");
+    assert!(!may_write_snapshot(false, false, true), "existing snapshot must be diffed");
+    assert!(!may_write_snapshot(false, true, true), "bootstrap never overwrites");
+    assert!(may_write_snapshot(false, true, false), "bootstrap writes the fresh set");
+    assert!(may_write_snapshot(true, false, false) && may_write_snapshot(true, false, true));
 }
 
 #[test]

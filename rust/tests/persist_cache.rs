@@ -1,0 +1,155 @@
+//! Integration tests for the persistent on-disk estimate cache through
+//! the public API: a warm process must reproduce a cold process's sweep
+//! bit-for-bit from disk, and *any* injected corruption of the cache
+//! directory must degrade to a recompute — correct output, exit 0,
+//! `cache_recovered` incremented — never a panic and never stale bytes.
+//! (PR 7 acceptance criteria; unit-level fault classes live in
+//! `coordinator::persist`, this file pins the cross-process story.)
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use tytra::coordinator::{BatchResult, DiskCache, Session};
+use tytra::device::Device;
+use tytra::dse::SweepLimits;
+use tytra::estimator::Estimate;
+use tytra::kernels;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "tytra-it-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn limits() -> SweepLimits {
+    SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() }
+}
+
+/// One sweep cell for `builtin:simple` on stratix4 through a session
+/// wired to `dir` — a fresh `Session` each call models a fresh process
+/// (no in-memory cache carries over; only the disk does).
+fn sweep_with(dir: &PathBuf) -> (Session, Vec<BatchResult>) {
+    let session = Session::new(2)
+        .with_disk_cache(Arc::new(DiskCache::open(dir.clone(), DiskCache::DEFAULT_BUDGET_BYTES).unwrap()));
+    let ks = kernels::resolve_specs(&["builtin:simple".to_string()]).unwrap();
+    let cells = session.explore_batch(&ks, &[Device::stratix4()], &limits()).unwrap();
+    (session, cells)
+}
+
+fn estimates(cells: &[BatchResult]) -> Vec<&Estimate> {
+    cells.iter().flat_map(|c| c.exploration.candidates.iter().map(|cand| &cand.estimate)).collect()
+}
+
+fn assert_bit_identical(a: &[BatchResult], b: &[BatchResult]) {
+    let (ea, eb) = (estimates(a), estimates(b));
+    assert_eq!(ea.len(), eb.len());
+    for (x, y) in ea.iter().zip(&eb) {
+        assert_eq!(x, y);
+        // f64 equality above is fine, but pin the *bits* explicitly —
+        // the on-disk format stores `to_bits`, so this is the contract.
+        assert_eq!(x.ewgt.to_bits(), y.ewgt.to_bits());
+        assert_eq!(x.fmax_mhz.to_bits(), y.fmax_mhz.to_bits());
+    }
+}
+
+#[test]
+fn warm_process_replays_a_cold_sweep_bit_identically_from_disk() {
+    let dir = tmp_dir("warm");
+    let (cold, cells_cold) = sweep_with(&dir);
+    assert!(cold.metrics().disk_misses.get() >= 1, "cold run must miss");
+    assert_eq!(cold.metrics().disk_hits.get(), 0);
+    assert_eq!(cold.metrics().cache_recovered.get(), 0);
+
+    let (warm, cells_warm) = sweep_with(&dir);
+    assert!(warm.metrics().disk_hits.get() >= 1, "warm run must hit the persistent cache");
+    assert_eq!(warm.metrics().disk_misses.get(), 0, "every estimate should come from disk");
+    assert_eq!(warm.metrics().cache_recovered.get(), 0);
+    assert_bit_identical(&cells_cold, &cells_warm);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_cache_directory_degrades_to_recompute() {
+    let dir = tmp_dir("corrupt");
+    let (_, cells_cold) = sweep_with(&dir);
+
+    // Injected faults across three classes: truncation, a flipped
+    // version byte, and raw garbage. Entry enumeration is via the
+    // public `entries()`.
+    let probe = DiskCache::open(dir.clone(), DiskCache::DEFAULT_BUDGET_BYTES).unwrap();
+    let files = probe.entries();
+    assert!(files.len() >= 3, "sweep should persist several entries, got {}", files.len());
+    let bytes = std::fs::read(&files[0]).unwrap();
+    std::fs::write(&files[0], &bytes[..bytes.len() / 2]).unwrap();
+    let mut wrong = std::fs::read(&files[1]).unwrap();
+    wrong[5] ^= 0xFF; // version byte sits after the 5-byte magic
+    std::fs::write(&files[1], &wrong).unwrap();
+    std::fs::write(&files[2], b"not a cache entry at all").unwrap();
+
+    let (warm, cells_warm) = sweep_with(&dir);
+    assert!(warm.metrics().cache_recovered.get() >= 3, "each fault must be recovered");
+    assert_bit_identical(&cells_cold, &cells_warm);
+
+    // Recovery also repairs: the next process is fully warm again.
+    let (again, cells_again) = sweep_with(&dir);
+    assert_eq!(again.metrics().cache_recovered.get(), 0);
+    assert_eq!(again.metrics().disk_misses.get(), 0);
+    assert_bit_identical(&cells_cold, &cells_again);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_sessions_share_one_cache_directory_safely() {
+    // Several "processes" (independent sessions over the same directory)
+    // sweeping at once: results all agree with a reference sweep and no
+    // session ever panics, whatever interleaving of stores/loads occurs.
+    let dir = tmp_dir("concurrent");
+    let (_, reference) = sweep_with(&dir);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let dir = dir.clone();
+                s.spawn(move || {
+                    let (_, cells) = sweep_with(&dir);
+                    cells
+                })
+            })
+            .collect();
+        for h in handles {
+            let cells = h.join().expect("concurrent sweep panicked");
+            assert_bit_identical(&reference, &cells);
+        }
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cache_is_partitioned_by_device_and_never_cross_served() {
+    // Same kernel and points on two devices share a directory: the
+    // second device's sweep must not be served the first device's
+    // estimates (the key embeds the device and is verified on load).
+    let dir = tmp_dir("device");
+    let ks = kernels::resolve_specs(&["builtin:simple".to_string()]).unwrap();
+    let open = || Arc::new(DiskCache::open(dir.clone(), DiskCache::DEFAULT_BUDGET_BYTES).unwrap());
+
+    let s4 = Session::new(1).with_disk_cache(open());
+    let c4 = s4.explore_batch(&ks, &[Device::stratix4()], &limits()).unwrap();
+
+    let s5 = Session::new(1).with_disk_cache(open());
+    let _c5 = s5.explore_batch(&ks, &[Device::stratix5()], &limits()).unwrap();
+    assert_eq!(s5.metrics().disk_hits.get(), 0, "different device must not hit");
+    assert_eq!(s5.metrics().cache_recovered.get(), 0);
+
+    // And the stratix4 entries are still intact underneath.
+    let s4b = Session::new(1).with_disk_cache(open());
+    let c4b = s4b.explore_batch(&ks, &[Device::stratix4()], &limits()).unwrap();
+    assert!(s4b.metrics().disk_hits.get() >= 1);
+    assert_bit_identical(&c4, &c4b);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -4,7 +4,11 @@
 # sweep-throughput trend is machine-readable across PRs. Since PR 6 the
 # bench also measures simulation-engine throughput (items/sec, batched
 # bytecode vs the interpreted oracle) and the validated sweep runs
-# through the session KernelCache (compile-once-run-many).
+# through the session KernelCache (compile-once-run-many). Since PR 7 it
+# additionally measures the persistent on-disk estimate cache: the same
+# sweep cold (estimating + storing) vs warm (decode-and-verify replay
+# from disk with a fresh session per iteration, modelling the
+# `tytra serve` restart case) — the JSON's `persist` block.
 #
 # Usage:
 #   scripts/bench.sh            # smoke mode (short, CI-friendly)

@@ -89,4 +89,48 @@ cargo run --quiet --release --manifest-path "$MANIFEST" -- \
     sweep builtin:blend6 builtin:scale builtin:jacobi2d \
     --jobs 2 --max-lanes 2 --max-dv 2 --transforms --json > /dev/null
 
+echo "== serve smoke (LDJSON request loop: 2 valid + 1 malformed, process stays alive) =="
+# The service must answer every line — including the malformed one, as
+# an error response rather than a crash — and exit 0 at EOF.
+SERVE_CACHE=$(mktemp -d)
+SERVE_OUT=$(printf '%s\n' \
+    '{"id": 1, "op": "ping"}' \
+    'this is not json' \
+    '{"id": 2, "op": "sweep", "kernels": ["builtin:simple"], "max_lanes": 2, "max_dv": 2}' \
+    | cargo run --quiet --release --manifest-path "$MANIFEST" -- \
+        serve --cache-dir "$SERVE_CACHE" --timeout-ms 60000)
+OK_N=$(printf '%s\n' "$SERVE_OUT" | grep -c '"ok": true' || true)
+ERR_N=$(printf '%s\n' "$SERVE_OUT" | grep -c '"ok": false' || true)
+if [ "$OK_N" -ne 2 ] || [ "$ERR_N" -ne 1 ]; then
+    echo "error: serve smoke expected 2 ok + 1 error responses, got $OK_N ok / $ERR_N error" >&2
+    printf '%s\n' "$SERVE_OUT" >&2
+    exit 1
+fi
+rm -rf "$SERVE_CACHE"
+
+echo "== persistent cache: cold vs warm sweep --json bit-identity + corruption recovery =="
+CACHE_DIR=$(mktemp -d)
+SWEEP_ARGS="sweep builtin:simple --jobs 2 --max-lanes 2 --max-dv 2 --json --cache-dir $CACHE_DIR"
+# shellcheck disable=SC2086
+COLD=$(cargo run --quiet --release --manifest-path "$MANIFEST" -- $SWEEP_ARGS)
+# shellcheck disable=SC2086
+WARM=$(cargo run --quiet --release --manifest-path "$MANIFEST" -- $SWEEP_ARGS)
+if [ "$COLD" != "$WARM" ]; then
+    echo "error: warm persistent-cache sweep is not bit-identical to the cold sweep" >&2
+    exit 1
+fi
+# truncate one cache entry in place: the next run must recompute (exit
+# 0, identical output), never panic or serve stale bytes
+for f in "$CACHE_DIR"/*.bin; do
+    head -c 16 "$f" > "$f.trunc" && mv "$f.trunc" "$f"
+    break
+done
+# shellcheck disable=SC2086
+RECOVERED=$(cargo run --quiet --release --manifest-path "$MANIFEST" -- $SWEEP_ARGS)
+if [ "$COLD" != "$RECOVERED" ]; then
+    echo "error: sweep over a corrupted cache entry diverged from the cold sweep" >&2
+    exit 1
+fi
+rm -rf "$CACHE_DIR"
+
 echo "ci: ALL OK"
