@@ -13,7 +13,11 @@
 //!   `KernelCache` (`Session::validate_sweep`);
 //! * persistent-cache replay: a fresh session per iteration (modelling
 //!   a fresh process) sweeping cold (store to disk) vs warm (decode
-//!   and verify from disk) — the `tytra serve` restart case.
+//!   and verify from disk) — the `tytra serve` restart case;
+//! * serve throughput: N concurrent client threads pushing sweep
+//!   requests through `serve::handle_request` at one shared session
+//!   (requests/sec at 1/4/16 clients, cold vs warm disk cache — the
+//!   warm rows measure the cache-aware planner's no-lowering replay).
 //!
 //! This is also the §Perf harness used for the optimisation passes
 //! (EXPERIMENTS.md §Perf records before/after from this bench).
@@ -194,6 +198,63 @@ fn main() {
     );
     let _ = std::fs::remove_dir_all(&pdir);
 
+    println!("{}", section("serve throughput (concurrent clients over one shared session)"));
+    // ISSUE 8: `tytra serve --socket` multiplexes many clients over one
+    // process. Modelled in-process: N client threads each push sweep
+    // requests through `serve::handle_request` against one shared
+    // `Session` (every request fans its points onto the one sharded
+    // executor) — cold (fresh disk cache, live estimation) vs warm
+    // (fresh session over the populated disk cache: the cache-aware
+    // planner replays every point without lowering).
+    let sdir = std::env::temp_dir().join(format!("tytra-bench-serve-{}", std::process::id()));
+    let open_serve_disk = || {
+        std::sync::Arc::new(
+            tytra::coordinator::DiskCache::open(
+                sdir.clone(),
+                tytra::coordinator::DiskCache::DEFAULT_BUDGET_BYTES,
+            )
+            .expect("open bench serve cache dir"),
+        )
+    };
+    let serve_req = "{\"op\": \"sweep\", \"kernels\": [\"builtin:simple\"], \"max_lanes\": 4, \"max_dv\": 2}";
+    let reqs_per_client = if smoke { 2usize } else { 8 };
+    let serve_round = |session: &Session, clients: usize| -> f64 {
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..clients {
+                s.spawn(|| {
+                    for _ in 0..reqs_per_client {
+                        let (resp, _) = tytra::coordinator::serve::handle_request(
+                            session,
+                            serve_req,
+                            std::time::Duration::from_secs(120),
+                        );
+                        black_box(resp);
+                    }
+                });
+            }
+        });
+        (clients * reqs_per_client) as f64 / t0.elapsed().as_secs_f64()
+    };
+    let mut serve_rows: Vec<(usize, f64, f64)> = Vec::new();
+    for clients in [1usize, 4, 16] {
+        let _ = std::fs::remove_dir_all(&sdir);
+        let cold_session = Session::new(8).with_disk_cache(open_serve_disk());
+        let cold_rps = serve_round(&cold_session, clients);
+        // A fresh session over the now-populated directory models the
+        // post-restart serve process: pure planner replay from disk.
+        let warm_session = Session::new(8).with_disk_cache(open_serve_disk());
+        let warm_rps = serve_round(&warm_session, clients);
+        println!(
+            "  {clients:>2} client(s): {cold_rps:.1} req/s cold, {warm_rps:.1} req/s warm \
+             (warm planner_skipped={}, lowerings={})",
+            warm_session.metrics().planner_skipped_lowering.get(),
+            warm_session.metrics().lowerings.get()
+        );
+        serve_rows.push((clients, cold_rps, warm_rps));
+    }
+    let _ = std::fs::remove_dir_all(&sdir);
+
     println!("{}", section("batched (kernel × device) grid via Session::explore_batch (cold cache)"));
     let kernels = vec![
         (frontend::lang::simple_kernel_source().to_string(),
@@ -325,6 +386,7 @@ fn main() {
             (xcells.len(), xf_recipes, xf_points, xf_realised),
             (int_ips, bat_ips, sim_speedup, kcache_stats),
             (cold_disk_cps, warm_disk_cps, disk_stats),
+            &serve_rows,
         );
         if let Err(e) = std::fs::write(&path, json) {
             eprintln!("cannot write {}: {e}", path.to_string_lossy());
@@ -349,6 +411,7 @@ fn render_json(
     transforms: (usize, usize, usize, usize),
     sim: (f64, f64, f64, (u64, u64)),
     persist: (f64, f64, (u64, u64)),
+    serve: &[(usize, f64, f64)],
 ) -> String {
     let rows = |xs: &[(usize, f64)]| -> String {
         xs.iter()
@@ -356,6 +419,13 @@ fn render_json(
             .collect::<Vec<_>>()
             .join(", ")
     };
+    let serve_rows = serve
+        .iter()
+        .map(|(c, cold, warm)| {
+            format!("{{\"clients\": {c}, \"cold\": {cold:.1}, \"warm\": {warm:.1}}}")
+        })
+        .collect::<Vec<_>>()
+        .join(", ");
     let (rkernels, rpoints, rtrees) = reduction;
     let (xkernels, xrecipes, xpoints, xrealised) = transforms;
     let (int_ips, bat_ips, speedup, (khits, kcompiles)) = sim;
@@ -375,7 +445,8 @@ fn render_json(
          \"kernel_cache\": {{\"hits\": {khits}, \"compiles\": {kcompiles}}}}},\n  \
          \"persist\": {{\"cold_disk_configs_per_sec\": {cold_disk_cps:.1}, \
          \"warm_disk_configs_per_sec\": {warm_disk_cps:.1}, \
-         \"disk_hits_per_sweep\": {dhits}, \"recovered\": {drecovered}}}\n}}\n",
+         \"disk_hits_per_sweep\": {dhits}, \"recovered\": {drecovered}}},\n  \
+         \"serve\": {{\"requests_per_sec\": [{serve_rows}]}}\n}}\n",
         if smoke { "smoke" } else { "full" },
         est_simple_s * 1e6,
         est_sor_s * 1e6,

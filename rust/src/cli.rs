@@ -9,6 +9,8 @@
 //! tytra dse       <kernel.knl|builtin:NAME> [--device s4]
 //!                 [--max-lanes N] [--max-dv N] [--dense] [--jobs N] [--config f]
 //! tytra sweep     <kernel>... [--devices s4,c4]          # builtin:all = whole library
+//! tytra serve     [--socket PATH] [--timeout-ms N] [--idle-timeout-ms N]
+//! tytra client    --socket PATH                           # lockstep LDJSON client
 //! tytra conformance [--quick] [--seed N] [--random N] [--json] [--engine E]
 //! tytra emit-hdl  <file.tir>  [--tb] [--seed N]
 //! tytra golden    [--artifacts DIR] [--seed N]
@@ -39,7 +41,7 @@ pub struct Cli {
 /// Flags that take a value.
 const VALUE_FLAGS: &[&str] = &[
     "device", "devices", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts", "random",
-    "engine", "cache-dir", "cache-budget", "timeout-ms", "socket",
+    "engine", "cache-dir", "cache-budget", "timeout-ms", "socket", "idle-timeout-ms",
 ];
 /// Boolean flags.
 const BOOL_FLAGS: &[&str] = &[
@@ -137,6 +139,7 @@ pub fn dispatch(args: &[String]) -> Result<String, String> {
         "dse" => cmd_dse(&cli),
         "sweep" => cmd_sweep(&cli),
         "serve" => cmd_serve(&cli),
+        "client" => cmd_client(&cli),
         "conformance" => cmd_conformance(&cli),
         "emit-hdl" => cmd_emit_hdl(&cli),
         "golden" => cmd_golden(&cli),
@@ -165,7 +168,12 @@ pub fn usage() -> String {
                                       --cache-dir DIR = persistent estimate cache)\n\
        serve    [--socket PATH]       long-running sweep service: one JSON request per\n\
                                       line on stdin (or the socket), one response per\n\
-                                      line; persistent cache on by default\n\
+                                      line; the socket serves many clients concurrently\n\
+                                      over one warm session; persistent cache on by\n\
+                                      default; --idle-timeout-ms N closes quiet\n\
+                                      connections (0 = never)\n\
+       client   --socket PATH         lockstep client for a running serve instance:\n\
+                                      stdin lines in, response lines out, in order\n\
        conformance [--quick] [--json] cross-layer differential checks over the kernel\n\
                                       library + random kernels (non-zero exit on mismatch)\n\
        emit-hdl <file.tir> [--tb]     generate Verilog (+ testbench)\n\
@@ -177,7 +185,8 @@ pub fn usage() -> String {
             --max-dv N   --dense   --pipes-only   --chain   --reduce   --transforms\n\
             --config tytra.toml   --artifacts DIR   --tb   --quick   --random N   --json\n\
             --inject-mismatch   --engine batched|compiled|interpreted\n\
-            --cache-dir DIR   --cache-budget BYTES   --timeout-ms N   --socket PATH"
+            --cache-dir DIR   --cache-budget BYTES   --timeout-ms N   --socket PATH\n\
+            --idle-timeout-ms N"
         .to_string()
 }
 
@@ -304,6 +313,9 @@ fn sweep_config(cli: &Cli) -> Result<Config, String> {
     if let Some(v) = cli.flag("timeout-ms") {
         cfg.serve_timeout_ms = v.parse().map_err(|e| format!("--timeout-ms: {e}"))?;
     }
+    if let Some(v) = cli.flag("idle-timeout-ms") {
+        cfg.serve_idle_timeout_ms = v.parse().map_err(|e| format!("--idle-timeout-ms: {e}"))?;
+    }
     Ok(cfg)
 }
 
@@ -411,6 +423,11 @@ fn cmd_sweep(cli: &Cli) -> Result<String, String> {
     let cells = session.explore_batch(&kernels, &devices, &limits)?;
 
     if cli.has("json") {
+        // Stdout carries only the (byte-stable) JSON document; the
+        // metrics line — where cache-aware planning is observable
+        // (`planner_skipped=N` on a warm run) — goes to stderr so
+        // automation can both diff the export and grep the counters.
+        eprintln!("{}", session.metrics().summary());
         return Ok(crate::coordinator::serve::render_sweep_json(&kernels, &devices, &limits, &cells));
     }
 
@@ -460,8 +477,12 @@ fn cmd_serve(cli: &Cli) -> Result<String, String> {
     let cfg = sweep_config(cli)?;
     let session = build_session(&cfg, true)?;
     let timeout = std::time::Duration::from_millis(cfg.serve_timeout_ms.max(1));
+    let idle = match cfg.serve_idle_timeout_ms {
+        0 => None, // 0 = idle connections stay open forever
+        ms => Some(std::time::Duration::from_millis(ms)),
+    };
     let served = match cli.flag("socket") {
-        Some(path) => serve_on_socket(&session, Path::new(path), timeout)?,
+        Some(path) => serve_on_socket(&session, Path::new(path), timeout, idle)?,
         None => crate::coordinator::serve::run_stdio(&session, timeout)?,
     };
     Ok(format!("served {served} request(s)\n{}", session.metrics().summary()))
@@ -472,8 +493,9 @@ fn serve_on_socket(
     session: &Session,
     path: &Path,
     timeout: std::time::Duration,
+    idle: Option<std::time::Duration>,
 ) -> Result<u64, String> {
-    crate::coordinator::serve::run_socket(session, path, timeout)
+    crate::coordinator::serve::run_socket(session, path, timeout, idle)
 }
 
 #[cfg(not(unix))]
@@ -481,8 +503,48 @@ fn serve_on_socket(
     _session: &Session,
     _path: &Path,
     _timeout: std::time::Duration,
+    _idle: Option<std::time::Duration>,
 ) -> Result<u64, String> {
     Err("--socket is only available on Unix platforms".into())
+}
+
+/// `tytra client` — a line-lockstep client for a running
+/// `tytra serve --socket` service: each non-empty stdin line is sent as
+/// one request and its response line is printed before the next request
+/// goes out, so the output order always matches the input order (and a
+/// shell pipe can never deadlock on full buffers).
+#[cfg(unix)]
+fn cmd_client(cli: &Cli) -> Result<String, String> {
+    use std::io::{BufRead, BufReader, Write};
+    let path = cli.flag("socket").ok_or("client: --socket PATH is required")?;
+    let stream = std::os::unix::net::UnixStream::connect(path)
+        .map_err(|e| format!("connect {path}: {e}"))?;
+    let mut reader =
+        BufReader::new(stream.try_clone().map_err(|e| format!("socket clone: {e}"))?);
+    let mut writer = stream;
+    let stdin = std::io::stdin();
+    let mut out = String::new();
+    for line in stdin.lock().lines() {
+        let line = line.map_err(|e| format!("stdin: {e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        writeln!(writer, "{line}").map_err(|e| format!("send: {e}"))?;
+        writer.flush().map_err(|e| format!("send: {e}"))?;
+        let mut resp = String::new();
+        let n = reader.read_line(&mut resp).map_err(|e| format!("recv: {e}"))?;
+        if n == 0 {
+            return Err("server closed the connection".into());
+        }
+        out.push_str(resp.trim_end_matches('\n'));
+        out.push('\n');
+    }
+    Ok(out.trim_end_matches('\n').to_string())
+}
+
+#[cfg(not(unix))]
+fn cmd_client(_cli: &Cli) -> Result<String, String> {
+    Err("client is only available on Unix platforms".into())
 }
 
 fn cmd_emit_hdl(cli: &Cli) -> Result<String, String> {
@@ -813,7 +875,8 @@ mod tests {
     #[test]
     fn serve_flags_parse() {
         let c = Cli::parse(&args(
-            "serve --timeout-ms 250 --cache-dir /tmp/tc --cache-budget 1024 --socket /tmp/s.sock",
+            "serve --timeout-ms 250 --cache-dir /tmp/tc --cache-budget 1024 --socket /tmp/s.sock \
+             --idle-timeout-ms 5000",
         ))
         .unwrap();
         assert_eq!(c.command, "serve");
@@ -821,7 +884,17 @@ mod tests {
         assert_eq!(c.flag("cache-dir"), Some("/tmp/tc"));
         assert_eq!(c.flag("cache-budget"), Some("1024"));
         assert_eq!(c.flag("socket"), Some("/tmp/s.sock"));
+        assert_eq!(c.flag("idle-timeout-ms"), Some("5000"));
         assert!(usage().contains("serve"));
+        assert!(usage().contains("client"));
+        assert!(usage().contains("idle-timeout-ms"));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn client_requires_a_socket() {
+        let e = dispatch(&args("client")).unwrap_err();
+        assert!(e.contains("--socket"), "{e}");
     }
 
     #[test]

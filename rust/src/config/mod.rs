@@ -28,6 +28,10 @@ pub struct Config {
     pub cache_budget_bytes: u64,
     /// Per-request timeout for `tytra serve`, milliseconds.
     pub serve_timeout_ms: u64,
+    /// Idle-connection timeout for `tytra serve --socket`, milliseconds:
+    /// a connection whose next request doesn't arrive in time is closed
+    /// gracefully. `0` disables the timeout.
+    pub serve_idle_timeout_ms: u64,
 }
 
 impl Default for Config {
@@ -41,6 +45,7 @@ impl Default for Config {
             cache_dir: None,
             cache_budget_bytes: crate::coordinator::DiskCache::DEFAULT_BUDGET_BYTES,
             serve_timeout_ms: 10_000,
+            serve_idle_timeout_ms: 300_000,
         }
     }
 }
@@ -109,6 +114,11 @@ impl Config {
                 "serve.timeout_ms" => {
                     self.serve_timeout_ms = get_int(v, "serve.timeout_ms")?.max(1) as u64;
                 }
+                "serve.idle_timeout_ms" => {
+                    // 0 is meaningful here: it disables the idle timeout.
+                    self.serve_idle_timeout_ms =
+                        get_int(v, "serve.idle_timeout_ms")?.max(0) as u64;
+                }
                 other => return Err(format!("unknown config key `{other}`")),
             }
         }
@@ -154,18 +164,24 @@ mod tests {
     #[test]
     fn parses_service_keys() {
         let c = Config::from_str(
-            "[cache]\ndir = \"/tmp/tc\"\nbudget_bytes = 1024\n[serve]\ntimeout_ms = 250\n",
+            "[cache]\ndir = \"/tmp/tc\"\nbudget_bytes = 1024\n[serve]\ntimeout_ms = 250\nidle_timeout_ms = 1500\n",
         )
         .unwrap();
         assert_eq!(c.cache_dir.as_deref(), Some("/tmp/tc"));
         assert_eq!(c.cache_budget_bytes, 1024);
         assert_eq!(c.serve_timeout_ms, 250);
+        assert_eq!(c.serve_idle_timeout_ms, 1500);
+        // 0 disables the idle timeout (unlike timeout_ms, which clamps)
+        let z = Config::from_str("[serve]\nidle_timeout_ms = 0\n").unwrap();
+        assert_eq!(z.serve_idle_timeout_ms, 0);
         let d = Config::default();
         assert_eq!(d.cache_dir, None);
         assert_eq!(d.cache_budget_bytes, crate::coordinator::DiskCache::DEFAULT_BUDGET_BYTES);
         assert_eq!(d.serve_timeout_ms, 10_000);
+        assert_eq!(d.serve_idle_timeout_ms, 300_000);
         assert!(Config::from_str("[cache]\ndir = 3").is_err());
         assert!(Config::from_str("[serve]\ntimeout_ms = \"fast\"").is_err());
+        assert!(Config::from_str("[serve]\nidle_timeout_ms = \"never\"").is_err());
     }
 
     #[test]

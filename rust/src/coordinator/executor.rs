@@ -1,0 +1,487 @@
+//! Long-lived sharded executor: the session-wide job engine.
+//!
+//! Replaces the per-call scoped [`crate::coordinator::pool::Pool`] on
+//! the `Session` hot path (the scoped pool survives as a standalone
+//! utility). One `Executor` is created per `Session` and shared by
+//! every clone of it — `tytra serve` connections all feed the same
+//! worker set, so a single process multiplexes many concurrent clients
+//! with one bounded queue providing fairness and backpressure.
+//!
+//! Design (std-only; tokio is unavailable in the offline image):
+//!
+//! * **Sharded deques.** Each worker owns a `VecDeque` shard; `map`
+//!   round-robins jobs across shards so one big sweep spreads evenly.
+//! * **Work stealing.** An idle worker pops its own shard front-first,
+//!   then steals from the *back* of `(me + k) % n` — the classic
+//!   owner-LIFO/thief-FIFO split, minus the lock-free machinery: all
+//!   shards live under **one** mutex. Job bodies (lowering, estimating,
+//!   simulating a design point) run three-plus orders of magnitude
+//!   longer than a deque operation, so the single lock is never the
+//!   bottleneck — and it is immune to the lost-wakeup/ABA bugs a
+//!   hand-rolled lock-free deque invites, which matters in a build
+//!   image with no way to run the test suite.
+//! * **Bounded submission.** `submit` blocks on a condvar once
+//!   `capacity = workers × 4` jobs are queued. A million-point sweep
+//!   therefore trickles into the queue as workers drain it, and a
+//!   second client's requests interleave fairly instead of waiting
+//!   behind the whole backlog.
+//! * **Panic isolation.** Every job runs under `catch_unwind`; a panic
+//!   fails *that job* with its label and the panic payload
+//!   (`` job `…` panicked: … ``) instead of aborting the process-level
+//!   sweep (the old `expect("pool worker panicked")`).
+//! * **Inline at one worker.** A 1-worker executor spawns no threads
+//!   and runs `map` on the caller — `dse::explore`'s documented
+//!   "spawns no threads" contract holds, and the submission queue
+//!   stays untouched (`queue_depth_max` remains 0 for the plain CLI).
+//!
+//! Invariant: jobs never call `map`/`submit` themselves (no nested
+//! fan-out), so a full queue can always drain and the executor cannot
+//! deadlock against its own backpressure.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of work: boxed, owned, runs once on some worker.
+pub type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Counters the executor maintains about itself (see
+/// [`crate::coordinator::metrics::Metrics`] for where they surface).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Jobs taken from another worker's shard.
+    pub steals: u64,
+    /// Jobs whose body panicked (each failed in isolation).
+    pub jobs_panicked: u64,
+    /// High-water mark of the submission queue depth.
+    pub queue_depth_max: u64,
+}
+
+struct State {
+    deques: Vec<VecDeque<Task>>,
+    queued: usize,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    /// Signalled when work arrives (workers wait here).
+    work: Condvar,
+    /// Signalled when a slot frees up (submitters wait here).
+    space: Condvar,
+    capacity: usize,
+    steals: AtomicU64,
+    panicked: AtomicU64,
+    depth_max: AtomicU64,
+}
+
+/// The sharded work-stealing executor. Long-lived: workers are spawned
+/// once and joined on drop. Cheap to share via `Arc` (the `Session`
+/// does exactly that).
+pub struct Executor {
+    inner: Arc<Inner>,
+    workers: usize,
+    /// Per-`map` round-robin offset so concurrent sweeps start on
+    /// different shards instead of all hammering shard 0.
+    rr: AtomicUsize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor").field("workers", &self.workers).finish()
+    }
+}
+
+impl Executor {
+    /// Executor with `n` workers (min 1). At 1 worker no threads are
+    /// spawned and all work runs inline on the callers.
+    pub fn new(n: usize) -> Executor {
+        let workers = n.max(1);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                deques: (0..workers).map(|_| VecDeque::new()).collect(),
+                queued: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            capacity: workers * 4,
+            steals: AtomicU64::new(0),
+            panicked: AtomicU64::new(0),
+            depth_max: AtomicU64::new(0),
+        });
+        let mut handles = Vec::new();
+        if workers > 1 {
+            for me in 0..workers {
+                let inner = Arc::clone(&inner);
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("tytra-exec-{me}"))
+                        .spawn(move || worker_loop(&inner, me, workers))
+                        .expect("spawn executor worker"),
+                );
+            }
+        }
+        Executor { inner, workers, rr: AtomicUsize::new(0), handles: Mutex::new(handles) }
+    }
+
+    /// Executor sized to the machine.
+    pub fn default_size() -> Executor {
+        Executor::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Executor self-observation counters.
+    pub fn stats(&self) -> ExecStats {
+        ExecStats {
+            steals: self.inner.steals.load(Ordering::Relaxed),
+            jobs_panicked: self.inner.panicked.load(Ordering::Relaxed),
+            queue_depth_max: self.inner.depth_max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Submit one task to the shard `hint % workers`, blocking while
+    /// the queue is at capacity (backpressure). On a 1-worker executor
+    /// the task runs inline on the caller.
+    pub fn submit(&self, hint: usize, task: Task) {
+        if self.workers == 1 {
+            task();
+            return;
+        }
+        let mut st = self.inner.state.lock().unwrap();
+        while st.queued >= self.inner.capacity && !st.shutdown {
+            st = self.inner.space.wait(st).unwrap();
+        }
+        if st.shutdown {
+            // Shutting down: run inline rather than silently dropping —
+            // a `map` in flight on another thread still completes.
+            drop(st);
+            task();
+            return;
+        }
+        let shard = hint % self.workers;
+        st.deques[shard].push_back(task);
+        st.queued += 1;
+        self.inner.depth_max.fetch_max(st.queued as u64, Ordering::Relaxed);
+        drop(st);
+        self.inner.work.notify_one();
+    }
+
+    /// Parallel map preserving input order, with per-job panic
+    /// isolation. `label` names each item for the panic error message
+    /// (called on the submitting thread). Returns one `Result` per
+    /// item: a panicking job yields `` Err("job `<label>` panicked: …") ``
+    /// while every other job completes normally.
+    pub fn map<T, R, F, L>(&self, items: Vec<T>, label: L, f: F) -> Vec<Result<R, String>>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(&T) -> Result<R, String> + Send + Sync + 'static,
+        L: Fn(&T) -> String,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.workers == 1 || n == 1 {
+            // Inline: no threads, no queue traffic, same isolation.
+            return items
+                .iter()
+                .map(|it| run_isolated(&f, it, || label(it), &self.inner.panicked))
+                .collect();
+        }
+
+        struct Inbox<R> {
+            /// (slots, completed-count)
+            slots: Mutex<(Vec<Option<Result<R, String>>>, usize)>,
+            done: Condvar,
+        }
+        let inbox = Arc::new(Inbox {
+            slots: Mutex::new(((0..n).map(|_| None).collect(), 0)),
+            done: Condvar::new(),
+        });
+        let f = Arc::new(f);
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        for (i, item) in items.into_iter().enumerate() {
+            let lbl = label(&item);
+            let f = Arc::clone(&f);
+            let inbox = Arc::clone(&inbox);
+            let panicked = Arc::clone(&self.inner);
+            self.submit(
+                start.wrapping_add(i),
+                Box::new(move || {
+                    let r = run_isolated(f.as_ref(), &item, move || lbl, &panicked.panicked);
+                    let mut g = inbox.slots.lock().unwrap();
+                    g.0[i] = Some(r);
+                    g.1 += 1;
+                    if g.1 == n {
+                        inbox.done.notify_all();
+                    }
+                }),
+            );
+        }
+        let mut g = inbox.slots.lock().unwrap();
+        while g.1 < n {
+            g = inbox.done.wait(g).unwrap();
+        }
+        let slots = std::mem::take(&mut g.0);
+        drop(g);
+        slots.into_iter().map(|o| o.expect("executor job skipped a slot")).collect()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.work.notify_all();
+        self.inner.space.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run `f(item)` under `catch_unwind`, turning a panic into a per-job
+/// error carrying the job's label and the panic payload.
+fn run_isolated<T, R, F, L>(f: &F, item: &T, label: L, panicked: &AtomicU64) -> Result<R, String>
+where
+    F: Fn(&T) -> Result<R, String>,
+    L: FnOnce() -> String,
+{
+    match catch_unwind(AssertUnwindSafe(|| f(item))) {
+        Ok(r) => r,
+        Err(payload) => {
+            panicked.fetch_add(1, Ordering::Relaxed);
+            Err(format!("job `{}` panicked: {}", label(), panic_message(payload)))
+        }
+    }
+}
+
+/// Extract the human-readable message from a panic payload (shared
+/// with `pool::Pool::try_map`'s per-item isolation).
+pub(crate) fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    match p.downcast::<String>() {
+        Ok(s) => *s,
+        Err(p) => match p.downcast::<&'static str>() {
+            Ok(s) => (*s).to_string(),
+            Err(_) => "non-string panic payload".to_string(),
+        },
+    }
+}
+
+/// Worker `me` of `n`: pop own shard front-first, else steal from the
+/// back of the next non-empty shard, else sleep on the `work` condvar.
+fn worker_loop(inner: &Inner, me: usize, n: usize) {
+    loop {
+        let task = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if let Some(t) = st.deques[me].pop_front() {
+                    st.queued -= 1;
+                    break Some(t);
+                }
+                let mut stolen = None;
+                for k in 1..n {
+                    if let Some(t) = st.deques[(me + k) % n].pop_back() {
+                        stolen = Some(t);
+                        break;
+                    }
+                }
+                if let Some(t) = stolen {
+                    st.queued -= 1;
+                    inner.steals.fetch_add(1, Ordering::Relaxed);
+                    break Some(t);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = inner.work.wait(st).unwrap();
+            }
+        };
+        match task {
+            Some(t) => {
+                // A slot freed up: wake one blocked submitter, then run
+                // the job body outside the lock.
+                inner.space.notify_one();
+                t();
+            }
+            None => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Barrier;
+    use std::time::Duration;
+
+    #[test]
+    fn map_preserves_order() {
+        let ex = Executor::new(8);
+        let out = ex.map((0..100).collect(), |i| format!("#{i}"), |&x: &i32| Ok(x * 2));
+        let got: Vec<i32> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(got, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let ex = Executor::new(4);
+        let out: Vec<Result<i32, String>> = ex.map(Vec::new(), |_: &i32| String::new(), |&x| Ok(x));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn one_worker_runs_inline_and_touches_no_queue() {
+        let ex = Executor::new(1);
+        let me = std::thread::current().id();
+        let out = ex.map(
+            vec![1, 2, 3],
+            |i| format!("#{i}"),
+            move |&x: &i32| {
+                assert_eq!(std::thread::current().id(), me, "1-worker map must run on the caller");
+                Ok(x + 1)
+            },
+        );
+        assert_eq!(out.into_iter().map(|r| r.unwrap()).collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert_eq!(ex.stats().queue_depth_max, 0, "inline path must not touch the queue");
+    }
+
+    #[test]
+    fn panicking_job_fails_alone_with_its_label() {
+        let ex = Executor::new(4);
+        let out = ex.map(
+            (0..10).collect(),
+            |i| format!("point-{i}"),
+            |&x: &i32| {
+                if x == 3 {
+                    panic!("injected failure for x={x}");
+                }
+                Ok(x)
+            },
+        );
+        for (i, r) in out.iter().enumerate() {
+            if i == 3 {
+                let e = r.as_ref().unwrap_err();
+                assert!(e.contains("job `point-3` panicked"), "bad error: {e}");
+                assert!(e.contains("injected failure for x=3"), "payload lost: {e}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i as i32, "other jobs must succeed");
+            }
+        }
+        assert_eq!(ex.stats().jobs_panicked, 1);
+    }
+
+    #[test]
+    fn panic_isolated_inline_too() {
+        let ex = Executor::new(1);
+        let out = ex.map(vec![0, 1], |i| format!("p{i}"), |&x: &i32| {
+            if x == 1 {
+                panic!("boom");
+            }
+            Ok(x)
+        });
+        assert_eq!(*out[0].as_ref().unwrap(), 0);
+        assert!(out[1].as_ref().unwrap_err().contains("job `p1` panicked: boom"));
+        assert_eq!(ex.stats().jobs_panicked, 1);
+    }
+
+    #[test]
+    fn idle_worker_steals_from_a_loaded_shard() {
+        // Two workers; both jobs submitted to shard 0, and both must be
+        // running simultaneously to pass the barrier — which forces
+        // worker 1 to steal the second job from worker 0's shard.
+        let ex = Executor::new(2);
+        let barrier = Arc::new(Barrier::new(2));
+        let (tx, rx) = mpsc::channel::<usize>();
+        for j in 0..2usize {
+            let barrier = Arc::clone(&barrier);
+            let tx = tx.clone();
+            ex.submit(
+                0,
+                Box::new(move || {
+                    barrier.wait();
+                    tx.send(j).unwrap();
+                }),
+            );
+        }
+        let mut got = vec![
+            rx.recv_timeout(Duration::from_secs(10)).expect("job 1 finished"),
+            rx.recv_timeout(Duration::from_secs(10)).expect("job 2 finished"),
+        ];
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1]);
+        assert!(ex.stats().steals >= 1, "the barrier is only passable via a steal");
+    }
+
+    #[test]
+    fn backpressure_caps_queue_depth() {
+        let ex = Executor::new(2); // capacity = 8
+        let out = ex.map(
+            (0..200).collect(),
+            |i| format!("#{i}"),
+            |&x: &i32| {
+                std::thread::sleep(Duration::from_micros(200));
+                Ok(x)
+            },
+        );
+        assert_eq!(out.len(), 200);
+        let depth = ex.stats().queue_depth_max;
+        assert!(depth >= 1, "queue must have been used");
+        assert!(depth <= 8, "submission queue exceeded capacity: {depth}");
+    }
+
+    #[test]
+    fn concurrent_maps_share_the_workers_and_stay_ordered() {
+        // Several client threads mapping over one executor at once —
+        // the serve multiplexing shape. Each map's output must be its
+        // own, in its own order.
+        let ex = Arc::new(Executor::new(4));
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for c in 0..4u64 {
+                let ex = Arc::clone(&ex);
+                joins.push(s.spawn(move || {
+                    let base = c * 1000;
+                    let out = ex.map(
+                        (base..base + 50).collect(),
+                        |i| format!("c{c}-{i}"),
+                        |&x: &u64| Ok(x * 3),
+                    );
+                    let got: Vec<u64> = out.into_iter().map(|r| r.unwrap()).collect();
+                    assert_eq!(got, (base..base + 50).map(|x| x * 3).collect::<Vec<_>>());
+                }));
+            }
+            for j in joins {
+                j.join().expect("client thread");
+            }
+        });
+    }
+
+    #[test]
+    fn actually_parallel() {
+        let ex = Executor::new(8);
+        let t0 = std::time::Instant::now();
+        let out = ex.map(
+            (0..8).collect(),
+            |i| format!("#{i}"),
+            |_: &i32| {
+                std::thread::sleep(Duration::from_millis(30));
+                Ok(())
+            },
+        );
+        assert!(out.iter().all(|r| r.is_ok()));
+        assert!(t0.elapsed() < Duration::from_millis(8 * 30 / 2));
+    }
+}

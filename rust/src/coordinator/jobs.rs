@@ -1,21 +1,34 @@
 //! Parallel DSE job fan-out: the L3 coordination layer proper — and,
 //! since the serial/parallel split was deleted, the **only** exploration
 //! code path: `dse::explore` delegates here. A sweep becomes a vector of
-//! point jobs executed on the worker pool; results fan back in
-//! deterministically and feed Pareto selection (assembled by
-//! `dse::assemble`, shared with the serial façade). The kernel is
-//! analysed (`frontend::analyze_kernel`) **once per sweep** — each job
-//! only replays the cheap per-point specialisation — and the cache
-//! short-circuits the estimate itself on repeat evaluations across
-//! sweeps in one session.
+//! point jobs executed on the session's long-lived sharded
+//! [`Executor`]; results fan back in deterministically and feed Pareto
+//! selection (assembled by `dse::assemble`, shared with the serial
+//! façade). The kernel is analysed (`frontend::analyze_kernel`) **once
+//! per sweep** — each job only replays the cheap per-point
+//! specialisation — and the cache short-circuits the estimate itself on
+//! repeat evaluations across sweeps in one session.
+//!
+//! Two scheduling properties matter here:
+//!
+//! * **Cache-aware planning.** When a persistent cache is attached,
+//!   every point probes the disk under its *enumerated* label **before
+//!   lowering**: a hit replays the full candidate (realised point,
+//!   estimate, wall check) without ever calling `lower_point` — a warm
+//!   sweep skips the whole frontend (`planner_skipped_lowering` counts
+//!   the skips; `lowerings` stays at zero on a fully-warm sweep).
+//! * **Per-point pipelining.** Lower → estimate → (simulate) all happen
+//!   inside one job, so the sweep never barriers between stages: point
+//!   A can be simulating while point B is still lowering, and the
+//!   executor's bounded queue interleaves concurrent sweeps fairly.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use super::cache::{key, EstimateCache, KernelCache};
+use super::executor::Executor;
 use super::metrics::Metrics;
-use super::persist::{DiskCache, Load, PersistKey};
-use super::pool::Pool;
+use super::persist::{DiskCache, Entry, Load, PersistKey};
 use crate::device::Device;
 use crate::dse::{self, Exploration, SweepLimits};
 use crate::estimator::{self, CostDb, Estimate};
@@ -25,17 +38,18 @@ use crate::tir::Module;
 use crate::transform;
 use crate::util::ContentHash;
 
-/// A parallel exploration session: pool + shared caches (estimates,
-/// compiled simulation kernels, memoised transform passes, optionally a
-/// persistent on-disk estimate cache) + metrics + the process-wide cost
-/// database.
+/// A parallel exploration session: a long-lived sharded executor +
+/// shared caches (estimates, compiled simulation kernels, memoised
+/// transform passes, optionally a persistent on-disk estimate cache) +
+/// metrics + the process-wide cost database.
 ///
-/// `Clone` shares every cache and the metrics — a cloned session is a
-/// handle onto the same state, which is what the serve loop's
-/// per-request worker threads need.
+/// `Clone` shares every cache, the executor *and* the metrics — a
+/// cloned session is a handle onto the same state, which is what the
+/// serve loop's per-connection threads need: every client's jobs feed
+/// one worker set, so a single process multiplexes many clients.
 #[derive(Clone)]
 pub struct Session {
-    pool: Pool,
+    exec: Arc<Executor>,
     cache: Arc<EstimateCache>,
     kernels: Arc<KernelCache>,
     xforms: Arc<transform::Memo>,
@@ -47,7 +61,7 @@ pub struct Session {
 impl Default for Session {
     /// Session sized to the machine.
     fn default() -> Session {
-        Session::with_pool(Pool::default_size())
+        Session::with_executor(Executor::default_size())
     }
 }
 
@@ -84,12 +98,12 @@ pub struct ValidatedPoint {
 impl Session {
     /// New session with `jobs` workers.
     pub fn new(jobs: usize) -> Session {
-        Session::with_pool(Pool::new(jobs))
+        Session::with_executor(Executor::new(jobs))
     }
 
-    fn with_pool(pool: Pool) -> Session {
+    fn with_executor(exec: Executor) -> Session {
         Session {
-            pool,
+            exec: Arc::new(exec),
             cache: Arc::new(EstimateCache::new()),
             kernels: Arc::new(KernelCache::new()),
             xforms: Arc::new(transform::Memo::new()),
@@ -100,8 +114,9 @@ impl Session {
     }
 
     /// The same session with a persistent on-disk estimate cache
-    /// attached: every in-memory estimate miss probes (and backfills)
-    /// the cache directory, so estimates survive across processes.
+    /// attached: the planner probes it *before lowering* each point
+    /// (replaying hits without touching the frontend) and backfills it
+    /// on every live evaluation, so estimates survive across processes.
     pub fn with_disk_cache(mut self, disk: Arc<DiskCache>) -> Session {
         self.disk = Some(disk);
         self
@@ -112,8 +127,14 @@ impl Session {
         self.disk.as_deref()
     }
 
-    /// Session metrics.
+    /// The session's shared executor (every clone feeds the same one).
+    pub fn executor(&self) -> &Executor {
+        &self.exec
+    }
+
+    /// Session metrics (executor counters freshly mirrored in).
     pub fn metrics(&self) -> &Metrics {
+        self.sync_exec_stats();
         &self.metrics
     }
 
@@ -125,6 +146,16 @@ impl Session {
     /// Compiled-kernel cache statistics (hits, misses).
     pub fn kernel_cache_stats(&self) -> (u64, u64) {
         self.kernels.stats()
+    }
+
+    /// Mirror the executor's monotone self-observation counters into
+    /// the metrics set (`set_max`: clone-shared metrics never move
+    /// backwards however many threads sync at once).
+    fn sync_exec_stats(&self) {
+        let s = self.exec.stats();
+        self.metrics.steals.set_max(s.steals);
+        self.metrics.queue_depth_max.set_max(s.queue_depth_max);
+        self.metrics.jobs_panicked.set_max(s.jobs_panicked);
     }
 
     /// The batched simulation bytecode for a module, through the
@@ -168,7 +199,9 @@ impl Session {
     }
 
     /// Explore from a pre-analysed kernel (the batched sweep path —
-    /// analysis already amortised by the caller).
+    /// analysis already amortised by the caller). Point jobs go through
+    /// the shared executor; the job closures own clones of the session
+    /// handle/kernel/device because the executor outlives any one call.
     pub fn explore_lowered(
         &self,
         key_src: &str,
@@ -178,8 +211,15 @@ impl Session {
     ) -> Result<Exploration, String> {
         let t0 = Instant::now();
         let points = dse::enumerate(limits);
-        let results: Vec<Result<dse::Candidate, String>> =
-            self.pool.map(points, |&point| self.evaluate_cached(key_src, lk, point, dev));
+        let sess = self.clone();
+        let key_src_owned = key_src.to_string();
+        let lk = Arc::new(lk.clone());
+        let dev_job = dev.clone();
+        let results = self.exec.map(
+            points,
+            |p| p.label(),
+            move |&point| sess.evaluate_cached(&key_src_owned, &lk, point, &dev_job),
+        );
         let mut candidates = Vec::with_capacity(results.len());
         for r in results {
             candidates.push(r?);
@@ -187,14 +227,18 @@ impl Session {
         let expl = dse::assemble(candidates, dev);
         self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
         self.metrics.sweeps.inc();
+        self.sync_exec_stats();
         Ok(expl)
     }
 
     /// Per-point lowering through the session's transform memo: a
     /// recipe sharing a pass-prefix with an already-evaluated one
     /// replays the prefix from the memo and only runs the suffix live
-    /// (classified into the `xform_memo_*` metrics).
+    /// (classified into the `xform_memo_*` metrics). Every call counts
+    /// one `lowerings` — the counter the cache-aware planner's
+    /// "zero frontend work on a warm sweep" guarantee is pinned against.
     fn lower_memoised(&self, lk: &LoweredKernel, point: DesignPoint) -> Result<Module, String> {
+        self.metrics.lowerings.inc();
         let (module, memo_use) = frontend::lower::lower_point_memo(lk, point, Some(&self.xforms))?;
         match memo_use {
             Some(transform::MemoUse::Full) => self.metrics.xform_memo_full.inc(),
@@ -205,20 +249,13 @@ impl Session {
         Ok(module)
     }
 
-    /// Estimate a realised point, through the persistent cache when one
-    /// is attached. Disk problems never fail the job: a corrupt entry
-    /// is discarded and recomputed (`cache_recovered`), a failed
-    /// write-back is logged and skipped.
-    fn estimate_point(
-        &self,
-        key_src: &str,
-        point: &DesignPoint,
-        dev: &Device,
-        module: &Module,
-    ) -> Result<Estimate, String> {
-        let Some(disk) = &self.disk else {
-            return estimator::estimate_with_db(module, dev, self.db);
-        };
+    /// Probe the persistent cache under the **enumerated** point's key
+    /// (computable before any lowering). Disk problems never fail a
+    /// job: a corrupt entry is discarded and recomputed
+    /// (`cache_recovered`). Returns `None` when no disk cache is
+    /// attached (and then counts nothing).
+    fn probe_entry(&self, key_src: &str, point: DesignPoint, dev: &Device) -> Option<Entry> {
+        let disk = self.disk.as_ref()?;
         let label = point.label();
         let recipe = point.transforms.name();
         let pk = PersistKey {
@@ -228,27 +265,50 @@ impl Session {
             recipe: &recipe,
         };
         match disk.load(&pk) {
-            Load::Hit(e) => {
+            Load::Hit(entry) => {
                 self.metrics.disk_hits.inc();
-                return Ok(e);
+                Some(entry)
             }
-            Load::Miss => self.metrics.disk_misses.inc(),
+            Load::Miss => {
+                self.metrics.disk_misses.inc();
+                None
+            }
             Load::Recovered => {
                 self.metrics.cache_recovered.inc();
                 self.metrics.disk_misses.inc();
+                None
             }
         }
-        let e = estimator::estimate_with_db(module, dev, self.db)?;
-        if let Err(err) = disk.store(&pk, &e) {
-            eprintln!("tytra: persistent cache store failed: {err}");
-        }
-        Ok(e)
     }
 
-    /// Evaluate one design point: cheap per-point lowering (through the
-    /// transform memo), then the estimate through the session cache (a
-    /// hit skips the estimator entirely; the wall check re-runs — it is
-    /// device-cheap and the `Candidate` needs the module anyway).
+    /// Write the replay record for an evaluated point back to the
+    /// persistent cache (keyed by the enumerated point, carrying the
+    /// realised one). A failed write is logged and skipped — the sweep
+    /// result never depends on disk health.
+    fn store_entry(&self, key_src: &str, point: &DesignPoint, dev: &Device, entry: &Entry) {
+        let Some(disk) = &self.disk else { return };
+        let label = point.label();
+        let recipe = point.transforms.name();
+        let pk = PersistKey {
+            kernel_hash: ContentHash::of(key_src.as_bytes()),
+            device: &dev.name,
+            label: &label,
+            recipe: &recipe,
+        };
+        if let Err(err) = disk.store(&pk, entry) {
+            eprintln!("tytra: persistent cache store failed: {err}");
+        }
+    }
+
+    /// Evaluate one design point. Cache-aware planning first: a
+    /// persistent-cache hit under the enumerated key replays the whole
+    /// candidate — realised point, estimate, and a wall check
+    /// reconstructed via `check_with_bytes` from the persisted
+    /// `bytes_per_workgroup` — **without lowering at all** (the
+    /// `planner_skipped_lowering` path). Otherwise: cheap per-point
+    /// lowering (through the transform memo), the estimate through the
+    /// session cache, the wall check, and a write-back of the replay
+    /// record.
     fn evaluate_cached(
         &self,
         key_src: &str,
@@ -257,27 +317,48 @@ impl Session {
         dev: &Device,
     ) -> Result<dse::Candidate, String> {
         self.metrics.jobs.inc();
+        if let Some(entry) = self.probe_entry(key_src, point, dev) {
+            self.metrics.planner_skipped_lowering.inc();
+            let walls = dse::walls::check_with_bytes(entry.bytes_per_workgroup, &entry.estimate, dev);
+            return Ok(dse::Candidate {
+                point: entry.realised,
+                module: None,
+                estimate: entry.estimate,
+                walls,
+            });
+        }
         let module = self.lower_memoised(lk, point)?;
         // Same normalisation as `dse::evaluate_lowered`: a degenerate
         // chained point realises the unchained module and must be
         // keyed/labelled as such (the cache then also short-circuits the
         // duplicate estimate).
-        let point = frontend::lower::realised_point(&module, point);
-        let ck = key(key_src, &point.label(), &dev.name);
+        let realised = frontend::lower::realised_point(&module, point);
+        let ck = key(key_src, &realised.label(), &dev.name);
         let estimate = self
             .cache
-            .get_or_insert_with(ck, || self.estimate_point(key_src, &point, dev, &module))?;
-        let walls = dse::walls::check(&module, &estimate, dev);
-        Ok(dse::Candidate { point, module, estimate, walls })
+            .get_or_insert_with(ck, || estimator::estimate_with_db(&module, dev, self.db))?;
+        let bytes = dse::walls::bytes_per_workgroup(&module);
+        let walls = dse::walls::check_with_bytes(bytes, &estimate, dev);
+        self.store_entry(
+            key_src,
+            &point,
+            dev,
+            &Entry { estimate: estimate.clone(), realised, bytes_per_workgroup: bytes },
+        );
+        Ok(dse::Candidate { point: realised, module: Some(module), estimate, walls })
     }
 
     /// Validated sweep: every design point is lowered, estimated *and*
     /// simulated against a seeded workload — the heavyweight flow the
-    /// estimator exists to avoid, run here to pin it down. This is the
-    /// path the `KernelCache` pays for itself on: each realised module
-    /// compiles once per session, so repeated sweeps (and degenerate
-    /// points realising an already-seen module) replay cached bytecode
-    /// through `sim::simulate_compiled` instead of re-lowering.
+    /// estimator exists to avoid, run here to pin it down. The whole
+    /// lower → estimate → simulate chain is **one job per point** on
+    /// the executor (no stage barriers across the sweep), and the
+    /// planner's disk probe still runs first: validation needs the
+    /// module either way, so a hit skips the estimator rather than the
+    /// frontend. This is also the path the `KernelCache` pays for
+    /// itself on: each realised module compiles once per session, so
+    /// repeated sweeps (and degenerate points realising an already-seen
+    /// module) replay cached bytecode through `sim::simulate_compiled`.
     pub fn validate_sweep(
         &self,
         k: &KernelDef,
@@ -286,28 +367,49 @@ impl Session {
         seed: u64,
     ) -> Result<Vec<ValidatedPoint>, String> {
         let t0 = Instant::now();
-        let lk = frontend::analyze_kernel(k)?;
+        let lk = Arc::new(frontend::analyze_kernel(k)?);
         let key_src = format!("kerneldef:{k:?}");
         let points = dse::enumerate(limits);
-        let results: Vec<Result<ValidatedPoint, String>> = self.pool.map(points, |&point| {
-            self.metrics.jobs.inc();
-            let module = self.lower_memoised(&lk, point)?;
-            let point = frontend::lower::realised_point(&module, point);
-            let ck = key(&key_src, &point.label(), &dev.name);
-            let estimate = self
-                .cache
-                .get_or_insert_with(ck, || self.estimate_point(&key_src, &point, dev, &module))?;
-            let compiled = self.compiled_kernel(&module)?;
-            let w = sim::Workload::random_for(&module, seed);
-            let r = sim::simulate_compiled(&compiled, dev, &w)?;
-            Ok(ValidatedPoint {
-                point,
-                estimate,
-                cycles_per_pass: r.cycles_per_pass,
-                total_cycles: r.total_cycles,
-                mems: r.mems,
-            })
-        });
+        let sess = self.clone();
+        let dev_job = dev.clone();
+        let results = self.exec.map(
+            points,
+            |p| p.label(),
+            move |&point| {
+                let dev = &dev_job;
+                sess.metrics.jobs.inc();
+                let planned = sess.probe_entry(&key_src, point, dev);
+                let module = sess.lower_memoised(&lk, point)?;
+                let realised = frontend::lower::realised_point(&module, point);
+                let estimate = match planned {
+                    Some(entry) => entry.estimate,
+                    None => {
+                        let ck = key(&key_src, &realised.label(), &dev.name);
+                        let estimate = sess
+                            .cache
+                            .get_or_insert_with(ck, || estimator::estimate_with_db(&module, dev, sess.db))?;
+                        let bytes = dse::walls::bytes_per_workgroup(&module);
+                        sess.store_entry(
+                            &key_src,
+                            &point,
+                            dev,
+                            &Entry { estimate: estimate.clone(), realised, bytes_per_workgroup: bytes },
+                        );
+                        estimate
+                    }
+                };
+                let compiled = sess.compiled_kernel(&module)?;
+                let w = sim::Workload::random_for(&module, seed);
+                let r = sim::simulate_compiled(&compiled, dev, &w)?;
+                Ok(ValidatedPoint {
+                    point: realised,
+                    estimate,
+                    cycles_per_pass: r.cycles_per_pass,
+                    total_cycles: r.total_cycles,
+                    mems: r.mems,
+                })
+            },
+        );
         // Degenerate enumerated points (e.g. a reduction kernel clamping
         // every lanes > 1 back to 1) realise byte-identical modules under
         // the same realised label — report each realised point once.
@@ -321,6 +423,7 @@ impl Session {
         }
         self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
         self.metrics.sweeps.inc();
+        self.sync_exec_stats();
         Ok(out)
     }
 
@@ -338,10 +441,10 @@ impl Session {
     }
 
     /// Batched exploration over a (kernel × device) grid. All
-    /// kernel/device/point triples flatten into **one** job list over the
-    /// pool, so a wide grid keeps every worker busy even when a single
-    /// sweep has fewer points than workers. Results come back grouped
-    /// per (kernel, device) cell in grid order.
+    /// kernel/device/point triples flatten into **one** job list over
+    /// the executor, so a wide grid keeps every worker busy even when a
+    /// single sweep has fewer points than workers. Results come back
+    /// grouped per (kernel, device) cell in grid order.
     pub fn explore_batch(
         &self,
         kernels: &[(String, KernelDef)],
@@ -351,6 +454,9 @@ impl Session {
         let t0 = Instant::now();
         let lks: Vec<LoweredKernel> =
             kernels.iter().map(|(_, k)| frontend::analyze_kernel(k)).collect::<Result<_, _>>()?;
+        let lks = Arc::new(lks);
+        let srcs: Arc<Vec<String>> = Arc::new(kernels.iter().map(|(s, _)| s.clone()).collect());
+        let devs: Arc<Vec<Device>> = Arc::new(devices.to_vec());
         let points = dse::enumerate(limits);
         let mut jobs = Vec::with_capacity(kernels.len() * devices.len() * points.len());
         for ki in 0..kernels.len() {
@@ -360,13 +466,17 @@ impl Session {
                 }
             }
         }
-        let results = self
-            .pool
-            .map(jobs, |&(ki, di, p)| self.evaluate_cached(&kernels[ki].0, &lks[ki], p, &devices[di]));
+        let sess = self.clone();
+        let results = self.exec.map(
+            jobs,
+            |&(ki, di, p)| format!("{}×{} {}", kernels[ki].1.name, devices[di].name, p.label()),
+            move |&(ki, di, p)| sess.evaluate_cached(&srcs[ki], &lks[ki], p, &devs[di]),
+        );
         // Record wall time for the fan-out unconditionally, and surface
         // any job failure *before* counting sweeps — a failed batch must
         // not leave `sweeps` advanced for half its cells.
         self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
+        self.sync_exec_stats();
         let mut flat = Vec::with_capacity(results.len());
         for r in results {
             flat.push(r?);
@@ -454,6 +564,25 @@ mod tests {
         session.explore(src, &k, &Device::stratix4(), &SweepLimits::default()).unwrap();
         assert_eq!(session.metrics().jobs.get(), 15);
         assert_eq!(session.metrics().sweeps.get(), 1);
+        // every point was lowered live (no disk cache attached)
+        assert_eq!(session.metrics().lowerings.get(), 15);
+        assert_eq!(session.metrics().planner_skipped_lowering.get(), 0);
+    }
+
+    #[test]
+    fn executor_counters_surface_in_metrics() {
+        let src = simple_kernel_source();
+        let k = parse_kernel(src).unwrap();
+        let session = Session::new(4);
+        session.explore(src, &k, &Device::stratix4(), &SweepLimits::default()).unwrap();
+        // 15 points over 4 workers go through the bounded queue
+        assert!(session.metrics().queue_depth_max.get() >= 1);
+        assert_eq!(session.metrics().jobs_panicked.get(), 0);
+        // …and the same numbers are visible on the executor itself
+        assert_eq!(
+            session.executor().stats().queue_depth_max,
+            session.metrics().queue_depth_max.get()
+        );
     }
 
     #[test]
@@ -623,21 +752,35 @@ mod tests {
         assert_eq!(cold.metrics().disk_hits.get(), 0, "cold directory has no entries");
         assert_eq!(cold.metrics().disk_misses.get(), 6);
         assert_eq!(cold.metrics().cache_recovered.get(), 0);
+        assert_eq!(cold.metrics().lowerings.get(), 6, "cold sweep lowers every point");
+        assert_eq!(cold.metrics().planner_skipped_lowering.get(), 0);
         assert_eq!(disk.entries().len(), 6, "every miss wrote back");
 
         // A fresh session over the same directory models a process
-        // restart: the in-memory cache is empty, the disk is warm.
+        // restart: the in-memory cache is empty, the disk is warm — and
+        // the planner replays every point without touching the frontend.
         let warm = Session::new(2).with_disk_cache(disk.clone());
         let b = warm.explore(src, &k, &dev, &limits).unwrap();
         assert_eq!(warm.metrics().disk_hits.get(), 6, "every estimate came off disk");
         assert_eq!(warm.metrics().disk_misses.get(), 0);
         assert_eq!(warm.metrics().cache_recovered.get(), 0);
+        assert_eq!(
+            warm.metrics().lowerings.get(),
+            0,
+            "cache-aware planning: a fully-warm sweep never calls lower_point"
+        );
+        assert_eq!(warm.metrics().planner_skipped_lowering.get(), 6);
+        assert!(warm.metrics().summary().contains("planner_skipped=6"), "{}", warm.metrics().summary());
         assert_eq!(a.candidates.len(), b.candidates.len());
         for (x, y) in a.candidates.iter().zip(&b.candidates) {
             assert_eq!(x.point, y.point);
             assert_eq!(x.estimate, y.estimate, "{}", x.point.label());
             assert_eq!(x.estimate.ewgt.to_bits(), y.estimate.ewgt.to_bits());
             assert_eq!(x.estimate.fmax_mhz.to_bits(), y.estimate.fmax_mhz.to_bits());
+            // the replayed wall check reconstructs bit-identically from
+            // the persisted bytes_per_workgroup
+            assert_eq!(x.walls, y.walls, "{}", x.point.label());
+            assert!(y.module.is_none(), "replayed candidates carry no module");
         }
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -663,6 +806,9 @@ mod tests {
         let b = warm.explore(src, &k, &dev, &limits).unwrap();
         assert_eq!(warm.metrics().cache_recovered.get(), 1);
         assert_eq!(warm.metrics().disk_hits.get(), 5);
+        // exactly the recovered point went through the frontend
+        assert_eq!(warm.metrics().lowerings.get(), 1);
+        assert_eq!(warm.metrics().planner_skipped_lowering.get(), 5);
         for (x, y) in a.candidates.iter().zip(&b.candidates) {
             assert_eq!(x.estimate, y.estimate, "{}", x.point.label());
         }
@@ -691,5 +837,38 @@ mod tests {
         // all six enumerated points were still evaluated (and the
         // duplicates served from the caches)
         assert_eq!(session.metrics().jobs.get(), 6);
+    }
+
+    #[test]
+    fn degenerate_aliases_replay_from_disk_too() {
+        // A reduction kernel's 6 enumerated points clamp to 3 realised
+        // ones; each enumerated point still gets its own disk entry
+        // (aliases carrying the shared realised record), so a warm sweep
+        // skips the frontend for *all* of them — degenerate or not.
+        let dir = std::env::temp_dir()
+            .join(format!("tytra-jobs-alias-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let disk =
+            Arc::new(DiskCache::open(&dir, DiskCache::DEFAULT_BUDGET_BYTES).unwrap());
+        let (_, k) = crate::kernels::resolve_specs(&["builtin:dotn".to_string()])
+            .unwrap()
+            .remove(0);
+        let dev = Device::stratix4();
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
+        let a = Session::new(2).with_disk_cache(disk.clone()).explore_def(&k, &dev, &limits).unwrap();
+        assert_eq!(disk.entries().len(), 6, "one entry per enumerated point");
+
+        let warm = Session::new(2).with_disk_cache(disk.clone());
+        let b = warm.explore_def(&k, &dev, &limits).unwrap();
+        assert_eq!(warm.metrics().lowerings.get(), 0);
+        assert_eq!(warm.metrics().planner_skipped_lowering.get(), 6);
+        // replayed aliases still collapse to one row per realised label
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.point, y.point);
+            assert_eq!(x.estimate, y.estimate, "{}", x.point.label());
+            assert_eq!(x.walls, y.walls, "{}", x.point.label());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -20,6 +20,12 @@ impl Counter {
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
+    /// Raise to at least `v` — used to mirror monotone counters owned
+    /// elsewhere (the executor's lifetime stats) into the metrics set
+    /// without double-counting or ever moving backwards.
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
 }
 
 /// Coordinator metrics.
@@ -52,6 +58,21 @@ pub struct Metrics {
     pub xform_memo_partial: Counter,
     /// Recipe evaluations that ran entirely live.
     pub xform_memo_miss: Counter,
+    /// Points actually lowered (`lower_point` runs). The cache-aware
+    /// planner's hard pin: a fully-warm sweep keeps this at zero.
+    pub lowerings: Counter,
+    /// Points the planner replayed straight from the disk cache —
+    /// probed *before* lowering, so the whole frontend was skipped.
+    pub planner_skipped_lowering: Counter,
+    /// Executor: jobs a worker stole from another worker's shard
+    /// (mirrored from `ExecStats`).
+    pub steals: Counter,
+    /// Executor: high-water mark of the bounded submission queue
+    /// (mirrored from `ExecStats`).
+    pub queue_depth_max: Counter,
+    /// Executor: jobs that panicked and were isolated into per-point
+    /// errors (mirrored from `ExecStats`).
+    pub jobs_panicked: Counter,
 }
 
 impl Metrics {
@@ -85,6 +106,21 @@ impl Metrics {
             (self.xform_memo_full.get(), self.xform_memo_partial.get(), self.xform_memo_miss.get());
         if mf + mp + mm > 0 {
             s.push_str(&format!(" memo_full={mf} memo_partial={mp} memo_miss={mm}"));
+        }
+        if self.planner_skipped_lowering.get() > 0 {
+            s.push_str(&format!(
+                " lowerings={} planner_skipped={}",
+                self.lowerings.get(),
+                self.planner_skipped_lowering.get()
+            ));
+        }
+        if self.steals.get() + self.queue_depth_max.get() + self.jobs_panicked.get() > 0 {
+            s.push_str(&format!(
+                " steals={} queue_depth_max={} jobs_panicked={}",
+                self.steals.get(),
+                self.queue_depth_max.get(),
+                self.jobs_panicked.get()
+            ));
         }
         s
     }
@@ -120,6 +156,32 @@ mod tests {
         m.xform_memo_partial.add(2);
         m.xform_memo_miss.add(3);
         assert!(m.summary().contains("memo_full=1 memo_partial=2 memo_miss=3"), "{}", m.summary());
+    }
+
+    #[test]
+    fn planner_and_executor_sections_appear_only_when_used() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("planner_skipped"));
+        assert!(!m.summary().contains("steals"));
+        m.lowerings.add(4);
+        // lowerings alone (every live sweep) keeps the line unchanged;
+        // only an actual planner skip switches the section on
+        assert!(!m.summary().contains("lowerings"), "{}", m.summary());
+        m.planner_skipped_lowering.add(2);
+        assert!(m.summary().contains("lowerings=4 planner_skipped=2"), "{}", m.summary());
+        m.steals.set_max(3);
+        m.queue_depth_max.set_max(7);
+        assert!(m.summary().contains("steals=3 queue_depth_max=7 jobs_panicked=0"), "{}", m.summary());
+    }
+
+    #[test]
+    fn set_max_never_moves_backwards() {
+        let c = Counter::default();
+        c.set_max(5);
+        c.set_max(3);
+        assert_eq!(c.get(), 5);
+        c.set_max(9);
+        assert_eq!(c.get(), 9);
     }
 
     #[test]

@@ -1,17 +1,24 @@
 //! L3 coordination: the parallel design-space-exploration driver.
 //!
-//! [`pool`] is a scoped `std::thread` worker pool; [`jobs::Session`]
-//! fans point-evaluation jobs across it with shared [`cache`]s (TyBEC
-//! estimates and compiled simulation bytecode) and [`metrics`]. The CLI
-//! (`crate::cli`) builds a `Session` per invocation, and `dse::explore`
-//! delegates here with a single worker — the Session **is** the one
-//! exploration code path. Results are deterministic and equal to direct
-//! cache-free point evaluation (tested in `jobs`); validated sweeps
+//! [`executor`] is a long-lived sharded work-stealing executor with a
+//! bounded submission queue; [`jobs::Session`] fans point-evaluation
+//! jobs across it with shared [`cache`]s (TyBEC estimates and compiled
+//! simulation bytecode), an optional persistent [`persist::DiskCache`]
+//! the cache-aware planner probes *before lowering*, and [`metrics`].
+//! The CLI (`crate::cli`) builds a `Session` per invocation, `tytra
+//! serve` shares one across every concurrent connection (clones feed
+//! the same executor), and `dse::explore` delegates here with a single
+//! worker — the Session **is** the one exploration code path. Results
+//! are deterministic and equal to direct cache-free point evaluation
+//! (tested in `jobs`); validated sweeps
 //! ([`jobs::Session::validate_sweep`]) additionally simulate every
 //! point through the session's [`cache::KernelCache`], compiling each
-//! realised module once per session.
+//! realised module once per session. [`pool`] is the older scoped
+//! fan-out utility, kept standalone with the same per-item panic
+//! isolation.
 
 pub mod cache;
+pub mod executor;
 pub mod jobs;
 pub mod metrics;
 pub mod persist;
@@ -19,6 +26,7 @@ pub mod pool;
 pub mod serve;
 
 pub use cache::{EstimateCache, KernelCache};
+pub use executor::{ExecStats, Executor};
 pub use jobs::{BatchResult, Session, ValidatedPoint};
 pub use metrics::Metrics;
 pub use persist::DiskCache;

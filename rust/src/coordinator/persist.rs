@@ -4,29 +4,43 @@
 //! the estimator — the incremental-iteration loop TyBEC's persisted
 //! cost database and BEE's incremental compilation both motivate.
 //!
+//! Since format v2 an entry is a full **replay record**, not just an
+//! estimate: it also carries the *realised* design point and the
+//! module's `bytes_per_workgroup` (the only module-derived input to the
+//! wall check). Entries are keyed by the **enumerated** point's label,
+//! which the planner knows *before* lowering — so a warm sweep probes
+//! the cache first and skips the whole frontend (`lower_point`) for
+//! every hit, reconstructing the candidate bit-identically from the
+//! record (see `Session::evaluate_cached`).
+//!
 //! ## Layout
 //!
 //! One file per entry under the cache directory (default
 //! `~/.tytra/cache/`, override with `--cache-dir`), named by the 128-bit
-//! content hash of the key `(kernel-hash, device, point-label,
-//! transform-recipe)`: `<hex32>.bin`. Writes go to a unique temp file in
-//! the same directory and `rename(2)` into place, so readers — including
-//! concurrent writers of the same key — only ever observe complete
-//! files.
+//! content hash of the key `(kernel-hash, device, enumerated-point
+//! label, transform-recipe)`: `<hex32>.bin`. Writes go to a unique temp
+//! file in the same directory and `rename(2)` into place, so readers —
+//! including concurrent writers of the same key — only ever observe
+//! complete files.
 //!
-//! ## Entry format (version 1, little-endian)
+//! ## Entry format (version 2, little-endian)
 //!
 //! ```text
-//! magic   "TYTRA"                      5 bytes
-//! version u8 = 1
-//! key     4 × (u32 len + bytes)        kernel-hash hex, device, label, recipe
-//! payload the Estimate, field by field (f64 via to_bits; Op as mnemonic)
-//! check   u64 FNV-1a over everything above
+//! magic    "TYTRA"                      5 bytes
+//! version  u8 = 2
+//! key      4 × (u32 len + bytes)        kernel-hash hex, device, label, recipe
+//! realised the realised DesignPoint     style u8, lanes u64, dv u64,
+//!                                       chain u8, reduce u8, recipe-bits u8
+//! io       bytes_per_workgroup          f64 via to_bits
+//! payload  the Estimate, field by field (f64 via to_bits; Op as mnemonic)
+//! check    u64 FNV-1a over everything above
 //! ```
 //!
 //! The embedded key material is verified on load: a filename-hash
 //! collision (or a file copied between keys) can therefore never serve
-//! a wrong estimate — it degrades to a recompute.
+//! a wrong estimate — it degrades to a recompute. Version-1 entries
+//! fail the version check and degrade the same way (recompute and
+//! rewrite), so upgrading never needs a cache wipe.
 //!
 //! ## Corruption tolerance
 //!
@@ -49,7 +63,9 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::estimator::{ConfigClass, Estimate, ReduceInfo, Resources, StructInfo};
+use crate::frontend::{DesignPoint, Style};
 use crate::tir::{Op, ReduceShape};
+use crate::transform::TransformRecipe;
 use crate::util::hash::{fnv64, ContentHash};
 
 /// Magic prefix of every cache entry.
@@ -62,7 +78,8 @@ pub struct PersistKey<'a> {
     pub kernel_hash: ContentHash,
     /// Device name.
     pub device: &'a str,
-    /// Realised design-point label.
+    /// **Enumerated** design-point label (known before lowering — the
+    /// planner probes with it to decide whether to lower at all).
     pub label: &'a str,
     /// Transform-recipe name ("" when the point carries none).
     pub recipe: &'a str,
@@ -76,11 +93,28 @@ impl PersistKey<'_> {
     }
 }
 
+/// One replay record: everything needed to reconstruct a sweep
+/// candidate without touching the frontend. `bytes_per_workgroup` is
+/// the single module-derived wall-check input
+/// (`dse::walls::check_with_bytes` recomputes the rest from the device
+/// and the estimate, bit-identically).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    /// The TyBEC estimate for the point.
+    pub estimate: Estimate,
+    /// The realised design point (degenerate enumerated points clamp
+    /// into it — the label a replayed candidate must report).
+    pub realised: DesignPoint,
+    /// Bytes moved per work-group (`dse::walls::bytes_per_workgroup`
+    /// of the lowered module, bit-exact via `to_bits`).
+    pub bytes_per_workgroup: f64,
+}
+
 /// Outcome of a cache probe.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Load {
     /// Entry present and intact.
-    Hit(Estimate),
+    Hit(Entry),
     /// No entry for this key.
     Miss,
     /// An entry existed but was corrupt/truncated/stale; it has been
@@ -100,8 +134,10 @@ pub struct DiskCache {
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 impl DiskCache {
-    /// Current entry-format version byte.
-    pub const FORMAT_VERSION: u8 = 1;
+    /// Current entry-format version byte (v2: replay records keyed by
+    /// the enumerated label; v1 estimate-only entries fail the version
+    /// check and recompute).
+    pub const FORMAT_VERSION: u8 = 2;
 
     /// Default LRU byte budget (64 MiB ≈ hundreds of thousands of
     /// entries — a cache, not an archive).
@@ -152,11 +188,11 @@ impl DiskCache {
             }
         };
         match decode(&bytes, key) {
-            Ok(est) => {
+            Ok(entry) => {
                 // Refresh the entry's LRU age (atomic same-byte rewrite;
                 // best-effort — a failed touch only ages the entry).
                 let _ = self.write_atomic(&path, &bytes);
-                Load::Hit(est)
+                Load::Hit(entry)
             }
             Err(why) => {
                 eprintln!("tytra: cache entry {} invalid ({why}); recomputing", path.display());
@@ -168,9 +204,9 @@ impl DiskCache {
 
     /// Write (or overwrite) the entry for `key`, then enforce the byte
     /// budget.
-    pub fn store(&self, key: &PersistKey, est: &Estimate) -> Result<(), String> {
+    pub fn store(&self, key: &PersistKey, entry: &Entry) -> Result<(), String> {
         let path = self.dir.join(format!("{}.bin", key.stem()));
-        self.write_atomic(&path, &encode(key, est))?;
+        self.write_atomic(&path, &encode(key, entry))?;
         self.enforce_budget();
         Ok(())
     }
@@ -226,7 +262,8 @@ impl DiskCache {
 // Binary entry encoding
 // ---------------------------------------------------------------------------
 
-fn encode(key: &PersistKey, est: &Estimate) -> Vec<u8> {
+fn encode(key: &PersistKey, entry: &Entry) -> Vec<u8> {
+    let est = &entry.estimate;
     let mut out = Vec::with_capacity(256);
     out.extend_from_slice(MAGIC);
     out.push(DiskCache::FORMAT_VERSION);
@@ -234,6 +271,19 @@ fn encode(key: &PersistKey, est: &Estimate) -> Vec<u8> {
     put_str(&mut out, key.device);
     put_str(&mut out, key.label);
     put_str(&mut out, key.recipe);
+
+    // the realised design point (the replay half of the record)
+    let p = &entry.realised;
+    out.push(style_byte(p.style));
+    put_u64(&mut out, p.lanes);
+    put_u64(&mut out, p.dv);
+    out.push(p.chain as u8);
+    out.push(match p.reduce {
+        ReduceShape::Acc => 0,
+        ReduceShape::Tree => 1,
+    });
+    out.push(p.transforms.bits());
+    put_u64(&mut out, entry.bytes_per_workgroup.to_bits());
 
     out.push(class_byte(est.class));
     out.push(class_byte(est.info.class));
@@ -280,7 +330,7 @@ fn encode(key: &PersistKey, est: &Estimate) -> Vec<u8> {
     out
 }
 
-fn decode(bytes: &[u8], key: &PersistKey) -> Result<Estimate, String> {
+fn decode(bytes: &[u8], key: &PersistKey) -> Result<Entry, String> {
     if bytes.len() < MAGIC.len() + 1 + 8 {
         return Err("truncated header".into());
     }
@@ -301,6 +351,28 @@ fn decode(bytes: &[u8], key: &PersistKey) -> Result<Estimate, String> {
     if kh != key.kernel_hash.hex() || dev != key.device || label != key.label || recipe != key.recipe {
         return Err("key material mismatch (stale or colliding entry)".into());
     }
+
+    let style = style_from_byte(r.u8()?)?;
+    let p_lanes = r.u64()?;
+    let p_dv = r.u64()?;
+    let chain = match r.u8()? {
+        0 => false,
+        1 => true,
+        b => return Err(format!("bad chain byte {b}")),
+    };
+    let p_reduce = match r.u8()? {
+        0 => ReduceShape::Acc,
+        1 => ReduceShape::Tree,
+        b => return Err(format!("bad point reduce byte {b}")),
+    };
+    let tbits = r.u8()?;
+    let transforms = TransformRecipe::from_bits(tbits);
+    if transforms.bits() != tbits {
+        return Err(format!("bad recipe bits {tbits:#04x}"));
+    }
+    let realised =
+        DesignPoint { style, lanes: p_lanes, dv: p_dv, chain, reduce: p_reduce, transforms };
+    let bytes_per_workgroup = f64::from_bits(r.u64()?);
 
     let class = class_from_byte(r.u8()?)?;
     let info_class = class_from_byte(r.u8()?)?;
@@ -337,26 +409,30 @@ fn decode(bytes: &[u8], key: &PersistKey) -> Result<Estimate, String> {
     if r.pos != body.len() {
         return Err("trailing bytes".into());
     }
-    Ok(Estimate {
-        class,
-        info: StructInfo {
-            class: info_class,
-            lanes,
-            dv,
-            datapath_depth,
-            window_span,
-            seq_ni,
-            work_items,
-            repeat,
-            reduce,
-            comb_depth,
-            comb_carry,
+    Ok(Entry {
+        estimate: Estimate {
+            class,
+            info: StructInfo {
+                class: info_class,
+                lanes,
+                dv,
+                datapath_depth,
+                window_span,
+                seq_ni,
+                work_items,
+                repeat,
+                reduce,
+                comb_depth,
+                comb_carry,
+            },
+            resources,
+            cycles_per_pass,
+            cycles_per_workgroup,
+            fmax_mhz,
+            ewgt,
         },
-        resources,
-        cycles_per_pass,
-        cycles_per_workgroup,
-        fmax_mhz,
-        ewgt,
+        realised,
+        bytes_per_workgroup,
     })
 }
 
@@ -374,6 +450,23 @@ fn class_from_byte(b: u8) -> Result<ConfigClass, String> {
         5 => ConfigClass::C5,
         6 => ConfigClass::C6,
         b => return Err(format!("bad config-class byte {b}")),
+    })
+}
+
+fn style_byte(s: Style) -> u8 {
+    match s {
+        Style::Pipe => 0,
+        Style::Seq => 1,
+        Style::Comb => 2,
+    }
+}
+
+fn style_from_byte(b: u8) -> Result<Style, String> {
+    Ok(match b {
+        0 => Style::Pipe,
+        1 => Style::Seq,
+        2 => Style::Comb,
+        b => return Err(format!("bad style byte {b}")),
     })
 }
 
@@ -432,15 +525,24 @@ mod tests {
         ))
     }
 
-    fn some_estimate() -> Estimate {
+    fn some_entry() -> Entry {
         let m = crate::tir::parse_and_validate(&crate::tir::examples::fig7_pipe()).unwrap();
-        crate::estimator::estimate(&m, &Device::stratix4()).unwrap()
+        Entry {
+            estimate: crate::estimator::estimate(&m, &Device::stratix4()).unwrap(),
+            realised: DesignPoint::c2(),
+            bytes_per_workgroup: crate::dse::walls::bytes_per_workgroup(&m),
+        }
     }
 
-    fn reducing_estimate() -> Estimate {
+    fn reducing_entry() -> Entry {
         let (_, k) = crate::kernels::resolve_specs(&["builtin:dotn".to_string()]).unwrap().remove(0);
-        let m = crate::frontend::lower(&k, crate::frontend::DesignPoint::c2().tree()).unwrap();
-        crate::estimator::estimate(&m, &Device::stratix4()).unwrap()
+        let point = crate::frontend::DesignPoint::c2().tree();
+        let m = crate::frontend::lower(&k, point).unwrap();
+        Entry {
+            estimate: crate::estimator::estimate(&m, &Device::stratix4()).unwrap(),
+            realised: point,
+            bytes_per_workgroup: crate::dse::walls::bytes_per_workgroup(&m),
+        }
     }
 
     fn a_key() -> PersistKey<'static> {
@@ -454,27 +556,33 @@ mod tests {
 
     #[test]
     fn roundtrip_is_bit_identical() {
-        for est in [some_estimate(), reducing_estimate()] {
+        for entry in [some_entry(), reducing_entry()] {
             let key = a_key();
-            let bytes = encode(&key, &est);
+            let bytes = encode(&key, &entry);
             let back = decode(&bytes, &key).unwrap();
             // PartialEq covers every field incl. exact f64 bits via the
             // to_bits encoding
-            assert_eq!(est, back);
-            assert_eq!(est.fmax_mhz.to_bits(), back.fmax_mhz.to_bits());
-            assert_eq!(est.ewgt.to_bits(), back.ewgt.to_bits());
+            assert_eq!(entry, back);
+            assert_eq!(entry.estimate.fmax_mhz.to_bits(), back.estimate.fmax_mhz.to_bits());
+            assert_eq!(entry.estimate.ewgt.to_bits(), back.estimate.ewgt.to_bits());
+            assert_eq!(
+                entry.bytes_per_workgroup.to_bits(),
+                back.bytes_per_workgroup.to_bits(),
+                "the wall-check input must replay bit-exactly"
+            );
+            assert_eq!(entry.realised, back.realised);
         }
     }
 
     #[test]
-    fn store_then_load_hits(){
+    fn store_then_load_hits() {
         let dir = tmp_dir("hit");
         let c = DiskCache::open(&dir, DiskCache::DEFAULT_BUDGET_BYTES).unwrap();
-        let est = some_estimate();
+        let entry = some_entry();
         let key = a_key();
         assert_eq!(c.load(&key), Load::Miss);
-        c.store(&key, &est).unwrap();
-        assert_eq!(c.load(&key), Load::Hit(est));
+        c.store(&key, &entry).unwrap();
+        assert_eq!(c.load(&key), Load::Hit(entry));
         assert_eq!(c.entries().len(), 1);
         let _ = fs::remove_dir_all(&dir);
     }
@@ -483,9 +591,9 @@ mod tests {
     fn wrong_key_material_never_serves_stale_bytes() {
         let dir = tmp_dir("stale");
         let c = DiskCache::open(&dir, DiskCache::DEFAULT_BUDGET_BYTES).unwrap();
-        let est = some_estimate();
+        let entry = some_entry();
         let key = a_key();
-        c.store(&key, &est).unwrap();
+        c.store(&key, &entry).unwrap();
         // copy the entry onto a different key's filename — a simulated
         // filename-hash collision
         let other = PersistKey { label: "pipe×4", ..a_key() };
@@ -499,17 +607,18 @@ mod tests {
 
     #[test]
     fn corruption_classes_recover_not_panic() {
-        let est = some_estimate();
+        let entry = some_entry();
         let key = a_key();
-        let good = encode(&key, &est);
+        let good = encode(&key, &entry);
         // truncations at every prefix length
         for n in 0..good.len() {
             assert!(decode(&good[..n], &key).is_err(), "prefix {n} must not decode");
         }
         // wrong version byte (checksum re-stamped so the version check
-        // itself is exercised)
+        // itself is exercised) — this is also exactly how a v1 entry
+        // from a pre-upgrade cache degrades: recompute, never misparse
         let mut v = good.clone();
-        v[MAGIC.len()] = 99;
+        v[MAGIC.len()] = 1;
         let body_len = v.len() - 8;
         let check = fnv64(&v[..body_len]).to_le_bytes();
         v[body_len..].copy_from_slice(&check);
@@ -525,8 +634,8 @@ mod tests {
     fn budget_evicts_least_recently_used() {
         let dir = tmp_dir("budget");
         // tiny budget: roughly two entries' worth
-        let est = some_estimate();
-        let probe = encode(&a_key(), &est).len() as u64;
+        let entry = some_entry();
+        let probe = encode(&a_key(), &entry).len() as u64;
         let c = DiskCache::open(&dir, probe * 2 + probe / 2).unwrap();
         let keys: Vec<PersistKey> = vec![
             PersistKey { label: "pipe×1", ..a_key() },
@@ -534,14 +643,14 @@ mod tests {
             PersistKey { label: "pipe×4", ..a_key() },
         ];
         for k in &keys {
-            c.store(k, &est).unwrap();
+            c.store(k, &entry).unwrap();
             // keep mtimes strictly ordered even on coarse filesystems
             std::thread::sleep(std::time::Duration::from_millis(5));
         }
         // over budget after the third store: at most two entries remain,
         // and the newest one always survives
         assert!(c.entries().len() <= 2, "{:?}", c.entries());
-        assert_eq!(c.load(&keys[2]), Load::Hit(est));
+        assert_eq!(c.load(&keys[2]), Load::Hit(entry));
         let _ = fs::remove_dir_all(&dir);
     }
 
@@ -549,21 +658,21 @@ mod tests {
     fn concurrent_writers_leave_a_loadable_entry() {
         let dir = tmp_dir("race");
         let c = DiskCache::open(&dir, DiskCache::DEFAULT_BUDGET_BYTES).unwrap();
-        let est = some_estimate();
+        let entry = some_entry();
         std::thread::scope(|s| {
             for _ in 0..8 {
                 s.spawn(|| {
                     for _ in 0..16 {
-                        c.store(&a_key(), &est).unwrap();
+                        c.store(&a_key(), &entry).unwrap();
                         match c.load(&a_key()) {
-                            Load::Hit(e) => assert_eq!(e, est),
+                            Load::Hit(e) => assert_eq!(e, entry),
                             other => panic!("load during concurrent writes: {other:?}"),
                         }
                     }
                 });
             }
         });
-        assert_eq!(c.load(&a_key()), Load::Hit(est));
+        assert_eq!(c.load(&a_key()), Load::Hit(entry));
         let _ = fs::remove_dir_all(&dir);
     }
 }

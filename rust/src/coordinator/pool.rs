@@ -1,8 +1,12 @@
 //! A small scoped worker pool over `std::thread` (tokio is unavailable
 //! in the offline build image — see DESIGN.md §Substitutions; the DSE
 //! workload is embarrassingly parallel compute, for which a scoped pool
-//! is the right tool anyway).
+//! is the right tool anyway). The `Session` hot path now runs on the
+//! long-lived sharded [`crate::coordinator::executor::Executor`]; the
+//! scoped pool survives as a standalone fan-out utility with the same
+//! per-item panic isolation.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// A logical pool: just a worker count; threads are scoped per call so
@@ -28,36 +32,46 @@ impl Pool {
         self.workers
     }
 
-    /// Parallel map preserving input order. Work-stealing via a shared
-    /// atomic cursor; each worker accumulates `(index, result)` pairs
-    /// privately and returns them through its scoped join handle, so the
-    /// result slots need **no synchronisation at all** — the previous
-    /// per-slot `Mutex<Option<R>>` paid one lock round-trip per item on
-    /// a loop whose entire point is to be contention-free. The final
-    /// reorder into input order keeps the output deterministic
-    /// regardless of scheduling.
-    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    /// Parallel map preserving input order, with **per-item panic
+    /// isolation**: a job that panics yields
+    /// `` Err("job #<i> panicked: <payload>") `` for *that item only* —
+    /// every other item still completes and returns `Ok`. (The old
+    /// behaviour — any panic anywhere killing the whole map through a
+    /// generic `expect("pool worker panicked")` — lost both the payload
+    /// and the failing item's identity.)
+    ///
+    /// Work-stealing via a shared atomic cursor; each worker accumulates
+    /// `(index, result)` pairs privately and returns them through its
+    /// scoped join handle, so the result slots need **no synchronisation
+    /// at all**. The final reorder into input order keeps the output
+    /// deterministic regardless of scheduling.
+    pub fn try_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<Result<R, String>>
     where
         T: Sync,
         R: Send,
         F: Fn(&T) -> R + Sync,
     {
+        let run = |i: usize, it: &T| -> Result<R, String> {
+            catch_unwind(AssertUnwindSafe(|| f(it))).map_err(|p| {
+                format!("job #{i} panicked: {}", super::executor::panic_message(p))
+            })
+        };
         let n = items.len();
         if n == 0 {
             return Vec::new();
         }
         let nw = self.workers.min(n);
         if nw == 1 {
-            // Single worker: no threads, no reorder.
-            return items.iter().map(&f).collect();
+            // Single worker: no threads, no reorder — same isolation.
+            return items.iter().enumerate().map(|(i, it)| run(i, it)).collect();
         }
         let cursor = AtomicUsize::new(0);
-        let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+        let parts: Vec<Vec<(usize, Result<R, String>)>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..nw)
                 .map(|_| {
                     let cursor = &cursor;
                     let items = &items;
-                    let f = &f;
+                    let run = &run;
                     s.spawn(move || {
                         // Pre-size to the fair share; stealing may grow it.
                         let mut local = Vec::with_capacity(n / nw + 1);
@@ -66,15 +80,20 @@ impl Pool {
                             if i >= n {
                                 break;
                             }
-                            local.push((i, f(&items[i])));
+                            local.push((i, run(i, &items[i])));
                         }
                         local
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
+            // Job panics are caught item-side; a worker thread can only
+            // die outside any job, which is unreachable.
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker died outside a job"))
+                .collect()
         });
-        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        let mut slots: Vec<Option<Result<R, String>>> = Vec::with_capacity(n);
         slots.resize_with(n, || None);
         for part in parts {
             for (i, r) in part {
@@ -82,6 +101,25 @@ impl Pool {
             }
         }
         slots.into_iter().map(|o| o.expect("worker skipped a slot")).collect()
+    }
+
+    /// Infallible parallel map preserving input order. Built on
+    /// [`Pool::try_map`]: a panicking job re-raises **on the caller**
+    /// with the failing item's index and the original payload attached,
+    /// instead of the old opaque `expect("pool worker panicked")`.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        self.try_map(items, f)
+            .into_iter()
+            .map(|r| match r {
+                Ok(v) => v,
+                Err(msg) => panic!("{msg}"),
+            })
+            .collect()
     }
 }
 
@@ -115,6 +153,55 @@ mod tests {
         let pool = Pool::new(64);
         let out = pool.map(vec![5], |&x| x);
         assert_eq!(out, vec![5]);
+    }
+
+    #[test]
+    fn injected_panic_fails_only_its_item() {
+        let pool = Pool::new(4);
+        let out = pool.try_map((0..10).collect(), |&x: &i32| {
+            if x == 7 {
+                panic!("injected pool failure at {x}");
+            }
+            x * 2
+        });
+        for (i, r) in out.iter().enumerate() {
+            if i == 7 {
+                let e = r.as_ref().unwrap_err();
+                assert!(e.contains("job #7 panicked"), "{e}");
+                assert!(e.contains("injected pool failure at 7"), "payload lost: {e}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i as i32 * 2, "other items must succeed");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_isolates_panics_too() {
+        let pool = Pool::new(1);
+        let out = pool.try_map(vec![0, 1], |&x: &i32| {
+            if x == 0 {
+                panic!("solo");
+            }
+            x
+        });
+        assert!(out[0].as_ref().unwrap_err().contains("job #0 panicked: solo"), "{:?}", out[0]);
+        assert_eq!(*out[1].as_ref().unwrap(), 1);
+    }
+
+    #[test]
+    fn map_propagates_the_payload_with_the_item_index() {
+        let pool = Pool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(vec![0, 1, 2], |&x: &i32| {
+                if x == 1 {
+                    panic!("boom at {x}");
+                }
+                x
+            })
+        }));
+        let msg = crate::coordinator::executor::panic_message(caught.unwrap_err());
+        assert!(msg.contains("job #1 panicked"), "{msg}");
+        assert!(msg.contains("boom at 1"), "{msg}");
     }
 
     #[test]

@@ -3,9 +3,9 @@
 //! A line-delimited-JSON request loop: one request per line on stdin
 //! (or a Unix socket with `--socket`), one response per line on stdout.
 //! The [`Session`] — in-memory caches, transform memo, persistent disk
-//! cache — lives for the whole process, so consecutive requests hit
-//! warm caches instead of recomputing, which is the point of serving at
-//! all.
+//! cache, the sharded executor — lives for the whole process, so
+//! consecutive requests hit warm caches instead of recomputing, which
+//! is the point of serving at all.
 //!
 //! ## Protocol
 //!
@@ -25,7 +25,20 @@
 //! [`render_sweep_json`], which the CLI shares), compacted onto one
 //! line for the framing. Sweep knobs mirror the CLI flags: `kernels`
 //! (required), `devices`, `max_lanes`, `max_dv`, `dense`, `pipes_only`,
-//! `chain`, `reduce`, `transforms`.
+//! `chain`, `reduce`, `transforms` — plus `validate` (bool) and `seed`
+//! to run the full estimate-and-simulate sweep
+//! ([`Session::validate_sweep`]) instead of estimation only.
+//!
+//! ## Concurrency
+//!
+//! The socket transport accepts **many clients at once**: each
+//! connection gets its own reader thread running the same line loop on
+//! a clone of the shared session, so every client's sweep jobs feed one
+//! sharded executor (whose bounded queue interleaves them fairly) and
+//! warm one set of caches. Responses are written back per-connection in
+//! request order — the loop is sequential *within* a connection — so
+//! each client observes exactly the transcript it would get from a
+//! private sequential server, byte for byte.
 //!
 //! ## Lifecycle
 //!
@@ -36,10 +49,15 @@
 //!   expiry the client gets an error response and the loop moves on
 //!   (the abandoned computation finishes in the background and is
 //!   dropped — its cache writes still land, so a retry is cheap).
-//! - Shutdown is graceful on EOF, a `shutdown` request, or SIGTERM: the
+//! - A connection idle past the configured read timeout (`--socket`
+//!   with `serve.idle_timeout_ms` / `--idle-timeout-ms`) is closed
+//!   gracefully: the blocked read returns `WouldBlock`/`TimedOut` and
+//!   the loop ends as if the client sent EOF.
+//! - Shutdown is graceful on EOF, a `shutdown` request (which on the
+//!   socket transport ends *that connection* only), or SIGTERM: the
 //!   in-flight request is answered before the loop exits. (SIGTERM is
-//!   observed at request boundaries; an idle blocking read ends at the
-//!   next line or EOF.)
+//!   observed at accept/request boundaries; an idle blocking accept
+//!   ends at the next connection attempt.)
 
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -80,8 +98,9 @@ pub fn install_sigterm() {
     }
 }
 
-/// Serve requests from `input` to `out` until EOF, a `shutdown`
-/// request, or SIGTERM. Returns the number of responses written.
+/// Serve requests from `input` to `out` until EOF, an idle-timeout
+/// read error, a `shutdown` request, or SIGTERM. Returns the number of
+/// responses written.
 pub fn serve_lines<R: BufRead, W: Write>(
     session: &Session,
     input: R,
@@ -93,7 +112,21 @@ pub fn serve_lines<R: BufRead, W: Write>(
         if term_requested() {
             break;
         }
-        let line = line.map_err(|e| format!("request stream: {e}"))?;
+        let line = match line {
+            Ok(l) => l,
+            // An idle-timeout expiry on a socket read surfaces as
+            // WouldBlock (or TimedOut on some platforms): close this
+            // connection gracefully, exactly like a client EOF.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                break;
+            }
+            Err(e) => return Err(format!("request stream: {e}")),
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -116,29 +149,62 @@ pub fn run_stdio(session: &Session, timeout: Duration) -> Result<u64, String> {
     serve_lines(session, stdin.lock(), &mut stdout, timeout)
 }
 
-/// Serve over a Unix socket: accept one connection at a time, run the
-/// line loop on it, repeat until SIGTERM. Unix only.
+/// Serve over a Unix socket, **concurrently**: every accepted
+/// connection gets its own thread running the line loop on a clone of
+/// the shared session, so many clients multiplex over one process —
+/// one executor, one cache set — with per-connection request order
+/// preserved. `idle` (None = off) closes a connection whose next
+/// request doesn't arrive in time. Runs until SIGTERM; open
+/// connections are drained before returning. Unix only.
 #[cfg(unix)]
-pub fn run_socket(session: &Session, path: &std::path::Path, timeout: Duration) -> Result<u64, String> {
+pub fn run_socket(
+    session: &Session,
+    path: &std::path::Path,
+    timeout: Duration,
+    idle: Option<Duration>,
+) -> Result<u64, String> {
     use std::os::unix::net::UnixListener;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
     install_sigterm();
     let _ = std::fs::remove_file(path);
     let listener =
         UnixListener::bind(path).map_err(|e| format!("socket {}: {e}", path.display()))?;
-    let mut served = 0u64;
+    let served = Arc::new(AtomicU64::new(0));
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
     for conn in listener.incoming() {
         if term_requested() {
             break;
         }
         let conn = conn.map_err(|e| format!("accept: {e}"))?;
+        if let Some(idle) = idle {
+            // A failed setsockopt only loses the idle kick, never the
+            // connection.
+            let _ = conn.set_read_timeout(Some(idle));
+        }
         let reader = std::io::BufReader::new(
             conn.try_clone().map_err(|e| format!("socket clone: {e}"))?,
         );
-        let mut writer = conn;
-        served += serve_lines(session, reader, &mut writer, timeout)?;
+        let worker = session.clone();
+        let served = Arc::clone(&served);
+        conns.push(std::thread::spawn(move || {
+            let mut writer = conn;
+            match serve_lines(&worker, reader, &mut writer, timeout) {
+                Ok(n) => {
+                    served.fetch_add(n, Ordering::Relaxed);
+                }
+                Err(e) => eprintln!("tytra serve: connection error: {e}"),
+            }
+        }));
+        // Reap finished connection threads so a long-lived server's
+        // handle list doesn't grow without bound.
+        conns.retain(|h| !h.is_finished());
+    }
+    for h in conns {
+        let _ = h.join();
     }
     let _ = std::fs::remove_file(path);
-    Ok(served)
+    Ok(served.load(Ordering::Relaxed))
 }
 
 /// Handle one request line. Never panics and never returns a non-JSON
@@ -211,7 +277,9 @@ fn metrics_json(session: &Session) -> String {
     format!(
         "{{\"summary\": \"{}\", \"jobs\": {}, \"sweeps\": {}, \"sim_compiles\": {}, \
          \"sim_cache_hits\": {}, \"disk_hits\": {}, \"disk_misses\": {}, \
-         \"cache_recovered\": {}, \"memo_full\": {}, \"memo_partial\": {}, \"memo_miss\": {}}}",
+         \"cache_recovered\": {}, \"memo_full\": {}, \"memo_partial\": {}, \"memo_miss\": {}, \
+         \"lowerings\": {}, \"planner_skipped_lowering\": {}, \"steals\": {}, \
+         \"queue_depth_max\": {}, \"jobs_panicked\": {}}}",
         escape(&m.summary()),
         m.jobs.get(),
         m.sweeps.get(),
@@ -222,13 +290,19 @@ fn metrics_json(session: &Session) -> String {
         m.cache_recovered.get(),
         m.xform_memo_full.get(),
         m.xform_memo_partial.get(),
-        m.xform_memo_miss.get()
+        m.xform_memo_miss.get(),
+        m.lowerings.get(),
+        m.planner_skipped_lowering.get(),
+        m.steals.get(),
+        m.queue_depth_max.get(),
+        m.jobs_panicked.get()
     )
 }
 
 /// Execute a `sweep` request: resolve kernels/devices/limits from the
-/// request body, run the batched exploration, render the `sweep --json`
-/// schema compacted to one line.
+/// request body, run the batched exploration (or, with
+/// `"validate": true`, the estimate-and-simulate sweep), render the
+/// result compacted to one line.
 fn op_sweep(session: &Session, req: &Json) -> Result<String, String> {
     let specs: Vec<String> = req
         .get("kernels")
@@ -276,6 +350,11 @@ fn op_sweep(session: &Session, req: &Json) -> Result<String, String> {
         limits.include_transforms = true;
     }
 
+    if req.get("validate").and_then(Json::as_bool).unwrap_or(false) {
+        let seed = req.get("seed").and_then(Json::as_u64).unwrap_or(42);
+        return op_validate(session, &kernels, &devices, &limits, seed);
+    }
+
     let cells = session.explore_batch(&kernels, &devices, &limits)?;
     let rendered = render_sweep_json(&kernels, &devices, &limits, &cells);
     // Compact the pretty block onto one line for LDJSON framing (no
@@ -285,6 +364,54 @@ fn op_sweep(session: &Session, req: &Json) -> Result<String, String> {
         .map(str::trim)
         .collect::<Vec<_>>()
         .join(" "))
+}
+
+/// Execute a validated sweep request: every point lowered, estimated
+/// *and* simulated ([`Session::validate_sweep`]) per (kernel × device)
+/// cell, reporting estimate-vs-actual per realised point. Deterministic
+/// for a fixed seed, so repeated requests are byte-identical.
+fn op_validate(
+    session: &Session,
+    kernels: &[(String, KernelDef)],
+    devices: &[Device],
+    limits: &SweepLimits,
+    seed: u64,
+) -> Result<String, String> {
+    let mut cells = Vec::with_capacity(kernels.len() * devices.len());
+    for (_, k) in kernels {
+        for dev in devices {
+            let v = session.validate_sweep(k, dev, limits, seed)?;
+            let points: Vec<String> = v
+                .iter()
+                .map(|p| {
+                    format!(
+                        "{{\"label\": \"{}\", \"est_cycles\": {}, \"sim_cycles_per_pass\": {}, \
+                         \"sim_total_cycles\": {}, \"ewgt\": {:.3}}}",
+                        p.point.label(),
+                        p.estimate.cycles_per_pass,
+                        p.cycles_per_pass,
+                        p.total_cycles,
+                        p.estimate.ewgt
+                    )
+                })
+                .collect();
+            cells.push(format!(
+                "{{\"kernel\": \"{}\", \"device\": \"{}\", \"points\": [{}]}}",
+                k.name,
+                dev.name,
+                points.join(", ")
+            ));
+        }
+    }
+    Ok(format!(
+        "{{\"kernels\": {}, \"devices\": {}, \"points_per_cell\": {}, \"validated\": true, \
+         \"seed\": {}, \"cells\": [{}]}}",
+        kernels.len(),
+        devices.len(),
+        crate::dse::enumerate(limits).len(),
+        seed,
+        cells.join(", ")
+    ))
 }
 
 /// Machine-readable sweep export: per (kernel × device) cell the full
@@ -383,6 +510,12 @@ mod tests {
         let m = r1.get("result").unwrap();
         assert_eq!(m.get("jobs").and_then(Json::as_u64), Some(0));
         assert!(m.get("summary").and_then(Json::as_str).unwrap().contains("jobs=0"));
+        // the executor/planner counters are always present (zero here)
+        assert_eq!(m.get("steals").and_then(Json::as_u64), Some(0));
+        assert_eq!(m.get("queue_depth_max").and_then(Json::as_u64), Some(0));
+        assert_eq!(m.get("jobs_panicked").and_then(Json::as_u64), Some(0));
+        assert_eq!(m.get("lowerings").and_then(Json::as_u64), Some(0));
+        assert_eq!(m.get("planner_skipped_lowering").and_then(Json::as_u64), Some(0));
     }
 
     #[test]
@@ -403,6 +536,31 @@ mod tests {
         assert_eq!(cells[0].get("kernel").and_then(Json::as_str), Some("simple"));
         assert!(cells[0].get("best").and_then(Json::as_str).is_some());
         assert!(!cells[0].get("points").and_then(Json::as_array).unwrap().is_empty());
+    }
+
+    #[test]
+    fn validated_sweep_op_reports_estimate_and_simulation() {
+        let session = Session::new(2);
+        let req = "{\"id\": 1, \"op\": \"sweep\", \"kernels\": [\"builtin:simple\"], \
+                   \"max_lanes\": 2, \"max_dv\": 2, \"validate\": true, \"seed\": 3}";
+        let (a, _) = handle_request(&session, req, T);
+        let r = Json::parse(&a).unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{a}");
+        let result = r.get("result").unwrap();
+        assert_eq!(result.get("validated").and_then(Json::as_bool), Some(true));
+        assert_eq!(result.get("seed").and_then(Json::as_u64), Some(3));
+        let cells = result.get("cells").and_then(Json::as_array).unwrap();
+        assert_eq!(cells.len(), 1);
+        let points = cells[0].get("points").and_then(Json::as_array).unwrap();
+        assert!(!points.is_empty());
+        for p in points {
+            let est = p.get("est_cycles").and_then(Json::as_u64).unwrap();
+            let sim = p.get("sim_cycles_per_pass").and_then(Json::as_u64).unwrap();
+            assert!(sim >= est, "estimate must lower-bound simulation: {p:?}");
+        }
+        // deterministic for a fixed seed: repeat is byte-identical
+        let (b, _) = handle_request(&session, req, T);
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -471,5 +629,40 @@ mod tests {
         let (h1, m1) = session.cache_stats();
         assert_eq!(h1, 6, "second request served from the estimate cache");
         assert_eq!(m1, m0);
+    }
+
+    /// A reader that serves some bytes, then models an idle socket by
+    /// failing every further read with `WouldBlock` — exactly what a
+    /// `UnixStream` under `set_read_timeout` does when the client goes
+    /// quiet.
+    struct IdleAfter {
+        data: Cursor<Vec<u8>>,
+    }
+
+    impl std::io::Read for IdleAfter {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = std::io::Read::read(&mut self.data, buf)?;
+            if n == 0 {
+                return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "idle timeout"));
+            }
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn idle_timeout_closes_the_connection_gracefully() {
+        let session = Session::new(1);
+        let input = std::io::BufReader::new(IdleAfter {
+            data: Cursor::new(b"{\"id\": 1, \"op\": \"ping\"}\n".to_vec()),
+        });
+        let mut out = Vec::new();
+        // Not an error: the idle expiry ends the loop like an EOF, after
+        // every request that did arrive was answered.
+        let n = serve_lines(&session, input, &mut out, T).unwrap();
+        assert_eq!(n, 1);
+        let text = String::from_utf8(out).unwrap();
+        let r = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(r.get("result").and_then(Json::as_str), Some("pong"));
     }
 }

@@ -17,8 +17,10 @@ use crate::tir::Module;
 pub struct Candidate {
     /// The design-space point.
     pub point: DesignPoint,
-    /// The lowered TIR module.
-    pub module: Module,
+    /// The lowered TIR module. `None` when the candidate was replayed
+    /// from the persistent cache by the cache-aware planner — the whole
+    /// frontend was skipped, so no module ever existed in this process.
+    pub module: Option<Module>,
     /// The TyBEC estimate.
     pub estimate: estimator::Estimate,
     /// Wall check.
@@ -56,9 +58,10 @@ pub struct Exploration {
 /// process-wide shared [`CostDb`] included — so serial callers get
 /// exactly the parallel coordinator's results (the former serial loop
 /// that rebuilt `CostDb::default()` per call is gone). It runs with a
-/// single worker: `Pool::map` executes inline at one worker, so this
-/// cheap façade spawns **no threads** — callers wanting parallelism
-/// hold a `Session::new(jobs)` (or `Session::default()`) themselves.
+/// single worker: the sharded `coordinator::Executor` runs jobs inline
+/// at one worker, so this cheap façade spawns **no threads** — callers
+/// wanting parallelism hold a `Session::new(jobs)` (or
+/// `Session::default()`) themselves.
 ///
 /// When **no** enumerated configuration fits the computation wall, the
 /// explorer falls back to the design space's C6 point (paper Fig 3):
@@ -158,7 +161,7 @@ pub fn evaluate_lowered(
     let point = frontend::lower::realised_point(&module, point);
     let estimate = estimator::estimate_with_db(&module, dev, db)?;
     let walls = walls::check(&module, &estimate, dev);
-    Ok(Candidate { point, module, estimate, walls })
+    Ok(Candidate { point, module: Some(module), estimate, walls })
 }
 
 #[cfg(test)]
@@ -186,7 +189,8 @@ mod tests {
         let dev = Device::stratix4();
         let cb = r.candidates.iter().find(|c| c.point.label() == best.label).unwrap();
         assert!(cb.walls.io_utilisation > 1.0, "{:?}", cb.walls);
-        assert!((best.ewgt - dev.io_bytes_per_sec / walls::bytes_per_workgroup(&cb.module)).abs() < 1.0);
+        let cb_module = cb.module.as_ref().expect("live explore keeps the module");
+        assert!((best.ewgt - dev.io_bytes_per_sec / walls::bytes_per_workgroup(cb_module)).abs() < 1.0);
         // the pipeline point at the wall is clipped to the same value
         let p4 = r.candidates.iter().find(|c| c.point.label() == "pipe×4").unwrap();
         assert!(p4.walls.io_utilisation > 1.0, "{:?}", p4.walls);
@@ -302,8 +306,11 @@ mod tests {
         // No two candidates may realise byte-identical modules under
         // different labels — the realised label *is* module identity
         // (module names embed the realised-point suffix).
-        let printed: Vec<String> =
-            r.candidates.iter().map(|c| crate::tir::pretty::print(&c.module)).collect();
+        let printed: Vec<String> = r
+            .candidates
+            .iter()
+            .map(|c| crate::tir::pretty::print(c.module.as_ref().expect("live explore keeps the module")))
+            .collect();
         for i in 0..printed.len() {
             for j in i + 1..printed.len() {
                 assert_ne!(printed[i], printed[j], "{} / {}", labels[i], labels[j]);

@@ -93,9 +93,18 @@ pub fn bytes_per_workgroup(m: &Module) -> f64 {
 
 /// Check a configuration against both walls.
 pub fn check(m: &Module, est: &Estimate, dev: &Device) -> WallCheck {
+    check_with_bytes(bytes_per_workgroup(m), est, dev)
+}
+
+/// [`check`] with the module's `bytes_per_workgroup` supplied directly —
+/// the cache-aware planner's replay path: `bytes` is the *only*
+/// module-derived input to the wall check, so a persisted
+/// `(estimate, bytes)` pair reconstructs the exact `WallCheck` without
+/// ever lowering the module. Bit-identical to [`check`] by construction
+/// (same arithmetic on the same inputs).
+pub fn check_with_bytes(bytes: f64, est: &Estimate, dev: &Device) -> WallCheck {
     let compute_utilisation = est.resources.utilisation(dev);
     let binding = est.resources.binding_resource(dev);
-    let bytes = bytes_per_workgroup(m);
     let io_required = bytes * est.ewgt;
     let io_utilisation = io_required / dev.io_bytes_per_sec;
     WallCheck {

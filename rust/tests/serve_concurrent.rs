@@ -1,0 +1,203 @@
+//! Integration tests for concurrent multi-client serving (PR 8
+//! acceptance): N clients multiplexing interleaved requests over one
+//! `tytra serve --socket` process must each observe a transcript
+//! byte-identical to sequential serving (responses matched by echoed
+//! id), with the shared executor's work stealing and the shared caches
+//! (KernelCache, DiskCache → cache-aware planner) observable in the
+//! server session's metrics. Unix only (the socket transport is).
+#![cfg(unix)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use tytra::coordinator::{serve, DiskCache, Session};
+
+fn tmp(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "tytra-serve-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Start `run_socket` on a background thread and wait for the socket
+/// file to exist. The thread serves until the test process exits.
+fn start_server(session: &Session, sock: &PathBuf, idle: Option<Duration>) {
+    let worker = session.clone();
+    let path = sock.clone();
+    std::thread::spawn(move || {
+        if let Err(e) = serve::run_socket(&worker, &path, Duration::from_secs(120), idle) {
+            eprintln!("server thread: {e}");
+        }
+    });
+    for _ in 0..400 {
+        if sock.exists() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("server socket {} never appeared", sock.display());
+}
+
+/// One lockstep client: send each request line, read its response line
+/// before sending the next. Returns (request, response) pairs.
+fn run_client(sock: &PathBuf, requests: &[String]) -> Vec<(String, String)> {
+    let stream = UnixStream::connect(sock).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = stream;
+    let mut out = Vec::with_capacity(requests.len());
+    for req in requests {
+        writeln!(writer, "{req}").expect("send");
+        writer.flush().expect("flush");
+        let mut resp = String::new();
+        let n = reader.read_line(&mut resp).expect("recv");
+        assert!(n > 0, "server closed mid-conversation after `{req}`");
+        out.push((req.clone(), resp.trim_end().to_string()));
+    }
+    out
+}
+
+/// The per-client request script: interleaves cheap pings, estimation
+/// sweeps of two kernels, and a validated (simulating) sweep — run
+/// twice so the repeat is guaranteed to hit the session KernelCache.
+/// Every request is deterministic (no `metrics` op: its timing fields
+/// would break byte-identity).
+fn script(c: usize) -> Vec<String> {
+    vec![
+        format!("{{\"id\": \"c{c}-r0\", \"op\": \"ping\"}}"),
+        format!(
+            "{{\"id\": \"c{c}-r1\", \"op\": \"sweep\", \"kernels\": [\"builtin:simple\"], \
+             \"max_lanes\": 2, \"max_dv\": 2}}"
+        ),
+        format!(
+            "{{\"id\": \"c{c}-r2\", \"op\": \"sweep\", \"kernels\": [\"builtin:sor\"], \
+             \"max_lanes\": 2, \"max_dv\": 2}}"
+        ),
+        format!(
+            "{{\"id\": \"c{c}-r3\", \"op\": \"sweep\", \"kernels\": [\"builtin:simple\"], \
+             \"max_lanes\": 2, \"max_dv\": 2, \"validate\": true, \"seed\": 5}}"
+        ),
+        format!(
+            "{{\"id\": \"c{c}-r4\", \"op\": \"sweep\", \"kernels\": [\"builtin:simple\"], \
+             \"max_lanes\": 2, \"max_dv\": 2, \"validate\": true, \"seed\": 5}}"
+        ),
+        format!("{{\"id\": \"c{c}-r5\", \"op\": \"ping\"}}"),
+    ]
+}
+
+#[test]
+fn concurrent_clients_get_sequential_byte_identical_transcripts() {
+    let cache_dir = tmp("cache");
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let disk = Arc::new(DiskCache::open(&cache_dir, DiskCache::DEFAULT_BUDGET_BYTES).unwrap());
+    let session = Session::new(4).with_disk_cache(disk);
+    let sock = tmp("sock.multi");
+    start_server(&session, &sock, None);
+
+    // 4 clients × 6 requests, all in flight at once over one process.
+    let mut transcript: Vec<(String, String)> = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for c in 0..4usize {
+            let sock = &sock;
+            joins.push(s.spawn(move || run_client(sock, &script(c))));
+        }
+        joins.into_iter().flat_map(|j| j.join().expect("client thread")).collect()
+    });
+
+    // Re-sort the interleaved transcript by request id and compare to a
+    // fresh single-client sequential server answering the same multiset
+    // of requests: every response must be byte-identical.
+    transcript.sort_by(|a, b| a.0.cmp(&b.0));
+    let oracle = Session::new(1);
+    for (req, got) in &transcript {
+        let (want, _) = serve::handle_request(&oracle, req, Duration::from_secs(120));
+        assert_eq!(got, &want, "response diverged from sequential serving for `{req}`");
+    }
+
+    // The concurrency was real and shared: jobs crossed worker shards,
+    // repeated validated sweeps replayed compiled simulation bytecode,
+    // and later sweeps of an already-seen kernel replayed from the disk
+    // cache without lowering (cache-aware planning).
+    let m = session.metrics();
+    assert!(m.steals.get() >= 1, "no work stealing observed: {}", m.summary());
+    assert!(m.jobs_panicked.get() == 0, "{}", m.summary());
+    let (kc_hits, _) = session.kernel_cache_stats();
+    assert!(kc_hits >= 1, "no KernelCache hit despite repeated validated sweeps");
+    assert!(m.disk_hits.get() >= 1, "no disk-cache hit: {}", m.summary());
+    assert!(
+        m.planner_skipped_lowering.get() >= 1,
+        "planner never skipped a lowering: {}",
+        m.summary()
+    );
+
+    // A late client over the now-warm cache still matches the oracle.
+    let warm = run_client(&sock, &script(9));
+    for (req, got) in &warm {
+        let (want, _) = serve::handle_request(&oracle, req, Duration::from_secs(120));
+        assert_eq!(got, &want, "warm response diverged for `{req}`");
+    }
+
+    let _ = std::fs::remove_dir_all(&cache_dir);
+}
+
+#[test]
+fn idle_connection_is_closed_gracefully_after_the_timeout() {
+    let session = Session::new(1);
+    let sock = tmp("sock.idle");
+    start_server(&session, &sock, Some(Duration::from_millis(200)));
+
+    let stream = UnixStream::connect(&sock).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = stream;
+
+    // An active request is answered normally…
+    writeln!(writer, "{{\"id\": 1, \"op\": \"ping\"}}").unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    assert!(reader.read_line(&mut resp).unwrap() > 0);
+    assert!(resp.contains("pong"), "{resp}");
+
+    // …then going quiet past the idle timeout gets the connection
+    // closed from the server side: the next read sees EOF, not an error.
+    resp.clear();
+    let n = reader.read_line(&mut resp).expect("EOF, not an error");
+    assert_eq!(n, 0, "expected server-side close, got: {resp}");
+}
+
+#[test]
+fn shutdown_ends_only_its_own_connection() {
+    let session = Session::new(2);
+    let sock = tmp("sock.shutdown");
+    start_server(&session, &sock, None);
+
+    let a = UnixStream::connect(&sock).expect("connect a");
+    a.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut a_reader = BufReader::new(a.try_clone().unwrap());
+    let mut a_writer = a;
+    let b = UnixStream::connect(&sock).expect("connect b");
+    b.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut b_reader = BufReader::new(b.try_clone().unwrap());
+    let mut b_writer = b;
+
+    writeln!(a_writer, "{{\"id\": 1, \"op\": \"shutdown\"}}").unwrap();
+    a_writer.flush().unwrap();
+    let mut resp = String::new();
+    assert!(a_reader.read_line(&mut resp).unwrap() > 0);
+    assert!(resp.contains("shutting down"), "{resp}");
+    resp.clear();
+    assert_eq!(a_reader.read_line(&mut resp).unwrap(), 0, "a's connection must close");
+
+    // Client b is unaffected: the service keeps serving other clients.
+    writeln!(b_writer, "{{\"id\": 2, \"op\": \"ping\"}}").unwrap();
+    b_writer.flush().unwrap();
+    resp.clear();
+    assert!(b_reader.read_line(&mut resp).unwrap() > 0);
+    assert!(resp.contains("pong"), "{resp}");
+}

@@ -8,7 +8,11 @@
 # additionally measures the persistent on-disk estimate cache: the same
 # sweep cold (estimating + storing) vs warm (decode-and-verify replay
 # from disk with a fresh session per iteration, modelling the
-# `tytra serve` restart case) — the JSON's `persist` block.
+# `tytra serve` restart case) — the JSON's `persist` block. Since PR 8
+# it also measures serve throughput: N concurrent client threads
+# (1/4/16) pushing sweep requests through one shared session, cold vs
+# warm disk cache (the warm rows exercise the cache-aware planner's
+# no-lowering replay) — the JSON's `serve` block.
 #
 # Usage:
 #   scripts/bench.sh            # smoke mode (short, CI-friendly)

@@ -133,4 +133,102 @@ if [ "$COLD" != "$RECOVERED" ]; then
 fi
 rm -rf "$CACHE_DIR"
 
+echo "== concurrent serve smoke (4 parallel clients over one unix socket) =="
+# One long-lived server process (shared executor + caches), four
+# independent `tytra client` processes in lockstep over the same socket.
+# Use the release binary directly so the background PID is the server
+# itself (not a cargo wrapper) and the parallel clients don't serialise
+# on the cargo target-dir lock.
+BIN=rust/target/release/tytra
+SOCK_DIR=$(mktemp -d)
+SOCK="$SOCK_DIR/tytra.sock"
+SOCK_CACHE=$(mktemp -d)
+"$BIN" serve --socket "$SOCK" --cache-dir "$SOCK_CACHE" --timeout-ms 60000 &
+SERVE_PID=$!
+for _ in $(seq 1 200); do
+    [ -S "$SOCK" ] && break
+    sleep 0.05
+done
+if [ ! -S "$SOCK" ]; then
+    echo "error: serve --socket never created $SOCK" >&2
+    kill "$SERVE_PID" 2>/dev/null || true
+    exit 1
+fi
+CLIENT_PIDS=""
+for c in 1 2 3 4; do
+    printf '%s\n' \
+        "{\"id\": \"c$c-1\", \"op\": \"ping\"}" \
+        "{\"id\": \"c$c-2\", \"op\": \"sweep\", \"kernels\": [\"builtin:simple\"], \"max_lanes\": 2, \"max_dv\": 2}" \
+        "{\"id\": \"c$c-3\", \"op\": \"sweep\", \"kernels\": [\"builtin:sor\"], \"max_lanes\": 2, \"max_dv\": 2}" \
+        | "$BIN" client --socket "$SOCK" > "$SOCK_DIR/c$c.out" &
+    CLIENT_PIDS="$CLIENT_PIDS $!"
+done
+for pid in $CLIENT_PIDS; do
+    if ! wait "$pid"; then
+        echo "error: a concurrent serve client failed" >&2
+        kill "$SERVE_PID" 2>/dev/null || true
+        exit 1
+    fi
+done
+for c in 1 2 3 4; do
+    OK_N=$(grep -c '"ok": true' "$SOCK_DIR/c$c.out" || true)
+    if [ "$OK_N" -ne 3 ]; then
+        echo "error: concurrent client $c expected 3 ok responses, got $OK_N" >&2
+        cat "$SOCK_DIR/c$c.out" >&2
+        kill "$SERVE_PID" 2>/dev/null || true
+        exit 1
+    fi
+done
+# Every client's transcript must be byte-identical modulo the echoed
+# request id — concurrency may not change any response.
+for c in 2 3 4; do
+    if ! diff <(sed "s/c1-/cN-/g" "$SOCK_DIR/c1.out") <(sed "s/c$c-/cN-/g" "$SOCK_DIR/c$c.out") >/dev/null; then
+        echo "error: client $c transcript diverged from client 1" >&2
+        diff <(sed "s/c1-/cN-/g" "$SOCK_DIR/c1.out") <(sed "s/c$c-/cN-/g" "$SOCK_DIR/c$c.out") >&2 || true
+        kill "$SERVE_PID" 2>/dev/null || true
+        exit 1
+    fi
+done
+# Graceful stop: the server's SIGTERM latch is only observed at accept
+# boundaries (glibc signal() sets SA_RESTART, so the blocked accept
+# restarts after the handler runs) — poke the socket once to unblock
+# it, then fall back to SIGKILL if it still hasn't exited.
+kill "$SERVE_PID" 2>/dev/null || true
+printf '' | "$BIN" client --socket "$SOCK" >/dev/null 2>&1 || true
+for _ in $(seq 1 100); do
+    kill -0 "$SERVE_PID" 2>/dev/null || break
+    sleep 0.05
+done
+kill -9 "$SERVE_PID" 2>/dev/null || true
+wait "$SERVE_PID" 2>/dev/null || true
+rm -rf "$SOCK_DIR" "$SOCK_CACHE"
+
+echo "== cache-aware planning: warm sweep skips lowering, stdout stays bit-identical =="
+# `sweep --json` keeps the JSON document on stdout (diffed cold vs warm)
+# and prints the metrics summary on stderr, where the planner is
+# observable: the warm run must report `planner_skipped=N` (N >= 1) —
+# disk-hit points replayed without any lowering — and the cold run must
+# not mention the planner at all (its section only appears when used).
+PLAN_DIR=$(mktemp -d)
+PLAN_ARGS="sweep builtin:simple builtin:sor --jobs 2 --max-lanes 2 --max-dv 2 --json --cache-dir $PLAN_DIR/cache"
+# shellcheck disable=SC2086
+COLD_PLAN=$("$BIN" $PLAN_ARGS 2> "$PLAN_DIR/cold.err")
+# shellcheck disable=SC2086
+WARM_PLAN=$("$BIN" $PLAN_ARGS 2> "$PLAN_DIR/warm.err")
+if [ "$COLD_PLAN" != "$WARM_PLAN" ]; then
+    echo "error: warm planner sweep JSON is not bit-identical to the cold sweep" >&2
+    exit 1
+fi
+if ! grep -q 'planner_skipped=[1-9]' "$PLAN_DIR/warm.err"; then
+    echo "error: warm sweep metrics report no planner-skipped lowerings" >&2
+    cat "$PLAN_DIR/warm.err" >&2
+    exit 1
+fi
+if grep -q 'planner_skipped' "$PLAN_DIR/cold.err"; then
+    echo "error: cold sweep already reports planner activity (cache dir not fresh?)" >&2
+    cat "$PLAN_DIR/cold.err" >&2
+    exit 1
+fi
+rm -rf "$PLAN_DIR"
+
 echo "ci: ALL OK"
