@@ -17,7 +17,10 @@
 //! * serve throughput: N concurrent client threads pushing sweep
 //!   requests through `serve::handle_request` at one shared session
 //!   (requests/sec at 1/4/16 clients, cold vs warm disk cache — the
-//!   warm rows measure the cache-aware planner's no-lowering replay).
+//!   warm rows measure the cache-aware planner's no-lowering replay);
+//! * recipe beam search throughput (pipelines scored/sec through
+//!   `Session::search_recipes` on the `saxpy` mac-tail kernel, with
+//!   the pass-memo full/partial/miss split across pipeline prefixes).
 //!
 //! This is also the §Perf harness used for the optimisation passes
 //! (EXPERIMENTS.md §Perf records before/after from this bench).
@@ -373,6 +376,39 @@ fn main() {
         xf_realised
     );
 
+    println!("{}", section("recipe beam search (ordered pass pipelines, estimator-scored)"));
+    // ISSUE 9: the beam search scores ordered pass pipelines with the
+    // estimator under the device walls, legality-gating every candidate
+    // by simulation against the untransformed golden model. Throughput
+    // is pipelines scored per second through `Session::search_recipes`;
+    // the memo split shows how much per-pipeline lowering the shared
+    // pass memo replays across overlapping prefixes (full replays
+    // dominate once the beam revisits extensions of cached stems).
+    let saxpy = tytra::kernels::resolve_specs(&["builtin:saxpy".to_string()])
+        .expect("saxpy resolves")
+        .remove(0)
+        .1;
+    let scfg = tytra::transform::search::SearchConfig::default();
+    let search_session = Session::new(4);
+    let scored_per_search =
+        search_session.search_recipes(&saxpy, &dev, &scfg).expect("beam search runs").scored;
+    let (w, i) = scale(2, 10);
+    let r_search = bench("beam search (saxpy, beam 4, max len 4)", w, i, || {
+        black_box(search_session.search_recipes(&saxpy, &dev, &scfg).unwrap())
+    });
+    let search_pps = r_search.units_per_sec(scored_per_search as u64);
+    let smet = search_session.metrics();
+    let search_memo =
+        (smet.xform_memo_full.get(), smet.xform_memo_partial.get(), smet.xform_memo_miss.get());
+    println!(
+        "{}  ({:.0} pipelines scored/s; memo full={} partial={} miss={})",
+        r_search.line(),
+        search_pps,
+        search_memo.0,
+        search_memo.1,
+        search_memo.2
+    );
+
     if let Some(path) = std::env::var_os("TYTRA_BENCH_JSON") {
         let json = render_json(
             smoke,
@@ -387,6 +423,7 @@ fn main() {
             (int_ips, bat_ips, sim_speedup, kcache_stats),
             (cold_disk_cps, warm_disk_cps, disk_stats),
             &serve_rows,
+            (search_pps, scored_per_search, search_memo),
         );
         if let Err(e) = std::fs::write(&path, json) {
             eprintln!("cannot write {}: {e}", path.to_string_lossy());
@@ -412,6 +449,7 @@ fn render_json(
     sim: (f64, f64, f64, (u64, u64)),
     persist: (f64, f64, (u64, u64)),
     serve: &[(usize, f64, f64)],
+    search: (f64, usize, (u64, u64, u64)),
 ) -> String {
     let rows = |xs: &[(usize, f64)]| -> String {
         xs.iter()
@@ -430,6 +468,7 @@ fn render_json(
     let (xkernels, xrecipes, xpoints, xrealised) = transforms;
     let (int_ips, bat_ips, speedup, (khits, kcompiles)) = sim;
     let (cold_disk_cps, warm_disk_cps, (dhits, drecovered)) = persist;
+    let (search_pps, search_scored, (smf, smp, smm)) = search;
     format!(
         "{{\n  \"bench\": \"estimator_speed\",\n  \"mode\": \"{}\",\n  \
          \"single_estimate_us\": {{\"simple_c2\": {:.3}, \"sor_c2\": {:.3}}},\n  \
@@ -446,7 +485,9 @@ fn render_json(
          \"persist\": {{\"cold_disk_configs_per_sec\": {cold_disk_cps:.1}, \
          \"warm_disk_configs_per_sec\": {warm_disk_cps:.1}, \
          \"disk_hits_per_sweep\": {dhits}, \"recovered\": {drecovered}}},\n  \
-         \"serve\": {{\"requests_per_sec\": [{serve_rows}]}}\n}}\n",
+         \"serve\": {{\"requests_per_sec\": [{serve_rows}]}},\n  \
+         \"search\": {{\"pipelines_per_sec\": {search_pps:.1}, \"scored_per_search\": {search_scored}, \
+         \"memo\": {{\"full\": {smf}, \"partial\": {smp}, \"miss\": {smm}}}}}\n}}\n",
         if smoke { "smoke" } else { "full" },
         est_simple_s * 1e6,
         est_sor_s * 1e6,

@@ -9,6 +9,7 @@
 //! tytra dse       <kernel.knl|builtin:NAME> [--device s4]
 //!                 [--max-lanes N] [--max-dv N] [--dense] [--jobs N] [--config f]
 //! tytra sweep     <kernel>... [--devices s4,c4]          # builtin:all = whole library
+//! tytra search    <kernel.knl|builtin:NAME> [--beam-width N] [--max-len N] [--seed N] [--json]
 //! tytra serve     [--socket PATH] [--timeout-ms N] [--idle-timeout-ms N]
 //! tytra client    --socket PATH                           # lockstep LDJSON client
 //! tytra conformance [--quick] [--seed N] [--random N] [--json] [--engine E]
@@ -41,7 +42,8 @@ pub struct Cli {
 /// Flags that take a value.
 const VALUE_FLAGS: &[&str] = &[
     "device", "devices", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts", "random",
-    "engine", "cache-dir", "cache-budget", "timeout-ms", "socket", "idle-timeout-ms",
+    "engine", "cache-dir", "cache-budget", "timeout-ms", "socket", "idle-timeout-ms", "beam-width",
+    "max-len",
 ];
 /// Boolean flags.
 const BOOL_FLAGS: &[&str] = &[
@@ -138,6 +140,7 @@ pub fn dispatch(args: &[String]) -> Result<String, String> {
         "compare" => cmd_compare(&cli),
         "dse" => cmd_dse(&cli),
         "sweep" => cmd_sweep(&cli),
+        "search" => cmd_search(&cli),
         "serve" => cmd_serve(&cli),
         "client" => cmd_client(&cli),
         "conformance" => cmd_conformance(&cli),
@@ -166,6 +169,10 @@ pub fn usage() -> String {
                                       (builtin:all = the whole scenario library;\n\
                                       --json = machine-readable frontier + wall checks;\n\
                                       --cache-dir DIR = persistent estimate cache)\n\
+       search   <kernel.knl|builtin:NAME>  beam-search transform pipelines against the\n\
+                                      estimator under the device walls; reports the\n\
+                                      winning recipe vs the four named recipes\n\
+                                      (--beam-width N --max-len N --seed N --json)\n\
        serve    [--socket PATH]       long-running sweep service: one JSON request per\n\
                                       line on stdin (or the socket), one response per\n\
                                       line; the socket serves many clients concurrently\n\
@@ -186,7 +193,7 @@ pub fn usage() -> String {
             --config tytra.toml   --artifacts DIR   --tb   --quick   --random N   --json\n\
             --inject-mismatch   --engine batched|compiled|interpreted\n\
             --cache-dir DIR   --cache-budget BYTES   --timeout-ms N   --socket PATH\n\
-            --idle-timeout-ms N"
+            --idle-timeout-ms N   --beam-width N   --max-len N"
         .to_string()
 }
 
@@ -465,6 +472,72 @@ fn cmd_sweep(cli: &Cli) -> Result<String, String> {
     out.push_str(&t.render());
     out.push('\n');
     out.push_str(&session.metrics().summary());
+    Ok(out)
+}
+
+/// `tytra search` — estimator-guided beam search over ordered transform
+/// pipelines for one kernel (`transform::search`). Every candidate is
+/// legality-gated by simulation against the untransformed golden model
+/// and scored with the estimator under the active device walls; the
+/// report pits the winner against the four named recipes.
+fn cmd_search(cli: &Cli) -> Result<String, String> {
+    let cfg = sweep_config(cli)?;
+    let dev = Device::by_name(&cfg.device).ok_or_else(|| format!("unknown device `{}`", cfg.device))?;
+
+    let spec = cli.positional.first().ok_or("expected a kernel file or builtin:NAME (see `tytra kernels`)")?;
+    if spec == "builtin:all" {
+        return Err("`search` explores one kernel's pipeline space; pick a single kernel".into());
+    }
+    let (_src, k) = crate::kernels::resolve_specs(std::slice::from_ref(spec))?.remove(0);
+
+    let mut scfg = crate::transform::search::SearchConfig::default();
+    if let Some(v) = cli.flag("beam-width") {
+        scfg.beam_width = v.parse().map_err(|e| format!("--beam-width: {e}"))?;
+    }
+    if let Some(v) = cli.flag("max-len") {
+        scfg.max_len = v.parse().map_err(|e| format!("--max-len: {e}"))?;
+    }
+    if let Some(v) = cli.flag("seed") {
+        scfg.seed = v.parse().map_err(|e| format!("--seed: {e}"))?;
+    }
+
+    let session = build_session(&cfg, false)?;
+    let report = session.search_recipes(&k, &dev, &scfg)?;
+
+    if cli.has("json") {
+        // Same split as `sweep --json`: byte-stable document on stdout,
+        // metrics line on stderr.
+        eprintln!("{}", session.metrics().summary());
+        return Ok(crate::coordinator::serve::render_search_json(&k.name, &dev, &scfg, &report));
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "recipe search for `{}` on {} (beam {}, max len {}, seed {}): {} scored, {} rejected, {} generation(s)\n\n",
+        k.name, dev.name, scfg.beam_width, scfg.max_len, scfg.seed, report.scored, report.rejected, report.generations
+    ));
+    let mut t = crate::util::Table::new(vec!["", "recipe", "realised", "ALUTs", "DSP", "EWGT", "util%", "feasible"]);
+    let winner = &report.winner;
+    for (tag, s) in std::iter::once(("winner", winner)).chain(report.named.iter().map(|n| ("named", n))) {
+        let ev = &s.evaluated;
+        t.row(vec![
+            tag.into(),
+            s.recipe.to_string(),
+            ev.label.clone(),
+            human_count(ev.resources.alut as f64),
+            ev.resources.dsp.to_string(),
+            human_count(ev.ewgt),
+            format!("{:.1}", ev.utilisation * 100.0),
+            if ev.feasible { "yes" } else { "NO" }.into(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nWINNER: {} (realised as `{}`)\n{}",
+        winner.recipe,
+        winner.evaluated.label,
+        session.metrics().summary()
+    ));
     Ok(out)
 }
 
@@ -761,7 +834,7 @@ mod tests {
         let out = dispatch(&args("kernels")).unwrap();
         for name in [
             "simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow", "dotn",
-            "vsum", "matvec", "blend6",
+            "vsum", "matvec", "blend6", "saxpy",
         ] {
             assert!(out.contains(name), "missing `{name}` in:\n{out}");
         }
@@ -808,7 +881,7 @@ mod tests {
     fn conformance_quick_json_counts() {
         let out = dispatch(&args("conformance --quick --random 0 --json")).unwrap();
         assert!(out.contains("\"mismatches\": 0"), "{out}");
-        assert!(out.contains("\"kernels\": 12"), "{out}");
+        assert!(out.contains("\"kernels\": 13"), "{out}");
     }
 
     #[test]
@@ -870,6 +943,32 @@ mod tests {
         assert_eq!(cold, warm, "warm-disk sweep must be bit-identical to cold");
         assert!(std::fs::read_dir(&dir).unwrap().next().is_some(), "cache populated");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn search_beats_the_named_recipes_on_saxpy() {
+        let out =
+            dispatch(&args("search builtin:saxpy --jobs 2 --beam-width 2 --max-len 2")).unwrap();
+        assert!(out.contains("WINNER: "), "{out}");
+        assert!(out.contains("fuse-mac"), "{out}");
+        assert!(out.contains("searches=1"), "{out}");
+    }
+
+    #[test]
+    fn search_json_is_byte_stable() {
+        let argv = args("search builtin:saxpy --jobs 2 --beam-width 2 --max-len 2 --json");
+        let a = dispatch(&argv).unwrap();
+        assert!(a.contains("\"winner\""), "{a}");
+        assert!(a.contains("\"named\""), "{a}");
+        assert!(a.contains("\"visited\""), "{a}");
+        let b = dispatch(&argv).unwrap();
+        assert_eq!(a, b, "search --json must be byte-identical across runs");
+    }
+
+    #[test]
+    fn search_rejects_builtin_all() {
+        let e = dispatch(&args("search builtin:all")).unwrap_err();
+        assert!(e.contains("single kernel"), "{e}");
     }
 
     #[test]

@@ -27,6 +27,8 @@
 //! | `hdl/*` | emitted Verilog | structural invariants (incl. declared signals, defined-module instantiation and the single-driver accumulator register) |
 //! | `cache/warm-vs-cold-bit-identical` | persistent on-disk estimate | fresh recompute |
 //! | `cache/corruption-recovers` | truncated cache entry | recompute (never stale bytes, never a panic) |
+//! | `search/semantics-preserved` | every pipeline a beam search visited | untransformed simulation (full memory state, re-simulated outside the engine's own gate) |
+//! | `search/deterministic` | `tytra search --json` document | byte-identical re-run |
 //!
 //! Design points cover the full C1–C4 space — pipe lanes (C1/C2), comb
 //! cores (C3), sequential PEs (C4/C5) — plus mixed call-chain
@@ -254,6 +256,7 @@ pub fn run(opts: &Options) -> Result<ConformanceReport, String> {
     }
 
     h.conform_persistent_cache()?;
+    h.conform_search()?;
 
     Ok(ConformanceReport {
         rows: h.rows,
@@ -724,6 +727,61 @@ impl Harness<'_> {
         Ok(())
     }
 
+    /// Contract of the recipe beam search (`transform::search`): every
+    /// pipeline the search *visited* preserves the untransformed
+    /// module's full final memory state (re-simulated here, outside the
+    /// engine's own legality gate), and the machine-readable report is
+    /// byte-identical across runs. A small beam on the search showpiece
+    /// kernel keeps this inside smoke budget while still exercising
+    /// multi-generation extension and the named-recipe batch.
+    fn conform_search(&mut self) -> Result<(), String> {
+        use crate::transform::search::{search_kernel, SearchConfig};
+
+        let checks0 = self.checks;
+        let fails0 = self.failures.len();
+
+        let dev = self.opts.device.clone();
+        let sc = kernels::find("saxpy").ok_or("registry lost the `saxpy` scenario")?;
+        let k = sc.parse()?;
+        let lk = frontend::analyze_kernel(&k)?;
+        let cfg = SearchConfig { beam_width: 2, max_len: 2, seed: self.opts.seed };
+        let report = search_kernel(&k, &dev, &cfg)?;
+
+        // The gate itself must have found nothing to reject (every pass
+        // is semantics-preserving) …
+        self.check(sc.name, "search", "search/semantics-preserved", report.rejected == 0, || {
+            format!("{} pipeline(s) were rejected by the legality gate", report.rejected)
+        });
+        // … and every visited pipeline must replay clean when this
+        // harness lowers and simulates it afresh.
+        let m0 = frontend::lower_point(&lk, DesignPoint::c2())?;
+        let golden = sim::simulate_with(&m0, &dev, &Workload::random_for(&m0, cfg.seed), self.opts.engine)?;
+        for s in &report.visited {
+            let mt = frontend::lower_point(&lk, DesignPoint::c2().with_transforms(s.recipe))?;
+            let rt =
+                sim::simulate_with(&mt, &dev, &Workload::random_for(&mt, cfg.seed), self.opts.engine)?;
+            self.check(sc.name, &s.recipe.name(), "search/semantics-preserved", rt.mems == golden.mems, || {
+                first_mem_diff(&rt.mems, &golden.mems)
+            });
+        }
+
+        // Byte-stable report: re-run the whole search and render both.
+        let again = search_kernel(&k, &dev, &cfg)?;
+        let ja = crate::coordinator::serve::render_search_json(sc.name, &dev, &cfg, &report);
+        let jb = crate::coordinator::serve::render_search_json(sc.name, &dev, &cfg, &again);
+        self.check(sc.name, "search", "search/deterministic", ja == jb, || {
+            "two identically-configured searches rendered different JSON".into()
+        });
+
+        self.rows.push(KernelRow {
+            kernel: "recipe-search".into(),
+            points: 0,
+            checks: self.checks - checks0,
+            mismatches: (self.failures.len() - fails0) as u64,
+        });
+        Ok(())
+    }
+
     /// Structural invariants on the emitted Verilog.
     fn conform_hdl(&mut self, name: &str, pl: &str, m: &tir::Module, d: &sim::Design) -> Result<(), String> {
         let v = hdl::generate_verilog(m)?;
@@ -1034,6 +1092,21 @@ mod tests {
         assert!(text.contains("ALL OK"), "{text}");
         let json = r.render_json();
         assert!(json.contains("\"mismatches\": 0"), "{json}");
+    }
+
+    #[test]
+    fn search_checks_run_in_the_sweep() {
+        let mut o = quick_opts();
+        o.points = vec![DesignPoint::c2()];
+        o.random_cases = 0;
+        o.check_hdl = false;
+        let r = run(&o).unwrap();
+        let row = r.rows.iter().find(|row| row.kernel == "recipe-search");
+        let row = row.expect("the search contract must appear in every sweep");
+        // rejected-count gate + one re-simulation per visited pipeline +
+        // the byte-stability gate
+        assert!(row.checks >= 3, "{}", r.render());
+        assert_eq!(row.mismatches, 0, "{}", r.render());
     }
 
     #[test]

@@ -427,6 +427,96 @@ impl Session {
         Ok(out)
     }
 
+    /// Beam-search pass pipelines for one kernel (the `tytra search`
+    /// backend): the engine in `transform::search` drives generations,
+    /// and every candidate batch fans out as executor jobs running the
+    /// same per-point machinery as a validated sweep — disk probe under
+    /// the enumerated label, memoised lowering, the estimate through the
+    /// session cache, a wall check, and a simulation of the candidate
+    /// module against the identity module's golden memory state as the
+    /// legality gate. Warm searches replay estimates from the caches;
+    /// the simulation reuses compiled bytecode via the `KernelCache`.
+    pub fn search_recipes(
+        &self,
+        k: &KernelDef,
+        dev: &Device,
+        cfg: &transform::search::SearchConfig,
+    ) -> Result<transform::search::SearchReport, String> {
+        let t0 = Instant::now();
+        let lk = Arc::new(frontend::analyze_kernel(k)?);
+        let key_src = Arc::new(format!("kerneldef:{k:?}"));
+        // The search scores the recipe axis at the fixed C2 base point
+        // (one pipeline lane) — orthogonal to the replication axes.
+        let base = DesignPoint::c2();
+        // Golden model: the identity module's final memory state on the
+        // seeded workload. Transforms never touch the Manage-IR, so the
+        // same seed draws identical inputs for every candidate.
+        let m0 = self.lower_memoised(&lk, base)?;
+        let w0 = sim::Workload::random_for(&m0, cfg.seed);
+        let golden = Arc::new(sim::simulate_compiled(&self.compiled_kernel(&m0)?, dev, &w0)?.mems);
+        let seed = cfg.seed;
+        let report = transform::search::search(cfg, |batch| {
+            let sess = self.clone();
+            let lk = lk.clone();
+            let key_src = key_src.clone();
+            let dev_job = dev.clone();
+            let golden = golden.clone();
+            let results = self.exec.map(
+                batch.to_vec(),
+                |r| format!("search {r}"),
+                move |&recipe| {
+                    let dev = &dev_job;
+                    sess.metrics.jobs.inc();
+                    let point = DesignPoint { transforms: recipe, ..base };
+                    let planned = sess.probe_entry(&key_src, point, dev);
+                    let module = sess.lower_memoised(&lk, point)?;
+                    let realised = frontend::lower::realised_point(&module, point);
+                    let estimate = match planned {
+                        Some(entry) => entry.estimate,
+                        None => {
+                            let ck = key(&key_src, &realised.label(), &dev.name);
+                            let estimate = sess.cache.get_or_insert_with(ck, || {
+                                estimator::estimate_with_db(&module, dev, sess.db)
+                            })?;
+                            let bytes = dse::walls::bytes_per_workgroup(&module);
+                            sess.store_entry(
+                                &key_src,
+                                &point,
+                                dev,
+                                &Entry { estimate: estimate.clone(), realised, bytes_per_workgroup: bytes },
+                            );
+                            estimate
+                        }
+                    };
+                    let bytes = dse::walls::bytes_per_workgroup(&module);
+                    let walls = dse::walls::check_with_bytes(bytes, &estimate, dev);
+                    let compiled = sess.compiled_kernel(&module)?;
+                    let w = sim::Workload::random_for(&module, seed);
+                    let r = sim::simulate_compiled(&compiled, dev, &w)?;
+                    if r.mems != *golden {
+                        return Ok(None);
+                    }
+                    Ok(Some(transform::search::Scored::from_parts(
+                        recipe,
+                        realised.label(),
+                        &estimate,
+                        &walls,
+                    )))
+                },
+            );
+            let mut out = Vec::with_capacity(results.len());
+            for r in results {
+                out.push(r?);
+            }
+            Ok(out)
+        })?;
+        self.metrics.searches.inc();
+        self.metrics.search_scored.add(report.scored as u64);
+        self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
+        self.sync_exec_stats();
+        Ok(report)
+    }
+
     /// Batched exploration over the whole kernel scenario library
     /// (`crate::kernels::registry`) × a device list: the standing
     /// regression sweep (`tytra sweep builtin:all`, the benches) that
@@ -870,5 +960,43 @@ mod tests {
             assert_eq!(x.walls, y.walls, "{}", x.point.label());
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn session_search_matches_the_serial_engine() {
+        // The executor fan-out must reproduce the serial evaluator's
+        // report exactly — same winner, same visited order, same bits.
+        let k = parse_kernel(
+            "kernel sx { in x, w, b : ui18[64]\nout y : ui18[64]\n\
+             for n in 0..64 { y[n] = x[n] * w[n] + b[n] } }",
+        )
+        .unwrap();
+        let dev = Device::stratix4();
+        let cfg = transform::search::SearchConfig { beam_width: 2, max_len: 3, seed: 7 };
+        let serial = transform::search::search_kernel(&k, &dev, &cfg).unwrap();
+        let session = Session::new(4);
+        let pooled = session.search_recipes(&k, &dev, &cfg).unwrap();
+        assert_eq!(serial.winner.recipe, pooled.winner.recipe);
+        assert_eq!(serial.scored, pooled.scored);
+        assert_eq!(serial.rejected, pooled.rejected);
+        assert_eq!(serial.visited.len(), pooled.visited.len());
+        for (a, b) in serial.visited.iter().zip(&pooled.visited) {
+            assert_eq!(a.recipe, b.recipe);
+            assert_eq!(a.evaluated.label, b.evaluated.label);
+            assert_eq!(a.evaluated.ewgt.to_bits(), b.evaluated.ewgt.to_bits());
+            assert_eq!(a.evaluated.utilisation.to_bits(), b.evaluated.utilisation.to_bits());
+        }
+        assert_eq!(session.metrics().searches.get(), 1);
+        assert_eq!(session.metrics().search_scored.get(), pooled.scored as u64);
+        assert!(session.metrics().summary().contains("searches=1"), "{}", session.metrics().summary());
+
+        // Warm replay: estimates come off the session cache, compiled
+        // simulation kernels off the KernelCache — report unchanged.
+        let compiles = session.metrics().sim_compiles.get();
+        let again = session.search_recipes(&k, &dev, &cfg).unwrap();
+        assert_eq!(again.winner.recipe, pooled.winner.recipe);
+        assert_eq!(again.winner.evaluated.label, pooled.winner.evaluated.label);
+        assert_eq!(session.metrics().sim_compiles.get(), compiles, "no new compiles warm");
+        assert_eq!(session.metrics().searches.get(), 2);
     }
 }

@@ -64,6 +64,11 @@ pub struct Metrics {
     /// Points the planner replayed straight from the disk cache —
     /// probed *before* lowering, so the whole frontend was skipped.
     pub planner_skipped_lowering: Counter,
+    /// Recipe beam searches completed (`Session::search_recipes`).
+    pub searches: Counter,
+    /// Pipelines scored across all searches (legality rejections
+    /// included — they cost an evaluation too).
+    pub search_scored: Counter,
     /// Executor: jobs a worker stole from another worker's shard
     /// (mirrored from `ExecStats`).
     pub steals: Counter,
@@ -114,6 +119,13 @@ impl Metrics {
                 self.planner_skipped_lowering.get()
             ));
         }
+        if self.searches.get() > 0 {
+            s.push_str(&format!(
+                " searches={} search_scored={}",
+                self.searches.get(),
+                self.search_scored.get()
+            ));
+        }
         if self.steals.get() + self.queue_depth_max.get() + self.jobs_panicked.get() > 0 {
             s.push_str(&format!(
                 " steals={} queue_depth_max={} jobs_panicked={}",
@@ -156,6 +168,10 @@ mod tests {
         m.xform_memo_partial.add(2);
         m.xform_memo_miss.add(3);
         assert!(m.summary().contains("memo_full=1 memo_partial=2 memo_miss=3"), "{}", m.summary());
+        assert!(!m.summary().contains("searches"), "no search yet");
+        m.searches.inc();
+        m.search_scored.add(41);
+        assert!(m.summary().contains("searches=1 search_scored=41"), "{}", m.summary());
     }
 
     #[test]

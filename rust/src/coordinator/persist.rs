@@ -23,24 +23,33 @@
 //! including concurrent writers of the same key — only ever observe
 //! complete files.
 //!
-//! ## Entry format (version 2, little-endian)
+//! ## Entry format (version 3, little-endian)
 //!
 //! ```text
 //! magic    "TYTRA"                      5 bytes
-//! version  u8 = 2
+//! version  u8 = 3
 //! key      4 × (u32 len + bytes)        kernel-hash hex, device, label, recipe
 //! realised the realised DesignPoint     style u8, lanes u64, dv u64,
-//!                                       chain u8, reduce u8, recipe-bits u8
+//!                                       chain u8, reduce u8,
+//!                                       recipe-name (u32 len + bytes)
 //! io       bytes_per_workgroup          f64 via to_bits
 //! payload  the Estimate, field by field (f64 via to_bits; Op as mnemonic)
 //! check    u64 FNV-1a over everything above
 //! ```
 //!
+//! v3 stores the realised point's transform recipe by its canonical
+//! *name* (invertible via `TransformRecipe::parse`) instead of the old
+//! one-byte pass bit-set: ordered, parameterised pipelines
+//! (`fold>cse>split@4`) don't fit in a byte. The **keys** were already
+//! name-based (the `recipe` key field), so filenames — and therefore
+//! which entries exist — are unchanged across the migration; only the
+//! version byte and the in-record point encoding moved.
+//!
 //! The embedded key material is verified on load: a filename-hash
 //! collision (or a file copied between keys) can therefore never serve
-//! a wrong estimate — it degrades to a recompute. Version-1 entries
-//! fail the version check and degrade the same way (recompute and
-//! rewrite), so upgrading never needs a cache wipe.
+//! a wrong estimate — it degrades to a recompute. Version-1 and
+//! version-2 entries fail the version check and degrade the same way
+//! (recompute and rewrite), so upgrading never needs a cache wipe.
 //!
 //! ## Corruption tolerance
 //!
@@ -134,10 +143,10 @@ pub struct DiskCache {
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 impl DiskCache {
-    /// Current entry-format version byte (v2: replay records keyed by
-    /// the enumerated label; v1 estimate-only entries fail the version
-    /// check and recompute).
-    pub const FORMAT_VERSION: u8 = 2;
+    /// Current entry-format version byte (v3: the realised recipe is a
+    /// canonical name string; v1/v2 entries fail the version check and
+    /// recompute).
+    pub const FORMAT_VERSION: u8 = 3;
 
     /// Default LRU byte budget (64 MiB ≈ hundreds of thousands of
     /// entries — a cache, not an archive).
@@ -282,7 +291,7 @@ fn encode(key: &PersistKey, entry: &Entry) -> Vec<u8> {
         ReduceShape::Acc => 0,
         ReduceShape::Tree => 1,
     });
-    out.push(p.transforms.bits());
+    put_str(&mut out, &p.transforms.name());
     put_u64(&mut out, entry.bytes_per_workgroup.to_bits());
 
     out.push(class_byte(est.class));
@@ -365,11 +374,9 @@ fn decode(bytes: &[u8], key: &PersistKey) -> Result<Entry, String> {
         1 => ReduceShape::Tree,
         b => return Err(format!("bad point reduce byte {b}")),
     };
-    let tbits = r.u8()?;
-    let transforms = TransformRecipe::from_bits(tbits);
-    if transforms.bits() != tbits {
-        return Err(format!("bad recipe bits {tbits:#04x}"));
-    }
+    let rname = r.str()?;
+    let transforms =
+        TransformRecipe::parse(&rname).ok_or_else(|| format!("bad recipe name `{rname}`"))?;
     let realised =
         DesignPoint { style, lanes: p_lanes, dv: p_dv, chain, reduce: p_reduce, transforms };
     let bytes_per_workgroup = f64::from_bits(r.u64()?);
@@ -572,6 +579,20 @@ mod tests {
             );
             assert_eq!(entry.realised, back.realised);
         }
+    }
+
+    #[test]
+    fn ordered_recipes_roundtrip_by_name() {
+        // v3's reason to exist: a parameterised pipeline that never fit
+        // the old one-byte bit-set must replay exactly.
+        let r = TransformRecipe::parse("fuse-mac>renarrow>split@4").unwrap();
+        let mut entry = some_entry();
+        entry.realised = entry.realised.with_transforms(r);
+        let key = PersistKey { recipe: "fuse-mac>renarrow>split@4", ..a_key() };
+        let bytes = encode(&key, &entry);
+        let back = decode(&bytes, &key).unwrap();
+        assert_eq!(back.realised.transforms, r);
+        assert_eq!(entry, back);
     }
 
     #[test]

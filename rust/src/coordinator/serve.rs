@@ -278,7 +278,8 @@ fn metrics_json(session: &Session) -> String {
         "{{\"summary\": \"{}\", \"jobs\": {}, \"sweeps\": {}, \"sim_compiles\": {}, \
          \"sim_cache_hits\": {}, \"disk_hits\": {}, \"disk_misses\": {}, \
          \"cache_recovered\": {}, \"memo_full\": {}, \"memo_partial\": {}, \"memo_miss\": {}, \
-         \"lowerings\": {}, \"planner_skipped_lowering\": {}, \"steals\": {}, \
+         \"lowerings\": {}, \"planner_skipped_lowering\": {}, \"searches\": {}, \
+         \"search_scored\": {}, \"steals\": {}, \
          \"queue_depth_max\": {}, \"jobs_panicked\": {}}}",
         escape(&m.summary()),
         m.jobs.get(),
@@ -293,9 +294,61 @@ fn metrics_json(session: &Session) -> String {
         m.xform_memo_miss.get(),
         m.lowerings.get(),
         m.planner_skipped_lowering.get(),
+        m.searches.get(),
+        m.search_scored.get(),
         m.steals.get(),
         m.queue_depth_max.get(),
         m.jobs_panicked.get()
+    )
+}
+
+/// Machine-readable recipe-search export (`tytra search --json`): the
+/// config, the winner, the four named recipes at the same design point
+/// (the winner-vs-named table), and every visited pipeline in
+/// evaluation order. Same hand-rolled style and float precisions as
+/// [`render_sweep_json`], and deterministic input ⇒ byte-identical
+/// output (pinned by `search/deterministic` in the conformance suite).
+pub fn render_search_json(
+    kernel: &str,
+    device: &Device,
+    cfg: &crate::transform::search::SearchConfig,
+    report: &crate::transform::search::SearchReport,
+) -> String {
+    let row = |s: &crate::transform::search::Scored| -> String {
+        let ev = &s.evaluated;
+        format!(
+            "{{\"recipe\": \"{}\", \"label\": \"{}\", \"alut\": {}, \"reg\": {}, \
+             \"bram_bits\": {}, \"dsp\": {}, \"ewgt\": {:.3}, \"utilisation\": {:.6}, \
+             \"feasible\": {}}}",
+            s.recipe,
+            ev.label,
+            ev.resources.alut,
+            ev.resources.reg,
+            ev.resources.bram_bits,
+            ev.resources.dsp,
+            ev.ewgt,
+            ev.utilisation,
+            ev.feasible
+        )
+    };
+    let named: Vec<String> = report.named.iter().map(&row).collect();
+    let visited: Vec<String> = report.visited.iter().map(&row).collect();
+    format!(
+        "{{\n  \"kernel\": \"{}\", \"device\": \"{}\",\n  \
+         \"beam_width\": {}, \"max_len\": {}, \"seed\": {},\n  \
+         \"generations\": {}, \"scored\": {}, \"rejected\": {},\n  \
+         \"winner\": {},\n  \"named\": [{}],\n  \"visited\": [{}]\n}}",
+        kernel,
+        device.name,
+        cfg.beam_width,
+        cfg.max_len,
+        cfg.seed,
+        report.generations,
+        report.scored,
+        report.rejected,
+        row(&report.winner),
+        named.join(", "),
+        visited.join(", ")
     )
 }
 
@@ -629,6 +682,29 @@ mod tests {
         let (h1, m1) = session.cache_stats();
         assert_eq!(h1, 6, "second request served from the estimate cache");
         assert_eq!(m1, m0);
+    }
+
+    #[test]
+    fn search_json_is_deterministic_and_parseable() {
+        let k = crate::frontend::parse_kernel(
+            "kernel sx { in x, w, b : ui18[64]\nout y : ui18[64]\n\
+             for n in 0..64 { y[n] = x[n] * w[n] + b[n] } }",
+        )
+        .unwrap();
+        let dev = Device::stratix4();
+        let cfg = crate::transform::search::SearchConfig { beam_width: 2, max_len: 2, seed: 5 };
+        let session = Session::new(2);
+        let a = render_search_json("sx", &dev, &cfg, &session.search_recipes(&k, &dev, &cfg).unwrap());
+        let b = render_search_json("sx", &dev, &cfg, &session.search_recipes(&k, &dev, &cfg).unwrap());
+        assert_eq!(a, b, "cold and warm searches render byte-identically");
+        let j = Json::parse(&a).unwrap();
+        assert_eq!(j.get("kernel").and_then(Json::as_str), Some("sx"));
+        assert_eq!(j.get("beam_width").and_then(Json::as_u64), Some(2));
+        let winner = j.get("winner").unwrap();
+        assert!(winner.get("recipe").and_then(Json::as_str).is_some());
+        assert!(winner.get("feasible").and_then(Json::as_bool).is_some());
+        assert_eq!(j.get("named").and_then(Json::as_array).unwrap().len(), 4);
+        assert!(!j.get("visited").and_then(Json::as_array).unwrap().is_empty());
     }
 
     /// A reader that serves some bytes, then models an idle socket by

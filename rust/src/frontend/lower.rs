@@ -417,8 +417,14 @@ fn normalise_point(
 }
 
 /// Identifier-safe rendering of a point's label (the module-name tail).
+/// Ordered-pipeline recipe names add `>`, `@` and `-` to the label
+/// alphabet (`fold>cse>split@4`, `fuse-mac`); legacy named recipes are
+/// purely alphanumeric, so their module names are untouched by the
+/// extra replacements.
 fn point_suffix(p: &DesignPoint) -> String {
-    p.label().replace('×', "x").replace('+', "_")
+    p.label()
+        .replace('×', "x")
+        .replace(['+', '>', '@', '-'], "_")
 }
 
 /// Identifier-safe module name of a kernel at a (normalised) point.

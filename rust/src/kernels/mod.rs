@@ -30,6 +30,7 @@
 //! | `vsum`     | 1-D bare-tap reduction  | empty datapath + accumulator        |
 //! | `matvec`   | 2-D row-wise reduction  | segmented reduce, WRAP streams      |
 //! | `blend6`   | 1-D 6-stream blend      | transform recipes (fold/balance), IO wall |
+//! | `saxpy`    | 1-D scaled vector add   | recipe search (`fuse-mac` mac tail) |
 //!
 //! The three reduction kernels (`dotn`/`vsum`/`matvec`) are the BLAS-1/2
 //! story the windowed `dot3` used to stand in for: their output rate
@@ -43,6 +44,7 @@ pub mod fir;
 pub mod jacobi;
 pub mod matvec;
 pub mod mavg;
+pub mod saxpy;
 pub mod scale;
 pub mod shadow;
 pub mod vsum;
@@ -184,6 +186,13 @@ pub fn registry() -> Vec<KernelScenario> {
             hand_tir: blend6::tir,
             dest_init: DestInit::Zero,
         },
+        KernelScenario {
+            name: "saxpy",
+            about: "elementwise scaled vector add (recipe-search showpiece: fusable mac tail)",
+            frontend: saxpy::source,
+            hand_tir: saxpy::tir,
+            dest_init: DestInit::Zero,
+        },
     ]
 }
 
@@ -235,12 +244,13 @@ mod tests {
         // ISSUE 2 acceptance: SOR + ≥5 new workloads beyond the paper's;
         // ISSUE 3 adds the shadowed-callee-param regression kernel;
         // ISSUE 4 adds the three reduction kernels (the BLAS-1/2 story);
-        // ISSUE 5 adds the transform-recipe showpiece.
+        // ISSUE 5 adds the transform-recipe showpiece;
+        // ISSUE 9 adds the recipe-search showpiece (fusable mac tail).
         let names = names();
-        assert!(names.len() >= 12, "{names:?}");
+        assert!(names.len() >= 13, "{names:?}");
         for required in [
             "simple", "sor", "jacobi2d", "fir3", "mavg3", "dot3", "scale", "shadow", "dotn",
-            "vsum", "matvec", "blend6",
+            "vsum", "matvec", "blend6", "saxpy",
         ] {
             assert!(names.contains(&required), "missing `{required}`");
         }

@@ -1,0 +1,140 @@
+//! SAXPY (`y = x·w + b`, elementwise) — the recipe-search showpiece
+//! workload.
+//!
+//! The datapath is a single multiply feeding a single add: the classic
+//! multiply-accumulate tail. Every *legacy* named recipe degenerates on
+//! it (nothing folds, CSEs, strength-reduces or balances, and the
+//! two-op chain is below the split threshold), while the PR 9 `fuse-mac`
+//! pass contracts the pair into one fused `mac` — one pipeline stage and
+//! one result register fewer at identical DSP cost. That makes saxpy the
+//! kernel where `tytra search` *must* out-perform the whole named-recipe
+//! enumeration: the searched pipeline strictly Pareto-dominates all four
+//! named recipes, the acceptance pinned by `rust/tests/transforms.rs`
+//! and reported in EXPERIMENTS §Search.
+
+/// Default stream length (64 keeps the search's per-candidate
+/// simulation gate cheap — the beam legality-checks every pipeline).
+pub const N: usize = 64;
+
+/// The kernel in the front-end mini-language at an arbitrary length.
+pub fn saxpy_source(n: usize) -> String {
+    assert!(n >= 2);
+    format!(
+        r#"
+kernel saxpy {{
+    in  x, w, b : ui18[{n}]
+    out y : ui18[{n}]
+    for n in 0..{n} {{
+        y[n] = x[n] * w[n] + b[n]
+    }}
+}}
+"#
+    )
+}
+
+/// Default-workload front-end source.
+pub fn source() -> String {
+    saxpy_source(N)
+}
+
+/// Hand-written parameterised TIR (C2 pipeline): exact ui36 product
+/// (18×18 never wraps in 36 bits) and ui37 accumulate; the ui18 ostream
+/// port truncates — the same low bits the front-end lowering's
+/// demand-narrowed (18-bit) datapath produces, truncation being exact
+/// for `mul`/`add` chains.
+pub fn saxpy_tir(n: usize) -> String {
+    assert!(n >= 2);
+    format!(
+        r#"; ***** Manage-IR ***** (elementwise scaled vector add, single pipeline)
+define void launch() {{
+    @mem_x = addrspace(3) <{n} x ui18>
+    @mem_w = addrspace(3) <{n} x ui18>
+    @mem_b = addrspace(3) <{n} x ui18>
+    @mem_y = addrspace(3) <{n} x ui18>
+    @strobj_x = addrspace(10), !"source", !"@mem_x"
+    @strobj_w = addrspace(10), !"source", !"@mem_w"
+    @strobj_b = addrspace(10), !"source", !"@mem_b"
+    @strobj_y = addrspace(10), !"dest", !"@mem_y"
+    @ctr_n = counter(0, {last})
+    call @main ()
+}}
+; ***** Compute-IR *****
+@main.x = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_x"
+@main.w = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_w"
+@main.b = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_b"
+@main.y = addrSpace(12) ui18, !"ostream", !"CONT", !0, !"strobj_y"
+define void @f1 (ui18 %x, ui18 %w, ui18 %b) pipe {{
+    ui36 %1 = mul ui36 %x, %w
+    ui37 %y = add ui37 %1, %b
+}}
+define void @main () pipe {{
+    call @f1 (@main.x, @main.w, @main.b) pipe
+}}
+"#,
+        last = n - 1,
+    )
+}
+
+/// Default-workload hand TIR.
+pub fn tir() -> String {
+    saxpy_tir(N)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::tir::{parse_and_validate, validate::require_synthesizable};
+    use crate::transform::recipe::{PassStep, TransformRecipe};
+
+    #[test]
+    fn source_parses() {
+        let k = parse_kernel(&source()).unwrap();
+        assert_eq!(k.name, "saxpy");
+        assert_eq!(k.inputs.len(), 3);
+        assert_eq!(k.outputs.len(), 1);
+    }
+
+    #[test]
+    fn tir_parses_and_validates() {
+        let m = parse_and_validate(&tir()).unwrap();
+        require_synthesizable(&m).unwrap();
+        assert_eq!(m.mems.len(), 4);
+        assert_eq!(m.work_items(), N as u64);
+    }
+
+    #[test]
+    fn named_recipes_degenerate_but_fuse_mac_fires() {
+        // The kernel's whole purpose: the four legacy recipes rewrite
+        // nothing, the searched `fuse-mac` step contracts the tail.
+        let k = parse_kernel(&source()).unwrap();
+        let base = crate::frontend::lower(&k, crate::frontend::DesignPoint::c2()).unwrap();
+        for (r, name) in TransformRecipe::named() {
+            let m = crate::frontend::lower(
+                &k,
+                crate::frontend::DesignPoint::c2().with_transforms(r),
+            )
+            .unwrap();
+            assert_eq!(
+                m.static_instr_count(),
+                base.static_instr_count(),
+                "`{name}` must degenerate on the mac tail"
+            );
+        }
+        let fused = crate::frontend::lower(
+            &k,
+            crate::frontend::DesignPoint::c2()
+                .with_transforms(TransformRecipe::from_steps(vec![PassStep::FuseMac]).unwrap()),
+        )
+        .unwrap();
+        assert!(
+            fused.static_instr_count() < base.static_instr_count(),
+            "fuse-mac must contract mul+add ({} vs {})",
+            fused.static_instr_count(),
+            base.static_instr_count()
+        );
+        let db = crate::estimator::structure::analyze(&base).unwrap().datapath_depth;
+        let df = crate::estimator::structure::analyze(&fused).unwrap().datapath_depth;
+        assert!(df < db, "the fused tail must be shallower ({df} vs {db})");
+    }
+}

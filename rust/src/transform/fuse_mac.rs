@@ -1,0 +1,209 @@
+//! Mul+add fusion into the 3-operand `mac` op — the first of the two
+//! passes the ROADMAP's pass-order-search direction names as missing
+//! ("mul+add fusion into a `mac` DSP op").
+//!
+//! Pattern: an unsigned multiply whose single use is an add of the
+//! *same* type in the same function,
+//!
+//! ```text
+//! ui18 %m = mul ui18 %a, %b        ; unprotected, used exactly once
+//! ui18 %r = add ui18 %m, %c
+//! ```
+//!
+//! becomes `ui18 %r = mac ui18 %a, %b, %c` and the multiply is deleted.
+//!
+//! **Legality.** The simulator evaluates `mac` as `a*b + c` exactly in
+//! i128 and wraps once at the result type; the unfused pair wraps the
+//! product at the mul's type first. With both instructions at the same
+//! unsigned width `w`, `((a·b mod 2^w) + c) mod 2^w = (a·b + c) mod
+//! 2^w` — modular arithmetic composes — so fusion is bit-exact.
+//! Differing widths (the mul narrower than the add) are skipped: there
+//! the early wrap is observable. Signed/fixed types are skipped
+//! outright, matching the other passes' unsigned-only convention.
+//!
+//! **Estimation-space effect.** The cost DB prices a variable `mac` at
+//! the same DSP count as the bare `mul` with zero ALUTs, so fusion
+//! removes the add's `w` ALUTs, its pipeline register, and one level of
+//! dependency depth per fused pair.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{protected_names, Pass};
+use crate::tir::{Instr, Module, Op, Operand, Stmt, Ty};
+
+/// The mul+add → `mac` fusion pass.
+pub struct FuseMac;
+
+impl Pass for FuseMac {
+    fn name(&self) -> &'static str {
+        "fuse-mac"
+    }
+
+    fn run(&self, m: &mut Module) -> Result<usize, String> {
+        let protected = protected_names(m);
+        let mut changes = 0usize;
+        let names: Vec<String> = m.funcs.keys().cloned().collect();
+        for fname in names {
+            let Some(f) = m.funcs.get(&fname) else { continue };
+            // Use counts inside this function. A result used by another
+            // function is protected (cross-function import) and never
+            // eligible, so per-function counting is exact.
+            let mut uses: BTreeMap<&str, usize> = BTreeMap::new();
+            {
+                let mut note = |o: &Operand| {
+                    if let Operand::Local(n) = o {
+                        *uses.entry(n.as_str()).or_insert(0) += 1;
+                    }
+                };
+                for s in &f.body {
+                    match s {
+                        Stmt::Instr(i) => i.operands.iter().for_each(&mut note),
+                        Stmt::Call(c) => c.args.iter().for_each(&mut note),
+                        Stmt::Reduce(r) => note(&r.operand),
+                    }
+                }
+            }
+            // Eligible multiplies: unsigned, unprotected, single-use.
+            let mut muls: BTreeMap<&str, usize> = BTreeMap::new();
+            for (idx, s) in f.body.iter().enumerate() {
+                if let Stmt::Instr(i) = s {
+                    if i.op == Op::Mul
+                        && matches!(i.ty, Ty::UInt(_))
+                        && !protected.contains(&i.result)
+                        && uses.get(i.result.as_str()).copied().unwrap_or(0) == 1
+                    {
+                        muls.insert(i.result.as_str(), idx);
+                    }
+                }
+            }
+            if muls.is_empty() {
+                continue;
+            }
+            let mut fused: Vec<(usize, Instr)> = Vec::new();
+            let mut remove: BTreeSet<usize> = BTreeSet::new();
+            for (idx, s) in f.body.iter().enumerate() {
+                let Stmt::Instr(i) = s else { continue };
+                if i.op != Op::Add || !matches!(i.ty, Ty::UInt(_)) {
+                    continue;
+                }
+                // First operand position holding a same-typed eligible
+                // mul wins (at most one mul fuses per add: mac is 3-ary).
+                let pick = i.operands.iter().enumerate().find_map(|(pos, o)| {
+                    let Operand::Local(n) = o else { return None };
+                    let &midx = muls.get(n.as_str())?;
+                    if midx >= idx || remove.contains(&midx) {
+                        return None;
+                    }
+                    let Stmt::Instr(mi) = &f.body[midx] else { unreachable!("indexed above") };
+                    (mi.ty == i.ty).then_some((pos, midx))
+                });
+                let Some((pos, midx)) = pick else { continue };
+                let Stmt::Instr(mi) = &f.body[midx] else { unreachable!() };
+                let addend = i.operands[1 - pos].clone();
+                fused.push((
+                    idx,
+                    Instr {
+                        result: i.result.clone(),
+                        ty: i.ty,
+                        op: Op::Mac,
+                        operands: vec![mi.operands[0].clone(), mi.operands[1].clone(), addend],
+                    },
+                ));
+                remove.insert(midx);
+            }
+            if fused.is_empty() {
+                continue;
+            }
+            changes += fused.len();
+            let f = m.funcs.get_mut(&fname).expect("present above");
+            for (idx, ni) in fused {
+                f.body[idx] = Stmt::Instr(ni);
+            }
+            let mut k = 0usize;
+            f.body.retain(|_| {
+                let keep = !remove.contains(&k);
+                k += 1;
+                keep
+            });
+        }
+        Ok(changes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::frontend::{self, DesignPoint};
+    use crate::sim::{self, Workload};
+    use crate::tir::validate;
+
+    fn lower(src: &str) -> Module {
+        let k = frontend::parse_kernel(src).unwrap();
+        frontend::lower(&k, DesignPoint::c2()).unwrap()
+    }
+
+    fn run_fuse(m: &mut Module) -> usize {
+        let n = FuseMac.run(m).unwrap();
+        validate::validate(m).unwrap();
+        n
+    }
+
+    fn mac_count(m: &Module) -> usize {
+        m.funcs.values().flat_map(|f| m.instrs_of(f)).filter(|i| i.op == Op::Mac).count()
+    }
+
+    #[test]
+    fn fuses_single_use_mul_into_mac_and_preserves_output() {
+        let base = lower(
+            "kernel sx { in x, w, b : ui18[64]\nout y : ui18[64]\n\
+             for n in 0..64 { y[n] = x[n] * w[n] + b[n] } }",
+        );
+        let mut m = base.clone();
+        let n = run_fuse(&mut m);
+        assert_eq!(n, 1, "exactly the one mul+add pair fuses");
+        assert_eq!(mac_count(&m), 1);
+        assert!(
+            !m.funcs.values().flat_map(|f| m.instrs_of(f)).any(|i| i.op == Op::Mul),
+            "the fused multiply must be deleted"
+        );
+        let dev = Device::stratix4();
+        let rb = sim::simulate(&base, &dev, &Workload::random_for(&base, 7)).unwrap();
+        let rt = sim::simulate(&m, &dev, &Workload::random_for(&m, 7)).unwrap();
+        assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"]);
+        // idempotent: nothing left to fuse
+        assert_eq!(run_fuse(&mut m), 0);
+    }
+
+    #[test]
+    fn fusion_strictly_reduces_estimated_resources() {
+        let base = lower(
+            "kernel sx { in x, w, b : ui18[64]\nout y : ui18[64]\n\
+             for n in 0..64 { y[n] = x[n] * w[n] + b[n] } }",
+        );
+        let mut m = base.clone();
+        run_fuse(&mut m);
+        let dev = Device::stratix4();
+        let db = crate::estimator::CostDb::default();
+        let eb = crate::estimator::estimate_with_db(&base, &dev, &db).unwrap();
+        let et = crate::estimator::estimate_with_db(&m, &dev, &db).unwrap();
+        assert!(
+            et.resources.alut < eb.resources.alut,
+            "the add's ALUTs must fold into the DSP: {} vs {}",
+            et.resources.alut,
+            eb.resources.alut
+        );
+        assert!(et.resources.dsp <= eb.resources.dsp, "no extra DSPs");
+    }
+
+    #[test]
+    fn protected_and_multi_use_muls_are_left_alone() {
+        // The mul result IS the ostream binding → protected, no fusion.
+        let mut m = lower(
+            "kernel p { in a, b : ui18[64]\nout y : ui18[64]\n\
+             for n in 0..64 { y[n] = a[n] * b[n] } }",
+        );
+        assert_eq!(run_fuse(&mut m), 0);
+        assert_eq!(mac_count(&m), 0);
+    }
+}

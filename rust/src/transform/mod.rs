@@ -24,6 +24,13 @@
 //! | [`StrengthReduce`] | const-mul → shift-add network | DSP → ALUT trade |
 //! | [`Balance`] | reassociation / operator balancing | dependency depth down (C3 Fmax derate up, pipe `P` down) |
 //! | [`ChainSplit`] | balance-aware multi-way comb-stage split | equalised stage depth (the ROADMAP chain-split item) |
+//! | [`FuseMac`] | single-use mul+add → `mac` | the add's ALUTs fold into the DSP; depth down |
+//! | [`Renarrow`] | post-fold demand re-narrowing | result widths shrink to demanded bits: ALUT/REG down |
+//!
+//! Since PR 9 a recipe is an *ordered* pipeline ([`recipe::PassStep`])
+//! rather than a bit-set, `ChainSplit`'s `ways` is a recipe parameter,
+//! and [`search`] beam-searches pass orders against the estimator (the
+//! ROADMAP's pass-order-search direction).
 //!
 //! **Legality.** Every pass preserves the module's streaming semantics
 //! bit-for-bit (gated by `conformance`'s `transform/semantics-preserved`
@@ -36,14 +43,19 @@
 pub mod balance;
 pub mod cse;
 pub mod fold;
+pub mod fuse_mac;
 pub mod recipe;
+pub mod renarrow;
+pub mod search;
 pub mod split;
 pub mod strength;
 
 pub use balance::Balance;
 pub use cse::Cse;
 pub use fold::FoldSimplify;
-pub use recipe::TransformRecipe;
+pub use fuse_mac::FuseMac;
+pub use recipe::{PassStep, TransformRecipe};
+pub use renarrow::Renarrow;
 pub use split::ChainSplit;
 pub use strength::StrengthReduce;
 
@@ -61,6 +73,15 @@ pub trait Pass {
     /// Apply the pass once; returns the number of rewrites performed
     /// (0 ⇒ the module is unchanged — the pipeline's fixpoint signal).
     fn run(&self, m: &mut Module) -> Result<usize, String>;
+
+    /// Hash of the pass's *configuration* — everything beyond the name
+    /// that changes what the pass does. Parameterised passes must
+    /// override this ([`ChainSplit`] hashes `ways`); otherwise
+    /// `Memo` would replay a `ways = 2` result for a `ways = 4` run
+    /// (the PR 9 memo-key bug). Parameter-free passes keep the default.
+    fn fingerprint(&self) -> u64 {
+        0
+    }
 }
 
 /// Per-pass rewrite totals of one pipeline run.
@@ -104,26 +125,26 @@ impl PassPipeline {
         PassPipeline { passes, max_rounds: 8 }
     }
 
-    /// The canonical pipeline for a recipe: fold → cse → strength →
-    /// balance → split (cleanups first so later passes see canonical
-    /// IR; the splitter last so stage boundaries see the final shape).
+    /// The pipeline for a recipe: the recipe's steps, in order (the
+    /// legacy named recipes preserve the PR 5 fold → cse → strength →
+    /// balance → split order exactly, so their modules stay
+    /// bit-identical across the ordered-pipeline migration).
     pub fn for_recipe(recipe: TransformRecipe) -> PassPipeline {
-        let mut passes: Vec<Box<dyn Pass>> = Vec::new();
-        if recipe.has(TransformRecipe::FOLD) {
-            passes.push(Box::new(FoldSimplify));
-        }
-        if recipe.has(TransformRecipe::CSE) {
-            passes.push(Box::new(Cse));
-        }
-        if recipe.has(TransformRecipe::STRENGTH) {
-            passes.push(Box::new(StrengthReduce));
-        }
-        if recipe.has(TransformRecipe::BALANCE) {
-            passes.push(Box::new(Balance));
-        }
-        if recipe.has(TransformRecipe::SPLIT) {
-            passes.push(Box::new(ChainSplit::default()));
-        }
+        let passes = recipe
+            .steps()
+            .iter()
+            .map(|s| -> Box<dyn Pass> {
+                match *s {
+                    PassStep::Fold => Box::new(FoldSimplify),
+                    PassStep::Cse => Box::new(Cse),
+                    PassStep::Strength => Box::new(StrengthReduce),
+                    PassStep::Balance => Box::new(Balance),
+                    PassStep::FuseMac => Box::new(FuseMac),
+                    PassStep::Renarrow => Box::new(Renarrow),
+                    PassStep::Split { ways } => Box::new(ChainSplit { ways: ways as usize }),
+                }
+            })
+            .collect();
         PassPipeline::new(passes)
     }
 
@@ -226,15 +247,18 @@ struct MemoEntry {
 }
 
 /// Structural-fact memo for pass applications, shared across a session
-/// (`coordinator::Session` holds one): `(input-module hash, pass name) →
-/// (output module, rewrite count)`. Sound because every pass is a pure
-/// deterministic function of the module. Bounded: when the map reaches
-/// [`Memo::MAX_ENTRIES`] it is cleared wholesale — a memo is a replay
-/// accelerator, not a correctness store, so losing it only costs
-/// recomputation.
+/// (`coordinator::Session` holds one): `(input-module hash, pass name,
+/// pass fingerprint) → (output module, rewrite count)`. Sound because
+/// every pass is a pure deterministic function of the module *and its
+/// configuration* — the fingerprint component is what keeps
+/// `ChainSplit { ways: 2 }` and `{ ways: 4 }` from aliasing one entry
+/// (the memo used to replay the wrong module on warm searches).
+/// Bounded: when the map reaches [`Memo::MAX_ENTRIES`] it is cleared
+/// wholesale — a memo is a replay accelerator, not a correctness
+/// store, so losing it only costs recomputation.
 #[derive(Default)]
 pub struct Memo {
-    map: Mutex<HashMap<(u128, &'static str), Arc<MemoEntry>>>,
+    map: Mutex<HashMap<(u128, &'static str, u64), Arc<MemoEntry>>>,
     hits: std::sync::atomic::AtomicU64,
     misses: std::sync::atomic::AtomicU64,
 }
@@ -272,7 +296,7 @@ impl Memo {
     /// validated modules.
     fn apply(&self, pass: &dyn Pass, m: &mut Module, hits: &mut usize) -> Result<usize, String> {
         let text = crate::tir::pretty::print(m);
-        let key = (ContentHash::of(text.as_bytes()).0, pass.name());
+        let key = (ContentHash::of(text.as_bytes()).0, pass.name(), pass.fingerprint());
         if let Some(entry) = self.map.lock().expect("memo poisoned").get(&key).cloned() {
             #[cfg(any(test, debug_assertions))]
             assert_eq!(entry.input_text, text, "128-bit memo-key collision on pass `{}`", pass.name());
@@ -629,6 +653,37 @@ mod tests {
         let mut direct = blend_module();
         PassPipeline::for_recipe(TransformRecipe::full()).run(&mut direct).unwrap();
         assert_eq!(direct, m2);
+    }
+
+    #[test]
+    fn memo_distinguishes_pass_parameters() {
+        // The PR 9 memo-key regression: `ChainSplit { ways: 2 }` and
+        // `{ ways: 4 }` share a pass *name*, and both run over the same
+        // input module (same content hash) — without the fingerprint in
+        // the key the second run replays the first run's module, and the
+        // old collision guard cannot catch it (the *input* texts match).
+        let deep = || {
+            let k = frontend::parse_kernel(
+                "kernel deep { in a, b : ui18[64]\nout y : ui18[64]\n\
+                 for n in 0..64 { y[n] = ((((((a[n] + b[n]) * 3) + a[n]) * 5) + b[n]) * 7) + 1 } }",
+            )
+            .unwrap();
+            frontend::lower(&k, DesignPoint::c2()).unwrap()
+        };
+        let r2 = TransformRecipe::from_steps(vec![PassStep::Split { ways: 2 }]).unwrap();
+        let r4 = TransformRecipe::from_steps(vec![PassStep::Split { ways: 4 }]).unwrap();
+        let memo = Memo::new();
+        let mut m2 = deep();
+        PassPipeline::for_recipe(r2).run_memo(&mut m2, &memo).unwrap();
+        let mut m4 = deep();
+        PassPipeline::for_recipe(r4).run_memo(&mut m4, &memo).unwrap();
+        let mut d2 = deep();
+        PassPipeline::for_recipe(r2).run(&mut d2).unwrap();
+        let mut d4 = deep();
+        PassPipeline::for_recipe(r4).run(&mut d4).unwrap();
+        assert_ne!(d2, d4, "2-way and 4-way splits must realise different modules");
+        assert_eq!(m2, d2, "memoised 2-way run diverged from direct");
+        assert_eq!(m4, d4, "memoised 4-way run replayed the wrong parameters");
     }
 
     #[test]

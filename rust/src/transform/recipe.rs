@@ -1,52 +1,171 @@
-//! Transform recipes: named pass combinations swept as a design-space
-//! axis.
+//! Transform recipes: ordered, parameterised pass pipelines swept (and
+//! now *searched*) as a design-space axis.
 //!
-//! A [`TransformRecipe`] is a small bit-set of rewrite passes. It rides
-//! on `frontend::DesignPoint` (so it must be `Copy + Eq + Hash` like
-//! every other axis), names itself for candidate labels
-//! (`pipe×4+balance`), and enumerates the *named* recipes the DSE
-//! sweeps when `SweepLimits::include_transforms` is on. The mapping from
-//! recipe bits to an ordered pass pipeline lives in
-//! [`super::PassPipeline::for_recipe`].
+//! A [`TransformRecipe`] is an ordered sequence of [`PassStep`]s. It
+//! rides on `frontend::DesignPoint` (so it must stay `Copy + Eq + Hash`
+//! like every other axis): the step vector is interned behind a dense
+//! id in a process-global table, with identity defined by the canonical
+//! step sequence — two recipes built through different routes but with
+//! the same steps share one id, so derived `Eq`/`Hash` on the id are
+//! sound. Ordering is defined over the step sequences themselves (not
+//! the ids) so sort orders are stable across processes.
+//!
+//! Names are canonical and invertible: the four legacy recipes keep
+//! their PR 5 names (`simplify`/`shiftadd`/`balance`/`full` — candidate
+//! labels, disk-cache keys and golden JSON stay byte-identical), every
+//! other pipeline gets a `>`-joined structural name such as
+//! `fold>cse>split@4`, and [`TransformRecipe::parse`] inverts
+//! [`TransformRecipe::name`] exactly (pinned by a property test).
+//!
+//! Construction is validating: [`TransformRecipe::from_steps`] rejects
+//! `split@{0,1}` (a silent no-op pass that used to mint duplicate
+//! realised points) and collapses immediately-repeated steps (the
+//! fixpoint driver re-runs every pass anyway, so `fold>fold` is the
+//! same pipeline as `fold` and must not get a distinct label).
 
+use std::collections::HashMap;
 use std::fmt;
+use std::sync::{Mutex, OnceLock};
 
-/// A set of TIR-to-TIR rewrite passes applied between variant expansion
-/// and leaf selection (see `frontend::lower_point`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
-pub struct TransformRecipe(u8);
+/// One step of a transform pipeline. The mapping from steps to `Pass`
+/// objects lives in [`super::PassPipeline::for_recipe`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PassStep {
+    /// Constant folding + identity simplification (`fold`).
+    Fold,
+    /// Common-subexpression elimination (`cse`).
+    Cse,
+    /// Const-multiplies become shift-add networks (`strength`).
+    Strength,
+    /// Reassociation / operator balancing. Fragment is `rebalance`:
+    /// `balance` is taken by the legacy alias for fold>cse>balance, and
+    /// structural names must never collide with alias names or
+    /// `parse` could not invert `name` for the bare one-step pipeline.
+    Balance,
+    /// Single-use mul+add fusion into the `mac` DSP op (`fuse-mac`).
+    FuseMac,
+    /// Post-fold demand re-narrowing of result widths (`renarrow`).
+    Renarrow,
+    /// Balance-aware multi-way chain split into `ways` comb stages
+    /// (`split@N`, N ≥ 2).
+    Split {
+        /// Maximum number of stages; construction rejects `ways < 2`.
+        ways: u8,
+    },
+}
+
+impl PassStep {
+    /// The step's name fragment as it appears in recipe names.
+    pub fn fragment(self) -> String {
+        match self {
+            PassStep::Fold => "fold".to_string(),
+            PassStep::Cse => "cse".to_string(),
+            PassStep::Strength => "strength".to_string(),
+            PassStep::Balance => "rebalance".to_string(),
+            PassStep::FuseMac => "fuse-mac".to_string(),
+            PassStep::Renarrow => "renarrow".to_string(),
+            PassStep::Split { ways } => format!("split@{ways}"),
+        }
+    }
+
+    /// Inverse of [`PassStep::fragment`].
+    pub fn parse_fragment(s: &str) -> Option<PassStep> {
+        match s {
+            "fold" => Some(PassStep::Fold),
+            "cse" => Some(PassStep::Cse),
+            "strength" => Some(PassStep::Strength),
+            "rebalance" => Some(PassStep::Balance),
+            "fuse-mac" => Some(PassStep::FuseMac),
+            "renarrow" => Some(PassStep::Renarrow),
+            _ => s
+                .strip_prefix("split@")
+                .and_then(|w| w.parse::<u8>().ok())
+                .map(|ways| PassStep::Split { ways }),
+        }
+    }
+}
+
+/// Process-global step-sequence interner. Slot 0 is pinned to the empty
+/// sequence so [`TransformRecipe::NONE`] can be a `const`.
+struct Interner {
+    seqs: Vec<&'static [PassStep]>,
+    ids: HashMap<&'static [PassStep], u32>,
+}
+
+static INTERNER: OnceLock<Mutex<Interner>> = OnceLock::new();
+
+fn interner() -> &'static Mutex<Interner> {
+    INTERNER.get_or_init(|| {
+        let empty: &'static [PassStep] = &[];
+        let mut ids = HashMap::new();
+        ids.insert(empty, 0u32);
+        Mutex::new(Interner { seqs: vec![empty], ids })
+    })
+}
+
+fn intern(steps: &[PassStep]) -> u32 {
+    let mut g = interner().lock().expect("recipe interner poisoned");
+    if let Some(&id) = g.ids.get(steps) {
+        return id;
+    }
+    // Leak once per distinct pipeline: the table is tiny (the beam
+    // search visits at most a few hundred pipelines per process) and
+    // the 'static slices are what let the recipe stay `Copy`.
+    let leaked: &'static [PassStep] = Box::leak(steps.to_vec().into_boxed_slice());
+    let id = g.seqs.len() as u32;
+    g.seqs.push(leaked);
+    g.ids.insert(leaked, id);
+    id
+}
+
+fn steps_of(id: u32) -> &'static [PassStep] {
+    interner().lock().expect("recipe interner poisoned").seqs[id as usize]
+}
+
+/// An ordered pipeline of TIR-to-TIR rewrite passes applied between
+/// variant expansion and leaf selection (see `frontend::lower_point`).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TransformRecipe(u32);
+
+impl Default for TransformRecipe {
+    fn default() -> TransformRecipe {
+        TransformRecipe::NONE
+    }
+}
 
 impl TransformRecipe {
     /// The identity recipe: no rewriting (every pre-transform sweep).
     pub const NONE: TransformRecipe = TransformRecipe(0);
 
-    /// Constant folding + identity simplification.
-    pub const FOLD: u8 = 1 << 0;
-    /// Common-subexpression elimination.
-    pub const CSE: u8 = 1 << 1;
-    /// Strength-reduction choice: const-multiplies become shift-add
-    /// networks (DSP ↔ ALUT trade).
-    pub const STRENGTH: u8 = 1 << 2;
-    /// Reassociation / operator balancing (reduces dependency depth).
-    pub const BALANCE: u8 = 1 << 3;
-    /// Balance-aware multi-way chain splitting (comb stage callees).
-    pub const SPLIT: u8 = 1 << 4;
-
-    const ALL: u8 = Self::FOLD | Self::CSE | Self::STRENGTH | Self::BALANCE | Self::SPLIT;
-
-    /// Recipe from raw bits (unknown bits are dropped).
-    pub fn from_bits(bits: u8) -> TransformRecipe {
-        TransformRecipe(bits & Self::ALL)
+    /// Build a recipe from an ordered step list.
+    ///
+    /// Canonicalises before interning: immediately-repeated steps are
+    /// collapsed (the fixpoint driver re-runs every pass to quiescence,
+    /// so `fold>fold` *is* `fold` — giving it a distinct label would
+    /// mint duplicate realised points). Rejects `split@{0,1}`: a
+    /// `ChainSplit` with fewer than 2 ways performs zero rewrites, so a
+    /// pipeline containing it would silently alias its split-free twin.
+    pub fn from_steps(steps: Vec<PassStep>) -> Result<TransformRecipe, String> {
+        let mut canon: Vec<PassStep> = Vec::with_capacity(steps.len());
+        for s in steps {
+            if let PassStep::Split { ways } = s {
+                if ways < 2 {
+                    return Err(format!(
+                        "chain-split with ways = {ways} is a no-op; recipes require ways >= 2"
+                    ));
+                }
+            }
+            if canon.last() == Some(&s) {
+                continue;
+            }
+            canon.push(s);
+        }
+        Ok(TransformRecipe(intern(&canon)))
     }
 
-    /// Raw pass bits.
-    pub fn bits(self) -> u8 {
-        self.0
-    }
-
-    /// Does the recipe include a pass bit?
-    pub fn has(self, bit: u8) -> bool {
-        self.0 & bit != 0
+    /// The recipe's canonical step sequence.
+    pub fn steps(self) -> &'static [PassStep] {
+        steps_of(self.0)
     }
 
     /// Is this the identity recipe?
@@ -56,23 +175,34 @@ impl TransformRecipe {
 
     /// Cleanup-only recipe: folding + CSE.
     pub fn simplify() -> TransformRecipe {
-        TransformRecipe(Self::FOLD | Self::CSE)
+        TransformRecipe::from_steps(vec![PassStep::Fold, PassStep::Cse]).expect("static recipe")
     }
 
     /// Simplify + const-mul strength reduction (the DSP→shift-add
     /// choice the cost DB used to hard-code behind `SHIFT_ADD_MAX_POP`).
     pub fn shiftadd() -> TransformRecipe {
-        TransformRecipe(Self::FOLD | Self::CSE | Self::STRENGTH)
+        TransformRecipe::from_steps(vec![PassStep::Fold, PassStep::Cse, PassStep::Strength])
+            .expect("static recipe")
     }
 
     /// Simplify + operator balancing (dependency-depth reduction).
     pub fn balance() -> TransformRecipe {
-        TransformRecipe(Self::FOLD | Self::CSE | Self::BALANCE)
+        TransformRecipe::from_steps(vec![PassStep::Fold, PassStep::Cse, PassStep::Balance])
+            .expect("static recipe")
     }
 
-    /// Every pass, including the multi-way chain split.
+    /// The PR 5 "everything" recipe: fold → cse → strength → balance →
+    /// 3-way chain split (the historical pass order, preserved exactly
+    /// so `full` modules stay bit-identical across the migration).
     pub fn full() -> TransformRecipe {
-        TransformRecipe(Self::ALL)
+        TransformRecipe::from_steps(vec![
+            PassStep::Fold,
+            PassStep::Cse,
+            PassStep::Strength,
+            PassStep::Balance,
+            PassStep::Split { ways: 3 },
+        ])
+        .expect("static recipe")
     }
 
     /// The named recipes the DSE enumerates (`--transforms`), in
@@ -86,8 +216,10 @@ impl TransformRecipe {
         ]
     }
 
-    /// Stable name used in candidate labels and module names. The named
-    /// recipes get friendly names; ad-hoc combinations a hex tag.
+    /// Stable canonical name used in candidate labels, module names and
+    /// disk-cache keys. The four legacy recipes keep their friendly
+    /// names; every other pipeline gets the `>`-joined structural name
+    /// (`fold>cse>split@4`). Inverted exactly by [`Self::parse`].
     pub fn name(self) -> String {
         if self.is_none() {
             return String::new();
@@ -97,15 +229,44 @@ impl TransformRecipe {
                 return n.to_string();
             }
         }
-        format!("xf{:02x}", self.0)
+        self.steps().iter().map(|s| s.fragment()).collect::<Vec<_>>().join(">")
     }
 
-    /// Parse a recipe by its stable name (`simplify`, …, `none`).
+    /// Parse a recipe from its stable name: a legacy alias
+    /// (`simplify`, …), `none`/empty, or a `>`-joined step list.
     pub fn parse(s: &str) -> Option<TransformRecipe> {
         if s.is_empty() || s == "none" {
             return Some(Self::NONE);
         }
-        Self::named().into_iter().find(|(_, n)| *n == s).map(|(r, _)| r)
+        if let Some((r, _)) = Self::named().into_iter().find(|(_, n)| *n == s) {
+            return Some(r);
+        }
+        let steps: Option<Vec<PassStep>> = s.split('>').map(PassStep::parse_fragment).collect();
+        TransformRecipe::from_steps(steps?).ok()
+    }
+}
+
+impl PartialOrd for TransformRecipe {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TransformRecipe {
+    /// Lexicographic over the canonical step sequences — *not* the
+    /// interner ids, whose allocation order depends on call history and
+    /// would make sort orders differ across processes.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        if self.0 == other.0 {
+            return std::cmp::Ordering::Equal;
+        }
+        self.steps().cmp(other.steps())
+    }
+}
+
+impl fmt::Debug for TransformRecipe {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TransformRecipe({self})")
     }
 }
 
@@ -136,26 +297,104 @@ mod tests {
     }
 
     #[test]
-    fn bits_accessors() {
-        let r = TransformRecipe::shiftadd();
-        assert!(r.has(TransformRecipe::FOLD));
-        assert!(r.has(TransformRecipe::STRENGTH));
-        assert!(!r.has(TransformRecipe::BALANCE));
-        assert_eq!(TransformRecipe::from_bits(r.bits()), r);
-        // unknown bits dropped
-        assert_eq!(TransformRecipe::from_bits(0xE0), TransformRecipe::NONE);
+    fn legacy_aliases_cover_their_step_sequences() {
+        // The alias names take precedence over structural names: a
+        // pipeline spelled out step-by-step that matches a legacy recipe
+        // IS that recipe (same id, same name, same cache keys).
+        let spelled =
+            TransformRecipe::from_steps(vec![PassStep::Fold, PassStep::Cse]).unwrap();
+        assert_eq!(spelled, TransformRecipe::simplify());
+        assert_eq!(spelled.name(), "simplify");
+        assert_eq!(TransformRecipe::parse("fold>cse"), Some(TransformRecipe::simplify()));
+        assert_eq!(
+            TransformRecipe::full().steps(),
+            &[
+                PassStep::Fold,
+                PassStep::Cse,
+                PassStep::Strength,
+                PassStep::Balance,
+                PassStep::Split { ways: 3 }
+            ]
+        );
     }
 
     #[test]
-    fn ad_hoc_combo_gets_a_stable_tag() {
-        let r = TransformRecipe::from_bits(TransformRecipe::BALANCE);
-        assert_eq!(r.name(), "xf08");
-        assert_eq!(r.to_string(), "xf08");
+    fn unnamed_pipelines_get_canonical_invertible_names() {
+        let r = TransformRecipe::from_steps(vec![
+            PassStep::Fold,
+            PassStep::Cse,
+            PassStep::Split { ways: 4 },
+        ])
+        .unwrap();
+        assert_eq!(r.name(), "fold>cse>split@4");
+        assert_eq!(TransformRecipe::parse(&r.name()), Some(r));
+        let r2 = TransformRecipe::from_steps(vec![PassStep::FuseMac, PassStep::Renarrow]).unwrap();
+        assert_eq!(r2.name(), "fuse-mac>renarrow");
+        assert_eq!(TransformRecipe::parse(&r2.name()), Some(r2));
+    }
+
+    #[test]
+    fn order_and_parameters_distinguish_pipelines() {
+        // The old bit-set collapsed these; ordered pipelines must not.
+        let fc = TransformRecipe::from_steps(vec![PassStep::Fold, PassStep::Cse]).unwrap();
+        let cf = TransformRecipe::from_steps(vec![PassStep::Cse, PassStep::Fold]).unwrap();
+        assert_ne!(fc, cf);
+        assert_ne!(fc.name(), cf.name());
+        let s2 = TransformRecipe::from_steps(vec![PassStep::Split { ways: 2 }]).unwrap();
+        let s4 = TransformRecipe::from_steps(vec![PassStep::Split { ways: 4 }]).unwrap();
+        assert_ne!(s2, s4);
+        assert_eq!(s2.name(), "split@2");
+        assert_eq!(s4.name(), "split@4");
+    }
+
+    #[test]
+    fn structural_names_never_shadow_alias_names() {
+        // `balance` the alias is fold>cse>balance; the bare one-step
+        // pipeline must spell itself differently or parse∘name breaks.
+        let bare = TransformRecipe::from_steps(vec![PassStep::Balance]).unwrap();
+        assert_eq!(bare.name(), "rebalance");
+        assert_eq!(TransformRecipe::parse("rebalance"), Some(bare));
+        assert_eq!(TransformRecipe::parse("balance"), Some(TransformRecipe::balance()));
+        assert_ne!(bare, TransformRecipe::balance());
+    }
+
+    #[test]
+    fn degenerate_splits_are_rejected_at_construction() {
+        for ways in [0u8, 1] {
+            let err = TransformRecipe::from_steps(vec![PassStep::Split { ways }]).unwrap_err();
+            assert!(err.contains("no-op"), "{err}");
+            let err = TransformRecipe::from_steps(vec![
+                PassStep::Fold,
+                PassStep::Split { ways },
+                PassStep::Cse,
+            ])
+            .unwrap_err();
+            assert!(err.contains("ways >= 2"), "{err}");
+        }
+        assert!(TransformRecipe::parse("split@1").is_none());
+        assert!(TransformRecipe::parse("fold>split@0").is_none());
+    }
+
+    #[test]
+    fn consecutive_duplicates_canonicalise_away() {
+        let a = TransformRecipe::from_steps(vec![PassStep::Fold, PassStep::Fold, PassStep::Cse])
+            .unwrap();
+        assert_eq!(a, TransformRecipe::simplify());
+        // …but non-adjacent repeats are a real, distinct pipeline
+        let aba =
+            TransformRecipe::from_steps(vec![PassStep::Fold, PassStep::Cse, PassStep::Fold])
+                .unwrap();
+        assert_eq!(aba.name(), "fold>cse>fold");
+        assert_ne!(aba, TransformRecipe::simplify());
     }
 
     #[test]
     fn ordering_and_default_are_stable() {
         assert_eq!(TransformRecipe::default(), TransformRecipe::NONE);
         assert!(TransformRecipe::NONE < TransformRecipe::simplify());
+        // ordering follows step sequences, not interner allocation order
+        let balance_first = TransformRecipe::from_steps(vec![PassStep::Balance]).unwrap();
+        let fold_first = TransformRecipe::from_steps(vec![PassStep::Fold]).unwrap();
+        assert!(fold_first < balance_first, "Fold < Balance in PassStep order");
     }
 }

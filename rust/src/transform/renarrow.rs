@@ -1,0 +1,282 @@
+//! Post-fold demand re-narrowing over TIR — the second pass the
+//! ROADMAP's pass-order-search direction names as missing.
+//!
+//! The frontend's width inference emits exact result widths, but
+//! hand-authored TIR (and modules reshaped by other passes) routinely
+//! carry *declared-width slack*: `ui32 %3 = add ui32 %1, %2` over ui18
+//! operands can never need more than 19 bits. Since the estimator
+//! prices ALUTs and pipeline registers per result bit, shrinking the
+//! declaration moves the point down the resource walls for free.
+//!
+//! **The rule (forward exact-value-width).** For each unsigned,
+//! unprotected instruction result, compute an upper bound `W` on the
+//! bit-width of the value the op can produce from its operands'
+//! (possibly already-narrowed) widths, and re-declare the result at
+//! `min(declared, max(W, widest operand, 1))`:
+//!
+//! | op | bound `W` |
+//! |---|---|
+//! | `add` | `max(w0, w1) + 1` |
+//! | `mac` | `max(w0 + w1, w2) + 1` |
+//! | `mul` | `w0 + w1` |
+//! | `and` | `min(w0, w1)` |
+//! | `or` / `xor` / `min` / `max` | `max(w0, w1)` |
+//! | `shl` by immediate `s` | `w0 + s` |
+//! | `lshr` by immediate `s` | `w0 - s` |
+//! | `lshr` by variable | `w0` |
+//! | `sub` / `div` / `ashr` / `shl` by variable | barrier (keep declared) |
+//!
+//! **Soundness.** The narrowed type never changes a runtime value: if
+//! `W < declared` the original computation could not wrap, and the new
+//! width is still ≥ `W`, so the narrowed one cannot wrap either — the
+//! rewrite is exact for *every* consumer (calls, reduces, protected
+//! users included). It also keeps the validator's widening-only
+//! `accepts` satisfied in both directions: the new width stays ≥ every
+//! operand width (folded into the `max`), and every consumer's declared
+//! type already accepted the old, wider declaration. `sub`, `div` and
+//! `ashr` are barriers because wraparound / sign replication make the
+//! declared width observable; negative immediates likewise suppress
+//! narrowing of their instruction. Signed/fixed/float instructions are
+//! skipped outright, matching the other passes' unsigned-only
+//! convention.
+//!
+//! Frontend-lowered modules are already at this fixpoint (the width
+//! inference emits these exact bounds), so the pass only fires on
+//! hand-written slack or transform-created intermediates — the paper's
+//! fig 15 SOR listing, whose widths are hand-tightened, is untouched.
+
+use std::collections::BTreeMap;
+
+use super::{protected_names, scope_types, Pass};
+use crate::tir::{Module, Op, Operand, Stmt, Ty};
+
+/// The declared-width re-narrowing pass.
+pub struct Renarrow;
+
+/// Bits needed to represent a non-negative immediate (0 for zero).
+fn bitlen(v: i64) -> u32 {
+    debug_assert!(v >= 0);
+    64 - (v as u64).leading_zeros()
+}
+
+impl Pass for Renarrow {
+    fn name(&self) -> &'static str {
+        "renarrow"
+    }
+
+    fn run(&self, m: &mut Module) -> Result<usize, String> {
+        let protected = protected_names(m);
+        // Global operand widths: named constants bound by their actual
+        // value, ports by their declared stream width. `None` = not an
+        // unsigned scalar → barrier.
+        let mut gwidth: BTreeMap<String, Option<u32>> = BTreeMap::new();
+        for c in m.consts.values() {
+            let w = match c.ty {
+                Ty::UInt(w) if c.value >= 0 => Some((w as u32).min(bitlen(c.value))),
+                _ => None,
+            };
+            gwidth.insert(c.name.clone(), w);
+        }
+        for p in m.ports.values() {
+            let w = match p.ty {
+                Ty::UInt(w) => Some(w as u32),
+                _ => None,
+            };
+            gwidth.entry(p.name.clone()).or_insert(w);
+        }
+
+        let mut changes = 0usize;
+        let names: Vec<String> = m.funcs.keys().cloned().collect();
+        for fname in names {
+            let mut tys = {
+                let f = &m.funcs[&fname];
+                scope_types(m, f)
+            };
+            let f = m.funcs.get_mut(&fname).expect("listed above");
+            // SSA bodies are def-before-use, so one forward walk sees
+            // every operand at its final (narrowed) width; cross-round
+            // effects ride the pipeline's fixpoint reruns.
+            for s in f.body.iter_mut() {
+                let Stmt::Instr(i) = s else { continue };
+                let Ty::UInt(declared) = i.ty else { continue };
+                if protected.contains(&i.result) {
+                    tys.insert(i.result.clone(), i.ty);
+                    continue;
+                }
+                let width_of = |o: &Operand| -> Option<u32> {
+                    match o {
+                        Operand::Local(n) => match tys.get(n.as_str()) {
+                            Some(Ty::UInt(w)) => Some(*w as u32),
+                            _ => None,
+                        },
+                        Operand::Global(g) => gwidth.get(g.as_str()).copied().flatten(),
+                        Operand::Imm(v) if *v >= 0 => Some(bitlen(*v)),
+                        Operand::Imm(_) => None,
+                    }
+                };
+                let ws: Option<Vec<u32>> = i.operands.iter().map(width_of).collect();
+                let (Some(ws), declared32) = (ws, declared as u32) else {
+                    tys.insert(i.result.clone(), i.ty);
+                    continue;
+                };
+                let exact = match (i.op, ws.as_slice()) {
+                    (Op::Add, [w0, w1]) => Some(w0.max(w1) + 1),
+                    (Op::Mac, [w0, w1, w2]) => Some((w0 + w1).max(*w2) + 1),
+                    (Op::Mul, [w0, w1]) => Some(w0 + w1),
+                    (Op::And, [w0, w1]) => Some(*w0.min(w1)),
+                    (Op::Or | Op::Xor | Op::Min | Op::Max, [w0, w1]) => Some(*w0.max(w1)),
+                    (Op::Shl, [w0, _]) => match i.operands[1] {
+                        Operand::Imm(s) if s >= 0 => Some(w0 + s as u32),
+                        _ => None, // variable shift amount: barrier
+                    },
+                    (Op::Lshr, [w0, _]) => match i.operands[1] {
+                        Operand::Imm(s) if s >= 0 => Some(w0.saturating_sub(s as u32)),
+                        _ => Some(*w0),
+                    },
+                    // sub/div/ashr: wraparound or sign replication makes
+                    // the declared width observable.
+                    _ => None,
+                };
+                if let Some(exact) = exact {
+                    let floor = ws.iter().copied().max().unwrap_or(0);
+                    let new = declared32.min(exact.max(floor).max(1));
+                    if new < declared32 {
+                        i.ty = Ty::UInt(new as u8);
+                        changes += 1;
+                    }
+                }
+                tys.insert(i.result.clone(), i.ty);
+            }
+        }
+        Ok(changes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Device;
+    use crate::frontend::{self, DesignPoint};
+    use crate::sim::{self, Workload};
+    use crate::tir::{parse_and_validate, validate};
+
+    /// Fig-7-shaped module whose datapath carries gratuitous ui32
+    /// declarations over ui18 inputs.
+    fn slack_module() -> Module {
+        let src = r#"; ***** Manage-IR *****
+define void launch() {
+    @mem_a = addrspace(3) <1000 x ui18>
+    @strobj_a = addrspace(10), !"source", !"@mem_a"
+    @mem_b = addrspace(3) <1000 x ui18>
+    @strobj_b = addrspace(10), !"source", !"@mem_b"
+    @mem_c = addrspace(3) <1000 x ui18>
+    @strobj_c = addrspace(10), !"source", !"@mem_c"
+    @mem_y = addrspace(3) <1000 x ui18>
+    @strobj_y = addrspace(10), !"dest", !"@mem_y"
+    call @main ()
+}
+; ***** Compute-IR *****
+@k = const ui18 42
+@main.a = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_a"
+@main.b = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_b"
+@main.c = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_c"
+@main.y = addrSpace(12) ui18, !"ostream", !"CONT", !0, !"strobj_y"
+define void @f2 (ui18 %a, ui18 %b, ui18 %c) pipe {
+    ui32 %1 = add ui32 %a, %b
+    ui32 %2 = add ui32 %c, %c
+    ui32 %3 = or ui32 %1, %2
+    ui32 %y = add ui32 %3, @k
+}
+define void @main () pipe {
+    call @f2 (@main.a, @main.b, @main.c) pipe
+}
+"#;
+        parse_and_validate(src).unwrap()
+    }
+
+    fn ty_of(m: &Module, f: &str, r: &str) -> Ty {
+        m.instrs_of(&m.funcs[f]).find(|i| i.result == r).unwrap().ty
+    }
+
+    #[test]
+    fn narrows_declared_slack_to_exact_widths_and_preserves_output() {
+        let base = slack_module();
+        let mut m = base.clone();
+        let n = Renarrow.run(&mut m).unwrap();
+        validate::validate(&m).unwrap();
+        assert_eq!(n, 3, "the three unprotected results narrow");
+        assert_eq!(ty_of(&m, "f2", "1"), Ty::UInt(19), "add over ui18s needs 19 bits");
+        assert_eq!(ty_of(&m, "f2", "2"), Ty::UInt(19));
+        assert_eq!(ty_of(&m, "f2", "3"), Ty::UInt(19), "or of two ui19s stays 19");
+        assert_eq!(ty_of(&m, "f2", "y"), Ty::UInt(32), "ostream-bound result is protected");
+
+        let dev = Device::stratix4();
+        let rb = sim::simulate(&base, &dev, &Workload::random_for(&base, 11)).unwrap();
+        let rt = sim::simulate(&m, &dev, &Workload::random_for(&m, 11)).unwrap();
+        assert_eq!(rb.mems["mem_y"], rt.mems["mem_y"], "narrowing must be value-exact");
+        assert_eq!(Renarrow.run(&mut m).unwrap(), 0, "idempotent at the fixpoint");
+
+        // Fewer result bits ⇒ fewer ALUTs/regs on the estimator's walls.
+        let db = crate::estimator::CostDb::default();
+        let eb = crate::estimator::estimate_with_db(&base, &dev, &db).unwrap();
+        let et = crate::estimator::estimate_with_db(&m, &dev, &db).unwrap();
+        assert!(et.resources.alut < eb.resources.alut, "{} vs {}", et.resources.alut, eb.resources.alut);
+        assert!(et.resources.reg <= eb.resources.reg);
+    }
+
+    #[test]
+    fn exact_widths_and_barrier_ops_are_left_alone() {
+        // The paper's fig 15 SOR listing is hand-tightened: every
+        // declared width is already the exact bound (`ui32 %4 = mul` of
+        // ui20 × 12-bit const, `ui33 %6 = add` of ui32 + ui28…), and
+        // `%q` rides an lshr into a protected ostream binding.
+        let mut m = parse_and_validate(&crate::tir::examples::fig15_sor_default()).unwrap();
+        assert_eq!(Renarrow.run(&mut m).unwrap(), 0, "no slack to remove");
+
+        // Barrier ops keep their declaration even with narrow operands.
+        let src = r#"; ***** Manage-IR *****
+define void launch() {
+    @mem_a = addrspace(3) <1000 x ui18>
+    @strobj_a = addrspace(10), !"source", !"@mem_a"
+    @mem_b = addrspace(3) <1000 x ui18>
+    @strobj_b = addrspace(10), !"source", !"@mem_b"
+    @mem_y = addrspace(3) <1000 x ui18>
+    @strobj_y = addrspace(10), !"dest", !"@mem_y"
+    call @main ()
+}
+; ***** Compute-IR *****
+@main.a = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_a"
+@main.b = addrSpace(12) ui18, !"istream", !"CONT", !0, !"strobj_b"
+@main.y = addrSpace(12) ui18, !"ostream", !"CONT", !0, !"strobj_y"
+define void @f2 (ui18 %a, ui18 %b) pipe {
+    ui32 %1 = sub ui32 %a, %b
+    ui32 %2 = div ui32 %1, %b
+    ui32 %y = add ui32 %2, 0
+}
+define void @main () pipe {
+    call @f2 (@main.a, @main.b) pipe
+}
+"#;
+        let mut m = parse_and_validate(src).unwrap();
+        let n = Renarrow.run(&mut m).unwrap();
+        validate::validate(&m).unwrap();
+        assert_eq!(n, 0, "sub/div wraparound makes ui32 observable; %y is protected");
+        assert_eq!(ty_of(&m, "f2", "1"), Ty::UInt(32));
+        assert_eq!(ty_of(&m, "f2", "2"), Ty::UInt(32));
+    }
+
+    #[test]
+    fn lowered_modules_are_already_at_the_fixpoint() {
+        // The frontend's width inference emits exactly these bounds, so
+        // renarrow must find nothing on any lowered registry kernel.
+        let k = frontend::parse_kernel(frontend::lang::simple_kernel_source()).unwrap();
+        let mut m = frontend::lower(&k, DesignPoint::c2()).unwrap();
+        assert_eq!(Renarrow.run(&mut m).unwrap(), 0);
+
+        let (_, blend) = crate::kernels::resolve_specs(&["builtin:blend6".to_string()])
+            .unwrap()
+            .remove(0);
+        let mut m = frontend::lower(&blend, DesignPoint::c2()).unwrap();
+        assert_eq!(Renarrow.run(&mut m).unwrap(), 0);
+    }
+}

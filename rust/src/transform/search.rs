@@ -1,0 +1,407 @@
+//! Estimator-guided beam search over pass *pipelines* — ROADMAP
+//! direction 3 ("pass-order search: let the DSE search pass orders
+//! against the estimator").
+//!
+//! The paper's premise is that an estimator cheap enough to call
+//! thousands of times turns design-space exploration into automated
+//! search. Until PR 9 the transform axis was a fixed enumeration of
+//! four named recipes; here the recipe itself becomes the searched
+//! object: starting from the identity pipeline, each generation extends
+//! every beam survivor by one [`PassStep`] from the palette, scores the
+//! candidates with the existing estimator under the active device walls
+//! (exactly the [`crate::dse::Candidate::evaluated`] projection), and
+//! keeps the best `beam_width`. Legality is gated per candidate: the
+//! transformed module is simulated against the identity module's final
+//! memory state on a seeded workload — a pipeline that changes any
+//! output is rejected outright, never scored into the beam (the
+//! conformance harness re-checks the same invariant for every *visited*
+//! pipeline under `search/semantics-preserved`).
+//!
+//! Everything is deterministic for a fixed (kernel, device, config):
+//! candidate generation order is beam-order × palette-order, ranking
+//! ties break by realised label then canonical recipe order, and the
+//! legality workload is seeded — two runs produce byte-identical
+//! reports (`search/deterministic`).
+//!
+//! The search runs at the fixed C2 base point (one pipeline lane): the
+//! recipe axis is orthogonal to the replication axes, so a pipeline
+//! that wins at one lane wins at N (the sweep then scales the winner).
+
+use std::cmp::Ordering;
+use std::collections::BTreeSet;
+
+use super::recipe::{PassStep, TransformRecipe};
+use crate::device::Device;
+use crate::dse::pareto::EvaluatedPoint;
+use crate::dse::walls::{self, WallCheck};
+use crate::estimator::{self, CostDb, Estimate};
+use crate::frontend::{self, DesignPoint, KernelDef, LoweredKernel};
+use crate::sim::{self, Workload};
+
+/// The step palette candidate pipelines are extended from, in the
+/// deterministic generation order. `ways` is sweepable over {2, 3, 4}.
+pub fn palette() -> Vec<PassStep> {
+    vec![
+        PassStep::Fold,
+        PassStep::Cse,
+        PassStep::Strength,
+        PassStep::Balance,
+        PassStep::FuseMac,
+        PassStep::Renarrow,
+        PassStep::Split { ways: 2 },
+        PassStep::Split { ways: 3 },
+        PassStep::Split { ways: 4 },
+    ]
+}
+
+/// Beam-search parameters (`tytra search` flags).
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Survivors kept per generation.
+    pub beam_width: usize,
+    /// Maximum pipeline length (generations).
+    pub max_len: usize,
+    /// Seed of the legality-gate workload.
+    pub seed: u64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> SearchConfig {
+        SearchConfig { beam_width: 4, max_len: 4, seed: 7 }
+    }
+}
+
+/// One scored pipeline: the recipe and its estimation-space projection
+/// at the realised point (label = realised-point label).
+#[derive(Debug, Clone)]
+pub struct Scored {
+    /// The candidate pipeline.
+    pub recipe: TransformRecipe,
+    /// Score under the active walls — the same projection sweep
+    /// candidates use, so searched and swept points are comparable.
+    pub evaluated: EvaluatedPoint,
+}
+
+impl Scored {
+    /// Assemble from the per-point artifacts (shared by the serial
+    /// evaluator and `Session::search_recipes`' executor jobs — one
+    /// projection, two drivers).
+    pub fn from_parts(
+        recipe: TransformRecipe,
+        label: String,
+        estimate: &Estimate,
+        walls: &WallCheck,
+    ) -> Scored {
+        Scored {
+            recipe,
+            evaluated: EvaluatedPoint {
+                label,
+                resources: estimate.resources,
+                ewgt: walls.io_clipped_ewgt(estimate.ewgt),
+                utilisation: walls.compute_utilisation,
+                feasible: walls.feasible(),
+            },
+        }
+    }
+}
+
+/// Everything a search produced.
+#[derive(Debug, Clone)]
+pub struct SearchReport {
+    /// The best pipeline overall (the identity baseline included — on a
+    /// kernel no pass improves, the winner is `NONE`).
+    pub winner: Scored,
+    /// The four legacy named recipes scored at the same design point
+    /// (the winner-vs-named table of EXPERIMENTS §Search).
+    pub named: Vec<Scored>,
+    /// Every pipeline the search visited (baseline, named, and all beam
+    /// candidates), in evaluation order.
+    pub visited: Vec<Scored>,
+    /// Beam generations actually run.
+    pub generations: usize,
+    /// Pipelines submitted to the evaluator (legality rejections
+    /// included).
+    pub scored: usize,
+    /// Pipelines rejected by the legality gate.
+    pub rejected: usize,
+}
+
+/// Best-first candidate order: feasible before infeasible, then higher
+/// wall-clipped EWGT, then lower utilisation, then realised label, then
+/// canonical recipe order — the same deterministic tie-break discipline
+/// as `dse::pareto` (on the IO wall whole beam generations tie exactly,
+/// so the label tie-break is load-bearing, not cosmetic).
+fn rank(a: &Scored, b: &Scored) -> Ordering {
+    b.evaluated
+        .feasible
+        .cmp(&a.evaluated.feasible)
+        .then(b.evaluated.ewgt.partial_cmp(&a.evaluated.ewgt).expect("no NaN"))
+        .then(a.evaluated.utilisation.partial_cmp(&b.evaluated.utilisation).expect("no NaN"))
+        .then_with(|| a.evaluated.label.cmp(&b.evaluated.label))
+        .then_with(|| a.recipe.cmp(&b.recipe))
+}
+
+/// The beam-search engine, generic over the batch evaluator so the
+/// serial path ([`search_kernel`]) and the coordinator's executor
+/// fan-out (`Session::search_recipes`) share one control flow. The
+/// evaluator returns one entry per submitted recipe, `None` for
+/// pipelines the legality gate rejected.
+pub fn search<E>(cfg: &SearchConfig, mut eval: E) -> Result<SearchReport, String>
+where
+    E: FnMut(&[TransformRecipe]) -> Result<Vec<Option<Scored>>, String>,
+{
+    let beam_width = cfg.beam_width.max(1);
+    let mut seen_recipes: BTreeSet<TransformRecipe> = BTreeSet::new();
+    let mut seen_labels: BTreeSet<String> = BTreeSet::new();
+    let mut visited: Vec<Scored> = Vec::new();
+    let (mut scored, mut rejected, mut generations) = (0usize, 0usize, 0usize);
+
+    // Generation 0: the identity baseline — the score every candidate
+    // must beat, and the golden model the gate compares against (so it
+    // can never legitimately be rejected).
+    seen_recipes.insert(TransformRecipe::NONE);
+    scored += 1;
+    let baseline = match eval(&[TransformRecipe::NONE])?.into_iter().next().flatten() {
+        Some(s) => s,
+        None => return Err("search baseline (identity recipe) failed its own legality gate".into()),
+    };
+    seen_labels.insert(baseline.evaluated.label.clone());
+    visited.push(baseline.clone());
+
+    // The four legacy named recipes, scored up front for the report's
+    // winner-vs-named table. They are ordinary points of the searched
+    // space (`fold>cse` *is* `simplify`), so they join the visited set
+    // and the beam never re-evaluates them.
+    let named_batch: Vec<TransformRecipe> = TransformRecipe::named()
+        .iter()
+        .map(|(r, _)| *r)
+        .filter(|r| seen_recipes.insert(*r))
+        .collect();
+    scored += named_batch.len();
+    let mut named: Vec<Scored> = Vec::new();
+    for s in eval(&named_batch)? {
+        match s {
+            Some(s) => {
+                seen_labels.insert(s.evaluated.label.clone());
+                visited.push(s.clone());
+                named.push(s);
+            }
+            None => rejected += 1,
+        }
+    }
+
+    let mut beam: Vec<Scored> = vec![baseline];
+    for _ in 0..cfg.max_len {
+        let mut batch: Vec<TransformRecipe> = Vec::new();
+        for b in &beam {
+            let steps = b.recipe.steps();
+            if steps.len() >= cfg.max_len {
+                continue;
+            }
+            for step in palette() {
+                let mut ns = steps.to_vec();
+                ns.push(step);
+                // Construction canonicalises: a step that collapses into
+                // its predecessor reproduces the parent — skip it rather
+                // than re-visit (`from_steps` cannot fail here: the
+                // palette carries no degenerate splits).
+                let Ok(r) = TransformRecipe::from_steps(ns) else { continue };
+                if r.steps().len() != steps.len() + 1 {
+                    continue;
+                }
+                if !seen_recipes.insert(r) {
+                    continue;
+                }
+                batch.push(r);
+            }
+        }
+        if batch.is_empty() {
+            break;
+        }
+        generations += 1;
+        scored += batch.len();
+        let mut fresh: Vec<Scored> = Vec::new();
+        for s in eval(&batch)? {
+            match s {
+                Some(s) => {
+                    // A candidate realising an already-seen label is a
+                    // degenerate duplicate (its added pass rewrote
+                    // nothing new) — it stays in the visited record but
+                    // must not occupy a beam slot.
+                    let new_label = seen_labels.insert(s.evaluated.label.clone());
+                    visited.push(s.clone());
+                    if new_label {
+                        fresh.push(s);
+                    }
+                }
+                None => rejected += 1,
+            }
+        }
+        if fresh.is_empty() {
+            break;
+        }
+        fresh.sort_by(rank);
+        fresh.truncate(beam_width);
+        beam = fresh;
+    }
+
+    let winner = visited.iter().min_by(|a, b| rank(a, b)).expect("baseline always present").clone();
+    Ok(SearchReport { winner, named, visited, generations, scored, rejected })
+}
+
+/// Serial per-recipe evaluator: lower at the fixed base point, estimate
+/// under the walls, and gate legality by simulating against the golden
+/// (identity-pipeline) memory state. `Session::search_recipes` runs the
+/// same per-recipe pipeline as executor jobs through the session caches.
+pub struct Evaluator<'a> {
+    lk: &'a LoweredKernel,
+    base: DesignPoint,
+    dev: &'a Device,
+    db: &'a CostDb,
+    seed: u64,
+    golden: sim::MemState,
+}
+
+impl<'a> Evaluator<'a> {
+    /// Build the evaluator: lowers and simulates the identity module
+    /// once to fix the golden memory state.
+    pub fn new(
+        lk: &'a LoweredKernel,
+        base: DesignPoint,
+        dev: &'a Device,
+        db: &'a CostDb,
+        seed: u64,
+    ) -> Result<Evaluator<'a>, String> {
+        let base = DesignPoint { transforms: TransformRecipe::NONE, ..base };
+        let m0 = frontend::lower_point(lk, base)?;
+        let w0 = Workload::random_for(&m0, seed);
+        let golden = sim::simulate(&m0, dev, &w0)?.mems;
+        Ok(Evaluator { lk, base, dev, db, seed, golden })
+    }
+
+    /// Score a batch (the [`search`] evaluator shape).
+    pub fn evaluate(&self, recipes: &[TransformRecipe]) -> Result<Vec<Option<Scored>>, String> {
+        recipes.iter().map(|&r| self.one(r)).collect()
+    }
+
+    fn one(&self, recipe: TransformRecipe) -> Result<Option<Scored>, String> {
+        let point = DesignPoint { transforms: recipe, ..self.base };
+        let module = frontend::lower_point(self.lk, point)?;
+        let realised = frontend::lower::realised_point(&module, point);
+        let estimate = estimator::estimate_with_db(&module, self.dev, self.db)?;
+        let walls = walls::check(&module, &estimate, self.dev);
+        // Legality gate: transforms never touch the Manage-IR, so the
+        // seeded workload draws identical contents for base and
+        // candidate — any divergence in the final memory state is a
+        // semantics break.
+        let w = Workload::random_for(&module, self.seed);
+        let r = sim::simulate(&module, self.dev, &w)?;
+        if r.mems != self.golden {
+            return Ok(None);
+        }
+        Ok(Some(Scored::from_parts(recipe, realised.label(), &estimate, &walls)))
+    }
+}
+
+/// Search one kernel serially (tests, conformance, the no-session
+/// paths). The CLI goes through `Session::search_recipes` instead, for
+/// the executor fan-out and the session caches.
+pub fn search_kernel(k: &KernelDef, dev: &Device, cfg: &SearchConfig) -> Result<SearchReport, String> {
+    let lk = frontend::analyze_kernel(k)?;
+    let db = estimator::shared_cost_db();
+    let ev = Evaluator::new(&lk, DesignPoint::c2(), dev, db, cfg.seed)?;
+    search(cfg, |batch| ev.evaluate(batch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn saxpy_def() -> KernelDef {
+        frontend::parse_kernel(
+            "kernel sx { in x, w, b : ui18[64]\nout y : ui18[64]\n\
+             for n in 0..64 { y[n] = x[n] * w[n] + b[n] } }",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn searched_pipeline_dominates_every_named_recipe_on_a_mac_tail() {
+        // On the mul+add tail every legacy recipe degenerates (nothing
+        // folds, CSEs, strength-reduces or balances; the chain is too
+        // short to split) while `fuse-mac` strictly improves — the
+        // search must discover it and beat all four.
+        let dev = Device::stratix4();
+        let r = search_kernel(&saxpy_def(), &dev, &SearchConfig::default()).unwrap();
+        assert!(!r.winner.recipe.is_none(), "a rewrite must win");
+        assert!(
+            r.winner.recipe.steps().contains(&PassStep::FuseMac),
+            "winner {} must fuse the mul+add tail",
+            r.winner.recipe.name()
+        );
+        assert_eq!(r.named.len(), 4);
+        for n in &r.named {
+            assert!(
+                r.winner.evaluated.dominates(&n.evaluated),
+                "winner {:?} must dominate named {:?}",
+                r.winner,
+                n
+            );
+            assert_eq!(n.evaluated.label, "pipe×1", "named recipes all degenerate here");
+        }
+        assert_eq!(r.rejected, 0, "every pass is semantics-preserving");
+    }
+
+    #[test]
+    fn search_is_deterministic() {
+        let dev = Device::stratix4();
+        let cfg = SearchConfig { beam_width: 2, max_len: 3, seed: 42 };
+        let a = search_kernel(&saxpy_def(), &dev, &cfg).unwrap();
+        let b = search_kernel(&saxpy_def(), &dev, &cfg).unwrap();
+        assert_eq!(a.winner.recipe, b.winner.recipe);
+        assert_eq!(a.scored, b.scored);
+        assert_eq!(a.generations, b.generations);
+        assert_eq!(a.visited.len(), b.visited.len());
+        for (x, y) in a.visited.iter().zip(&b.visited) {
+            assert_eq!(x.recipe, y.recipe);
+            assert_eq!(x.evaluated.label, y.evaluated.label);
+            assert_eq!(x.evaluated.ewgt.to_bits(), y.evaluated.ewgt.to_bits());
+            assert_eq!(x.evaluated.utilisation.to_bits(), y.evaluated.utilisation.to_bits());
+        }
+    }
+
+    #[test]
+    fn beam_respects_the_length_cap() {
+        let dev = Device::stratix4();
+        let cfg = SearchConfig { beam_width: 2, max_len: 2, ..SearchConfig::default() };
+        let r = search_kernel(&saxpy_def(), &dev, &cfg).unwrap();
+        let named: Vec<TransformRecipe> =
+            TransformRecipe::named().iter().map(|(r, _)| *r).collect();
+        for s in &r.visited {
+            assert!(
+                s.recipe.steps().len() <= cfg.max_len || named.contains(&s.recipe),
+                "{} exceeds the cap",
+                s.recipe.name()
+            );
+        }
+        assert!(r.generations <= cfg.max_len);
+    }
+
+    #[test]
+    fn inert_kernel_keeps_the_identity_baseline() {
+        // Nothing in the palette can improve a bare add of two streams:
+        // every generation-1 candidate realises the baseline's label, so
+        // the search stops after one generation and the identity recipe
+        // wins on the canonical-order tie-break.
+        let k = frontend::parse_kernel(
+            "kernel inert { in a, b : ui18[32]\nout y : ui18[32]\n\
+             for n in 0..32 { y[n] = a[n] + b[n] } }",
+        )
+        .unwrap();
+        let dev = Device::stratix4();
+        let r = search_kernel(&k, &dev, &SearchConfig::default()).unwrap();
+        assert!(r.winner.recipe.is_none(), "winner: {}", r.winner.recipe.name());
+        assert_eq!(r.generations, 1, "one exploratory generation, then dry");
+        assert_eq!(r.scored, 1 + 4 + palette().len());
+    }
+}

@@ -44,7 +44,16 @@ impl Pass for ChainSplit {
         "chain-split"
     }
 
+    /// `ways` changes the rewrite, so it must key the transform memo
+    /// (recipes reject `ways < 2` at construction; see
+    /// `TransformRecipe::from_steps`).
+    fn fingerprint(&self) -> u64 {
+        self.ways as u64
+    }
+
     fn run(&self, m: &mut Module) -> Result<usize, String> {
+        // Defensive only: recipe construction rejects ways < 2, but a
+        // hand-built pipeline could still carry one — keep it a no-op.
         if self.ways < 2 {
             return Ok(0);
         }

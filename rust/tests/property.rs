@@ -561,6 +561,79 @@ fn batched_engine_is_bit_identical_to_the_interpreted_oracle() {
 }
 
 #[test]
+fn recipe_names_roundtrip_through_parse() {
+    // PR 9 satellite (recipe-label collapse bugfix): `parse(name(r)) ==
+    // r` for every constructible pipeline — random ordered pipelines
+    // drawn from the search palette, the four legacy aliases, and the
+    // identity. A collision between a structural name and an alias
+    // (the old `balance` shadowing) would break this inversion.
+    use tytra::transform::search::palette;
+    use tytra::transform::TransformRecipe;
+
+    let mut rng = Prng::new(0x9E01);
+    let pal = palette();
+    for _ in 0..500 {
+        let len = rng.range_u64(1, 6) as usize;
+        let steps: Vec<_> = (0..len).map(|_| *rng.choose(&pal)).collect();
+        let r = TransformRecipe::from_steps(steps.clone()).unwrap();
+        let name = r.name();
+        assert_eq!(TransformRecipe::parse(&name), Some(r), "`{name}` from {steps:?}");
+    }
+    for (r, n) in TransformRecipe::named() {
+        assert_eq!(TransformRecipe::parse(n), Some(r));
+        assert_eq!(TransformRecipe::parse(&r.name()), Some(r), "alias `{n}`");
+    }
+    assert_eq!(TransformRecipe::parse("none"), Some(TransformRecipe::NONE));
+    assert_eq!(TransformRecipe::parse(""), Some(TransformRecipe::NONE));
+}
+
+#[test]
+fn legacy_recipes_match_their_step_pipelines_bit_for_bit() {
+    // PR 9 migration gate: each legacy named recipe is the *same*
+    // interned pipeline as its documented ordered step list, and
+    // lowering through either handle produces byte-identical modules on
+    // every library kernel — the bit-set → ordered-steps migration
+    // changed no legacy behaviour.
+    use tytra::transform::{PassStep, TransformRecipe};
+
+    let documented = [
+        (TransformRecipe::simplify(), vec![PassStep::Fold, PassStep::Cse]),
+        (
+            TransformRecipe::shiftadd(),
+            vec![PassStep::Fold, PassStep::Cse, PassStep::Strength],
+        ),
+        (
+            TransformRecipe::balance(),
+            vec![PassStep::Fold, PassStep::Cse, PassStep::Balance],
+        ),
+        (
+            TransformRecipe::full(),
+            vec![
+                PassStep::Fold,
+                PassStep::Cse,
+                PassStep::Strength,
+                PassStep::Balance,
+                PassStep::Split { ways: 3 },
+            ],
+        ),
+    ];
+    for (named, steps) in documented {
+        let built = TransformRecipe::from_steps(steps).unwrap();
+        assert_eq!(named, built, "{}", named.name());
+        assert_eq!(named.steps(), built.steps());
+    }
+    for sc in tytra::kernels::registry() {
+        let k = sc.parse().unwrap();
+        for (named, rname) in TransformRecipe::named() {
+            let rebuilt = TransformRecipe::from_steps(named.steps().to_vec()).unwrap();
+            let a = frontend::lower(&k, DesignPoint::c2().with_transforms(named)).unwrap();
+            let b = frontend::lower(&k, DesignPoint::c2().with_transforms(rebuilt)).unwrap();
+            assert_eq!(a, b, "{} × {rname}: modules drifted across the migration", sc.name);
+        }
+    }
+}
+
+#[test]
 fn workloads_are_deterministic_and_seed_sensitive() {
     let k = frontend::parse_kernel(frontend::lang::simple_kernel_source()).unwrap();
     let m = frontend::lower(&k, DesignPoint::c2()).unwrap();

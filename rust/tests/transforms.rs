@@ -9,6 +9,10 @@
 //!    §Transforms table);
 //! 3. the rewrite axis is a first-class design-space axis: labels,
 //!    realised-point degeneration and the DSE cache all agree.
+//!
+//! PR 9 adds the beam-search acceptance: for the `saxpy` mac-tail
+//! kernel, the searched pipeline strictly Pareto-dominates *all four*
+//! named recipes — the named enumeration is provably not the optimum.
 
 use tytra::conformance::{self, Options};
 use tytra::device::Device;
@@ -60,6 +64,46 @@ fn transformed_point_strictly_dominates_the_untransformed_frontier() {
     // and the combined sweep selects a transformed point as best
     let best = combined.best.unwrap();
     assert!(best.label.contains('+'), "best must be a transformed point: {best:?}");
+}
+
+#[test]
+fn searched_pipeline_strictly_dominates_every_named_recipe() {
+    // PR 9 acceptance. On saxpy's mul+add tail every legacy recipe
+    // degenerates to the identity point while the searched `fuse-mac`
+    // step removes one pipeline stage at equal DSP cost: strictly
+    // higher EWGT, no worse utilisation — strict Pareto dominance over
+    // the whole named enumeration, found by search, not by hand.
+    use tytra::transform::search::{search_kernel, SearchConfig};
+    use tytra::transform::PassStep;
+
+    let sc = tytra::kernels::find("saxpy").expect("saxpy in the registry");
+    let k = sc.parse().unwrap();
+    let dev = Device::stratix4();
+    let r = search_kernel(&k, &dev, &SearchConfig::default()).unwrap();
+
+    assert!(!r.winner.recipe.is_none(), "the identity must not win on a fusable tail");
+    assert!(
+        r.winner.recipe.steps().contains(&PassStep::FuseMac),
+        "winner `{}` must fuse the mac tail",
+        r.winner.recipe.name()
+    );
+    assert_eq!(r.named.len(), 4, "all four named recipes must be scored");
+    for n in &r.named {
+        assert!(
+            r.winner.evaluated.dominates(&n.evaluated),
+            "winner {:?} must dominate named {:?}",
+            r.winner.evaluated,
+            n.evaluated
+        );
+        assert!(
+            r.winner.evaluated.ewgt > n.evaluated.ewgt,
+            "dominance must be strict in EWGT: {} vs {} ({})",
+            r.winner.evaluated.ewgt,
+            n.evaluated.ewgt,
+            n.recipe.name()
+        );
+    }
+    assert_eq!(r.rejected, 0, "every palette pass is semantics-preserving");
 }
 
 #[test]

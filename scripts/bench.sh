@@ -12,7 +12,10 @@
 # it also measures serve throughput: N concurrent client threads
 # (1/4/16) pushing sweep requests through one shared session, cold vs
 # warm disk cache (the warm rows exercise the cache-aware planner's
-# no-lowering replay) — the JSON's `serve` block.
+# no-lowering replay) — the JSON's `serve` block. Since PR 9 it also
+# measures recipe beam-search throughput (pipelines scored/sec through
+# Session::search_recipes on the saxpy mac-tail kernel, with the pass
+# memo's full/partial/miss split) — the JSON's `search` block.
 #
 # Usage:
 #   scripts/bench.sh            # smoke mode (short, CI-friendly)
