@@ -20,7 +20,11 @@
 //!   warm rows measure the cache-aware planner's no-lowering replay);
 //! * recipe beam search throughput (pipelines scored/sec through
 //!   `Session::search_recipes` on the `saxpy` mac-tail kernel, with
-//!   the pass-memo full/partial/miss split across pipeline prefixes).
+//!   the pass-memo full/partial/miss split across pipeline prefixes);
+//! * telemetry: per-stage latency quantiles (p50/p99 from the session's
+//!   lock-free log2 histograms after a validated sweep) and the warm
+//!   sweep re-timed with a session-wide `Tracer` attached — the
+//!   trace-on/trace-off overhead ratio EXPERIMENTS.md pins below 5%.
 //!
 //! This is also the §Perf harness used for the optimisation passes
 //! (EXPERIMENTS.md §Perf records before/after from this bench).
@@ -409,6 +413,58 @@ fn main() {
         search_memo.2
     );
 
+    println!("{}", section("telemetry: per-stage latency histograms and trace overhead"));
+    // ISSUE 10: every pipeline stage records into the session's
+    // lock-free log2 histograms; the trace stream has to stay cheap
+    // enough to leave on in production. Stage quantiles come from a
+    // validated sweep (the full lower→estimate→simulate path on the
+    // simple kernel); overhead re-times the warm estimate-only sweep
+    // with a session-wide `Tracer` attached.
+    let tele_session = Session::new(4);
+    let simple_k = frontend::parse_kernel(frontend::lang::simple_kernel_source()).unwrap();
+    let tele_limits = SweepLimits { max_lanes: 4, max_dv: 4, ..SweepLimits::default() };
+    tele_session.validate_sweep(&simple_k, &dev, &tele_limits, 1).expect("telemetry sweep");
+    let all_stages = tele_session.stage_stats();
+    let tele_stages: Vec<(&str, tytra::telemetry::Snapshot)> =
+        ["lower_point", "estimate", "simulate"]
+            .iter()
+            .map(|name| {
+                let snap = all_stages
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .map(|(_, s)| *s)
+                    .expect("stage histogram present");
+                (*name, snap)
+            })
+            .collect();
+    for (name, s) in &tele_stages {
+        println!(
+            "  {name:<12} n={:<4} p50={}µs p90={}µs p99={}µs max={}µs",
+            s.count, s.p50_us, s.p90_us, s.p99_us, s.max_us
+        );
+    }
+    let plain_session = Session::new(8);
+    plain_session.explore(src, &k, &dev, &limits).unwrap();
+    let (w, i) = scale(3, 30);
+    let r_plain = bench(&format!("{n_points}-point warm sweep, tracer off"), w, i, || {
+        black_box(plain_session.explore(src, &k, &dev, &limits).unwrap())
+    });
+    println!("{}", r_plain.line());
+    let tracer = std::sync::Arc::new(tytra::telemetry::Tracer::new());
+    let traced_session = Session::new(8).with_tracer(std::sync::Arc::clone(&tracer));
+    traced_session.explore(src, &k, &dev, &limits).unwrap();
+    let r_traced = bench(&format!("{n_points}-point warm sweep, tracer on"), w, i, || {
+        // Cleared per iteration so the buffer measures recording cost,
+        // not an ever-growing Vec.
+        tracer.clear();
+        black_box(traced_session.explore(src, &k, &dev, &limits).unwrap())
+    });
+    let trace_overhead = r_traced.summary.mean / r_plain.summary.mean;
+    println!(
+        "{}  (trace overhead ×{trace_overhead:.3}; EXPERIMENTS.md pins < 1.05)",
+        r_traced.line()
+    );
+
     if let Some(path) = std::env::var_os("TYTRA_BENCH_JSON") {
         let json = render_json(
             smoke,
@@ -424,6 +480,7 @@ fn main() {
             (cold_disk_cps, warm_disk_cps, disk_stats),
             &serve_rows,
             (search_pps, scored_per_search, search_memo),
+            (&tele_stages, trace_overhead),
         );
         if let Err(e) = std::fs::write(&path, json) {
             eprintln!("cannot write {}: {e}", path.to_string_lossy());
@@ -450,6 +507,7 @@ fn render_json(
     persist: (f64, f64, (u64, u64)),
     serve: &[(usize, f64, f64)],
     search: (f64, usize, (u64, u64, u64)),
+    telemetry: (&[(&str, tytra::telemetry::Snapshot)], f64),
 ) -> String {
     let rows = |xs: &[(usize, f64)]| -> String {
         xs.iter()
@@ -469,6 +527,14 @@ fn render_json(
     let (int_ips, bat_ips, speedup, (khits, kcompiles)) = sim;
     let (cold_disk_cps, warm_disk_cps, (dhits, drecovered)) = persist;
     let (search_pps, search_scored, (smf, smp, smm)) = search;
+    let (tele_stages, trace_overhead) = telemetry;
+    let stage_rows = tele_stages
+        .iter()
+        .map(|(name, s)| {
+            format!("\"{name}\": {{\"p50_us\": {}, \"p99_us\": {}}}", s.p50_us, s.p99_us)
+        })
+        .collect::<Vec<_>>()
+        .join(", ");
     format!(
         "{{\n  \"bench\": \"estimator_speed\",\n  \"mode\": \"{}\",\n  \
          \"single_estimate_us\": {{\"simple_c2\": {:.3}, \"sor_c2\": {:.3}}},\n  \
@@ -487,7 +553,9 @@ fn render_json(
          \"disk_hits_per_sweep\": {dhits}, \"recovered\": {drecovered}}},\n  \
          \"serve\": {{\"requests_per_sec\": [{serve_rows}]}},\n  \
          \"search\": {{\"pipelines_per_sec\": {search_pps:.1}, \"scored_per_search\": {search_scored}, \
-         \"memo\": {{\"full\": {smf}, \"partial\": {smp}, \"miss\": {smm}}}}}\n}}\n",
+         \"memo\": {{\"full\": {smf}, \"partial\": {smp}, \"miss\": {smm}}}}},\n  \
+         \"telemetry\": {{\"stages\": {{{stage_rows}}}, \
+         \"trace_overhead_ratio\": {trace_overhead:.3}}}\n}}\n",
         if smoke { "smoke" } else { "full" },
         est_simple_s * 1e6,
         est_sor_s * 1e6,

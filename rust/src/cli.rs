@@ -28,6 +28,7 @@ use crate::estimator::{self, report};
 use crate::frontend;
 use crate::sim::{self, Workload};
 use crate::synth;
+use crate::telemetry::Tracer;
 use crate::tir::{self, examples};
 use crate::util::table::human_count;
 
@@ -43,7 +44,7 @@ pub struct Cli {
 const VALUE_FLAGS: &[&str] = &[
     "device", "devices", "seed", "max-lanes", "max-dv", "jobs", "config", "artifacts", "random",
     "engine", "cache-dir", "cache-budget", "timeout-ms", "socket", "idle-timeout-ms", "beam-width",
-    "max-len",
+    "max-len", "trace",
 ];
 /// Boolean flags.
 const BOOL_FLAGS: &[&str] = &[
@@ -57,6 +58,7 @@ const BOOL_FLAGS: &[&str] = &[
     "quick",
     "json",
     "inject-mismatch",
+    "validate",
 ];
 
 impl Cli {
@@ -141,6 +143,7 @@ pub fn dispatch(args: &[String]) -> Result<String, String> {
         "dse" => cmd_dse(&cli),
         "sweep" => cmd_sweep(&cli),
         "search" => cmd_search(&cli),
+        "stats" => cmd_stats(&cli),
         "serve" => cmd_serve(&cli),
         "client" => cmd_client(&cli),
         "conformance" => cmd_conformance(&cli),
@@ -168,11 +171,16 @@ pub fn usage() -> String {
        sweep    <kernel>... [--devices s4,c4]  batched DSE over a kernel × device grid\n\
                                       (builtin:all = the whole scenario library;\n\
                                       --json = machine-readable frontier + wall checks;\n\
-                                      --cache-dir DIR = persistent estimate cache)\n\
+                                      --cache-dir DIR = persistent estimate cache;\n\
+                                      --validate = simulate every point too;\n\
+                                      --trace FILE = LDJSON stage trace)\n\
        search   <kernel.knl|builtin:NAME>  beam-search transform pipelines against the\n\
                                       estimator under the device walls; reports the\n\
                                       winning recipe vs the four named recipes\n\
                                       (--beam-width N --max-len N --seed N --json)\n\
+       stats    [<kernel>...]         per-stage latency table (p50/p90/p99/max µs):\n\
+                                      against a running service (--socket PATH asks\n\
+                                      its `stats` op) or from a local validated sweep\n\
        serve    [--socket PATH]       long-running sweep service: one JSON request per\n\
                                       line on stdin (or the socket), one response per\n\
                                       line; the socket serves many clients concurrently\n\
@@ -193,7 +201,8 @@ pub fn usage() -> String {
             --config tytra.toml   --artifacts DIR   --tb   --quick   --random N   --json\n\
             --inject-mismatch   --engine batched|compiled|interpreted\n\
             --cache-dir DIR   --cache-budget BYTES   --timeout-ms N   --socket PATH\n\
-            --idle-timeout-ms N   --beam-width N   --max-len N"
+            --idle-timeout-ms N   --beam-width N   --max-len N   --validate\n\
+            --trace FILE.ldjson   (TYTRA_FAKE_CLOCK=1 makes traces byte-stable)"
         .to_string()
 }
 
@@ -323,7 +332,38 @@ fn sweep_config(cli: &Cli) -> Result<Config, String> {
     if let Some(v) = cli.flag("idle-timeout-ms") {
         cfg.serve_idle_timeout_ms = v.parse().map_err(|e| format!("--idle-timeout-ms: {e}"))?;
     }
+    if let Some(p) = cli.flag("trace") {
+        cfg.trace_path = Some(p.to_string());
+    }
     Ok(cfg)
+}
+
+/// Attach a session-wide tracer when `--trace` / `trace.path` is
+/// configured. Returns the (possibly traced) session plus the handle
+/// needed to write the stream out at command exit. The fake-clock
+/// switch (`TYTRA_FAKE_CLOCK=1`) is read inside [`Tracer::new`], so CI
+/// gets byte-stable traces without any flag plumbing here.
+fn attach_tracer(
+    cfg: &Config,
+    session: Session,
+) -> (Session, Option<(std::sync::Arc<Tracer>, String)>) {
+    match &cfg.trace_path {
+        Some(path) => {
+            let tracer = std::sync::Arc::new(Tracer::new());
+            let session = session.with_tracer(std::sync::Arc::clone(&tracer));
+            (session, Some((tracer, path.clone())))
+        }
+        None => (session, None),
+    }
+}
+
+/// Flush a collected trace to its configured path (no-op untraced).
+fn write_trace(trace: &Option<(std::sync::Arc<Tracer>, String)>) -> Result<(), String> {
+    if let Some((tracer, path)) = trace {
+        std::fs::write(path, tracer.render_ldjson())
+            .map_err(|e| format!("trace {path}: {e}"))?;
+    }
+    Ok(())
 }
 
 /// Session construction shared by `dse`, `sweep` and `serve`: worker
@@ -357,8 +397,9 @@ fn cmd_dse(cli: &Cli) -> Result<String, String> {
     }
     let (src, k) = crate::kernels::resolve_specs(std::slice::from_ref(spec))?.remove(0);
 
-    let session = build_session(&cfg, false)?;
+    let (session, trace) = attach_tracer(&cfg, build_session(&cfg, false)?);
     let r = session.explore(&src, &k, &dev, &cfg.sweep)?;
+    write_trace(&trace)?;
 
     let mut out = String::new();
     // Enumerated vs realised: degenerate points (clamped reductions,
@@ -426,8 +467,50 @@ fn cmd_sweep(cli: &Cli) -> Result<String, String> {
     let limits = cfg.sweep;
     let jobs = cfg.jobs;
 
-    let session = build_session(&cfg, false)?;
+    let (session, trace) = attach_tracer(&cfg, build_session(&cfg, false)?);
+
+    // `--validate`: the heavyweight estimate-and-simulate sweep
+    // (`Session::validate_sweep`) instead of estimation only — the CLI
+    // face of serve's `"validate": true` knob, sharing its JSON
+    // renderer so both speak one schema.
+    if cli.has("validate") {
+        let seed = cli.seed();
+        if cli.has("json") {
+            eprintln!("{}", session.metrics().summary());
+            let out = crate::coordinator::serve::render_validate_json(
+                &session, &kernels, &devices, &limits, seed,
+            )?;
+            write_trace(&trace)?;
+            return Ok(out);
+        }
+        let mut t = crate::util::Table::new(vec![
+            "kernel", "device", "config", "est cycles", "sim cycles", "total", "EWGT",
+        ]);
+        for (_, k) in &kernels {
+            for dev in &devices {
+                for p in session.validate_sweep(k, dev, &limits, seed)? {
+                    t.row(vec![
+                        k.name.clone(),
+                        dev.name.clone(),
+                        p.point.label(),
+                        p.estimate.cycles_per_pass.to_string(),
+                        p.cycles_per_pass.to_string(),
+                        p.total_cycles.to_string(),
+                        human_count(p.estimate.ewgt),
+                    ]);
+                }
+            }
+        }
+        write_trace(&trace)?;
+        return Ok(format!(
+            "validated sweep (seed {seed}): estimate vs simulation per realised point\n\n{}\n{}",
+            t.render(),
+            session.metrics().summary()
+        ));
+    }
+
     let cells = session.explore_batch(&kernels, &devices, &limits)?;
+    write_trace(&trace)?;
 
     if cli.has("json") {
         // Stdout carries only the (byte-stable) JSON document; the
@@ -501,8 +584,9 @@ fn cmd_search(cli: &Cli) -> Result<String, String> {
         scfg.seed = v.parse().map_err(|e| format!("--seed: {e}"))?;
     }
 
-    let session = build_session(&cfg, false)?;
+    let (session, trace) = attach_tracer(&cfg, build_session(&cfg, false)?);
     let report = session.search_recipes(&k, &dev, &scfg)?;
+    write_trace(&trace)?;
 
     if cli.has("json") {
         // Same split as `sweep --json`: byte-stable document on stdout,
@@ -541,6 +625,106 @@ fn cmd_search(cli: &Cli) -> Result<String, String> {
     Ok(out)
 }
 
+/// `tytra stats` — the human face of the telemetry surface: a
+/// per-stage latency table (count, p50/p90/p99/max µs, total). With
+/// `--socket PATH` it asks a **running** service's `stats` op, so you
+/// can watch a live server's histograms fill; without it, it runs a
+/// local validated sweep over the given kernels (default
+/// `builtin:simple`) and reports where that work spent its time.
+fn cmd_stats(cli: &Cli) -> Result<String, String> {
+    if let Some(path) = cli.flag("socket") {
+        return stats_from_socket(path);
+    }
+    let cfg = sweep_config(cli)?;
+    let dev = Device::by_name(&cfg.device).ok_or_else(|| format!("unknown device `{}`", cfg.device))?;
+    let specs: Vec<String> = if cli.positional.is_empty() {
+        vec!["builtin:simple".to_string()]
+    } else {
+        cli.positional.clone()
+    };
+    let kernels = crate::kernels::resolve_specs(&specs)?;
+    let (session, trace) = attach_tracer(&cfg, build_session(&cfg, false)?);
+    for (_, k) in &kernels {
+        session.validate_sweep(k, &dev, &cfg.sweep, cli.seed())?;
+    }
+    write_trace(&trace)?;
+    let rows: Vec<(String, crate::telemetry::Snapshot)> =
+        session.stage_stats().into_iter().map(|(n, s)| (n.to_string(), s)).collect();
+    Ok(format!(
+        "per-stage latency for a validated sweep of {} kernel(s) on {}\n\n{}\n{}",
+        kernels.len(),
+        dev.name,
+        render_stage_table(&rows),
+        session.metrics().summary()
+    ))
+}
+
+/// Render stage snapshots as the `tytra stats` table.
+fn render_stage_table(rows: &[(String, crate::telemetry::Snapshot)]) -> String {
+    let mut t = crate::util::Table::new(vec![
+        "stage", "count", "p50 µs", "p90 µs", "p99 µs", "max µs", "total µs",
+    ]);
+    for (name, s) in rows {
+        t.row(vec![
+            name.clone(),
+            s.count.to_string(),
+            s.p50_us.to_string(),
+            s.p90_us.to_string(),
+            s.p99_us.to_string(),
+            s.max_us.to_string(),
+            s.sum_us.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Query a running service's `stats` op and render its reply as the
+/// same table the local path produces.
+#[cfg(unix)]
+fn stats_from_socket(path: &str) -> Result<String, String> {
+    use crate::util::json::Json;
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::os::unix::net::UnixStream::connect(path)
+        .map_err(|e| format!("connect {path}: {e}"))?;
+    let mut reader =
+        BufReader::new(stream.try_clone().map_err(|e| format!("socket clone: {e}"))?);
+    let mut writer = stream;
+    writeln!(writer, "{{\"id\": 1, \"op\": \"stats\"}}").map_err(|e| format!("send: {e}"))?;
+    writer.flush().map_err(|e| format!("send: {e}"))?;
+    let mut resp = String::new();
+    reader.read_line(&mut resp).map_err(|e| format!("recv: {e}"))?;
+    let r = Json::parse(resp.trim()).map_err(|e| format!("stats response: {e}"))?;
+    if r.get("ok").and_then(Json::as_bool) != Some(true) {
+        return Err(format!("stats request failed: {}", resp.trim()));
+    }
+    let stages = r
+        .get("result")
+        .and_then(|v| v.get("stages"))
+        .and_then(Json::as_array)
+        .ok_or("stats response missing `stages`")?;
+    let mut rows = Vec::with_capacity(stages.len());
+    for s in stages {
+        let field = |k: &str| s.get(k).and_then(Json::as_u64).unwrap_or(0);
+        rows.push((
+            s.get("span").and_then(Json::as_str).unwrap_or("?").to_string(),
+            crate::telemetry::Snapshot {
+                count: field("count"),
+                sum_us: field("total_us"),
+                max_us: field("max_us"),
+                p50_us: field("p50_us"),
+                p90_us: field("p90_us"),
+                p99_us: field("p99_us"),
+            },
+        ));
+    }
+    Ok(format!("per-stage latency from {path}\n\n{}", render_stage_table(&rows)))
+}
+
+#[cfg(not(unix))]
+fn stats_from_socket(_path: &str) -> Result<String, String> {
+    Err("--socket is only available on Unix platforms".into())
+}
+
 /// `tytra serve` — the long-running sweep service: one JSON request per
 /// line on stdin (or a Unix socket), one response per line on stdout.
 /// Holds a single warm [`Session`] (with the persistent cache attached,
@@ -548,7 +732,10 @@ fn cmd_search(cli: &Cli) -> Result<String, String> {
 /// `coordinator::serve` for the protocol.
 fn cmd_serve(cli: &Cli) -> Result<String, String> {
     let cfg = sweep_config(cli)?;
-    let session = build_session(&cfg, true)?;
+    // A traced service records every request's pipeline stages plus the
+    // serve lifecycle (accept/parse/dispatch/respond) into one stream,
+    // written when the service exits.
+    let (session, trace) = attach_tracer(&cfg, build_session(&cfg, true)?);
     let timeout = std::time::Duration::from_millis(cfg.serve_timeout_ms.max(1));
     let idle = match cfg.serve_idle_timeout_ms {
         0 => None, // 0 = idle connections stay open forever
@@ -558,6 +745,7 @@ fn cmd_serve(cli: &Cli) -> Result<String, String> {
         Some(path) => serve_on_socket(&session, Path::new(path), timeout, idle)?,
         None => crate::coordinator::serve::run_stdio(&session, timeout)?,
     };
+    write_trace(&trace)?;
     Ok(format!("served {served} request(s)\n{}", session.metrics().summary()))
 }
 
@@ -994,6 +1182,71 @@ mod tests {
     fn client_requires_a_socket() {
         let e = dispatch(&args("client")).unwrap_err();
         assert!(e.contains("--socket"), "{e}");
+    }
+
+    #[test]
+    fn telemetry_flags_parse() {
+        let c = Cli::parse(&args("sweep builtin:simple --trace /tmp/t.ldjson --validate")).unwrap();
+        assert_eq!(c.flag("trace"), Some("/tmp/t.ldjson"));
+        assert!(c.has("validate"));
+        assert!(Cli::parse(&args("sweep --trace")).is_err(), "--trace needs a value");
+        assert!(usage().contains("stats"));
+        assert!(usage().contains("--trace"));
+    }
+
+    #[test]
+    fn sweep_validate_reports_estimate_vs_simulation() {
+        let argv = args(
+            "sweep builtin:simple --jobs 2 --max-lanes 2 --max-dv 2 --validate --seed 3",
+        );
+        let out = dispatch(&argv).unwrap();
+        assert!(out.contains("validated sweep (seed 3)"), "{out}");
+        assert!(out.contains("sim cycles"), "{out}");
+        assert!(out.contains("pipe×1"), "{out}");
+        // …and the JSON face shares serve's schema, byte-stable.
+        let argv = args(
+            "sweep builtin:simple --jobs 2 --max-lanes 2 --max-dv 2 --validate --seed 3 --json",
+        );
+        let a = dispatch(&argv).unwrap();
+        assert!(a.contains("\"validated\": true"), "{a}");
+        assert!(a.contains("\"sim_cycles_per_pass\""), "{a}");
+        assert_eq!(a, dispatch(&argv).unwrap());
+    }
+
+    #[test]
+    fn sweep_trace_flag_writes_a_parseable_ldjson_stream() {
+        use crate::util::json::Json;
+        let path = std::env::temp_dir()
+            .join(format!("tytra-cli-trace-{}.ldjson", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // --jobs 1 keeps the executor inline: the trace is exactly the
+        // pipeline stages, 3 per enumerated point.
+        let argv = args(&format!(
+            "sweep builtin:simple --jobs 1 --max-lanes 2 --max-dv 2 --trace {}",
+            path.display()
+        ));
+        dispatch(&argv).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 6 * 3, "{text}");
+        for line in text.lines() {
+            let j = Json::parse(line).unwrap_or_else(|e| panic!("{e}: {line}"));
+            assert!(j.get("span").and_then(Json::as_str).is_some(), "{line}");
+            assert!(j.get("dur_us").and_then(Json::as_u64).is_some(), "{line}");
+        }
+        for span in ["lower_point", "estimate", "walls"] {
+            assert!(text.contains(&format!("\"span\": \"{span}\"")), "{span} missing:\n{text}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stats_command_renders_the_stage_table() {
+        let out = dispatch(&args("stats builtin:simple --jobs 2 --max-lanes 2 --max-dv 2")).unwrap();
+        assert!(out.contains("lower_point"), "{out}");
+        assert!(out.contains("estimate"), "{out}");
+        assert!(out.contains("simulate"), "{out}");
+        assert!(out.contains("p99 µs"), "{out}");
+        assert!(out.contains("exec_run"), "{out}");
     }
 
     #[test]

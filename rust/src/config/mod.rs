@@ -32,6 +32,11 @@ pub struct Config {
     /// a connection whose next request doesn't arrive in time is closed
     /// gracefully. `0` disables the timeout.
     pub serve_idle_timeout_ms: u64,
+    /// LDJSON trace output path (`--trace` / `trace.path`): when set,
+    /// sweep/search/serve commands run under a session-wide
+    /// [`crate::telemetry::Tracer`] and write the event stream here on
+    /// exit. `None` (the default) disables tracing entirely.
+    pub trace_path: Option<String>,
 }
 
 impl Default for Config {
@@ -46,6 +51,7 @@ impl Default for Config {
             cache_budget_bytes: crate::coordinator::DiskCache::DEFAULT_BUDGET_BYTES,
             serve_timeout_ms: 10_000,
             serve_idle_timeout_ms: 300_000,
+            trace_path: None,
         }
     }
 }
@@ -119,6 +125,10 @@ impl Config {
                     self.serve_idle_timeout_ms =
                         get_int(v, "serve.idle_timeout_ms")?.max(0) as u64;
                 }
+                "trace.path" => {
+                    self.trace_path =
+                        Some(v.as_str().ok_or("`trace.path` must be a string")?.to_string());
+                }
                 other => return Err(format!("unknown config key `{other}`")),
             }
         }
@@ -182,6 +192,14 @@ mod tests {
         assert!(Config::from_str("[cache]\ndir = 3").is_err());
         assert!(Config::from_str("[serve]\ntimeout_ms = \"fast\"").is_err());
         assert!(Config::from_str("[serve]\nidle_timeout_ms = \"never\"").is_err());
+    }
+
+    #[test]
+    fn parses_trace_path() {
+        let c = Config::from_str("[trace]\npath = \"/tmp/trace.ldjson\"\n").unwrap();
+        assert_eq!(c.trace_path.as_deref(), Some("/tmp/trace.ldjson"));
+        assert_eq!(Config::default().trace_path, None);
+        assert!(Config::from_str("[trace]\npath = 3").is_err());
     }
 
     #[test]

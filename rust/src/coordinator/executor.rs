@@ -43,6 +43,11 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::telemetry::{
+    Histogram, TraceEvent, Tracer, SPAN_EXEC_ENQUEUE, SPAN_EXEC_RUN, SPAN_EXEC_STEAL,
+};
 
 /// A unit of work: boxed, owned, runs once on some worker.
 pub type Task = Box<dyn FnOnce() + Send + 'static>;
@@ -75,6 +80,21 @@ struct Inner {
     steals: AtomicU64,
     panicked: AtomicU64,
     depth_max: AtomicU64,
+    /// Wall time of every job body run through `map` (queued *and*
+    /// inline) — the executor's own latency histogram, surfaced as the
+    /// `exec_run` stage by `Session::stage_stats`.
+    run_hist: Histogram,
+    /// Optional trace sink for scheduling events (enqueue/steal/run).
+    /// Set through [`Executor::set_tracer`]; last setter wins — the
+    /// executor is session-wide, so per-request tracers deliberately do
+    /// NOT attach here (their events would interleave across clients).
+    tracer: Mutex<Option<Arc<Tracer>>>,
+}
+
+impl Inner {
+    fn trace_handle(&self) -> Option<Arc<Tracer>> {
+        self.tracer.lock().unwrap().clone()
+    }
 }
 
 /// The sharded work-stealing executor. Long-lived: workers are spawned
@@ -112,6 +132,8 @@ impl Executor {
             steals: AtomicU64::new(0),
             panicked: AtomicU64::new(0),
             depth_max: AtomicU64::new(0),
+            run_hist: Histogram::new(),
+            tracer: Mutex::new(None),
         });
         let mut handles = Vec::new();
         if workers > 1 {
@@ -145,6 +167,19 @@ impl Executor {
             jobs_panicked: self.inner.panicked.load(Ordering::Relaxed),
             queue_depth_max: self.inner.depth_max.load(Ordering::Relaxed),
         }
+    }
+
+    /// Latency histogram of every job body run through `map`.
+    pub fn run_histogram(&self) -> &Histogram {
+        &self.inner.run_hist
+    }
+
+    /// Attach (or detach, with `None`) a trace sink for scheduling
+    /// events. Session-wide like the executor itself; at 1 worker the
+    /// inline fast path stays silent so single-threaded traces contain
+    /// only pipeline stages (the byte-stability mode in CI).
+    pub fn set_tracer(&self, t: Option<Arc<Tracer>>) {
+        *self.inner.tracer.lock().unwrap() = t;
     }
 
     /// Submit one task to the shard `hint % workers`, blocking while
@@ -191,10 +226,17 @@ impl Executor {
             return Vec::new();
         }
         if self.workers == 1 || n == 1 {
-            // Inline: no threads, no queue traffic, same isolation.
+            // Inline: no threads, no queue traffic, same isolation. The
+            // run histogram still fills (stats work at --jobs 1) but no
+            // scheduling trace events fire — nothing was scheduled.
             return items
                 .iter()
-                .map(|it| run_isolated(&f, it, || label(it), &self.inner.panicked))
+                .map(|it| {
+                    let t_run = Instant::now();
+                    let r = run_isolated(&f, it, || label(it), &self.inner.panicked);
+                    self.inner.run_hist.record_us(t_run.elapsed().as_micros() as u64);
+                    r
+                })
                 .collect();
         }
 
@@ -208,16 +250,44 @@ impl Executor {
             done: Condvar::new(),
         });
         let f = Arc::new(f);
+        let tracer = self.inner.trace_handle();
         let start = self.rr.fetch_add(1, Ordering::Relaxed);
         for (i, item) in items.into_iter().enumerate() {
             let lbl = label(&item);
+            // Trace context is only materialised when a tracer is
+            // attached — the untraced hot path pays nothing but the
+            // `Option` check.
+            let run_trace = tracer.as_ref().map(|t| (Arc::clone(t), lbl.clone()));
+            let enq_lbl = tracer.as_ref().map(|_| lbl.clone());
             let f = Arc::clone(&f);
             let inbox = Arc::clone(&inbox);
-            let panicked = Arc::clone(&self.inner);
+            let shared = Arc::clone(&self.inner);
+            let t_enq = Instant::now();
             self.submit(
                 start.wrapping_add(i),
                 Box::new(move || {
-                    let r = run_isolated(f.as_ref(), &item, move || lbl, &panicked.panicked);
+                    let t_run = Instant::now();
+                    let r = run_isolated(f.as_ref(), &item, move || lbl, &shared.panicked);
+                    let dur_us = t_run.elapsed().as_micros() as u64;
+                    shared.run_hist.record_us(dur_us);
+                    if let Some((t, job)) = run_trace {
+                        // `run_isolated` formats panics as "job `…`
+                        // panicked: …" — the trace outcome keys off it.
+                        let outcome = match &r {
+                            Ok(_) => "ok",
+                            Err(e) if e.contains("` panicked: ") => "panicked",
+                            Err(_) => "err",
+                        };
+                        t.record(TraceEvent {
+                            span: SPAN_EXEC_RUN,
+                            kernel: String::new(),
+                            label: job,
+                            recipe: String::new(),
+                            outcome: outcome.to_string(),
+                            dur_us,
+                            parent: "exec".to_string(),
+                        });
+                    }
                     let mut g = inbox.slots.lock().unwrap();
                     g.0[i] = Some(r);
                     g.1 += 1;
@@ -226,6 +296,18 @@ impl Executor {
                     }
                 }),
             );
+            if let (Some(t), Some(job)) = (&tracer, enq_lbl) {
+                // Duration = how long `submit` blocked on backpressure.
+                t.record(TraceEvent {
+                    span: SPAN_EXEC_ENQUEUE,
+                    kernel: String::new(),
+                    label: job,
+                    recipe: String::new(),
+                    outcome: "queued".to_string(),
+                    dur_us: t_enq.elapsed().as_micros() as u64,
+                    parent: "exec".to_string(),
+                });
+            }
         }
         let mut g = inbox.slots.lock().unwrap();
         while g.1 < n {
@@ -283,31 +365,47 @@ pub(crate) fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
 /// back of the next non-empty shard, else sleep on the `work` condvar.
 fn worker_loop(inner: &Inner, me: usize, n: usize) {
     loop {
-        let task = {
+        let (task, stolen_from) = {
             let mut st = inner.state.lock().unwrap();
             loop {
                 if let Some(t) = st.deques[me].pop_front() {
                     st.queued -= 1;
-                    break Some(t);
+                    break (Some(t), None);
                 }
                 let mut stolen = None;
                 for k in 1..n {
-                    if let Some(t) = st.deques[(me + k) % n].pop_back() {
-                        stolen = Some(t);
+                    let victim = (me + k) % n;
+                    if let Some(t) = st.deques[victim].pop_back() {
+                        stolen = Some((t, victim));
                         break;
                     }
                 }
-                if let Some(t) = stolen {
+                if let Some((t, victim)) = stolen {
                     st.queued -= 1;
                     inner.steals.fetch_add(1, Ordering::Relaxed);
-                    break Some(t);
+                    break (Some(t), Some(victim));
                 }
                 if st.shutdown {
-                    break None;
+                    break (None, None);
                 }
                 st = inner.work.wait(st).unwrap();
             }
         };
+        if let Some(victim) = stolen_from {
+            // Recorded outside the state lock: a steal is rare and the
+            // tracer has its own (short) lock.
+            if let Some(t) = inner.trace_handle() {
+                t.record(TraceEvent {
+                    span: SPAN_EXEC_STEAL,
+                    kernel: String::new(),
+                    label: format!("w{me}<-w{victim}"),
+                    recipe: String::new(),
+                    outcome: "stolen".to_string(),
+                    dur_us: 0,
+                    parent: "exec".to_string(),
+                });
+            }
+        }
         match task {
             Some(t) => {
                 // A slot freed up: wake one blocked submitter, then run
@@ -467,6 +565,57 @@ mod tests {
                 j.join().expect("client thread");
             }
         });
+    }
+
+    #[test]
+    fn tracer_records_scheduling_events_and_the_run_histogram_fills() {
+        let ex = Executor::new(4);
+        let tr = Arc::new(Tracer::with_fake_clock(true));
+        ex.set_tracer(Some(tr.clone()));
+        let out = ex.map((0..20).collect(), |i| format!("#{i}"), |&x: &i32| Ok(x));
+        assert!(out.iter().all(|r| r.is_ok()));
+        let lines = ex.run_histogram().count();
+        assert_eq!(lines, 20, "every job body lands in the run histogram");
+        let events = tr.render_events();
+        let enq = events.iter().filter(|l| l.contains("\"exec_enqueue\"")).count();
+        let run = events.iter().filter(|l| l.contains("\"exec_run\"")).count();
+        assert_eq!(enq, 20, "one enqueue event per job");
+        assert_eq!(run, 20, "one run event per job");
+        assert!(events.iter().filter(|l| l.contains("\"exec_run\"")).all(|l| l.contains("\"ok\"")));
+    }
+
+    #[test]
+    fn inline_map_fills_the_histogram_but_stays_trace_silent() {
+        let ex = Executor::new(1);
+        let tr = Arc::new(Tracer::with_fake_clock(true));
+        ex.set_tracer(Some(tr.clone()));
+        let out = ex.map(vec![1, 2, 3], |i| format!("#{i}"), |&x: &i32| Ok(x));
+        assert_eq!(out.len(), 3);
+        assert_eq!(ex.run_histogram().count(), 3);
+        assert!(tr.is_empty(), "inline path schedules nothing, so it traces nothing");
+    }
+
+    #[test]
+    fn panicking_traced_job_reports_a_panicked_outcome() {
+        let ex = Executor::new(2);
+        let tr = Arc::new(Tracer::with_fake_clock(true));
+        ex.set_tracer(Some(tr.clone()));
+        let out = ex.map(
+            (0..8).collect(),
+            |i| format!("p{i}"),
+            |&x: &i32| {
+                if x == 5 {
+                    panic!("boom");
+                }
+                Ok(x)
+            },
+        );
+        assert!(out[5].is_err());
+        let events = tr.render_events();
+        assert!(
+            events.iter().any(|l| l.contains("\"exec_run\"") && l.contains("\"panicked\"") && l.contains("\"p5\"")),
+            "panic must surface as an exec_run outcome: {events:#?}"
+        );
     }
 
     #[test]

@@ -34,6 +34,10 @@ use crate::dse::{self, Exploration, SweepLimits};
 use crate::estimator::{self, CostDb, Estimate};
 use crate::frontend::{self, DesignPoint, KernelDef, LoweredKernel};
 use crate::sim;
+use crate::telemetry::{
+    self, TraceEvent, Tracer, SPAN_CACHE_PROBE, SPAN_ESTIMATE, SPAN_LOWER, SPAN_SEARCH_CANDIDATE,
+    SPAN_SIMULATE, SPAN_WALLS,
+};
 use crate::tir::Module;
 use crate::transform;
 use crate::util::ContentHash;
@@ -55,7 +59,19 @@ pub struct Session {
     xforms: Arc<transform::Memo>,
     disk: Option<Arc<DiskCache>>,
     metrics: Arc<Metrics>,
+    tracer: Option<Arc<Tracer>>,
     db: &'static CostDb,
+}
+
+/// The identity fields every stage event of one point job shares.
+/// Materialised once per job, and only when the session has a tracer —
+/// the untraced path allocates nothing for it.
+#[derive(Clone)]
+struct TraceCtx {
+    kernel: String,
+    label: String,
+    recipe: String,
+    parent: String,
 }
 
 impl Default for Session {
@@ -109,8 +125,69 @@ impl Session {
             xforms: Arc::new(transform::Memo::new()),
             disk: None,
             metrics: Arc::new(Metrics::new()),
+            tracer: None,
             db: estimator::shared_cost_db(),
         }
+    }
+
+    /// Attach a session-wide trace sink: every stage of every job run
+    /// through this handle (and, because the executor is shared, the
+    /// executor's scheduling events) records a [`TraceEvent`]. Used by
+    /// the CLI's `--trace` / the `trace.path` config key.
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Session {
+        self.exec.set_tracer(Some(tracer.clone()));
+        self.tracer = Some(tracer);
+        self
+    }
+
+    /// A clone of this session tracing into `tracer`, *without*
+    /// attaching it to the shared executor — the per-request form serve
+    /// uses for `"trace": true`, so one client's trace never interleaves
+    /// another client's scheduling events.
+    pub fn with_request_tracer(&self, tracer: Arc<Tracer>) -> Session {
+        let mut s = self.clone();
+        s.tracer = Some(tracer);
+        s
+    }
+
+    /// The attached trace sink, if any.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
+    }
+
+    /// Per-stage latency snapshots in pipeline order (the `stats` op /
+    /// `tytra stats` surface): the metrics' stage histograms plus the
+    /// executor's own job-body histogram as `exec_run`.
+    pub fn stage_stats(&self) -> Vec<(&'static str, telemetry::Snapshot)> {
+        let mut v: Vec<(&'static str, telemetry::Snapshot)> =
+            self.metrics.stages.named().iter().map(|(n, h)| (*n, h.snapshot())).collect();
+        v.push((telemetry::SPAN_EXEC_RUN, self.exec.run_histogram().snapshot()));
+        v
+    }
+
+    /// Build the per-job trace context — `None` when untraced.
+    fn trace_ctx(&self, kernel: &str, point: DesignPoint, dev: &Device, scope: &str) -> Option<TraceCtx> {
+        self.tracer.as_ref()?;
+        Some(TraceCtx {
+            kernel: kernel.to_string(),
+            label: point.label(),
+            recipe: point.transforms.name(),
+            parent: format!("{scope}:{}", dev.name),
+        })
+    }
+
+    /// Record one stage event against a job's context (no-op untraced).
+    fn emit(&self, ctx: &Option<TraceCtx>, span: &'static str, outcome: impl Into<String>, dur_us: u64) {
+        let (Some(t), Some(c)) = (&self.tracer, ctx) else { return };
+        t.record(TraceEvent {
+            span,
+            kernel: c.kernel.clone(),
+            label: c.label.clone(),
+            recipe: c.recipe.clone(),
+            outcome: outcome.into(),
+            dur_us,
+            parent: c.parent.clone(),
+        });
     }
 
     /// The same session with a persistent on-disk estimate cache
@@ -225,7 +302,7 @@ impl Session {
             candidates.push(r?);
         }
         let expl = dse::assemble(candidates, dev);
-        self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
+        self.metrics.sweep_time_us.add(t0.elapsed().as_micros() as u64);
         self.metrics.sweeps.inc();
         self.sync_exec_stats();
         Ok(expl)
@@ -317,9 +394,23 @@ impl Session {
         dev: &Device,
     ) -> Result<dse::Candidate, String> {
         self.metrics.jobs.inc();
-        if let Some(entry) = self.probe_entry(key_src, point, dev) {
+        let ctx = self.trace_ctx(&lk.kernel.name, point, dev, "sweep");
+        // Stage 1 (disk-attached sessions only): the planner's probe.
+        let planned = if self.disk.is_some() {
+            let sp = self.metrics.stages.span(SPAN_CACHE_PROBE);
+            let entry = self.probe_entry(key_src, point, dev);
+            let dur = sp.finish();
+            self.emit(&ctx, SPAN_CACHE_PROBE, if entry.is_some() { "hit" } else { "miss" }, dur);
+            entry
+        } else {
+            None
+        };
+        if let Some(entry) = planned {
             self.metrics.planner_skipped_lowering.inc();
+            let sp = self.metrics.stages.span(SPAN_WALLS);
             let walls = dse::walls::check_with_bytes(entry.bytes_per_workgroup, &entry.estimate, dev);
+            let dur = sp.finish();
+            self.emit(&ctx, SPAN_WALLS, if walls.feasible() { "feasible" } else { "infeasible" }, dur);
             return Ok(dse::Candidate {
                 point: entry.realised,
                 module: None,
@@ -327,18 +418,32 @@ impl Session {
                 walls,
             });
         }
-        let module = self.lower_memoised(lk, point)?;
+        // Stage 2: per-point lowering.
+        let sp = self.metrics.stages.span(SPAN_LOWER);
+        let module = self.lower_memoised(lk, point);
+        let dur = sp.finish();
+        self.emit(&ctx, SPAN_LOWER, if module.is_ok() { "ok" } else { "err" }, dur);
+        let module = module?;
         // Same normalisation as `dse::evaluate_lowered`: a degenerate
         // chained point realises the unchained module and must be
         // keyed/labelled as such (the cache then also short-circuits the
         // duplicate estimate).
         let realised = frontend::lower::realised_point(&module, point);
+        // Stage 3: the estimate, through the session cache.
         let ck = key(key_src, &realised.label(), &dev.name);
+        let sp = self.metrics.stages.span(SPAN_ESTIMATE);
         let estimate = self
             .cache
-            .get_or_insert_with(ck, || estimator::estimate_with_db(&module, dev, self.db))?;
+            .get_or_insert_with(ck, || estimator::estimate_with_db(&module, dev, self.db));
+        let dur = sp.finish();
+        self.emit(&ctx, SPAN_ESTIMATE, if estimate.is_ok() { "ok" } else { "err" }, dur);
+        let estimate = estimate?;
+        // Stage 4: the resource-wall feasibility check.
+        let sp = self.metrics.stages.span(SPAN_WALLS);
         let bytes = dse::walls::bytes_per_workgroup(&module);
         let walls = dse::walls::check_with_bytes(bytes, &estimate, dev);
+        let dur = sp.finish();
+        self.emit(&ctx, SPAN_WALLS, if walls.feasible() { "feasible" } else { "infeasible" }, dur);
         self.store_entry(
             key_src,
             &point,
@@ -378,29 +483,67 @@ impl Session {
             move |&point| {
                 let dev = &dev_job;
                 sess.metrics.jobs.inc();
-                let planned = sess.probe_entry(&key_src, point, dev);
-                let module = sess.lower_memoised(&lk, point)?;
+                let ctx = sess.trace_ctx(&lk.kernel.name, point, dev, "validate");
+                let planned = if sess.disk.is_some() {
+                    let sp = sess.metrics.stages.span(SPAN_CACHE_PROBE);
+                    let entry = sess.probe_entry(&key_src, point, dev);
+                    let dur = sp.finish();
+                    sess.emit(&ctx, SPAN_CACHE_PROBE, if entry.is_some() { "hit" } else { "miss" }, dur);
+                    entry
+                } else {
+                    None
+                };
+                let sp = sess.metrics.stages.span(SPAN_LOWER);
+                let module = sess.lower_memoised(&lk, point);
+                let dur = sp.finish();
+                sess.emit(&ctx, SPAN_LOWER, if module.is_ok() { "ok" } else { "err" }, dur);
+                let module = module?;
                 let realised = frontend::lower::realised_point(&module, point);
+                // The estimate stage fires whether it runs live or
+                // replays a planned entry ("planned" outcome) — the
+                // per-point stage count stays exact either way.
+                let planned_hit = planned.is_some();
+                let sp = sess.metrics.stages.span(SPAN_ESTIMATE);
                 let estimate = match planned {
-                    Some(entry) => entry.estimate,
+                    Some(entry) => Ok(entry.estimate),
                     None => {
                         let ck = key(&key_src, &realised.label(), &dev.name);
-                        let estimate = sess
+                        let est = sess
                             .cache
-                            .get_or_insert_with(ck, || estimator::estimate_with_db(&module, dev, sess.db))?;
-                        let bytes = dse::walls::bytes_per_workgroup(&module);
-                        sess.store_entry(
-                            &key_src,
-                            &point,
-                            dev,
-                            &Entry { estimate: estimate.clone(), realised, bytes_per_workgroup: bytes },
-                        );
-                        estimate
+                            .get_or_insert_with(ck, || estimator::estimate_with_db(&module, dev, sess.db));
+                        if let Ok(estimate) = &est {
+                            let bytes = dse::walls::bytes_per_workgroup(&module);
+                            sess.store_entry(
+                                &key_src,
+                                &point,
+                                dev,
+                                &Entry {
+                                    estimate: estimate.clone(),
+                                    realised,
+                                    bytes_per_workgroup: bytes,
+                                },
+                            );
+                        }
+                        est
                     }
                 };
-                let compiled = sess.compiled_kernel(&module)?;
-                let w = sim::Workload::random_for(&module, seed);
-                let r = sim::simulate_compiled(&compiled, dev, &w)?;
+                let dur = sp.finish();
+                let outcome = match (&estimate, planned_hit) {
+                    (Err(_), _) => "err",
+                    (Ok(_), true) => "planned",
+                    (Ok(_), false) => "ok",
+                };
+                sess.emit(&ctx, SPAN_ESTIMATE, outcome, dur);
+                let estimate = estimate?;
+                let sp = sess.metrics.stages.span(SPAN_SIMULATE);
+                let r = (|| {
+                    let compiled = sess.compiled_kernel(&module)?;
+                    let w = sim::Workload::random_for(&module, seed);
+                    sim::simulate_compiled(&compiled, dev, &w)
+                })();
+                let dur = sp.finish();
+                sess.emit(&ctx, SPAN_SIMULATE, if r.is_ok() { "ok" } else { "err" }, dur);
+                let r = r?;
                 Ok(ValidatedPoint {
                     point: realised,
                     estimate,
@@ -421,7 +564,7 @@ impl Session {
                 out.push(v);
             }
         }
-        self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
+        self.metrics.sweep_time_us.add(t0.elapsed().as_micros() as u64);
         self.metrics.sweeps.inc();
         self.sync_exec_stats();
         Ok(out)
@@ -455,12 +598,18 @@ impl Session {
         let w0 = sim::Workload::random_for(&m0, cfg.seed);
         let golden = Arc::new(sim::simulate_compiled(&self.compiled_kernel(&m0)?, dev, &w0)?.mems);
         let seed = cfg.seed;
+        // Generation attribution for the trace: each evaluator batch is
+        // one `search:g<N>` scope (g0 = baseline, g1 = named, g2.. =
+        // beam generations — the engine's batch order).
+        let generation = std::sync::atomic::AtomicUsize::new(0);
         let report = transform::search::search(cfg, |batch| {
             let sess = self.clone();
             let lk = lk.clone();
             let key_src = key_src.clone();
             let dev_job = dev.clone();
             let golden = golden.clone();
+            let scope =
+                format!("search:g{}", generation.fetch_add(1, std::sync::atomic::Ordering::Relaxed));
             let results = self.exec.map(
                 batch.to_vec(),
                 |r| format!("search {r}"),
@@ -468,40 +617,91 @@ impl Session {
                     let dev = &dev_job;
                     sess.metrics.jobs.inc();
                     let point = DesignPoint { transforms: recipe, ..base };
-                    let planned = sess.probe_entry(&key_src, point, dev);
-                    let module = sess.lower_memoised(&lk, point)?;
-                    let realised = frontend::lower::realised_point(&module, point);
-                    let estimate = match planned {
-                        Some(entry) => entry.estimate,
-                        None => {
-                            let ck = key(&key_src, &realised.label(), &dev.name);
-                            let estimate = sess.cache.get_or_insert_with(ck, || {
-                                estimator::estimate_with_db(&module, dev, sess.db)
-                            })?;
-                            let bytes = dse::walls::bytes_per_workgroup(&module);
-                            sess.store_entry(
-                                &key_src,
-                                &point,
-                                dev,
-                                &Entry { estimate: estimate.clone(), realised, bytes_per_workgroup: bytes },
+                    let ctx = sess.trace_ctx(&lk.kernel.name, point, dev, &scope);
+                    let cand = sess.metrics.stages.span(SPAN_SEARCH_CANDIDATE);
+                    let out = (|| {
+                        let planned = if sess.disk.is_some() {
+                            let sp = sess.metrics.stages.span(SPAN_CACHE_PROBE);
+                            let entry = sess.probe_entry(&key_src, point, dev);
+                            let dur = sp.finish();
+                            sess.emit(
+                                &ctx,
+                                SPAN_CACHE_PROBE,
+                                if entry.is_some() { "hit" } else { "miss" },
+                                dur,
                             );
-                            estimate
+                            entry
+                        } else {
+                            None
+                        };
+                        let sp = sess.metrics.stages.span(SPAN_LOWER);
+                        let module = sess.lower_memoised(&lk, point);
+                        let dur = sp.finish();
+                        sess.emit(&ctx, SPAN_LOWER, if module.is_ok() { "ok" } else { "err" }, dur);
+                        let module = module?;
+                        let realised = frontend::lower::realised_point(&module, point);
+                        let planned_hit = planned.is_some();
+                        let sp = sess.metrics.stages.span(SPAN_ESTIMATE);
+                        let estimate = match planned {
+                            Some(entry) => Ok(entry.estimate),
+                            None => {
+                                let ck = key(&key_src, &realised.label(), &dev.name);
+                                let est = sess.cache.get_or_insert_with(ck, || {
+                                    estimator::estimate_with_db(&module, dev, sess.db)
+                                });
+                                if let Ok(estimate) = &est {
+                                    let bytes = dse::walls::bytes_per_workgroup(&module);
+                                    sess.store_entry(
+                                        &key_src,
+                                        &point,
+                                        dev,
+                                        &Entry {
+                                            estimate: estimate.clone(),
+                                            realised,
+                                            bytes_per_workgroup: bytes,
+                                        },
+                                    );
+                                }
+                                est
+                            }
+                        };
+                        let dur = sp.finish();
+                        let outcome = match (&estimate, planned_hit) {
+                            (Err(_), _) => "err",
+                            (Ok(_), true) => "planned",
+                            (Ok(_), false) => "ok",
+                        };
+                        sess.emit(&ctx, SPAN_ESTIMATE, outcome, dur);
+                        let estimate = estimate?;
+                        let bytes = dse::walls::bytes_per_workgroup(&module);
+                        let walls = dse::walls::check_with_bytes(bytes, &estimate, dev);
+                        let sp = sess.metrics.stages.span(SPAN_SIMULATE);
+                        let r = (|| {
+                            let compiled = sess.compiled_kernel(&module)?;
+                            let w = sim::Workload::random_for(&module, seed);
+                            sim::simulate_compiled(&compiled, dev, &w)
+                        })();
+                        let dur = sp.finish();
+                        sess.emit(&ctx, SPAN_SIMULATE, if r.is_ok() { "ok" } else { "err" }, dur);
+                        let r = r?;
+                        if r.mems != *golden {
+                            return Ok(None);
                         }
+                        Ok(Some(transform::search::Scored::from_parts(
+                            recipe,
+                            realised.label(),
+                            &estimate,
+                            &walls,
+                        )))
+                    })();
+                    let dur = cand.finish();
+                    let outcome = match &out {
+                        Ok(Some(_)) => "scored",
+                        Ok(None) => "rejected:output-mismatch",
+                        Err(_) => "err",
                     };
-                    let bytes = dse::walls::bytes_per_workgroup(&module);
-                    let walls = dse::walls::check_with_bytes(bytes, &estimate, dev);
-                    let compiled = sess.compiled_kernel(&module)?;
-                    let w = sim::Workload::random_for(&module, seed);
-                    let r = sim::simulate_compiled(&compiled, dev, &w)?;
-                    if r.mems != *golden {
-                        return Ok(None);
-                    }
-                    Ok(Some(transform::search::Scored::from_parts(
-                        recipe,
-                        realised.label(),
-                        &estimate,
-                        &walls,
-                    )))
+                    sess.emit(&ctx, SPAN_SEARCH_CANDIDATE, outcome, dur);
+                    out
                 },
             );
             let mut out = Vec::with_capacity(results.len());
@@ -512,7 +712,7 @@ impl Session {
         })?;
         self.metrics.searches.inc();
         self.metrics.search_scored.add(report.scored as u64);
-        self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
+        self.metrics.sweep_time_us.add(t0.elapsed().as_micros() as u64);
         self.sync_exec_stats();
         Ok(report)
     }
@@ -565,7 +765,7 @@ impl Session {
         // Record wall time for the fan-out unconditionally, and surface
         // any job failure *before* counting sweeps — a failed batch must
         // not leave `sweeps` advanced for half its cells.
-        self.metrics.sweep_time.add(t0.elapsed().as_micros() as u64);
+        self.metrics.sweep_time_us.add(t0.elapsed().as_micros() as u64);
         self.sync_exec_stats();
         let mut flat = Vec::with_capacity(results.len());
         for r in results {
@@ -998,5 +1198,89 @@ mod tests {
         assert_eq!(again.winner.evaluated.label, pooled.winner.evaluated.label);
         assert_eq!(session.metrics().sim_compiles.get(), compiles, "no new compiles warm");
         assert_eq!(session.metrics().searches.get(), 2);
+    }
+
+    /// Acceptance pin: two traced runs of the same sweep under the fake
+    /// clock are byte-identical LDJSON with zero dropped events — the
+    /// event count is exactly points × stages (estimate-only sweep, no
+    /// disk: lower_point + estimate + walls = 3 per point).
+    #[test]
+    fn traced_sweep_is_byte_stable_with_points_times_stages_events() {
+        let src = simple_kernel_source();
+        let k = parse_kernel(src).unwrap();
+        let dev = Device::stratix4();
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
+        let mut streams = Vec::new();
+        for _ in 0..2 {
+            let tracer = Arc::new(Tracer::with_fake_clock(true));
+            // 1 worker: inline executor, so no scheduling events — the
+            // trace contains only the per-point pipeline stages.
+            let session = Session::new(1).with_tracer(tracer.clone());
+            session.explore(src, &k, &dev, &limits).unwrap();
+            assert_eq!(tracer.len(), 6 * 3, "6 points × (lower, estimate, walls)");
+            streams.push(tracer.render_ldjson());
+        }
+        assert_eq!(streams[0], streams[1], "fake-clock traces must be byte-identical");
+        for line in streams[0].lines() {
+            let j = crate::util::json::Json::parse(line).expect("every trace line is JSON");
+            for key in ["ts_us", "span", "kernel", "label", "recipe", "outcome", "dur_us", "parent"] {
+                assert!(j.get(key).is_some(), "missing {key} in {line}");
+            }
+            assert_eq!(j.get("kernel").and_then(crate::util::json::Json::as_str), Some("simple"));
+            assert_eq!(
+                j.get("parent").and_then(crate::util::json::Json::as_str),
+                Some("sweep:StratixIV-EP4SGX230")
+            );
+        }
+        for span in ["\"lower_point\"", "\"estimate\"", "\"walls\""] {
+            assert_eq!(streams[0].matches(span).count(), 6, "{span} once per point");
+        }
+    }
+
+    #[test]
+    fn stage_histograms_fill_for_a_validated_sweep() {
+        let k = parse_kernel(simple_kernel_source()).unwrap();
+        let dev = Device::stratix4();
+        let limits = SweepLimits { max_lanes: 2, max_dv: 2, ..SweepLimits::default() };
+        let session = Session::new(4);
+        session.validate_sweep(&k, &dev, &limits, 7).unwrap();
+        let stats = session.stage_stats();
+        for stage in ["lower_point", "estimate", "simulate", "exec_run"] {
+            let (_, s) = stats.iter().find(|(n, _)| *n == stage).unwrap();
+            assert_eq!(s.count, 6, "{stage}: one sample per enumerated point");
+            assert!(s.p50_us <= s.p90_us && s.p90_us <= s.p99_us && s.p99_us <= s.max_us, "{stage}: {s:?}");
+        }
+        let (_, probe) = stats.iter().find(|(n, _)| *n == "cache_probe").unwrap();
+        assert_eq!(probe.count, 0, "no disk cache attached, so no probe stage");
+        // Estimate-only sweeps leave simulate untouched but fill walls.
+        let (_, walls) = stats.iter().find(|(n, _)| *n == "walls").unwrap();
+        assert_eq!(walls.count, 0, "validated sweeps skip the wall stage");
+    }
+
+    #[test]
+    fn traced_search_reports_candidate_outcomes_per_generation() {
+        let k = parse_kernel(
+            "kernel sx { in x, w, b : ui18[64]\nout y : ui18[64]\n\
+             for n in 0..64 { y[n] = x[n] * w[n] + b[n] } }",
+        )
+        .unwrap();
+        let dev = Device::stratix4();
+        let cfg = transform::search::SearchConfig { beam_width: 2, max_len: 2, seed: 7 };
+        let tracer = Arc::new(Tracer::with_fake_clock(true));
+        let session = Session::new(1).with_tracer(tracer.clone());
+        let report = session.search_recipes(&k, &dev, &cfg).unwrap();
+        let events = tracer.render_events();
+        let candidates: Vec<&String> =
+            events.iter().filter(|l| l.contains("\"search_candidate\"")).collect();
+        assert_eq!(candidates.len(), report.scored, "one candidate event per scored pipeline");
+        assert!(candidates.iter().all(|l| l.contains("\"scored\"") || l.contains("\"rejected:")));
+        // Generation scopes: baseline batch is g0, named g1, beams g2…
+        assert!(events.iter().any(|l| l.contains("\"search:g0:StratixIV-EP4SGX230\"")), "{events:#?}");
+        assert!(events.iter().any(|l| l.contains("\"search:g2:StratixIV-EP4SGX230\"")));
+        assert_eq!(
+            session.metrics().stages.search_candidate.count(),
+            report.scored as u64,
+            "candidate histogram matches the engine's submission count"
+        );
     }
 }

@@ -1,7 +1,15 @@
 //! Lightweight counters for the coordination layer (atomic; no external
-//! metrics crate in the offline image).
+//! metrics crate in the offline image), plus — since the telemetry
+//! layer — the per-stage latency histograms ([`telemetry::StageTimes`])
+//! that say *where* the counted work spent its time.
+//!
+//! Unit convention: every time-valued counter carries a `_us` suffix
+//! and holds **microseconds**; conversions happen only at render time,
+//! where the label names the rendered unit (`avg_sweep_ms=`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::telemetry::StageTimes;
 
 /// A monotonically increasing counter.
 #[derive(Debug, Default)]
@@ -36,7 +44,7 @@ pub struct Metrics {
     /// Sweeps completed.
     pub sweeps: Counter,
     /// Total sweep wall time, microseconds.
-    pub sweep_time: Counter,
+    pub sweep_time_us: Counter,
     /// Batched simulation kernels compiled (`KernelCache` misses).
     pub sim_compiles: Counter,
     /// Compiled-kernel cache hits (a hit skips the whole compile).
@@ -78,6 +86,10 @@ pub struct Metrics {
     /// Executor: jobs that panicked and were isolated into per-point
     /// errors (mirrored from `ExecStats`).
     pub jobs_panicked: Counter,
+    /// Per-stage latency histograms (lower/estimate/simulate/…):
+    /// always-on, lock-free, rendered by the `stats` op and
+    /// `tytra stats`.
+    pub stages: StageTimes,
 }
 
 impl Metrics {
@@ -90,10 +102,10 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let sweeps = self.sweeps.get().max(1);
         let mut s = format!(
-            "jobs={} sweeps={} avg_sweep={:.1}ms sim_compiles={} sim_cache_hits={}",
+            "jobs={} sweeps={} avg_sweep_ms={:.1} sim_compiles={} sim_cache_hits={}",
             self.jobs.get(),
             self.sweeps.get(),
-            self.sweep_time.get() as f64 / sweeps as f64 / 1000.0,
+            self.sweep_time_us.get() as f64 / sweeps as f64 / 1000.0,
             self.sim_compiles.get(),
             self.sim_cache_hits.get()
         );
@@ -112,12 +124,15 @@ impl Metrics {
         if mf + mp + mm > 0 {
             s.push_str(&format!(" memo_full={mf} memo_partial={mp} memo_miss={mm}"));
         }
-        if self.planner_skipped_lowering.get() > 0 {
-            s.push_str(&format!(
-                " lowerings={} planner_skipped={}",
-                self.lowerings.get(),
-                self.planner_skipped_lowering.get()
-            ));
+        // `lowerings=` appears whenever any point went through the
+        // frontend *or* the planner replayed one from disk — a cold
+        // sweep reports its lowering count, a warm sweep its zero.
+        // `planner_skipped=` stays gated on actual skips.
+        if self.lowerings.get() + self.planner_skipped_lowering.get() > 0 {
+            s.push_str(&format!(" lowerings={}", self.lowerings.get()));
+            if self.planner_skipped_lowering.get() > 0 {
+                s.push_str(&format!(" planner_skipped={}", self.planner_skipped_lowering.get()));
+            }
         }
         if self.searches.get() > 0 {
             s.push_str(&format!(
@@ -147,9 +162,12 @@ mod tests {
         let m = Metrics::new();
         m.jobs.inc();
         m.jobs.inc();
-        m.sweep_time.add(1500);
+        m.sweep_time_us.add(1500);
         assert_eq!(m.jobs.get(), 2);
         assert!(m.summary().contains("jobs=2"));
+        // µs counter, ms label: the unit lives in the label, not a bare
+        // `avg_sweep=` that leaves the reader guessing.
+        assert!(m.summary().contains("avg_sweep_ms=1.5"), "{}", m.summary());
         m.sim_compiles.inc();
         m.sim_cache_hits.add(3);
         assert!(m.summary().contains("sim_compiles=1 sim_cache_hits=3"));
@@ -180,9 +198,11 @@ mod tests {
         assert!(!m.summary().contains("planner_skipped"));
         assert!(!m.summary().contains("steals"));
         m.lowerings.add(4);
-        // lowerings alone (every live sweep) keeps the line unchanged;
-        // only an actual planner skip switches the section on
-        assert!(!m.summary().contains("lowerings"), "{}", m.summary());
+        // A cold sweep (lowerings, no skips) reports its lowering count
+        // without a planner_skipped field…
+        assert!(m.summary().contains("lowerings=4"), "{}", m.summary());
+        assert!(!m.summary().contains("planner_skipped"), "{}", m.summary());
+        // …and skips switch the gated field on alongside it.
         m.planner_skipped_lowering.add(2);
         assert!(m.summary().contains("lowerings=4 planner_skipped=2"), "{}", m.summary());
         m.steals.set_max(3);

@@ -16,7 +16,8 @@
 //! {"id": 1, "op": "sweep", "kernels": ["builtin:simple"], "devices": ["stratix4"], "max_lanes": 4}
 //! {"id": 2, "op": "ping"}
 //! {"id": 3, "op": "metrics"}
-//! {"id": 4, "op": "shutdown"}
+//! {"id": 4, "op": "stats"}
+//! {"id": 5, "op": "shutdown"}
 //! ```
 //!
 //! Responses are `{"id": …, "ok": true, "result": …}` or
@@ -28,6 +29,23 @@
 //! `chain`, `reduce`, `transforms` — plus `validate` (bool) and `seed`
 //! to run the full estimate-and-simulate sweep
 //! ([`Session::validate_sweep`]) instead of estimation only.
+//!
+//! ## Telemetry
+//!
+//! `stats` answers with the session's per-stage latency snapshots
+//! (count and p50/p90/p99/max µs per pipeline stage — the live surface
+//! behind `tytra stats`), and `metrics` carries the same snapshots
+//! under a `histograms` key next to the flat counters. A sweep request
+//! with `"trace": true` runs under a **per-request** tracer
+//! ([`Session::with_request_tracer`] — deliberately not attached to
+//! the shared executor, so one client's trace never captures another
+//! client's scheduling events) and returns the stage-level
+//! [`crate::telemetry::TraceEvent`]s inline as a `trace` array in the
+//! result. When the *service* itself was started with `--trace`, the
+//! session-wide tracer additionally records the request lifecycle:
+//! `serve_accept` per connection, `serve_parse`/`serve_dispatch` per
+//! request (parented on the request `id`), `serve_respond` per written
+//! response.
 //!
 //! ## Concurrency
 //!
@@ -61,14 +79,18 @@
 
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
-use std::time::Duration;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use super::jobs::BatchResult;
 use super::Session;
 use crate::device::Device;
 use crate::dse::SweepLimits;
 use crate::frontend::KernelDef;
+use crate::telemetry::{
+    TraceEvent, Tracer, SPAN_SERVE_ACCEPT, SPAN_SERVE_DISPATCH, SPAN_SERVE_PARSE,
+    SPAN_SERVE_RESPOND,
+};
 use crate::util::json::{escape, Json};
 
 /// SIGTERM latch: set from the signal handler, checked at request
@@ -130,9 +152,18 @@ pub fn serve_lines<R: BufRead, W: Write>(
         if line.trim().is_empty() {
             continue;
         }
-        let (resp, shutdown) = handle_request(session, &line, timeout);
+        let (resp, shutdown, id) = handle_request_traced(session, &line, timeout);
+        let t_write = Instant::now();
         writeln!(out, "{resp}").map_err(|e| format!("response stream: {e}"))?;
         let _ = out.flush();
+        serve_event(
+            session,
+            SPAN_SERVE_RESPOND,
+            &id,
+            "",
+            "written",
+            t_write.elapsed().as_micros() as u64,
+        );
         served += 1;
         if shutdown {
             break;
@@ -165,18 +196,20 @@ pub fn run_socket(
 ) -> Result<u64, String> {
     use std::os::unix::net::UnixListener;
     use std::sync::atomic::AtomicU64;
-    use std::sync::Arc;
     install_sigterm();
     let _ = std::fs::remove_file(path);
     let listener =
         UnixListener::bind(path).map_err(|e| format!("socket {}: {e}", path.display()))?;
     let served = Arc::new(AtomicU64::new(0));
     let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut accepted = 0u64;
     for conn in listener.incoming() {
         if term_requested() {
             break;
         }
         let conn = conn.map_err(|e| format!("accept: {e}"))?;
+        serve_event(session, SPAN_SERVE_ACCEPT, "serve", &format!("conn-{accepted}"), "ok", 0);
+        accepted += 1;
         if let Some(idle) = idle {
             // A failed setsockopt only loses the idle kick, never the
             // connection.
@@ -207,18 +240,90 @@ pub fn run_socket(
     Ok(served.load(Ordering::Relaxed))
 }
 
+/// Record one request-lifecycle [`TraceEvent`] against the session's
+/// tracer (no-op when the service runs untraced). Lifecycle events
+/// carry no kernel/recipe — their `parent` is the request `id` (or
+/// `"serve"` for accepts) and their `label` the op or connection.
+fn serve_event(
+    session: &Session,
+    span: &'static str,
+    parent: &str,
+    label: &str,
+    outcome: &str,
+    dur_us: u64,
+) {
+    let Some(t) = session.tracer() else { return };
+    t.record(TraceEvent {
+        span,
+        kernel: String::new(),
+        label: label.to_string(),
+        recipe: String::new(),
+        outcome: outcome.to_string(),
+        dur_us,
+        parent: parent.to_string(),
+    });
+}
+
 /// Handle one request line. Never panics and never returns a non-JSON
 /// line; the boolean says whether the client asked the service to shut
 /// down.
 pub fn handle_request(session: &Session, line: &str, timeout: Duration) -> (String, bool) {
-    let req = match Json::parse(line) {
+    let (resp, shutdown, _id) = handle_request_traced(session, line, timeout);
+    (resp, shutdown)
+}
+
+/// [`handle_request`] plus the rendered request `id` — the transport
+/// loops need the id to parent their `serve_respond` events. Records
+/// the whole handle into the `serve_request` stage histogram and, when
+/// the session is traced, `serve_parse`/`serve_dispatch` events.
+fn handle_request_traced(
+    session: &Session,
+    line: &str,
+    timeout: Duration,
+) -> (String, bool, String) {
+    let whole = session.metrics().stages.span("serve_request");
+    let t_parse = Instant::now();
+    let parsed = Json::parse(line);
+    let parse_us = t_parse.elapsed().as_micros() as u64;
+    let req = match parsed {
         Ok(v) => v,
-        Err(e) => return (respond_err("null", &format!("bad request: {e}")), false),
+        Err(e) => {
+            serve_event(session, SPAN_SERVE_PARSE, "null", "", "err", parse_us);
+            whole.finish();
+            return (respond_err("null", &format!("bad request: {e}")), false, "null".into());
+        }
     };
     let id = id_of(&req);
-    let op = match req.get("op").and_then(Json::as_str) {
+    let op = req.get("op").and_then(Json::as_str).map(str::to_string);
+    serve_event(session, SPAN_SERVE_PARSE, &id, op.as_deref().unwrap_or(""), "ok", parse_us);
+    let t_dispatch = Instant::now();
+    let (resp, shutdown) = dispatch(session, &req, op.as_deref(), &id, timeout);
+    let outcome = if resp.contains("\"ok\": true") { "ok" } else { "err" };
+    serve_event(
+        session,
+        SPAN_SERVE_DISPATCH,
+        &id,
+        op.as_deref().unwrap_or(""),
+        outcome,
+        t_dispatch.elapsed().as_micros() as u64,
+    );
+    whole.finish();
+    (resp, shutdown, id)
+}
+
+/// Route a parsed request to its op handler.
+fn dispatch(
+    session: &Session,
+    req: &Json,
+    op: Option<&str>,
+    id: &str,
+    timeout: Duration,
+) -> (String, bool) {
+    let op = match op {
         Some(op) => op.to_string(),
-        None => return (respond_err(&id, "missing `op` (sweep|ping|metrics|shutdown)"), false),
+        None => {
+            return (respond_err(id, "missing `op` (sweep|ping|metrics|stats|shutdown)"), false)
+        }
     };
     match op.as_str() {
         "ping" => (format!("{{\"id\": {id}, \"ok\": true, \"result\": \"pong\"}}"), false),
@@ -226,6 +331,13 @@ pub fn handle_request(session: &Session, line: &str, timeout: Duration) -> (Stri
             format!(
                 "{{\"id\": {id}, \"ok\": true, \"result\": {}}}",
                 metrics_json(session)
+            ),
+            false,
+        ),
+        "stats" => (
+            format!(
+                "{{\"id\": {id}, \"ok\": true, \"result\": {}}}",
+                stats_json(session)
             ),
             false,
         ),
@@ -237,6 +349,7 @@ pub fn handle_request(session: &Session, line: &str, timeout: Duration) -> (Stri
             // cannot wedge the loop past the timeout. The session clone
             // shares all caches, so even an abandoned sweep warms them.
             let worker = session.clone();
+            let req = req.clone();
             let (tx, rx) = mpsc::channel();
             std::thread::spawn(move || {
                 let _ = tx.send(op_sweep(&worker, &req));
@@ -245,14 +358,14 @@ pub fn handle_request(session: &Session, line: &str, timeout: Duration) -> (Stri
                 Ok(Ok(result)) => {
                     (format!("{{\"id\": {id}, \"ok\": true, \"result\": {result}}}"), false)
                 }
-                Ok(Err(e)) => (respond_err(&id, &e), false),
+                Ok(Err(e)) => (respond_err(id, &e), false),
                 Err(_) => (
-                    respond_err(&id, &format!("timeout after {}ms", timeout.as_millis())),
+                    respond_err(id, &format!("timeout after {}ms", timeout.as_millis())),
                     false,
                 ),
             }
         }
-        other => (respond_err(&id, &format!("unknown op `{other}`")), false),
+        other => (respond_err(id, &format!("unknown op `{other}`")), false),
     }
 }
 
@@ -272,15 +385,41 @@ fn respond_err(id: &str, msg: &str) -> String {
     format!("{{\"id\": {id}, \"ok\": false, \"error\": \"{}\"}}", escape(msg))
 }
 
+/// One stage snapshot as a JSON object body (shared by `stats` and the
+/// `metrics` histograms — one schema, two surfaces).
+fn snapshot_fields(s: &crate::telemetry::Snapshot) -> String {
+    format!(
+        "\"count\": {}, \"p50_us\": {}, \"p90_us\": {}, \"p99_us\": {}, \"max_us\": {}, \
+         \"total_us\": {}",
+        s.count, s.p50_us, s.p90_us, s.p99_us, s.max_us, s.sum_us
+    )
+}
+
+/// The `stats` op body: every stage histogram snapshot in pipeline
+/// order (the same rows `tytra stats` renders as a table).
+fn stats_json(session: &Session) -> String {
+    let stages: Vec<String> = session
+        .stage_stats()
+        .iter()
+        .map(|(name, s)| format!("{{\"span\": \"{name}\", {}}}", snapshot_fields(s)))
+        .collect();
+    format!("{{\"stages\": [{}]}}", stages.join(", "))
+}
+
 fn metrics_json(session: &Session) -> String {
     let m = session.metrics();
+    let histograms: Vec<String> = session
+        .stage_stats()
+        .iter()
+        .map(|(name, s)| format!("\"{name}\": {{{}}}", snapshot_fields(s)))
+        .collect();
     format!(
         "{{\"summary\": \"{}\", \"jobs\": {}, \"sweeps\": {}, \"sim_compiles\": {}, \
          \"sim_cache_hits\": {}, \"disk_hits\": {}, \"disk_misses\": {}, \
          \"cache_recovered\": {}, \"memo_full\": {}, \"memo_partial\": {}, \"memo_miss\": {}, \
          \"lowerings\": {}, \"planner_skipped_lowering\": {}, \"searches\": {}, \
          \"search_scored\": {}, \"steals\": {}, \
-         \"queue_depth_max\": {}, \"jobs_panicked\": {}}}",
+         \"queue_depth_max\": {}, \"jobs_panicked\": {}, \"histograms\": {{{}}}}}",
         escape(&m.summary()),
         m.jobs.get(),
         m.sweeps.get(),
@@ -298,7 +437,8 @@ fn metrics_json(session: &Session) -> String {
         m.search_scored.get(),
         m.steals.get(),
         m.queue_depth_max.get(),
-        m.jobs_panicked.get()
+        m.jobs_panicked.get(),
+        histograms.join(", ")
     )
 }
 
@@ -355,8 +495,24 @@ pub fn render_search_json(
 /// Execute a `sweep` request: resolve kernels/devices/limits from the
 /// request body, run the batched exploration (or, with
 /// `"validate": true`, the estimate-and-simulate sweep), render the
-/// result compacted to one line.
+/// result compacted to one line. With `"trace": true` the sweep runs
+/// under a per-request tracer and the result grows a `trace` array of
+/// stage events (this client's pipeline stages only — scheduling
+/// events stay out by construction, see [`Session::with_request_tracer`]).
 fn op_sweep(session: &Session, req: &Json) -> Result<String, String> {
+    let tracer = if req.get("trace").and_then(Json::as_bool).unwrap_or(false) {
+        Some(Arc::new(Tracer::new()))
+    } else {
+        None
+    };
+    let traced_session;
+    let session = match &tracer {
+        Some(t) => {
+            traced_session = session.with_request_tracer(Arc::clone(t));
+            &traced_session
+        }
+        None => session,
+    };
     let specs: Vec<String> = req
         .get("kernels")
         .and_then(Json::as_array)
@@ -403,27 +559,34 @@ fn op_sweep(session: &Session, req: &Json) -> Result<String, String> {
         limits.include_transforms = true;
     }
 
-    if req.get("validate").and_then(Json::as_bool).unwrap_or(false) {
+    let mut result = if req.get("validate").and_then(Json::as_bool).unwrap_or(false) {
         let seed = req.get("seed").and_then(Json::as_u64).unwrap_or(42);
-        return op_validate(session, &kernels, &devices, &limits, seed);
+        render_validate_json(session, &kernels, &devices, &limits, seed)?
+    } else {
+        let cells = session.explore_batch(&kernels, &devices, &limits)?;
+        let rendered = render_sweep_json(&kernels, &devices, &limits, &cells);
+        // Compact the pretty block onto one line for LDJSON framing (no
+        // string in the schema contains a newline, so this is lossless).
+        rendered.lines().map(str::trim).collect::<Vec<_>>().join(" ")
+    };
+    if let Some(t) = &tracer {
+        // Splice the stage events into the result object: every
+        // rendered event line is itself a JSON object, so joining them
+        // makes a well-formed array.
+        debug_assert!(result.ends_with('}'));
+        result.truncate(result.len() - 1);
+        result.push_str(&format!(", \"trace\": [{}]}}", t.render_events().join(", ")));
     }
-
-    let cells = session.explore_batch(&kernels, &devices, &limits)?;
-    let rendered = render_sweep_json(&kernels, &devices, &limits, &cells);
-    // Compact the pretty block onto one line for LDJSON framing (no
-    // string in the schema contains a newline, so this is lossless).
-    Ok(rendered
-        .lines()
-        .map(str::trim)
-        .collect::<Vec<_>>()
-        .join(" "))
+    Ok(result)
 }
 
 /// Execute a validated sweep request: every point lowered, estimated
 /// *and* simulated ([`Session::validate_sweep`]) per (kernel × device)
 /// cell, reporting estimate-vs-actual per realised point. Deterministic
-/// for a fixed seed, so repeated requests are byte-identical.
-fn op_validate(
+/// for a fixed seed, so repeated requests are byte-identical. Shared
+/// with `tytra sweep --validate --json`, so CLI and service speak one
+/// schema.
+pub(crate) fn render_validate_json(
     session: &Session,
     kernels: &[(String, KernelDef)],
     devices: &[Device],
@@ -614,6 +777,80 @@ mod tests {
         // deterministic for a fixed seed: repeat is byte-identical
         let (b, _) = handle_request(&session, req, T);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stats_op_reports_per_stage_histograms_after_a_validated_sweep() {
+        let session = Session::new(2);
+        let sweep = "{\"id\": 1, \"op\": \"sweep\", \"kernels\": [\"builtin:simple\"], \
+                     \"max_lanes\": 2, \"max_dv\": 2, \"validate\": true, \"seed\": 3}";
+        let (resp, _) = handle_request(&session, sweep, T);
+        assert!(resp.contains("\"ok\": true"), "{resp}");
+        let (resp, _) = handle_request(&session, "{\"id\": 2, \"op\": \"stats\"}", T);
+        let r = Json::parse(&resp).unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+        let stages = r.get("result").unwrap().get("stages").and_then(Json::as_array).unwrap();
+        for want in ["lower_point", "estimate", "simulate"] {
+            let s = stages
+                .iter()
+                .find(|s| s.get("span").and_then(Json::as_str) == Some(want))
+                .unwrap_or_else(|| panic!("missing {want} in {resp}"));
+            assert_eq!(s.get("count").and_then(Json::as_u64), Some(6), "{want}: {resp}");
+            assert!(s.get("p50_us").and_then(Json::as_u64).is_some(), "{want}: {resp}");
+            assert!(s.get("p99_us").and_then(Json::as_u64).is_some(), "{want}: {resp}");
+        }
+        // `metrics` carries the same snapshots under `histograms`.
+        let (resp, _) = handle_request(&session, "{\"id\": 3, \"op\": \"metrics\"}", T);
+        let r = Json::parse(&resp).unwrap();
+        let hist = r.get("result").unwrap().get("histograms").unwrap();
+        assert_eq!(
+            hist.get("simulate").and_then(|h| h.get("count")).and_then(Json::as_u64),
+            Some(6),
+            "{resp}"
+        );
+    }
+
+    #[test]
+    fn traced_sweep_request_returns_inline_stage_events() {
+        let session = Session::new(2);
+        let req = "{\"id\": 7, \"op\": \"sweep\", \"kernels\": [\"builtin:simple\"], \
+                   \"max_lanes\": 2, \"max_dv\": 2, \"trace\": true}";
+        let (resp, _) = handle_request(&session, req, T);
+        let r = Json::parse(&resp).unwrap();
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+        let trace = r.get("result").unwrap().get("trace").and_then(Json::as_array).unwrap();
+        // Estimate-only sweep, no disk cache: lower + estimate + walls
+        // per enumerated point.
+        assert_eq!(trace.len(), 6 * 3, "{resp}");
+        for ev in trace {
+            assert_eq!(ev.get("kernel").and_then(Json::as_str), Some("simple"));
+            assert!(ev.get("span").and_then(Json::as_str).is_some());
+            assert!(ev.get("parent").and_then(Json::as_str).unwrap().starts_with("sweep:"));
+        }
+        // The per-request tracer dies with the request: an untraced
+        // repeat answers without a trace key.
+        let untraced = "{\"id\": 8, \"op\": \"sweep\", \"kernels\": [\"builtin:simple\"], \
+                        \"max_lanes\": 2, \"max_dv\": 2}";
+        let (resp, _) = handle_request(&session, untraced, T);
+        let r = Json::parse(&resp).unwrap();
+        assert!(r.get("result").unwrap().get("trace").is_none(), "{resp}");
+    }
+
+    #[test]
+    fn service_level_tracer_records_the_request_lifecycle() {
+        let tracer = Arc::new(Tracer::with_fake_clock(true));
+        let session = Session::new(1).with_tracer(tracer.clone());
+        let input = "{\"id\": 1, \"op\": \"ping\"}\nnot json\n";
+        let mut out = Vec::new();
+        serve_lines(&session, Cursor::new(input.to_string()), &mut out, T).unwrap();
+        let text = tracer.render_ldjson();
+        assert!(text.contains("\"serve_parse\""), "{text}");
+        assert!(text.contains("\"serve_dispatch\""), "{text}");
+        assert!(text.contains("\"serve_respond\""), "{text}");
+        // The malformed second line still parses (with an err outcome)
+        // and still gets a response event.
+        assert!(text.contains("\"err\""), "{text}");
+        assert_eq!(session.metrics().stages.get("serve_request").count(), 2);
     }
 
     #[test]

@@ -41,6 +41,10 @@
 //!   models from `artifacts/` and cross-checks the simulator's
 //!   functional output.
 //! * [`device`] — FPGA device descriptions (Stratix-IV-like targets).
+//! * [`telemetry`] — structured observability: span-scoped log2 latency
+//!   histograms (p50/p90/p99/max, lock-free) embedded in the
+//!   coordinator's metrics, plus the byte-stable LDJSON trace stream
+//!   behind `--trace` and serve's `stats` op.
 //!
 //! See `DESIGN.md` for the experiment index mapping every table/figure of
 //! the paper to a module and bench, and `EXPERIMENTS.md` for results.
@@ -59,6 +63,7 @@ pub mod kernels;
 pub mod runtime;
 pub mod sim;
 pub mod synth;
+pub mod telemetry;
 pub mod tir;
 pub mod transform;
 pub mod util;

@@ -1,0 +1,257 @@
+//! Fixed-bucket log2 latency histograms.
+//!
+//! A [`Histogram`] is 32 power-of-two buckets of `AtomicU64`: bucket 0
+//! holds 0 µs samples, bucket *i* (for *i* ≥ 1) holds durations in
+//! `[2^(i-1), 2^i)` µs, and the top bucket absorbs everything ≥ 2^30 µs
+//! (~18 minutes — far beyond any stage this estimator runs). Recording
+//! is three relaxed atomic ops, so worker threads share one histogram
+//! with no lock and no per-worker buffers: the atomic buckets *are* the
+//! lock-free merge. Quantiles are read back from the cumulative bucket
+//! counts and reported as the matched bucket's inclusive upper bound
+//! (clamped to the observed max), which makes them deterministic
+//! functions of the bucket counts — coarse by design, but stable enough
+//! to pin in tests and cheap enough to run always-on.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log2 buckets. 2^31 µs ≈ 36 min is the implied ceiling;
+/// every stage in the pipeline is microseconds-to-seconds.
+pub const BUCKETS: usize = 32;
+
+/// A lock-free log2 latency histogram (durations in microseconds).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+/// A consistent point-in-time copy of a histogram, with the headline
+/// quantiles precomputed from the copied bucket counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Snapshot {
+    /// Samples recorded (sum of the copied buckets).
+    pub count: u64,
+    /// Total recorded time, µs.
+    pub sum_us: u64,
+    /// Largest single sample, µs.
+    pub max_us: u64,
+    /// Median (bucket upper bound, clamped to `max_us`).
+    pub p50_us: u64,
+    /// 90th percentile.
+    pub p90_us: u64,
+    /// 99th percentile.
+    pub p99_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index for a duration: 0 for 0 µs, otherwise the bit length of
+/// the value (so bucket i covers `[2^(i-1), 2^i)`), clamped to the top
+/// bucket.
+fn bucket_index(us: u64) -> usize {
+    if us == 0 {
+        0
+    } else {
+        ((64 - us.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of a bucket, for quantile read-back.
+fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+impl Histogram {
+    /// Fresh empty histogram.
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one duration. Lock-free; safe from any number of threads.
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total recorded time, µs.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Largest single sample, µs.
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Raw bucket counts (test/inspection surface).
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Fold another histogram into this one (used when aggregating a
+    /// per-scope histogram into a longer-lived one). Atomic adds on both
+    /// sides: concurrent recording into either histogram loses nothing.
+    pub fn merge_from(&self, other: &Histogram) {
+        for i in 0..BUCKETS {
+            let n = other.buckets[i].load(Ordering::Relaxed);
+            if n > 0 {
+                self.buckets[i].fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum_us.fetch_add(other.sum_us(), Ordering::Relaxed);
+        self.max_us.fetch_max(other.max_us(), Ordering::Relaxed);
+    }
+
+    /// Copy the buckets once and derive count + p50/p90/p99 from that
+    /// copy, so the reported quantiles are consistent with the reported
+    /// count even while other threads keep recording.
+    pub fn snapshot(&self) -> Snapshot {
+        let buckets = self.bucket_counts();
+        let count: u64 = buckets.iter().sum();
+        let max_us = self.max_us();
+        Snapshot {
+            count,
+            sum_us: self.sum_us(),
+            max_us,
+            p50_us: quantile(&buckets, count, 0.50, max_us),
+            p90_us: quantile(&buckets, count, 0.90, max_us),
+            p99_us: quantile(&buckets, count, 0.99, max_us),
+        }
+    }
+}
+
+/// Quantile from cumulative bucket counts: the upper bound of the first
+/// bucket whose cumulative count reaches `ceil(q·total)`, clamped to
+/// the observed max so a single-sample histogram reports the sample.
+fn quantile(buckets: &[u64; BUCKETS], total: u64, q: f64, max_us: u64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, &n) in buckets.iter().enumerate() {
+        cum += n;
+        if cum >= target {
+            return bucket_upper(i).min(max_us);
+        }
+    }
+    max_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s, Snapshot { count: 0, sum_us: 0, max_us: 0, p50_us: 0, p90_us: 0, p99_us: 0 });
+    }
+
+    #[test]
+    fn bucket_boundaries_are_log2() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_read_back_bucket_upper_bounds() {
+        let h = Histogram::new();
+        for us in 1..=100 {
+            h.record_us(us);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.sum_us, 5050);
+        assert_eq!(s.max_us, 100);
+        // Cumulative counts: 1,3,7,15,31,63 — the 50th sample lands in
+        // bucket 6 ([32,63]), and the 99th in bucket 7, clamped to max.
+        assert_eq!(s.p50_us, 63);
+        assert_eq!(s.p90_us, 100);
+        assert_eq!(s.p99_us, 100);
+    }
+
+    #[test]
+    fn single_sample_reports_itself_at_every_quantile() {
+        let h = Histogram::new();
+        h.record_us(37);
+        let s = h.snapshot();
+        assert_eq!((s.p50_us, s.p90_us, s.p99_us, s.max_us), (37, 37, 37, 37));
+    }
+
+    #[test]
+    fn merge_from_matches_a_combined_replay() {
+        let (a, b, both) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for us in [0, 1, 5, 17, 900, 70_000] {
+            a.record_us(us);
+            both.record_us(us);
+        }
+        for us in [3, 3, 3, 2_000_000] {
+            b.record_us(us);
+            both.record_us(us);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.bucket_counts(), both.bucket_counts());
+        assert_eq!(a.snapshot(), both.snapshot());
+    }
+
+    /// Satellite: 8 threads recording into ONE histogram lose no
+    /// samples, and the bucket counts equal a sequential replay of the
+    /// same values (mirrors `metrics::tests::counters_are_sync`).
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let shared = Arc::new(Histogram::new());
+        let mut handles = Vec::new();
+        for t in 0u64..8 {
+            let h = shared.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0u64..1000 {
+                    h.record_us(t * 1000 + i);
+                }
+            }));
+        }
+        for jh in handles {
+            jh.join().unwrap();
+        }
+        let replay = Histogram::new();
+        for t in 0u64..8 {
+            for i in 0u64..1000 {
+                replay.record_us(t * 1000 + i);
+            }
+        }
+        assert_eq!(shared.count(), 8000);
+        assert_eq!(shared.bucket_counts(), replay.bucket_counts());
+        assert_eq!(shared.snapshot(), replay.snapshot());
+    }
+}

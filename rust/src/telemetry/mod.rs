@@ -1,0 +1,197 @@
+//! Structured observability for the DSE service: span-scoped latency
+//! **histograms** plus a structured LDJSON **trace stream** — the layer
+//! that turns "how many jobs ran" (the flat counters in
+//! `coordinator::metrics`) into "where the time went per point".
+//!
+//! Zero-dependency and std-only, like everything else in the crate:
+//!
+//! * [`Histogram`] — 32 log2 buckets of `AtomicU64` with p50/p90/p99/max
+//!   read-back; recording is lock-free, so every worker thread writes
+//!   straight into the shared per-stage histogram (the atomics *are*
+//!   the merge).
+//! * [`StageTimes`] — the named per-stage histograms embedded in
+//!   `Metrics`; [`StageTimes::span`] hands out an RAII [`Span`] guard
+//!   that records its wall time on drop (or via [`Span::finish`], which
+//!   also returns the duration for a trace event).
+//! * [`Tracer`]/[`TraceEvent`] — the buffered trace stream behind
+//!   `--trace <path>`, the `trace.path` config key and serve's
+//!   `"trace": true`, rendered as byte-stable LDJSON under the
+//!   `TYTRA_FAKE_CLOCK=1` fake clock (see `trace` module docs).
+//!
+//! The span taxonomy (EXPERIMENTS.md §Observability documents it in
+//! full): sweep planning `cache_probe → lower_point → estimate → walls
+//! (→ simulate)`, search `search_candidate` (scored/rejected + reason),
+//! serve lifecycle `serve_accept → serve_parse → serve_dispatch →
+//! serve_respond`, executor scheduling `exec_enqueue → exec_steal →
+//! exec_run`.
+
+pub mod histogram;
+pub mod trace;
+
+pub use histogram::{Histogram, Snapshot, BUCKETS};
+pub use trace::{fake_clock_from_env, TraceEvent, Tracer};
+
+use std::time::Instant;
+
+/// Span names — the trace stream and the per-stage histograms share
+/// this taxonomy.
+pub const SPAN_CACHE_PROBE: &str = "cache_probe";
+/// Per-point lowering (through the transform memo).
+pub const SPAN_LOWER: &str = "lower_point";
+/// TyBEC estimate (through the session estimate cache).
+pub const SPAN_ESTIMATE: &str = "estimate";
+/// Resource-wall feasibility check.
+pub const SPAN_WALLS: &str = "walls";
+/// Batched simulation of a realised module.
+pub const SPAN_SIMULATE: &str = "simulate";
+/// One beam-search candidate, end to end.
+pub const SPAN_SEARCH_CANDIDATE: &str = "search_candidate";
+/// One serve connection accepted.
+pub const SPAN_SERVE_ACCEPT: &str = "serve_accept";
+/// Request line parsed into JSON.
+pub const SPAN_SERVE_PARSE: &str = "serve_parse";
+/// Request dispatched to its op handler.
+pub const SPAN_SERVE_DISPATCH: &str = "serve_dispatch";
+/// Response written back to the client.
+pub const SPAN_SERVE_RESPOND: &str = "serve_respond";
+/// Job pushed onto an executor shard (duration = submit back-pressure).
+pub const SPAN_EXEC_ENQUEUE: &str = "exec_enqueue";
+/// Job executed on a worker (panic-isolated).
+pub const SPAN_EXEC_RUN: &str = "exec_run";
+/// Worker stole a job from another shard.
+pub const SPAN_EXEC_STEAL: &str = "exec_steal";
+
+/// The per-stage latency histograms that ride along inside `Metrics`.
+/// One histogram per pipeline stage; `other` is the catch-all a
+/// [`StageTimes::span`] call with an unknown name records into, so no
+/// sample is ever silently dropped.
+#[derive(Debug, Default)]
+pub struct StageTimes {
+    /// Persistent-cache probe (only counted when a disk cache is attached).
+    pub cache_probe: Histogram,
+    /// Per-point lowering.
+    pub lower_point: Histogram,
+    /// Estimate (session-cache hits record their — tiny — lookup time too).
+    pub estimate: Histogram,
+    /// Wall feasibility check.
+    pub walls: Histogram,
+    /// Batched simulation.
+    pub simulate: Histogram,
+    /// One search candidate end to end.
+    pub search_candidate: Histogram,
+    /// One serve request, parse to response string.
+    pub serve_request: Histogram,
+    /// Catch-all for unknown span names.
+    pub other: Histogram,
+}
+
+impl StageTimes {
+    /// The stages in pipeline order, for rendering.
+    pub fn named(&self) -> [(&'static str, &Histogram); 8] {
+        [
+            (SPAN_CACHE_PROBE, &self.cache_probe),
+            (SPAN_LOWER, &self.lower_point),
+            (SPAN_ESTIMATE, &self.estimate),
+            (SPAN_WALLS, &self.walls),
+            (SPAN_SIMULATE, &self.simulate),
+            (SPAN_SEARCH_CANDIDATE, &self.search_candidate),
+            ("serve_request", &self.serve_request),
+            ("other", &self.other),
+        ]
+    }
+
+    /// Histogram for a span name (`other` when unknown).
+    pub fn get(&self, span: &str) -> &Histogram {
+        match span {
+            SPAN_CACHE_PROBE => &self.cache_probe,
+            SPAN_LOWER => &self.lower_point,
+            SPAN_ESTIMATE => &self.estimate,
+            SPAN_WALLS => &self.walls,
+            SPAN_SIMULATE => &self.simulate,
+            SPAN_SEARCH_CANDIDATE => &self.search_candidate,
+            "serve_request" => &self.serve_request,
+            _ => &self.other,
+        }
+    }
+
+    /// RAII span guard: `let _sp = metrics.stages.span("lower_point");`
+    /// records the guarded scope's wall time into the named stage's
+    /// histogram when the guard drops (or on [`Span::finish`]).
+    pub fn span(&self, name: &str) -> Span<'_> {
+        span(self.get(name))
+    }
+}
+
+/// An in-flight span: started at construction, recorded on drop.
+pub struct Span<'a> {
+    hist: &'a Histogram,
+    start: Instant,
+}
+
+/// Start a span against an explicit histogram.
+pub fn span(hist: &Histogram) -> Span<'_> {
+    Span { hist, start: Instant::now() }
+}
+
+impl Span<'_> {
+    /// Wall time so far, µs (does not record).
+    pub fn elapsed_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    /// End the span now, record it, and return its duration — the
+    /// variant trace-event call sites use, since they need the number.
+    pub fn finish(self) -> u64 {
+        let us = self.elapsed_us();
+        self.hist.record_us(us);
+        std::mem::forget(self);
+        us
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        self.hist.record_us(self.start.elapsed().as_micros() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_guard_records_on_drop() {
+        let stages = StageTimes::default();
+        {
+            let _sp = stages.span(SPAN_LOWER);
+        }
+        assert_eq!(stages.lower_point.count(), 1);
+        assert_eq!(stages.estimate.count(), 0);
+    }
+
+    #[test]
+    fn finish_records_once_and_returns_the_duration() {
+        let stages = StageTimes::default();
+        let sp = stages.span(SPAN_ESTIMATE);
+        let us = sp.finish();
+        assert_eq!(stages.estimate.count(), 1);
+        assert!(us <= stages.estimate.max_us().max(1));
+    }
+
+    #[test]
+    fn unknown_spans_land_in_the_catch_all() {
+        let stages = StageTimes::default();
+        stages.span("no_such_stage").finish();
+        assert_eq!(stages.other.count(), 1);
+    }
+
+    #[test]
+    fn named_covers_every_stage_in_pipeline_order() {
+        let stages = StageTimes::default();
+        let names: Vec<&str> = stages.named().iter().map(|(n, _)| *n).collect();
+        assert_eq!(
+            names,
+            ["cache_probe", "lower_point", "estimate", "walls", "simulate", "search_candidate", "serve_request", "other"]
+        );
+    }
+}

@@ -1,0 +1,311 @@
+//! Structured LDJSON trace stream.
+//!
+//! A [`Tracer`] buffers one [`TraceEvent`] per stage per point and
+//! renders them as line-delimited JSON with a **fixed field order**:
+//!
+//! ```text
+//! {"ts_us": …, "span": …, "kernel": …, "label": …, "recipe": …, "outcome": …, "dur_us": …, "parent": …}
+//! ```
+//!
+//! Events are buffered (a `Mutex<Vec<_>>` — recording is one short
+//! lock, rendering happens once at the end) and sorted at render time,
+//! so the emitted stream is deterministic even though worker threads
+//! record in whatever order the executor schedules them:
+//!
+//! * **Real clock** (default): sorted by `(ts_us, seq)` — a faithful
+//!   timeline of when each stage *finished*.
+//! * **Fake clock** (`TYTRA_FAKE_CLOCK=1`, or
+//!   [`Tracer::with_fake_clock`]): sorted by the event's *logical* key
+//!   `(parent, kernel, label, recipe, span rank, outcome)`, then every
+//!   `ts_us` is rewritten to the post-sort ordinal and every `dur_us`
+//!   to 0. Two runs of the same deterministic sweep then produce
+//!   byte-identical traces — the property `scripts/ci.sh` diffs.
+//!
+//! The fake/real decision is taken **once, at construction** (the CLI
+//! constructs tracers via [`Tracer::new`], which reads the environment
+//! at that point): reading the environment at every use-site would race
+//! with parallel tests that build their own tracers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::escape;
+
+/// One stage of work on one design point (or one serve request, or one
+/// executor action). String fields are empty when a dimension does not
+/// apply — e.g. serve lifecycle events carry no kernel/recipe.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Stage name from the span taxonomy (`telemetry::SPAN_*`).
+    pub span: &'static str,
+    /// Kernel name, when the event concerns one.
+    pub kernel: String,
+    /// Enumerated design-point label (or op/worker label).
+    pub label: String,
+    /// Transform recipe name, when the event concerns a point.
+    pub recipe: String,
+    /// What happened: `ok`, `hit`, `miss`, `err`, `scored`,
+    /// `rejected:…`, `panicked`, …
+    pub outcome: String,
+    /// Stage wall time, µs (0 under the fake clock).
+    pub dur_us: u64,
+    /// Enclosing scope: `sweep:<device>`, `search:<device>:g<n>`,
+    /// request id, …
+    pub parent: String,
+}
+
+/// A buffered event plus the bookkeeping the sort keys need.
+#[derive(Debug, Clone)]
+struct Recorded {
+    ts_us: u64,
+    seq: u64,
+    ev: TraceEvent,
+}
+
+/// Buffering trace collector. Shared across threads behind an `Arc`;
+/// recording never blocks on anything but the buffer push.
+pub struct Tracer {
+    fake: bool,
+    epoch: Instant,
+    seq: AtomicU64,
+    events: Mutex<Vec<Recorded>>,
+}
+
+/// Whether `TYTRA_FAKE_CLOCK` asks for deterministic trace output
+/// (set and neither empty nor `0`).
+pub fn fake_clock_from_env() -> bool {
+    match std::env::var("TYTRA_FAKE_CLOCK") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+/// Rank of a span name in pipeline order — the tiebreak that keeps a
+/// point's stages in execution order under the fake clock's logical
+/// sort. Unknown spans sort last.
+fn span_rank(span: &str) -> u32 {
+    match span {
+        "serve_accept" => 0,
+        "serve_parse" => 1,
+        "serve_dispatch" => 2,
+        "cache_probe" => 3,
+        "lower_point" => 4,
+        "estimate" => 5,
+        "walls" => 6,
+        "simulate" => 7,
+        "search_candidate" => 8,
+        "exec_enqueue" => 9,
+        "exec_run" => 10,
+        "exec_steal" => 11,
+        "serve_respond" => 12,
+        _ => 13,
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    /// Tracer honouring `TYTRA_FAKE_CLOCK` (read once, here).
+    pub fn new() -> Tracer {
+        Tracer::with_fake_clock(fake_clock_from_env())
+    }
+
+    /// Tracer with the clock mode pinned explicitly (tests use this to
+    /// stay independent of the process environment).
+    pub fn with_fake_clock(fake: bool) -> Tracer {
+        Tracer { fake, epoch: Instant::now(), seq: AtomicU64::new(0), events: Mutex::new(Vec::new()) }
+    }
+
+    /// Whether this tracer renders in fake-clock (byte-stable) mode.
+    pub fn is_fake(&self) -> bool {
+        self.fake
+    }
+
+    /// Buffer one event. `ts_us` is captured here (time the stage
+    /// *finished*, relative to tracer construction).
+    pub fn record(&self, ev: TraceEvent) {
+        let ts_us = self.epoch.elapsed().as_micros() as u64;
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.events.lock().unwrap().push(Recorded { ts_us, seq, ev });
+    }
+
+    /// Events buffered so far.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all buffered events (bench loops reuse one tracer).
+    pub fn clear(&self) {
+        self.events.lock().unwrap().clear();
+    }
+
+    /// Render every buffered event as one JSON object string each, in
+    /// the deterministic order described in the module docs. The buffer
+    /// is left intact (rendering is a read).
+    pub fn render_events(&self) -> Vec<String> {
+        let mut evs: Vec<Recorded> = self.events.lock().unwrap().clone();
+        if self.fake {
+            evs.sort_by(|a, b| {
+                let ka = (
+                    a.ev.parent.as_str(),
+                    a.ev.kernel.as_str(),
+                    a.ev.label.as_str(),
+                    a.ev.recipe.as_str(),
+                    span_rank(a.ev.span),
+                    a.ev.span,
+                    a.ev.outcome.as_str(),
+                    a.seq,
+                );
+                let kb = (
+                    b.ev.parent.as_str(),
+                    b.ev.kernel.as_str(),
+                    b.ev.label.as_str(),
+                    b.ev.recipe.as_str(),
+                    span_rank(b.ev.span),
+                    b.ev.span,
+                    b.ev.outcome.as_str(),
+                    b.seq,
+                );
+                ka.cmp(&kb)
+            });
+            evs.iter()
+                .enumerate()
+                .map(|(i, r)| render_line(i as u64, &r.ev, Some(0)))
+                .collect()
+        } else {
+            evs.sort_by_key(|r| (r.ts_us, r.seq));
+            evs.iter().map(|r| render_line(r.ts_us, &r.ev, None)).collect()
+        }
+    }
+
+    /// The full LDJSON stream: one event per line, trailing newline
+    /// (empty string when nothing was recorded).
+    pub fn render_ldjson(&self) -> String {
+        let lines = self.render_events();
+        if lines.is_empty() {
+            String::new()
+        } else {
+            let mut s = lines.join("\n");
+            s.push('\n');
+            s
+        }
+    }
+}
+
+/// One event as a JSON object — field order is part of the format
+/// contract (byte-stability depends on it).
+fn render_line(ts_us: u64, ev: &TraceEvent, dur_override: Option<u64>) -> String {
+    format!(
+        "{{\"ts_us\": {}, \"span\": \"{}\", \"kernel\": \"{}\", \"label\": \"{}\", \"recipe\": \"{}\", \"outcome\": \"{}\", \"dur_us\": {}, \"parent\": \"{}\"}}",
+        ts_us,
+        escape(ev.span),
+        escape(&ev.kernel),
+        escape(&ev.label),
+        escape(&ev.recipe),
+        escape(&ev.outcome),
+        dur_override.unwrap_or(ev.dur_us),
+        escape(&ev.parent),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn ev(span: &'static str, label: &str, dur_us: u64) -> TraceEvent {
+        TraceEvent {
+            span,
+            kernel: "simple".into(),
+            label: label.into(),
+            recipe: "none".into(),
+            outcome: "ok".into(),
+            dur_us,
+            parent: "sweep:StratixIV".into(),
+        }
+    }
+
+    #[test]
+    fn lines_parse_with_the_fixed_field_order() {
+        let t = Tracer::with_fake_clock(false);
+        t.record(ev("lower_point", "pipe×2", 41));
+        let lines = t.render_events();
+        assert_eq!(lines.len(), 1);
+        let line = &lines[0];
+        let order = ["\"ts_us\"", "\"span\"", "\"kernel\"", "\"label\"", "\"recipe\"", "\"outcome\"", "\"dur_us\"", "\"parent\""];
+        let mut last = 0;
+        for key in order {
+            let pos = line.find(key).unwrap_or_else(|| panic!("missing {key} in {line}"));
+            assert!(pos >= last, "{key} out of order in {line}");
+            last = pos;
+        }
+        let j = Json::parse(line).expect("trace line is JSON");
+        assert_eq!(j.get("span").and_then(Json::as_str), Some("lower_point"));
+        assert_eq!(j.get("label").and_then(Json::as_str), Some("pipe×2"));
+        assert_eq!(j.get("dur_us").and_then(Json::as_u64), Some(41));
+    }
+
+    #[test]
+    fn real_clock_orders_by_timestamp() {
+        let t = Tracer::with_fake_clock(false);
+        t.record(ev("estimate", "a", 1));
+        t.record(ev("lower_point", "b", 2));
+        let lines = t.render_events();
+        // Recording order == timestamp order here (single thread).
+        assert!(lines[0].contains("\"estimate\""));
+        assert!(lines[1].contains("\"lower_point\""));
+    }
+
+    /// Two tracers fed the same events in *different* insertion orders
+    /// (modelling racy worker scheduling) render byte-identical streams
+    /// under the fake clock, with ordinal timestamps and zeroed
+    /// durations.
+    #[test]
+    fn fake_clock_is_byte_stable_across_insertion_orders() {
+        let forward = Tracer::with_fake_clock(true);
+        let backward = Tracer::with_fake_clock(true);
+        let events = [
+            ev("lower_point", "pipe×1", 10),
+            ev("estimate", "pipe×1", 20),
+            ev("lower_point", "pipe×2", 30),
+            ev("estimate", "pipe×2", 40),
+        ];
+        for e in &events {
+            forward.record(e.clone());
+        }
+        for e in events.iter().rev() {
+            backward.record(e.clone());
+        }
+        let a = forward.render_ldjson();
+        let b = backward.render_ldjson();
+        assert_eq!(a, b);
+        assert!(a.lines().next().unwrap().starts_with("{\"ts_us\": 0, "));
+        assert!(a.contains("\"dur_us\": 0"));
+        assert!(!a.contains("\"dur_us\": 10"), "fake clock must erase real durations");
+        // Per point, stages sort in pipeline order: lower before estimate.
+        let lines: Vec<&str> = a.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("lower_point") && lines[0].contains("pipe×1"));
+        assert!(lines[1].contains("estimate") && lines[1].contains("pipe×1"));
+    }
+
+    #[test]
+    fn clear_empties_the_buffer() {
+        let t = Tracer::with_fake_clock(true);
+        t.record(ev("simulate", "x", 5));
+        assert_eq!(t.len(), 1);
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.render_ldjson(), "");
+    }
+}

@@ -105,6 +105,20 @@ impl Scored {
     }
 }
 
+/// Per-batch observability: one entry per evaluator invocation, the
+/// counts the telemetry layer renders per generation (batch 0 is the
+/// identity baseline, batch 1 the named recipes, batches 2.. the beam
+/// generations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GenStat {
+    /// Candidates submitted to the evaluator in this batch.
+    pub submitted: usize,
+    /// Candidates scored (passed the legality gate).
+    pub scored: usize,
+    /// Candidates the legality gate rejected.
+    pub rejected: usize,
+}
+
 /// Everything a search produced.
 #[derive(Debug, Clone)]
 pub struct SearchReport {
@@ -124,6 +138,9 @@ pub struct SearchReport {
     pub scored: usize,
     /// Pipelines rejected by the legality gate.
     pub rejected: usize,
+    /// Submitted/scored/rejected per evaluator batch, in submission
+    /// order (baseline, named, then one entry per beam generation).
+    pub batches: Vec<GenStat>,
 }
 
 /// Best-first candidate order: feasible before infeasible, then higher
@@ -155,6 +172,7 @@ where
     let mut seen_labels: BTreeSet<String> = BTreeSet::new();
     let mut visited: Vec<Scored> = Vec::new();
     let (mut scored, mut rejected, mut generations) = (0usize, 0usize, 0usize);
+    let mut batches: Vec<GenStat> = Vec::new();
 
     // Generation 0: the identity baseline — the score every candidate
     // must beat, and the golden model the gate compares against (so it
@@ -165,6 +183,7 @@ where
         Some(s) => s,
         None => return Err("search baseline (identity recipe) failed its own legality gate".into()),
     };
+    batches.push(GenStat { submitted: 1, scored: 1, rejected: 0 });
     seen_labels.insert(baseline.evaluated.label.clone());
     visited.push(baseline.clone());
 
@@ -179,6 +198,7 @@ where
         .collect();
     scored += named_batch.len();
     let mut named: Vec<Scored> = Vec::new();
+    let mut named_rejected = 0usize;
     for s in eval(&named_batch)? {
         match s {
             Some(s) => {
@@ -186,9 +206,15 @@ where
                 visited.push(s.clone());
                 named.push(s);
             }
-            None => rejected += 1,
+            None => named_rejected += 1,
         }
     }
+    rejected += named_rejected;
+    batches.push(GenStat {
+        submitted: named_batch.len(),
+        scored: named_batch.len() - named_rejected,
+        rejected: named_rejected,
+    });
 
     let mut beam: Vec<Scored> = vec![baseline];
     for _ in 0..cfg.max_len {
@@ -220,6 +246,7 @@ where
         }
         generations += 1;
         scored += batch.len();
+        let mut gen_rejected = 0usize;
         let mut fresh: Vec<Scored> = Vec::new();
         for s in eval(&batch)? {
             match s {
@@ -234,9 +261,15 @@ where
                         fresh.push(s);
                     }
                 }
-                None => rejected += 1,
+                None => gen_rejected += 1,
             }
         }
+        rejected += gen_rejected;
+        batches.push(GenStat {
+            submitted: batch.len(),
+            scored: batch.len() - gen_rejected,
+            rejected: gen_rejected,
+        });
         if fresh.is_empty() {
             break;
         }
@@ -246,7 +279,7 @@ where
     }
 
     let winner = visited.iter().min_by(|a, b| rank(a, b)).expect("baseline always present").clone();
-    Ok(SearchReport { winner, named, visited, generations, scored, rejected })
+    Ok(SearchReport { winner, named, visited, generations, scored, rejected, batches })
 }
 
 /// Serial per-recipe evaluator: lower at the fixed base point, estimate
@@ -403,5 +436,22 @@ mod tests {
         assert!(r.winner.recipe.is_none(), "winner: {}", r.winner.recipe.name());
         assert_eq!(r.generations, 1, "one exploratory generation, then dry");
         assert_eq!(r.scored, 1 + 4 + palette().len());
+    }
+
+    #[test]
+    fn per_batch_stats_reconcile_with_the_totals() {
+        let dev = Device::stratix4();
+        let r = search_kernel(&saxpy_def(), &dev, &SearchConfig::default()).unwrap();
+        // Baseline + named + one entry per beam generation.
+        assert_eq!(r.batches.len(), 2 + r.generations, "{:?}", r.batches);
+        assert_eq!(r.batches[0], GenStat { submitted: 1, scored: 1, rejected: 0 });
+        assert_eq!(r.batches[1].submitted, 4, "the four named recipes");
+        let submitted: usize = r.batches.iter().map(|b| b.submitted).sum();
+        let rejected: usize = r.batches.iter().map(|b| b.rejected).sum();
+        assert_eq!(submitted, r.scored, "every submission is accounted to a batch");
+        assert_eq!(rejected, r.rejected);
+        for b in &r.batches {
+            assert_eq!(b.scored + b.rejected, b.submitted, "{b:?}");
+        }
     }
 }

@@ -143,6 +143,25 @@ fn concurrent_clients_get_sequential_byte_identical_transcripts() {
         assert_eq!(got, &want, "warm response diverged for `{req}`");
     }
 
+    // The live telemetry surface (PR 10 acceptance): after all that
+    // traffic, the `stats` op must answer with non-empty per-stage
+    // latency histograms — p50/p99 present for the lowering, estimate
+    // and simulate stages. (Sent outside the byte-compare script: the
+    // snapshot counts depend on interleaving.)
+    let stats =
+        run_client(&sock, &["{\"id\": \"stats-1\", \"op\": \"stats\"}".to_string()]);
+    let (_, resp) = &stats[0];
+    assert!(resp.contains("\"ok\": true"), "{resp}");
+    for stage in ["lower_point", "estimate", "simulate"] {
+        let at = resp.find(&format!("\"span\": \"{stage}\"")).unwrap_or_else(|| {
+            panic!("stats response missing stage `{stage}`: {resp}")
+        });
+        let row = &resp[at..resp[at..].find('}').map(|e| at + e).unwrap_or(resp.len())];
+        assert!(!row.contains("\"count\": 0"), "{stage} histogram empty: {row}");
+        assert!(row.contains("\"p50_us\":"), "{stage}: {row}");
+        assert!(row.contains("\"p99_us\":"), "{stage}: {row}");
+    }
+
     let _ = std::fs::remove_dir_all(&cache_dir);
 }
 

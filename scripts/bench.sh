@@ -15,7 +15,12 @@
 # no-lowering replay) — the JSON's `serve` block. Since PR 9 it also
 # measures recipe beam-search throughput (pipelines scored/sec through
 # Session::search_recipes on the saxpy mac-tail kernel, with the pass
-# memo's full/partial/miss split) — the JSON's `search` block.
+# memo's full/partial/miss split) — the JSON's `search` block. Since
+# PR 10 it also reports telemetry: per-stage latency quantiles (p50/p99
+# for lower_point/estimate/simulate from the session's lock-free log2
+# histograms after a validated sweep) and the warm sweep re-timed with a
+# session-wide Tracer attached (the trace-on/trace-off overhead ratio,
+# pinned < 1.05 in EXPERIMENTS.md) — the JSON's `telemetry` block.
 #
 # Usage:
 #   scripts/bench.sh            # smoke mode (short, CI-friendly)

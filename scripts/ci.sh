@@ -273,4 +273,60 @@ for field in '"winner"' '"named"' '"visited"' '"scored"'; do
     fi
 done
 
+echo "== telemetry smoke (LDJSON trace schema, fake-clock byte-stability, stats table) =="
+# PR 10 acceptance. A validated traced sweep must emit one event per
+# stage per point (lower_point/estimate/simulate with --jobs 1 and no
+# disk cache: the executor runs inline so only pipeline stages appear),
+# every line a JSON object carrying the fixed 8-key schema; and two
+# runs under the fake clock (TYTRA_FAKE_CLOCK=1) must be byte-identical.
+TRACE_DIR=$(mktemp -d)
+TRACE_ARGS="sweep builtin:simple --jobs 1 --max-lanes 2 --max-dv 2 --validate --seed 5"
+# shellcheck disable=SC2086
+TYTRA_FAKE_CLOCK=1 "$BIN" $TRACE_ARGS --trace "$TRACE_DIR/a.ldjson" > /dev/null
+# shellcheck disable=SC2086
+TYTRA_FAKE_CLOCK=1 "$BIN" $TRACE_ARGS --trace "$TRACE_DIR/b.ldjson" > /dev/null
+LINES=$(wc -l < "$TRACE_DIR/a.ldjson")
+if [ "$LINES" -ne 18 ]; then
+    echo "error: traced validated sweep expected 18 events (6 points x 3 stages), got $LINES" >&2
+    cat "$TRACE_DIR/a.ldjson" >&2
+    exit 1
+fi
+for key in ts_us span kernel label recipe outcome dur_us parent; do
+    KEY_N=$(grep -c "\"$key\": " "$TRACE_DIR/a.ldjson" || true)
+    if [ "$KEY_N" -ne "$LINES" ]; then
+        echo "error: trace key \`$key\` present on $KEY_N of $LINES lines" >&2
+        exit 1
+    fi
+done
+while IFS= read -r line; do
+    case "$line" in
+        {*}) ;;
+        *)
+            echo "error: trace line is not a JSON object: $line" >&2
+            exit 1
+            ;;
+    esac
+done < "$TRACE_DIR/a.ldjson"
+for span in lower_point estimate simulate; do
+    if ! grep -q "\"span\": \"$span\"" "$TRACE_DIR/a.ldjson"; then
+        echo "error: trace covers no \`$span\` stage" >&2
+        cat "$TRACE_DIR/a.ldjson" >&2
+        exit 1
+    fi
+done
+if ! diff "$TRACE_DIR/a.ldjson" "$TRACE_DIR/b.ldjson" >/dev/null; then
+    echo "error: fake-clock traces are not byte-identical across runs" >&2
+    diff "$TRACE_DIR/a.ldjson" "$TRACE_DIR/b.ldjson" >&2 || true
+    exit 1
+fi
+STATS_OUT=$("$BIN" stats builtin:simple --jobs 2 --max-lanes 2 --max-dv 2 --seed 5)
+for stage in lower_point estimate simulate exec_run; do
+    if ! printf '%s' "$STATS_OUT" | grep -q "$stage"; then
+        echo "error: tytra stats table is missing the \`$stage\` stage" >&2
+        printf '%s\n' "$STATS_OUT" >&2
+        exit 1
+    fi
+done
+rm -rf "$TRACE_DIR"
+
 echo "ci: ALL OK"
